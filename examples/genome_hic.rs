@@ -1,0 +1,79 @@
+//! Topology of the (synthetic) genome: control vs auxin (paper §6).
+//!
+//!     cargo run --release --example genome_hic [-- --bins 20000]
+//!
+//! Generates the Hi-C substrate in both conditions, computes PH up to H2
+//! on the sparse filtrations, and prints Figure 21's percent-change-in-
+//! Betti curves plus the loop/void summaries. The qualitative claim to
+//! reproduce: auxin (cohesin degradation) eliminates most loops (H1) and
+//! most voids (H2) are never born.
+
+use dory::geometry::MetricData;
+use dory::hic::{self, Condition, HiCParams};
+use dory::homology::{compute_ph, EngineOptions};
+use dory::util::memtrack;
+
+fn main() {
+    let mut bins = 20_000usize;
+    let args: Vec<String> = std::env::args().collect();
+    if let Some(i) = args.iter().position(|a| a == "--bins") {
+        bins = args[i + 1].parse().expect("--bins <int>");
+    }
+    let params = HiCParams {
+        n_bins: bins,
+        ..Default::default()
+    };
+    let opts = EngineOptions {
+        max_dim: 2,
+        threads: 4,
+        ..Default::default()
+    };
+
+    let mut results = Vec::new();
+    for cond in [Condition::Control, Condition::Auxin] {
+        let sd = hic::generate(&params, cond);
+        let ne = sd.entries.len();
+        memtrack::reset_peak();
+        let t0 = std::time::Instant::now();
+        let r = compute_ph(&MetricData::Sparse(sd), params.tau_max, &opts);
+        println!(
+            "{cond:?}: n={bins} n_e={ne} | {:.2}s, peak heap {} | {}",
+            t0.elapsed().as_secs_f64(),
+            memtrack::fmt_bytes(memtrack::section_peak_bytes()),
+            r.timings.summary()
+        );
+        println!(
+            "  H1: {} classes ({} significant) | H2: {} classes ({} significant)",
+            r.diagram.points(1).len(),
+            r.diagram.significant(1, 40.0).len(),
+            r.diagram.points(2).len(),
+            r.diagram.significant(2, 20.0).len(),
+        );
+        results.push(r);
+    }
+    let (ctrl, aux) = (&results[0], &results[1]);
+
+    // Figure 21: percent change in β1 / β2 per threshold.
+    println!("\nFig 21 — percent change upon auxin ((auxin-control)/control*100):");
+    println!("{:>9} {:>10} {:>10} {:>9} {:>9}", "tau", "b1_ctrl", "b1_auxin", "d_b1%", "d_b2%");
+    let ts: Vec<f64> = (1..=8).map(|k| k as f64 * 50.0).collect();
+    for &t in &ts {
+        let (b1c, b1a) = (ctrl.diagram.betti_at(1, t), aux.diagram.betti_at(1, t));
+        let (b2c, b2a) = (ctrl.diagram.betti_at(2, t), aux.diagram.betti_at(2, t));
+        let pct = |c: usize, a: usize| {
+            if c == 0 {
+                0.0
+            } else {
+                (a as f64 - c as f64) / c as f64 * 100.0
+            }
+        };
+        println!(
+            "{t:>9.0} {b1c:>10} {b1a:>10} {:>8.1}% {:>8.1}%",
+            pct(b1c, b1a),
+            pct(b2c, b2a)
+        );
+    }
+    println!("\nPaper's qualitative result: strong reduction in loops at all");
+    println!("thresholds and voids mostly not born under auxin — corroborated");
+    println!("if the d_b1%/d_b2% columns are strongly negative.");
+}

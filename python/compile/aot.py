@@ -1,0 +1,68 @@
+"""AOT lowering: JAX/Pallas -> HLO *text* artifacts for the Rust runtime.
+
+HLO text, NOT ``lowered.compile()`` / serialized protos: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the crate's xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import os
+import sys
+
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (rows, cols) menu for the distance kernel. cols=16 covers every bench
+# dataset dim (<= 9) — unused coordinates are zero-padded and cancel.
+DIST_SHAPES = [(256, 16), (1024, 16), (2048, 16)]
+# (max pairs, grid) menu for the persistence-image kernel.
+PIMAGE_SHAPES = [(256, 32), (1024, 64)]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true", help="smallest shapes only")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"dist": [], "pimage": []}
+    dist_shapes = DIST_SHAPES[:1] if args.quick else DIST_SHAPES
+    pimage_shapes = PIMAGE_SHAPES[:1] if args.quick else PIMAGE_SHAPES
+
+    for n, d in dist_shapes:
+        text = to_hlo_text(model.lower_distance(n, d))
+        path = os.path.join(args.out_dir, f"dist_{n}x{d}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["dist"].append({"rows": n, "cols": d, "bytes": len(text)})
+        print(f"wrote {path} ({len(text)} chars)")
+
+    for k, g in pimage_shapes:
+        text = to_hlo_text(model.lower_pimage(k, g))
+        path = os.path.join(args.out_dir, f"pimage_{k}x{g}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["pimage"].append({"pairs": k, "grid": g, "bytes": len(text)})
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

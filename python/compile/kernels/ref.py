@@ -1,0 +1,28 @@
+"""Pure-jnp oracles for the Pallas kernels — the build-time correctness
+signal (pytest + hypothesis assert allclose against these)."""
+
+import jax.numpy as jnp
+
+from .persistence_image import SIGMA_FRAC
+
+
+def pairwise_distance_ref(points):
+    """(n, d) -> (n, n) Euclidean distances, straightforward broadcast."""
+    x = points.astype(jnp.float32)
+    diff = x[:, None, :] - x[None, :, :]
+    return jnp.sqrt(jnp.maximum(jnp.sum(diff * diff, axis=-1), 0.0))
+
+
+def persistence_image_ref(pairs, span, grid: int):
+    """(K, 3) (birth, persistence, weight) -> (grid, grid) raster."""
+    pairs = pairs.astype(jnp.float32)
+    span = jnp.float32(span)
+    cell = span / grid
+    ys = (jnp.arange(grid, dtype=jnp.float32) + 0.5) * cell  # rows: persistence
+    xs = (jnp.arange(grid, dtype=jnp.float32) + 0.5) * cell  # cols: birth
+    sigma = SIGMA_FRAC * span
+    inv2s2 = 1.0 / (2.0 * sigma * sigma + 1e-30)
+    dx = xs[None, None, :] - pairs[:, 0][:, None, None]  # (K,1,G)
+    dy = ys[None, :, None] - pairs[:, 1][:, None, None]  # (K,G,1)
+    g = jnp.exp(-(dx * dx + dy * dy) * inv2s2)  # (K,G,G)
+    return jnp.sum(pairs[:, 2][:, None, None] * g, axis=0)

@@ -1,0 +1,51 @@
+"""Layer 2: the JAX compute graph wrapping the Pallas kernels.
+
+Two AOT entry points, lowered by ``aot.py`` to HLO text and executed from
+the Rust runtime through PJRT:
+
+* ``distance_matrix`` — full pairwise distances (calls the L1 tiled
+  kernel). The Rust side pads the point count to the artifact's row count
+  (padding points parked far away) and slices the real block out.
+* ``pimage_model`` — persistence-image rasterization of a PD.
+
+Nothing here runs at request time; ``make artifacts`` is the only Python
+invocation in the lifecycle.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.pairwise_dist import DEFAULT_TILE, pairwise_distance
+from .kernels.persistence_image import persistence_image
+
+
+def distance_matrix(points, tile: int = DEFAULT_TILE):
+    """(n, d) -> (n, n) float32; n must be a multiple of ``tile``."""
+    return pairwise_distance(points.astype(jnp.float32), tile=tile)
+
+
+def distance_matrix_padded(points, tile: int = DEFAULT_TILE, pad_value: float = 1.0e7):
+    """Convenience for tests: pad any (n, d) up to a tile multiple, compute,
+    slice back. The Rust runtime does this padding natively."""
+    n, d = points.shape
+    m = -(-n // tile) * tile
+    padded = jnp.full((m, d), pad_value, jnp.float32).at[:n].set(points.astype(jnp.float32))
+    return distance_matrix(padded, tile=tile)[:n, :n]
+
+
+def pimage_model(pairs, span, grid: int):
+    """(K, 3), scalar span -> (grid, grid) float32."""
+    return persistence_image(pairs, span, grid=grid)
+
+
+def lower_distance(n: int, d: int, tile: int = DEFAULT_TILE):
+    """jax.jit lowering for the (n, d) distance artifact."""
+    spec = jax.ShapeDtypeStruct((n, d), jnp.float32)
+    return jax.jit(lambda p: (distance_matrix(p, tile=tile),)).lower(spec)
+
+
+def lower_pimage(k: int, grid: int):
+    """jax.jit lowering for the (k pairs, grid) persistence-image artifact."""
+    pairs = jax.ShapeDtypeStruct((k, 3), jnp.float32)
+    span = jax.ShapeDtypeStruct((), jnp.float32)
+    return jax.jit(lambda p, s: (pimage_model(p, s, grid=grid),)).lower(pairs, span)

@@ -1,0 +1,125 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle (hypothesis sweeps)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.pairwise_dist import (
+    mxu_flops_per_cell,
+    pairwise_distance,
+    vmem_bytes_per_cell,
+)
+from compile.kernels.persistence_image import persistence_image
+from compile.kernels import ref
+
+
+# ---------- pairwise distance ------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_tiles=st.integers(1, 3),
+    d=st.integers(1, 9),
+    tile=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pairwise_matches_ref(n_tiles, d, tile, seed):
+    rng = np.random.default_rng(seed)
+    n = n_tiles * tile
+    pts = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    got = np.asarray(pairwise_distance(pts, tile=tile))
+    want = np.asarray(ref.pairwise_distance_ref(pts))
+    # The Gram formulation |x|²+|y|²-2x·y loses ~eps·scale² absolutely in
+    # the *squared* distance (catastrophic cancellation for near-duplicate
+    # points); the distance error is bounded by sqrt of that.
+    scale2 = float(np.max(np.sum(np.asarray(pts) ** 2, axis=1)))
+    sq_atol = 64 * np.finfo(np.float32).eps * (1.0 + scale2)
+    np.testing.assert_allclose(got**2, want**2, atol=sq_atol, rtol=1e-4)
+    np.testing.assert_allclose(got, want, atol=np.sqrt(sq_atol), rtol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_pairwise_metric_properties(seed):
+    rng = np.random.default_rng(seed)
+    pts = jnp.asarray(rng.normal(size=(16, 3)), jnp.float32)
+    m = np.asarray(pairwise_distance(pts, tile=8))
+    # Diagonal is sqrt(cancellation residue): ~sqrt(eps)·scale, not 0.
+    assert np.allclose(np.diag(m), 0.0, atol=5e-3)
+    assert np.allclose(m, m.T, atol=1e-5)
+    assert (m >= 0).all()
+
+
+def test_pairwise_exact_small():
+    pts = jnp.asarray([[0.0, 0.0], [3.0, 4.0]] * 4, jnp.float32)
+    m = np.asarray(pairwise_distance(pts, tile=8))
+    assert abs(m[0, 1] - 5.0) < 1e-5
+
+
+def test_pairwise_rejects_unaligned():
+    with pytest.raises(ValueError):
+        pairwise_distance(jnp.zeros((100, 3), jnp.float32), tile=128)
+
+
+def test_padding_helper_matches_ref():
+    from compile.model import distance_matrix_padded
+
+    rng = np.random.default_rng(0)
+    pts = jnp.asarray(rng.normal(size=(37, 5)), jnp.float32)
+    got = distance_matrix_padded(pts, tile=16)
+    want = ref.pairwise_distance_ref(pts)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4, rtol=1e-4)
+
+
+def test_f64_inputs_are_cast():
+    rng = np.random.default_rng(1)
+    pts = jnp.asarray(rng.normal(size=(16, 3)))  # f64 -> cast inside
+    got = pairwise_distance(pts.astype(jnp.float32), tile=8)
+    assert got.dtype == jnp.float32
+
+
+def test_vmem_estimate_within_budget():
+    # DESIGN.md §Perf: the production tile must fit VMEM comfortably.
+    assert vmem_bytes_per_cell(128, 16) < 128 * 1024
+    assert mxu_flops_per_cell(128, 16) == 2 * 128 * 128 * 16
+
+
+# ---------- persistence image -------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    k=st.integers(1, 40),
+    grid=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pimage_matches_ref(k, grid, seed):
+    rng = np.random.default_rng(seed)
+    span = 2.0
+    pairs = np.zeros((k, 3), np.float32)
+    pairs[:, 0] = rng.uniform(0, span, k)  # births
+    pairs[:, 1] = rng.uniform(0, span, k)  # persistences
+    pairs[:, 2] = rng.uniform(0, 2, k)  # weights
+    got = persistence_image(jnp.asarray(pairs), span, grid=grid, tile=4)
+    want = ref.persistence_image_ref(jnp.asarray(pairs), span, grid)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4, rtol=1e-3)
+
+
+def test_pimage_zero_weights_are_invisible():
+    pairs = np.array([[0.5, 0.5, 1.0], [1.5, 1.5, 0.0]], np.float32)
+    img = np.asarray(persistence_image(jnp.asarray(pairs), 2.0, grid=16, tile=4))
+    only = np.asarray(
+        persistence_image(jnp.asarray(pairs[:1]), 2.0, grid=16, tile=4)
+    )
+    # Padding rows (weight 0) must contribute nothing.
+    np.testing.assert_allclose(img, only, atol=1e-6)
+
+
+def test_pimage_peak_near_the_point():
+    pairs = np.array([[1.0, 1.0, 1.0]], np.float32)
+    img = np.asarray(persistence_image(jnp.asarray(pairs), 2.0, grid=32, tile=8))
+    r, c = np.unravel_index(np.argmax(img), img.shape)
+    # Point (birth=1, pers=1) is the grid centre.
+    assert abs(r - 15.5) <= 1.0 and abs(c - 15.5) <= 1.0

@@ -1,0 +1,66 @@
+"""L2 model shapes + AOT HLO-text emission."""
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model
+
+
+def test_lower_distance_emits_hlo_text():
+    lowered = model.lower_distance(256, 16, tile=128)
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "f32[256,16]" in text, text[:400]
+    assert "f32[256,256]" in text
+
+
+def test_lower_pimage_emits_hlo_text():
+    lowered = model.lower_pimage(256, 32)
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "f32[256,3]" in text
+    assert "f32[32,32]" in text
+
+
+def test_distance_model_agrees_with_kernel_padding():
+    rng = np.random.default_rng(3)
+    pts = jnp.asarray(rng.normal(size=(64, 9)), jnp.float32)
+    m = model.distance_matrix(pts, tile=16)
+    assert m.shape == (64, 64)
+    # Spot-check one entry against scalar math.
+    want = float(jnp.sqrt(jnp.sum((pts[3] - pts[41]) ** 2)))
+    assert abs(float(m[3, 41]) - want) < 1e-4
+
+
+def test_far_padding_exceeds_thresholds():
+    # The Rust runtime pads with 1e7-coordinate points; their distances to
+    # real points must dwarf any realistic tau.
+    pts = np.zeros((16, 4), np.float32)
+    pts[8:] = 1.0e7
+    m = np.asarray(model.distance_matrix(jnp.asarray(pts), tile=8))
+    assert (m[:8, 8:] > 1.0e6).all()
+    assert np.allclose(m[:8, :8], 0.0, atol=1e-3)
+
+
+def test_aot_main_writes_artifacts(tmp_path):
+    import sys
+
+    argv = sys.argv
+    sys.argv = ["aot", "--out-dir", str(tmp_path), "--quick"]
+    try:
+        assert aot.main() == 0
+    finally:
+        sys.argv = argv
+    names = sorted(p.name for p in tmp_path.iterdir())
+    assert "dist_256x16.hlo.txt" in names
+    assert "pimage_256x32.hlo.txt" in names
+    assert "manifest.json" in names
+
+
+def test_lowering_is_shape_stable():
+    # Same shape twice -> identical HLO text (AOT determinism).
+    a = aot.to_hlo_text(model.lower_distance(256, 16))
+    b = aot.to_hlo_text(model.lower_distance(256, 16))
+    assert a == b

@@ -1,0 +1,70 @@
+//! Figure 18: computation time and peak memory bar charts across
+//! datasets for Dory, DoryNS and the Ripser-like baseline.
+//!
+//!     cargo bench --bench fig18_time_memory [-- --full]
+//!
+//! Emits ASCII bars + `target/bench_out/fig18.json` series (the
+//! machine-readable figure data).
+
+use dory::baselines::ripser_like;
+use dory::bench_support as bs;
+use dory::homology::EngineOptions;
+use dory::util::json::Json;
+use dory::util::memtrack;
+
+fn main() {
+    let scale = bs::parse_scale();
+    let suite = bs::suite(scale);
+    let mut series = Json::arr();
+    let mut rows: Vec<(String, Vec<(String, f64, usize)>)> = Vec::new();
+    for ds in &suite {
+        let mut entries = Vec::new();
+        for (label, dense) in [("dory", false), ("doryNS", true)] {
+            let opts = EngineOptions {
+                max_dim: ds.max_dim,
+                threads: 4,
+                dense_lookup: dense,
+                ..Default::default()
+            };
+            let m = bs::run_engine(&ds.data, ds.tau, &opts);
+            entries.push((label.to_string(), m.seconds, m.peak_bytes));
+        }
+        memtrack::reset_peak();
+        let t0 = std::time::Instant::now();
+        if ripser_like::compute_ph(&ds.data, ds.tau, ds.max_dim, 8 << 30).is_ok() {
+            entries.push((
+                "ripser-like".into(),
+                t0.elapsed().as_secs_f64(),
+                memtrack::section_peak_bytes(),
+            ));
+        }
+        rows.push((ds.name.clone(), entries));
+    }
+
+    for (name, entries) in &rows {
+        println!("\n== {name} ==");
+        let tmax = entries.iter().map(|e| e.1).fold(0.0, f64::max);
+        let mmax = entries.iter().map(|e| e.2).max().unwrap_or(1);
+        for (label, s, b) in entries {
+            println!(
+                "  {label:<12} time {:>8.2}s |{:<30}|",
+                s,
+                bs::bar(*s, tmax, 30)
+            );
+            println!(
+                "  {label:<12} mem  {:>8} |{:<30}|",
+                memtrack::fmt_bytes(*b),
+                bs::bar(*b as f64, mmax as f64, 30)
+            );
+        }
+        let mut j = Json::obj().field("dataset", name.as_str());
+        for (label, s, b) in entries {
+            j = j.field(
+                label,
+                Json::obj().field("seconds", *s).field("peak_bytes", *b),
+            );
+        }
+        series.push(j);
+    }
+    bs::write_json("fig18.json", &Json::obj().field("series", series));
+}

@@ -1,0 +1,78 @@
+//! Figures 19 & 20: o3 H1/H2 persistence-diagram consistency across
+//! implementations — the paper's point is that Gudhi *mis-reported*
+//! features that do not die, while Dory/Ripser/Eirene agreed.
+//!
+//!     cargo bench --bench fig19_20_pd_consistency [-- --full]
+//!
+//! We run the o3 data set through all four of our engines and compare
+//! PDs exactly, with special attention to the essential (death = ∞)
+//! classes that Gudhi dropped in the paper.
+
+use dory::baselines::{gudhi_like, ripser_like};
+use dory::bench_support as bs;
+use dory::datasets;
+use dory::homology::{compute_ph, EngineOptions};
+use dory::util::json::Json;
+
+fn main() {
+    let scale = bs::parse_scale();
+    let n = match scale {
+        bs::Scale::Quick => 768,
+        bs::Scale::Full => 8192,
+    };
+    let tau = 1.0;
+    let data = datasets::o3(n, 2);
+    println!("o3: n={n}, tau={tau}, d=2");
+
+    let dory = compute_ph(
+        &data,
+        tau,
+        &EngineOptions {
+            max_dim: 2,
+            threads: 4,
+            ..Default::default()
+        },
+    )
+    .diagram;
+    let ripser = ripser_like::compute_ph(&data, tau, 2, 8 << 30).expect("ripser-like");
+    let gudhi = gudhi_like::compute_ph(&data, tau, 2);
+
+    let mut out = Json::obj();
+    for (dim, fig) in [(1usize, "Fig19(H1)"), (2, "Fig20(H2)")] {
+        println!("\n== {fig} ==");
+        println!(
+            "{:<14} {:>8} {:>10}",
+            "engine", "finite", "essential"
+        );
+        for (name, d) in [("dory", &dory), ("ripser-like", &ripser), ("gudhi-like", &gudhi)] {
+            println!(
+                "{:<14} {:>8} {:>10}",
+                name,
+                d.finite(dim).len(),
+                d.essential_count(dim)
+            );
+        }
+        let consistent_rg = dory.multiset_eq(&ripser, 2e-4);
+        let consistent_g = dory.multiset_eq(&gudhi, 1e-9);
+        println!(
+            "dory == ripser-like: {consistent_rg} | dory == gudhi-like: {consistent_g}"
+        );
+        out = out.field(
+            fig,
+            Json::obj()
+                .field("dory_finite", dory.finite(dim).len())
+                .field("dory_essential", dory.essential_count(dim))
+                .field("ripser_essential", ripser.essential_count(dim))
+                .field("gudhi_essential", gudhi.essential_count(dim))
+                .field("all_consistent", consistent_rg && consistent_g),
+        );
+    }
+    assert!(
+        dory.multiset_eq(&ripser, 2e-4) && dory.multiset_eq(&gudhi, 1e-9),
+        "PD inconsistency across engines!"
+    );
+    bs::write_json("fig19_20.json", &out);
+    println!("\nAll our engines agree, including on essential classes — the");
+    println!("discrepancy the paper observed was a Gudhi reporting issue,");
+    println!("which a correct explicit reduction (our gudhi-like) avoids.");
+}

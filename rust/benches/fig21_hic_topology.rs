@@ -1,0 +1,90 @@
+//! Figure 21: percent change in the number of loops (β1) and voids (β2)
+//! of the genome upon auxin treatment, per distance threshold.
+//!
+//!     cargo bench --bench fig21_hic_topology [-- --full]
+
+use dory::bench_support as bs;
+use dory::geometry::MetricData;
+use dory::hic::{self, Condition, HiCParams};
+use dory::homology::{compute_ph, EngineOptions};
+use dory::util::json::Json;
+
+fn main() {
+    let scale = bs::parse_scale();
+    let params = HiCParams {
+        n_bins: bs::hic_bins(scale),
+        ..Default::default()
+    };
+    let opts = EngineOptions {
+        max_dim: 2,
+        threads: 4,
+        ..Default::default()
+    };
+    let mut diagrams = Vec::new();
+    for cond in [Condition::Control, Condition::Auxin] {
+        let sd = hic::generate(&params, cond);
+        println!(
+            "{cond:?}: n={} n_e={}",
+            params.n_bins,
+            sd.entries.len()
+        );
+        let m = bs::run_engine(&MetricData::Sparse(sd), params.tau_max, &opts);
+        println!(
+            "  {:.2}s, peak {} | H1 {} | H2 {}",
+            m.seconds,
+            dory::util::memtrack::fmt_bytes(m.peak_bytes),
+            m.result.diagram.points(1).len(),
+            m.result.diagram.points(2).len()
+        );
+        diagrams.push(m.result.diagram);
+        // keep a handle for compute_ph import silence
+        let _ = compute_ph;
+    }
+    let (ctrl, aux) = (&diagrams[0], &diagrams[1]);
+    let ts: Vec<f64> = (1..=16).map(|k| k as f64 * 25.0).collect();
+    println!("\n== Fig 21: percent change (auxin vs control) ==");
+    println!(
+        "{:>8} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9}",
+        "tau", "b1_ctrl", "b1_aux", "d_b1%", "b2_ctrl", "b2_aux", "d_b2%"
+    );
+    let pct = |c: usize, a: usize| {
+        if c == 0 {
+            f64::NAN
+        } else {
+            (a as f64 - c as f64) / c as f64 * 100.0
+        }
+    };
+    let mut series = Json::arr();
+    for &t in &ts {
+        let (b1c, b1a) = (ctrl.betti_at(1, t), aux.betti_at(1, t));
+        let (b2c, b2a) = (ctrl.betti_at(2, t), aux.betti_at(2, t));
+        println!(
+            "{t:>8.0} {b1c:>9} {b1a:>9} {:>8.1}% {b2c:>9} {b2a:>9} {:>8.1}%",
+            pct(b1c, b1a),
+            pct(b2c, b2a)
+        );
+        series.push(
+            Json::obj()
+                .field("tau", t)
+                .field("b1_control", b1c)
+                .field("b1_auxin", b1a)
+                .field("b2_control", b2c)
+                .field("b2_auxin", b2a),
+        );
+    }
+    // Headline check: strong loop reduction, voids mostly never born.
+    let b1 = (ctrl.points(1).len(), aux.points(1).len());
+    let b2 = (ctrl.points(2).len(), aux.points(2).len());
+    println!(
+        "\ntotals: H1 {} -> {} ({:+.1}%), H2 {} -> {} ({:+.1}%)",
+        b1.0,
+        b1.1,
+        pct(b1.0, b1.1),
+        b2.0,
+        b2.1,
+        pct(b2.0, b2.1)
+    );
+    bs::write_json("fig21.json", &Json::obj().field("series", series));
+    assert!(b1.1 < b1.0 / 2, "loops must collapse under auxin");
+    assert!(b2.1 < b2.0 / 2, "voids must collapse under auxin");
+}

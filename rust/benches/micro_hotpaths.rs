@@ -1,0 +1,117 @@
+//! Micro-benchmarks of the hot paths — the §Perf iteration harness.
+//!
+//!     cargo bench --bench micro_hotpaths
+//!
+//! Covers: edge_order lookup (sparse binary search vs DoryNS dense),
+//! coboundary cursor throughput (FindSmallestt/FindNextt), bucket-table
+//! reduction steps, F1 construction, H0 union-find, and the thread-pool
+//! dispatch overhead. Numbers feed EXPERIMENTS.md §Perf.
+
+use std::time::Instant;
+
+use dory::bench_support as bs;
+use dory::coboundary::TriCursor;
+use dory::datasets;
+use dory::filtration::{EdgeFiltration, Neighborhoods};
+use dory::homology::EngineOptions;
+use dory::reduction::pool::ThreadPool;
+use dory::util::json::Json;
+use dory::util::rng::Pcg32;
+
+fn timeit<F: FnMut() -> u64>(label: &str, iters: usize, mut f: F) -> f64 {
+    // Warmup + measure; returns ns/op and prints a row.
+    let mut sink = 0u64;
+    for _ in 0..iters.min(3) {
+        sink = sink.wrapping_add(f());
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        sink = sink.wrapping_add(f());
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let per = dt / iters as f64;
+    println!("{label:<42} {:>12.1} ns/op   (sink {sink:x})", per * 1e9);
+    per * 1e9
+}
+
+fn main() {
+    let _ = bs::parse_scale();
+    let data = datasets::torus4(4000, 3);
+    let f = EdgeFiltration::build(&data, 0.3);
+    let nb_sparse = Neighborhoods::build(&f, false);
+    let nb_dense = Neighborhoods::build(&f, true);
+    let ne = f.n_edges() as u32;
+    println!("workload: torus4 n=4000 tau=0.3, n_e={ne}\n");
+    let mut out = Json::obj();
+
+    // --- edge_order lookup: the §4.6 sparse-vs-dense tradeoff ------------
+    let mut rng = Pcg32::new(1);
+    let queries: Vec<(u32, u32)> = (0..100_000)
+        .map(|_| {
+            let e = rng.gen_range(ne);
+            f.edges[e as usize]
+        })
+        .collect();
+    let q1 = timeit("edge_order hit (sparse binsearch)", 20, || {
+        let mut acc = 0u64;
+        for &(a, b) in &queries {
+            acc = acc.wrapping_add(nb_sparse.edge_order(a, b).unwrap_or(0) as u64);
+        }
+        acc
+    }) / queries.len() as f64;
+    let q2 = timeit("edge_order hit (dense table, DoryNS)", 20, || {
+        let mut acc = 0u64;
+        for &(a, b) in &queries {
+            acc = acc.wrapping_add(nb_dense.edge_order(a, b).unwrap_or(0) as u64);
+        }
+        acc
+    }) / queries.len() as f64;
+    out = out.field("edge_order_sparse_ns", q1).field("edge_order_dense_ns", q2);
+
+    // --- coboundary cursor enumeration ------------------------------------
+    let edges: Vec<u32> = (0..ne).step_by((ne as usize / 2000).max(1)).collect();
+    let c1 = timeit("TriCursor full coboundary walk / edge", 5, || {
+        let mut acc = 0u64;
+        for &e in &edges {
+            let (a, b) = f.edges[e as usize];
+            let mut c = TriCursor::find_smallest(&nb_sparse, e, a, b);
+            while !c.cur.is_none() {
+                acc = acc.wrapping_add(c.cur.pack());
+                c.find_next(&nb_sparse);
+            }
+        }
+        acc
+    }) / edges.len() as f64;
+    out = out.field("coboundary_walk_per_edge_ns", c1);
+
+    // --- full engine single-thread vs 4 threads ---------------------------
+    for (label, threads) in [("engine 1 thread (H1)", 1usize), ("engine 4 threads (H1)", 4)] {
+        let opts = EngineOptions {
+            max_dim: 1,
+            threads,
+            ..Default::default()
+        };
+        let t0 = Instant::now();
+        let r = dory::homology::compute_ph_from_filtration(&f, &opts);
+        let dt = t0.elapsed().as_secs_f64();
+        println!("{label:<42} {dt:>11.3} s    (pairs {})", r.stats.h1.pairs);
+        out = out.field(&format!("{label} s"), dt);
+    }
+
+    // --- thread pool dispatch overhead -------------------------------------
+    let pool = ThreadPool::new(4);
+    let d = timeit("pool.run dispatch+join (empty job)", 2000, || {
+        pool.run(|_| {});
+        0
+    });
+    out = out.field("pool_dispatch_ns", d);
+
+    // --- F1 construction ----------------------------------------------------
+    let t0 = Instant::now();
+    let f2 = EdgeFiltration::build(&data, 0.3);
+    let dt = t0.elapsed().as_secs_f64();
+    println!("{:<42} {dt:>11.3} s    (n_e {})", "F1 build (dist+sort)", f2.n_edges());
+    out = out.field("f1_build_s", dt);
+
+    bs::write_json("micro_hotpaths.json", &out);
+}

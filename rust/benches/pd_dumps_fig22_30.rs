@@ -1,0 +1,99 @@
+//! Figures 4 & 22–30: persistence diagrams for every benchmark dataset
+//! (and the Hi-C pair), dumped as CSV under `target/bench_out/pd/` and
+//! summarized as ASCII scatter plots.
+//!
+//!     cargo bench --bench pd_dumps_fig22_30 [-- --full]
+
+use dory::bench_support as bs;
+use dory::geometry::MetricData;
+use dory::hic::{self, Condition, HiCParams};
+use dory::homology::EngineOptions;
+use dory::io;
+
+fn ascii_pd(points: &[dory::homology::diagram::Point], tau: f64) {
+    // 20x40 scatter of (birth, death), essential classes on the top row.
+    const H: usize = 14;
+    const W: usize = 44;
+    let mut grid = vec![[' '; W]; H];
+    let lim = if tau.is_finite() {
+        tau
+    } else {
+        points
+            .iter()
+            .filter(|p| !p.is_essential())
+            .map(|p| p.death)
+            .fold(1.0, f64::max)
+    };
+    for p in points {
+        let x = ((p.birth / lim) * (W - 1) as f64).min((W - 1) as f64) as usize;
+        if p.is_essential() {
+            grid[0][x] = '^';
+        } else {
+            let y = ((p.death / lim) * (H - 1) as f64).min((H - 1) as f64) as usize;
+            let row = H - 1 - y;
+            grid[row][x] = if grid[row][x] == '*' { '#' } else { '*' };
+        }
+    }
+    for row in &grid {
+        println!("  |{}|", row.iter().collect::<String>());
+    }
+    println!("  (x birth -> {lim:.2}, y death; ^ = essential)");
+}
+
+fn main() {
+    let scale = bs::parse_scale();
+    let dir = bs::out_dir().join("pd");
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let mut jobs: Vec<(String, MetricData, f64, usize)> = bs::suite(scale)
+        .into_iter()
+        .map(|d| (d.name, d.data, d.tau, d.max_dim))
+        .collect();
+    // Fig 4: the intro's multi-scale demo.
+    jobs.insert(
+        0,
+        (
+            "fig4_demo".into(),
+            dory::datasets::multi_scale_demo(600, 7),
+            8.0,
+            1,
+        ),
+    );
+    // Figs 29-30: Hi-C PDs.
+    let p = HiCParams {
+        n_bins: bs::hic_bins(scale).min(12_000),
+        ..Default::default()
+    };
+    for cond in [Condition::Control, Condition::Auxin] {
+        let name = format!("hic_{cond:?}").to_lowercase();
+        jobs.push((
+            name,
+            MetricData::Sparse(hic::generate(&p, cond)),
+            p.tau_max,
+            2,
+        ));
+    }
+
+    for (name, data, tau, max_dim) in jobs {
+        let opts = EngineOptions {
+            max_dim,
+            threads: 4,
+            ..Default::default()
+        };
+        let m = bs::run_engine(&data, tau, &opts);
+        let path = dir.join(format!("{}.csv", name.replace(['(', ')'], "_")));
+        io::write_diagram_csv(&path, &m.result.diagram).unwrap();
+        println!(
+            "\n== {name}: PD written to {path:?} ({:.2}s) ==",
+            m.seconds
+        );
+        for dim in 1..=max_dim {
+            let pts = m.result.diagram.points(dim);
+            if pts.is_empty() {
+                continue;
+            }
+            println!("H{dim} ({} classes):", pts.len());
+            ascii_pd(pts, tau);
+        }
+    }
+}

@@ -1,0 +1,92 @@
+//! Tables 1 & 2: dataset inventory and Dory's per-phase timings.
+//!
+//!     cargo bench --bench table2_phases [-- --full]
+//!
+//! Table 1 columns: n, τ_m, n_e, d, N (total simplices).
+//! Table 2 columns: create F1, create neighborhoods, H0, H1*, H2*
+//! (Dory, 4 threads, as in the paper).
+
+use dory::bench_support as bs;
+use dory::filtration::{EdgeFiltration, Neighborhoods};
+use dory::homology::{engine::count_simplices, EngineOptions};
+use dory::util::json::Json;
+
+fn main() {
+    let scale = bs::parse_scale();
+    let suite = bs::suite(scale);
+    println!("== Table 1: data sets ({scale:?} scale) ==");
+    println!(
+        "{:<12} {:>8} {:>8} {:>10} {:>3} {:>14}",
+        "dataset", "n", "tau_m", "n_e", "d", "N"
+    );
+    let mut t1 = Json::arr();
+    for ds in &suite {
+        let f = EdgeFiltration::build(&ds.data, ds.tau);
+        let nb = Neighborhoods::build(&f, false);
+        let n_simplices = count_simplices(&f, &nb, ds.max_dim);
+        println!(
+            "{:<12} {:>8} {:>8} {:>10} {:>3} {:>14}",
+            ds.name,
+            ds.data.n(),
+            if ds.tau.is_finite() {
+                format!("{}", ds.tau)
+            } else {
+                "inf".into()
+            },
+            f.n_edges(),
+            ds.max_dim,
+            n_simplices
+        );
+        t1.push(
+            Json::obj()
+                .field("dataset", ds.name.as_str())
+                .field("n", ds.data.n())
+                .field("tau", ds.tau)
+                .field("n_e", f.n_edges())
+                .field("d", ds.max_dim)
+                .field("N", n_simplices as f64),
+        );
+    }
+
+    println!("\n== Table 2: Dory phase timings (seconds, 4 threads) ==");
+    println!(
+        "{:<12} {:>10} {:>12} {:>8} {:>8} {:>8}",
+        "dataset", "create F1", "create N,E", "H0", "H1*", "H2*"
+    );
+    let mut t2 = Json::arr();
+    for ds in &suite {
+        let opts = EngineOptions {
+            max_dim: ds.max_dim,
+            threads: 4,
+            ..Default::default()
+        };
+        let m = bs::run_engine(&ds.data, ds.tau, &opts);
+        let t = &m.result.timings;
+        let g = |name: &str| t.get(name).map(|d| d.as_secs_f64()).unwrap_or(0.0);
+        println!(
+            "{:<12} {:>10.3} {:>12.3} {:>8.3} {:>8.3} {:>8.3}",
+            ds.name,
+            g("F1"),
+            g("neighborhoods"),
+            g("H0"),
+            g("H1*"),
+            g("H2*"),
+        );
+        t2.push(
+            Json::obj()
+                .field("dataset", ds.name.as_str())
+                .field("f1", g("F1"))
+                .field("neighborhoods", g("neighborhoods"))
+                .field("h0", g("H0"))
+                .field("h1", g("H1*"))
+                .field("h2", g("H2*"))
+                .field("total", m.seconds),
+        );
+    }
+    bs::write_json(
+        "table1_table2.json",
+        &Json::obj().field("table1", t1).field("table2", t2),
+    );
+    println!("\npaper shape check: H2* dominates where d=2; F1 is a large");
+    println!("fraction only on the dense full-filtration sets (dragon).");
+}

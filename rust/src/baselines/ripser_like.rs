@@ -1,0 +1,467 @@
+//! Ripser-style baseline: combinatorial indexing + heap reduction.
+//!
+//! Independent of the Dory machinery on purpose: simplices are identified
+//! by combinatorial number system indices (`C(v2,3)+C(v1,2)+C(v0,1)`-style
+//! u64s — the encoding that overflows on million-point data sets, which is
+//! exactly what the paper reports for Ripser on Hi-C), distances come from
+//! a dense matrix (`O(n²)` memory, Ripser's compressed lower distance
+//! matrix), and columns are reduced with a binary min-heap of cofacets.
+//! Persistent cohomology with clearing, dims 0..=2.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+
+use crate::geometry::MetricData;
+use crate::homology::diagram::Diagram;
+
+/// Why the baseline could not process a data set (Table 3's NA entries).
+#[derive(Debug, Clone, PartialEq)]
+pub enum RipserError {
+    /// `C(n, k)` exceeded u64 — combinatorial index overflow.
+    IndexOverflow,
+    /// Dense distance matrix would exceed the memory budget.
+    MatrixTooLarge { bytes: usize },
+}
+
+pub struct RipserLike {
+    n: usize,
+    dist: Vec<f32>,
+    /// Sorted adjacency per vertex: (neighbor, distance), by neighbor id.
+    adj: Vec<Vec<(u32, f32)>>,
+    tau: f32,
+    binom: Vec<[u64; 5]>,
+}
+
+/// Memory budget for the dense matrix (bytes); beyond it we refuse like
+/// Ripser effectively did (NA / crash) on the Hi-C data sets.
+pub const DEFAULT_MATRIX_BUDGET: usize = 2 << 30;
+
+impl RipserLike {
+    pub fn new(data: &MetricData, tau: f64, budget: usize) -> Result<Self, RipserError> {
+        let n = data.n();
+        let bytes = n.saturating_mul(n).saturating_mul(4);
+        if bytes > budget {
+            return Err(RipserError::MatrixTooLarge { bytes });
+        }
+        let mut dist = vec![0f32; n * n];
+        match data {
+            MetricData::Points(pc) => {
+                for i in 0..n {
+                    for j in (i + 1)..n {
+                        let d = pc.dist(i, j) as f32;
+                        dist[i * n + j] = d;
+                        dist[j * n + i] = d;
+                    }
+                }
+            }
+            MetricData::Dense(dd) => {
+                for i in 0..n {
+                    for j in (i + 1)..n {
+                        let d = dd.get(i, j) as f32;
+                        dist[i * n + j] = d;
+                        dist[j * n + i] = d;
+                    }
+                }
+            }
+            MetricData::Sparse(sd) => {
+                // Absent pairs are "infinitely" far: beyond any tau.
+                for d in dist.iter_mut() {
+                    *d = f32::INFINITY;
+                }
+                for i in 0..n {
+                    dist[i * n + i] = 0.0;
+                }
+                for &(u, v, d) in &sd.entries {
+                    dist[u as usize * n + v as usize] = d as f32;
+                    dist[v as usize * n + u as usize] = d as f32;
+                }
+            }
+        }
+        let tau = tau as f32;
+        let mut adj = vec![Vec::new(); n];
+        for i in 0..n {
+            for j in 0..n {
+                if i != j && dist[i * n + j] <= tau {
+                    adj[i].push((j as u32, dist[i * n + j]));
+                }
+            }
+        }
+        // Binomial table up to C(n, 4); detect u64 overflow (the Ripser
+        // failure mode on millions of points).
+        let mut binom = vec![[0u64; 5]; n + 1];
+        binom[0][0] = 1;
+        for i in 1..=n {
+            binom[i][0] = 1;
+            for k in 1..5 {
+                let (a, b) = (binom[i - 1][k - 1], binom[i - 1][k]);
+                match a.checked_add(b) {
+                    Some(v) => binom[i][k] = v,
+                    None => return Err(RipserError::IndexOverflow),
+                }
+            }
+        }
+        Ok(Self {
+            n,
+            dist,
+            adj,
+            tau,
+            binom,
+        })
+    }
+
+    #[inline]
+    fn d(&self, i: u32, j: u32) -> f32 {
+        self.dist[i as usize * self.n + j as usize]
+    }
+
+    fn b(&self, n: u32, k: usize) -> u64 {
+        self.binom[n as usize][k]
+    }
+
+    /// Combinatorial index of a triangle (vertices any order).
+    fn tri_index(&self, mut v: [u32; 3]) -> u64 {
+        v.sort_unstable_by(|a, b| b.cmp(a));
+        self.b(v[0], 3) + self.b(v[1], 2) + self.b(v[2], 1)
+    }
+
+    fn tet_index(&self, mut v: [u32; 4]) -> u64 {
+        v.sort_unstable_by(|a, b| b.cmp(a));
+        self.b(v[0], 4) + self.b(v[1], 3) + self.b(v[2], 2) + self.b(v[3], 1)
+    }
+
+    /// Compute PD up to `max_dim` (0..=2).
+    pub fn compute(&self, max_dim: usize) -> Diagram {
+        let mut diagram = Diagram::new(max_dim);
+
+        // ---- H0: union-find ---------------------------------------------
+        let mut edges: Vec<(f32, u32, u32)> = Vec::new();
+        for i in 0..self.n as u32 {
+            for &(j, d) in &self.adj[i as usize] {
+                if j > i {
+                    edges.push((d, i, j));
+                }
+            }
+        }
+        edges.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut parent: Vec<u32> = (0..self.n as u32).collect();
+        fn find(parent: &mut [u32], mut x: u32) -> u32 {
+            while parent[x as usize] != x {
+                let g = parent[parent[x as usize] as usize];
+                parent[x as usize] = g;
+                x = g;
+            }
+            x
+        }
+        let mut negative = vec![false; edges.len()];
+        for (idx, &(d, a, b)) in edges.iter().enumerate() {
+            let (ra, rb) = (find(&mut parent, a), find(&mut parent, b));
+            if ra != rb {
+                parent[ra as usize] = rb;
+                negative[idx] = true;
+                diagram.push(0, 0.0, d as f64);
+            }
+        }
+        let comps = (0..self.n as u32)
+            .filter(|&v| find(&mut parent, v) == v)
+            .count();
+        for _ in 0..comps {
+            diagram.push(0, 0.0, f64::INFINITY);
+        }
+        if max_dim == 0 {
+            return diagram;
+        }
+
+        // ---- H1: cohomology over edge columns ---------------------------
+        // Columns: positive edges, decreasing (diam, index) order.
+        let mut cols: Vec<(f32, u32, u32)> = edges
+            .iter()
+            .zip(&negative)
+            .filter(|(_, &neg)| !neg)
+            .map(|(&e, _)| e)
+            .collect();
+        cols.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        // pivot (tri index) -> position in `cols` of owner + its ops.
+        let mut pivot_owner: HashMap<u64, usize> = HashMap::new();
+        let mut ops: Vec<Vec<usize>> = vec![Vec::new(); cols.len()];
+        let mut tri_pivots: HashMap<u64, f32> = HashMap::new(); // for dim-2 clearing
+
+        for ci in 0..cols.len() {
+            // Working column: min-heap of cofacet (diam, index).
+            let mut heap: BinaryHeap<Reverse<(NotNanF32, u64)>> = BinaryHeap::new();
+            let mut members: Vec<usize> = vec![ci];
+            self.push_edge_cofacets(cols[ci], &mut heap);
+            let pivot = loop {
+                // Pop pairs until an odd survivor.
+                let top = match heap.pop() {
+                    Some(Reverse(t)) => t,
+                    None => break None,
+                };
+                if heap.peek() == Some(&Reverse(top)) {
+                    heap.pop();
+                    continue;
+                }
+                // Survivor: is it claimed?
+                if let Some(&owner) = pivot_owner.get(&top.1) {
+                    // Add owner column (its edge cofacets and its ops').
+                    heap.push(Reverse(top)); // keep; owner's pivot cancels it
+                    self.push_edge_cofacets(cols[owner], &mut heap);
+                    members.push(owner);
+                    for &op in ops[owner].clone().iter() {
+                        self.push_edge_cofacets(cols[op], &mut heap);
+                        members.push(op);
+                    }
+                    continue;
+                }
+                break Some(top);
+            };
+            if let Some((diam, idx)) = pivot {
+                pivot_owner.insert(idx, ci);
+                tri_pivots.insert(idx, diam.0);
+                // Record ops (columns other than self, odd multiplicity).
+                let mut counts: HashMap<usize, u32> = HashMap::new();
+                for &m in &members {
+                    *counts.entry(m).or_insert(0) += 1;
+                }
+                ops[ci] = counts
+                    .into_iter()
+                    .filter(|&(m, c)| m != ci && c % 2 == 1)
+                    .map(|(m, _)| m)
+                    .collect();
+                diagram.push(1, cols[ci].0 as f64, diam.0 as f64);
+            } else {
+                diagram.push(1, cols[ci].0 as f64, f64::INFINITY);
+            }
+        }
+        if max_dim == 1 {
+            return diagram;
+        }
+
+        // ---- H2: cohomology over triangle columns -----------------------
+        // Enumerate triangles once, attributed to their diameter edge
+        // (ties by vertex order) to avoid duplicates.
+        let mut tris: Vec<(f32, u32, u32, u32)> = Vec::new();
+        for &(d_ab, a, b) in &edges {
+            // Common neighbors with both connecting distances <= d_ab
+            // (with deterministic tie attribution via index comparison).
+            let (la, lb) = (&self.adj[a as usize], &self.adj[b as usize]);
+            let (mut x, mut y) = (0, 0);
+            while x < la.len() && y < lb.len() {
+                match la[x].0.cmp(&lb[y].0) {
+                    std::cmp::Ordering::Less => x += 1,
+                    std::cmp::Ordering::Greater => y += 1,
+                    std::cmp::Ordering::Equal => {
+                        let v = la[x].0;
+                        let (dav, dbv) = (la[x].1, lb[y].1);
+                        // {a,b} is THE diameter edge iff it is the largest
+                        // by (distance, endpoints) among the three.
+                        let key_ab = edge_key(d_ab, a, b);
+                        if edge_key(dav, a.min(v), a.max(v)) < key_ab
+                            && edge_key(dbv, b.min(v), b.max(v)) < key_ab
+                        {
+                            tris.push((d_ab, a, b, v));
+                        }
+                        x += 1;
+                        y += 1;
+                    }
+                }
+            }
+        }
+        // Clearing: drop triangles that are dim-1 pivots; sort desc.
+        tris.retain(|&(_, a, b, v)| !tri_pivots.contains_key(&self.tri_index([a, b, v])));
+        tris.sort_by(|p, q| {
+            let kp = (p.0, self.tri_index([p.1, p.2, p.3]));
+            let kq = (q.0, self.tri_index([q.1, q.2, q.3]));
+            kq.partial_cmp(&kp).unwrap()
+        });
+        let mut pivot_owner2: HashMap<u64, usize> = HashMap::new();
+        let mut ops2: Vec<Vec<usize>> = vec![Vec::new(); tris.len()];
+        for ci in 0..tris.len() {
+            let mut heap: BinaryHeap<Reverse<(NotNanF32, u64)>> = BinaryHeap::new();
+            let mut members: Vec<usize> = vec![ci];
+            self.push_tri_cofacets(tris[ci], &mut heap);
+            let pivot = loop {
+                let top = match heap.pop() {
+                    Some(Reverse(t)) => t,
+                    None => break None,
+                };
+                if heap.peek() == Some(&Reverse(top)) {
+                    heap.pop();
+                    continue;
+                }
+                if let Some(&owner) = pivot_owner2.get(&top.1) {
+                    heap.push(Reverse(top));
+                    self.push_tri_cofacets(tris[owner], &mut heap);
+                    members.push(owner);
+                    for &op in ops2[owner].clone().iter() {
+                        self.push_tri_cofacets(tris[op], &mut heap);
+                        members.push(op);
+                    }
+                    continue;
+                }
+                break Some(top);
+            };
+            if let Some((diam, idx)) = pivot {
+                pivot_owner2.insert(idx, ci);
+                let mut counts: HashMap<usize, u32> = HashMap::new();
+                for &m in &members {
+                    *counts.entry(m).or_insert(0) += 1;
+                }
+                ops2[ci] = counts
+                    .into_iter()
+                    .filter(|&(m, c)| m != ci && c % 2 == 1)
+                    .map(|(m, _)| m)
+                    .collect();
+                diagram.push(2, tris[ci].0 as f64, diam.0 as f64);
+            } else {
+                diagram.push(2, tris[ci].0 as f64, f64::INFINITY);
+            }
+        }
+        diagram
+    }
+
+    fn push_edge_cofacets(
+        &self,
+        (d_ab, a, b): (f32, u32, u32),
+        heap: &mut BinaryHeap<Reverse<(NotNanF32, u64)>>,
+    ) {
+        let (la, lb) = (&self.adj[a as usize], &self.adj[b as usize]);
+        let (mut x, mut y) = (0, 0);
+        while x < la.len() && y < lb.len() {
+            match la[x].0.cmp(&lb[y].0) {
+                std::cmp::Ordering::Less => x += 1,
+                std::cmp::Ordering::Greater => y += 1,
+                std::cmp::Ordering::Equal => {
+                    let v = la[x].0;
+                    let diam = d_ab.max(la[x].1).max(lb[y].1);
+                    if diam <= self.tau {
+                        heap.push(Reverse((NotNanF32(diam), self.tri_index([a, b, v]))));
+                    }
+                    x += 1;
+                    y += 1;
+                }
+            }
+        }
+    }
+
+    fn push_tri_cofacets(
+        &self,
+        (d_t, a, b, c): (f32, u32, u32, u32),
+        heap: &mut BinaryHeap<Reverse<(NotNanF32, u64)>>,
+    ) {
+        // Common neighbors of a, b, c via the smallest adjacency list.
+        let la = &self.adj[a as usize];
+        for &(v, dav) in la {
+            if v == b || v == c {
+                continue;
+            }
+            let (dbv, dcv) = (self.d(b, v), self.d(c, v));
+            if dbv <= self.tau && dcv <= self.tau {
+                let diam = d_t.max(dav).max(dbv).max(dcv);
+                if diam <= self.tau {
+                    heap.push(Reverse((NotNanF32(diam), self.tet_index([a, b, c, v]))));
+                }
+            }
+        }
+    }
+}
+
+/// Deterministic total order on edges: (distance, a, b).
+fn edge_key(d: f32, a: u32, b: u32) -> (NotNanF32, u32, u32) {
+    (NotNanF32(d), a, b)
+}
+
+/// f32 wrapper with total order (no NaNs by construction).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NotNanF32(pub f32);
+impl Eq for NotNanF32 {}
+impl PartialOrd for NotNanF32 {
+    fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(o))
+    }
+}
+impl Ord for NotNanF32 {
+    fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+        self.0.partial_cmp(&o.0).expect("NaN distance")
+    }
+}
+
+/// Convenience wrapper: full run, Table-3 style.
+pub fn compute_ph(
+    data: &MetricData,
+    tau: f64,
+    max_dim: usize,
+    budget: usize,
+) -> Result<Diagram, RipserError> {
+    Ok(RipserLike::new(data, tau, budget)?.compute(max_dim))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets;
+    use crate::geometry::PointCloud;
+
+    #[test]
+    fn matches_dory_on_random_clouds() {
+        use crate::homology::{compute_ph as dory_ph, EngineOptions};
+        for seed in 0..6 {
+            let data = datasets::random_cloud(20, 3, seed);
+            let want = dory_ph(&data, 0.8, &EngineOptions::default()).diagram;
+            let got = compute_ph(&data, 0.8, 2, usize::MAX).unwrap();
+            // f32 matrix: compare with loose tolerance.
+            assert!(
+                got.multiset_eq(&want, 1e-5),
+                "seed={seed}:\n{}",
+                got.diff_summary(&want)
+            );
+        }
+    }
+
+    #[test]
+    fn circle_loop() {
+        let data = datasets::circle(30, 1.0, 0.0, 1);
+        let d = compute_ph(&data, 3.0, 1, usize::MAX).unwrap();
+        assert_eq!(d.significant(1, 0.5).len(), 1);
+        assert_eq!(d.essential_count(0), 1);
+    }
+
+    #[test]
+    fn refuses_oversized_matrix() {
+        let data = datasets::random_cloud(100, 2, 1);
+        let err = compute_ph(&data, 1.0, 1, 1024).unwrap_err();
+        assert!(matches!(err, RipserError::MatrixTooLarge { .. }));
+    }
+
+    #[test]
+    fn sparse_input_handled() {
+        use crate::geometry::{MetricData, SparseDistances};
+        // A 4-cycle given as a sparse distance list: one loop.
+        let entries = vec![
+            (0u32, 1u32, 1.0),
+            (1, 2, 1.0),
+            (2, 3, 1.0),
+            (0, 3, 1.0),
+            (0, 2, 1.6),
+            (1, 3, 1.6),
+        ];
+        let data = MetricData::Sparse(SparseDistances { n: 4, entries });
+        let d = compute_ph(&data, 1.2, 1, usize::MAX).unwrap();
+        assert_eq!(d.essential_count(1), 1, "open loop at tau=1.2");
+    }
+
+    #[test]
+    fn tri_index_unique() {
+        let pc = PointCloud::new(1, (0..10).map(|i| i as f64).collect());
+        let data = crate::geometry::MetricData::Points(pc);
+        let r = RipserLike::new(&data, 100.0, usize::MAX).unwrap();
+        let mut seen = std::collections::HashSet::new();
+        for a in 0..10u32 {
+            for b in (a + 1)..10 {
+                for c in (b + 1)..10 {
+                    assert!(seen.insert(r.tri_index([a, b, c])));
+                    assert_eq!(r.tri_index([a, b, c]), r.tri_index([c, a, b]));
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,174 @@
+//! Shared harness for the paper-table benches (`rust/benches/*.rs`).
+//!
+//! criterion is not in the offline vendor set, so each bench is a
+//! `harness = false` binary built on these helpers: scaled dataset menus,
+//! timed+memory-tracked engine runs, table printing, and JSON/CSV dumps
+//! under `target/bench_out/`.
+
+use std::path::PathBuf;
+
+use crate::datasets::{self, Dataset};
+use crate::filtration::EdgeFiltration;
+use crate::geometry::MetricData;
+use crate::homology::{compute_ph_from_filtration, EngineOptions, PhResult};
+use crate::util::json::Json;
+use crate::util::memtrack;
+
+/// Bench scale, from `--full` / `--quick` argv (cargo bench also passes
+/// `--bench`, which we ignore along with anything unknown).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    Quick,
+    Full,
+}
+
+pub fn parse_scale() -> Scale {
+    let mut s = Scale::Quick;
+    for a in std::env::args().skip(1) {
+        match a.as_str() {
+            "--full" => s = Scale::Full,
+            "--quick" => s = Scale::Quick,
+            _ => {}
+        }
+    }
+    s
+}
+
+/// The Table 1 benchmark suite at bench scale. Quick sizes keep
+/// `cargo bench` minutes-scale while preserving the comparisons' shape;
+/// `--full` approaches the paper's Table 1 parameters.
+pub fn suite(scale: Scale) -> Vec<Dataset> {
+    match scale {
+        Scale::Quick => vec![
+            Dataset {
+                name: "dragon".into(),
+                data: datasets::dragon_like(600, 1),
+                tau: f64::INFINITY,
+                max_dim: 1,
+            },
+            Dataset {
+                name: "fractal".into(),
+                data: datasets::fractal_network(4), // 123 nodes, dense
+                tau: f64::INFINITY,
+                max_dim: 2,
+            },
+            Dataset {
+                name: "o3".into(),
+                data: datasets::o3(1024, 2),
+                tau: 1.0,
+                max_dim: 2,
+            },
+            Dataset {
+                name: "torus4(1)".into(),
+                data: datasets::torus4(4000, 3),
+                tau: 0.3,
+                max_dim: 1,
+            },
+            Dataset {
+                name: "torus4(2)".into(),
+                data: datasets::torus4(2000, 3),
+                tau: 0.4,
+                max_dim: 2,
+            },
+        ],
+        Scale::Full => vec![
+            Dataset {
+                name: "dragon".into(),
+                data: datasets::dragon_like(2000, 1),
+                tau: f64::INFINITY,
+                max_dim: 1,
+            },
+            Dataset {
+                name: "fractal".into(),
+                data: datasets::fractal_network(5), // 366 nodes
+                tau: f64::INFINITY,
+                max_dim: 2,
+            },
+            Dataset {
+                name: "o3".into(),
+                data: datasets::o3(8192, 2),
+                tau: 1.0,
+                max_dim: 2,
+            },
+            Dataset {
+                name: "torus4(1)".into(),
+                data: datasets::torus4(50_000, 3),
+                tau: 0.15,
+                max_dim: 1,
+            },
+            Dataset {
+                name: "torus4(2)".into(),
+                data: datasets::torus4(50_000, 3),
+                tau: 0.15,
+                max_dim: 2,
+            },
+        ],
+    }
+}
+
+/// Hi-C bins per scale (paper: 3.09 M).
+pub fn hic_bins(scale: Scale) -> usize {
+    match scale {
+        Scale::Quick => 10_000,
+        Scale::Full => 60_000,
+    }
+}
+
+/// One measured engine run: wall time, section-peak heap, result.
+pub struct Measured {
+    pub seconds: f64,
+    pub peak_bytes: usize,
+    pub result: PhResult,
+}
+
+pub fn run_engine(data: &MetricData, tau: f64, opts: &EngineOptions) -> Measured {
+    memtrack::reset_peak();
+    let t0 = std::time::Instant::now();
+    // compute_ph times "F1" as its first phase (the Table 2 column).
+    let r = crate::homology::compute_ph(data, tau, opts);
+    Measured {
+        seconds: t0.elapsed().as_secs_f64(),
+        peak_bytes: memtrack::section_peak_bytes(),
+        result: r,
+    }
+}
+
+/// Variant for callers that already built the filtration.
+pub fn run_engine_on(f: &EdgeFiltration, opts: &EngineOptions) -> Measured {
+    memtrack::reset_peak();
+    let t0 = std::time::Instant::now();
+    let r = compute_ph_from_filtration(f, opts);
+    Measured {
+        seconds: t0.elapsed().as_secs_f64(),
+        peak_bytes: memtrack::section_peak_bytes(),
+        result: r,
+    }
+}
+
+/// `(time, peak)` cell in the paper's "(2.8 s, 262 MB)" style.
+pub fn cell(seconds: f64, bytes: usize) -> String {
+    format!("({:.2} s, {})", seconds, memtrack::fmt_bytes(bytes))
+}
+
+/// Output directory for machine-readable bench results.
+pub fn out_dir() -> PathBuf {
+    let d = PathBuf::from("target/bench_out");
+    std::fs::create_dir_all(&d).expect("create bench_out");
+    d
+}
+
+pub fn write_json(name: &str, j: &Json) {
+    let p = out_dir().join(name);
+    std::fs::write(&p, j.render()).expect("write bench json");
+    println!("[wrote {p:?}]");
+}
+
+/// Simple ASCII horizontal bar (for the Fig 18 rendering).
+pub fn bar(value: f64, max: f64, width: usize) -> String {
+    let w = if max > 0.0 {
+        ((value / max) * width as f64).round() as usize
+    } else {
+        0
+    };
+    "#".repeat(w.min(width))
+}

@@ -1,0 +1,13 @@
+//! On-the-fly coboundary enumeration (paper §4.2).
+//!
+//! The coboundary matrix is never stored. A *cursor* (the paper's
+//! φ-representation) pins one simplex of a coboundary column and can move
+//! to the next-greater simplex (`find_next`) or jump to the first simplex
+//! ≥ a target key (`find_geq`) using only the sorted neighborhoods —
+//! binary searches, no materialization.
+
+pub mod edges;
+pub mod triangles;
+
+pub use edges::TriCursor;
+pub use triangles::TetCursor;

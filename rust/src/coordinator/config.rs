@@ -1,0 +1,371 @@
+//! Run configuration: a small TOML-subset parser plus typed config.
+//!
+//! The offline vendor set has no serde/toml, so we parse the subset we
+//! need: `[section]` headers, `key = value` with string / number / bool
+//! values, `#` comments. Unknown keys are rejected (typo safety).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Value::Num(x) if *x >= 0.0 && x.fract() == 0.0 => Some(*x as usize),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parse the TOML subset into section -> key -> value.
+pub fn parse_toml(text: &str) -> Result<HashMap<String, HashMap<String, Value>>> {
+    let mut out: HashMap<String, HashMap<String, Value>> = HashMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') {
+            if !line.ends_with(']') {
+                bail!("line {}: malformed section header", lineno + 1);
+            }
+            section = line[1..line.len() - 1].trim().to_string();
+            out.entry(section.clone()).or_default();
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+        let key = k.trim().to_string();
+        let val = parse_value(v.trim())
+            .with_context(|| format!("line {}: bad value for {key}", lineno + 1))?;
+        out.entry(section.clone()).or_default().insert(key, val);
+    }
+    Ok(out)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' outside quotes starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if s.starts_with('"') && s.ends_with('"') && s.len() >= 2 {
+        return Ok(Value::Str(s[1..s.len() - 1].to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        "inf" => return Ok(Value::Num(f64::INFINITY)),
+        _ => {}
+    }
+    if let Ok(x) = s.parse::<f64>() {
+        return Ok(Value::Num(x));
+    }
+    bail!("cannot parse value: {s}")
+}
+
+/// Which data source a run uses.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DatasetSpec {
+    Named {
+        kind: String,
+        n: usize,
+        seed: u64,
+    },
+    Hic {
+        n_bins: usize,
+        condition: String,
+        seed: u64,
+    },
+    PointsFile(PathBuf),
+    LowerDistanceFile(PathBuf),
+    SparseFile(PathBuf),
+}
+
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub dataset: DatasetSpec,
+    pub tau: f64,
+    pub max_dim: usize,
+    pub threads: usize,
+    pub batch_size: usize,
+    pub dense_lookup: bool,
+    pub algorithm: String,
+    pub artifacts: PathBuf,
+    pub use_pjrt: bool,
+    pub pimage: bool,
+    pub pimage_span: f64,
+    pub diagram_csv: Option<PathBuf>,
+    pub diagram_json: Option<PathBuf>,
+    pub summary_json: Option<PathBuf>,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            dataset: DatasetSpec::Named {
+                kind: "circle".into(),
+                n: 200,
+                seed: 1,
+            },
+            tau: f64::INFINITY,
+            max_dim: 2,
+            threads: 4,
+            batch_size: 100,
+            dense_lookup: false,
+            algorithm: "fast-column".into(),
+            artifacts: PathBuf::from("artifacts"),
+            use_pjrt: true,
+            pimage: false,
+            pimage_span: 1.0,
+            diagram_csv: None,
+            diagram_json: None,
+            summary_json: None,
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("read {path:?}"))?;
+        Self::from_str(&text)
+    }
+
+    pub fn from_str(text: &str) -> Result<Self> {
+        let doc = parse_toml(text)?;
+        let mut cfg = RunConfig::default();
+        for (section, keys) in &doc {
+            match section.as_str() {
+                "dataset" => {
+                    let kind = keys
+                        .get("kind")
+                        .and_then(Value::as_str)
+                        .unwrap_or("circle")
+                        .to_string();
+                    let n = keys.get("n").and_then(Value::as_usize).unwrap_or(200);
+                    let seed = keys
+                        .get("seed")
+                        .and_then(Value::as_usize)
+                        .unwrap_or(1) as u64;
+                    cfg.dataset = match kind.as_str() {
+                        "hic" => DatasetSpec::Hic {
+                            n_bins: n,
+                            condition: keys
+                                .get("condition")
+                                .and_then(Value::as_str)
+                                .unwrap_or("control")
+                                .to_string(),
+                            seed,
+                        },
+                        "points-file" => DatasetSpec::PointsFile(path_key(keys, "path")?),
+                        "lower-distance-file" => {
+                            DatasetSpec::LowerDistanceFile(path_key(keys, "path")?)
+                        }
+                        "sparse-file" => DatasetSpec::SparseFile(path_key(keys, "path")?),
+                        _ => DatasetSpec::Named { kind, n, seed },
+                    };
+                    for k in keys.keys() {
+                        if !["kind", "n", "seed", "condition", "path"].contains(&k.as_str()) {
+                            bail!("unknown key dataset.{k}");
+                        }
+                    }
+                }
+                "engine" => {
+                    for (k, v) in keys {
+                        match k.as_str() {
+                            "tau" => cfg.tau = v.as_f64().context("engine.tau")?,
+                            "max_dim" => cfg.max_dim = v.as_usize().context("engine.max_dim")?,
+                            "threads" => cfg.threads = v.as_usize().context("engine.threads")?,
+                            "batch_size" => {
+                                cfg.batch_size = v.as_usize().context("engine.batch_size")?
+                            }
+                            "dense_lookup" => {
+                                cfg.dense_lookup = v.as_bool().context("engine.dense_lookup")?
+                            }
+                            "algorithm" => {
+                                cfg.algorithm =
+                                    v.as_str().context("engine.algorithm")?.to_string()
+                            }
+                            _ => bail!("unknown key engine.{k}"),
+                        }
+                    }
+                }
+                "runtime" => {
+                    for (k, v) in keys {
+                        match k.as_str() {
+                            "artifacts" => {
+                                cfg.artifacts =
+                                    PathBuf::from(v.as_str().context("runtime.artifacts")?)
+                            }
+                            "use_pjrt" => {
+                                cfg.use_pjrt = v.as_bool().context("runtime.use_pjrt")?
+                            }
+                            "pimage" => cfg.pimage = v.as_bool().context("runtime.pimage")?,
+                            "pimage_span" => {
+                                cfg.pimage_span = v.as_f64().context("runtime.pimage_span")?
+                            }
+                            _ => bail!("unknown key runtime.{k}"),
+                        }
+                    }
+                }
+                "output" => {
+                    for (k, v) in keys {
+                        let p = Some(PathBuf::from(v.as_str().context("output path")?));
+                        match k.as_str() {
+                            "diagram_csv" => cfg.diagram_csv = p,
+                            "diagram_json" => cfg.diagram_json = p,
+                            "summary_json" => cfg.summary_json = p,
+                            _ => bail!("unknown key output.{k}"),
+                        }
+                    }
+                }
+                other => bail!("unknown section [{other}]"),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.max_dim > 2 {
+            bail!("max_dim must be <= 2 (paper scope)");
+        }
+        if !["fast-column", "implicit-row"].contains(&self.algorithm.as_str()) {
+            bail!("algorithm must be fast-column or implicit-row");
+        }
+        if self.threads == 0 || self.batch_size == 0 {
+            bail!("threads and batch_size must be >= 1");
+        }
+        Ok(())
+    }
+}
+
+fn path_key(keys: &HashMap<String, Value>, k: &str) -> Result<PathBuf> {
+    Ok(PathBuf::from(
+        keys.get(k)
+            .and_then(Value::as_str)
+            .with_context(|| format!("dataset.{k} required"))?,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_config() {
+        let cfg = RunConfig::from_str(
+            r#"
+# A full run config
+[dataset]
+kind = "torus4"
+n = 5000
+seed = 42
+
+[engine]
+tau = 0.15
+max_dim = 2
+threads = 4
+batch_size = 100
+dense_lookup = false
+algorithm = "fast-column"
+
+[runtime]
+artifacts = "artifacts"
+use_pjrt = true
+
+[output]
+diagram_csv = "out/pd.csv"
+"#,
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.dataset,
+            DatasetSpec::Named {
+                kind: "torus4".into(),
+                n: 5000,
+                seed: 42
+            }
+        );
+        assert_eq!(cfg.tau, 0.15);
+        assert_eq!(cfg.threads, 4);
+        assert_eq!(cfg.diagram_csv, Some(PathBuf::from("out/pd.csv")));
+    }
+
+    #[test]
+    fn rejects_unknown_keys() {
+        assert!(RunConfig::from_str("[engine]\nbogus = 1\n").is_err());
+        assert!(RunConfig::from_str("[bogus]\n").is_err());
+    }
+
+    #[test]
+    fn rejects_invalid_values() {
+        assert!(RunConfig::from_str("[engine]\nmax_dim = 3\n").is_err());
+        assert!(RunConfig::from_str("[engine]\nalgorithm = \"quantum\"\n").is_err());
+        assert!(RunConfig::from_str("[engine]\nthreads = 0\n").is_err());
+    }
+
+    #[test]
+    fn inf_and_comments_and_bools() {
+        let doc = parse_toml("a = inf # trailing\nb = true\nc = \"x # not comment\"\n").unwrap();
+        let root = &doc[""];
+        assert_eq!(root["a"], Value::Num(f64::INFINITY));
+        assert_eq!(root["b"], Value::Bool(true));
+        assert_eq!(root["c"], Value::Str("x # not comment".into()));
+    }
+
+    #[test]
+    fn hic_dataset_spec() {
+        let cfg = RunConfig::from_str(
+            "[dataset]\nkind = \"hic\"\nn = 10000\ncondition = \"auxin\"\n[engine]\ntau = 400\n",
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.dataset,
+            DatasetSpec::Hic {
+                n_bins: 10000,
+                condition: "auxin".into(),
+                seed: 1
+            }
+        );
+    }
+}

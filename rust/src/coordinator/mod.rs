@@ -1,0 +1,310 @@
+//! L3 coordinator: config-driven pipeline orchestration.
+//!
+//! dataset → edge filtration (PJRT Pallas kernel when an artifact fits,
+//! native Rust otherwise) → Dory engine (H0/H1*/H2*) → reports (PD CSV /
+//! JSON, summary JSON, optional persistence image through the second
+//! Pallas kernel). Python never runs here — artifacts were AOT-compiled
+//! at build time.
+
+pub mod config;
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+pub use config::{DatasetSpec, RunConfig};
+
+use crate::datasets;
+use crate::filtration::EdgeFiltration;
+use crate::geometry::MetricData;
+use crate::hic;
+use crate::homology::{self, Algorithm, EngineOptions};
+use crate::io;
+use crate::runtime::Runtime;
+use crate::util::json::Json;
+use crate::util::memtrack;
+
+/// Everything a run produces.
+pub struct RunReport {
+    pub result: homology::PhResult,
+    pub edge_source: &'static str,
+    pub n_points: usize,
+    pub n_edges: usize,
+    pub peak_heap_bytes: usize,
+    pub pimage: Option<(usize, Vec<f32>)>,
+}
+
+/// Materialize the configured dataset.
+pub fn build_dataset(spec: &DatasetSpec) -> Result<MetricData> {
+    Ok(match spec {
+        DatasetSpec::Named { kind, n, seed } => match kind.as_str() {
+            "circle" => datasets::circle(*n, 1.0, 0.05, *seed),
+            "figure-eight" => datasets::figure_eight(*n, 1.0, 0.02, *seed),
+            "sphere" => datasets::sphere(*n, 1.0, 0.0, *seed),
+            "torus3" => datasets::torus3(*n, 2.0, 0.7, *seed),
+            "torus4" => datasets::torus4(*n, *seed),
+            "o3" => datasets::o3(*n, *seed),
+            "dragon" => datasets::dragon_like(*n, *seed),
+            "fractal" => datasets::fractal_network(5),
+            "random" => datasets::random_cloud(*n, 3, *seed),
+            "multi-scale" => datasets::multi_scale_demo(*n, *seed),
+            other => bail!("unknown dataset kind: {other}"),
+        },
+        DatasetSpec::Hic {
+            n_bins,
+            condition,
+            seed,
+        } => {
+            let cond = match condition.as_str() {
+                "control" => hic::Condition::Control,
+                "auxin" => hic::Condition::Auxin,
+                other => bail!("hic condition must be control|auxin, got {other}"),
+            };
+            let params = hic::HiCParams {
+                n_bins: *n_bins,
+                seed: *seed,
+                ..Default::default()
+            };
+            MetricData::Sparse(hic::generate(&params, cond))
+        }
+        DatasetSpec::PointsFile(p) => io::read_points(p)?,
+        DatasetSpec::LowerDistanceFile(p) => io::read_lower_distance(p)?,
+        DatasetSpec::SparseFile(p) => io::read_sparse_coo(p)?,
+    })
+}
+
+/// Build the edge filtration, preferring the PJRT distance kernel.
+/// Returns the filtration and which path produced it.
+pub fn build_filtration(
+    data: &MetricData,
+    tau: f64,
+    runtime: Option<&Runtime>,
+) -> (EdgeFiltration, &'static str) {
+    if let (MetricData::Points(pc), Some(rt)) = (data, runtime) {
+        if rt.has_distance_kernel() {
+            match rt.distance_edges(pc, tau) {
+                Ok(raw) => {
+                    return (
+                        EdgeFiltration::from_weighted_edges(pc.n() as u32, raw, tau),
+                        "pjrt-pallas",
+                    )
+                }
+                Err(e) => {
+                    eprintln!("[dory] PJRT distance path unavailable ({e}); using native");
+                }
+            }
+        }
+    }
+    (EdgeFiltration::build(data, tau), "native")
+}
+
+/// Execute a full configured run.
+pub fn run(cfg: &RunConfig) -> Result<RunReport> {
+    let data = build_dataset(&cfg.dataset)?;
+    let runtime = if cfg.use_pjrt {
+        match Runtime::load(&cfg.artifacts) {
+            Ok(rt) => Some(rt),
+            Err(e) => {
+                eprintln!("[dory] PJRT runtime unavailable ({e}); native fallback");
+                None
+            }
+        }
+    } else {
+        None
+    };
+
+    memtrack::reset_peak();
+    let (f, edge_source) = build_filtration(&data, cfg.tau, runtime.as_ref());
+    let opts = EngineOptions {
+        max_dim: cfg.max_dim,
+        threads: cfg.threads,
+        batch_size: cfg.batch_size,
+        dense_lookup: cfg.dense_lookup,
+        algorithm: match cfg.algorithm.as_str() {
+            "implicit-row" => Algorithm::ImplicitRow,
+            _ => Algorithm::FastColumn,
+        },
+    };
+    let mut result = homology::compute_ph_from_filtration(&f, &opts);
+    result.stats.n = data.n();
+    let peak = memtrack::section_peak_bytes();
+
+    // Optional persistence image through the second Pallas kernel.
+    let pimage = if cfg.pimage {
+        match &runtime {
+            Some(rt) if rt.has_pimage_kernel() => {
+                let dim = cfg.max_dim.min(1);
+                let pairs: Vec<(f32, f32, f32)> = result
+                    .diagram
+                    .finite(dim)
+                    .iter()
+                    .map(|p| (p.birth as f32, (p.death - p.birth) as f32, 1.0f32))
+                    .collect();
+                match rt.persistence_image(&pairs, cfg.pimage_span as f32) {
+                    Ok(img) => Some(img),
+                    Err(e) => {
+                        eprintln!("[dory] persistence image failed: {e}");
+                        None
+                    }
+                }
+            }
+            _ => None,
+        }
+    } else {
+        None
+    };
+
+    if let Some(p) = &cfg.diagram_csv {
+        ensure_parent(p)?;
+        io::write_diagram_csv(p, &result.diagram)?;
+    }
+    if let Some(p) = &cfg.diagram_json {
+        ensure_parent(p)?;
+        io::write_diagram_json(p, &result.diagram)?;
+    }
+    let report = RunReport {
+        n_points: data.n(),
+        n_edges: f.n_edges(),
+        edge_source,
+        peak_heap_bytes: peak,
+        pimage,
+        result,
+    };
+    if let Some(p) = &cfg.summary_json {
+        ensure_parent(p)?;
+        std::fs::write(p, summary_json(cfg, &report).render())?;
+    }
+    Ok(report)
+}
+
+fn ensure_parent(p: &Path) -> Result<()> {
+    if let Some(dir) = p.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir).with_context(|| format!("mkdir {dir:?}"))?;
+        }
+    }
+    Ok(())
+}
+
+/// The machine-readable run summary (consumed by benches and EXPERIMENTS).
+pub fn summary_json(cfg: &RunConfig, r: &RunReport) -> Json {
+    let d = &r.result.diagram;
+    let mut betti = Json::arr();
+    for dim in 0..=cfg.max_dim {
+        betti.push(
+            Json::obj()
+                .field("dim", dim)
+                .field("finite", d.finite(dim).len())
+                .field("essential", d.essential_count(dim)),
+        );
+    }
+    let mut phases = Json::obj();
+    for (name, dur) in r.result.timings.phases() {
+        phases = phases.field(name, dur.as_secs_f64());
+    }
+    Json::obj()
+        .field("n_points", r.n_points)
+        .field("n_edges", r.n_edges)
+        .field("tau", cfg.tau)
+        .field("max_dim", cfg.max_dim)
+        .field("threads", cfg.threads)
+        .field("algorithm", cfg.algorithm.as_str())
+        .field("dense_lookup", cfg.dense_lookup)
+        .field("edge_source", r.edge_source)
+        .field("peak_heap_bytes", r.peak_heap_bytes)
+        .field("base_memory_model_bytes", r.result.stats.base_memory_bytes)
+        .field("betti", betti)
+        .field("phase_seconds", phases)
+        .field(
+            "h1",
+            Json::obj()
+                .field("pairs", r.result.stats.h1.pairs)
+                .field("trivial", r.result.stats.h1.trivial_pairs)
+                .field("essential", r.result.stats.h1.essential),
+        )
+        .field(
+            "h2",
+            Json::obj()
+                .field("pairs", r.result.stats.h2.pairs)
+                .field("trivial", r.result.stats.h2.trivial_pairs)
+                .field("essential", r.result.stats.h2.essential),
+        )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn end_to_end_run_with_outputs() {
+        let dir = std::env::temp_dir().join("dory-coord-test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = RunConfig {
+            dataset: DatasetSpec::Named {
+                kind: "circle".into(),
+                n: 80,
+                seed: 3,
+            },
+            tau: 3.0,
+            max_dim: 1,
+            threads: 2,
+            use_pjrt: false,
+            diagram_csv: Some(dir.join("pd.csv")),
+            summary_json: Some(dir.join("summary.json")),
+            ..Default::default()
+        };
+        let r = run(&cfg).unwrap();
+        assert_eq!(r.edge_source, "native");
+        assert_eq!(r.result.diagram.essential_count(0), 1);
+        assert!(dir.join("pd.csv").is_file());
+        let s = std::fs::read_to_string(dir.join("summary.json")).unwrap();
+        assert!(s.contains("\"n_points\":80"), "{s}");
+    }
+
+    #[test]
+    fn all_named_datasets_build() {
+        for kind in [
+            "circle",
+            "figure-eight",
+            "sphere",
+            "torus3",
+            "torus4",
+            "o3",
+            "dragon",
+            "random",
+            "multi-scale",
+        ] {
+            let spec = DatasetSpec::Named {
+                kind: kind.into(),
+                n: 64,
+                seed: 1,
+            };
+            let d = build_dataset(&spec).unwrap();
+            assert!(d.n() >= 64, "{kind}");
+        }
+        assert!(build_dataset(&DatasetSpec::Named {
+            kind: "nope".into(),
+            n: 10,
+            seed: 1
+        })
+        .is_err());
+    }
+
+    #[test]
+    fn hic_run_counts_loops() {
+        let cfg = RunConfig {
+            dataset: DatasetSpec::Hic {
+                n_bins: 2000,
+                condition: "control".into(),
+                seed: 7,
+            },
+            tau: 400.0,
+            max_dim: 1,
+            threads: 1,
+            use_pjrt: false,
+            ..Default::default()
+        };
+        let r = run(&cfg).unwrap();
+        assert!(r.result.diagram.significant(1, 50.0).len() > 3);
+    }
+}

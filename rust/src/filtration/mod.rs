@@ -1,0 +1,181 @@
+//! VR edge filtration (`F1`), vertex-/edge-neighborhoods, paired indexing.
+//!
+//! Paper §4: the filtration for 1-simplices is the list of edges sorted by
+//! length; 2-/3-simplices are *never* materialized — they are identified by
+//! paired keys `⟨primary, secondary⟩` (§4.1) and enumerated on the fly from
+//! the neighborhoods (§4.2).
+
+pub mod neighborhoods;
+pub mod sparsify;
+pub mod paired;
+
+pub use neighborhoods::Neighborhoods;
+pub use paired::Key;
+
+use crate::geometry::MetricData;
+
+/// The 1-skeleton filtration: edges sorted ascending by (length, a, b).
+///
+/// Edge *order* (its index in `edges`) is the unit every higher-dimensional
+/// key is built from; `values[o]` recovers the filtration parameter.
+#[derive(Clone, Debug)]
+pub struct EdgeFiltration {
+    pub n: u32,
+    /// `edges[o] = (a, b)` with `a < b`, sorted ascending by value.
+    pub edges: Vec<(u32, u32)>,
+    /// `values[o]` = length of edge `o`; non-decreasing.
+    pub values: Vec<f64>,
+    /// Max permissible filtration parameter used to build this filtration.
+    pub tau_max: f64,
+}
+
+impl EdgeFiltration {
+    /// Build F1 from any metric input, keeping edges with `d <= tau_max`.
+    pub fn build(data: &MetricData, tau_max: f64) -> Self {
+        let n = data.n();
+        assert!(n < u32::MAX as usize, "vertex count must fit u32");
+        let mut raw: Vec<(f64, u32, u32)> = Vec::new();
+        match data {
+            MetricData::Points(pc) => {
+                for i in 0..n {
+                    let pi = pc.point(i);
+                    for j in (i + 1)..n {
+                        let pj = pc.point(j);
+                        let mut s = 0.0;
+                        for k in 0..pc.dim {
+                            let d = pi[k] - pj[k];
+                            s += d * d;
+                        }
+                        let d = s.sqrt();
+                        if d <= tau_max {
+                            raw.push((d, i as u32, j as u32));
+                        }
+                    }
+                }
+            }
+            MetricData::Dense(dd) => {
+                for i in 0..n {
+                    for j in (i + 1)..n {
+                        let d = dd.get(i, j);
+                        if d <= tau_max {
+                            raw.push((d, i as u32, j as u32));
+                        }
+                    }
+                }
+            }
+            MetricData::Sparse(sd) => {
+                for &(u, v, d) in &sd.entries {
+                    debug_assert!(u < v);
+                    if d <= tau_max {
+                        raw.push((d, u, v));
+                    }
+                }
+            }
+        }
+        Self::from_weighted_edges(n as u32, raw, tau_max)
+    }
+
+    /// Build from an explicit weighted edge list (deduplicated by caller).
+    pub fn from_weighted_edges(n: u32, mut raw: Vec<(f64, u32, u32)>, tau_max: f64) -> Self {
+        // Deterministic total order: by length, ties by (a, b).
+        raw.sort_unstable_by(|x, y| {
+            x.0.partial_cmp(&y.0)
+                .unwrap()
+                .then(x.1.cmp(&y.1))
+                .then(x.2.cmp(&y.2))
+        });
+        let mut edges = Vec::with_capacity(raw.len());
+        let mut values = Vec::with_capacity(raw.len());
+        for (d, a, b) in raw {
+            edges.push((a, b));
+            values.push(d);
+        }
+        Self {
+            n,
+            edges,
+            values,
+            tau_max,
+        }
+    }
+
+    pub fn n_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Filtration value of a triangle/tetrahedron key = value of its diameter.
+    #[inline]
+    pub fn key_value(&self, key: Key) -> f64 {
+        self.values[key.p as usize]
+    }
+
+    /// Base memory model from paper App. E: `(3n + 12 n_e) * 4` bytes.
+    pub fn base_memory_model_bytes(&self) -> usize {
+        (3 * self.n as usize + 12 * self.n_edges()) * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::{DenseDistances, PointCloud, SparseDistances};
+
+    fn square_cloud() -> MetricData {
+        // Unit square: 4 edges of length 1, 2 diagonals of length sqrt(2).
+        MetricData::Points(PointCloud::new(
+            2,
+            vec![0.0, 0.0, 1.0, 0.0, 1.0, 1.0, 0.0, 1.0],
+        ))
+    }
+
+    #[test]
+    fn sorted_and_thresholded() {
+        let f = EdgeFiltration::build(&square_cloud(), 2.0);
+        assert_eq!(f.n_edges(), 6);
+        for w in f.values.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+        assert!((f.values[3] - 1.0).abs() < 1e-12);
+        assert!((f.values[4] - 2f64.sqrt()).abs() < 1e-12);
+
+        let f = EdgeFiltration::build(&square_cloud(), 1.1);
+        assert_eq!(f.n_edges(), 4, "diagonals filtered");
+    }
+
+    #[test]
+    fn ties_broken_deterministically() {
+        let f1 = EdgeFiltration::build(&square_cloud(), 2.0);
+        let f2 = EdgeFiltration::build(&square_cloud(), 2.0);
+        assert_eq!(f1.edges, f2.edges);
+        // Ties: (0,1),(0,3),(1,2),(2,3) all length 1, ordered lexicographically.
+        assert_eq!(f1.edges[0], (0, 1));
+        assert_eq!(f1.edges[1], (0, 3));
+    }
+
+    #[test]
+    fn dense_and_sparse_agree_with_points() {
+        let md = square_cloud();
+        let pc = match &md {
+            MetricData::Points(p) => p.clone(),
+            _ => unreachable!(),
+        };
+        let dd = MetricData::Dense(DenseDistances::from_points(&pc));
+        let mut entries = Vec::new();
+        for i in 0..4u32 {
+            for j in (i + 1)..4 {
+                entries.push((i, j, pc.dist(i as usize, j as usize)));
+            }
+        }
+        let sd = MetricData::Sparse(SparseDistances { n: 4, entries });
+        let f_p = EdgeFiltration::build(&md, 2.0);
+        let f_d = EdgeFiltration::build(&dd, 2.0);
+        let f_s = EdgeFiltration::build(&sd, 2.0);
+        assert_eq!(f_p.edges, f_d.edges);
+        assert_eq!(f_p.edges, f_s.edges);
+    }
+
+    #[test]
+    fn base_memory_model() {
+        let f = EdgeFiltration::build(&square_cloud(), 2.0);
+        assert_eq!(f.base_memory_model_bytes(), (3 * 4 + 12 * 6) * 4);
+    }
+}

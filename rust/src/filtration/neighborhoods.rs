@@ -1,0 +1,247 @@
+//! Vertex- and edge-neighborhoods (paper §4.2, Figure 6).
+//!
+//! For every vertex `a` we store the list of its neighbors twice, in CSR
+//! layout sharing one offset array:
+//!
+//! * the **vertex-neighborhood** `N^a`: `(neighbor, edge-order)` pairs
+//!   sorted by neighbor id — drives Case 1 of coboundary enumeration;
+//! * the **edge-neighborhood** `E^a`: `(edge-order, neighbor)` pairs
+//!   sorted by edge order — drives Case 2.
+//!
+//! `edge_order(a, b)` — "what is the filtration order of edge {a,b}?" — is
+//! the hot query of the whole system (§4.6). The sparse answer is a binary
+//! search in the smaller vertex-neighborhood; the non-sparse variant
+//! (DoryNS, `-D COMBIDX` in the paper) trades `O(n^2)` memory for an O(1)
+//! packed-triangular table lookup.
+
+use super::EdgeFiltration;
+
+#[derive(Clone, Debug)]
+pub struct Neighborhoods {
+    pub n: u32,
+    off: Vec<u32>,
+    // Vertex-neighborhood arrays (sorted by neighbor id within a vertex).
+    vn_vtx: Vec<u32>,
+    vn_ord: Vec<u32>,
+    // Edge-neighborhood arrays (sorted by edge order within a vertex).
+    en_ord: Vec<u32>,
+    en_vtx: Vec<u32>,
+    /// DoryNS: packed strict-lower-triangular `n(n-1)/2` table of edge
+    /// orders (`u32::MAX` = edge absent from the filtration).
+    dense: Option<Vec<u32>>,
+}
+
+pub const NO_EDGE: u32 = u32::MAX;
+
+impl Neighborhoods {
+    /// Build from F1. `dense_lookup = true` selects the DoryNS layout.
+    pub fn build(f: &EdgeFiltration, dense_lookup: bool) -> Self {
+        let n = f.n as usize;
+        let ne = f.n_edges();
+        let mut off = vec![0u32; n + 1];
+        for &(a, b) in &f.edges {
+            off[a as usize + 1] += 1;
+            off[b as usize + 1] += 1;
+        }
+        for i in 0..n {
+            off[i + 1] += off[i];
+        }
+        let total = off[n] as usize;
+        debug_assert_eq!(total, 2 * ne);
+
+        // Fill the edge-neighborhood by walking edges in filtration order:
+        // per-vertex runs come out already sorted by edge order.
+        let mut cursor = off.clone();
+        let mut en_ord = vec![0u32; total];
+        let mut en_vtx = vec![0u32; total];
+        for (o, &(a, b)) in f.edges.iter().enumerate() {
+            let (o, a, b) = (o as u32, a as usize, b as usize);
+            let ca = cursor[a] as usize;
+            en_ord[ca] = o;
+            en_vtx[ca] = f.edges[o as usize].1;
+            cursor[a] += 1;
+            let cb = cursor[b] as usize;
+            en_ord[cb] = o;
+            en_vtx[cb] = f.edges[o as usize].0;
+            cursor[b] += 1;
+        }
+
+        // Vertex-neighborhood: same pairs re-sorted by neighbor id.
+        let mut vn_vtx = vec![0u32; total];
+        let mut vn_ord = vec![0u32; total];
+        let mut scratch: Vec<(u32, u32)> = Vec::new();
+        for a in 0..n {
+            let (s, e) = (off[a] as usize, off[a + 1] as usize);
+            scratch.clear();
+            scratch.extend(en_vtx[s..e].iter().zip(&en_ord[s..e]).map(|(&v, &o)| (v, o)));
+            scratch.sort_unstable();
+            for (k, &(v, o)) in scratch.iter().enumerate() {
+                vn_vtx[s + k] = v;
+                vn_ord[s + k] = o;
+            }
+        }
+
+        let dense = if dense_lookup {
+            let mut tbl = vec![NO_EDGE; n * (n - 1) / 2];
+            for (o, &(a, b)) in f.edges.iter().enumerate() {
+                let (hi, lo) = (b as usize, a as usize);
+                tbl[hi * (hi - 1) / 2 + lo] = o as u32;
+            }
+            Some(tbl)
+        } else {
+            None
+        };
+
+        Self {
+            n: f.n,
+            off,
+            vn_vtx,
+            vn_ord,
+            en_ord,
+            en_vtx,
+            dense,
+        }
+    }
+
+    #[inline]
+    pub fn degree(&self, a: u32) -> u32 {
+        self.off[a as usize + 1] - self.off[a as usize]
+    }
+
+    /// `N^a` as `(neighbor ids, edge orders)`, sorted by neighbor id.
+    #[inline]
+    pub fn vn(&self, a: u32) -> (&[u32], &[u32]) {
+        let (s, e) = (self.off[a as usize] as usize, self.off[a as usize + 1] as usize);
+        (&self.vn_vtx[s..e], &self.vn_ord[s..e])
+    }
+
+    /// `E^a` as `(edge orders, neighbor ids)`, sorted by edge order.
+    #[inline]
+    pub fn en(&self, a: u32) -> (&[u32], &[u32]) {
+        let (s, e) = (self.off[a as usize] as usize, self.off[a as usize + 1] as usize);
+        (&self.en_ord[s..e], &self.en_vtx[s..e])
+    }
+
+    /// Order of edge `{a, b}` if present. The §4.6 hot path: O(1) with the
+    /// dense table, binary search in the smaller neighborhood otherwise.
+    #[inline]
+    pub fn edge_order(&self, a: u32, b: u32) -> Option<u32> {
+        debug_assert_ne!(a, b);
+        if let Some(tbl) = &self.dense {
+            let (hi, lo) = if a > b { (a as usize, b as usize) } else { (b as usize, a as usize) };
+            let o = tbl[hi * (hi - 1) / 2 + lo];
+            return if o == NO_EDGE { None } else { Some(o) };
+        }
+        let (qa, qb) = if self.degree(a) <= self.degree(b) {
+            (a, b)
+        } else {
+            (b, a)
+        };
+        let (vtx, ord) = self.vn(qa);
+        match vtx.binary_search(&qb) {
+            Ok(i) => Some(ord[i]),
+            Err(_) => None,
+        }
+    }
+
+    /// First index in `N^a` whose neighbor id is >= `v`.
+    #[inline]
+    pub fn vn_lower_bound(&self, a: u32, v: u32) -> u32 {
+        let (vtx, _) = self.vn(a);
+        vtx.partition_point(|&x| x < v) as u32
+    }
+
+    /// First index in `E^a` whose edge order is >= `o`.
+    #[inline]
+    pub fn en_lower_bound(&self, a: u32, o: u32) -> u32 {
+        let (ord, _) = self.en(a);
+        ord.partition_point(|&x| x < o) as u32
+    }
+
+    pub fn is_dense(&self) -> bool {
+        self.dense.is_some()
+    }
+
+    /// Measured heap bytes of the structure (paper App. E base memory).
+    pub fn memory_bytes(&self) -> usize {
+        4 * (self.off.len()
+            + self.vn_vtx.len()
+            + self.vn_ord.len()
+            + self.en_ord.len()
+            + self.en_vtx.len()
+            + self.dense.as_ref().map_or(0, |d| d.len()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::{MetricData, PointCloud};
+
+    fn fixture() -> EdgeFiltration {
+        // 5 points on a line with distinct gaps -> unique edge lengths.
+        let pc = PointCloud::new(1, vec![0.0, 1.0, 2.3, 3.9, 5.8]);
+        EdgeFiltration::build(&MetricData::Points(pc), 10.0)
+    }
+
+    #[test]
+    fn en_sorted_by_order_vn_by_vertex() {
+        let f = fixture();
+        for dense in [false, true] {
+            let nb = Neighborhoods::build(&f, dense);
+            for a in 0..f.n {
+                let (ord, _) = nb.en(a);
+                assert!(ord.windows(2).all(|w| w[0] < w[1]), "E^{a} sorted");
+                let (vtx, _) = nb.vn(a);
+                assert!(vtx.windows(2).all(|w| w[0] < w[1]), "N^{a} sorted");
+            }
+        }
+    }
+
+    #[test]
+    fn edge_order_roundtrip_sparse_and_dense() {
+        let f = fixture();
+        for dense in [false, true] {
+            let nb = Neighborhoods::build(&f, dense);
+            for (o, &(a, b)) in f.edges.iter().enumerate() {
+                assert_eq!(nb.edge_order(a, b), Some(o as u32));
+                assert_eq!(nb.edge_order(b, a), Some(o as u32));
+            }
+        }
+    }
+
+    #[test]
+    fn absent_edge_is_none() {
+        let pc = PointCloud::new(1, vec![0.0, 1.0, 10.0]);
+        let f = EdgeFiltration::build(&MetricData::Points(pc), 2.0);
+        assert_eq!(f.n_edges(), 1);
+        for dense in [false, true] {
+            let nb = Neighborhoods::build(&f, dense);
+            assert_eq!(nb.edge_order(0, 1), Some(0));
+            assert_eq!(nb.edge_order(0, 2), None);
+            assert_eq!(nb.edge_order(1, 2), None);
+        }
+    }
+
+    #[test]
+    fn lower_bounds() {
+        let f = fixture();
+        let nb = Neighborhoods::build(&f, false);
+        let (vtx, _) = nb.vn(0);
+        let lb = nb.vn_lower_bound(0, 2);
+        assert!(vtx[..lb as usize].iter().all(|&v| v < 2));
+        assert!(vtx[lb as usize..].iter().all(|&v| v >= 2));
+        let (ord, _) = nb.en(0);
+        let lb = nb.en_lower_bound(0, 3);
+        assert!(ord[..lb as usize].iter().all(|&o| o < 3));
+        assert!(ord[lb as usize..].iter().all(|&o| o >= 3));
+    }
+
+    #[test]
+    fn degrees_sum_to_twice_edges() {
+        let f = fixture();
+        let nb = Neighborhoods::build(&f, false);
+        let total: u32 = (0..f.n).map(|a| nb.degree(a)).sum();
+        assert_eq!(total as usize, 2 * f.n_edges());
+    }
+}

@@ -1,0 +1,89 @@
+//! Paired-indexing (paper §4.1).
+//!
+//! A triangle `{a,b,c}` with diameter edge `{a,b}` (order `kp`) is keyed
+//! `⟨kp, c⟩`; a tetrahedron `{a,b,c,d}` with diameter `{a,b}` is keyed
+//! `⟨kp, order({c,d})⟩`. Lexicographic order on `⟨primary, secondary⟩`
+//! refines the VR filtration order, because a simplex with a larger
+//! diameter appears later. 8 bytes regardless of `n`; keys bounded by
+//! `O(n_e)` rather than `O(n^4)` — this is the memory contribution.
+
+/// `⟨primary, secondary⟩`. Derived `Ord` is lexicographic, matching Eq. (1).
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub struct Key {
+    pub p: u32,
+    pub s: u32,
+}
+
+impl Key {
+    pub const NONE: Key = Key {
+        p: u32::MAX,
+        s: u32::MAX,
+    };
+
+    #[inline]
+    pub fn new(p: u32, s: u32) -> Key {
+        Key { p, s }
+    }
+
+    #[inline]
+    pub fn is_none(self) -> bool {
+        self == Key::NONE
+    }
+
+    /// Packed form for hashing / dense maps.
+    #[inline]
+    pub fn pack(self) -> u64 {
+        ((self.p as u64) << 32) | self.s as u64
+    }
+
+    #[inline]
+    pub fn unpack(x: u64) -> Key {
+        Key {
+            p: (x >> 32) as u32,
+            s: x as u32,
+        }
+    }
+}
+
+impl std::fmt::Display for Key {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "⟨{},{}⟩", self.p, self.s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordering_matches_eq1() {
+        // kp dominates; ks breaks ties (paper Eq. 1).
+        assert!(Key::new(2, 0) > Key::new(1, 99));
+        assert!(Key::new(1, 5) > Key::new(1, 4));
+        assert!(Key::new(1, 4) == Key::new(1, 4));
+    }
+
+    #[test]
+    fn pack_roundtrip_preserves_order() {
+        let ks = [
+            Key::new(0, 0),
+            Key::new(0, 7),
+            Key::new(3, 1),
+            Key::new(3, 2),
+            Key::new(9, 0),
+        ];
+        for w in ks.windows(2) {
+            assert!(w[0] < w[1]);
+            assert!(w[0].pack() < w[1].pack(), "packing must be monotone");
+        }
+        for k in ks {
+            assert_eq!(Key::unpack(k.pack()), k);
+        }
+    }
+
+    #[test]
+    fn none_is_max() {
+        assert!(Key::new(u32::MAX - 1, u32::MAX) < Key::NONE);
+        assert!(Key::NONE.is_none());
+    }
+}

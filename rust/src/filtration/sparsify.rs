@@ -1,0 +1,150 @@
+//! SimBa-style filtration sparsification (paper §7 / Dey et al. 2019).
+//!
+//! "SimBa reduces the number of simplices in the filtration by
+//! approximating it to a sparse filtration such that the PDs … are
+//! within a theoretical error of margin" — the Discussion notes Dory can
+//! serve as SimBa's exact backend. This module provides the complementary
+//! ingredient: farthest-point (greedy permutation) subsampling, whose
+//! VR filtration on the ε-net is a classic 2·ε-interleaving of the full
+//! one — so `bottleneck(PD_full, PD_net) ≤ 2ε` per stability. The bench
+//! tests assert exactly that bound via [`crate::homology::analysis`].
+
+use crate::geometry::{MetricData, PointCloud};
+use crate::util::rng::Pcg32;
+
+/// Result of a greedy permutation: selected indices and their cover
+/// radius (the ε of the ε-net).
+pub struct GreedyNet {
+    pub indices: Vec<u32>,
+    pub radius: f64,
+}
+
+/// Farthest-point subsample of `k` points (or until radius ≤ `min_r`).
+pub fn farthest_point_sample(
+    pc: &PointCloud,
+    k: usize,
+    min_radius: f64,
+    seed: u64,
+) -> GreedyNet {
+    let n = pc.n();
+    assert!(n > 0);
+    let k = k.min(n);
+    let mut rng = Pcg32::new(seed);
+    let first = rng.gen_range(n as u32) as usize;
+    let mut dist = vec![f64::INFINITY; n];
+    let mut chosen = Vec::with_capacity(k);
+    let mut cur = first;
+    let mut radius = f64::INFINITY;
+    while chosen.len() < k && radius > min_radius {
+        chosen.push(cur as u32);
+        let mut far = 0usize;
+        let mut fard = -1.0;
+        for i in 0..n {
+            let d = pc.dist(cur, i);
+            if d < dist[i] {
+                dist[i] = d;
+            }
+            if dist[i] > fard {
+                fard = dist[i];
+                far = i;
+            }
+        }
+        radius = fard;
+        cur = far;
+    }
+    GreedyNet {
+        indices: chosen,
+        radius: radius.max(0.0),
+    }
+}
+
+/// Restrict a point cloud to the net's points.
+pub fn subsample_cloud(pc: &PointCloud, net: &GreedyNet) -> MetricData {
+    let mut coords = Vec::with_capacity(net.indices.len() * pc.dim);
+    for &i in &net.indices {
+        coords.extend_from_slice(pc.point(i as usize));
+    }
+    MetricData::Points(PointCloud::new(pc.dim, coords))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets;
+    use crate::homology::analysis::bottleneck_distance;
+    use crate::homology::{compute_ph, EngineOptions};
+
+    #[test]
+    fn net_is_a_cover() {
+        let data = datasets::circle(200, 1.0, 0.02, 3);
+        let pc = match &data {
+            MetricData::Points(p) => p.clone(),
+            _ => unreachable!(),
+        };
+        let net = farthest_point_sample(&pc, 50, 0.0, 1);
+        assert_eq!(net.indices.len(), 50);
+        // Every point is within `radius` of some net point.
+        for i in 0..pc.n() {
+            let d = net
+                .indices
+                .iter()
+                .map(|&j| pc.dist(i, j as usize))
+                .fold(f64::INFINITY, f64::min);
+            assert!(d <= net.radius + 1e-12, "point {i}: {d} > {}", net.radius);
+        }
+        // Distinct indices.
+        let set: std::collections::HashSet<_> = net.indices.iter().collect();
+        assert_eq!(set.len(), 50);
+    }
+
+    #[test]
+    fn radius_decreases_with_k() {
+        let data = datasets::torus3(300, 2.0, 0.7, 4);
+        let pc = match &data {
+            MetricData::Points(p) => p.clone(),
+            _ => unreachable!(),
+        };
+        let r20 = farthest_point_sample(&pc, 20, 0.0, 1).radius;
+        let r100 = farthest_point_sample(&pc, 100, 0.0, 1).radius;
+        assert!(r100 < r20);
+    }
+
+    #[test]
+    fn sparsified_pd_within_stability_bound() {
+        // PD of the ε-net is within 2ε bottleneck distance of the full PD
+        // (interleaving + stability). This validates the whole pipeline:
+        // sparsifier, engine, and the bottleneck implementation together.
+        let data = datasets::circle(240, 1.0, 0.0, 7);
+        let pc = match &data {
+            MetricData::Points(p) => p.clone(),
+            _ => unreachable!(),
+        };
+        let opts = EngineOptions {
+            max_dim: 1,
+            ..Default::default()
+        };
+        let full = compute_ph(&data, 3.0, &opts).diagram;
+        let net = farthest_point_sample(&pc, 80, 0.0, 2);
+        let sub = compute_ph(&subsample_cloud(&pc, &net), 3.0, &opts).diagram;
+        let d = bottleneck_distance(&full, &sub, 1);
+        assert!(
+            d <= 2.0 * net.radius + 1e-9,
+            "bottleneck {d} > 2ε = {}",
+            2.0 * net.radius
+        );
+        // And the loop survives sparsification.
+        assert_eq!(sub.significant(1, 0.5).len(), 1);
+    }
+
+    #[test]
+    fn min_radius_stopping() {
+        let data = datasets::circle(100, 1.0, 0.0, 5);
+        let pc = match &data {
+            MetricData::Points(p) => p.clone(),
+            _ => unreachable!(),
+        };
+        let net = farthest_point_sample(&pc, 100, 0.5, 1);
+        assert!(net.indices.len() < 100, "should stop early");
+        assert!(net.radius <= 0.5 + 1e-9 || net.indices.len() == 100);
+    }
+}

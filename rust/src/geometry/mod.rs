@@ -1,0 +1,198 @@
+//! Point clouds and metric inputs.
+//!
+//! Dory consumes three input shapes (paper §5–6): raw point clouds in a
+//! Euclidean space, dense distance matrices (the `fractal` benchmark), and
+//! pre-thresholded *sparse* distance lists (the Hi-C data sets). All three
+//! normalize into [`MetricData`] from which the edge filtration is built.
+
+/// Row-major `n × dim` point cloud.
+#[derive(Clone, Debug)]
+pub struct PointCloud {
+    pub dim: usize,
+    pub coords: Vec<f64>,
+}
+
+impl PointCloud {
+    pub fn new(dim: usize, coords: Vec<f64>) -> Self {
+        assert!(dim > 0 && coords.len() % dim == 0);
+        Self { dim, coords }
+    }
+
+    pub fn n(&self) -> usize {
+        self.coords.len() / self.dim
+    }
+
+    #[inline]
+    pub fn point(&self, i: usize) -> &[f64] {
+        &self.coords[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Euclidean distance between points `i` and `j`.
+    #[inline]
+    pub fn dist(&self, i: usize, j: usize) -> f64 {
+        let (p, q) = (self.point(i), self.point(j));
+        let mut s = 0.0;
+        for k in 0..self.dim {
+            let d = p[k] - q[k];
+            s += d * d;
+        }
+        s.sqrt()
+    }
+
+    /// Coordinates as f32, padded/truncated to `(rows, cols)` for the PJRT
+    /// artifact path. Padding points are placed far away (`pad_value`) so
+    /// padded edges exceed any finite `τ_m`.
+    pub fn to_f32_padded(&self, rows: usize, cols: usize, pad_value: f32) -> Vec<f32> {
+        let n = self.n();
+        assert!(rows >= n && cols >= self.dim);
+        let mut out = vec![pad_value; rows * cols];
+        for i in 0..n {
+            for k in 0..self.dim {
+                out[i * cols + k] = self.coords[i * self.dim + k] as f32;
+            }
+            for k in self.dim..cols {
+                out[i * cols + k] = 0.0;
+            }
+        }
+        out
+    }
+
+    /// Bounding-box diagonal — a cheap scale reference for picking τ_m.
+    pub fn bbox_diagonal(&self) -> f64 {
+        if self.n() == 0 {
+            return 0.0;
+        }
+        let mut lo = vec![f64::INFINITY; self.dim];
+        let mut hi = vec![f64::NEG_INFINITY; self.dim];
+        for i in 0..self.n() {
+            for (k, &c) in self.point(i).iter().enumerate() {
+                lo[k] = lo[k].min(c);
+                hi[k] = hi[k].max(c);
+            }
+        }
+        lo.iter()
+            .zip(&hi)
+            .map(|(a, b)| (b - a) * (b - a))
+            .sum::<f64>()
+            .sqrt()
+    }
+}
+
+/// Dense symmetric distance matrix stored as the strict lower triangle,
+/// packed row-wise: entry (i, j) with i > j at index `i*(i-1)/2 + j`.
+#[derive(Clone, Debug)]
+pub struct DenseDistances {
+    pub n: usize,
+    tri: Vec<f64>,
+}
+
+impl DenseDistances {
+    pub fn new(n: usize, tri: Vec<f64>) -> Self {
+        assert_eq!(tri.len(), n * (n - 1) / 2);
+        Self { n, tri }
+    }
+
+    pub fn from_full(n: usize, full: &[f64]) -> Self {
+        assert_eq!(full.len(), n * n);
+        let mut tri = Vec::with_capacity(n * (n - 1) / 2);
+        for i in 1..n {
+            for j in 0..i {
+                tri.push(full[i * n + j]);
+            }
+        }
+        Self { n, tri }
+    }
+
+    pub fn from_points(pc: &PointCloud) -> Self {
+        let n = pc.n();
+        let mut tri = Vec::with_capacity(n * (n - 1) / 2);
+        for i in 1..n {
+            for j in 0..i {
+                tri.push(pc.dist(i, j));
+            }
+        }
+        Self { n, tri }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i != j);
+        let (hi, lo) = if i > j { (i, j) } else { (j, i) };
+        self.tri[hi * (hi - 1) / 2 + lo]
+    }
+
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        let (hi, lo) = if i > j { (i, j) } else { (j, i) };
+        self.tri[hi * (hi - 1) / 2 + lo] = v;
+    }
+}
+
+/// Sparse distance list: pre-thresholded edges `(u, v, d)` with `u < v`.
+/// This is the Hi-C input format — only pairs within τ_m are present.
+#[derive(Clone, Debug)]
+pub struct SparseDistances {
+    pub n: usize,
+    pub entries: Vec<(u32, u32, f64)>,
+}
+
+/// Unified metric input for filtration construction.
+#[derive(Clone, Debug)]
+pub enum MetricData {
+    Points(PointCloud),
+    Dense(DenseDistances),
+    Sparse(SparseDistances),
+}
+
+impl MetricData {
+    pub fn n(&self) -> usize {
+        match self {
+            MetricData::Points(p) => p.n(),
+            MetricData::Dense(d) => d.n,
+            MetricData::Sparse(s) => s.n,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pointcloud_dist() {
+        let pc = PointCloud::new(2, vec![0.0, 0.0, 3.0, 4.0]);
+        assert_eq!(pc.n(), 2);
+        assert!((pc.dist(0, 1) - 5.0).abs() < 1e-12);
+        assert!((pc.bbox_diagonal() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let pc = PointCloud::new(3, vec![0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 2.0, 0.0]);
+        let dd = DenseDistances::from_points(&pc);
+        for i in 0..3 {
+            for j in 0..3 {
+                if i != j {
+                    assert!((dd.get(i, j) - pc.dist(i, j)).abs() < 1e-12);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dense_from_full_symmetric() {
+        let full = vec![0.0, 1.0, 2.0, 1.0, 0.0, 3.0, 2.0, 3.0, 0.0];
+        let dd = DenseDistances::from_full(3, &full);
+        assert_eq!(dd.get(0, 1), 1.0);
+        assert_eq!(dd.get(2, 0), 2.0);
+        assert_eq!(dd.get(1, 2), 3.0);
+    }
+
+    #[test]
+    fn padding_layout() {
+        let pc = PointCloud::new(2, vec![1.0, 2.0]);
+        let p = pc.to_f32_padded(3, 4, 9e8);
+        assert_eq!(p.len(), 12);
+        assert_eq!(&p[0..4], &[1.0, 2.0, 0.0, 0.0]);
+        assert_eq!(p[4], 9e8);
+    }
+}

@@ -1,0 +1,310 @@
+//! Synthetic Hi-C substrate (paper §6 substitution — see DESIGN.md §4).
+//!
+//! The paper analyzes Rao et al. (2017) genome-wide Hi-C at 1 kb
+//! resolution: ~3.09 M genomic bins whose pairwise spatial distances are
+//! estimated from contact frequencies, thresholded at τ_m = 400, and fed
+//! to Dory as a *sparse distance list*. Treating DNA with auxin degrades
+//! cohesin and eliminates loop domains; the paper's Figure 21 shows the
+//! loop (H1) and void (H2) counts collapsing.
+//!
+//! We reproduce the *relevant structure* of that data set synthetically:
+//!
+//! * a **polymer backbone** — per chromosome, nearby bins (|i−j| ≤ window)
+//!   get sub-linear, noisy distances `step·|i−j|^0.6`, the contact decay
+//!   of a folded chain;
+//! * **cohesin loops** — anchor pairs (i, j) at log-normal genomic
+//!   separation are pulled spatially close, with a zipped stem around the
+//!   anchor (CTCF-convergent loop extrusion footprint). Each anchor
+//!   closes a cycle through the backbone → an H1 class whose birth scale
+//!   is the anchor distance;
+//! * **domain shells** — compact domains arranged on spherical shells
+//!   contribute H2 classes (voids);
+//! * the **auxin condition** keeps only a small fraction of loops and
+//!   shells (cohesin-dependent structures), leaving the backbone intact.
+//!
+//! Output is exactly the input format the paper uses (sparse entries with
+//! d ≤ τ_m), at a configurable number of bins.
+
+use crate::geometry::SparseDistances;
+use crate::util::rng::Pcg32;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Condition {
+    Control,
+    Auxin,
+}
+
+#[derive(Clone, Debug)]
+pub struct HiCParams {
+    /// Total genomic bins (the paper: 3,087,941 at 1 kb).
+    pub n_bins: usize,
+    /// Number of chromosomes (independent backbone chains).
+    pub chroms: usize,
+    /// Backbone contact window (|i-j| <= window gets an entry).
+    pub window: usize,
+    /// Cohesin loops in the control condition.
+    pub n_loops: usize,
+    /// Fraction of loops surviving auxin (Rao 2017: "eliminates all loop
+    /// domains" — a small residue remains).
+    pub loop_retention: f64,
+    /// Spherical domain shells (void generators) in control.
+    pub n_domains: usize,
+    /// Fraction of domains surviving auxin.
+    pub domain_retention: f64,
+    /// Distance threshold (the paper used τ_m = 400).
+    pub tau_max: f64,
+    pub seed: u64,
+}
+
+impl Default for HiCParams {
+    fn default() -> Self {
+        Self {
+            n_bins: 20_000,
+            chroms: 8,
+            window: 24,
+            n_loops: 220,
+            loop_retention: 0.12,
+            n_domains: 36,
+            domain_retention: 0.15,
+            tau_max: 400.0,
+            seed: 2021,
+        }
+    }
+}
+
+/// Generate the sparse distance list for one experimental condition.
+pub fn generate(params: &HiCParams, condition: Condition) -> SparseDistances {
+    let mut rng = Pcg32::new(
+        params.seed ^ 0x48_69_43, // same structural randomness per seed;
+    );
+    let n = params.n_bins;
+    let per_chrom = n / params.chroms;
+    let mut entries: Vec<(u32, u32, f64)> = Vec::new();
+
+    // --- Backbone ---------------------------------------------------------
+    let step = 36.0;
+    for c in 0..params.chroms {
+        let lo = c * per_chrom;
+        let hi = if c == params.chroms - 1 {
+            n
+        } else {
+            (c + 1) * per_chrom
+        };
+        for i in lo..hi {
+            for k in 1..=params.window {
+                let j = i + k;
+                if j >= hi {
+                    break;
+                }
+                let d = step * (k as f64).powf(0.6) * (1.0 + 0.08 * rng.normal());
+                if d <= params.tau_max && d > 0.0 {
+                    entries.push((i as u32, j as u32, d));
+                }
+            }
+        }
+    }
+
+    // --- Cohesin loops ------------------------------------------------------
+    // Structural randomness (anchor placement) is shared between
+    // conditions; auxin *removes* loops rather than re-rolling them.
+    let keep_loops = match condition {
+        Condition::Control => params.n_loops,
+        Condition::Auxin => ((params.n_loops as f64) * params.loop_retention).round() as usize,
+    };
+    let mut loop_rng = Pcg32::new(params.seed.wrapping_mul(0x9E37_79B9));
+    for li in 0..params.n_loops {
+        // Genomic separation: log-normal, 60–1200 bins typical.
+        let sep = (loop_rng.log_normal(5.2, 0.55)).clamp(40.0, 2400.0) as usize;
+        let c = loop_rng.gen_range(params.chroms as u32) as usize;
+        let lo = c * per_chrom;
+        let hi = if c == params.chroms - 1 {
+            n
+        } else {
+            (c + 1) * per_chrom
+        };
+        if hi - lo <= sep + 2 {
+            continue;
+        }
+        let i = lo + loop_rng.gen_range((hi - lo - sep) as u32) as usize;
+        let j = i + sep;
+        // Anchor spatial proximity: spread across the threshold axis so
+        // Fig 21's per-threshold structure is non-trivial.
+        let anchor_d = 20.0 + 330.0 * loop_rng.next_f64();
+        if li >= keep_loops {
+            continue; // removed by auxin
+        }
+        // Zipped stem around the anchor.
+        let stem = 4 + loop_rng.gen_range(6) as usize;
+        for k in 0..=stem {
+            // Stay inside the chromosome on both sides.
+            if i >= lo + k && j + k < hi {
+                let d = anchor_d + 14.0 * k as f64 * (1.0 + 0.05 * loop_rng.normal());
+                if d <= params.tau_max {
+                    entries.push(((i - k) as u32, (j + k) as u32, d.max(1.0)));
+                }
+            }
+        }
+    }
+
+    // --- Domain shells (voids) ---------------------------------------------
+    let keep_domains = match condition {
+        Condition::Control => params.n_domains,
+        Condition::Auxin => {
+            ((params.n_domains as f64) * params.domain_retention).round() as usize
+        }
+    };
+    let mut dom_rng = Pcg32::new(params.seed.wrapping_mul(0x2545_F491));
+    for di in 0..params.n_domains {
+        let span = 60 + dom_rng.gen_range(60) as usize; // bins on the shell
+        let c = dom_rng.gen_range(params.chroms as u32) as usize;
+        let lo = c * per_chrom;
+        let hi = if c == params.chroms - 1 {
+            n
+        } else {
+            (c + 1) * per_chrom
+        };
+        if hi - lo <= span + 2 {
+            continue;
+        }
+        let start = lo + dom_rng.gen_range((hi - lo - span) as u32) as usize;
+        let radius = 70.0 + 90.0 * dom_rng.next_f64();
+        if di >= keep_domains {
+            continue;
+        }
+        // Place the domain's bins on a Fibonacci sphere of `radius`; add
+        // all intra-domain pairs within τ_m. The shell's VR complex has a
+        // genuine H2 class born ~ the sample spacing, dying ~ the radius.
+        let phi = std::f64::consts::PI * (3.0 - 5f64.sqrt());
+        let mut pos = Vec::with_capacity(span);
+        for s in 0..span {
+            let y = 1.0 - 2.0 * (s as f64 + 0.5) / span as f64;
+            let r = (1.0 - y * y).sqrt();
+            let t = phi * s as f64;
+            pos.push((
+                radius * r * t.cos(),
+                radius * y,
+                radius * r * t.sin(),
+            ));
+        }
+        // Shuffle assignment so the shell is not aligned with the chain
+        // (otherwise backbone distances fight the shell geometry).
+        let mut order: Vec<usize> = (0..span).collect();
+        dom_rng.shuffle(&mut order);
+        for a in 0..span {
+            for b in (a + 1)..span {
+                let (p, q) = (pos[order[a]], pos[order[b]]);
+                let d = ((p.0 - q.0).powi(2) + (p.1 - q.1).powi(2) + (p.2 - q.2).powi(2))
+                    .sqrt()
+                    .max(1.0);
+                if d <= params.tau_max {
+                    entries.push(((start + a) as u32, (start + b) as u32, d));
+                }
+            }
+        }
+    }
+
+    // Deduplicate (keep the smallest distance per pair — closest contact).
+    entries.sort_by(|x, y| {
+        (x.0, x.1)
+            .cmp(&(y.0, y.1))
+            .then(x.2.partial_cmp(&y.2).unwrap())
+    });
+    entries.dedup_by_key(|e| (e.0, e.1));
+
+    SparseDistances { n, entries }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::MetricData;
+    use crate::homology::{compute_ph, EngineOptions};
+
+    fn small_params() -> HiCParams {
+        HiCParams {
+            n_bins: 3000,
+            chroms: 3,
+            window: 16,
+            n_loops: 40,
+            n_domains: 6,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn sparse_output_well_formed() {
+        let p = small_params();
+        let sd = generate(&p, Condition::Control);
+        assert_eq!(sd.n, p.n_bins);
+        for &(u, v, d) in &sd.entries {
+            assert!(u < v, "ordered endpoints");
+            assert!((v as usize) < sd.n);
+            assert!(d > 0.0 && d <= p.tau_max);
+        }
+        // No duplicate pairs.
+        let mut pairs: Vec<_> = sd.entries.iter().map(|e| (e.0, e.1)).collect();
+        pairs.sort_unstable();
+        let len = pairs.len();
+        pairs.dedup();
+        assert_eq!(pairs.len(), len);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let p = small_params();
+        let a = generate(&p, Condition::Control);
+        let b = generate(&p, Condition::Control);
+        assert_eq!(a.entries.len(), b.entries.len());
+        assert_eq!(a.entries[..50], b.entries[..50]);
+    }
+
+    #[test]
+    fn auxin_is_sparser_than_control() {
+        let p = small_params();
+        let ctrl = generate(&p, Condition::Control);
+        let aux = generate(&p, Condition::Auxin);
+        assert!(
+            aux.entries.len() < ctrl.entries.len(),
+            "{} !< {}",
+            aux.entries.len(),
+            ctrl.entries.len()
+        );
+    }
+
+    #[test]
+    fn auxin_collapses_loops_and_voids() {
+        let p = small_params();
+        let opts = EngineOptions {
+            max_dim: 2,
+            ..Default::default()
+        };
+        let ctrl = compute_ph(
+            &MetricData::Sparse(generate(&p, Condition::Control)),
+            p.tau_max,
+            &opts,
+        );
+        let aux = compute_ph(
+            &MetricData::Sparse(generate(&p, Condition::Auxin)),
+            p.tau_max,
+            &opts,
+        );
+        // Fig 21's qualitative claim: loops and voids drop sharply.
+        let (b1c, b1a) = (
+            ctrl.diagram.significant(1, 60.0).len(),
+            aux.diagram.significant(1, 60.0).len(),
+        );
+        assert!(
+            (b1a as f64) < 0.55 * b1c as f64,
+            "loops: control {b1c} vs auxin {b1a}"
+        );
+        let (b2c, b2a) = (
+            ctrl.diagram.significant(2, 30.0).len(),
+            aux.diagram.significant(2, 30.0).len(),
+        );
+        assert!(b2c >= 3, "control should show voids, got {b2c}");
+        assert!(
+            (b2a as f64) < 0.6 * b2c as f64,
+            "voids: control {b2c} vs auxin {b2a}"
+        );
+    }
+}

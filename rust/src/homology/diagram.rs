@@ -1,0 +1,204 @@
+//! Persistence diagrams, Betti curves and diagram comparison.
+
+/// One off-diagonal point; `death = +∞` for essential classes.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Point {
+    pub birth: f64,
+    pub death: f64,
+}
+
+impl Point {
+    pub fn persistence(&self) -> f64 {
+        self.death - self.birth
+    }
+
+    pub fn is_essential(&self) -> bool {
+        self.death.is_infinite()
+    }
+}
+
+/// Persistence diagram holding one multiset of points per dimension.
+#[derive(Clone, Debug)]
+pub struct Diagram {
+    dims: Vec<Vec<Point>>,
+}
+
+impl Diagram {
+    pub fn new(max_dim: usize) -> Self {
+        Self {
+            dims: vec![Vec::new(); max_dim + 1],
+        }
+    }
+
+    pub fn max_dim(&self) -> usize {
+        self.dims.len() - 1
+    }
+
+    /// Record a (birth, death) point; zero-persistence points are dropped
+    /// (they are diagonal points, invisible to any PD metric).
+    pub fn push(&mut self, dim: usize, birth: f64, death: f64) {
+        if birth != death {
+            self.dims[dim].push(Point { birth, death });
+        }
+    }
+
+    pub fn points(&self, dim: usize) -> &[Point] {
+        self.dims.get(dim).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// Finite points of `dim`, sorted by (birth, death).
+    pub fn finite(&self, dim: usize) -> Vec<Point> {
+        let mut v: Vec<Point> = self
+            .points(dim)
+            .iter()
+            .copied()
+            .filter(|p| !p.is_essential())
+            .collect();
+        v.sort_by(|a, b| {
+            a.birth
+                .partial_cmp(&b.birth)
+                .unwrap()
+                .then(a.death.partial_cmp(&b.death).unwrap())
+        });
+        v
+    }
+
+    pub fn essential_count(&self, dim: usize) -> usize {
+        self.points(dim).iter().filter(|p| p.is_essential()).count()
+    }
+
+    /// Betti number at scale `tau`: classes born at or before `tau` that
+    /// die strictly after it.
+    pub fn betti_at(&self, dim: usize, tau: f64) -> usize {
+        self.points(dim)
+            .iter()
+            .filter(|p| p.birth <= tau && p.death > tau)
+            .count()
+    }
+
+    /// Betti curve over `ts` (Fig. 21's loop/void counts per threshold).
+    pub fn betti_curve(&self, dim: usize, ts: &[f64]) -> Vec<usize> {
+        ts.iter().map(|&t| self.betti_at(dim, t)).collect()
+    }
+
+    /// Points with persistence above `min_persistence`.
+    pub fn significant(&self, dim: usize, min_persistence: f64) -> Vec<Point> {
+        self.points(dim)
+            .iter()
+            .copied()
+            .filter(|p| p.persistence() > min_persistence)
+            .collect()
+    }
+
+    /// Exact multiset equality (within `tol` per coordinate) per
+    /// dimension, including essential classes — the cross-engine test.
+    pub fn multiset_eq(&self, other: &Diagram, tol: f64) -> bool {
+        let md = self.max_dim().max(other.max_dim());
+        for d in 0..=md {
+            let (mut a, mut b) = (self.finite(d), other.finite(d));
+            if a.len() != b.len() {
+                return false;
+            }
+            let cmp = |x: &Point, y: &Point| {
+                x.birth
+                    .partial_cmp(&y.birth)
+                    .unwrap()
+                    .then(x.death.partial_cmp(&y.death).unwrap())
+            };
+            a.sort_by(cmp);
+            b.sort_by(cmp);
+            for (p, q) in a.iter().zip(&b) {
+                if (p.birth - q.birth).abs() > tol || (p.death - q.death).abs() > tol {
+                    return false;
+                }
+            }
+            // Essentials compare by birth multiset.
+            let mut ea: Vec<f64> = self
+                .points(d)
+                .iter()
+                .filter(|p| p.is_essential())
+                .map(|p| p.birth)
+                .collect();
+            let mut eb: Vec<f64> = other
+                .points(d)
+                .iter()
+                .filter(|p| p.is_essential())
+                .map(|p| p.birth)
+                .collect();
+            if ea.len() != eb.len() {
+                return false;
+            }
+            ea.sort_by(|x, y| x.partial_cmp(y).unwrap());
+            eb.sort_by(|x, y| x.partial_cmp(y).unwrap());
+            if ea.iter().zip(&eb).any(|(x, y)| (x - y).abs() > tol) {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Describe the mismatch (for test failure messages).
+    pub fn diff_summary(&self, other: &Diagram) -> String {
+        let md = self.max_dim().max(other.max_dim());
+        let mut s = String::new();
+        for d in 0..=md {
+            s.push_str(&format!(
+                "dim{d}: finite {} vs {}, essential {} vs {}\n",
+                self.finite(d).len(),
+                other.finite(d).len(),
+                self.essential_count(d),
+                other.essential_count(d),
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_persistence_dropped() {
+        let mut d = Diagram::new(1);
+        d.push(1, 0.5, 0.5);
+        d.push(1, 0.5, 0.7);
+        assert_eq!(d.points(1).len(), 1);
+    }
+
+    #[test]
+    fn betti_at_counts_alive() {
+        let mut d = Diagram::new(1);
+        d.push(1, 0.2, 0.8);
+        d.push(1, 0.4, f64::INFINITY);
+        assert_eq!(d.betti_at(1, 0.1), 0);
+        assert_eq!(d.betti_at(1, 0.3), 1);
+        assert_eq!(d.betti_at(1, 0.5), 2);
+        assert_eq!(d.betti_at(1, 0.9), 1);
+    }
+
+    #[test]
+    fn multiset_eq_detects_mismatch() {
+        let mut a = Diagram::new(1);
+        a.push(1, 0.1, 0.9);
+        let mut b = Diagram::new(1);
+        b.push(1, 0.1, 0.9);
+        assert!(a.multiset_eq(&b, 1e-12));
+        b.push(1, 0.2, 0.3);
+        assert!(!a.multiset_eq(&b, 1e-12));
+        let mut c = Diagram::new(1);
+        c.push(1, 0.1, f64::INFINITY);
+        assert!(!a.multiset_eq(&c, 1e-12));
+    }
+
+    #[test]
+    fn order_independent_equality() {
+        let mut a = Diagram::new(0);
+        a.push(0, 0.0, 1.0);
+        a.push(0, 0.0, 2.0);
+        let mut b = Diagram::new(0);
+        b.push(0, 0.0, 2.0);
+        b.push(0, 0.0, 1.0);
+        assert!(a.multiset_eq(&b, 1e-12));
+    }
+}

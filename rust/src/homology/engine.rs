@@ -1,0 +1,413 @@
+//! Dory's Algorithm 3: compute H0, H1* and H2* with the clearing strategy.
+//!
+//! * H0 by union-find over ascending edges; negative edges form the dim-0
+//!   clearing set.
+//! * H1*: cohomology reduction of non-cleared edges in reverse filtration
+//!   order. Pairs `(e, t)` are H1 (birth, death); zero columns are
+//!   essential loops.
+//! * H2*: triangle columns enumerated per diameter edge (descending), with
+//!   both H1-death clearing and the trivial-pair O(1) skip (the death
+//!   triangle of a trivial H1 pair is `smallest_tri[e]`); pairs `(t, h)`
+//!   are H2 (birth, death).
+//!
+//! Engine choices (sequential fast-column, serial–parallel fast-column,
+//! implicit-row) and the sparse/dense `edge_order` lookup (Dory vs DoryNS)
+//! are the paper's ablation axes (Tables 3 & 4).
+
+use std::collections::HashSet;
+
+use crate::coboundary::triangles::triangles_with_diameter;
+use crate::filtration::{EdgeFiltration, Key, Neighborhoods};
+use crate::geometry::MetricData;
+use crate::reduction::pool::ThreadPool;
+use crate::reduction::{
+    fast_column, implicit_row, serial_parallel, EdgeColumns, ReduceResult, ReduceStats,
+    TriangleColumns,
+};
+use crate::util::timer::PhaseTimer;
+
+use super::diagram::Diagram;
+use super::h0;
+
+/// Which implicit reduction engine to run (paper Table 4 ablation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algorithm {
+    /// Fast implicit column (§4.3.4) — the paper's headline engine.
+    FastColumn,
+    /// Implicit row (§4.3.2) — the simpler engine, kept for the ablation.
+    ImplicitRow,
+}
+
+#[derive(Clone, Debug)]
+pub struct EngineOptions {
+    /// Highest homology dimension to compute (0, 1 or 2).
+    pub max_dim: usize,
+    /// Worker threads for the serial–parallel scheduler; 1 = sequential.
+    pub threads: usize,
+    /// Serial–parallel batch size (paper default 100 for H1*/H2*).
+    pub batch_size: usize,
+    /// DoryNS: O(n²) dense edge-order lookup instead of binary search.
+    pub dense_lookup: bool,
+    pub algorithm: Algorithm,
+}
+
+impl Default for EngineOptions {
+    fn default() -> Self {
+        Self {
+            max_dim: 2,
+            threads: 1,
+            batch_size: 100,
+            dense_lookup: false,
+            algorithm: Algorithm::FastColumn,
+        }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct EngineStats {
+    pub n: usize,
+    pub n_edges: usize,
+    pub h0_deaths: usize,
+    pub h0_essential: usize,
+    pub h1: ReduceStats,
+    pub h2: ReduceStats,
+    pub h1_cleared: usize,
+    pub h2_cleared: usize,
+    pub base_memory_bytes: usize,
+}
+
+/// Full result: diagram + structural pairs + stats + phase timings.
+pub struct PhResult {
+    pub diagram: Diagram,
+    pub stats: EngineStats,
+    pub timings: PhaseTimer,
+    /// H1 pairs as (edge order, triangle key) — used by callers that need
+    /// representative simplices rather than values.
+    pub h1_pairs: Vec<(u32, Key)>,
+    pub h1_essential_edges: Vec<u32>,
+}
+
+/// Compute PH of a metric input up to `opts.max_dim` with threshold `tau`.
+pub fn compute_ph(data: &MetricData, tau: f64, opts: &EngineOptions) -> PhResult {
+    let mut timings = PhaseTimer::new();
+    timings.start("F1");
+    let f = EdgeFiltration::build(data, tau);
+    timings.stop();
+    let mut r = compute_ph_from_filtration_timed(&f, opts, timings);
+    r.stats.n = data.n();
+    r
+}
+
+/// Compute PH from a pre-built edge filtration.
+pub fn compute_ph_from_filtration(f: &EdgeFiltration, opts: &EngineOptions) -> PhResult {
+    compute_ph_from_filtration_timed(f, opts, PhaseTimer::new())
+}
+
+fn compute_ph_from_filtration_timed(
+    f: &EdgeFiltration,
+    opts: &EngineOptions,
+    mut timings: PhaseTimer,
+) -> PhResult {
+    assert!(opts.max_dim <= 2, "Dory computes up to H2 (paper scope)");
+    let mut stats = EngineStats {
+        n: f.n as usize,
+        n_edges: f.n_edges(),
+        base_memory_bytes: f.base_memory_model_bytes(),
+        ..Default::default()
+    };
+    let mut diagram = Diagram::new(opts.max_dim);
+
+    timings.start("neighborhoods");
+    let nb = Neighborhoods::build(f, opts.dense_lookup);
+    timings.stop();
+
+    // ---- H0 -------------------------------------------------------------
+    timings.start("H0");
+    let h0r = h0::compute(f);
+    for &e in &h0r.death_edges {
+        diagram.push(0, 0.0, f.values[e as usize]);
+    }
+    for _ in 0..h0r.essential {
+        diagram.push(0, 0.0, f64::INFINITY);
+    }
+    stats.h0_deaths = h0r.death_edges.len();
+    stats.h0_essential = h0r.essential;
+    timings.stop();
+
+    let mut h1_pairs = Vec::new();
+    let mut h1_essential_edges = Vec::new();
+
+    let pool = if opts.threads > 1 {
+        Some(ThreadPool::new(opts.threads))
+    } else {
+        None
+    };
+
+    if opts.max_dim >= 1 {
+        // ---- H1* ---------------------------------------------------------
+        timings.start("H1*");
+        let space = EdgeColumns::new(&nb, f);
+        let ne = f.n_edges();
+        let cols: Vec<u64> = (0..ne as u64)
+            .rev()
+            .filter(|&e| !h0r.negative[e as usize])
+            .collect();
+        stats.h1_cleared = ne - cols.len();
+        // H1 keeps zero-persistence pairs: their death triangles feed the
+        // dim-2 clearing set.
+        let res = run_reduction(&space, &cols, opts, &pool, true, f);
+        for &(col, key) in &res.pairs {
+            let e = col as u32;
+            diagram.push(1, f.values[e as usize], f.key_value(key));
+            h1_pairs.push((e, key));
+        }
+        for &col in &res.essential {
+            let e = col as u32;
+            diagram.push(1, f.values[e as usize], f64::INFINITY);
+            h1_essential_edges.push(e);
+        }
+        stats.h1 = res.stats;
+        timings.stop();
+
+        if opts.max_dim >= 2 {
+            // ---- H2* -------------------------------------------------------
+            timings.start("H2*");
+            let h1_deaths: HashSet<u64> = res.pairs.iter().map(|&(_, k)| k.pack()).collect();
+            let tspace = TriangleColumns::new(&nb, f);
+            // Enumerate triangle columns in reverse filtration order,
+            // applying clearing on the fly (trivial-death skip is O(1)).
+            let mut cols: Vec<u64> = Vec::new();
+            let mut cleared = 0usize;
+            for e in (0..ne as u32).rev() {
+                let (a, b) = f.edges[e as usize];
+                let tris = triangles_with_diameter(&nb, e, a, b);
+                for &v in tris.iter().rev() {
+                    let t = Key::new(e, v);
+                    if space.smallest_tri[e as usize] == t {
+                        cleared += 1; // death of a trivial H1 pair
+                        continue;
+                    }
+                    if h1_deaths.contains(&t.pack()) {
+                        cleared += 1;
+                        continue;
+                    }
+                    cols.push(t.pack());
+                }
+            }
+            stats.h2_cleared = cleared;
+            let res2 = run_reduction(&tspace, &cols, opts, &pool, false, f);
+            for &(col, key) in &res2.pairs {
+                let t = Key::unpack(col);
+                diagram.push(2, f.key_value(t), f.key_value(key));
+            }
+            for &col in &res2.essential {
+                let t = Key::unpack(col);
+                diagram.push(2, f.key_value(t), f64::INFINITY);
+            }
+            stats.h2 = res2.stats;
+            timings.stop();
+        }
+    }
+
+    timings.stop();
+    PhResult {
+        diagram,
+        stats,
+        timings,
+        h1_pairs,
+        h1_essential_edges,
+    }
+}
+
+fn run_reduction<S: crate::reduction::ColumnSpace>(
+    space: &S,
+    cols: &[u64],
+    opts: &EngineOptions,
+    pool: &Option<ThreadPool>,
+    keep_zero_pairs: bool,
+    f: &EdgeFiltration,
+) -> ReduceResult {
+    // Column birth value: for edges the id *is* the order; for triangles
+    // the id is a packed key whose primary carries the value. Both cases
+    // are covered by inspecting the id width: edge ids < 2^32.
+    let value_of = |col: u64| -> f64 {
+        if col <= u32::MAX as u64 {
+            f.values[col as usize]
+        } else {
+            f.key_value(Key::unpack(col))
+        }
+    };
+    let key_value = |k: Key| f.key_value(k);
+    match (opts.algorithm, pool) {
+        (Algorithm::ImplicitRow, _) => {
+            implicit_row::reduce_all(space, cols.iter().copied(), keep_zero_pairs, value_of, key_value)
+        }
+        (Algorithm::FastColumn, None) => {
+            fast_column::reduce_all(space, cols.iter().copied(), keep_zero_pairs, value_of, key_value)
+        }
+        (Algorithm::FastColumn, Some(pool)) => serial_parallel::reduce_all(
+            space,
+            cols,
+            opts.batch_size,
+            pool,
+            keep_zero_pairs,
+            value_of,
+            key_value,
+        ),
+    }
+}
+
+/// Count simplices of the flag complex (Table 1's `N` column).
+pub fn count_simplices(f: &EdgeFiltration, nb: &Neighborhoods, max_dim: usize) -> u64 {
+    let mut total = f.n as u64 + f.n_edges() as u64;
+    if max_dim >= 1 {
+        // Triangles, grouped by diameter edge.
+        let mut tris = 0u64;
+        let mut tets = 0u64;
+        for e in 0..f.n_edges() as u32 {
+            let (a, b) = f.edges[e as usize];
+            let vs = triangles_with_diameter(nb, e, a, b);
+            tris += vs.len() as u64;
+            if max_dim >= 2 {
+                // Tetrahedra with diameter e: pairs (v, w) of case-1
+                // vertices whose connecting edge is also < e.
+                for i in 0..vs.len() {
+                    for j in (i + 1)..vs.len() {
+                        if let Some(o) = nb.edge_order(vs[i], vs[j]) {
+                            if o < e {
+                                tets += 1;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        total += tris + tets;
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::PointCloud;
+    use crate::reduction::explicit::oracle_diagram;
+    use crate::util::rng::Pcg32;
+
+    fn random_cloud(n: usize, dim: usize, seed: u64) -> MetricData {
+        let mut rng = Pcg32::new(seed);
+        MetricData::Points(PointCloud::new(
+            dim,
+            (0..n * dim).map(|_| rng.next_f64()).collect(),
+        ))
+    }
+
+    fn check_vs_oracle(data: &MetricData, tau: f64, opts: &EngineOptions, label: &str) {
+        let f = EdgeFiltration::build(data, tau);
+        let nb = Neighborhoods::build(&f, false);
+        let got = compute_ph_from_filtration(&f, opts).diagram;
+        let want = oracle_diagram(&f, &nb, opts.max_dim);
+        assert!(
+            got.multiset_eq(&want, 1e-9),
+            "{label}:\n got: {}\nwant: {}",
+            got.diff_summary(&want),
+            want.diff_summary(&got),
+        );
+    }
+
+    #[test]
+    fn matches_oracle_on_random_clouds_dim1() {
+        let opts = EngineOptions {
+            max_dim: 1,
+            ..Default::default()
+        };
+        for seed in 0..10 {
+            let data = random_cloud(25, 2, seed);
+            check_vs_oracle(&data, 0.5, &opts, &format!("dim1 seed={seed}"));
+        }
+    }
+
+    #[test]
+    fn matches_oracle_on_random_clouds_dim2() {
+        let opts = EngineOptions::default();
+        for seed in 0..10 {
+            let data = random_cloud(18, 3, seed);
+            check_vs_oracle(&data, 0.8, &opts, &format!("dim2 seed={seed}"));
+        }
+    }
+
+    #[test]
+    fn all_engine_configurations_agree() {
+        let data = random_cloud(20, 3, 42);
+        let f = EdgeFiltration::build(&data, 0.9);
+        let reference = compute_ph_from_filtration(&f, &EngineOptions::default()).diagram;
+        for algorithm in [Algorithm::FastColumn, Algorithm::ImplicitRow] {
+            for threads in [1usize, 4] {
+                for dense in [false, true] {
+                    for batch in [1usize, 7, 100] {
+                        let opts = EngineOptions {
+                            max_dim: 2,
+                            threads,
+                            batch_size: batch,
+                            dense_lookup: dense,
+                            algorithm,
+                        };
+                        let got = compute_ph_from_filtration(&f, &opts).diagram;
+                        assert!(
+                            got.multiset_eq(&reference, 1e-9),
+                            "algo={algorithm:?} threads={threads} dense={dense} batch={batch}:\n{}",
+                            got.diff_summary(&reference)
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn circle_loop_detected() {
+        let mut coords = Vec::new();
+        for i in 0..24 {
+            let t = 2.0 * std::f64::consts::PI * i as f64 / 24.0;
+            coords.push(t.cos());
+            coords.push(t.sin());
+        }
+        let data = MetricData::Points(PointCloud::new(2, coords));
+        let r = compute_ph(&data, 3.0, &EngineOptions::default());
+        let sig = r.diagram.significant(1, 0.5);
+        assert_eq!(sig.len(), 1, "one dominant loop: {:?}", r.diagram.points(1));
+        assert_eq!(r.diagram.essential_count(0), 1);
+    }
+
+    #[test]
+    fn sphere_void_detected() {
+        // Fibonacci sphere sample: one dominant H2 class.
+        let n = 60;
+        let mut coords = Vec::new();
+        let phi = std::f64::consts::PI * (3.0 - 5f64.sqrt());
+        for i in 0..n {
+            let y = 1.0 - 2.0 * (i as f64 + 0.5) / n as f64;
+            let r = (1.0 - y * y).sqrt();
+            let t = phi * i as f64;
+            coords.push(r * t.cos());
+            coords.push(y);
+            coords.push(r * t.sin());
+        }
+        let data = MetricData::Points(PointCloud::new(3, coords));
+        let r = compute_ph(&data, 2.5, &EngineOptions::default());
+        let sig = r.diagram.significant(2, 0.5);
+        assert_eq!(sig.len(), 1, "one dominant void: {:?}", r.diagram.points(2));
+    }
+
+    #[test]
+    fn simplex_counts_match_binomials_on_full_filtration() {
+        // Complete filtration on n points: C(n,k+1) simplices per dim.
+        let data = random_cloud(10, 2, 5);
+        let f = EdgeFiltration::build(&data, 10.0);
+        let nb = Neighborhoods::build(&f, false);
+        let n = 10u64;
+        let expect = n + n * (n - 1) / 2 + n * (n - 1) * (n - 2) / 6
+            + n * (n - 1) * (n - 2) * (n - 3) / 24;
+        assert_eq!(count_simplices(&f, &nb, 2), expect);
+    }
+}

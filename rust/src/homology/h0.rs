@@ -1,0 +1,137 @@
+//! H0 via union-find over the edge filtration.
+//!
+//! Processing edges in ascending filtration order, an edge is *negative*
+//! when it merges two components (a dim-0 death at its value) and
+//! *positive* otherwise (it creates a loop, becoming a column in the H1*
+//! reduction). All vertices are born at 0, so the elder rule is moot for
+//! VR point clouds. The negative-edge set is exactly the dim-0 clearing
+//! set of Algorithm 3 ("if e is in a persistence pair in H0: continue").
+
+use crate::filtration::EdgeFiltration;
+
+pub struct H0Result {
+    /// `negative[o]` — edge `o` killed a component.
+    pub negative: Vec<bool>,
+    /// Edge orders of the deaths, ascending (birth is always 0).
+    pub death_edges: Vec<u32>,
+    /// Number of connected components at τ_m (essential classes).
+    pub essential: usize,
+}
+
+struct UnionFind {
+    parent: Vec<u32>,
+    rank: Vec<u8>,
+}
+
+impl UnionFind {
+    fn new(n: u32) -> Self {
+        Self {
+            parent: (0..n).collect(),
+            rank: vec![0; n as usize],
+        }
+    }
+
+    fn find(&mut self, mut x: u32) -> u32 {
+        // Path halving.
+        while self.parent[x as usize] != x {
+            let gp = self.parent[self.parent[x as usize] as usize];
+            self.parent[x as usize] = gp;
+            x = gp;
+        }
+        x
+    }
+
+    /// Returns true when a merge happened.
+    fn union(&mut self, a: u32, b: u32) -> bool {
+        let (ra, rb) = (self.find(a), self.find(b));
+        if ra == rb {
+            return false;
+        }
+        let (hi, lo) = if self.rank[ra as usize] >= self.rank[rb as usize] {
+            (ra, rb)
+        } else {
+            (rb, ra)
+        };
+        self.parent[lo as usize] = hi;
+        if self.rank[hi as usize] == self.rank[lo as usize] {
+            self.rank[hi as usize] += 1;
+        }
+        true
+    }
+}
+
+/// Compute H0 pairs and the negative-edge clearing set.
+pub fn compute(f: &EdgeFiltration) -> H0Result {
+    let mut uf = UnionFind::new(f.n);
+    let mut negative = vec![false; f.n_edges()];
+    let mut death_edges = Vec::new();
+    for (o, &(a, b)) in f.edges.iter().enumerate() {
+        if uf.union(a, b) {
+            negative[o] = true;
+            death_edges.push(o as u32);
+        }
+    }
+    let essential = f.n as usize - death_edges.len();
+    H0Result {
+        negative,
+        death_edges,
+        essential,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::{MetricData, PointCloud};
+
+    #[test]
+    fn path_graph_merges_in_order() {
+        let pc = PointCloud::new(1, vec![0.0, 1.0, 2.5, 4.5]);
+        let f = EdgeFiltration::build(&MetricData::Points(pc), 10.0);
+        let r = compute(&f);
+        assert_eq!(r.death_edges.len(), 3);
+        assert_eq!(r.essential, 1);
+        // First three edges (the consecutive gaps) are the negative ones.
+        assert!(r.negative[0] && r.negative[1] && r.negative[2]);
+        assert!(!r.negative[3]);
+    }
+
+    #[test]
+    fn disconnected_components_stay_essential() {
+        let pc = PointCloud::new(1, vec![0.0, 0.5, 100.0, 100.5, 200.0]);
+        let f = EdgeFiltration::build(&MetricData::Points(pc), 1.0);
+        let r = compute(&f);
+        assert_eq!(r.essential, 3);
+        assert_eq!(r.death_edges.len(), 2);
+    }
+
+    #[test]
+    fn triangle_last_edge_positive() {
+        // Equilateral-ish triangle: two edges merge everything, third is
+        // positive (creates the loop).
+        let pc = PointCloud::new(2, vec![0.0, 0.0, 1.0, 0.0, 0.5, 0.9]);
+        let f = EdgeFiltration::build(&MetricData::Points(pc), 3.0);
+        let r = compute(&f);
+        assert_eq!(r.death_edges.len(), 2);
+        assert_eq!(r.essential, 1);
+        assert!(!r.negative[2], "largest edge closes the triangle");
+    }
+
+    #[test]
+    fn counts_match_oracle_on_random_clouds() {
+        use crate::util::rng::Pcg32;
+        for seed in 0..5 {
+            let mut rng = Pcg32::new(seed);
+            let coords: Vec<f64> = (0..20 * 2).map(|_| rng.next_f64()).collect();
+            let f = EdgeFiltration::build(
+                &MetricData::Points(PointCloud::new(2, coords)),
+                0.3,
+            );
+            let nb = crate::filtration::Neighborhoods::build(&f, false);
+            let r = compute(&f);
+            let d = crate::reduction::explicit::oracle_diagram(&f, &nb, 0);
+            assert_eq!(r.essential, d.essential_count(0), "seed={seed}");
+            assert_eq!(r.death_edges.len(), d.finite(0).len(), "seed={seed}");
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! The full PH pipeline: H0 (union-find) → H1* → H2* with clearing.
+
+pub mod analysis;
+pub mod diagram;
+pub mod engine;
+pub mod h0;
+pub mod representatives;
+
+pub use diagram::Diagram;
+pub use engine::{compute_ph, compute_ph_from_filtration, Algorithm, EngineOptions, PhResult};

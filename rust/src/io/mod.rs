@@ -1,0 +1,239 @@
+//! Loaders and writers: point clouds, distance matrices, sparse distance
+//! lists, persistence diagrams (CSV/JSON).
+//!
+//! Formats match the ecosystem the paper benchmarks against: whitespace/
+//! comma-separated point files (Ripser's `point-cloud` input),
+//! lower-triangular distance matrices (`lower-distance`), and `i j d`
+//! sparse COO lists (the Hi-C inputs).
+
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::geometry::{DenseDistances, MetricData, PointCloud, SparseDistances};
+use crate::homology::diagram::Diagram;
+use crate::util::json::Json;
+
+/// Load a point cloud: one point per line, comma/space separated floats.
+pub fn read_points(path: &Path) -> Result<MetricData> {
+    let file = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut coords = Vec::new();
+    let mut dim = 0usize;
+    for (lineno, line) in std::io::BufReader::new(file).lines().enumerate() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        let row: Vec<f64> = t
+            .split(|c: char| c == ',' || c.is_whitespace())
+            .filter(|s| !s.is_empty())
+            .map(|s| s.parse::<f64>().with_context(|| format!("line {}", lineno + 1)))
+            .collect::<Result<_>>()?;
+        if dim == 0 {
+            dim = row.len();
+        } else if row.len() != dim {
+            bail!("line {}: expected {dim} coordinates, got {}", lineno + 1, row.len());
+        }
+        coords.extend(row);
+    }
+    if dim == 0 {
+        bail!("no points in {path:?}");
+    }
+    Ok(MetricData::Points(PointCloud::new(dim, coords)))
+}
+
+/// Load a lower-triangular distance matrix: row i has i entries
+/// (d(i,0) .. d(i,i-1)), comma/space separated; blank/comment lines skipped.
+pub fn read_lower_distance(path: &Path) -> Result<MetricData> {
+    let file = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut tri = Vec::new();
+    // Row 0 is implicit (zero entries); the k-th data line holds the k+1
+    // distances d(k+1, 0..=k).
+    let mut rows = 1usize;
+    for line in std::io::BufReader::new(file).lines() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        let row: Vec<f64> = t
+            .split(|c: char| c == ',' || c.is_whitespace())
+            .filter(|s| !s.is_empty())
+            .map(|s| s.parse::<f64>().map_err(Into::into))
+            .collect::<Result<_>>()?;
+        if row.len() != rows {
+            bail!("data line {} must have {} entries, got {}", rows, rows, row.len());
+        }
+        tri.extend(row);
+        rows += 1;
+    }
+    Ok(MetricData::Dense(DenseDistances::new(rows, tri)))
+}
+
+/// Load a sparse COO distance list: `i j d` per line (0-based).
+pub fn read_sparse_coo(path: &Path) -> Result<MetricData> {
+    let file = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut entries = Vec::new();
+    let mut n = 0usize;
+    for (lineno, line) in std::io::BufReader::new(file).lines().enumerate() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let (i, j, d): (u32, u32, f64) = (|| -> Option<_> {
+            Some((
+                it.next()?.parse().ok()?,
+                it.next()?.parse().ok()?,
+                it.next()?.parse().ok()?,
+            ))
+        })()
+        .with_context(|| format!("line {}: expected `i j d`", lineno + 1))?;
+        if i == j {
+            continue;
+        }
+        let (u, v) = (i.min(j), i.max(j));
+        n = n.max(v as usize + 1);
+        entries.push((u, v, d));
+    }
+    Ok(MetricData::Sparse(SparseDistances { n, entries }))
+}
+
+/// Write a point cloud (for round-trips and dataset export).
+pub fn write_points(path: &Path, pc: &PointCloud) -> Result<()> {
+    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    for i in 0..pc.n() {
+        let row: Vec<String> = pc.point(i).iter().map(|x| format!("{x}")).collect();
+        writeln!(w, "{}", row.join(" "))?;
+    }
+    Ok(())
+}
+
+/// Write a sparse distance list (`i j d`).
+pub fn write_sparse_coo(path: &Path, sd: &SparseDistances) -> Result<()> {
+    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    writeln!(w, "# n={}", sd.n)?;
+    for &(i, j, d) in &sd.entries {
+        writeln!(w, "{i} {j} {d}")?;
+    }
+    Ok(())
+}
+
+/// Persistence diagram as CSV: `dim,birth,death` (death `inf` for
+/// essential classes) — the format the plotting scripts consume.
+pub fn write_diagram_csv(path: &Path, d: &Diagram) -> Result<()> {
+    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    writeln!(w, "dim,birth,death")?;
+    for dim in 0..=d.max_dim() {
+        for p in d.points(dim) {
+            if p.is_essential() {
+                writeln!(w, "{dim},{},inf", p.birth)?;
+            } else {
+                writeln!(w, "{dim},{},{}", p.birth, p.death)?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Persistence diagram as JSON (per-dim arrays of [birth, death]).
+pub fn diagram_to_json(d: &Diagram) -> Json {
+    let mut obj = Json::obj();
+    for dim in 0..=d.max_dim() {
+        let mut arr = Json::arr();
+        for p in d.points(dim) {
+            let mut pt = Json::arr();
+            pt.push(p.birth);
+            pt.push(p.death);
+            arr.push(pt);
+        }
+        obj = obj.field(&format!("H{dim}"), arr);
+    }
+    obj
+}
+
+pub fn write_diagram_json(path: &Path, d: &Diagram) -> Result<()> {
+    std::fs::write(path, diagram_to_json(d).render())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("dory-io-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn points_roundtrip() {
+        let pc = PointCloud::new(3, vec![1.0, 2.0, 3.0, 4.5, 5.5, 6.5]);
+        let p = tmp("pts.xyz");
+        write_points(&p, &pc).unwrap();
+        match read_points(&p).unwrap() {
+            MetricData::Points(q) => {
+                assert_eq!(q.dim, 3);
+                assert_eq!(q.coords, pc.coords);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn lower_distance_parses() {
+        let p = tmp("ldm.txt");
+        std::fs::write(&p, "\n1.0\n2.0 3.0\n").unwrap();
+        match read_lower_distance(&p).unwrap() {
+            MetricData::Dense(d) => {
+                assert_eq!(d.n, 3);
+                assert_eq!(d.get(1, 0), 1.0);
+                assert_eq!(d.get(2, 0), 2.0);
+                assert_eq!(d.get(2, 1), 3.0);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn sparse_roundtrip() {
+        let sd = SparseDistances {
+            n: 5,
+            entries: vec![(0, 3, 1.25), (1, 4, 2.5)],
+        };
+        let p = tmp("coo.txt");
+        write_sparse_coo(&p, &sd).unwrap();
+        match read_sparse_coo(&p).unwrap() {
+            MetricData::Sparse(q) => {
+                assert_eq!(q.n, 5);
+                assert_eq!(q.entries, sd.entries);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn malformed_inputs_rejected() {
+        let p = tmp("bad.txt");
+        std::fs::write(&p, "1.0 2.0\n3.0\n").unwrap();
+        assert!(read_points(&p).is_err(), "ragged rows");
+        std::fs::write(&p, "not a number\n").unwrap();
+        assert!(read_points(&p).is_err());
+    }
+
+    #[test]
+    fn diagram_csv_format() {
+        let mut d = Diagram::new(1);
+        d.push(0, 0.0, 1.5);
+        d.push(1, 0.5, f64::INFINITY);
+        let p = tmp("pd.csv");
+        write_diagram_csv(&p, &d).unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert!(s.contains("0,0,1.5"));
+        assert!(s.contains("1,0.5,inf"));
+    }
+}

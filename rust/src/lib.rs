@@ -1,0 +1,37 @@
+//! # Dory — scalable persistent homology for Vietoris–Rips filtrations
+//!
+//! A reproduction of *"Dory: Overcoming Barriers to Computing Persistent
+//! Homology"* (Aggarwal & Periwal, 2021) as a three-layer Rust + JAX/Pallas
+//! system:
+//!
+//! * **Layer 3 (this crate)** — the paper's contribution: paired-indexing,
+//!   on-the-fly coboundary cursors, the fast implicit column reduction,
+//!   trivial-pair shortcuts, clearing, and the serial–parallel batch
+//!   scheduler over a persistent thread pool.
+//! * **Layer 2/1 (`python/compile`)** — JAX + Pallas kernels (pairwise
+//!   distances, persistence images) AOT-lowered to HLO text, executed from
+//!   Rust through PJRT (`runtime`). Python never runs on the request path.
+//!
+//! Entry points: [`homology::engine`] for the full pipeline,
+//! [`coordinator`] for config-driven runs, `examples/` for walkthroughs.
+
+pub mod baselines;
+pub mod bench_support;
+pub mod coboundary;
+pub mod coordinator;
+pub mod datasets;
+pub mod filtration;
+pub mod geometry;
+pub mod hic;
+pub mod io;
+pub mod homology;
+pub mod reduction;
+pub mod runtime;
+pub mod util;
+
+use util::memtrack::CountingAlloc;
+
+/// Heap accounting is part of the deliverable (the paper reports peak
+/// memory per run); the counting allocator backs every binary and test.
+#[global_allocator]
+static GLOBAL_ALLOC: CountingAlloc = CountingAlloc;

@@ -1,0 +1,246 @@
+//! `dory` — CLI launcher for the persistent-homology engine.
+//!
+//! Subcommands:
+//!   run       compute PH (flags or --config TOML)
+//!   generate  export a synthetic dataset to disk
+//!   info      show PJRT platform + artifact inventory
+//!   help      this text
+//!
+//! Examples:
+//!   dory run --dataset torus4 --n 8000 --tau 0.2 --dim 2 --threads 4 \
+//!            --pd out/pd.csv --summary out/summary.json
+//!   dory run --config configs/hic_control.toml
+//!   dory generate --dataset hic --n 20000 --condition auxin --out hic_auxin.coo
+//!   dory info
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use anyhow::{bail, Context, Result};
+use dory::coordinator::{self, DatasetSpec, RunConfig};
+use dory::util::memtrack;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match dispatch(&args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    match args.first().map(String::as_str) {
+        Some("run") => cmd_run(&args[1..]),
+        Some("generate") => cmd_generate(&args[1..]),
+        Some("info") => cmd_info(),
+        Some("help") | Some("--help") | Some("-h") | None => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        Some(other) => bail!("unknown subcommand `{other}` (try `dory help`)"),
+    }
+}
+
+const HELP: &str = "\
+dory — scalable persistent homology (Aggarwal & Periwal 2021 reproduction)
+
+USAGE: dory <run|generate|info|help> [flags]
+
+run flags:
+  --config <file.toml>      load a full run config (other flags override)
+  --dataset <kind>          circle|figure-eight|sphere|torus3|torus4|o3|
+                            dragon|fractal|random|multi-scale|hic
+  --points <file>           load a point cloud instead
+  --lower-distance <file>   load a lower-triangular distance matrix
+  --sparse <file>           load a sparse `i j d` distance list
+  --n <int>                 dataset size            [200]
+  --seed <int>              dataset RNG seed        [1]
+  --condition <c>           hic: control|auxin      [control]
+  --tau <float|inf>         filtration threshold    [inf]
+  --dim <0|1|2>             max homology dimension  [2]
+  --threads <int>           worker threads          [4]
+  --batch <int>             serial-parallel batch   [100]
+  --ns                      DoryNS dense edge-order lookup
+  --algorithm <a>           fast-column|implicit-row
+  --no-pjrt                 skip the PJRT/Pallas distance kernel
+  --pimage                  also compute a persistence image (PJRT)
+  --pd <file.csv>           write the persistence diagram (CSV)
+  --pd-json <file.json>     write the persistence diagram (JSON)
+  --summary <file.json>     write the machine-readable run summary
+
+generate flags:
+  --dataset <kind> --n <int> --seed <int> [--condition control|auxin]
+  --out <file>              points file (.xyz) or sparse list for hic
+";
+
+fn cmd_run(args: &[String]) -> Result<()> {
+    let mut cfg = RunConfig::default();
+    // --config first, so flags can override it.
+    if let Some(pos) = args.iter().position(|a| a == "--config") {
+        let path = args.get(pos + 1).context("--config needs a path")?;
+        cfg = RunConfig::from_file(&PathBuf::from(path))?;
+    }
+    let mut kind: Option<String> = None;
+    let mut n: Option<usize> = None;
+    let mut seed: Option<u64> = None;
+    let mut condition: Option<String> = None;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        let mut val = || -> Result<&String> {
+            it.next().with_context(|| format!("{a} needs a value"))
+        };
+        match a.as_str() {
+            "--config" => {
+                val()?;
+            }
+            "--dataset" => kind = Some(val()?.clone()),
+            "--points" => {
+                let p = PathBuf::from(val()?);
+                cfg.dataset = DatasetSpec::PointsFile(p);
+            }
+            "--lower-distance" => {
+                let p = PathBuf::from(val()?);
+                cfg.dataset = DatasetSpec::LowerDistanceFile(p);
+            }
+            "--sparse" => {
+                let p = PathBuf::from(val()?);
+                cfg.dataset = DatasetSpec::SparseFile(p);
+            }
+            "--n" => n = Some(val()?.parse()?),
+            "--seed" => seed = Some(val()?.parse()?),
+            "--condition" => condition = Some(val()?.clone()),
+            "--tau" => {
+                let v = val()?;
+                cfg.tau = if v == "inf" { f64::INFINITY } else { v.parse()? };
+            }
+            "--dim" => cfg.max_dim = val()?.parse()?,
+            "--threads" => cfg.threads = val()?.parse()?,
+            "--batch" => cfg.batch_size = val()?.parse()?,
+            "--ns" => cfg.dense_lookup = true,
+            "--algorithm" => cfg.algorithm = val()?.clone(),
+            "--no-pjrt" => cfg.use_pjrt = false,
+            "--pimage" => cfg.pimage = true,
+            "--pd" => {
+                let p = PathBuf::from(val()?);
+                cfg.diagram_csv = Some(p);
+            }
+            "--pd-json" => {
+                let p = PathBuf::from(val()?);
+                cfg.diagram_json = Some(p);
+            }
+            "--summary" => {
+                let p = PathBuf::from(val()?);
+                cfg.summary_json = Some(p);
+            }
+            other => bail!("unknown flag {other}"),
+        }
+    }
+    if kind.is_some() || n.is_some() || seed.is_some() || condition.is_some() {
+        let kind = kind.unwrap_or_else(|| "circle".into());
+        let n = n.unwrap_or(200);
+        let seed = seed.unwrap_or(1);
+        cfg.dataset = if kind == "hic" {
+            DatasetSpec::Hic {
+                n_bins: n,
+                condition: condition.unwrap_or_else(|| "control".into()),
+                seed,
+            }
+        } else {
+            DatasetSpec::Named { kind, n, seed }
+        };
+    }
+    cfg.validate()?;
+
+    let t0 = std::time::Instant::now();
+    let report = coordinator::run(&cfg)?;
+    let dt = t0.elapsed().as_secs_f64();
+    let d = &report.result.diagram;
+    println!(
+        "n={} edges={} via {} | total {:.2}s | peak heap {} (rss {})",
+        report.n_points,
+        report.n_edges,
+        report.edge_source,
+        dt,
+        memtrack::fmt_bytes(report.peak_heap_bytes),
+        memtrack::fmt_bytes(memtrack::max_rss_bytes()),
+    );
+    println!("phases: {}", report.result.timings.summary());
+    for dim in 0..=cfg.max_dim {
+        println!(
+            "H{dim}: {} finite pairs, {} essential",
+            d.finite(dim).len(),
+            d.essential_count(dim)
+        );
+    }
+    if let Some((g, img)) = &report.pimage {
+        let mx = img.iter().cloned().fold(0.0f32, f32::max);
+        println!("persistence image: {g}x{g}, max intensity {mx:.4}");
+    }
+    Ok(())
+}
+
+fn cmd_generate(args: &[String]) -> Result<()> {
+    let mut kind = String::from("circle");
+    let mut n = 1000usize;
+    let mut seed = 1u64;
+    let mut condition = String::from("control");
+    let mut out: Option<PathBuf> = None;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        let mut val = || it.next().with_context(|| format!("{a} needs a value"));
+        match a.as_str() {
+            "--dataset" => kind = val()?.clone(),
+            "--n" => n = val()?.parse()?,
+            "--seed" => seed = val()?.parse()?,
+            "--condition" => condition = val()?.clone(),
+            "--out" => out = Some(PathBuf::from(val()?)),
+            other => bail!("unknown flag {other}"),
+        }
+    }
+    let out = out.context("--out required")?;
+    let spec = if kind == "hic" {
+        DatasetSpec::Hic {
+            n_bins: n,
+            condition,
+            seed,
+        }
+    } else {
+        DatasetSpec::Named { kind, n, seed }
+    };
+    match coordinator::build_dataset(&spec)? {
+        dory::geometry::MetricData::Points(pc) => dory::io::write_points(&out, &pc)?,
+        dory::geometry::MetricData::Sparse(sd) => dory::io::write_sparse_coo(&out, &sd)?,
+        dory::geometry::MetricData::Dense(dd) => {
+            // Export dense matrices as sparse COO for portability.
+            let mut entries = Vec::new();
+            for i in 0..dd.n {
+                for j in (i + 1)..dd.n {
+                    entries.push((i as u32, j as u32, dd.get(i, j)));
+                }
+            }
+            dory::io::write_sparse_coo(
+                &out,
+                &dory::geometry::SparseDistances { n: dd.n, entries },
+            )?;
+        }
+    }
+    println!("wrote {out:?}");
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let dir = dory::runtime::default_artifact_dir();
+    println!("artifact dir: {dir:?}");
+    match dory::runtime::Runtime::load(&dir) {
+        Ok(rt) => {
+            println!("PJRT platform: {}", rt.platform());
+            println!("distance kernels: {:?}", rt.dist_shapes());
+            println!("persistence-image kernel: {}", rt.has_pimage_kernel());
+        }
+        Err(e) => println!("PJRT unavailable: {e}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,428 @@
+//! Explicit boundary-matrix reduction — the correctness oracle.
+//!
+//! Textbook persistent homology (paper §2, App. A): materialize every
+//! simplex up to dim 3, build the boundary matrix, run the standard
+//! column (alg. 4) or row (alg. 5) algorithm over Z/2 (or Z/p, the §7
+//! extension). Memory is O(#simplices) — fine for the ≤ a-few-thousand
+//! simplex fixtures the property tests use, and exactly the profile the
+//! paper ascribes to explicit-representation packages (Table 5).
+
+use crate::filtration::{EdgeFiltration, Neighborhoods};
+use crate::homology::diagram::Diagram;
+
+/// A simplex in the explicit filtration.
+#[derive(Clone, Debug)]
+pub struct Simplex {
+    pub verts: Vec<u32>,
+    pub value: f64,
+    pub dim: usize,
+}
+
+/// Explicit VR filtration up to dim `max_dim + 1` (deaths in `max_dim`
+/// need one dimension higher).
+pub struct ExplicitFiltration {
+    pub simplices: Vec<Simplex>,
+}
+
+impl ExplicitFiltration {
+    /// Enumerate all simplices of the flag complex of `f` up to `top_dim`.
+    pub fn build(f: &EdgeFiltration, nb: &Neighborhoods, top_dim: usize) -> Self {
+        let n = f.n;
+        let mut simplices: Vec<Simplex> = Vec::new();
+        for v in 0..n {
+            simplices.push(Simplex {
+                verts: vec![v],
+                value: 0.0,
+                dim: 0,
+            });
+        }
+        for (o, &(a, b)) in f.edges.iter().enumerate() {
+            simplices.push(Simplex {
+                verts: vec![a, b],
+                value: f.values[o],
+                dim: 1,
+            });
+        }
+        if top_dim >= 2 {
+            for a in 0..n {
+                for b in (a + 1)..n {
+                    let oab = match nb.edge_order(a, b) {
+                        Some(o) => o,
+                        None => continue,
+                    };
+                    for c in (b + 1)..n {
+                        let (oac, obc) = match (nb.edge_order(a, c), nb.edge_order(b, c)) {
+                            (Some(x), Some(y)) => (x, y),
+                            _ => continue,
+                        };
+                        let diam = oab.max(oac).max(obc);
+                        simplices.push(Simplex {
+                            verts: vec![a, b, c],
+                            value: f.values[diam as usize],
+                            dim: 2,
+                        });
+                        if top_dim >= 3 {
+                            for d in (c + 1)..n {
+                                let (oad, obd, ocd) = match (
+                                    nb.edge_order(a, d),
+                                    nb.edge_order(b, d),
+                                    nb.edge_order(c, d),
+                                ) {
+                                    (Some(x), Some(y), Some(z)) => (x, y, z),
+                                    _ => continue,
+                                };
+                                let diam = diam.max(oad).max(obd).max(ocd);
+                                simplices.push(Simplex {
+                                    verts: vec![a, b, c, d],
+                                    value: f.values[diam as usize],
+                                    dim: 3,
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        // Filtration order: by value, then dim (faces first), then verts.
+        simplices.sort_by(|x, y| {
+            x.value
+                .partial_cmp(&y.value)
+                .unwrap()
+                .then(x.dim.cmp(&y.dim))
+                .then(x.verts.cmp(&y.verts))
+        });
+        Self { simplices }
+    }
+
+    /// Sparse boundary matrix: column j lists the filtration indices of
+    /// the (dim-1)-faces of simplex j, ascending.
+    pub fn boundary_matrix(&self) -> Vec<Vec<usize>> {
+        use std::collections::HashMap;
+        let mut index: HashMap<&[u32], usize> = HashMap::new();
+        for (i, s) in self.simplices.iter().enumerate() {
+            index.insert(&s.verts, i);
+        }
+        let mut cols = Vec::with_capacity(self.simplices.len());
+        for s in &self.simplices {
+            let mut col = Vec::new();
+            if s.dim > 0 {
+                for omit in 0..s.verts.len() {
+                    let mut face = s.verts.clone();
+                    face.remove(omit);
+                    let fi = *index
+                        .get(face.as_slice())
+                        .expect("face must precede coface");
+                    col.push(fi);
+                }
+                col.sort_unstable();
+            }
+            cols.push(col);
+        }
+        cols
+    }
+}
+
+/// Standard column algorithm (App. A alg. 4) over Z/2 on sparse columns.
+/// Returns `low[j]`: the pivot row of column j, or `usize::MAX` if zero.
+pub fn standard_column_algorithm(mut cols: Vec<Vec<usize>>) -> Vec<usize> {
+    let n = cols.len();
+    const NONE: usize = usize::MAX;
+    let mut low = vec![NONE; n];
+    // pivot_of_row[r] = column whose pivot is r.
+    let mut pivot_of_row = vec![NONE; n];
+    for j in 0..n {
+        loop {
+            let l = match cols[j].last() {
+                Some(&l) => l,
+                None => {
+                    low[j] = NONE;
+                    break;
+                }
+            };
+            let i = pivot_of_row[l];
+            if i == NONE {
+                low[j] = l;
+                pivot_of_row[l] = j;
+                break;
+            }
+            // cols[j] ^= cols[i] (symmetric difference of sorted lists).
+            let merged = xor_sorted(&cols[j], &cols[i]);
+            cols[j] = merged;
+        }
+    }
+    low
+}
+
+/// Standard row algorithm (App. A alg. 5) over Z/2. Produces the same
+/// pivots as the column algorithm (De Silva et al. 2011).
+pub fn standard_row_algorithm(mut cols: Vec<Vec<usize>>) -> Vec<usize> {
+    let n = cols.len();
+    const NONE: usize = usize::MAX;
+    let mut low = vec![NONE; n];
+    for i in (0..n).rev() {
+        // Find the first column (left to right) with low == i.
+        let mut j = NONE;
+        for (c, col) in cols.iter().enumerate() {
+            if col.last() == Some(&i) {
+                j = c;
+                break;
+            }
+        }
+        if j == NONE {
+            continue;
+        }
+        low[j] = i;
+        // Eliminate i from every later column with the same low.
+        for k in (j + 1)..n {
+            if cols[k].last() == Some(&i) {
+                cols[k] = xor_sorted(&cols[k], &cols[j]);
+            }
+        }
+    }
+    low
+}
+
+fn xor_sorted(a: &[usize], b: &[usize]) -> Vec<usize> {
+    let mut out = Vec::with_capacity(a.len() + b.len());
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => {
+                out.push(a[i]);
+                i += 1;
+            }
+            std::cmp::Ordering::Greater => {
+                out.push(b[j]);
+                j += 1;
+            }
+            std::cmp::Ordering::Equal => {
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    out.extend_from_slice(&a[i..]);
+    out.extend_from_slice(&b[j..]);
+    out
+}
+
+/// Column reduction over Z/p (p prime) — the paper's §7 extension.
+/// Columns are `(row, coeff)` sorted by row; boundary signs alternate.
+pub fn column_algorithm_zp(filtration: &ExplicitFiltration, p: u64) -> Vec<usize> {
+    use std::collections::HashMap;
+    assert!(p >= 2);
+    let mut index: HashMap<&[u32], usize> = HashMap::new();
+    for (i, s) in filtration.simplices.iter().enumerate() {
+        index.insert(&s.verts, i);
+    }
+    let n = filtration.simplices.len();
+    let mut cols: Vec<Vec<(usize, u64)>> = Vec::with_capacity(n);
+    for s in &filtration.simplices {
+        let mut col = Vec::new();
+        if s.dim > 0 {
+            for omit in 0..s.verts.len() {
+                let mut face = s.verts.clone();
+                face.remove(omit);
+                let fi = index[face.as_slice()];
+                let sign = if omit % 2 == 0 { 1u64 } else { p - 1 };
+                col.push((fi, sign));
+            }
+            col.sort_unstable();
+        }
+        cols.push(col);
+    }
+    const NONE: usize = usize::MAX;
+    let mut low = vec![NONE; n];
+    let mut pivot_of_row = vec![NONE; n];
+    let inv = |a: u64| mod_pow(a, p - 2, p); // Fermat (p prime)
+    for j in 0..n {
+        loop {
+            let (l, c) = match cols[j].last() {
+                Some(&(l, c)) => (l, c),
+                None => {
+                    low[j] = NONE;
+                    break;
+                }
+            };
+            let i = pivot_of_row[l];
+            if i == NONE {
+                low[j] = l;
+                pivot_of_row[l] = j;
+                break;
+            }
+            // cols[j] -= (c / pivot_coeff(i)) * cols[i]  (mod p)
+            let ci = cols[i].last().unwrap().1;
+            let factor = (c * inv(ci)) % p;
+            let mut merged: Vec<(usize, u64)> = Vec::new();
+            let (a, b) = (&cols[j], &cols[i]);
+            let (mut x, mut y) = (0, 0);
+            while x < a.len() && y < b.len() {
+                match a[x].0.cmp(&b[y].0) {
+                    std::cmp::Ordering::Less => {
+                        merged.push(a[x]);
+                        x += 1;
+                    }
+                    std::cmp::Ordering::Greater => {
+                        let v = (p - (factor * b[y].1) % p) % p;
+                        if v != 0 {
+                            merged.push((b[y].0, v));
+                        }
+                        y += 1;
+                    }
+                    std::cmp::Ordering::Equal => {
+                        let v = (a[x].1 + p - (factor * b[y].1) % p) % p;
+                        if v != 0 {
+                            merged.push((a[x].0, v));
+                        }
+                        x += 1;
+                        y += 1;
+                    }
+                }
+            }
+            merged.extend_from_slice(&a[x..]);
+            for &(r, v) in &b[y..] {
+                let v = (p - (factor * v) % p) % p;
+                if v != 0 {
+                    merged.push((r, v));
+                }
+            }
+            cols[j] = merged;
+        }
+    }
+    low
+}
+
+fn mod_pow(mut base: u64, mut exp: u64, m: u64) -> u64 {
+    let mut acc = 1u64;
+    base %= m;
+    while exp > 0 {
+        if exp & 1 == 1 {
+            acc = acc * base % m;
+        }
+        base = base * base % m;
+        exp >>= 1;
+    }
+    acc
+}
+
+/// Turn pivots into persistence diagrams per dimension (0..=max_dim).
+pub fn pairs_to_diagram(
+    filtration: &ExplicitFiltration,
+    low: &[usize],
+    max_dim: usize,
+) -> Diagram {
+    const NONE: usize = usize::MAX;
+    let n = low.len();
+    let mut is_death = vec![false; n];
+    let mut diagram = Diagram::new(max_dim);
+    for j in 0..n {
+        if low[j] != NONE {
+            is_death[j] = true;
+            let i = low[j];
+            let d = filtration.simplices[i].dim;
+            if d <= max_dim {
+                let birth = filtration.simplices[i].value;
+                let death = filtration.simplices[j].value;
+                diagram.push(d, birth, death);
+            }
+        }
+    }
+    // Essential classes: zero columns never appearing as a pivot row.
+    let mut is_pivot_row = vec![false; n];
+    for j in 0..n {
+        if low[j] != NONE {
+            is_pivot_row[low[j]] = true;
+        }
+    }
+    for j in 0..n {
+        if low[j] == NONE && !is_pivot_row[j] {
+            let d = filtration.simplices[j].dim;
+            if d <= max_dim {
+                diagram.push(d, filtration.simplices[j].value, f64::INFINITY);
+            }
+        }
+    }
+    diagram
+}
+
+/// Full oracle: PD up to `max_dim` via the standard column algorithm.
+pub fn oracle_diagram(f: &EdgeFiltration, nb: &Neighborhoods, max_dim: usize) -> Diagram {
+    let ex = ExplicitFiltration::build(f, nb, max_dim + 1);
+    let low = standard_column_algorithm(ex.boundary_matrix());
+    pairs_to_diagram(&ex, &low, max_dim)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::{MetricData, PointCloud};
+
+    fn circle(n: usize, r: f64) -> MetricData {
+        let mut coords = Vec::with_capacity(n * 2);
+        for i in 0..n {
+            let t = 2.0 * std::f64::consts::PI * i as f64 / n as f64;
+            coords.push(r * t.cos());
+            coords.push(r * t.sin());
+        }
+        MetricData::Points(PointCloud::new(2, coords))
+    }
+
+    #[test]
+    fn circle_has_one_loop() {
+        let data = circle(12, 1.0);
+        let f = EdgeFiltration::build(&data, 3.0);
+        let nb = Neighborhoods::build(&f, false);
+        let d = oracle_diagram(&f, &nb, 1);
+        // H0: 12 births, 11 die, 1 essential.
+        assert_eq!(d.essential_count(0), 1);
+        assert_eq!(d.finite(0).len(), 11);
+        // H1: exactly one significant loop.
+        let fin = d.finite(1);
+        let sig: Vec<_> = fin.iter().filter(|p| p.death - p.birth > 0.2).collect();
+        assert_eq!(sig.len(), 1, "{fin:?}");
+    }
+
+    #[test]
+    fn column_and_row_algorithms_agree() {
+        let data = circle(10, 1.0);
+        let f = EdgeFiltration::build(&data, 3.0);
+        let nb = Neighborhoods::build(&f, false);
+        let ex = ExplicitFiltration::build(&f, &nb, 2);
+        let lc = standard_column_algorithm(ex.boundary_matrix());
+        let lr = standard_row_algorithm(ex.boundary_matrix());
+        assert_eq!(lc, lr, "De Silva et al. 2011: same R");
+    }
+
+    #[test]
+    fn z2_and_z3_agree_on_torus_free_fixtures() {
+        // For complexes without torsion the PD is field-independent.
+        let data = circle(9, 1.0);
+        let f = EdgeFiltration::build(&data, 3.0);
+        let nb = Neighborhoods::build(&f, false);
+        let ex = ExplicitFiltration::build(&f, &nb, 2);
+        let l2 = standard_column_algorithm(ex.boundary_matrix());
+        let l3 = column_algorithm_zp(&ex, 3);
+        let l5 = column_algorithm_zp(&ex, 5);
+        let d2 = pairs_to_diagram(&ex, &l2, 1);
+        let d3 = pairs_to_diagram(&ex, &l3, 1);
+        let d5 = pairs_to_diagram(&ex, &l5, 1);
+        assert!(d2.multiset_eq(&d3, 1e-12));
+        assert!(d2.multiset_eq(&d5, 1e-12));
+    }
+
+    #[test]
+    fn two_components() {
+        let pc = PointCloud::new(1, vec![0.0, 0.1, 5.0, 5.1]);
+        let f = EdgeFiltration::build(&MetricData::Points(pc), 1.0);
+        let nb = Neighborhoods::build(&f, false);
+        let d = oracle_diagram(&f, &nb, 1);
+        assert_eq!(d.essential_count(0), 2);
+    }
+
+    #[test]
+    fn xor_sorted_basics() {
+        assert_eq!(xor_sorted(&[1, 3, 5], &[3, 4]), vec![1, 4, 5]);
+        assert_eq!(xor_sorted(&[], &[2]), vec![2]);
+        assert_eq!(xor_sorted(&[2], &[2]), Vec::<usize>::new());
+    }
+}

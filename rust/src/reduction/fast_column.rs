@@ -1,0 +1,543 @@
+//! Fast implicit column algorithm (paper §4.3.3–4.3.5).
+//!
+//! The reduction state `v` of the current column is a hash table keyed by
+//! *primary key*: only the bucket holding the smallest primary key is ever
+//! ordered (a min-heap by `(secondary, column)`), every other bucket is an
+//! unordered Vec — exactly the paper's trick for making insertion cheap
+//! while still extracting δ* in order. Buckets are freed as soon as they
+//! are drained, so `v` never approaches the size of the reduced column
+//! `r` (the §4.3.3 pitfall).
+//!
+//! Two cursors of the same column at the same simplex are bit-identical
+//! (canonical states), represent identical coboundary suffixes, and cancel
+//! in pairs — the paper's flag-next elimination.
+
+use std::cmp::Reverse;
+use std::collections::hash_map::Entry;
+use std::collections::BinaryHeap;
+
+use crate::util::fxhash::FxHashMap;
+
+use super::{ColumnSpace, ReduceResult, ReduceStats};
+use crate::filtration::Key;
+
+/// Reduction state for one column: cursors bucketed by primary key.
+pub struct BucketTable<C: Copy> {
+    /// Inactive buckets: primary key -> unordered cursors.
+    buckets: FxHashMap<u32, Vec<C>>,
+    /// Lazy min-heap over primary keys (may contain stale duplicates).
+    kp_heap: BinaryHeap<Reverse<u32>>,
+    /// The active (minimal-key) bucket, ordered by `(secondary, column)`.
+    active_kp: u32,
+    active: BinaryHeap<Reverse<(u32, u64, usize)>>,
+    slots: Vec<C>,
+    free_slots: Vec<usize>,
+    len: usize,
+}
+
+impl<C: Copy> BucketTable<C> {
+    pub fn new() -> Self {
+        Self {
+            buckets: FxHashMap::default(),
+            kp_heap: BinaryHeap::new(),
+            active_kp: u32::MAX,
+            active: BinaryHeap::new(),
+            slots: Vec::new(),
+            free_slots: Vec::new(),
+            len: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Insert a (non-exhausted) cursor.
+    pub fn insert<S: ColumnSpace<Cursor = C>>(&mut self, space: &S, cur: C) {
+        let key = space.key(&cur);
+        debug_assert!(!key.is_none());
+        self.len += 1;
+        if key.p == self.active_kp {
+            let slot = self.alloc_slot(cur);
+            self.active
+                .push(Reverse((key.s, space.col(&cur), slot)));
+            return;
+        }
+        match self.buckets.entry(key.p) {
+            Entry::Occupied(mut e) => e.get_mut().push(cur),
+            Entry::Vacant(e) => {
+                e.insert(vec![cur]);
+                self.kp_heap.push(Reverse(key.p));
+            }
+        }
+    }
+
+    fn alloc_slot(&mut self, cur: C) -> usize {
+        if let Some(s) = self.free_slots.pop() {
+            self.slots[s] = cur;
+            s
+        } else {
+            self.slots.push(cur);
+            self.slots.len() - 1
+        }
+    }
+
+    /// Activate the bucket with the minimal primary key, heapifying it.
+    /// Returns false when the table is exhausted.
+    fn activate_min_bucket<S: ColumnSpace<Cursor = C>>(&mut self, space: &S) -> bool {
+        debug_assert!(self.active.is_empty());
+        // Reclaim active slot storage between buckets.
+        self.slots.clear();
+        self.free_slots.clear();
+        while let Some(&Reverse(p)) = self.kp_heap.peek() {
+            // Lazy dedup of repeated heap entries.
+            self.kp_heap.pop();
+            while self.kp_heap.peek() == Some(&Reverse(p)) {
+                self.kp_heap.pop();
+            }
+            if let Some(bucket) = self.buckets.remove(&p) {
+                self.active_kp = p;
+                for cur in bucket {
+                    let key = space.key(&cur);
+                    debug_assert_eq!(key.p, p);
+                    let col = space.col(&cur);
+                    let slot = self.alloc_slot(cur);
+                    self.active.push(Reverse((key.s, col, slot)));
+                }
+                return true;
+            }
+        }
+        self.active_kp = u32::MAX;
+        false
+    }
+
+    /// Find δ*: the smallest simplex with odd coefficient across the
+    /// table, advancing/cancelling cursors below it. Surviving cursors at
+    /// δ* remain in the table. Returns `Key::NONE` when the column is zero.
+    pub fn find_low<S: ColumnSpace<Cursor = C>>(
+        &mut self,
+        space: &S,
+        stats: &mut ReduceStats,
+    ) -> Key {
+        let mut run: Vec<(u64, usize)> = Vec::new();
+        loop {
+            if self.active.is_empty() && !self.activate_min_bucket(space) {
+                return Key::NONE;
+            }
+            let p = self.active_kp;
+            // Process one run of equal secondary key.
+            let Reverse((s, col0, slot0)) = *self.active.peek().unwrap();
+            run.clear();
+            while let Some(&Reverse((s2, c2, sl2))) = self.active.peek() {
+                if s2 != s {
+                    break;
+                }
+                self.active.pop();
+                run.push((c2, sl2));
+            }
+            let _ = (col0, slot0);
+            // Cancel identical-column pairs: same (p, s, col) => identical
+            // cursors => identical suffixes. run is sorted by col (heap pop
+            // order within equal s is by col).
+            let mut survivors: Vec<usize> = Vec::with_capacity(run.len());
+            let mut i = 0;
+            while i < run.len() {
+                let col = run[i].0;
+                let mut j = i;
+                while j < run.len() && run[j].0 == col {
+                    j += 1;
+                }
+                if (j - i) % 2 == 1 {
+                    survivors.push(run[i].1);
+                }
+                // Cancelled cursors disappear entirely.
+                self.len -= (j - i) - ((j - i) % 2);
+                for &(_, sl) in &run[i..j] {
+                    if (j - i) % 2 == 1 && sl == run[i].1 {
+                        continue;
+                    }
+                    self.free_slots.push(sl);
+                }
+                i = j;
+            }
+            if survivors.len() % 2 == 1 {
+                // δ* found; survivors stay, re-pushed at their position.
+                for &sl in &survivors {
+                    let cur = self.slots[sl];
+                    self.active
+                        .push(Reverse((s, space.col(&cur), sl)));
+                }
+                return Key::new(p, s);
+            }
+            // Even coefficient: advance every survivor past ⟨p, s⟩.
+            for &sl in &survivors {
+                let mut cur = self.slots[sl];
+                space.next(&mut cur);
+                stats.find_next_calls += 1;
+                self.len -= 1;
+                self.free_slots.push(sl);
+                let key = space.key(&cur);
+                if !key.is_none() {
+                    self.insert(space, cur);
+                }
+            }
+        }
+    }
+
+    /// Parity of occurrences per column id among all surviving cursors.
+    /// Used to extract `V⊥(col)` when a pivot is claimed.
+    pub fn odd_parity_cols<S: ColumnSpace<Cursor = C>>(&self, space: &S) -> Vec<u64> {
+        let mut counts: FxHashMap<u64, u32> = FxHashMap::default();
+        for &Reverse((_, col, _)) in self.active.iter() {
+            *counts.entry(col).or_insert(0) += 1;
+        }
+        for bucket in self.buckets.values() {
+            for cur in bucket {
+                *counts.entry(space.col(cur)).or_insert(0) += 1;
+            }
+        }
+        let mut out: Vec<u64> = counts
+            .into_iter()
+            .filter(|&(_, c)| c % 2 == 1)
+            .map(|(col, _)| col)
+            .collect();
+        out.sort_unstable();
+        out
+    }
+
+    /// Drain every cursor (used when merging batch columns in the
+    /// serial–parallel scheduler).
+    pub fn drain_cursors(&mut self) -> Vec<C> {
+        let mut out = Vec::with_capacity(self.len);
+        while let Some(Reverse((_, _, slot))) = self.active.pop() {
+            out.push(self.slots[slot]);
+        }
+        for (_, bucket) in self.buckets.drain() {
+            out.extend(bucket);
+        }
+        self.kp_heap.clear();
+        self.slots.clear();
+        self.free_slots.clear();
+        self.active_kp = u32::MAX;
+        self.len = 0;
+        out
+    }
+}
+
+/// Committed global reduction state for one dimension (p⊥, V⊥, pairs).
+pub struct GlobalState {
+    /// Pivot key (packed) -> owning column. Trivial pivots are never here.
+    pub pivot_owner: FxHashMap<u64, u64>,
+    /// Column -> reduction ops (other columns summed into it). Columns
+    /// with no ops are absent. Boxed slices: exact-size allocations —
+    /// V⊥ dominates PH-memory (paper §4.3.1), capacity slack matters.
+    pub ops: FxHashMap<u64, Box<[u64]>>,
+    pub result: ReduceResult,
+    /// Drop zero-persistence pairs from storage (H2*: they are legion and
+    /// never consulted again; H1* keeps them for clearing).
+    pub keep_zero_pairs: bool,
+}
+
+impl GlobalState {
+    pub fn new(keep_zero_pairs: bool) -> Self {
+        Self {
+            pivot_owner: FxHashMap::default(),
+            ops: FxHashMap::default(),
+            result: ReduceResult::default(),
+            keep_zero_pairs,
+        }
+    }
+}
+
+/// Outcome of pushing one column as far as the committed state allows.
+pub enum ColumnOutcome<C: Copy> {
+    /// Reduced to zero — essential class.
+    Zero,
+    /// Ends at an unclaimed, non-trivial pivot: ready to commit.
+    /// `self_trivial` records whether `low` is the column's *own* trivial
+    /// pivot (so commit never re-probes — the probe is expensive for H2*).
+    Claim {
+        low: Key,
+        self_trivial: bool,
+        table: BucketTable<C>,
+    },
+}
+
+/// Reduce column `col` against the committed state only (no claim).
+/// This is the parallel-phase body; with immediate commit it is also the
+/// whole sequential algorithm.
+pub fn reduce_against<S: ColumnSpace>(
+    space: &S,
+    state: &GlobalState,
+    col: u64,
+    stats: &mut ReduceStats,
+) -> ColumnOutcome<S::Cursor> {
+    let c0 = space.smallest(col);
+    let low0 = space.key(&c0);
+    // Apparent-pair fast path: the first low of a fresh column is the
+    // smallest simplex of δcol, so self-triviality is an O(1) test — no
+    // probe, no bucket table. This is the dominant case (most positive
+    // simplices form trivial pairs; EXPERIMENTS §Perf).
+    if !low0.is_none() && space.is_self_trivial_first(col, low0) {
+        return ColumnOutcome::Claim {
+            low: low0,
+            self_trivial: true,
+            table: BucketTable::new(),
+        };
+    }
+    let mut table = BucketTable::new();
+    if !low0.is_none() {
+        table.insert(space, c0);
+    }
+    resume_reduce(space, state, col, table, stats)
+}
+
+/// Continue reducing an existing table against the committed state.
+pub fn resume_reduce<S: ColumnSpace>(
+    space: &S,
+    state: &GlobalState,
+    col: u64,
+    mut table: BucketTable<S::Cursor>,
+    stats: &mut ReduceStats,
+) -> ColumnOutcome<S::Cursor> {
+    loop {
+        let low = table.find_low(space, stats);
+        if low.is_none() {
+            return ColumnOutcome::Zero;
+        }
+        // Committed-pivot lookup first: a hash probe is far cheaper than
+        // the trivial-pair probe (FindSmallesth for H2*), and the two
+        // pivot sets are disjoint (trivial pivots never enter p⊥).
+        if let Some(&owner) = state.pivot_owner.get(&low.pack()) {
+            // Note: δ(owner) alone need not contain `low` — the owner's
+            // ops contribute it. Only the summed suffix has low == `low`.
+            let cur = space.geq(owner, low);
+            if !space.key(&cur).is_none() {
+                table.insert(space, cur);
+            }
+            stats.appends += 1;
+            if let Some(ops) = state.ops.get(&owner) {
+                for &op in ops {
+                    let c = space.geq(op, low);
+                    if !space.key(&c).is_none() {
+                        table.insert(space, c);
+                    }
+                    stats.appends += 1;
+                }
+            }
+            continue;
+        }
+        if let Some(owner) = space.trivial_owner(low) {
+            if owner == col {
+                // Our own trivial pivot: claimable immediately.
+                return ColumnOutcome::Claim {
+                    low,
+                    self_trivial: true,
+                    table,
+                };
+            }
+            // Reduce with the trivial owner's raw coboundary.
+            let cur = space.geq(owner, low);
+            debug_assert_eq!(space.key(&cur), low);
+            table.insert(space, cur);
+            stats.appends += 1;
+            continue;
+        }
+        return ColumnOutcome::Claim {
+            low,
+            self_trivial: false,
+            table,
+        };
+    }
+}
+
+/// Commit a claimed column: record the pair, pivot ownership and ops.
+/// `self_trivial` comes from the Claim (no re-probe).
+#[allow(clippy::too_many_arguments)]
+pub fn commit_claim<S: ColumnSpace>(
+    space: &S,
+    state: &mut GlobalState,
+    col: u64,
+    low: Key,
+    self_trivial: bool,
+    table: &BucketTable<S::Cursor>,
+    col_value: f64,
+    low_value: f64,
+) {
+    if self_trivial {
+        // Trivial pairs: zero persistence, no p⊥/V⊥ entry (paper §4.3.5).
+        state.result.stats.trivial_pairs += 1;
+        return;
+    }
+    state.pivot_owner.insert(low.pack(), col);
+    let mut ops = table.odd_parity_cols(space);
+    ops.retain(|&c| c != col);
+    if !ops.is_empty() {
+        state.ops.insert(col, ops.into_boxed_slice());
+    }
+    state.result.stats.pairs += 1;
+    if state.keep_zero_pairs || col_value != low_value {
+        state.result.pairs.push((col, low));
+    }
+}
+
+/// Sequential fast-implicit-column reduction of `columns` (already in
+/// reverse filtration order, clearing applied by the caller).
+pub fn reduce_all<S: ColumnSpace>(
+    space: &S,
+    columns: impl Iterator<Item = u64>,
+    keep_zero_pairs: bool,
+    value_of: impl Fn(u64) -> f64,
+    key_value: impl Fn(Key) -> f64,
+) -> ReduceResult {
+    let mut state = GlobalState::new(keep_zero_pairs);
+    let mut stats = ReduceStats::default();
+    for col in columns {
+        stats.columns += 1;
+        match reduce_against(space, &state, col, &mut stats) {
+            ColumnOutcome::Zero => {
+                state.result.stats.zero_columns += 1;
+                state.result.stats.essential += 1;
+                state.result.essential.push(col);
+            }
+            ColumnOutcome::Claim {
+                low,
+                self_trivial,
+                table,
+            } => {
+                commit_claim(
+                    space,
+                    &mut state,
+                    col,
+                    low,
+                    self_trivial,
+                    &table,
+                    value_of(col),
+                    key_value(low),
+                );
+            }
+        }
+    }
+    let mut result = state.result;
+    result.stats.columns = stats.columns;
+    result.stats.appends = stats.appends;
+    result.stats.find_next_calls = stats.find_next_calls;
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::filtration::{EdgeFiltration, Neighborhoods};
+    use crate::geometry::{MetricData, PointCloud};
+    use crate::reduction::EdgeColumns;
+    use crate::util::rng::Pcg32;
+
+    fn random_filtration(n: usize, dim: usize, tau: f64, seed: u64) -> EdgeFiltration {
+        let mut rng = Pcg32::new(seed);
+        let coords = (0..n * dim).map(|_| rng.next_f64()).collect();
+        EdgeFiltration::build(&MetricData::Points(PointCloud::new(dim, coords)), tau)
+    }
+
+    #[test]
+    fn bucket_table_single_cursor_roundtrip() {
+        let f = random_filtration(16, 2, 1.2, 1);
+        let nb = Neighborhoods::build(&f, false);
+        let space = EdgeColumns::new(&nb, &f);
+        // A single cursor: find_low must walk the coboundary in order,
+        // returning each key exactly once if we advance manually.
+        for e in 0..f.n_edges() as u64 {
+            let c0 = space.smallest(e);
+            if space.key(&c0).is_none() {
+                continue;
+            }
+            let mut t = BucketTable::new();
+            t.insert(&space, c0);
+            let mut stats = ReduceStats::default();
+            let low = t.find_low(&space, &mut stats);
+            assert_eq!(low, space.key(&c0), "first low is the smallest simplex");
+        }
+    }
+
+    #[test]
+    fn identical_cursors_cancel() {
+        let f = random_filtration(16, 2, 1.2, 2);
+        let nb = Neighborhoods::build(&f, false);
+        let space = EdgeColumns::new(&nb, &f);
+        for e in 0..f.n_edges() as u64 {
+            let c0 = space.smallest(e);
+            if space.key(&c0).is_none() {
+                continue;
+            }
+            let mut t = BucketTable::new();
+            t.insert(&space, c0);
+            t.insert(&space, c0);
+            let mut stats = ReduceStats::default();
+            let low = t.find_low(&space, &mut stats);
+            assert!(low.is_none(), "e={e}: duplicate column must cancel to zero");
+            assert_eq!(t.len(), 0);
+        }
+    }
+
+    #[test]
+    fn two_cursors_xor_coboundaries() {
+        // Table with cursors of two different edges must produce the
+        // symmetric difference of their coboundaries, in order.
+        let f = random_filtration(14, 3, 1.0, 3);
+        let nb = Neighborhoods::build(&f, false);
+        let space = EdgeColumns::new(&nb, &f);
+        let ne = f.n_edges() as u32;
+        let mut checked = 0;
+        for e1 in 0..ne.min(30) {
+            for e2 in (e1 + 1)..ne.min(30) {
+                let a = crate::coboundary::edges::brute_force_coboundary(&nb, &f, e1);
+                let b = crate::coboundary::edges::brute_force_coboundary(&nb, &f, e2);
+                let mut want: Vec<_> = a
+                    .iter()
+                    .filter(|k| !b.contains(k))
+                    .chain(b.iter().filter(|k| !a.contains(k)))
+                    .copied()
+                    .collect();
+                want.sort_unstable();
+                let c1 = space.smallest(e1 as u64);
+                let c2 = space.smallest(e2 as u64);
+                let mut t = BucketTable::new();
+                if !space.key(&c1).is_none() {
+                    t.insert(&space, c1);
+                }
+                if !space.key(&c2).is_none() {
+                    t.insert(&space, c2);
+                }
+                let mut got = Vec::new();
+                let mut stats = ReduceStats::default();
+                loop {
+                    let low = t.find_low(&space, &mut stats);
+                    if low.is_none() {
+                        break;
+                    }
+                    got.push(low);
+                    // Cancel δ* by inserting a matching singleton cursor of
+                    // a third "phantom" edge? Instead advance survivors:
+                    // simulate by inserting the same low from both sides is
+                    // complex; simply advance every cursor at low.
+                    let drained = t.drain_cursors();
+                    for mut c in drained {
+                        if space.key(&c) == low {
+                            space.next(&mut c);
+                        }
+                        if !space.key(&c).is_none() {
+                            t.insert(&space, c);
+                        }
+                    }
+                }
+                assert_eq!(got, want, "e1={e1} e2={e2}");
+                checked += 1;
+            }
+        }
+        assert!(checked > 10);
+    }
+}

@@ -1,0 +1,212 @@
+//! Implicit row algorithm (paper §4.3.2) — the simpler implicit engine.
+//!
+//! The reduction state is a flat list of cursors; every step scans all of
+//! them to find the smallest current key and its coefficient. Duplicate
+//! columns are *not* cancelled and the scan is over the whole of `v` —
+//! the two pitfalls §4.3.3 calls out. It shares the committed
+//! [`GlobalState`] with the fast engine, so the two are interchangeable
+//! inside the serial–parallel scheduler, which is exactly the comparison
+//! Table 4 makes.
+
+use super::fast_column::GlobalState;
+use super::{ColumnSpace, ReduceResult, ReduceStats};
+use crate::filtration::Key;
+
+/// One column's reduction state: flat cursor list.
+pub struct RowTable<C: Copy> {
+    pub cursors: Vec<C>,
+}
+
+impl<C: Copy> RowTable<C> {
+    pub fn new() -> Self {
+        Self {
+            cursors: Vec::new(),
+        }
+    }
+
+    /// δ*: smallest key with odd coefficient; advances cursors at even
+    /// lows (paper Figure 9 'reduce' step).
+    pub fn find_low<S: ColumnSpace<Cursor = C>>(
+        &mut self,
+        space: &S,
+        stats: &mut ReduceStats,
+    ) -> Key {
+        loop {
+            // Full scan: the smallest current key and its multiplicity.
+            let mut low = Key::NONE;
+            let mut count = 0usize;
+            for c in &self.cursors {
+                let k = space.key(c);
+                if k < low {
+                    low = k;
+                    count = 1;
+                } else if k == low && !k.is_none() {
+                    count += 1;
+                }
+            }
+            if low.is_none() {
+                return Key::NONE;
+            }
+            if count % 2 == 1 {
+                return low;
+            }
+            // Even coefficient: advance every cursor sitting at `low`.
+            let mut i = 0;
+            while i < self.cursors.len() {
+                if space.key(&self.cursors[i]) == low {
+                    space.next(&mut self.cursors[i]);
+                    stats.find_next_calls += 1;
+                    if space.key(&self.cursors[i]).is_none() {
+                        self.cursors.swap_remove(i);
+                        continue;
+                    }
+                }
+                i += 1;
+            }
+        }
+    }
+
+    pub fn insert<S: ColumnSpace<Cursor = C>>(&mut self, space: &S, cur: C) {
+        if !space.key(&cur).is_none() {
+            self.cursors.push(cur);
+        }
+    }
+
+    /// Odd-parity column ids among live cursors (V⊥ extraction).
+    pub fn odd_parity_cols<S: ColumnSpace<Cursor = C>>(&self, space: &S) -> Vec<u64> {
+        let mut counts: crate::util::fxhash::FxHashMap<u64, u32> = Default::default();
+        for c in &self.cursors {
+            *counts.entry(space.col(c)).or_insert(0) += 1;
+        }
+        let mut out: Vec<u64> = counts
+            .into_iter()
+            .filter(|&(_, n)| n % 2 == 1)
+            .map(|(col, _)| col)
+            .collect();
+        out.sort_unstable();
+        out
+    }
+}
+
+/// Sequential implicit-row reduction of `columns` (reverse filtration
+/// order, clearing pre-applied). Mirrors `fast_column::reduce_all`.
+pub fn reduce_all<S: ColumnSpace>(
+    space: &S,
+    columns: impl Iterator<Item = u64>,
+    keep_zero_pairs: bool,
+    value_of: impl Fn(u64) -> f64,
+    key_value: impl Fn(Key) -> f64,
+) -> ReduceResult {
+    let mut state = GlobalState::new(keep_zero_pairs);
+    let mut stats = ReduceStats::default();
+    for col in columns {
+        stats.columns += 1;
+        let mut table = RowTable::new();
+        table.insert(space, space.smallest(col));
+        let outcome = loop {
+            let low = table.find_low(space, &mut stats);
+            if low.is_none() {
+                break None;
+            }
+            // Hash probe before the (expensive) trivial probe — the two
+            // pivot sets are disjoint.
+            if let Some(&owner) = state.pivot_owner.get(&low.pack()) {
+                table.insert(space, space.geq(owner, low));
+                stats.appends += 1;
+                if let Some(ops) = state.ops.get(&owner) {
+                    for &op in ops {
+                        table.insert(space, space.geq(op, low));
+                        stats.appends += 1;
+                    }
+                }
+                continue;
+            }
+            if let Some(owner) = space.trivial_owner(low) {
+                if owner == col {
+                    break Some((low, true));
+                }
+                table.insert(space, space.geq(owner, low));
+                stats.appends += 1;
+                continue;
+            }
+            break Some((low, false));
+        };
+        match outcome {
+            None => {
+                state.result.stats.zero_columns += 1;
+                state.result.stats.essential += 1;
+                state.result.essential.push(col);
+            }
+            Some((low, self_trivial)) => {
+                if self_trivial {
+                    state.result.stats.trivial_pairs += 1;
+                } else {
+                    state.pivot_owner.insert(low.pack(), col);
+                    let mut ops = table.odd_parity_cols(space);
+                    ops.retain(|&c| c != col);
+                    if !ops.is_empty() {
+                        state.ops.insert(col, ops.into_boxed_slice());
+                    }
+                    state.result.stats.pairs += 1;
+                    if keep_zero_pairs || value_of(col) != key_value(low) {
+                        state.result.pairs.push((col, low));
+                    }
+                }
+            }
+        }
+    }
+    let mut result = state.result;
+    result.stats.columns = stats.columns;
+    result.stats.appends = stats.appends;
+    result.stats.find_next_calls = stats.find_next_calls;
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::filtration::{EdgeFiltration, Neighborhoods};
+    use crate::geometry::{MetricData, PointCloud};
+    use crate::reduction::EdgeColumns;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn row_and_fast_column_agree() {
+        for seed in 0..6 {
+            let mut rng = Pcg32::new(seed);
+            let coords = (0..20 * 3).map(|_| rng.next_f64()).collect();
+            let f = EdgeFiltration::build(
+                &MetricData::Points(PointCloud::new(3, coords)),
+                0.9,
+            );
+            let nb = Neighborhoods::build(&f, false);
+            let space = EdgeColumns::new(&nb, &f);
+            let cols: Vec<u64> = (0..f.n_edges() as u64).rev().collect();
+            let a = reduce_all(
+                &space,
+                cols.iter().copied(),
+                true,
+                |c| f.values[c as usize],
+                |k| f.key_value(k),
+            );
+            let b = crate::reduction::fast_column::reduce_all(
+                &space,
+                cols.iter().copied(),
+                true,
+                |c| f.values[c as usize],
+                |k| f.key_value(k),
+            );
+            let mut pa = a.pairs.clone();
+            let mut pb = b.pairs.clone();
+            pa.sort_unstable();
+            pb.sort_unstable();
+            assert_eq!(pa, pb, "seed={seed}: pairs must match exactly");
+            let mut ea = a.essential.clone();
+            let mut eb = b.essential.clone();
+            ea.sort_unstable();
+            eb.sort_unstable();
+            assert_eq!(ea, eb, "seed={seed}: essentials must match");
+            assert_eq!(a.stats.trivial_pairs, b.stats.trivial_pairs, "seed={seed}");
+        }
+    }
+}

@@ -1,0 +1,248 @@
+//! Cohomology reduction engines (paper §4.3–4.4).
+//!
+//! All engines reduce *columns* of the coboundary matrix one at a time,
+//! never materializing it. A column is identified by a `u64` id — the edge
+//! order for the H1* computation, the packed triangle key for H2* — and a
+//! [`ColumnSpace`] provides cursor operations over its coboundary plus the
+//! trivial-pair probe. The engines differ in how they find the lowest
+//! odd-coefficient simplex δ*:
+//!
+//! * [`implicit_row`]: flat cursor list, full scan per step (§4.3.2);
+//! * [`fast_column`]: hash table keyed by primary key, only the active
+//!   bucket ordered (§4.3.4) — the paper's headline algorithm;
+//! * [`explicit`]: textbook boundary-matrix reduction (App. A), the
+//!   correctness oracle;
+//! * [`serial_parallel`]: batches either implicit engine over the
+//!   persistent thread pool (§4.4).
+
+pub mod explicit;
+pub mod fast_column;
+pub mod implicit_row;
+pub mod pool;
+pub mod serial_parallel;
+
+use crate::coboundary::{TetCursor, TriCursor};
+use crate::filtration::{EdgeFiltration, Key, Neighborhoods};
+
+/// Counters reported by EXPERIMENTS.md and the ablation benches.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ReduceStats {
+    pub columns: usize,
+    pub cleared: usize,
+    pub trivial_pairs: usize,
+    pub pairs: usize,
+    pub essential: usize,
+    pub appends: usize,
+    pub find_next_calls: usize,
+    pub zero_columns: usize,
+}
+
+impl ReduceStats {
+    pub fn merge(&mut self, o: &ReduceStats) {
+        self.columns += o.columns;
+        self.cleared += o.cleared;
+        self.trivial_pairs += o.trivial_pairs;
+        self.pairs += o.pairs;
+        self.essential += o.essential;
+        self.appends += o.appends;
+        self.find_next_calls += o.find_next_calls;
+        self.zero_columns += o.zero_columns;
+    }
+}
+
+/// A (co)boundary column universe for one homology dimension.
+///
+/// Cursor state at a given simplex is canonical (verified by the
+/// coboundary tests), so cursors compare by `(key, column)` alone.
+pub trait ColumnSpace: Sync {
+    type Cursor: Copy + Send;
+
+    /// Cursor at the least simplex of the column's coboundary.
+    fn smallest(&self, col: u64) -> Self::Cursor;
+    /// Cursor at the least simplex >= `target`.
+    fn geq(&self, col: u64, target: Key) -> Self::Cursor;
+    /// Advance to the next-greater simplex.
+    fn next(&self, cur: &mut Self::Cursor);
+    /// Current simplex key (`Key::NONE` = exhausted).
+    fn key(&self, cur: &Self::Cursor) -> Key;
+    /// The column this cursor belongs to.
+    fn col(&self, cur: &Self::Cursor) -> u64;
+    /// If `key` forms a trivial (apparent) pair `(key, owner)`, return the
+    /// owning column (paper §4.3.5). The owner's reduced column is exactly
+    /// its raw coboundary — no ops needed.
+    fn trivial_owner(&self, key: Key) -> Option<u64>;
+    /// O(1) self-trivial test, valid ONLY when `low` is the smallest
+    /// simplex of `δcol` (the first low of a fresh column): is
+    /// `(low, col)` a trivial pair? Avoids the (possibly expensive)
+    /// `trivial_owner` probe on the dominant apparent-pair fast path.
+    fn is_self_trivial_first(&self, col: u64, low: Key) -> bool;
+}
+
+/// H1*: columns are edges (id = edge order), coboundary simplices are
+/// triangles enumerated by [`TriCursor`].
+pub struct EdgeColumns<'a> {
+    pub nb: &'a Neighborhoods,
+    pub f1: &'a EdgeFiltration,
+    /// Smallest triangle of every edge's coboundary, precomputed a priori
+    /// at `O(n_e)` memory (paper §4.3.5) — backs the trivial-pair probe
+    /// and seeds the initial cursors.
+    pub smallest_tri: Vec<Key>,
+}
+
+impl<'a> EdgeColumns<'a> {
+    pub fn new(nb: &'a Neighborhoods, f1: &'a EdgeFiltration) -> Self {
+        let smallest_tri = (0..f1.n_edges() as u32)
+            .map(|e| {
+                let (a, b) = f1.edges[e as usize];
+                TriCursor::find_smallest(nb, e, a, b).cur
+            })
+            .collect();
+        Self {
+            nb,
+            f1,
+            smallest_tri,
+        }
+    }
+}
+
+impl<'a> ColumnSpace for EdgeColumns<'a> {
+    type Cursor = TriCursor;
+
+    fn smallest(&self, col: u64) -> TriCursor {
+        let e = col as u32;
+        let (a, b) = self.f1.edges[e as usize];
+        // Seed from the precomputed table: jump straight to the known
+        // smallest key via binary searches instead of a full merge.
+        let k = self.smallest_tri[e as usize];
+        if k.is_none() {
+            TriCursor {
+                e,
+                a,
+                b,
+                ia: 0,
+                ib: 0,
+                case2: true,
+                cur: Key::NONE,
+            }
+        } else {
+            let c = TriCursor::find_geq(self.nb, e, a, b, k);
+            debug_assert_eq!(c.cur, k);
+            c
+        }
+    }
+
+    fn geq(&self, col: u64, target: Key) -> TriCursor {
+        let e = col as u32;
+        let (a, b) = self.f1.edges[e as usize];
+        TriCursor::find_geq(self.nb, e, a, b, target)
+    }
+
+    #[inline]
+    fn next(&self, cur: &mut TriCursor) {
+        cur.find_next(self.nb);
+    }
+
+    #[inline]
+    fn key(&self, cur: &TriCursor) -> Key {
+        cur.cur
+    }
+
+    #[inline]
+    fn col(&self, cur: &TriCursor) -> u64 {
+        cur.e as u64
+    }
+
+    /// `(key, e')` is trivial iff `e' = key.p` (the diameter edge itself)
+    /// and `key` is the smallest simplex of `δe'`.
+    #[inline]
+    fn trivial_owner(&self, key: Key) -> Option<u64> {
+        if self.smallest_tri[key.p as usize] == key {
+            Some(key.p as u64)
+        } else {
+            None
+        }
+    }
+
+    /// `low` is the smallest of `δcol`; trivial iff its diameter IS col.
+    #[inline]
+    fn is_self_trivial_first(&self, col: u64, low: Key) -> bool {
+        low.p as u64 == col
+    }
+}
+
+/// H2*: columns are triangles (id = packed key), coboundary simplices are
+/// tetrahedra enumerated by [`TetCursor`].
+pub struct TriangleColumns<'a> {
+    pub nb: &'a Neighborhoods,
+    pub f1: &'a EdgeFiltration,
+}
+
+impl<'a> TriangleColumns<'a> {
+    pub fn new(nb: &'a Neighborhoods, f1: &'a EdgeFiltration) -> Self {
+        Self { nb, f1 }
+    }
+}
+
+impl<'a> ColumnSpace for TriangleColumns<'a> {
+    type Cursor = TetCursor;
+
+    fn smallest(&self, col: u64) -> TetCursor {
+        TetCursor::find_smallest(self.nb, self.f1, Key::unpack(col))
+    }
+
+    fn geq(&self, col: u64, target: Key) -> TetCursor {
+        TetCursor::find_geq(self.nb, self.f1, Key::unpack(col), target)
+    }
+
+    #[inline]
+    fn next(&self, cur: &mut TetCursor) {
+        cur.find_next(self.nb);
+    }
+
+    #[inline]
+    fn key(&self, cur: &TetCursor) -> Key {
+        cur.cur
+    }
+
+    #[inline]
+    fn col(&self, cur: &TetCursor) -> u64 {
+        cur.t.pack()
+    }
+
+    /// For a tetrahedron `h = ⟨k1, k2⟩` the greatest boundary triangle is
+    /// `t' = ⟨k1, max(c,d)⟩` with `{c,d} = f1⁻¹(k2)`; `(h, t')` is trivial
+    /// iff `h` is the smallest simplex of `δt'` (checked by FindSmallesth,
+    /// paper §4.3.5).
+    fn trivial_owner(&self, key: Key) -> Option<u64> {
+        let (c, d) = self.f1.edges[key.s as usize];
+        let t = Key::new(key.p, c.max(d));
+        let probe = TetCursor::find_smallest(self.nb, self.f1, t);
+        if probe.cur == key {
+            Some(t.pack())
+        } else {
+            None
+        }
+    }
+
+    /// `low` is the smallest of `δcol` by construction, so the
+    /// FindSmallesth probe is redundant: trivial iff the greatest
+    /// boundary triangle of `low` is `col` itself.
+    #[inline]
+    fn is_self_trivial_first(&self, col: u64, low: Key) -> bool {
+        let (c, d) = self.f1.edges[low.s as usize];
+        Key::new(low.p, c.max(d)).pack() == col
+    }
+}
+
+/// Result of reducing one dimension's columns.
+#[derive(Clone, Debug, Default)]
+pub struct ReduceResult {
+    /// Persistence pairs `(column simplex id, pivot key)` — the column is
+    /// the *birth* simplex, the pivot the *death*. Trivial pairs, which
+    /// always have zero persistence (their pivot shares the column's
+    /// diameter), are counted in `stats` but not stored.
+    pub pairs: Vec<(u64, Key)>,
+    /// Columns whose coboundary reduced to zero — essential classes.
+    pub essential: Vec<u64>,
+    pub stats: ReduceStats,
+}

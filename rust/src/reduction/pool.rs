@@ -1,0 +1,210 @@
+//! Persistent worker thread pool (paper §4.4).
+//!
+//! "To reduce the overhead of creating and destroying threads, we create
+//! threads before the computation of PH. The jobs are allocated in fixed
+//! chunks to these threads and the threads are woken up when they are
+//! required" — this module is exactly that: `threads` workers parked on a
+//! condvar, a generation counter to publish jobs, and a scoped-pointer
+//! trick so jobs may borrow the caller's stack (the caller blocks until
+//! the generation completes, so the borrow is sound).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Arc<dyn Fn(usize) + Send + Sync>;
+
+struct Shared {
+    state: Mutex<State>,
+    work_cv: Condvar,
+    done_cv: Condvar,
+    active: AtomicUsize,
+}
+
+struct State {
+    generation: u64,
+    job: Option<Job>,
+    shutdown: bool,
+    done: u64,
+}
+
+/// Fixed-size pool; workers live for the pool's lifetime.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    n: usize,
+}
+
+impl ThreadPool {
+    pub fn new(n: usize) -> Self {
+        let n = n.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                generation: 0,
+                job: None,
+                shutdown: false,
+                done: 0,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            active: AtomicUsize::new(0),
+        });
+        let workers = (0..n)
+            .map(|tid| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("dory-worker-{tid}"))
+                    .spawn(move || worker_loop(tid, shared))
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self { shared, workers, n }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.n
+    }
+
+    /// Run `job(tid)` on every worker; blocks until all return.
+    ///
+    /// Safety of borrowing: the closure is type-erased behind an Arc with a
+    /// 'static bound obtained via transmute, but `run` does not return
+    /// until every worker has finished the generation, so borrowed data
+    /// outlives all uses.
+    pub fn run<'scope, F>(&self, job: F)
+    where
+        F: Fn(usize) + Send + Sync + 'scope,
+    {
+        let arc: Arc<dyn Fn(usize) + Send + Sync + 'scope> = Arc::new(job);
+        // Erase the lifetime (see safety note above).
+        let arc: Job = unsafe { std::mem::transmute(arc) };
+        let mut st = self.shared.state.lock().unwrap();
+        st.generation += 1;
+        st.done = 0;
+        st.job = Some(arc);
+        let gen = st.generation;
+        self.shared.work_cv.notify_all();
+        while st.done < self.n as u64 || st.generation != gen {
+            st = self.shared.done_cv.wait(st).unwrap();
+        }
+        st.job = None;
+    }
+
+    /// Split `0..len` into `threads()` contiguous chunks; `f(tid, range)`.
+    pub fn run_chunks<'scope, F>(&self, len: usize, f: F)
+    where
+        F: Fn(usize, std::ops::Range<usize>) + Send + Sync + 'scope,
+    {
+        let n = self.n;
+        let chunk = len.div_ceil(n.max(1)).max(1);
+        self.run(move |tid| {
+            let start = tid * chunk;
+            if start < len {
+                let end = (start + chunk).min(len);
+                f(tid, start..end);
+            }
+        });
+    }
+}
+
+fn worker_loop(tid: usize, shared: Arc<Shared>) {
+    let mut last_gen = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.generation != last_gen && st.job.is_some() {
+                    last_gen = st.generation;
+                    break st.job.clone().unwrap();
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        shared.active.fetch_add(1, Ordering::SeqCst);
+        job(tid);
+        shared.active.fetch_sub(1, Ordering::SeqCst);
+        let mut st = shared.state.lock().unwrap();
+        st.done += 1;
+        shared.done_cv.notify_all();
+        drop(st);
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn runs_on_all_workers() {
+        let pool = ThreadPool::new(4);
+        let hits = AtomicU64::new(0);
+        pool.run(|_tid| {
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn reusable_across_generations() {
+        let pool = ThreadPool::new(3);
+        let sum = AtomicU64::new(0);
+        for _ in 0..50 {
+            pool.run(|tid| {
+                sum.fetch_add(tid as u64 + 1, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(sum.load(Ordering::SeqCst), 50 * (1 + 2 + 3));
+    }
+
+    #[test]
+    fn chunks_cover_range_exactly_once() {
+        let pool = ThreadPool::new(4);
+        let len = 1003;
+        let marks: Vec<AtomicU64> = (0..len).map(|_| AtomicU64::new(0)).collect();
+        pool.run_chunks(len, |_tid, range| {
+            for i in range {
+                marks[i].fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert!(marks.iter().all(|m| m.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn borrows_stack_data() {
+        let pool = ThreadPool::new(2);
+        let data = vec![1u64, 2, 3, 4];
+        let total = AtomicU64::new(0);
+        pool.run_chunks(data.len(), |_tid, r| {
+            let s: u64 = data[r].iter().sum();
+            total.fetch_add(s, Ordering::SeqCst);
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn single_thread_pool_works() {
+        let pool = ThreadPool::new(1);
+        let hits = AtomicU64::new(0);
+        pool.run_chunks(10, |_t, r| {
+            hits.fetch_add(r.len() as u64, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 10);
+    }
+}

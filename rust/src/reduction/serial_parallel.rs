@@ -1,0 +1,217 @@
+//! Serial–parallel batched reduction (paper §4.4, Figures 14–17).
+//!
+//! A batch of B columns is reduced in two phases:
+//!
+//! * **parallel** — every column is pushed as far as the *committed*
+//!   state allows (pivots owned by previously cleared columns, trivial
+//!   pairs, zero columns). Workers share the immutable committed state
+//!   and own their column's bucket table, so no synchronization is needed
+//!   beyond the phase barrier.
+//! * **serial** — columns are visited in filtration-processing order;
+//!   intra-batch pivot collisions are resolved by appending the earlier
+//!   column's state and resuming (which may re-enter committed-state
+//!   reductions). Each resolved column commits immediately, so the final
+//!   content of p⊥/V⊥ is *identical* to the sequential algorithm's.
+//!
+//! Batch-size trade-off per the paper: small batches waste parallelism,
+//! large batches shift work into the serial phase. Defaults: 100 for
+//! H1*/H2* (the paper's choice), overridable via [`crate::coordinator`].
+
+use std::sync::Mutex;
+
+use super::fast_column::{
+    commit_claim, reduce_against, resume_reduce, BucketTable, ColumnOutcome, GlobalState,
+};
+use super::pool::ThreadPool;
+use super::{ColumnSpace, ReduceResult, ReduceStats};
+use crate::filtration::Key;
+
+enum Pending<C: Copy> {
+    Zero,
+    Stopped {
+        low: Key,
+        self_trivial: bool,
+        table: BucketTable<C>,
+    },
+}
+
+/// Reduce `columns` (already in reverse filtration order, clearing applied
+/// by the caller) with batched serial–parallel scheduling.
+pub fn reduce_all<S: ColumnSpace>(
+    space: &S,
+    columns: &[u64],
+    batch_size: usize,
+    pool: &ThreadPool,
+    keep_zero_pairs: bool,
+    value_of: impl Fn(u64) -> f64,
+    key_value: impl Fn(Key) -> f64,
+) -> ReduceResult {
+    let batch_size = batch_size.max(1);
+    let mut state = GlobalState::new(keep_zero_pairs);
+    let mut total_stats = ReduceStats::default();
+
+    for batch in columns.chunks(batch_size) {
+        // ---- Parallel phase -------------------------------------------
+        let mut pending: Vec<Option<Pending<S::Cursor>>> =
+            (0..batch.len()).map(|_| None).collect();
+        {
+            let slots: Vec<Mutex<(Option<Pending<S::Cursor>>, ReduceStats)>> = (0..batch.len())
+                .map(|_| Mutex::new((None, ReduceStats::default())))
+                .collect();
+            let state_ref = &state;
+            pool.run_chunks(batch.len(), |_tid, range| {
+                for i in range {
+                    let mut stats = ReduceStats::default();
+                    let out = reduce_against(space, state_ref, batch[i], &mut stats);
+                    let p = match out {
+                        ColumnOutcome::Zero => Pending::Zero,
+                        ColumnOutcome::Claim {
+                            low,
+                            self_trivial,
+                            table,
+                        } => Pending::Stopped {
+                            low,
+                            self_trivial,
+                            table,
+                        },
+                    };
+                    *slots[i].lock().unwrap() = (Some(p), stats);
+                }
+            });
+            for (i, slot) in slots.into_iter().enumerate() {
+                let (p, stats) = slot.into_inner().unwrap();
+                total_stats.merge(&stats);
+                pending[i] = p;
+            }
+        }
+
+        // ---- Serial phase ----------------------------------------------
+        // Visit in filtration-processing order; commits make earlier batch
+        // columns visible to later ones exactly as in the sequential run.
+        for (i, p) in pending.into_iter().enumerate() {
+            let col = batch[i];
+            total_stats.columns += 1;
+            match p {
+                Some(Pending::Zero) | None => {
+                    state.result.stats.zero_columns += 1;
+                    state.result.stats.essential += 1;
+                    state.result.essential.push(col);
+                }
+                Some(Pending::Stopped {
+                    low,
+                    self_trivial,
+                    table,
+                }) => {
+                    // Fast path: the stop-pivot is still unclaimed (no
+                    // earlier batch column took it) — commit directly, no
+                    // find_low re-walk and no trivial re-probe. This is
+                    // the overwhelmingly common case and what makes the
+                    // parallel phase actually pay off (EXPERIMENTS §Perf).
+                    if self_trivial || !state.pivot_owner.contains_key(&low.pack()) {
+                        commit_claim(
+                            space,
+                            &mut state,
+                            col,
+                            low,
+                            self_trivial,
+                            &table,
+                            value_of(col),
+                            key_value(low),
+                        );
+                        continue;
+                    }
+                    // Collision: resume against the updated committed
+                    // state (find_low is idempotent on a stopped table).
+                    let mut stats = ReduceStats::default();
+                    match resume_reduce(space, &state, col, table, &mut stats) {
+                        ColumnOutcome::Zero => {
+                            state.result.stats.zero_columns += 1;
+                            state.result.stats.essential += 1;
+                            state.result.essential.push(col);
+                        }
+                        ColumnOutcome::Claim {
+                            low,
+                            self_trivial,
+                            table,
+                        } => {
+                            commit_claim(
+                                space,
+                                &mut state,
+                                col,
+                                low,
+                                self_trivial,
+                                &table,
+                                value_of(col),
+                                key_value(low),
+                            );
+                        }
+                    }
+                    total_stats.merge(&stats);
+                }
+            }
+        }
+    }
+
+    let mut result = state.result;
+    result.stats.columns = total_stats.columns;
+    result.stats.appends = total_stats.appends;
+    result.stats.find_next_calls = total_stats.find_next_calls;
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::filtration::{EdgeFiltration, Neighborhoods};
+    use crate::geometry::{MetricData, PointCloud};
+    use crate::reduction::EdgeColumns;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn serial_parallel_matches_sequential_for_all_batch_sizes() {
+        for seed in 0..4 {
+            let mut rng = Pcg32::new(seed);
+            let coords = (0..24 * 3).map(|_| rng.next_f64()).collect();
+            let f = EdgeFiltration::build(
+                &MetricData::Points(PointCloud::new(3, coords)),
+                0.9,
+            );
+            let nb = Neighborhoods::build(&f, false);
+            let space = EdgeColumns::new(&nb, &f);
+            let cols: Vec<u64> = (0..f.n_edges() as u64).rev().collect();
+            let seq = crate::reduction::fast_column::reduce_all(
+                &space,
+                cols.iter().copied(),
+                true,
+                |c| f.values[c as usize],
+                |k| f.key_value(k),
+            );
+            let pool = ThreadPool::new(4);
+            for batch in [1usize, 3, 10, 100, 10_000] {
+                let par = reduce_all(
+                    &space,
+                    &cols,
+                    batch,
+                    &pool,
+                    true,
+                    |c| f.values[c as usize],
+                    |k| f.key_value(k),
+                );
+                let mut a = seq.pairs.clone();
+                let mut b = par.pairs.clone();
+                a.sort_unstable();
+                b.sort_unstable();
+                assert_eq!(a, b, "seed={seed} batch={batch}");
+                let mut ea = seq.essential.clone();
+                let mut eb = par.essential.clone();
+                ea.sort_unstable();
+                eb.sort_unstable();
+                assert_eq!(ea, eb, "seed={seed} batch={batch}");
+                assert_eq!(
+                    seq.stats.trivial_pairs, par.stats.trivial_pairs,
+                    "seed={seed} batch={batch}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,183 @@
+//! Minimal JSON writer (no serde in the offline vendor set).
+//!
+//! Only what the bench/report paths need: objects, arrays, strings,
+//! numbers, bools. Escapes per RFC 8259.
+
+use std::fmt::Write as _;
+
+/// A JSON value builder with owned rendering.
+#[derive(Clone, Debug)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Int(i64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn obj() -> Json {
+        Json::Obj(Vec::new())
+    }
+
+    pub fn arr() -> Json {
+        Json::Arr(Vec::new())
+    }
+
+    pub fn field(mut self, key: &str, val: impl Into<Json>) -> Json {
+        if let Json::Obj(ref mut fields) = self {
+            fields.push((key.to_string(), val.into()));
+        } else {
+            panic!("field() on non-object Json");
+        }
+        self
+    }
+
+    pub fn push(&mut self, val: impl Into<Json>) {
+        if let Json::Arr(ref mut items) = self {
+            items.push(val.into());
+        } else {
+            panic!("push() on non-array Json");
+        }
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s);
+        s
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Int(i) => {
+                let _ = write!(out, "{i}");
+            }
+            Json::Num(x) => {
+                if x.is_finite() {
+                    let _ = write!(out, "{x}");
+                } else if x.is_nan() {
+                    out.push_str("null");
+                } else if *x > 0.0 {
+                    out.push_str("1e999"); // +inf: parses as Infinity in most readers
+                } else {
+                    out.push_str("-1e999");
+                }
+            }
+            Json::Str(s) => write_escaped(out, s),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, it) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    it.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(out, k);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn write_escaped(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+impl From<bool> for Json {
+    fn from(b: bool) -> Json {
+        Json::Bool(b)
+    }
+}
+impl From<f64> for Json {
+    fn from(x: f64) -> Json {
+        Json::Num(x)
+    }
+}
+impl From<f32> for Json {
+    fn from(x: f32) -> Json {
+        Json::Num(x as f64)
+    }
+}
+impl From<i64> for Json {
+    fn from(x: i64) -> Json {
+        Json::Int(x)
+    }
+}
+impl From<usize> for Json {
+    fn from(x: usize) -> Json {
+        Json::Int(x as i64)
+    }
+}
+impl From<u32> for Json {
+    fn from(x: u32) -> Json {
+        Json::Int(x as i64)
+    }
+}
+impl From<&str> for Json {
+    fn from(s: &str) -> Json {
+        Json::Str(s.to_string())
+    }
+}
+impl From<String> for Json {
+    fn from(s: String) -> Json {
+        Json::Str(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_nested() {
+        let mut arr = Json::arr();
+        arr.push(1i64);
+        arr.push(2.5f64);
+        let j = Json::obj()
+            .field("name", "dory")
+            .field("ok", true)
+            .field("xs", arr);
+        assert_eq!(j.render(), r#"{"name":"dory","ok":true,"xs":[1,2.5]}"#);
+    }
+
+    #[test]
+    fn escapes_strings() {
+        let j = Json::obj().field("s", "a\"b\\c\nd");
+        assert_eq!(j.render(), r#"{"s":"a\"b\\c\nd"}"#);
+    }
+
+    #[test]
+    fn infinity_encodes() {
+        let j = Json::Num(f64::INFINITY);
+        assert_eq!(j.render(), "1e999");
+    }
+}

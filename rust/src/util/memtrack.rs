@@ -1,0 +1,125 @@
+//! Memory accounting: a counting global allocator plus `getrusage` max-RSS.
+//!
+//! The paper reports peak memory per run (macOS Instruments). We reproduce
+//! that with (a) an allocator wrapper counting live and peak heap bytes —
+//! resettable per benchmark section — and (b) OS max-RSS as a sanity bound.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+static LIVE: AtomicUsize = AtomicUsize::new(0);
+static PEAK: AtomicUsize = AtomicUsize::new(0);
+static BASELINE: AtomicUsize = AtomicUsize::new(0);
+
+/// Counting allocator. Install with:
+/// `#[global_allocator] static A: CountingAlloc = CountingAlloc;`
+/// (done in `lib.rs`; benches and the binary inherit it).
+pub struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc(layout);
+        if !p.is_null() {
+            let live = LIVE.fetch_add(layout.size(), Ordering::Relaxed) + layout.size();
+            PEAK.fetch_max(live, Ordering::Relaxed);
+        }
+        p
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout);
+        LIVE.fetch_sub(layout.size(), Ordering::Relaxed);
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let p = System.realloc(ptr, layout, new_size);
+        if !p.is_null() {
+            if new_size >= layout.size() {
+                let d = new_size - layout.size();
+                let live = LIVE.fetch_add(d, Ordering::Relaxed) + d;
+                PEAK.fetch_max(live, Ordering::Relaxed);
+            } else {
+                LIVE.fetch_sub(layout.size() - new_size, Ordering::Relaxed);
+            }
+        }
+        p
+    }
+}
+
+/// Live heap bytes right now.
+pub fn live_bytes() -> usize {
+    LIVE.load(Ordering::Relaxed)
+}
+
+/// Peak heap bytes since last `reset_peak`.
+pub fn peak_bytes() -> usize {
+    PEAK.load(Ordering::Relaxed)
+}
+
+/// Reset the peak to the current live value and remember the baseline;
+/// `section_peak_bytes` then reports peak-above-baseline for the section.
+pub fn reset_peak() {
+    let live = LIVE.load(Ordering::Relaxed);
+    PEAK.store(live, Ordering::Relaxed);
+    BASELINE.store(live, Ordering::Relaxed);
+}
+
+/// Peak allocated above the baseline captured by the last `reset_peak`.
+pub fn section_peak_bytes() -> usize {
+    peak_bytes().saturating_sub(BASELINE.load(Ordering::Relaxed))
+}
+
+/// OS-reported max resident set size in bytes (Linux: ru_maxrss is KiB).
+pub fn max_rss_bytes() -> usize {
+    unsafe {
+        let mut ru: libc::rusage = std::mem::zeroed();
+        if libc::getrusage(libc::RUSAGE_SELF, &mut ru) == 0 {
+            (ru.ru_maxrss as usize) * 1024
+        } else {
+            0
+        }
+    }
+}
+
+/// Human formatting used by the bench tables ("6.23 GB", "328 MB").
+pub fn fmt_bytes(b: usize) -> String {
+    const KB: f64 = 1024.0;
+    let b = b as f64;
+    if b >= KB * KB * KB {
+        format!("{:.2} GB", b / (KB * KB * KB))
+    } else if b >= KB * KB {
+        format!("{:.1} MB", b / (KB * KB))
+    } else if b >= KB {
+        format!("{:.1} KB", b / KB)
+    } else {
+        format!("{b:.0} B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counting_tracks_alloc() {
+        reset_peak();
+        let before = section_peak_bytes();
+        let v: Vec<u8> = Vec::with_capacity(8 * 1024 * 1024);
+        let after = section_peak_bytes();
+        assert!(after >= before + 8 * 1024 * 1024, "{before} -> {after}");
+        drop(v);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.0 KB");
+        assert!(fmt_bytes(3 * 1024 * 1024).starts_with("3.0 MB"));
+        assert!(fmt_bytes(2 * 1024 * 1024 * 1024).starts_with("2.00 GB"));
+    }
+
+    #[test]
+    fn rss_nonzero() {
+        assert!(max_rss_bytes() > 0);
+    }
+}

@@ -1,0 +1,11 @@
+//! Infrastructure: PRNG, JSON writer, memory accounting, timers.
+//!
+//! The offline build has no serde/criterion/rand, so these are small
+//! self-contained replacements tailored to what the benches and the
+//! coordinator need.
+
+pub mod fxhash;
+pub mod json;
+pub mod memtrack;
+pub mod rng;
+pub mod timer;

@@ -1,0 +1,129 @@
+//! Phase timing for Table-2-style breakdowns and bench statistics.
+
+use std::time::{Duration, Instant};
+
+/// Records named phases in order; renders the paper's Table-2 row format.
+#[derive(Debug, Default)]
+pub struct PhaseTimer {
+    phases: Vec<(String, Duration)>,
+    current: Option<(String, Instant)>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// End any running phase and start a new one.
+    pub fn start(&mut self, name: &str) {
+        self.stop();
+        self.current = Some((name.to_string(), Instant::now()));
+    }
+
+    /// End the running phase (no-op when idle).
+    pub fn stop(&mut self) {
+        if let Some((name, t0)) = self.current.take() {
+            self.phases.push((name, t0.elapsed()));
+        }
+    }
+
+    pub fn phases(&self) -> &[(String, Duration)] {
+        &self.phases
+    }
+
+    pub fn get(&self, name: &str) -> Option<Duration> {
+        self.phases
+            .iter()
+            .rev()
+            .find(|(n, _)| n == name)
+            .map(|(_, d)| *d)
+    }
+
+    pub fn total(&self) -> Duration {
+        self.phases.iter().map(|(_, d)| *d).sum()
+    }
+
+    /// "F1 1.14s | nbhd 0.49s | H0 0.14s" style summary.
+    pub fn summary(&self) -> String {
+        self.phases
+            .iter()
+            .map(|(n, d)| format!("{n} {:.3}s", d.as_secs_f64()))
+            .collect::<Vec<_>>()
+            .join(" | ")
+    }
+}
+
+/// Basic statistics over repeated timings (our stand-in for criterion).
+#[derive(Debug, Clone, Copy)]
+pub struct TimingStats {
+    pub n: usize,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    pub stddev_s: f64,
+}
+
+/// Run `f` `reps` times, returning per-rep stats. `reps >= 1`.
+pub fn time_reps<F: FnMut()>(reps: usize, mut f: F) -> TimingStats {
+    assert!(reps >= 1);
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    stats_of(&samples)
+}
+
+pub fn stats_of(samples: &[f64]) -> TimingStats {
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let var = if n > 1 {
+        samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+    } else {
+        0.0
+    };
+    TimingStats {
+        n,
+        mean_s: mean,
+        min_s: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+        max_s: samples.iter().cloned().fold(0.0, f64::max),
+        stddev_s: var.sqrt(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phases_accumulate_in_order() {
+        let mut t = PhaseTimer::new();
+        t.start("a");
+        std::thread::sleep(Duration::from_millis(2));
+        t.start("b");
+        std::thread::sleep(Duration::from_millis(2));
+        t.stop();
+        assert_eq!(t.phases().len(), 2);
+        assert_eq!(t.phases()[0].0, "a");
+        assert!(t.get("b").unwrap() >= Duration::from_millis(1));
+        assert!(t.total() >= Duration::from_millis(3));
+    }
+
+    #[test]
+    fn stats_sane() {
+        let s = stats_of(&[1.0, 2.0, 3.0]);
+        assert_eq!(s.n, 3);
+        assert!((s.mean_s - 2.0).abs() < 1e-12);
+        assert!((s.min_s - 1.0).abs() < 1e-12);
+        assert!((s.stddev_s - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn time_reps_runs() {
+        let mut k = 0u64;
+        let s = time_reps(3, || k += 1);
+        assert_eq!(s.n, 3);
+        assert_eq!(k, 3);
+    }
+}

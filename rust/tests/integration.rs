@@ -1,0 +1,259 @@
+//! Cross-module integration tests: coordinator pipeline, engine-vs-
+//! baseline agreement on real datasets, input-format equivalence, and
+//! failure injection.
+
+use dory::baselines::{gudhi_like, ripser_like};
+use dory::coordinator::{self, DatasetSpec, RunConfig};
+use dory::datasets;
+use dory::filtration::EdgeFiltration;
+use dory::geometry::{DenseDistances, MetricData, PointCloud, SparseDistances};
+use dory::homology::{compute_ph, compute_ph_from_filtration, EngineOptions};
+
+fn tmpdir(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join("dory-itest").join(name);
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn three_engines_agree_on_benchmark_datasets() {
+    // Medium-size instances of each benchmark family, all three code
+    // paths (Dory implicit / ripser-like heap / gudhi-like explicit).
+    let cases: Vec<(&str, MetricData, f64, usize)> = vec![
+        ("dragon", datasets::dragon_like(150, 1), 1.2, 1),
+        ("fractal", datasets::fractal_network(2), f64::INFINITY, 2),
+        ("o3", datasets::o3(60, 2), 1.4, 2),
+        ("torus4", datasets::torus4(120, 3), 0.8, 2),
+    ];
+    for (name, data, tau, dim) in cases {
+        let opts = EngineOptions {
+            max_dim: dim,
+            threads: 2,
+            ..Default::default()
+        };
+        let dory = compute_ph(&data, tau, &opts).diagram;
+        let rip = ripser_like::compute_ph(&data, tau, dim, usize::MAX).unwrap();
+        let gud = gudhi_like::compute_ph(&data, tau, dim);
+        assert!(
+            dory.multiset_eq(&rip, 2e-4),
+            "{name}: dory vs ripser-like\n{}",
+            dory.diff_summary(&rip)
+        );
+        assert!(
+            dory.multiset_eq(&gud, 1e-9),
+            "{name}: dory vs gudhi-like\n{}",
+            dory.diff_summary(&gud)
+        );
+    }
+}
+
+#[test]
+fn input_formats_are_equivalent() {
+    // The same metric delivered as points, dense matrix, and sparse list
+    // must give identical diagrams.
+    let data = datasets::circle(60, 1.0, 0.05, 9);
+    let pc = match &data {
+        MetricData::Points(p) => p.clone(),
+        _ => unreachable!(),
+    };
+    let tau = 1.5;
+    let dense = MetricData::Dense(DenseDistances::from_points(&pc));
+    let mut entries = Vec::new();
+    for i in 0..pc.n() as u32 {
+        for j in (i + 1)..pc.n() as u32 {
+            let d = pc.dist(i as usize, j as usize);
+            if d <= tau {
+                entries.push((i, j, d));
+            }
+        }
+    }
+    let sparse = MetricData::Sparse(SparseDistances {
+        n: pc.n(),
+        entries,
+    });
+    let opts = EngineOptions::default();
+    let a = compute_ph(&data, tau, &opts).diagram;
+    let b = compute_ph(&dense, tau, &opts).diagram;
+    let c = compute_ph(&sparse, tau, &opts).diagram;
+    assert!(a.multiset_eq(&b, 1e-12));
+    assert!(a.multiset_eq(&c, 1e-12));
+}
+
+#[test]
+fn pair_count_decomposition_invariant() {
+    // Every edge is either an H0 death or an H1 birth; every H1 birth is
+    // a (possibly trivial) pair or essential. Same one dimension up.
+    for seed in 0..4 {
+        let data = datasets::random_cloud(40, 3, seed);
+        let f = EdgeFiltration::build(&data, 0.7);
+        let r = compute_ph_from_filtration(
+            &f,
+            &EngineOptions {
+                max_dim: 2,
+                ..Default::default()
+            },
+        );
+        let ne = f.n_edges();
+        let s = &r.stats;
+        assert_eq!(
+            s.h0_deaths + s.h1_cleared.max(s.h0_deaths) - s.h0_deaths, // h1_cleared == h0_deaths
+            s.h1_cleared
+        );
+        assert_eq!(
+            ne,
+            s.h0_deaths + s.h1.pairs + s.h1.trivial_pairs + s.h1.essential,
+            "edge decomposition (seed={seed})"
+        );
+        // Triangle columns: cleared (H1 deaths) + H2 pairs + essential.
+        let triangles = s.h2.columns + s.h2_cleared;
+        assert_eq!(
+            triangles,
+            s.h1.pairs + s.h1.trivial_pairs + s.h2.pairs + s.h2.trivial_pairs + s.h2.essential,
+            "triangle decomposition (seed={seed})"
+        );
+    }
+}
+
+#[test]
+fn coordinator_config_roundtrip_outputs() {
+    let dir = tmpdir("roundtrip");
+    let cfg_text = format!(
+        r#"
+[dataset]
+kind = "figure-eight"
+n = 120
+seed = 5
+
+[engine]
+tau = 1.5
+max_dim = 1
+threads = 2
+
+[runtime]
+use_pjrt = false
+
+[output]
+diagram_csv = "{0}/pd.csv"
+diagram_json = "{0}/pd.json"
+summary_json = "{0}/summary.json"
+"#,
+        dir.display()
+    );
+    let cfg = RunConfig::from_str(&cfg_text).unwrap();
+    let report = coordinator::run(&cfg).unwrap();
+    assert_eq!(report.result.diagram.essential_count(0), 1);
+    // Both loops of the figure-eight live long.
+    assert_eq!(report.result.diagram.significant(1, 0.5).len(), 2);
+    for f in ["pd.csv", "pd.json", "summary.json"] {
+        assert!(dir.join(f).is_file(), "{f} missing");
+    }
+    let pd = std::fs::read_to_string(dir.join("pd.csv")).unwrap();
+    assert!(pd.starts_with("dim,birth,death"));
+    let sj = std::fs::read_to_string(dir.join("summary.json")).unwrap();
+    assert!(sj.contains("\"edge_source\":\"native\""), "{sj}");
+}
+
+#[test]
+fn coordinator_reads_files_back() {
+    // generate -> write -> read -> identical PH.
+    let dir = tmpdir("files");
+    let data = datasets::circle(50, 1.0, 0.02, 4);
+    let pc = match &data {
+        MetricData::Points(p) => p.clone(),
+        _ => unreachable!(),
+    };
+    let path = dir.join("pts.xyz");
+    dory::io::write_points(&path, &pc).unwrap();
+    let cfg = RunConfig {
+        dataset: DatasetSpec::PointsFile(path),
+        tau: 3.0,
+        max_dim: 1,
+        use_pjrt: false,
+        ..Default::default()
+    };
+    let r = coordinator::run(&cfg).unwrap();
+    let direct = compute_ph(
+        &data,
+        3.0,
+        &EngineOptions {
+            max_dim: 1,
+            ..Default::default()
+        },
+    );
+    assert!(r.result.diagram.multiset_eq(&direct.diagram, 1e-12));
+}
+
+#[test]
+fn failure_injection() {
+    // Unknown dataset kind.
+    assert!(coordinator::build_dataset(&DatasetSpec::Named {
+        kind: "no-such".into(),
+        n: 10,
+        seed: 1
+    })
+    .is_err());
+    // Missing file.
+    assert!(coordinator::build_dataset(&DatasetSpec::PointsFile(
+        "/definitely/not/here.xyz".into()
+    ))
+    .is_err());
+    // Invalid configs.
+    assert!(RunConfig::from_str("[engine]\nmax_dim = 9\n").is_err());
+    assert!(RunConfig::from_str("[engine]\ntau = \"high\"\n").is_err());
+    // Bad hic condition surfaces at build time.
+    assert!(coordinator::build_dataset(&DatasetSpec::Hic {
+        n_bins: 100,
+        condition: "mock".into(),
+        seed: 1
+    })
+    .is_err());
+}
+
+#[test]
+fn empty_and_degenerate_inputs() {
+    // One point: a single essential component, nothing else.
+    let one = MetricData::Points(PointCloud::new(2, vec![0.0, 0.0]));
+    let r = compute_ph(&one, 1.0, &EngineOptions::default());
+    assert_eq!(r.diagram.essential_count(0), 1);
+    assert_eq!(r.diagram.finite(0).len(), 0);
+    assert!(r.diagram.points(1).is_empty());
+
+    // tau smaller than every distance: n isolated components.
+    let spread = MetricData::Points(PointCloud::new(1, vec![0.0, 10.0, 20.0]));
+    let r = compute_ph(&spread, 1.0, &EngineOptions::default());
+    assert_eq!(r.diagram.essential_count(0), 3);
+
+    // Duplicate points (zero-length edges).
+    let dup = MetricData::Points(PointCloud::new(2, vec![1.0, 1.0, 1.0, 1.0, 2.0, 2.0]));
+    let r = compute_ph(&dup, 5.0, &EngineOptions::default());
+    assert_eq!(r.diagram.essential_count(0), 1);
+}
+
+#[test]
+fn hic_conditions_share_backbone() {
+    // Auxin removes loops/domains but the chain itself is untouched: H0
+    // structure (chromosome count) must match between conditions.
+    use dory::hic::{self, Condition, HiCParams};
+    let p = HiCParams {
+        n_bins: 3000,
+        chroms: 5,
+        ..Default::default()
+    };
+    let opts = EngineOptions {
+        max_dim: 0,
+        ..Default::default()
+    };
+    let c = compute_ph(
+        &MetricData::Sparse(hic::generate(&p, Condition::Control)),
+        p.tau_max,
+        &opts,
+    );
+    let a = compute_ph(
+        &MetricData::Sparse(hic::generate(&p, Condition::Auxin)),
+        p.tau_max,
+        &opts,
+    );
+    assert_eq!(c.diagram.essential_count(0), 5, "five chromosomes");
+    assert_eq!(a.diagram.essential_count(0), 5);
+}

@@ -1,0 +1,214 @@
+//! Property-based tests (hand-rolled harness, seeded PCG — no proptest in
+//! the offline vendor set). Each property runs across a sweep of random
+//! instances; failures print the seed for exact reproduction.
+
+use dory::baselines::ripser_like;
+use dory::filtration::{EdgeFiltration, Neighborhoods};
+use dory::geometry::{MetricData, PointCloud, SparseDistances};
+use dory::homology::{compute_ph_from_filtration, Algorithm, EngineOptions};
+use dory::reduction::explicit::oracle_diagram;
+use dory::util::rng::Pcg32;
+
+fn random_cloud(rng: &mut Pcg32, max_n: usize, dim: usize) -> MetricData {
+    let n = 8 + rng.gen_range((max_n - 8) as u32) as usize;
+    MetricData::Points(PointCloud::new(
+        dim,
+        (0..n * dim).map(|_| rng.next_f64()).collect(),
+    ))
+}
+
+/// Random weighted graph — NOT a metric. VR filtrations are defined for
+/// arbitrary symmetric weights (the Hi-C inputs are not metric either).
+fn random_graph(rng: &mut Pcg32, max_n: u32) -> MetricData {
+    let n = 6 + rng.gen_range(max_n - 6);
+    let mut entries = Vec::new();
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if rng.next_f64() < 0.55 {
+                entries.push((i, j, rng.uniform(0.05, 1.0)));
+            }
+        }
+    }
+    MetricData::Sparse(SparseDistances {
+        n: n as usize,
+        entries,
+    })
+}
+
+#[test]
+fn property_dory_matches_oracle_on_clouds() {
+    // 60 random clouds x dims {2,3} x homology dim 2, vs the textbook
+    // boundary-matrix reduction.
+    for seed in 0..30u64 {
+        let mut rng = Pcg32::new(0xC10D + seed);
+        for dim in [2usize, 3] {
+            let data = random_cloud(&mut rng, 22, dim);
+            let tau = rng.uniform(0.4, 0.9);
+            let f = EdgeFiltration::build(&data, tau);
+            let nb = Neighborhoods::build(&f, false);
+            let got = compute_ph_from_filtration(
+                &f,
+                &EngineOptions {
+                    max_dim: 2,
+                    ..Default::default()
+                },
+            )
+            .diagram;
+            let want = oracle_diagram(&f, &nb, 2);
+            assert!(
+                got.multiset_eq(&want, 1e-9),
+                "seed={seed} dim={dim} tau={tau}\n{}",
+                got.diff_summary(&want)
+            );
+        }
+    }
+}
+
+#[test]
+fn property_dory_matches_oracle_on_nonmetric_graphs() {
+    for seed in 0..30u64 {
+        let mut rng = Pcg32::new(0x6AF + seed);
+        let data = random_graph(&mut rng, 18);
+        let f = EdgeFiltration::build(&data, f64::INFINITY);
+        let nb = Neighborhoods::build(&f, false);
+        let got = compute_ph_from_filtration(
+            &f,
+            &EngineOptions {
+                max_dim: 2,
+                ..Default::default()
+            },
+        )
+        .diagram;
+        let want = oracle_diagram(&f, &nb, 2);
+        assert!(
+            got.multiset_eq(&want, 1e-9),
+            "seed={seed}\n{}",
+            got.diff_summary(&want)
+        );
+    }
+}
+
+#[test]
+fn property_engine_configs_are_equivalent() {
+    // fast-column/implicit-row x sparse/dense-lookup x batch sizes x
+    // threads must give identical diagrams on random instances.
+    for seed in 0..12u64 {
+        let mut rng = Pcg32::new(0xBEEF + seed);
+        let data = random_cloud(&mut rng, 26, 3);
+        let tau = rng.uniform(0.5, 1.0);
+        let f = EdgeFiltration::build(&data, tau);
+        let reference = compute_ph_from_filtration(
+            &f,
+            &EngineOptions {
+                max_dim: 2,
+                ..Default::default()
+            },
+        )
+        .diagram;
+        for algorithm in [Algorithm::FastColumn, Algorithm::ImplicitRow] {
+            for (threads, batch) in [(1usize, 100usize), (3, 2), (4, 17)] {
+                for dense in [false, true] {
+                    let d = compute_ph_from_filtration(
+                        &f,
+                        &EngineOptions {
+                            max_dim: 2,
+                            threads,
+                            batch_size: batch,
+                            dense_lookup: dense,
+                            algorithm,
+                        },
+                    )
+                    .diagram;
+                    assert!(
+                        d.multiset_eq(&reference, 1e-12),
+                        "seed={seed} algo={algorithm:?} threads={threads} batch={batch} dense={dense}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn property_monotone_tau_nests_diagrams() {
+    // Persistence pairs with death <= tau_small must appear identically
+    // when computed at a larger tau (filtration restriction property).
+    for seed in 0..10u64 {
+        let mut rng = Pcg32::new(0x7A0 + seed);
+        let data = random_cloud(&mut rng, 30, 2);
+        let (t1, t2) = (0.45, 0.85);
+        let opts = EngineOptions {
+            max_dim: 1,
+            ..Default::default()
+        };
+        let small = compute_ph_from_filtration(&EdgeFiltration::build(&data, t1), &opts).diagram;
+        let large = compute_ph_from_filtration(&EdgeFiltration::build(&data, t2), &opts).diagram;
+        for dim in 0..=1 {
+            let mut sm: Vec<(f64, f64)> = small
+                .finite(dim)
+                .iter()
+                .map(|p| (p.birth, p.death))
+                .collect();
+            let mut lg: Vec<(f64, f64)> = large
+                .finite(dim)
+                .iter()
+                .filter(|p| p.death <= t1)
+                .map(|p| (p.birth, p.death))
+                .collect();
+            sm.retain(|p| p.1 <= t1);
+            sm.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            lg.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            assert_eq!(sm.len(), lg.len(), "seed={seed} dim={dim}");
+            for (a, b) in sm.iter().zip(&lg) {
+                assert!((a.0 - b.0).abs() < 1e-12 && (a.1 - b.1).abs() < 1e-12);
+            }
+        }
+    }
+}
+
+#[test]
+fn property_betti_counts_match_euler_characteristic() {
+    // For the full complex at tau=inf on n points, chi = sum (-1)^k C(n,k+1)
+    // telescopes to 1; PH at dim<=2 can't see all of that, but beta0 must
+    // be 1 and all essential classes above dim 0 must vanish (a simplex is
+    // contractible).
+    for seed in 0..8u64 {
+        let mut rng = Pcg32::new(0xE1 + seed);
+        let data = random_cloud(&mut rng, 16, 3);
+        let f = EdgeFiltration::build(&data, f64::INFINITY);
+        let r = compute_ph_from_filtration(
+            &f,
+            &EngineOptions {
+                max_dim: 2,
+                ..Default::default()
+            },
+        );
+        assert_eq!(r.diagram.essential_count(0), 1, "seed={seed}");
+        assert_eq!(r.diagram.essential_count(1), 0, "seed={seed}");
+        assert_eq!(r.diagram.essential_count(2), 0, "seed={seed}");
+    }
+}
+
+#[test]
+fn property_ripser_like_matches_on_graphs() {
+    // Baseline independence check on sparse non-metric inputs too.
+    for seed in 0..12u64 {
+        let mut rng = Pcg32::new(0x517 + seed);
+        let data = random_graph(&mut rng, 16);
+        let f = EdgeFiltration::build(&data, f64::INFINITY);
+        let dory = compute_ph_from_filtration(
+            &f,
+            &EngineOptions {
+                max_dim: 2,
+                ..Default::default()
+            },
+        )
+        .diagram;
+        let rip = ripser_like::compute_ph(&data, 1e9, 2, usize::MAX).unwrap();
+        assert!(
+            dory.multiset_eq(&rip, 2e-4),
+            "seed={seed}\n{}",
+            dory.diff_summary(&rip)
+        );
+    }
+}
