@@ -39,6 +39,7 @@ fn main() {
             batch_size: 100,
             dense_lookup: dense,
             algorithm: algo,
+            ..Default::default()
         };
         memtrack::reset_peak();
         let t0 = std::time::Instant::now();

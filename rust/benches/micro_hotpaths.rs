@@ -105,6 +105,39 @@ fn main() {
         0
     });
     out = out.field("pool_dispatch_ns", d);
+    // Work-stealing task machinery: 1024 single-index tasks per
+    // generation (worst-case queue traffic; real pushes use column
+    // ranges, so per-task cost is amortized far below this).
+    let d2 = timeit("pool.run_stealing 1024 tasks (empty)", 500, || {
+        pool.run_stealing(1024, 1, |_t, _r| {});
+        0
+    }) / 1024.0;
+    out = out.field("pool_steal_task_ns", d2);
+    // Pipelined submit/wait with caller-side work in between — the
+    // serial-commit overlap pattern of the scheduler.
+    let overlap_sink = std::sync::atomic::AtomicU64::new(0);
+    let d3 = timeit("pool.submit + caller work + wait", 1000, || {
+        // SAFETY: the ticket is waited on before the closure returns.
+        let t = unsafe {
+            pool.submit_stealing(64, 8, |_t, r| {
+                for i in r {
+                    overlap_sink.fetch_add(i as u64, std::sync::atomic::Ordering::Relaxed);
+                }
+            })
+        };
+        let mut acc = 0u64;
+        for i in 0..512u64 {
+            acc = acc.wrapping_add(i * i);
+        }
+        t.wait();
+        acc
+    });
+    out = out.field("pool_pipelined_dispatch_ns", d3);
+    let ps = pool.stats();
+    println!(
+        "{:<42} {:>12} gens, {} tasks, {} steals",
+        "pool cumulative", ps.generations, ps.tasks, ps.steals
+    );
 
     // --- F1 construction ----------------------------------------------------
     let t0 = Instant::now();

@@ -128,6 +128,13 @@ pub struct RunConfig {
     pub max_dim: usize,
     pub threads: usize,
     pub batch_size: usize,
+    /// Pipelined scheduler: adapt the batch size to the observed
+    /// serial/push time ratio (correctness is batch-size independent).
+    pub adaptive_batch: bool,
+    pub batch_min: usize,
+    pub batch_max: usize,
+    /// Columns per work-stealing task; 0 = auto.
+    pub steal_grain: usize,
     pub dense_lookup: bool,
     pub algorithm: String,
     pub artifacts: PathBuf,
@@ -151,6 +158,10 @@ impl Default for RunConfig {
             max_dim: 2,
             threads: 4,
             batch_size: 100,
+            adaptive_batch: true,
+            batch_min: 16,
+            batch_max: 8192,
+            steal_grain: 0,
             dense_lookup: false,
             algorithm: "fast-column".into(),
             artifacts: PathBuf::from("artifacts"),
@@ -218,6 +229,19 @@ impl RunConfig {
                             "batch_size" => {
                                 cfg.batch_size = v.as_usize().context("engine.batch_size")?
                             }
+                            "adaptive_batch" => {
+                                cfg.adaptive_batch =
+                                    v.as_bool().context("engine.adaptive_batch")?
+                            }
+                            "batch_min" => {
+                                cfg.batch_min = v.as_usize().context("engine.batch_min")?
+                            }
+                            "batch_max" => {
+                                cfg.batch_max = v.as_usize().context("engine.batch_max")?
+                            }
+                            "steal_grain" => {
+                                cfg.steal_grain = v.as_usize().context("engine.steal_grain")?
+                            }
                             "dense_lookup" => {
                                 cfg.dense_lookup = v.as_bool().context("engine.dense_lookup")?
                             }
@@ -274,6 +298,9 @@ impl RunConfig {
         }
         if self.threads == 0 || self.batch_size == 0 {
             bail!("threads and batch_size must be >= 1");
+        }
+        if self.batch_min == 0 || self.batch_min > self.batch_max {
+            bail!("batch_min must be >= 1 and <= batch_max");
         }
         Ok(())
     }
@@ -342,6 +369,20 @@ diagram_csv = "out/pd.csv"
         assert!(RunConfig::from_str("[engine]\nmax_dim = 3\n").is_err());
         assert!(RunConfig::from_str("[engine]\nalgorithm = \"quantum\"\n").is_err());
         assert!(RunConfig::from_str("[engine]\nthreads = 0\n").is_err());
+        assert!(RunConfig::from_str("[engine]\nbatch_min = 0\n").is_err());
+        assert!(RunConfig::from_str("[engine]\nbatch_min = 64\nbatch_max = 8\n").is_err());
+    }
+
+    #[test]
+    fn scheduler_knobs_parse() {
+        let cfg = RunConfig::from_str(
+            "[engine]\nadaptive_batch = false\nbatch_min = 4\nbatch_max = 256\nsteal_grain = 8\n",
+        )
+        .unwrap();
+        assert!(!cfg.adaptive_batch);
+        assert_eq!(cfg.batch_min, 4);
+        assert_eq!(cfg.batch_max, 256);
+        assert_eq!(cfg.steal_grain, 8);
     }
 
     #[test]

@@ -119,6 +119,10 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
         max_dim: cfg.max_dim,
         threads: cfg.threads,
         batch_size: cfg.batch_size,
+        adaptive_batch: cfg.adaptive_batch,
+        batch_min: cfg.batch_min,
+        batch_max: cfg.batch_max,
+        steal_grain: cfg.steal_grain,
         dense_lookup: cfg.dense_lookup,
         algorithm: match cfg.algorithm.as_str() {
             "implicit-row" => Algorithm::ImplicitRow,
@@ -228,6 +232,13 @@ pub fn summary_json(cfg: &RunConfig, r: &RunReport) -> Json {
                 .field("pairs", r.result.stats.h2.pairs)
                 .field("trivial", r.result.stats.h2.trivial_pairs)
                 .field("essential", r.result.stats.h2.essential),
+        )
+        .field(
+            "scheduler",
+            Json::obj()
+                .field("adaptive_batch", cfg.adaptive_batch)
+                .field("h1", r.result.stats.h1_sched.to_json())
+                .field("h2", r.result.stats.h2_sched.to_json()),
         )
 }
 

@@ -22,7 +22,7 @@ use crate::geometry::MetricData;
 use crate::reduction::pool::ThreadPool;
 use crate::reduction::{
     fast_column, implicit_row, serial_parallel, EdgeColumns, ReduceResult, ReduceStats,
-    TriangleColumns,
+    SchedConfig, SchedStats, TriangleColumns,
 };
 use crate::util::timer::PhaseTimer;
 
@@ -44,8 +44,17 @@ pub struct EngineOptions {
     pub max_dim: usize,
     /// Worker threads for the serial–parallel scheduler; 1 = sequential.
     pub threads: usize,
-    /// Serial–parallel batch size (paper default 100 for H1*/H2*).
+    /// Serial–parallel batch size (paper default 100 for H1*/H2*); the
+    /// starting point when `adaptive_batch` is on.
     pub batch_size: usize,
+    /// Adapt the batch size to the observed serial/push time ratio
+    /// (pipelined scheduler; output is identical either way).
+    pub adaptive_batch: bool,
+    /// Batch-size bounds for the adaptation.
+    pub batch_min: usize,
+    pub batch_max: usize,
+    /// Columns per work-stealing task; 0 = auto.
+    pub steal_grain: usize,
     /// DoryNS: O(n²) dense edge-order lookup instead of binary search.
     pub dense_lookup: bool,
     pub algorithm: Algorithm,
@@ -57,8 +66,25 @@ impl Default for EngineOptions {
             max_dim: 2,
             threads: 1,
             batch_size: 100,
+            adaptive_batch: true,
+            batch_min: 16,
+            batch_max: 8192,
+            steal_grain: 0,
             dense_lookup: false,
             algorithm: Algorithm::FastColumn,
+        }
+    }
+}
+
+impl EngineOptions {
+    /// The scheduler slice of the options.
+    pub fn sched_config(&self) -> SchedConfig {
+        SchedConfig {
+            batch_size: self.batch_size,
+            adaptive: self.adaptive_batch,
+            batch_min: self.batch_min,
+            batch_max: self.batch_max,
+            steal_grain: self.steal_grain,
         }
     }
 }
@@ -74,6 +100,18 @@ pub struct EngineStats {
     pub h1_cleared: usize,
     pub h2_cleared: usize,
     pub base_memory_bytes: usize,
+    /// Pipelined-scheduler reports (all-zero for sequential runs).
+    pub h1_sched: SchedStats,
+    pub h2_sched: SchedStats,
+}
+
+impl EngineStats {
+    /// Combined scheduler report across the reduction phases.
+    pub fn sched_total(&self) -> SchedStats {
+        let mut s = self.h1_sched;
+        s.merge(&self.h2_sched);
+        s
+    }
 }
 
 /// Full result: diagram + structural pairs + stats + phase timings.
@@ -156,6 +194,7 @@ fn compute_ph_from_filtration_timed(
         // H1 keeps zero-persistence pairs: their death triangles feed the
         // dim-2 clearing set.
         let res = run_reduction(&space, &cols, opts, &pool, true, f);
+        stats.h1_sched = res.sched;
         for &(col, key) in &res.pairs {
             let e = col as u32;
             diagram.push(1, f.values[e as usize], f.key_value(key));
@@ -196,6 +235,7 @@ fn compute_ph_from_filtration_timed(
             }
             stats.h2_cleared = cleared;
             let res2 = run_reduction(&tspace, &cols, opts, &pool, false, f);
+            stats.h2_sched = res2.sched;
             for &(col, key) in &res2.pairs {
                 let t = Key::unpack(col);
                 diagram.push(2, f.key_value(t), f.key_value(key));
@@ -248,7 +288,7 @@ fn run_reduction<S: crate::reduction::ColumnSpace>(
         (Algorithm::FastColumn, Some(pool)) => serial_parallel::reduce_all(
             space,
             cols,
-            opts.batch_size,
+            &opts.sched_config(),
             pool,
             keep_zero_pairs,
             value_of,
@@ -344,18 +384,22 @@ mod tests {
         for algorithm in [Algorithm::FastColumn, Algorithm::ImplicitRow] {
             for threads in [1usize, 4] {
                 for dense in [false, true] {
-                    for batch in [1usize, 7, 100] {
+                    for (batch, adaptive) in [(1usize, false), (7, false), (100, false), (8, true)]
+                    {
                         let opts = EngineOptions {
                             max_dim: 2,
                             threads,
                             batch_size: batch,
+                            adaptive_batch: adaptive,
+                            batch_min: 2,
                             dense_lookup: dense,
                             algorithm,
+                            ..Default::default()
                         };
                         let got = compute_ph_from_filtration(&f, &opts).diagram;
                         assert!(
                             got.multiset_eq(&reference, 1e-9),
-                            "algo={algorithm:?} threads={threads} dense={dense} batch={batch}:\n{}",
+                            "algo={algorithm:?} threads={threads} dense={dense} batch={batch} adaptive={adaptive}:\n{}",
                             got.diff_summary(&reference)
                         );
                     }

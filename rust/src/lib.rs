@@ -6,11 +6,47 @@
 //!
 //! * **Layer 3 (this crate)** — the paper's contribution: paired-indexing,
 //!   on-the-fly coboundary cursors, the fast implicit column reduction,
-//!   trivial-pair shortcuts, clearing, and the serial–parallel batch
-//!   scheduler over a persistent thread pool.
+//!   trivial-pair shortcuts, clearing, and a **pipelined work-stealing
+//!   serial–parallel scheduler** over a persistent thread pool.
 //! * **Layer 2/1 (`python/compile`)** — JAX + Pallas kernels (pairwise
 //!   distances, persistence images) AOT-lowered to HLO text, executed from
-//!   Rust through PJRT (`runtime`). Python never runs on the request path.
+//!   Rust through PJRT (`runtime`, behind the `pjrt` cargo feature; the
+//!   default build ships a graceful native-fallback stub). Python never
+//!   runs on the request path.
+//!
+//! ## The pipelined scheduler
+//!
+//! The hot path — reduction of the coboundary columns — runs on
+//! [`reduction::serial_parallel`], which rebuilt the paper's §4.4
+//! batched scheduler around two ideas:
+//!
+//! * **work stealing** ([`reduction::pool::ThreadPool`]): a batch is
+//!   split into small tasks dealt into per-worker deques; idle workers
+//!   steal from the back of a victim's deque, so one slow column no
+//!   longer stalls the pool the way fixed chunks did;
+//! * **phase pipelining**: while the scheduler thread serially commits
+//!   batch *k* (into a delta overlaid on a frozen base state), the pool
+//!   is already pushing batch *k+1* against that base. The committed
+//!   pivot maps are insert-only, so stale reads either return final
+//!   entries or miss — and a miss just means the serial phase resumes
+//!   that column against the full state. Output is therefore
+//!   **bit-identical to the sequential reduction** for every batch
+//!   size, thread count and steal schedule.
+//!
+//! Config knobs (via [`homology::EngineOptions`], the TOML config, or
+//! CLI flags): `batch_size` (initial batch), `adaptive_batch` (walk the
+//! batch size toward the serial≈push equilibrium; on by default),
+//! `batch_min`/`batch_max` (adaptation bounds), `steal_grain` (columns
+//! per steal task; 0 = auto). `EngineStats::{h1_sched, h2_sched}`
+//! report batches, steals, worker utilization, serial/push overlap and
+//! residual barrier idle per phase.
+//!
+//! The exactness guarantee is enforced by a differential test harness
+//! (`rust/tests/differential.rs`: scheduler vs the explicit
+//! boundary-matrix oracle across batch-size × thread-count sweeps, plus
+//! structural pair-level comparison against the sequential engine) and
+//! golden persistence-diagram fixtures with bit-exact expected values
+//! (`rust/tests/golden_pd.rs`).
 //!
 //! Entry points: [`homology::engine`] for the full pipeline,
 //! [`coordinator`] for config-driven runs, `examples/` for walkthroughs.

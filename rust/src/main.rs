@@ -63,6 +63,10 @@ run flags:
   --dim <0|1|2>             max homology dimension  [2]
   --threads <int>           worker threads          [4]
   --batch <int>             serial-parallel batch   [100]
+  --fixed-batch             disable adaptive batch sizing
+  --batch-min <int>         adaptive batch lower bound  [16]
+  --batch-max <int>         adaptive batch upper bound  [8192]
+  --steal-grain <int>       columns per steal task (0 = auto)
   --ns                      DoryNS dense edge-order lookup
   --algorithm <a>           fast-column|implicit-row
   --no-pjrt                 skip the PJRT/Pallas distance kernel
@@ -119,6 +123,10 @@ fn cmd_run(args: &[String]) -> Result<()> {
             "--dim" => cfg.max_dim = val()?.parse()?,
             "--threads" => cfg.threads = val()?.parse()?,
             "--batch" => cfg.batch_size = val()?.parse()?,
+            "--fixed-batch" => cfg.adaptive_batch = false,
+            "--batch-min" => cfg.batch_min = val()?.parse()?,
+            "--batch-max" => cfg.batch_max = val()?.parse()?,
+            "--steal-grain" => cfg.steal_grain = val()?.parse()?,
             "--ns" => cfg.dense_lookup = true,
             "--algorithm" => cfg.algorithm = val()?.clone(),
             "--no-pjrt" => cfg.use_pjrt = false,
@@ -168,6 +176,12 @@ fn cmd_run(args: &[String]) -> Result<()> {
         memtrack::fmt_bytes(memtrack::max_rss_bytes()),
     );
     println!("phases: {}", report.result.timings.summary());
+    if cfg.threads > 1 {
+        let s = report.result.stats.sched_total();
+        if s.batches > 0 {
+            println!("scheduler: {}", s.summary());
+        }
+    }
     for dim in 0..=cfg.max_dim {
         println!(
             "H{dim}: {} finite pairs, {} essential",

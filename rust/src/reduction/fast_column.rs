@@ -11,6 +11,18 @@
 //! Two cursors of the same column at the same simplex are bit-identical
 //! (canonical states), represent identical coboundary suffixes, and cancel
 //! in pairs — the paper's flag-next elimination.
+//!
+//! The committed reduction state is split so the pipelined scheduler can
+//! overlap phases safely:
+//!
+//! * [`PivotState`] — the p⊥/V⊥ maps alone. Entries are immutable once
+//!   inserted, which is what makes stale reads sound (see
+//!   [`super::serial_parallel`]).
+//! * [`PivotView`] — read-only lookup trait. The sequential engine reads
+//!   a single [`PivotState`]; the pipelined scheduler reads an
+//!   [`Overlay`] of a frozen base plus the in-progress batch delta.
+//! * [`GlobalState`] — [`PivotState`] plus the result accumulator, the
+//!   package the sequential engines carry around.
 
 use std::cmp::Reverse;
 use std::collections::hash_map::Entry;
@@ -209,8 +221,7 @@ impl<C: Copy> BucketTable<C> {
         out
     }
 
-    /// Drain every cursor (used when merging batch columns in the
-    /// serial–parallel scheduler).
+    /// Drain every cursor (used by tests and table-merging call sites).
     pub fn drain_cursors(&mut self) -> Vec<C> {
         let mut out = Vec::with_capacity(self.len);
         while let Some(Reverse((_, _, slot))) = self.active.pop() {
@@ -228,14 +239,99 @@ impl<C: Copy> BucketTable<C> {
     }
 }
 
-/// Committed global reduction state for one dimension (p⊥, V⊥, pairs).
-pub struct GlobalState {
+impl<C: Copy> Default for BucketTable<C> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// The committed pivot maps of one dimension's reduction: p⊥ and V⊥.
+///
+/// Both maps are **insert-only** during a reduction (an entry, once
+/// written, never changes), which is the invariant that lets the
+/// pipelined scheduler read a stale snapshot: a stale miss only delays a
+/// reduction step, a stale hit returns exactly the final value.
+#[derive(Default)]
+pub struct PivotState {
     /// Pivot key (packed) -> owning column. Trivial pivots are never here.
     pub pivot_owner: FxHashMap<u64, u64>,
     /// Column -> reduction ops (other columns summed into it). Columns
     /// with no ops are absent. Boxed slices: exact-size allocations —
     /// V⊥ dominates PH-memory (paper §4.3.1), capacity slack matters.
     pub ops: FxHashMap<u64, Box<[u64]>>,
+}
+
+impl PivotState {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.pivot_owner.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pivot_owner.is_empty()
+    }
+
+    /// Move every entry of `delta` into `self` (the batch-boundary merge
+    /// of the pipelined scheduler). The pivot sets are disjoint — each
+    /// pivot is claimed exactly once — so plain extension is exact.
+    pub fn merge_from(&mut self, delta: &mut PivotState) {
+        self.pivot_owner.extend(delta.pivot_owner.drain());
+        self.ops.extend(delta.ops.drain());
+    }
+}
+
+/// Read-only view of committed pivots, used by the reduction loops.
+pub trait PivotView: Sync {
+    fn owner_of(&self, packed: u64) -> Option<u64>;
+    fn ops_of(&self, col: u64) -> Option<&[u64]>;
+
+    #[inline]
+    fn is_claimed(&self, packed: u64) -> bool {
+        self.owner_of(packed).is_some()
+    }
+}
+
+impl PivotView for PivotState {
+    #[inline]
+    fn owner_of(&self, packed: u64) -> Option<u64> {
+        self.pivot_owner.get(&packed).copied()
+    }
+
+    #[inline]
+    fn ops_of(&self, col: u64) -> Option<&[u64]> {
+        self.ops.get(&col).map(|b| &b[..])
+    }
+}
+
+/// Frozen base + current-batch delta, the serial-phase view of the
+/// pipelined scheduler. The two pivot sets are disjoint, so lookup order
+/// is a performance choice only (delta first: recent collisions cluster).
+pub struct Overlay<'a> {
+    pub committed: &'a PivotState,
+    pub delta: &'a PivotState,
+}
+
+impl PivotView for Overlay<'_> {
+    #[inline]
+    fn owner_of(&self, packed: u64) -> Option<u64> {
+        self.delta
+            .owner_of(packed)
+            .or_else(|| self.committed.owner_of(packed))
+    }
+
+    #[inline]
+    fn ops_of(&self, col: u64) -> Option<&[u64]> {
+        self.delta.ops_of(col).or_else(|| self.committed.ops_of(col))
+    }
+}
+
+/// Committed global reduction state for one dimension (p⊥, V⊥, pairs) —
+/// the bundle the sequential engines thread through their loop.
+pub struct GlobalState {
+    pub pivots: PivotState,
     pub result: ReduceResult,
     /// Drop zero-persistence pairs from storage (H2*: they are legion and
     /// never consulted again; H1* keeps them for clearing).
@@ -245,8 +341,7 @@ pub struct GlobalState {
 impl GlobalState {
     pub fn new(keep_zero_pairs: bool) -> Self {
         Self {
-            pivot_owner: FxHashMap::default(),
-            ops: FxHashMap::default(),
+            pivots: PivotState::new(),
             result: ReduceResult::default(),
             keep_zero_pairs,
         }
@@ -267,12 +362,12 @@ pub enum ColumnOutcome<C: Copy> {
     },
 }
 
-/// Reduce column `col` against the committed state only (no claim).
+/// Reduce column `col` against the committed view only (no claim).
 /// This is the parallel-phase body; with immediate commit it is also the
 /// whole sequential algorithm.
-pub fn reduce_against<S: ColumnSpace>(
+pub fn reduce_against<S: ColumnSpace, V: PivotView>(
     space: &S,
-    state: &GlobalState,
+    view: &V,
     col: u64,
     stats: &mut ReduceStats,
 ) -> ColumnOutcome<S::Cursor> {
@@ -293,13 +388,17 @@ pub fn reduce_against<S: ColumnSpace>(
     if !low0.is_none() {
         table.insert(space, c0);
     }
-    resume_reduce(space, state, col, table, stats)
+    resume_reduce(space, view, col, table, stats)
 }
 
-/// Continue reducing an existing table against the committed state.
-pub fn resume_reduce<S: ColumnSpace>(
+/// Continue reducing an existing table against the committed view.
+///
+/// `find_low` is idempotent on a stopped table, so a column stopped
+/// against one view may be resumed against a later (larger) view — the
+/// pipelined scheduler relies on exactly this.
+pub fn resume_reduce<S: ColumnSpace, V: PivotView>(
     space: &S,
-    state: &GlobalState,
+    view: &V,
     col: u64,
     mut table: BucketTable<S::Cursor>,
     stats: &mut ReduceStats,
@@ -312,7 +411,7 @@ pub fn resume_reduce<S: ColumnSpace>(
         // Committed-pivot lookup first: a hash probe is far cheaper than
         // the trivial-pair probe (FindSmallesth for H2*), and the two
         // pivot sets are disjoint (trivial pivots never enter p⊥).
-        if let Some(&owner) = state.pivot_owner.get(&low.pack()) {
+        if let Some(owner) = view.owner_of(low.pack()) {
             // Note: δ(owner) alone need not contain `low` — the owner's
             // ops contribute it. Only the summed suffix has low == `low`.
             let cur = space.geq(owner, low);
@@ -320,7 +419,7 @@ pub fn resume_reduce<S: ColumnSpace>(
                 table.insert(space, cur);
             }
             stats.appends += 1;
-            if let Some(ops) = state.ops.get(&owner) {
+            if let Some(ops) = view.ops_of(owner) {
                 for &op in ops {
                     let c = space.geq(op, low);
                     if !space.key(&c).is_none() {
@@ -356,11 +455,15 @@ pub fn resume_reduce<S: ColumnSpace>(
 }
 
 /// Commit a claimed column: record the pair, pivot ownership and ops.
-/// `self_trivial` comes from the Claim (no re-probe).
+/// `self_trivial` comes from the Claim (no re-probe). `pivots` is the
+/// map the commit lands in — the live state for the sequential engines,
+/// the batch delta for the pipelined scheduler.
 #[allow(clippy::too_many_arguments)]
 pub fn commit_claim<S: ColumnSpace>(
     space: &S,
-    state: &mut GlobalState,
+    pivots: &mut PivotState,
+    result: &mut ReduceResult,
+    keep_zero_pairs: bool,
     col: u64,
     low: Key,
     self_trivial: bool,
@@ -370,18 +473,18 @@ pub fn commit_claim<S: ColumnSpace>(
 ) {
     if self_trivial {
         // Trivial pairs: zero persistence, no p⊥/V⊥ entry (paper §4.3.5).
-        state.result.stats.trivial_pairs += 1;
+        result.stats.trivial_pairs += 1;
         return;
     }
-    state.pivot_owner.insert(low.pack(), col);
+    pivots.pivot_owner.insert(low.pack(), col);
     let mut ops = table.odd_parity_cols(space);
     ops.retain(|&c| c != col);
     if !ops.is_empty() {
-        state.ops.insert(col, ops.into_boxed_slice());
+        pivots.ops.insert(col, ops.into_boxed_slice());
     }
-    state.result.stats.pairs += 1;
-    if state.keep_zero_pairs || col_value != low_value {
-        state.result.pairs.push((col, low));
+    result.stats.pairs += 1;
+    if keep_zero_pairs || col_value != low_value {
+        result.pairs.push((col, low));
     }
 }
 
@@ -398,7 +501,7 @@ pub fn reduce_all<S: ColumnSpace>(
     let mut stats = ReduceStats::default();
     for col in columns {
         stats.columns += 1;
-        match reduce_against(space, &state, col, &mut stats) {
+        match reduce_against(space, &state.pivots, col, &mut stats) {
             ColumnOutcome::Zero => {
                 state.result.stats.zero_columns += 1;
                 state.result.stats.essential += 1;
@@ -411,7 +514,9 @@ pub fn reduce_all<S: ColumnSpace>(
             } => {
                 commit_claim(
                     space,
-                    &mut state,
+                    &mut state.pivots,
+                    &mut state.result,
+                    keep_zero_pairs,
                     col,
                     low,
                     self_trivial,
@@ -520,10 +625,7 @@ mod tests {
                         break;
                     }
                     got.push(low);
-                    // Cancel δ* by inserting a matching singleton cursor of
-                    // a third "phantom" edge? Instead advance survivors:
-                    // simulate by inserting the same low from both sides is
-                    // complex; simply advance every cursor at low.
+                    // Advance every cursor sitting at `low`.
                     let drained = t.drain_cursors();
                     for mut c in drained {
                         if space.key(&c) == low {
@@ -539,5 +641,31 @@ mod tests {
             }
         }
         assert!(checked > 10);
+    }
+
+    #[test]
+    fn overlay_prefers_no_side_and_misses_nowhere() {
+        // Disjoint maps: every entry of either side is visible, none is
+        // shadowed, and misses stay misses.
+        let mut base = PivotState::new();
+        base.pivot_owner.insert(1, 10);
+        base.ops.insert(10, vec![3, 4].into_boxed_slice());
+        let mut delta = PivotState::new();
+        delta.pivot_owner.insert(2, 20);
+        let view = Overlay {
+            committed: &base,
+            delta: &delta,
+        };
+        assert_eq!(view.owner_of(1), Some(10));
+        assert_eq!(view.owner_of(2), Some(20));
+        assert_eq!(view.owner_of(3), None);
+        assert_eq!(view.ops_of(10), Some(&[3u64, 4][..]));
+        assert_eq!(view.ops_of(20), None);
+        assert!(view.is_claimed(1) && view.is_claimed(2) && !view.is_claimed(99));
+        // Merge empties the delta and lands everything in the base.
+        base.merge_from(&mut delta);
+        assert!(delta.is_empty());
+        assert_eq!(base.len(), 2);
+        assert_eq!(base.owner_of(2), Some(20));
     }
 }

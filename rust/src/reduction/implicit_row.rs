@@ -17,6 +17,12 @@ pub struct RowTable<C: Copy> {
     pub cursors: Vec<C>,
 }
 
+impl<C: Copy> Default for RowTable<C> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 impl<C: Copy> RowTable<C> {
     pub fn new() -> Self {
         Self {
@@ -110,10 +116,10 @@ pub fn reduce_all<S: ColumnSpace>(
             }
             // Hash probe before the (expensive) trivial probe — the two
             // pivot sets are disjoint.
-            if let Some(&owner) = state.pivot_owner.get(&low.pack()) {
+            if let Some(&owner) = state.pivots.pivot_owner.get(&low.pack()) {
                 table.insert(space, space.geq(owner, low));
                 stats.appends += 1;
-                if let Some(ops) = state.ops.get(&owner) {
+                if let Some(ops) = state.pivots.ops.get(&owner) {
                     for &op in ops {
                         table.insert(space, space.geq(op, low));
                         stats.appends += 1;
@@ -141,11 +147,11 @@ pub fn reduce_all<S: ColumnSpace>(
                 if self_trivial {
                     state.result.stats.trivial_pairs += 1;
                 } else {
-                    state.pivot_owner.insert(low.pack(), col);
+                    state.pivots.pivot_owner.insert(low.pack(), col);
                     let mut ops = table.odd_parity_cols(space);
                     ops.retain(|&c| c != col);
                     if !ops.is_empty() {
-                        state.ops.insert(col, ops.into_boxed_slice());
+                        state.pivots.ops.insert(col, ops.into_boxed_slice());
                     }
                     state.result.stats.pairs += 1;
                     if keep_zero_pairs || value_of(col) != key_value(low) {

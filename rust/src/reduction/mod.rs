@@ -12,14 +12,17 @@
 //!   bucket ordered (§4.3.4) — the paper's headline algorithm;
 //! * [`explicit`]: textbook boundary-matrix reduction (App. A), the
 //!   correctness oracle;
-//! * [`serial_parallel`]: batches either implicit engine over the
-//!   persistent thread pool (§4.4).
+//! * [`serial_parallel`]: the pipelined work-stealing batch scheduler
+//!   over the persistent [`pool::ThreadPool`] (§4.4, rebuilt — batch
+//!   *k*'s serial commit overlaps batch *k+1*'s parallel push).
 
 pub mod explicit;
 pub mod fast_column;
 pub mod implicit_row;
 pub mod pool;
 pub mod serial_parallel;
+
+pub use serial_parallel::{SchedConfig, SchedStats};
 
 use crate::coboundary::{TetCursor, TriCursor};
 use crate::filtration::{EdgeFiltration, Key, Neighborhoods};
@@ -245,4 +248,6 @@ pub struct ReduceResult {
     /// Columns whose coboundary reduced to zero — essential classes.
     pub essential: Vec<u64>,
     pub stats: ReduceStats,
+    /// Scheduler report (all-zero for the sequential engines).
+    pub sched: SchedStats,
 }

@@ -1,31 +1,92 @@
-//! Persistent worker thread pool (paper §4.4).
+//! Persistent work-stealing thread pool (paper §4.4, rebuilt).
 //!
-//! "To reduce the overhead of creating and destroying threads, we create
-//! threads before the computation of PH. The jobs are allocated in fixed
-//! chunks to these threads and the threads are woken up when they are
-//! required" — this module is exactly that: `threads` workers parked on a
-//! condvar, a generation counter to publish jobs, and a scoped-pointer
-//! trick so jobs may borrow the caller's stack (the caller blocks until
-//! the generation completes, so the borrow is sound).
+//! The paper's pool ("threads are created before the computation of PH
+//! and woken up when they are required") handed out *fixed* chunks
+//! through a wake-all condvar: every worker got one contiguous slice and
+//! the caller blocked until the slowest worker finished — one straggler
+//! column idled the whole pool. This rebuild keeps the persistent
+//! workers and the borrow-the-caller's-stack job model, but replaces the
+//! fixed chunks with **per-worker deques and work stealing**:
+//!
+//! * a generation splits `0..len` into `grain`-sized tasks dealt
+//!   round-robin into per-worker deques;
+//! * a worker pops its own deque from the *front* and, when empty,
+//!   steals from the *back* of a victim's deque (classic Chase–Lev
+//!   discipline, here with plain mutexed deques — tasks are
+//!   column-granular, so queue ops are not the bottleneck);
+//! * tasks carry their generation tag, so a straggler from generation
+//!   `k` can never execute (or steal) generation `k+1` work;
+//! * completion is task-counted, not worker-counted: the caller's
+//!   [`Ticket`] resolves when the last *task* retires, no matter which
+//!   workers ran it.
+//!
+//! [`ThreadPool::submit_stealing`] returns without blocking, which is
+//! what lets the serial–parallel scheduler overlap batch *k*'s serial
+//! commit phase with batch *k+1*'s parallel push phase (see
+//! [`super::serial_parallel`]). The pool also keeps cumulative counters
+//! (tasks, steals, busy time, generation spans) that back the
+//! `EngineStats` scheduler report.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::collections::VecDeque;
+use std::ops::Range;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
-type Job = Arc<dyn Fn(usize) + Send + Sync>;
+type Job = Arc<dyn Fn(usize, Range<usize>) + Send + Sync>;
+
+/// Per-worker deque of `(generation, index range)` tasks.
+type TaskQueue = Mutex<VecDeque<(u64, Range<usize>)>>;
+
+/// Cumulative pool counters (monotone; snapshot before/after a section
+/// and subtract to get per-section numbers).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolStats {
+    /// Generations submitted.
+    pub generations: u64,
+    /// Tasks executed.
+    pub tasks: u64,
+    /// Tasks taken from another worker's deque.
+    pub steals: u64,
+    /// Total worker time spent inside task bodies.
+    pub busy_ns: u64,
+    /// Total wall time from submit to last-task-retired, per generation.
+    pub span_ns: u64,
+}
 
 struct Shared {
     state: Mutex<State>,
     work_cv: Condvar,
     done_cv: Condvar,
-    active: AtomicUsize,
+    /// Per-worker deques of `(generation, index range)` tasks.
+    queues: Vec<TaskQueue>,
+    /// Tasks of the in-flight generation not yet retired.
+    remaining: AtomicUsize,
+    /// A job body panicked (reported by the ticket's wait).
+    panicked: AtomicBool,
+    generations: AtomicU64,
+    tasks: AtomicU64,
+    steals: AtomicU64,
+    busy_ns: AtomicU64,
+    span_ns: AtomicU64,
 }
 
 struct State {
     generation: u64,
+    /// Highest generation whose last task has retired.
+    done_gen: u64,
     job: Option<Job>,
+    /// Workers still holding a clone of some generation's job closure.
+    /// A ticket resolves only when this hits zero, so captured borrows
+    /// are never released while any worker still holds the (lifetime-
+    /// erased) closure — true scoped-thread semantics, not just
+    /// last-task-retired.
+    live_jobs: usize,
+    /// Submit instant of the in-flight generation (for span accounting).
+    started: Option<Instant>,
+    in_flight: bool,
     shutdown: bool,
-    done: u64,
 }
 
 /// Fixed-size pool; workers live for the pool's lifetime.
@@ -35,19 +96,69 @@ pub struct ThreadPool {
     n: usize,
 }
 
+/// Handle for an in-flight generation. Dropping it waits too, so
+/// borrowed job data can never be released while workers still run.
+#[must_use = "wait on the ticket before the job's borrowed data goes out of scope"]
+pub struct Ticket<'p> {
+    pool: &'p ThreadPool,
+    gen: u64,
+    done: bool,
+}
+
+impl Ticket<'_> {
+    /// Block until every task of this generation has retired.
+    pub fn wait(mut self) {
+        self.wait_ref();
+    }
+
+    fn wait_ref(&mut self) {
+        if self.done {
+            return;
+        }
+        let shared = &self.pool.shared;
+        let mut st = shared.state.lock().unwrap();
+        while st.done_gen < self.gen || st.live_jobs > 0 {
+            st = shared.done_cv.wait(st).unwrap();
+        }
+        st.job = None;
+        st.in_flight = false;
+        drop(st);
+        self.done = true;
+        if shared.panicked.swap(false, Ordering::Relaxed) {
+            panic!("ThreadPool: a job panicked in a worker thread");
+        }
+    }
+}
+
+impl Drop for Ticket<'_> {
+    fn drop(&mut self) {
+        self.wait_ref();
+    }
+}
+
 impl ThreadPool {
     pub fn new(n: usize) -> Self {
         let n = n.max(1);
         let shared = Arc::new(Shared {
             state: Mutex::new(State {
                 generation: 0,
+                done_gen: 0,
                 job: None,
+                live_jobs: 0,
+                started: None,
+                in_flight: false,
                 shutdown: false,
-                done: 0,
             }),
             work_cv: Condvar::new(),
             done_cv: Condvar::new(),
-            active: AtomicUsize::new(0),
+            queues: (0..n).map(|_| Mutex::new(VecDeque::new())).collect(),
+            remaining: AtomicUsize::new(0),
+            panicked: AtomicBool::new(false),
+            generations: AtomicU64::new(0),
+            tasks: AtomicU64::new(0),
+            steals: AtomicU64::new(0),
+            busy_ns: AtomicU64::new(0),
+            span_ns: AtomicU64::new(0),
         });
         let workers = (0..n)
             .map(|tid| {
@@ -65,52 +176,151 @@ impl ThreadPool {
         self.n
     }
 
-    /// Run `job(tid)` on every worker; blocks until all return.
+    /// Snapshot of the cumulative counters.
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            generations: self.shared.generations.load(Ordering::Relaxed),
+            tasks: self.shared.tasks.load(Ordering::Relaxed),
+            steals: self.shared.steals.load(Ordering::Relaxed),
+            busy_ns: self.shared.busy_ns.load(Ordering::Relaxed),
+            span_ns: self.shared.span_ns.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Start a generation: split `0..len` into `grain`-sized tasks, deal
+    /// them round-robin into the worker deques, wake the pool and return
+    /// immediately. `f(tid, range)` runs once per task on whichever
+    /// worker pops (or steals) it. At most one generation may be in
+    /// flight per pool; the caller must resolve the [`Ticket`] before
+    /// submitting again (dropping it resolves it).
     ///
-    /// Safety of borrowing: the closure is type-erased behind an Arc with a
-    /// 'static bound obtained via transmute, but `run` does not return
-    /// until every worker has finished the generation, so borrowed data
-    /// outlives all uses.
-    pub fn run<'scope, F>(&self, job: F)
+    /// The returned ticket is tied to `'scope`, so the borrow checker
+    /// keeps everything the closure captures alive until the ticket is
+    /// waited on or dropped (both block until every task has retired —
+    /// the same discipline as a scoped thread).
+    ///
+    /// # Safety
+    ///
+    /// The closure is type-erased behind an `Arc` whose `'static` bound
+    /// is obtained via transmute. The lifetime tie above makes ordinary
+    /// drop-based control flow sound, but the caller must not leak the
+    /// ticket (`mem::forget`, `ManuallyDrop`, leaked `Rc` cycles, …):
+    /// a leaked ticket skips the drop-wait, after which captured borrows
+    /// may dangle while workers still execute. The safe wrappers
+    /// ([`Self::run`], [`Self::run_stealing`]) wait before returning and
+    /// are sound for any caller.
+    pub unsafe fn submit_stealing<'scope, F>(
+        &'scope self,
+        len: usize,
+        grain: usize,
+        f: F,
+    ) -> Ticket<'scope>
+    where
+        F: Fn(usize, Range<usize>) + Send + Sync + 'scope,
+    {
+        let arc: Arc<dyn Fn(usize, Range<usize>) + Send + Sync + 'scope> = Arc::new(f);
+        // Erase the lifetime (see safety note above).
+        let arc: Job = unsafe { std::mem::transmute(arc) };
+        let grain = grain.max(1);
+        let mut st = self.shared.state.lock().unwrap();
+        assert!(
+            !st.in_flight,
+            "ThreadPool: generation already in flight (wait on the previous Ticket first)"
+        );
+        st.generation += 1;
+        let gen = st.generation;
+        self.shared.generations.fetch_add(1, Ordering::Relaxed);
+        if len == 0 {
+            // Nothing to do: pre-resolve so wait() returns immediately.
+            st.done_gen = gen;
+            return Ticket {
+                pool: self,
+                gen,
+                done: true,
+            };
+        }
+        let n_tasks = len.div_ceil(grain);
+        // Publish the task count before any queue is filled: stragglers
+        // from the previous generation are fenced off by the generation
+        // tag on each task, and nothing of this generation can retire
+        // before the state lock (held throughout) is released.
+        self.shared.remaining.store(n_tasks, Ordering::Release);
+        let mut start = 0usize;
+        let mut w = 0usize;
+        while start < len {
+            let end = (start + grain).min(len);
+            self.shared.queues[w % self.n]
+                .lock()
+                .unwrap()
+                .push_back((gen, start..end));
+            start = end;
+            w += 1;
+        }
+        st.job = Some(arc);
+        st.in_flight = true;
+        st.started = Some(Instant::now());
+        self.shared.work_cv.notify_all();
+        drop(st);
+        Ticket {
+            pool: self,
+            gen,
+            done: false,
+        }
+    }
+
+    /// Blocking fan-out over `0..len` with work stealing.
+    pub fn run_stealing<'scope, F>(&self, len: usize, grain: usize, f: F)
+    where
+        F: Fn(usize, Range<usize>) + Send + Sync + 'scope,
+    {
+        // SAFETY: the ticket is waited on before this frame returns, so
+        // every capture of `f` outlives all worker uses.
+        unsafe { self.submit_stealing(len, grain, f) }.wait();
+    }
+
+    /// Run `f(i)` once per index `i in 0..threads()`; blocks until all
+    /// return. (Task-indexed: `i` is the task id, not the executing
+    /// worker — with stealing the two can differ.)
+    pub fn run<'scope, F>(&self, f: F)
     where
         F: Fn(usize) + Send + Sync + 'scope,
     {
-        let arc: Arc<dyn Fn(usize) + Send + Sync + 'scope> = Arc::new(job);
-        // Erase the lifetime (see safety note above).
-        let arc: Job = unsafe { std::mem::transmute(arc) };
-        let mut st = self.shared.state.lock().unwrap();
-        st.generation += 1;
-        st.done = 0;
-        st.job = Some(arc);
-        let gen = st.generation;
-        self.shared.work_cv.notify_all();
-        while st.done < self.n as u64 || st.generation != gen {
-            st = self.shared.done_cv.wait(st).unwrap();
-        }
-        st.job = None;
-    }
-
-    /// Split `0..len` into `threads()` contiguous chunks; `f(tid, range)`.
-    pub fn run_chunks<'scope, F>(&self, len: usize, f: F)
-    where
-        F: Fn(usize, std::ops::Range<usize>) + Send + Sync + 'scope,
-    {
-        let n = self.n;
-        let chunk = len.div_ceil(n.max(1)).max(1);
-        self.run(move |tid| {
-            let start = tid * chunk;
-            if start < len {
-                let end = (start + chunk).min(len);
-                f(tid, start..end);
+        self.run_stealing(self.n, 1, move |_tid, r| {
+            for i in r {
+                f(i);
             }
         });
     }
 }
 
+fn pop_own(shared: &Shared, tid: usize, gen: u64) -> Option<Range<usize>> {
+    let mut q = shared.queues[tid].lock().unwrap();
+    if q.front().is_some_and(|&(g, _)| g == gen) {
+        return q.pop_front().map(|(_, r)| r);
+    }
+    None
+}
+
+fn steal(shared: &Shared, tid: usize, gen: u64) -> Option<Range<usize>> {
+    let n = shared.queues.len();
+    for off in 1..n {
+        let victim = (tid + off) % n;
+        let mut q = shared.queues[victim].lock().unwrap();
+        if q.back().is_some_and(|&(g, _)| g == gen) {
+            let task = q.pop_back().map(|(_, r)| r);
+            drop(q);
+            shared.steals.fetch_add(1, Ordering::Relaxed);
+            return task;
+        }
+    }
+    None
+}
+
 fn worker_loop(tid: usize, shared: Arc<Shared>) {
     let mut last_gen = 0u64;
     loop {
-        let job = {
+        // Sleep until a new generation is published (or shutdown).
+        let (job, gen) = {
             let mut st = shared.state.lock().unwrap();
             loop {
                 if st.shutdown {
@@ -118,18 +328,57 @@ fn worker_loop(tid: usize, shared: Arc<Shared>) {
                 }
                 if st.generation != last_gen && st.job.is_some() {
                     last_gen = st.generation;
-                    break st.job.clone().unwrap();
+                    st.live_jobs += 1;
+                    break (st.job.clone().unwrap(), st.generation);
                 }
                 st = shared.work_cv.wait(st).unwrap();
             }
         };
-        shared.active.fetch_add(1, Ordering::SeqCst);
-        job(tid);
-        shared.active.fetch_sub(1, Ordering::SeqCst);
+        // Drain: own deque first, then steal. Tasks never re-enter a
+        // queue, so an empty sweep means this worker is done for the
+        // generation (others may still be executing their last task).
+        loop {
+            let Some(range) = pop_own(&shared, tid, gen).or_else(|| steal(&shared, tid, gen))
+            else {
+                break;
+            };
+            let t0 = Instant::now();
+            let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                job(tid, range);
+            }));
+            shared
+                .busy_ns
+                .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            shared.tasks.fetch_add(1, Ordering::Relaxed);
+            if ok.is_err() {
+                shared.panicked.store(true, Ordering::Relaxed);
+            }
+            if shared.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+                // Last task of the generation: stamp the span, publish
+                // completion, wake the ticket holder.
+                let mut st = shared.state.lock().unwrap();
+                if let Some(t) = st.started.take() {
+                    shared
+                        .span_ns
+                        .fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                }
+                st.done_gen = gen;
+                drop(st);
+                shared.done_cv.notify_all();
+            }
+        }
+        // Release the job clone *before* announcing it: the ticket only
+        // resolves once every worker has dropped its closure, so the
+        // caller's borrowed data can never be touched afterwards (not
+        // even by destructors of captured values).
+        drop(job);
         let mut st = shared.state.lock().unwrap();
-        st.done += 1;
-        shared.done_cv.notify_all();
+        st.live_jobs -= 1;
+        let release = st.live_jobs == 0;
         drop(st);
+        if release {
+            shared.done_cv.notify_all();
+        }
     }
 }
 
@@ -149,13 +398,14 @@ impl Drop for ThreadPool {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Pcg32;
     use std::sync::atomic::{AtomicU64, Ordering};
 
     #[test]
-    fn runs_on_all_workers() {
+    fn runs_one_task_per_index() {
         let pool = ThreadPool::new(4);
         let hits = AtomicU64::new(0);
-        pool.run(|_tid| {
+        pool.run(|_i| {
             hits.fetch_add(1, Ordering::SeqCst);
         });
         assert_eq!(hits.load(Ordering::SeqCst), 4);
@@ -166,19 +416,19 @@ mod tests {
         let pool = ThreadPool::new(3);
         let sum = AtomicU64::new(0);
         for _ in 0..50 {
-            pool.run(|tid| {
-                sum.fetch_add(tid as u64 + 1, Ordering::SeqCst);
+            pool.run(|i| {
+                sum.fetch_add(i as u64 + 1, Ordering::SeqCst);
             });
         }
         assert_eq!(sum.load(Ordering::SeqCst), 50 * (1 + 2 + 3));
     }
 
     #[test]
-    fn chunks_cover_range_exactly_once() {
+    fn coarse_chunks_cover_range_exactly_once() {
         let pool = ThreadPool::new(4);
-        let len = 1003;
+        let len = 1003usize;
         let marks: Vec<AtomicU64> = (0..len).map(|_| AtomicU64::new(0)).collect();
-        pool.run_chunks(len, |_tid, range| {
+        pool.run_stealing(len, len.div_ceil(4), |_tid, range| {
             for i in range {
                 marks[i].fetch_add(1, Ordering::SeqCst);
             }
@@ -187,11 +437,29 @@ mod tests {
     }
 
     #[test]
+    fn stealing_covers_range_exactly_once() {
+        let pool = ThreadPool::new(4);
+        for grain in [1usize, 3, 17, 1000] {
+            let len = 997;
+            let marks: Vec<AtomicU64> = (0..len).map(|_| AtomicU64::new(0)).collect();
+            pool.run_stealing(len, grain, |_tid, range| {
+                for i in range {
+                    marks[i].fetch_add(1, Ordering::SeqCst);
+                }
+            });
+            assert!(
+                marks.iter().all(|m| m.load(Ordering::SeqCst) == 1),
+                "grain={grain}"
+            );
+        }
+    }
+
+    #[test]
     fn borrows_stack_data() {
         let pool = ThreadPool::new(2);
         let data = vec![1u64, 2, 3, 4];
         let total = AtomicU64::new(0);
-        pool.run_chunks(data.len(), |_tid, r| {
+        pool.run_stealing(data.len(), 2, |_tid, r| {
             let s: u64 = data[r].iter().sum();
             total.fetch_add(s, Ordering::SeqCst);
         });
@@ -202,9 +470,153 @@ mod tests {
     fn single_thread_pool_works() {
         let pool = ThreadPool::new(1);
         let hits = AtomicU64::new(0);
-        pool.run_chunks(10, |_t, r| {
+        pool.run_stealing(10, 3, |_t, r| {
             hits.fetch_add(r.len() as u64, Ordering::SeqCst);
         });
         assert_eq!(hits.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn empty_generation_completes() {
+        let pool = ThreadPool::new(3);
+        pool.run_stealing(0, 1, |_t, _r| panic!("no tasks must run"));
+        // And again after a real generation (generation counter moves on).
+        let hits = AtomicU64::new(0);
+        pool.run_stealing(5, 2, |_t, r| {
+            hits.fetch_add(r.len() as u64, Ordering::SeqCst);
+        });
+        pool.run_stealing(0, 1, |_t, _r| panic!("no tasks must run"));
+        assert_eq!(hits.load(Ordering::SeqCst), 5);
+    }
+
+    #[test]
+    fn submit_overlaps_caller_work() {
+        // The pipelining contract: the caller keeps computing while the
+        // generation runs, then joins at the ticket.
+        let pool = ThreadPool::new(2);
+        let worker_sum = AtomicU64::new(0);
+        // SAFETY: the ticket is waited on below, before worker_sum dies.
+        let ticket = unsafe {
+            pool.submit_stealing(64, 4, |_t, r| {
+                for i in r {
+                    worker_sum.fetch_add(i as u64, Ordering::SeqCst);
+                }
+            })
+        };
+        // Caller-side "serial phase".
+        let mut serial_sum = 0u64;
+        for i in 0..64u64 {
+            serial_sum += i;
+        }
+        ticket.wait();
+        assert_eq!(worker_sum.load(Ordering::SeqCst), serial_sum);
+    }
+
+    #[test]
+    fn ticket_drop_waits_for_completion() {
+        let pool = ThreadPool::new(4);
+        let hits = AtomicU64::new(0);
+        {
+            // SAFETY: the ticket is dropped at the end of this block,
+            // which blocks until every task retired; `hits` outlives it.
+            let _ticket = unsafe {
+                pool.submit_stealing(256, 1, |_t, r| {
+                    for _ in r {
+                        hits.fetch_add(1, Ordering::SeqCst);
+                    }
+                })
+            };
+            // _ticket dropped here → must block until all 256 ran.
+        }
+        assert_eq!(hits.load(Ordering::SeqCst), 256);
+    }
+
+    #[test]
+    fn clean_shutdown_under_load() {
+        for round in 0..20 {
+            let pool = ThreadPool::new(4);
+            if round % 3 != 0 {
+                let spin = AtomicU64::new(0);
+                pool.run_stealing(500, 1, |_t, _r| {
+                    // A few hundred ns of real work per task.
+                    for _ in 0..50 {
+                        spin.fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+                assert_eq!(spin.load(Ordering::Relaxed), 500 * 50);
+            }
+            // Pool dropped immediately — workers must join cleanly.
+        }
+    }
+
+    #[test]
+    fn stealing_occurs_under_imbalance() {
+        // Deal slow tasks to worker 0's deque (round-robin puts task
+        // ids ≡ 0 (mod n) there); the other workers drain instantly and
+        // must steal from it.
+        let pool = ThreadPool::new(8);
+        let before = pool.stats();
+        let marks: Vec<AtomicU64> = (0..800).map(|_| AtomicU64::new(0)).collect();
+        let sink = AtomicU64::new(0);
+        pool.run_stealing(800, 1, |_t, r| {
+            for i in r {
+                if i % 8 == 0 {
+                    // ~tens of µs of spinning: worker 0 cannot drain its
+                    // 100 slow tasks before the 7 idle workers steal.
+                    for k in 0..20_000u64 {
+                        sink.fetch_add(k, Ordering::Relaxed);
+                    }
+                }
+                marks[i].fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        let after = pool.stats();
+        assert!(marks.iter().all(|m| m.load(Ordering::SeqCst) == 1));
+        assert!(
+            after.steals > before.steals,
+            "expected steals under an imbalanced load, got {}",
+            after.steals - before.steals
+        );
+        assert_eq!(after.tasks - before.tasks, 800);
+    }
+
+    #[test]
+    fn interleaving_stress_across_seeds() {
+        // Loom-style substitute: many seeded schedules of mixed-duration
+        // tasks; every index must be executed exactly once, every
+        // generation must terminate.
+        for seed in 0..40u64 {
+            let mut rng = Pcg32::new(seed);
+            let threads = 1 + rng.gen_range(8) as usize;
+            let len = 1 + rng.gen_range(300) as usize;
+            let grain = 1 + rng.gen_range(16) as usize;
+            let weights: Vec<u32> = (0..len).map(|_| rng.gen_range(400)).collect();
+            let pool = ThreadPool::new(threads);
+            let marks: Vec<AtomicU64> = (0..len).map(|_| AtomicU64::new(0)).collect();
+            let sink = AtomicU64::new(0);
+            pool.run_stealing(len, grain, |_t, r| {
+                for i in r {
+                    for k in 0..weights[i] {
+                        sink.fetch_add(k as u64, Ordering::Relaxed);
+                    }
+                    marks[i].fetch_add(1, Ordering::SeqCst);
+                }
+            });
+            assert!(
+                marks.iter().all(|m| m.load(Ordering::SeqCst) == 1),
+                "seed={seed} threads={threads} len={len} grain={grain}"
+            );
+        }
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let pool = ThreadPool::new(2);
+        let s0 = pool.stats();
+        pool.run_stealing(10, 2, |_t, _r| {});
+        pool.run_stealing(4, 4, |_t, _r| {});
+        let s1 = pool.stats();
+        assert_eq!(s1.generations - s0.generations, 2);
+        assert_eq!(s1.tasks - s0.tasks, 5 + 1);
     }
 }

@@ -1,30 +1,202 @@
-//! Serial–parallel batched reduction (paper §4.4, Figures 14–17).
+//! Pipelined serial–parallel batched reduction (paper §4.4, rebuilt).
 //!
-//! A batch of B columns is reduced in two phases:
+//! The paper reduces a batch of B columns in two phases:
 //!
-//! * **parallel** — every column is pushed as far as the *committed*
-//!   state allows (pivots owned by previously cleared columns, trivial
-//!   pairs, zero columns). Workers share the immutable committed state
-//!   and own their column's bucket table, so no synchronization is needed
-//!   beyond the phase barrier.
-//! * **serial** — columns are visited in filtration-processing order;
-//!   intra-batch pivot collisions are resolved by appending the earlier
-//!   column's state and resuming (which may re-enter committed-state
-//!   reductions). Each resolved column commits immediately, so the final
-//!   content of p⊥/V⊥ is *identical* to the sequential algorithm's.
+//! * **parallel push** — every column is reduced as far as the
+//!   *committed* state allows (pivots owned by previously cleared
+//!   columns, trivial pairs, zero columns);
+//! * **serial commit** — columns are visited in filtration-processing
+//!   order; a column whose stop-pivot is still unclaimed commits
+//!   directly, intra-batch collisions resume against the updated state.
+//!
+//! The seed implementation ran a hard barrier between the two phases of
+//! every batch: the scheduler thread idled while workers pushed, then
+//! the workers idled while the scheduler committed. This rebuild
+//! **pipelines** the phases: while the scheduler commits batch *k*, the
+//! work-stealing pool is already pushing batch *k+1* against a frozen
+//! snapshot of the committed state.
+//!
+//! ## Why the overlap is exact
+//!
+//! The committed pivot maps are insert-only: an entry, once written,
+//! never changes. A push that reads a *stale* snapshot (missing batch
+//! *k*'s commits) therefore either
+//!
+//! * hits an entry — and applies exactly the reduction step the
+//!   sequential algorithm would apply (the entry is final), or
+//! * misses — and merely *stops early* at a pivot the serial phase will
+//!   re-check against the full state, resuming if it is now claimed.
+//!
+//! Every op applied anywhere is thus a step of the sequential reduction,
+//! and the serial phase replays any remaining steps in filtration order
+//! against the exact sequential state — so pairs, essentials and V⊥ are
+//! **bit-identical** to the sequential algorithm, for every batch size,
+//! thread count and steal schedule. `rust/tests/differential.rs` pins
+//! this down against the explicit boundary-matrix oracle.
+//!
+//! Mechanically, batch *k*'s commits land in a [`PivotState`] *delta*
+//! while workers read only the frozen *base*; the serial phase reads an
+//! [`Overlay`] of both; at the batch boundary (after the push ticket
+//! resolves, so no reader is live) the delta is drained into the base.
+//!
+//! ## Dynamic batch sizing
 //!
 //! Batch-size trade-off per the paper: small batches waste parallelism,
-//! large batches shift work into the serial phase. Defaults: 100 for
-//! H1*/H2* (the paper's choice), overridable via [`crate::coordinator`].
+//! large batches shift work into the serial phase. With the pipeline the
+//! sweet spot is where the serial commit of batch *k* just hides under
+//! the parallel push of batch *k+1*, so when [`SchedConfig::adaptive`]
+//! is set the scheduler walks the batch size toward that point using the
+//! observed serial/push time ratio of the previous iteration (halving
+//! when serial-bound, doubling when push-bound, clamped to
+//! `[batch_min, batch_max]`). Output is identical for every trajectory,
+//! so adaptation is purely a performance knob.
 
+use std::ops::Range;
 use std::sync::Mutex;
+use std::time::Instant;
 
 use super::fast_column::{
-    commit_claim, reduce_against, resume_reduce, BucketTable, ColumnOutcome, GlobalState,
+    commit_claim, reduce_against, resume_reduce, BucketTable, ColumnOutcome, Overlay, PivotState,
+    PivotView,
 };
-use super::pool::ThreadPool;
+use super::pool::{ThreadPool, Ticket};
 use super::{ColumnSpace, ReduceResult, ReduceStats};
 use crate::filtration::Key;
+
+/// Scheduler configuration (plumbed from `EngineOptions` / the run
+/// config / the CLI).
+#[derive(Clone, Copy, Debug)]
+pub struct SchedConfig {
+    /// Initial (or, with `adaptive` off, fixed) batch size.
+    pub batch_size: usize,
+    /// Adapt the batch size to the observed serial/push time ratio.
+    pub adaptive: bool,
+    /// Smallest batch the adaptation may reach.
+    pub batch_min: usize,
+    /// Largest batch the adaptation may reach.
+    pub batch_max: usize,
+    /// Columns per work-stealing task; 0 = auto (batch / (threads · 8),
+    /// clamped to [1, 64]).
+    pub steal_grain: usize,
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        Self {
+            batch_size: 100,
+            adaptive: true,
+            batch_min: 16,
+            batch_max: 8192,
+            steal_grain: 0,
+        }
+    }
+}
+
+/// Per-reduction scheduler report (exposed via `ReduceResult::sched` and
+/// aggregated into `EngineStats`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SchedStats {
+    /// Pool worker count.
+    pub threads: usize,
+    pub batches: usize,
+    pub min_batch: usize,
+    pub max_batch: usize,
+    /// Work-stealing tasks dispatched / stolen across all batches.
+    pub tasks: u64,
+    pub steals: u64,
+    /// Columns committed straight off their pre-push (fast path).
+    pub prepushed_columns: usize,
+    /// Columns whose stop-pivot was claimed meanwhile → serial resume.
+    pub resumed_columns: usize,
+    /// Sum of worker time inside push tasks.
+    pub parallel_busy_ns: u64,
+    /// Scheduler time in serial commit phases.
+    pub serial_ns: u64,
+    /// Serial-commit time that ran while a push was in flight — work the
+    /// seed's hard barrier would have serialized.
+    pub overlap_ns: u64,
+    /// Scheduler time blocked waiting on a push after its commit phase
+    /// ended (the residual phase-barrier idle).
+    pub barrier_wait_ns: u64,
+    /// Wall time of the whole reduction.
+    pub wall_ns: u64,
+}
+
+impl SchedStats {
+    /// Worker-time utilization: busy time / (threads × wall).
+    pub fn utilization(&self) -> f64 {
+        if self.threads == 0 || self.wall_ns == 0 {
+            return 0.0;
+        }
+        self.parallel_busy_ns as f64 / (self.threads as f64 * self.wall_ns as f64)
+    }
+
+    /// Fraction of serial-commit time hidden under a parallel push.
+    pub fn overlap_fraction(&self) -> f64 {
+        if self.serial_ns == 0 {
+            return 0.0;
+        }
+        self.overlap_ns as f64 / self.serial_ns as f64
+    }
+
+    pub fn merge(&mut self, o: &SchedStats) {
+        self.threads = self.threads.max(o.threads);
+        self.batches += o.batches;
+        self.min_batch = if self.min_batch == 0 {
+            o.min_batch
+        } else if o.min_batch == 0 {
+            self.min_batch
+        } else {
+            self.min_batch.min(o.min_batch)
+        };
+        self.max_batch = self.max_batch.max(o.max_batch);
+        self.tasks += o.tasks;
+        self.steals += o.steals;
+        self.prepushed_columns += o.prepushed_columns;
+        self.resumed_columns += o.resumed_columns;
+        self.parallel_busy_ns += o.parallel_busy_ns;
+        self.serial_ns += o.serial_ns;
+        self.overlap_ns += o.overlap_ns;
+        self.barrier_wait_ns += o.barrier_wait_ns;
+        self.wall_ns += o.wall_ns;
+    }
+
+    /// Machine-readable form for run summaries and bench dumps.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        crate::util::json::Json::obj()
+            .field("threads", self.threads)
+            .field("batches", self.batches)
+            .field("min_batch", self.min_batch)
+            .field("max_batch", self.max_batch)
+            .field("tasks", self.tasks as i64)
+            .field("steals", self.steals as i64)
+            .field("prepushed_columns", self.prepushed_columns)
+            .field("resumed_columns", self.resumed_columns)
+            .field("parallel_busy_s", self.parallel_busy_ns as f64 * 1e-9)
+            .field("serial_s", self.serial_ns as f64 * 1e-9)
+            .field("overlap_s", self.overlap_ns as f64 * 1e-9)
+            .field("barrier_idle_s", self.barrier_wait_ns as f64 * 1e-9)
+            .field("wall_s", self.wall_ns as f64 * 1e-9)
+            .field("utilization", self.utilization())
+    }
+
+    /// One-line human summary for the CLI and benches.
+    pub fn summary(&self) -> String {
+        format!(
+            "batches {} (size {}..{}), steals {}/{} tasks, resumed {}, util {:.0}%, overlap {:.3}s ({:.0}% of serial), idle {:.3}s",
+            self.batches,
+            self.min_batch,
+            self.max_batch,
+            self.steals,
+            self.tasks,
+            self.resumed_columns,
+            self.utilization() * 100.0,
+            self.overlap_ns as f64 * 1e-9,
+            self.overlap_fraction() * 100.0,
+            self.barrier_wait_ns as f64 * 1e-9,
+        )
+    }
+}
 
 enum Pending<C: Copy> {
     Zero,
@@ -35,82 +207,186 @@ enum Pending<C: Copy> {
     },
 }
 
-/// Reduce `columns` (already in reverse filtration order, clearing applied
-/// by the caller) with batched serial–parallel scheduling.
+type Slot<C> = Mutex<(Option<Pending<C>>, ReduceStats)>;
+
+fn new_slots<C: Copy>(n: usize) -> Vec<Slot<C>> {
+    (0..n)
+        .map(|_| Mutex::new((None, ReduceStats::default())))
+        .collect()
+}
+
+/// Submit the parallel push of `columns[range]` against the frozen
+/// `base`, writing outcomes into `slots` (one per column of the range).
+///
+/// # Safety
+///
+/// The returned ticket must be waited on (or dropped) before any of the
+/// borrowed arguments is released or mutably borrowed — see
+/// [`ThreadPool::submit_stealing`]. `reduce_all` upholds this: every
+/// ticket is resolved before `base` is merged into or the slot vector
+/// is consumed.
+unsafe fn submit_push<'a, S: ColumnSpace>(
+    pool: &'a ThreadPool,
+    space: &'a S,
+    columns: &'a [u64],
+    range: Range<usize>,
+    base: &'a PivotState,
+    slots: &'a [Slot<S::Cursor>],
+    grain: usize,
+) -> Ticket<'a> {
+    let start = range.start;
+    pool.submit_stealing(range.len(), grain, move |_tid, r| {
+        for i in r {
+            let mut stats = ReduceStats::default();
+            let out = reduce_against(space, base, columns[start + i], &mut stats);
+            let p = match out {
+                ColumnOutcome::Zero => Pending::Zero,
+                ColumnOutcome::Claim {
+                    low,
+                    self_trivial,
+                    table,
+                } => Pending::Stopped {
+                    low,
+                    self_trivial,
+                    table,
+                },
+            };
+            *slots[i].lock().unwrap() = (Some(p), stats);
+        }
+    })
+}
+
+/// Reduce `columns` (already in reverse filtration order, clearing
+/// applied by the caller) with the pipelined work-stealing scheduler.
+/// Output is bit-identical to [`super::fast_column::reduce_all`].
 pub fn reduce_all<S: ColumnSpace>(
     space: &S,
     columns: &[u64],
-    batch_size: usize,
+    cfg: &SchedConfig,
     pool: &ThreadPool,
     keep_zero_pairs: bool,
     value_of: impl Fn(u64) -> f64,
     key_value: impl Fn(Key) -> f64,
 ) -> ReduceResult {
-    let batch_size = batch_size.max(1);
-    let mut state = GlobalState::new(keep_zero_pairs);
-    let mut total_stats = ReduceStats::default();
+    let len = columns.len();
+    let threads = pool.threads();
+    let wall0 = Instant::now();
+    let pool0 = pool.stats();
 
-    for batch in columns.chunks(batch_size) {
-        // ---- Parallel phase -------------------------------------------
-        let mut pending: Vec<Option<Pending<S::Cursor>>> =
-            (0..batch.len()).map(|_| None).collect();
-        {
-            let slots: Vec<Mutex<(Option<Pending<S::Cursor>>, ReduceStats)>> = (0..batch.len())
-                .map(|_| Mutex::new((None, ReduceStats::default())))
-                .collect();
-            let state_ref = &state;
-            pool.run_chunks(batch.len(), |_tid, range| {
-                for i in range {
-                    let mut stats = ReduceStats::default();
-                    let out = reduce_against(space, state_ref, batch[i], &mut stats);
-                    let p = match out {
-                        ColumnOutcome::Zero => Pending::Zero,
-                        ColumnOutcome::Claim {
-                            low,
-                            self_trivial,
-                            table,
-                        } => Pending::Stopped {
-                            low,
-                            self_trivial,
-                            table,
-                        },
-                    };
-                    *slots[i].lock().unwrap() = (Some(p), stats);
-                }
-            });
-            for (i, slot) in slots.into_iter().enumerate() {
-                let (p, stats) = slot.into_inner().unwrap();
-                total_stats.merge(&stats);
-                pending[i] = p;
-            }
+    let mut base = PivotState::new();
+    let mut delta = PivotState::new();
+    let mut result = ReduceResult::default();
+    let mut total = ReduceStats::default();
+    let mut sched = SchedStats {
+        threads,
+        ..Default::default()
+    };
+    let mut min_batch = usize::MAX;
+    let mut max_batch = 0usize;
+
+    let clamp_batch = |b: usize| -> usize {
+        if cfg.adaptive {
+            b.clamp(cfg.batch_min.max(1), cfg.batch_max.max(cfg.batch_min).max(1))
+        } else {
+            b.max(1)
         }
+    };
+    let grain_for = |l: usize| -> usize {
+        if cfg.steal_grain > 0 {
+            cfg.steal_grain
+        } else {
+            (l / (threads * 8).max(1)).clamp(1, 64)
+        }
+    };
+    let mut batch = clamp_batch(cfg.batch_size);
 
-        // ---- Serial phase ----------------------------------------------
-        // Visit in filtration-processing order; commits make earlier batch
-        // columns visible to later ones exactly as in the sequential run.
-        for (i, p) in pending.into_iter().enumerate() {
-            let col = batch[i];
-            total_stats.columns += 1;
-            match p {
+    // Prefetch batch 0 synchronously — there is nothing to overlap yet.
+    let mut cur_start = 0usize;
+    let mut cur_end = batch.min(len);
+    let mut cur_slots: Vec<Slot<S::Cursor>> = new_slots(cur_end - cur_start);
+    if cur_end > cur_start {
+        // SAFETY: waited on immediately — no borrow is released first.
+        unsafe {
+            submit_push(
+                pool,
+                space,
+                columns,
+                cur_start..cur_end,
+                &base,
+                &cur_slots,
+                grain_for(cur_end - cur_start),
+            )
+        }
+        .wait();
+    }
+
+    while cur_start < cur_end {
+        // Kick off the next batch's push against the frozen base before
+        // committing the current batch: this is the pipeline overlap.
+        let next_start = cur_end;
+        let next_end = (next_start + batch).min(len);
+        let next_slots: Vec<Slot<S::Cursor>> = new_slots(next_end - next_start);
+        let span0 = pool.stats().span_ns;
+        // SAFETY: the ticket is resolved below (`t.wait()`) before `base`
+        // is mutated (merge_from) and before `next_slots` is moved into
+        // `cur_slots`; nothing it borrows is released earlier.
+        let ticket = if next_end > next_start {
+            Some(unsafe {
+                submit_push(
+                    pool,
+                    space,
+                    columns,
+                    next_start..next_end,
+                    &base,
+                    &next_slots,
+                    grain_for(next_end - next_start),
+                )
+            })
+        } else {
+            None
+        };
+        let had_next = ticket.is_some();
+
+        // ---- Serial commit of the current batch -----------------------
+        // Visit in filtration-processing order; commits land in `delta`
+        // (the base is frozen while workers read it) and become visible
+        // to later columns of this batch through the overlay.
+        let t_serial = Instant::now();
+        for (i, slot) in std::mem::take(&mut cur_slots).into_iter().enumerate() {
+            let col = columns[cur_start + i];
+            let (pending, push_stats) = slot.into_inner().unwrap();
+            total.merge(&push_stats);
+            total.columns += 1;
+            match pending {
                 Some(Pending::Zero) | None => {
-                    state.result.stats.zero_columns += 1;
-                    state.result.stats.essential += 1;
-                    state.result.essential.push(col);
+                    // Reduced to zero against committed state alone: the
+                    // content is final (every applied op was final), so
+                    // this is an essential class exactly as sequentially.
+                    result.stats.zero_columns += 1;
+                    result.stats.essential += 1;
+                    result.essential.push(col);
                 }
                 Some(Pending::Stopped {
                     low,
                     self_trivial,
                     table,
                 }) => {
-                    // Fast path: the stop-pivot is still unclaimed (no
-                    // earlier batch column took it) — commit directly, no
-                    // find_low re-walk and no trivial re-probe. This is
-                    // the overwhelmingly common case and what makes the
-                    // parallel phase actually pay off (EXPERIMENTS §Perf).
-                    if self_trivial || !state.pivot_owner.contains_key(&low.pack()) {
+                    // Fast path: the stop-pivot is still unclaimed in
+                    // base ∪ delta — commit directly, no find_low re-walk
+                    // and no trivial re-probe. The overwhelmingly common
+                    // case, and what makes the pre-push pay off.
+                    let claimed = Overlay {
+                        committed: &base,
+                        delta: &delta,
+                    }
+                    .is_claimed(low.pack());
+                    if self_trivial || !claimed {
+                        sched.prepushed_columns += 1;
                         commit_claim(
                             space,
-                            &mut state,
+                            &mut delta,
+                            &mut result,
+                            keep_zero_pairs,
                             col,
                             low,
                             self_trivial,
@@ -120,14 +396,23 @@ pub fn reduce_all<S: ColumnSpace>(
                         );
                         continue;
                     }
-                    // Collision: resume against the updated committed
-                    // state (find_low is idempotent on a stopped table).
+                    // Collision: resume against the full committed view
+                    // (find_low is idempotent on a stopped table).
+                    sched.resumed_columns += 1;
                     let mut stats = ReduceStats::default();
-                    match resume_reduce(space, &state, col, table, &mut stats) {
+                    let outcome = {
+                        let view = Overlay {
+                            committed: &base,
+                            delta: &delta,
+                        };
+                        resume_reduce(space, &view, col, table, &mut stats)
+                    };
+                    total.merge(&stats);
+                    match outcome {
                         ColumnOutcome::Zero => {
-                            state.result.stats.zero_columns += 1;
-                            state.result.stats.essential += 1;
-                            state.result.essential.push(col);
+                            result.stats.zero_columns += 1;
+                            result.stats.essential += 1;
+                            result.essential.push(col);
                         }
                         ColumnOutcome::Claim {
                             low,
@@ -136,7 +421,9 @@ pub fn reduce_all<S: ColumnSpace>(
                         } => {
                             commit_claim(
                                 space,
-                                &mut state,
+                                &mut delta,
+                                &mut result,
+                                keep_zero_pairs,
                                 col,
                                 low,
                                 self_trivial,
@@ -146,16 +433,65 @@ pub fn reduce_all<S: ColumnSpace>(
                             );
                         }
                     }
-                    total_stats.merge(&stats);
                 }
             }
         }
+        let serial_ns = t_serial.elapsed().as_nanos() as u64;
+        sched.serial_ns += serial_ns;
+
+        // ---- Join the pipelined push, then publish the delta ----------
+        let t_wait = Instant::now();
+        if let Some(t) = ticket {
+            t.wait();
+        }
+        let wait_ns = t_wait.elapsed().as_nanos() as u64;
+        if had_next {
+            sched.barrier_wait_ns += wait_ns;
+            let push_span = pool.stats().span_ns.saturating_sub(span0);
+            sched.overlap_ns += serial_ns.min(push_span);
+        }
+        // No reader is live now: drain the batch's commits into the base
+        // so the next serial phase (and the push after it) see them.
+        base.merge_from(&mut delta);
+
+        let cur_len = cur_end - cur_start;
+        sched.batches += 1;
+        min_batch = min_batch.min(cur_len);
+        max_batch = max_batch.max(cur_len);
+
+        // ---- Adapt the batch size -------------------------------------
+        // Serial-bound (commit > ~75% of the push span): halve, pushing
+        // collision resolution back into the parallel phase. Push-bound
+        // (commit < ~25%): double, amortizing dispatch and widening the
+        // overlap window. Correctness is batch-size independent.
+        if had_next && cfg.adaptive {
+            let span = serial_ns + wait_ns;
+            if span > 0 {
+                if serial_ns * 4 > span * 3 {
+                    batch = clamp_batch(batch / 2);
+                } else if serial_ns * 4 < span {
+                    batch = clamp_batch(batch.saturating_mul(2));
+                }
+            }
+        }
+
+        cur_start = next_start;
+        cur_end = next_end;
+        cur_slots = next_slots;
     }
 
-    let mut result = state.result;
-    result.stats.columns = total_stats.columns;
-    result.stats.appends = total_stats.appends;
-    result.stats.find_next_calls = total_stats.find_next_calls;
+    let pool1 = pool.stats();
+    sched.tasks = pool1.tasks - pool0.tasks;
+    sched.steals = pool1.steals - pool0.steals;
+    sched.parallel_busy_ns = pool1.busy_ns - pool0.busy_ns;
+    sched.wall_ns = wall0.elapsed().as_nanos() as u64;
+    sched.min_batch = if sched.batches > 0 { min_batch } else { 0 };
+    sched.max_batch = max_batch;
+
+    result.stats.columns = total.columns;
+    result.stats.appends = total.appends;
+    result.stats.find_next_calls = total.find_next_calls;
+    result.sched = sched;
     result
 }
 
@@ -167,8 +503,16 @@ mod tests {
     use crate::reduction::EdgeColumns;
     use crate::util::rng::Pcg32;
 
+    fn fixed(batch: usize) -> SchedConfig {
+        SchedConfig {
+            batch_size: batch,
+            adaptive: false,
+            ..Default::default()
+        }
+    }
+
     #[test]
-    fn serial_parallel_matches_sequential_for_all_batch_sizes() {
+    fn pipelined_matches_sequential_for_all_batch_sizes() {
         for seed in 0..4 {
             let mut rng = Pcg32::new(seed);
             let coords = (0..24 * 3).map(|_| rng.next_f64()).collect();
@@ -187,11 +531,22 @@ mod tests {
                 |k| f.key_value(k),
             );
             let pool = ThreadPool::new(4);
-            for batch in [1usize, 3, 10, 100, 10_000] {
+            let mut cfgs: Vec<SchedConfig> = [1usize, 3, 10, 100, 10_000]
+                .iter()
+                .map(|&b| fixed(b))
+                .collect();
+            cfgs.push(SchedConfig {
+                batch_size: 4,
+                adaptive: true,
+                batch_min: 2,
+                batch_max: 64,
+                steal_grain: 1,
+            });
+            for cfg in cfgs {
                 let par = reduce_all(
                     &space,
                     &cols,
-                    batch,
+                    &cfg,
                     &pool,
                     true,
                     |c| f.values[c as usize],
@@ -201,17 +556,48 @@ mod tests {
                 let mut b = par.pairs.clone();
                 a.sort_unstable();
                 b.sort_unstable();
-                assert_eq!(a, b, "seed={seed} batch={batch}");
+                assert_eq!(a, b, "seed={seed} cfg={cfg:?}");
                 let mut ea = seq.essential.clone();
                 let mut eb = par.essential.clone();
                 ea.sort_unstable();
                 eb.sort_unstable();
-                assert_eq!(ea, eb, "seed={seed} batch={batch}");
+                assert_eq!(ea, eb, "seed={seed} cfg={cfg:?}");
                 assert_eq!(
                     seq.stats.trivial_pairs, par.stats.trivial_pairs,
-                    "seed={seed} batch={batch}"
+                    "seed={seed} cfg={cfg:?}"
+                );
+                // Every pair/trivial column is either committed straight
+                // off its pre-push or serially resumed; columns that end
+                // zero may appear in either bucket or in neither.
+                let handled = par.sched.prepushed_columns + par.sched.resumed_columns;
+                assert!(
+                    handled >= seq.stats.pairs + seq.stats.trivial_pairs
+                        && handled <= cols.len(),
+                    "seed={seed} cfg={cfg:?}: handled={handled}"
                 );
             }
         }
+    }
+
+    #[test]
+    fn empty_column_set() {
+        let mut rng = Pcg32::new(9);
+        let coords = (0..12 * 2).map(|_| rng.next_f64()).collect();
+        let f = EdgeFiltration::build(&MetricData::Points(PointCloud::new(2, coords)), 0.5);
+        let nb = Neighborhoods::build(&f, false);
+        let space = EdgeColumns::new(&nb, &f);
+        let pool = ThreadPool::new(2);
+        let r = reduce_all(
+            &space,
+            &[],
+            &SchedConfig::default(),
+            &pool,
+            true,
+            |c| f.values[c as usize],
+            |k| f.key_value(k),
+        );
+        assert_eq!(r.stats.columns, 0);
+        assert!(r.pairs.is_empty() && r.essential.is_empty());
+        assert_eq!(r.sched.batches, 0);
     }
 }

@@ -1,0 +1,226 @@
+//! PJRT-backed runtime (requires the `pjrt` feature and the external
+//! `xla` crate). See the module docs in [`super`] for the artifact
+//! contract; [`super::stub`] mirrors this API for offline builds.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::{parse_name, PAD_COORD};
+use crate::geometry::PointCloud;
+
+struct DistExec {
+    rows: usize,
+    cols: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+struct PImageExec {
+    max_pairs: usize,
+    grid: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Artifact registry + compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dist: Vec<DistExec>,
+    pimage: Vec<PImageExec>,
+    pub artifact_dir: PathBuf,
+}
+
+impl Runtime {
+    /// Scan `dir` for `dist_{N}x{D}.hlo.txt` / `pimage_{K}x{G}.hlo.txt`
+    /// and compile everything found. An empty dir yields a usable (if
+    /// artifact-less) runtime.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        let mut rt = Runtime {
+            client,
+            dist: Vec::new(),
+            pimage: Vec::new(),
+            artifact_dir: dir.to_path_buf(),
+        };
+        if dir.is_dir() {
+            let mut paths: Vec<PathBuf> = std::fs::read_dir(dir)?
+                .filter_map(|e| e.ok().map(|e| e.path()))
+                .collect();
+            paths.sort();
+            for p in paths {
+                let name = match p.file_name().and_then(|s| s.to_str()) {
+                    Some(n) => n,
+                    None => continue,
+                };
+                if let Some(shape) = parse_name(name, "dist_") {
+                    let exe = rt.compile(&p).with_context(|| format!("compile {name}"))?;
+                    rt.dist.push(DistExec {
+                        rows: shape.0,
+                        cols: shape.1,
+                        exe,
+                    });
+                } else if let Some(shape) = parse_name(name, "pimage_") {
+                    let exe = rt.compile(&p).with_context(|| format!("compile {name}"))?;
+                    rt.pimage.push(PImageExec {
+                        max_pairs: shape.0,
+                        grid: shape.1,
+                        exe,
+                    });
+                }
+            }
+        }
+        rt.dist.sort_by_key(|d| d.rows);
+        rt.pimage.sort_by_key(|p| p.max_pairs);
+        Ok(rt)
+    }
+
+    fn compile(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parse HLO text {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow!("PJRT compile: {e}"))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn has_distance_kernel(&self) -> bool {
+        !self.dist.is_empty()
+    }
+
+    pub fn has_pimage_kernel(&self) -> bool {
+        !self.pimage.is_empty()
+    }
+
+    pub fn dist_shapes(&self) -> Vec<(usize, usize)> {
+        self.dist.iter().map(|d| (d.rows, d.cols)).collect()
+    }
+
+    /// Full pairwise distance matrix of `pc` through the Pallas kernel,
+    /// returned as the strict upper triangle entries (i < j) of the real
+    /// (unpadded) points: `(i, j, d)`.
+    pub fn distance_matrix(&self, pc: &PointCloud) -> Result<Vec<f32>> {
+        let n = pc.n();
+        let exec = self
+            .dist
+            .iter()
+            .find(|d| d.rows >= n && d.cols >= pc.dim)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no distance artifact fits n={n} dim={} (have {:?})",
+                    pc.dim,
+                    self.dist_shapes()
+                )
+            })?;
+        let padded = pc.to_f32_padded(exec.rows, exec.cols, PAD_COORD);
+        let lit = xla::Literal::vec1(&padded)
+            .reshape(&[exec.rows as i64, exec.cols as i64])
+            .map_err(|e| anyhow!("reshape input: {e}"))?;
+        let result = exec
+            .exe
+            .execute::<xla::Literal>(&[lit])
+            .map_err(|e| anyhow!("execute: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch: {e}"))?;
+        let out = result.to_tuple1().map_err(|e| anyhow!("untuple: {e}"))?;
+        let full: Vec<f32> = out.to_vec().map_err(|e| anyhow!("to_vec: {e}"))?;
+        // Slice the real n×n block out of the padded rows×rows matrix.
+        let mut sliced = vec![0f32; n * n];
+        for i in 0..n {
+            sliced[i * n..(i + 1) * n]
+                .copy_from_slice(&full[i * exec.rows..i * exec.rows + n]);
+        }
+        Ok(sliced)
+    }
+
+    /// Edge list `(d, i, j)` with `d <= tau` via the distance kernel.
+    pub fn distance_edges(&self, pc: &PointCloud, tau: f64) -> Result<Vec<(f64, u32, u32)>> {
+        let n = pc.n();
+        let m = self.distance_matrix(pc)?;
+        let mut edges = Vec::new();
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let d = m[i * n + j] as f64;
+                if d <= tau {
+                    edges.push((d, i as u32, j as u32));
+                }
+            }
+        }
+        Ok(edges)
+    }
+
+    /// Persistence image of `(birth, persistence, weight)` triples on the
+    /// kernel's `grid×grid` raster over `[0, span]²` with bandwidth sigma
+    /// baked into the artifact. Returns (grid, pixels).
+    pub fn persistence_image(&self, pairs: &[(f32, f32, f32)], span: f32) -> Result<(usize, Vec<f32>)> {
+        let exec = self
+            .pimage
+            .iter()
+            .find(|p| p.max_pairs >= pairs.len())
+            .or_else(|| self.pimage.last())
+            .ok_or_else(|| anyhow!("no persistence-image artifact loaded"))?;
+        // Truncate lowest-weight pairs if over capacity, pad with w=0.
+        let mut data = vec![0f32; exec.max_pairs * 3];
+        let mut use_pairs: Vec<&(f32, f32, f32)> = pairs.iter().collect();
+        if use_pairs.len() > exec.max_pairs {
+            use_pairs.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
+            use_pairs.truncate(exec.max_pairs);
+        }
+        for (k, p) in use_pairs.iter().enumerate() {
+            data[k * 3] = p.0;
+            data[k * 3 + 1] = p.1;
+            data[k * 3 + 2] = p.2;
+        }
+        let lit = xla::Literal::vec1(&data)
+            .reshape(&[exec.max_pairs as i64, 3])
+            .map_err(|e| anyhow!("reshape pairs: {e}"))?;
+        let span_lit = xla::Literal::vec1(&[span]).reshape(&[]).map_err(|e| anyhow!("{e}"))?;
+        let result = exec
+            .exe
+            .execute::<xla::Literal>(&[lit, span_lit])
+            .map_err(|e| anyhow!("execute: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch: {e}"))?;
+        let out = result.to_tuple1().map_err(|e| anyhow!("untuple: {e}"))?;
+        let img: Vec<f32> = out.to_vec().map_err(|e| anyhow!("to_vec: {e}"))?;
+        Ok((exec.grid, img))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    /// End-to-end vs native distances — runs only when artifacts exist
+    /// (`make artifacts` first; CI does).
+    #[test]
+    fn kernel_distances_match_native_when_artifacts_present() {
+        let dir = super::super::default_artifact_dir();
+        let rt = match Runtime::load(&dir) {
+            Ok(rt) if rt.has_distance_kernel() => rt,
+            _ => {
+                eprintln!("skipping: no artifacts in {dir:?}");
+                return;
+            }
+        };
+        let mut rng = Pcg32::new(7);
+        let n = 100;
+        let pc = PointCloud::new(3, (0..n * 3).map(|_| rng.next_f64()).collect());
+        let m = rt.distance_matrix(&pc).unwrap();
+        for i in 0..n {
+            for j in 0..n {
+                let want = pc.dist(i, j) as f32;
+                let got = m[i * n + j];
+                // Gram-trick cancellation bounds the absolute error by
+                // ~sqrt(eps)·scale (see python/tests/test_kernels.py).
+                assert!(
+                    (got - want).abs() <= 6e-3 + 1e-4 * want,
+                    "({i},{j}): {got} vs {want}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,56 @@
+//! Default (no-`pjrt`-feature) runtime: the same API surface as the PJRT
+//! backend, with every execution request reporting "no kernel". Callers
+//! already degrade gracefully (native distance path, skipped persistence
+//! images), so a stub runtime keeps the whole pipeline usable offline.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Result};
+
+use crate::geometry::PointCloud;
+
+/// Artifact registry placeholder for builds without the `pjrt` feature.
+pub struct Runtime {
+    pub artifact_dir: PathBuf,
+}
+
+impl Runtime {
+    /// Always succeeds; records the directory but compiles nothing.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        Ok(Runtime {
+            artifact_dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        "native-stub (built without the `pjrt` feature)".to_string()
+    }
+
+    pub fn has_distance_kernel(&self) -> bool {
+        false
+    }
+
+    pub fn has_pimage_kernel(&self) -> bool {
+        false
+    }
+
+    pub fn dist_shapes(&self) -> Vec<(usize, usize)> {
+        Vec::new()
+    }
+
+    pub fn distance_matrix(&self, _pc: &PointCloud) -> Result<Vec<f32>> {
+        Err(anyhow!("PJRT backend not compiled in (enable feature `pjrt`)"))
+    }
+
+    pub fn distance_edges(&self, _pc: &PointCloud, _tau: f64) -> Result<Vec<(f64, u32, u32)>> {
+        Err(anyhow!("PJRT backend not compiled in (enable feature `pjrt`)"))
+    }
+
+    pub fn persistence_image(
+        &self,
+        _pairs: &[(f32, f32, f32)],
+        _span: f32,
+    ) -> Result<(usize, Vec<f32>)> {
+        Err(anyhow!("PJRT backend not compiled in (enable feature `pjrt`)"))
+    }
+}

@@ -1,4 +1,4 @@
-//! Memory accounting: a counting global allocator plus `getrusage` max-RSS.
+//! Memory accounting: a counting global allocator plus OS max-RSS.
 //!
 //! The paper reports peak memory per run (macOS Instruments). We reproduce
 //! that with (a) an allocator wrapper counting live and peak heap bytes —
@@ -69,16 +69,37 @@ pub fn section_peak_bytes() -> usize {
     peak_bytes().saturating_sub(BASELINE.load(Ordering::Relaxed))
 }
 
-/// OS-reported max resident set size in bytes (Linux: ru_maxrss is KiB).
+/// OS-reported peak resident set size in bytes, without libc: on Linux
+/// parsed from `/proc/self/status` `VmHWM` (KiB — the same number
+/// `getrusage` reports); elsewhere approximated by the *current* RSS
+/// from `ps` (KiB on macOS/BSD), which under-reports a passed peak.
+/// Returns 0 when neither source is available.
 pub fn max_rss_bytes() -> usize {
-    unsafe {
-        let mut ru: libc::rusage = std::mem::zeroed();
-        if libc::getrusage(libc::RUSAGE_SELF, &mut ru) == 0 {
-            (ru.ru_maxrss as usize) * 1024
-        } else {
-            0
+    if let Ok(status) = std::fs::read_to_string("/proc/self/status") {
+        for line in status.lines() {
+            if let Some(rest) = line.strip_prefix("VmHWM:") {
+                // Fall through to `ps` on an unparsable value rather
+                // than reporting a bogus 0.
+                if let Ok(kb) = rest.trim().trim_end_matches("kB").trim().parse::<usize>() {
+                    return kb * 1024;
+                }
+                break;
+            }
         }
     }
+    // Portable fallback (macOS/BSD): POSIX `ps` reports current RSS in KiB.
+    let out = std::process::Command::new("ps")
+        .args(["-o", "rss=", "-p"])
+        .arg(std::process::id().to_string())
+        .output();
+    if let Ok(out) = out {
+        if let Ok(s) = String::from_utf8(out.stdout) {
+            if let Ok(kb) = s.trim().parse::<usize>() {
+                return kb * 1024;
+            }
+        }
+    }
+    0
 }
 
 /// Human formatting used by the bench tables ("6.23 GB", "328 MB").
@@ -119,6 +140,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg(any(target_os = "linux", target_os = "macos"))]
     fn rss_nonzero() {
         assert!(max_rss_bytes() > 0);
     }

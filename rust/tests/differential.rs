@@ -1,0 +1,263 @@
+//! Differential verification of the pipelined work-stealing scheduler.
+//!
+//! The paper's guarantee is *exact* equality with the sequential
+//! reduction — not closeness. These tests pin that down at two levels:
+//!
+//! * **engine vs oracle** — the full engine (work-stealing scheduler
+//!   included) against the explicit boundary-matrix reduction
+//!   (`reduction::explicit`), on randomized point clouds (seeded PCG,
+//!   n ≤ 200, point dimension ≤ 3) and random sparse graphs, swept
+//!   across batch sizes {1, 7, 100} × thread counts {1, 2, 8}, with a
+//!   zero tolerance: every birth/death must match to the bit;
+//! * **scheduler vs sequential reduction** — `serial_parallel::
+//!   reduce_all` against `fast_column::reduce_all` on the same column
+//!   set, comparing the *structural* output (pairs, essential columns,
+//!   trivial-pair counts) exactly, across pools, batch sizes, steal
+//!   grains and adaptive batching.
+//!
+//! Failures print the seed for exact reproduction.
+
+use dory::filtration::{EdgeFiltration, Neighborhoods};
+use dory::geometry::{MetricData, PointCloud, SparseDistances};
+use dory::homology::{compute_ph_from_filtration, EngineOptions};
+use dory::reduction::explicit::oracle_diagram;
+use dory::reduction::pool::ThreadPool;
+use dory::reduction::{fast_column, serial_parallel, EdgeColumns, SchedConfig};
+use dory::util::rng::Pcg32;
+
+const BATCHES: [usize; 3] = [1, 7, 100];
+const THREADS: [usize; 3] = [1, 2, 8];
+
+fn random_cloud(rng: &mut Pcg32, n: usize, dim: usize) -> MetricData {
+    MetricData::Points(PointCloud::new(
+        dim,
+        (0..n * dim).map(|_| rng.next_f64()).collect(),
+    ))
+}
+
+/// Sweep the scheduler grid on one filtration, asserting bit-exact
+/// agreement with the explicit oracle diagram.
+fn check_instance(f: &EdgeFiltration, max_dim: usize, label: &str) {
+    let nb = Neighborhoods::build(f, false);
+    let want = oracle_diagram(f, &nb, max_dim);
+    for threads in THREADS {
+        for batch in BATCHES {
+            let opts = EngineOptions {
+                max_dim,
+                threads,
+                batch_size: batch,
+                adaptive_batch: false,
+                ..Default::default()
+            };
+            let got = compute_ph_from_filtration(f, &opts).diagram;
+            assert!(
+                got.multiset_eq(&want, 0.0),
+                "{label} threads={threads} batch={batch}:\n{}",
+                got.diff_summary(&want)
+            );
+        }
+        // Adaptive batching walks through many sizes in one run; the
+        // output must not depend on the trajectory.
+        let opts = EngineOptions {
+            max_dim,
+            threads,
+            batch_size: 16,
+            adaptive_batch: true,
+            batch_min: 2,
+            batch_max: 64,
+            ..Default::default()
+        };
+        let got = compute_ph_from_filtration(f, &opts).diagram;
+        assert!(
+            got.multiset_eq(&want, 0.0),
+            "{label} threads={threads} adaptive:\n{}",
+            got.diff_summary(&want)
+        );
+    }
+}
+
+#[test]
+fn differential_scheduler_vs_oracle_small_dim2() {
+    // Dense-ish dim-2 instances: H0/H1/H2 all populated.
+    for seed in 0..3u64 {
+        let mut rng = Pcg32::new(0xD1FF + seed);
+        let data = random_cloud(&mut rng, 48, 3);
+        let tau = rng.uniform(0.45, 0.6);
+        let f = EdgeFiltration::build(&data, tau);
+        check_instance(&f, 2, &format!("dim2 seed={seed} tau={tau}"));
+    }
+}
+
+#[test]
+fn differential_scheduler_vs_oracle_mid_dim2() {
+    for seed in 0..2u64 {
+        let mut rng = Pcg32::new(0xD1FF + 100 + seed);
+        let data = random_cloud(&mut rng, 90, 2);
+        let tau = rng.uniform(0.2, 0.28);
+        let f = EdgeFiltration::build(&data, tau);
+        check_instance(&f, 2, &format!("mid seed={seed} tau={tau}"));
+    }
+}
+
+#[test]
+fn differential_scheduler_vs_oracle_n200_h1() {
+    // The ISSUE-sized instances: n = 200, d = 3, H1 (many batches at
+    // batch=1/7, real intra-batch collisions at batch=100).
+    for seed in 0..2u64 {
+        let mut rng = Pcg32::new(0xD1FF + 200 + seed);
+        let data = random_cloud(&mut rng, 200, 3);
+        let tau = rng.uniform(0.22, 0.28);
+        let f = EdgeFiltration::build(&data, tau);
+        check_instance(&f, 1, &format!("n200 seed={seed} tau={tau}"));
+    }
+}
+
+#[test]
+fn differential_scheduler_vs_oracle_sparse_graph() {
+    // Non-metric sparse input (the Hi-C shape): weights are arbitrary,
+    // so pivot collisions cluster differently than in metric clouds.
+    for seed in 0..3u64 {
+        let mut rng = Pcg32::new(0x5AA5 + seed);
+        let n = 60 + rng.gen_range(40);
+        let mut entries = Vec::new();
+        for i in 0..n {
+            for j in (i + 1)..n {
+                if rng.next_f64() < 0.25 {
+                    entries.push((i, j, rng.uniform(0.05, 1.0)));
+                }
+            }
+        }
+        let data = MetricData::Sparse(SparseDistances {
+            n: n as usize,
+            entries,
+        });
+        let f = EdgeFiltration::build(&data, f64::INFINITY);
+        check_instance(&f, 2, &format!("graph seed={seed} n={n}"));
+    }
+}
+
+#[test]
+fn differential_pipelined_reduction_structurally_exact() {
+    // Below the diagram: the scheduler's ReduceResult (pairs, essential
+    // columns, trivial counts) must equal the sequential fast-column
+    // engine's bit for bit, for every pool size, batch size, steal grain
+    // and adaptive trajectory.
+    for seed in 0..3u64 {
+        let mut rng = Pcg32::new(0xEAC7 + seed);
+        let coords = (0..120 * 3).map(|_| rng.next_f64()).collect();
+        let f = EdgeFiltration::build(
+            &MetricData::Points(PointCloud::new(3, coords)),
+            0.45,
+        );
+        let nb = Neighborhoods::build(&f, false);
+        let space = EdgeColumns::new(&nb, &f);
+        let cols: Vec<u64> = (0..f.n_edges() as u64).rev().collect();
+        let seq = fast_column::reduce_all(
+            &space,
+            cols.iter().copied(),
+            true,
+            |c| f.values[c as usize],
+            |k| f.key_value(k),
+        );
+        let mut seq_pairs = seq.pairs.clone();
+        seq_pairs.sort_unstable();
+        let mut seq_ess = seq.essential.clone();
+        seq_ess.sort_unstable();
+
+        for threads in THREADS {
+            let pool = ThreadPool::new(threads);
+            let mut cfgs: Vec<SchedConfig> = Vec::new();
+            for batch in BATCHES {
+                for grain in [0usize, 1] {
+                    cfgs.push(SchedConfig {
+                        batch_size: batch,
+                        adaptive: false,
+                        steal_grain: grain,
+                        ..Default::default()
+                    });
+                }
+            }
+            cfgs.push(SchedConfig {
+                batch_size: 8,
+                adaptive: true,
+                batch_min: 2,
+                batch_max: 32,
+                steal_grain: 0,
+            });
+            for cfg in cfgs {
+                let par = serial_parallel::reduce_all(
+                    &space,
+                    &cols,
+                    &cfg,
+                    &pool,
+                    true,
+                    |c| f.values[c as usize],
+                    |k| f.key_value(k),
+                );
+                let mut pairs = par.pairs.clone();
+                pairs.sort_unstable();
+                let mut ess = par.essential.clone();
+                ess.sort_unstable();
+                assert_eq!(
+                    pairs, seq_pairs,
+                    "seed={seed} threads={threads} cfg={cfg:?}: pairs diverge"
+                );
+                assert_eq!(
+                    ess, seq_ess,
+                    "seed={seed} threads={threads} cfg={cfg:?}: essentials diverge"
+                );
+                assert_eq!(
+                    par.stats.trivial_pairs, seq.stats.trivial_pairs,
+                    "seed={seed} threads={threads} cfg={cfg:?}: trivial pairs diverge"
+                );
+                assert_eq!(
+                    par.stats.pairs, seq.stats.pairs,
+                    "seed={seed} threads={threads} cfg={cfg:?}: pair counts diverge"
+                );
+                assert_eq!(par.stats.columns, cols.len());
+            }
+        }
+    }
+}
+
+#[test]
+fn differential_repeated_schedules_are_deterministic() {
+    // Steal schedules differ run to run; the output may not. Hammer one
+    // instance with a racy configuration (tiny grain, many threads) and
+    // require identical output every time.
+    let mut rng = Pcg32::new(0xBADC0DE);
+    let coords = (0..80 * 3).map(|_| rng.next_f64()).collect();
+    let f = EdgeFiltration::build(&MetricData::Points(PointCloud::new(3, coords)), 0.5);
+    let nb = Neighborhoods::build(&f, false);
+    let space = EdgeColumns::new(&nb, &f);
+    let cols: Vec<u64> = (0..f.n_edges() as u64).rev().collect();
+    let cfg = SchedConfig {
+        batch_size: 13,
+        adaptive: false,
+        steal_grain: 1,
+        ..Default::default()
+    };
+    let pool = ThreadPool::new(8);
+    let reference = serial_parallel::reduce_all(
+        &space,
+        &cols,
+        &cfg,
+        &pool,
+        true,
+        |c| f.values[c as usize],
+        |k| f.key_value(k),
+    );
+    for round in 0..15 {
+        let r = serial_parallel::reduce_all(
+            &space,
+            &cols,
+            &cfg,
+            &pool,
+            true,
+            |c| f.values[c as usize],
+            |k| f.key_value(k),
+        );
+        assert_eq!(r.pairs, reference.pairs, "round={round}");
+        assert_eq!(r.essential, reference.essential, "round={round}");
+    }
+}

@@ -1,0 +1,437 @@
+#!/usr/bin/env python3
+"""Generate the golden persistence-diagram fixtures for golden_pd.rs.
+
+The fixture files pin the engine's output bit-for-bit:
+
+* the INPUT (point coordinates or sparse distance entries) is stored as
+  big-endian IEEE-754 f64 hex bit patterns, so the Rust test reconstructs
+  the exact floats regardless of platform or libm;
+* the EXPECTED persistence diagram is computed here by an independent
+  textbook implementation (flag complex + standard Z/2 boundary-matrix
+  reduction over integer bitsets), mirroring rust/src/reduction/
+  explicit.rs. Every arithmetic step on the input→PD path (subtraction,
+  multiplication, addition in the same order, sqrt, comparisons) is
+  IEEE-exact and identical between this script and the Rust engine, so
+  the expected values are exact f64 bits, not approximations.
+
+Dataset generation mirrors rust/src/datasets/mod.rs and rust/src/hic/
+mod.rs (same PCG32/SplitMix64 streams); transcendentals there may differ
+from Rust's libm by an ulp, which is fine — the generated inputs ARE the
+fixture, stored exactly.
+
+Run from the repo root:  python3 rust/tests/fixtures/generate_fixtures.py
+"""
+
+import math
+import os
+import struct
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+M64 = (1 << 64) - 1
+M32 = (1 << 32) - 1
+
+
+def f64_hex(x: float) -> str:
+    return struct.pack(">d", float(x)).hex()
+
+
+class SplitMix64:
+    def __init__(self, seed):
+        self.state = seed & M64
+
+    def next_u64(self):
+        self.state = (self.state + 0x9E3779B97F4A7C15) & M64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & M64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & M64
+        return (z ^ (z >> 31)) & M64
+
+
+class Pcg32:
+    """Exact replica of rust/src/util/rng.rs Pcg32 (XSH-RR 64/32)."""
+
+    def __init__(self, seed):
+        sm = SplitMix64(seed)
+        init_state = sm.next_u64()
+        init_seq = sm.next_u64()
+        self.state = 0
+        self.inc = ((init_seq << 1) | 1) & M64
+        self.next_u32()
+        self.state = (self.state + init_state) & M64
+        self.next_u32()
+
+    def next_u32(self):
+        old = self.state
+        self.state = (old * 6364136223846793005 + self.inc) & M64
+        xorshifted = (((old >> 18) ^ old) >> 27) & M32
+        rot = (old >> 59) & 31
+        return ((xorshifted >> rot) | (xorshifted << ((32 - rot) & 31))) & M32
+
+    def next_u64(self):
+        return ((self.next_u32() << 32) | self.next_u32()) & M64
+
+    def next_f64(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def gen_range(self, bound):
+        # Lemire, matching the Rust implementation exactly.
+        x = self.next_u32()
+        m = x * bound
+        l = m & M32
+        if l < bound:
+            t = ((1 << 32) - bound) % bound
+            while l < t:
+                x = self.next_u32()
+                m = x * bound
+                l = m & M32
+        return m >> 32
+
+    def uniform(self, lo, hi):
+        return lo + (hi - lo) * self.next_f64()
+
+    def normal(self):
+        while True:
+            u = self.next_f64()
+            v = self.next_f64()
+            if u > 1e-12:
+                return math.sqrt(-2.0 * math.log(u)) * math.cos(2.0 * math.pi * v)
+
+    def log_normal(self, mu, sigma):
+        return math.exp(mu + sigma * self.normal())
+
+    def shuffle(self, xs):
+        if not xs:
+            return
+        for i in range(len(xs) - 1, 0, -1):
+            j = self.gen_range(i + 1)
+            xs[i], xs[j] = xs[j], xs[i]
+
+
+# --- dataset generators (mirroring rust/src/datasets & rust/src/hic) ----
+
+
+def circle(n, radius, noise, seed):
+    rng = Pcg32(seed)
+    pts = []
+    for i in range(n):
+        t = 2.0 * math.pi * i / n
+        r = radius + noise * rng.normal()
+        pts.append((r * math.cos(t), r * math.sin(t)))
+    return pts
+
+
+def torus3(n, big_r, small_r, seed):
+    rng = Pcg32(seed)
+    pts = []
+    for _ in range(n):
+        u = 2.0 * math.pi * rng.next_f64()
+        v = 2.0 * math.pi * rng.next_f64()
+        pts.append(
+            (
+                (big_r + small_r * math.cos(v)) * math.cos(u),
+                (big_r + small_r * math.cos(v)) * math.sin(u),
+                small_r * math.sin(v),
+            )
+        )
+    return pts
+
+
+def hic_generate(n_bins, chroms, window, n_loops, n_domains, tau_max, seed):
+    """Control-condition slice of rust/src/hic/mod.rs::generate."""
+    rng = Pcg32(seed ^ 0x486943)
+    per_chrom = n_bins // chroms
+    entries = []
+    step = 36.0
+    for c in range(chroms):
+        lo = c * per_chrom
+        hi = n_bins if c == chroms - 1 else (c + 1) * per_chrom
+        for i in range(lo, hi):
+            for k in range(1, window + 1):
+                j = i + k
+                if j >= hi:
+                    break
+                d = step * (float(k) ** 0.6) * (1.0 + 0.08 * rng.normal())
+                if 0.0 < d <= tau_max:
+                    entries.append((i, j, d))
+    loop_rng = Pcg32((seed * 0x9E3779B9) & M64)
+    for _li in range(n_loops):
+        sep = int(min(max(loop_rng.log_normal(5.2, 0.55), 40.0), 2400.0))
+        c = loop_rng.gen_range(chroms)
+        lo = c * per_chrom
+        hi = n_bins if c == chroms - 1 else (c + 1) * per_chrom
+        if hi - lo <= sep + 2:
+            continue
+        i = lo + loop_rng.gen_range(hi - lo - sep)
+        j = i + sep
+        anchor_d = 20.0 + 330.0 * loop_rng.next_f64()
+        stem = 4 + loop_rng.gen_range(6)
+        for k in range(stem + 1):
+            if i >= lo + k and j + k < hi:
+                d = anchor_d + 14.0 * k * (1.0 + 0.05 * loop_rng.normal())
+                if d <= tau_max:
+                    entries.append((i - k, j + k, max(d, 1.0)))
+    dom_rng = Pcg32((seed * 0x2545F491) & M64)
+    phi = math.pi * (3.0 - math.sqrt(5.0))
+    for _di in range(n_domains):
+        span = 60 + dom_rng.gen_range(60)
+        c = dom_rng.gen_range(chroms)
+        lo = c * per_chrom
+        hi = n_bins if c == chroms - 1 else (c + 1) * per_chrom
+        if hi - lo <= span + 2:
+            continue
+        start = lo + dom_rng.gen_range(hi - lo - span)
+        radius = 70.0 + 90.0 * dom_rng.next_f64()
+        pos = []
+        for s in range(span):
+            y = 1.0 - 2.0 * (s + 0.5) / span
+            r = math.sqrt(1.0 - y * y)
+            t = phi * s
+            pos.append((radius * r * math.cos(t), radius * y, radius * r * math.sin(t)))
+        order = list(range(span))
+        dom_rng.shuffle(order)
+        for a in range(span):
+            for b in range(a + 1, span):
+                p, q = pos[order[a]], pos[order[b]]
+                d = max(
+                    math.sqrt(
+                        (p[0] - q[0]) ** 2 + (p[1] - q[1]) ** 2 + (p[2] - q[2]) ** 2
+                    ),
+                    1.0,
+                )
+                if d <= tau_max:
+                    entries.append((start + a, start + b, d))
+    # Deduplicate, keeping the smallest distance per (u, v).
+    entries.sort(key=lambda e: (e[0], e[1], e[2]))
+    dedup = []
+    last = None
+    for e in entries:
+        if last is not None and e[0] == last[0] and e[1] == last[1]:
+            continue
+        dedup.append(e)
+        last = e
+    return dedup
+
+
+# --- edge filtration + flag-complex oracle ------------------------------
+
+
+def point_dist(p, q):
+    """Exactly EdgeFiltration::build's loop: s += d*d in coordinate order."""
+    s = 0.0
+    for a, b in zip(p, q):
+        d = a - b
+        s += d * d
+    return math.sqrt(s)
+
+
+def edges_from_points(points, tau):
+    raw = []
+    for i in range(len(points)):
+        for j in range(i + 1, len(points)):
+            d = point_dist(points[i], points[j])
+            if d <= tau:
+                raw.append((d, i, j))
+    raw.sort(key=lambda e: (e[0], e[1], e[2]))
+    return raw
+
+
+def edges_from_sparse(entries, tau):
+    raw = [(d, u, v) for (u, v, d) in entries if d <= tau]
+    raw.sort(key=lambda e: (e[0], e[1], e[2]))
+    return raw
+
+
+def oracle_diagram(n_vertices, edges, max_dim):
+    """Standard Z/2 column reduction on the flag complex up to
+    max_dim + 1, mirroring rust/src/reduction/explicit.rs. Returns a
+    dict dim -> (finite [(birth, death)], essential [birth])."""
+    order = {}
+    adj = [dict() for _ in range(n_vertices)]
+    values = []
+    for o, (d, a, b) in enumerate(edges):
+        order[(a, b)] = o
+        adj[a][b] = o
+        adj[b][a] = o
+        values.append(d)
+
+    # Simplices as (value, dim, verts).
+    simplices = [(0.0, 0, (v,)) for v in range(n_vertices)]
+    for (d, a, b) in edges:
+        simplices.append((d, 1, (a, b)))
+    top_dim = max_dim + 1
+    if top_dim >= 2:
+        for a in range(n_vertices):
+            for b in range(a + 1, n_vertices):
+                oab = adj[a].get(b)
+                if oab is None:
+                    continue
+                for c in range(b + 1, n_vertices):
+                    oac = adj[a].get(c)
+                    obc = adj[b].get(c)
+                    if oac is None or obc is None:
+                        continue
+                    diam = max(oab, oac, obc)
+                    simplices.append((values[diam], 2, (a, b, c)))
+                    if top_dim >= 3:
+                        for e in range(c + 1, n_vertices):
+                            oae = adj[a].get(e)
+                            obe = adj[b].get(e)
+                            oce = adj[c].get(e)
+                            if oae is None or obe is None or oce is None:
+                                continue
+                            diam3 = max(diam, oae, obe, oce)
+                            simplices.append((values[diam3], 3, (a, b, c, e)))
+    simplices.sort(key=lambda s: (s[0], s[1], s[2]))
+    index = {s[2]: i for i, s in enumerate(simplices)}
+    n = len(simplices)
+
+    # Sparse boundary columns as integer bitsets.
+    cols = []
+    for (_, dim, verts) in simplices:
+        col = 0
+        if dim > 0:
+            for omit in range(len(verts)):
+                face = verts[:omit] + verts[omit + 1 :]
+                col ^= 1 << index[face]
+        cols.append(col)
+
+    NONE = -1
+    low = [NONE] * n
+    pivot_of_row = {}
+    for j in range(n):
+        col = cols[j]
+        while col:
+            l = col.bit_length() - 1
+            i = pivot_of_row.get(l)
+            if i is None:
+                low[j] = l
+                pivot_of_row[l] = j
+                break
+            col ^= cols[i]
+        cols[j] = col
+        if not col:
+            low[j] = NONE
+
+    out = {d: ([], []) for d in range(max_dim + 1)}
+    is_pivot_row = [False] * n
+    for j in range(n):
+        if low[j] != NONE:
+            is_pivot_row[low[j]] = True
+    for j in range(n):
+        if low[j] != NONE:
+            i = low[j]
+            d = simplices[i][1]
+            if d <= max_dim:
+                birth, death = simplices[i][0], simplices[j][0]
+                if birth != death:
+                    out[d][0].append((birth, death))
+        elif not is_pivot_row[j]:
+            d = simplices[j][1]
+            if d <= max_dim:
+                out[d][1].append(simplices[j][0])
+    return out
+
+
+def betti_at(diagram, dim, t):
+    fin, ess = diagram[dim]
+    alive = sum(1 for (b, d) in fin if b <= t < d)
+    return alive + sum(1 for b in ess if b <= t)
+
+
+# --- fixture writing ----------------------------------------------------
+
+
+def write_fixture(path, name, kind, max_dim, tau, payload, diagram):
+    lines = [
+        "# dory golden persistence-diagram fixture",
+        "# generated by rust/tests/fixtures/generate_fixtures.py",
+        "# f64 values are big-endian IEEE-754 bit patterns in hex",
+        f"name {name}",
+        f"kind {kind}",
+        f"max_dim {max_dim}",
+        f"tau {f64_hex(tau)}",
+    ]
+    if kind == "points":
+        points = payload
+        lines.append(f"dim {len(points[0])}")
+        lines.append(f"n {len(points)}")
+        for p in points:
+            lines.append("point " + " ".join(f64_hex(c) for c in p))
+    else:
+        n, entries = payload
+        lines.append(f"n {n}")
+        for (u, v, d) in entries:
+            lines.append(f"entry {u} {v} {f64_hex(d)}")
+    total = 0
+    for d in range(max_dim + 1):
+        fin, ess = diagram[d]
+        for (b, dd) in sorted(fin):
+            lines.append(f"pd {d} {f64_hex(b)} {f64_hex(dd)}")
+            total += 1
+        for b in sorted(ess):
+            lines.append(f"pd {d} {f64_hex(b)} inf")
+            total += 1
+    lines.append("end")
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"wrote {path}: {total} PD points")
+
+
+def main():
+    # --- circle: one loop, H0+H1 ------------------------------------
+    pts = circle(48, 1.0, 0.05, 1)
+    tau = 3.0
+    edges = edges_from_points(pts, tau)
+    dg = oracle_diagram(len(pts), edges, 1)
+    print(f"circle48: {len(edges)} edges, H0 ess {len(dg[0][1])}, "
+          f"H1 fin {len(dg[1][0])} ess {len(dg[1][1])}")
+    assert len(dg[0][1]) == 1, "circle must be connected at tau=3"
+    long_loops = [p for p in dg[1][0] if p[1] - p[0] > 0.5] + dg[1][1]
+    assert len(long_loops) == 1, f"circle must carry one dominant loop: {long_loops}"
+    write_fixture(
+        os.path.join(HERE, "circle48.pd.txt"), "circle48", "points", 1, tau, pts, dg
+    )
+
+    # --- torus: H0+H1+H2 --------------------------------------------
+    n_torus = 110
+    pts = torus3(n_torus, 2.0, 0.7, 2)
+    tau = 1.6
+    edges = edges_from_points(pts, tau)
+    dg = oracle_diagram(len(pts), edges, 2)
+    print(f"torus{n_torus}: {len(edges)} edges, H0 ess {len(dg[0][1])}, "
+          f"H1 fin {len(dg[1][0])} ess {len(dg[1][1])}, "
+          f"H2 fin {len(dg[2][0])} ess {len(dg[2][1])}")
+    assert len(dg[0][1]) == 1, "torus sample must be connected"
+    write_fixture(
+        os.path.join(HERE, f"torus{n_torus}.pd.txt"),
+        f"torus{n_torus}",
+        "points",
+        2,
+        tau,
+        pts,
+        dg,
+    )
+
+    # --- Hi-C slice: sparse non-metric input, H0+H1 ------------------
+    n_bins = 240
+    tau = 150.0
+    entries = hic_generate(n_bins, 2, 8, 15, 2, tau, 2021)
+    edges = edges_from_sparse(entries, tau)
+    dg = oracle_diagram(n_bins, edges, 1)
+    print(f"hic240: {len(entries)} entries, {len(edges)} edges, "
+          f"H0 ess {len(dg[0][1])}, H1 fin {len(dg[1][0])} ess {len(dg[1][1])}")
+    assert len(dg[0][1]) >= 2, "two chromosomes stay disconnected"
+    write_fixture(
+        os.path.join(HERE, "hic240.pd.txt"),
+        "hic240",
+        "sparse",
+        1,
+        tau,
+        (n_bins, entries),
+        dg,
+    )
+
+
+if __name__ == "__main__":
+    main()

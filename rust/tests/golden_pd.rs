@@ -1,0 +1,244 @@
+//! Golden persistence-diagram regression fixtures.
+//!
+//! Each fixture in `rust/tests/fixtures/*.pd.txt` stores an input
+//! (point coordinates or sparse distance entries) *and* its expected
+//! persistence diagram, both as exact IEEE-754 f64 bit patterns. The
+//! engine must reproduce the diagram **bit for bit** — across the
+//! sequential path and several pipelined work-stealing configurations —
+//! which pins down both the numerics (the input→PD path uses only
+//! IEEE-exact operations: ±, ×, `sqrt`, comparisons) and the scheduler's
+//! exactness guarantee on real known-topology datasets.
+//!
+//! The expected diagrams were produced by an independent textbook
+//! implementation (`fixtures/generate_fixtures.py`, cross-checked
+//! against a second reduction algorithm). To regenerate after an
+//! *intentional* semantic change, run with `DORY_REGEN_GOLDEN=1` — the
+//! fixtures are then rewritten from the in-tree explicit oracle — and
+//! commit the diff.
+
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+use dory::filtration::{EdgeFiltration, Neighborhoods};
+use dory::geometry::{MetricData, PointCloud, SparseDistances};
+use dory::homology::{compute_ph, EngineOptions};
+use dory::reduction::explicit::oracle_diagram;
+
+struct Fixture {
+    name: String,
+    max_dim: usize,
+    tau: f64,
+    data: MetricData,
+    /// (dim, birth bits, death bits); essential deaths are +inf bits.
+    pd: Vec<(usize, u64, u64)>,
+    path: PathBuf,
+}
+
+fn fixtures_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/tests/fixtures")
+}
+
+fn parse_hex_f64(s: &str) -> f64 {
+    f64::from_bits(u64::from_str_radix(s, 16).unwrap_or_else(|e| panic!("bad hex {s}: {e}")))
+}
+
+fn load_fixture(path: &Path) -> Fixture {
+    let text = std::fs::read_to_string(path).unwrap_or_else(|e| panic!("read {path:?}: {e}"));
+    let mut name = String::new();
+    let mut kind = String::new();
+    let mut max_dim = 0usize;
+    let mut tau = f64::INFINITY;
+    let mut dim = 0usize;
+    let mut n = 0usize;
+    let mut coords: Vec<f64> = Vec::new();
+    let mut entries: Vec<(u32, u32, f64)> = Vec::new();
+    let mut pd: Vec<(usize, u64, u64)> = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') || line == "end" {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let tag = it.next().unwrap();
+        match tag {
+            "name" => name = it.next().unwrap().to_string(),
+            "kind" => kind = it.next().unwrap().to_string(),
+            "max_dim" => max_dim = it.next().unwrap().parse().unwrap(),
+            "tau" => tau = parse_hex_f64(it.next().unwrap()),
+            "dim" => dim = it.next().unwrap().parse().unwrap(),
+            "n" => n = it.next().unwrap().parse().unwrap(),
+            "point" => coords.extend(it.map(parse_hex_f64)),
+            "entry" => {
+                let u: u32 = it.next().unwrap().parse().unwrap();
+                let v: u32 = it.next().unwrap().parse().unwrap();
+                let d = parse_hex_f64(it.next().unwrap());
+                entries.push((u, v, d));
+            }
+            "pd" => {
+                let d: usize = it.next().unwrap().parse().unwrap();
+                let birth = parse_hex_f64(it.next().unwrap()).to_bits();
+                let death_tok = it.next().unwrap();
+                let death = if death_tok == "inf" {
+                    f64::INFINITY.to_bits()
+                } else {
+                    parse_hex_f64(death_tok).to_bits()
+                };
+                pd.push((d, birth, death));
+            }
+            other => panic!("{path:?}: unknown tag {other}"),
+        }
+    }
+    let data = match kind.as_str() {
+        "points" => {
+            assert_eq!(coords.len(), n * dim, "{path:?}: point count");
+            MetricData::Points(PointCloud::new(dim, coords))
+        }
+        "sparse" => MetricData::Sparse(SparseDistances { n, entries }),
+        other => panic!("{path:?}: unknown kind {other}"),
+    };
+    pd.sort_unstable();
+    Fixture {
+        name,
+        max_dim,
+        tau,
+        data,
+        pd,
+        path: path.to_path_buf(),
+    }
+}
+
+fn diagram_bits(d: &dory::homology::Diagram, max_dim: usize) -> Vec<(usize, u64, u64)> {
+    let mut out = Vec::new();
+    for dim in 0..=max_dim {
+        for p in d.points(dim) {
+            out.push((dim, p.birth.to_bits(), p.death.to_bits()));
+        }
+    }
+    out.sort_unstable();
+    out
+}
+
+fn describe(pd: &[(usize, u64, u64)], max_dim: usize) -> String {
+    let mut s = String::new();
+    for dim in 0..=max_dim {
+        let _ = write!(s, "dim{dim}: {}  ", pd.iter().filter(|p| p.0 == dim).count());
+    }
+    s
+}
+
+/// Rewrite a fixture's `pd` lines from the in-tree explicit oracle.
+fn regen(fx: &Fixture) {
+    let f = EdgeFiltration::build(&fx.data, fx.tau);
+    let nb = Neighborhoods::build(&f, false);
+    let want = oracle_diagram(&f, &nb, fx.max_dim);
+    let bits = diagram_bits(&want, fx.max_dim);
+    let text = std::fs::read_to_string(&fx.path).unwrap();
+    let mut out = String::new();
+    for line in text.lines() {
+        if line.starts_with("pd ") || line == "end" {
+            continue;
+        }
+        out.push_str(line);
+        out.push('\n');
+    }
+    for &(dim, b, d) in &bits {
+        if d == f64::INFINITY.to_bits() {
+            let _ = writeln!(out, "pd {dim} {:016x} inf", b);
+        } else {
+            let _ = writeln!(out, "pd {dim} {:016x} {:016x}", b, d);
+        }
+    }
+    out.push_str("end\n");
+    std::fs::write(&fx.path, out).unwrap();
+    eprintln!("regenerated {:?} ({} points)", fx.path, bits.len());
+}
+
+fn check_fixture(file: &str) {
+    let path = fixtures_dir().join(file);
+    let fx = load_fixture(&path);
+    if std::env::var_os("DORY_REGEN_GOLDEN").is_some() {
+        regen(&fx);
+        return;
+    }
+    // Sequential and pipelined configurations must all hit the golden
+    // bits exactly.
+    let configs: Vec<(&str, EngineOptions)> = vec![
+        (
+            "sequential",
+            EngineOptions {
+                max_dim: fx.max_dim,
+                threads: 1,
+                ..Default::default()
+            },
+        ),
+        (
+            "t4-adaptive",
+            EngineOptions {
+                max_dim: fx.max_dim,
+                threads: 4,
+                batch_size: 32,
+                adaptive_batch: true,
+                batch_min: 4,
+                batch_max: 256,
+                ..Default::default()
+            },
+        ),
+        (
+            "t2-batch7",
+            EngineOptions {
+                max_dim: fx.max_dim,
+                threads: 2,
+                batch_size: 7,
+                adaptive_batch: false,
+                ..Default::default()
+            },
+        ),
+        (
+            "t8-grain1",
+            EngineOptions {
+                max_dim: fx.max_dim,
+                threads: 8,
+                batch_size: 100,
+                adaptive_batch: false,
+                steal_grain: 1,
+                ..Default::default()
+            },
+        ),
+    ];
+    for (label, opts) in configs {
+        let r = compute_ph(&fx.data, fx.tau, &opts);
+        let got = diagram_bits(&r.diagram, fx.max_dim);
+        if got != fx.pd {
+            let first_diff = got
+                .iter()
+                .zip(&fx.pd)
+                .position(|(a, b)| a != b)
+                .unwrap_or(got.len().min(fx.pd.len()));
+            panic!(
+                "{} [{}]: diagram deviates from golden fixture\n got: {}\nwant: {}\nfirst difference at sorted index {} (got {:?} vs want {:?})",
+                fx.name,
+                label,
+                describe(&got, fx.max_dim),
+                describe(&fx.pd, fx.max_dim),
+                first_diff,
+                got.get(first_diff),
+                fx.pd.get(first_diff),
+            );
+        }
+    }
+}
+
+#[test]
+fn golden_circle48() {
+    check_fixture("circle48.pd.txt");
+}
+
+#[test]
+fn golden_torus110() {
+    check_fixture("torus110.pd.txt");
+}
+
+#[test]
+fn golden_hic240() {
+    check_fixture("hic240.pd.txt");
+}

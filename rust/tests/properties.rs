@@ -114,8 +114,10 @@ fn property_engine_configs_are_equivalent() {
                             max_dim: 2,
                             threads,
                             batch_size: batch,
+                            adaptive_batch: false,
                             dense_lookup: dense,
                             algorithm,
+                            ..Default::default()
                         },
                     )
                     .diagram;

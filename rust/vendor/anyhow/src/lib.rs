@@ -1,0 +1,192 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The offline vendor set has no registry access, so this crate provides
+//! the small slice of the `anyhow` API the workspace actually uses:
+//!
+//! * [`Error`] — a context-chained error value (`{e}` prints the
+//!   outermost message, `{e:#}` the full `outer: ...: root` chain);
+//! * [`Result`] with a defaulted error type;
+//! * the [`Context`] extension trait on `Result` and `Option`;
+//! * the [`anyhow!`] and [`bail!`] macros.
+//!
+//! Deliberately NOT implemented: downcasting, backtraces, `std::error::
+//! Error` for [`Error`] (omitting it is what makes the blanket `From`
+//! impl coherent, exactly as in the real crate).
+
+use std::fmt;
+
+/// A context-chained error. `stack[0]` is the root cause; later entries
+/// are contexts added around it, outermost last.
+pub struct Error {
+    stack: Vec<String>,
+}
+
+impl Error {
+    /// Construct from any displayable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error {
+            stack: vec![m.to_string()],
+        }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, c: C) -> Error {
+        self.stack.push(c.to_string());
+        self
+    }
+
+    /// Messages from outermost context to root cause.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.stack.iter().rev().map(|s| s.as_str())
+    }
+
+    /// The innermost (root) message.
+    pub fn root_cause(&self) -> &str {
+        &self.stack[0]
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` renders the whole chain: "outer: inner: root".
+            for (i, m) in self.stack.iter().rev().enumerate() {
+                if i > 0 {
+                    f.write_str(": ")?;
+                }
+                f.write_str(m)?;
+            }
+            Ok(())
+        } else {
+            f.write_str(self.stack.last().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{self:#}")
+    }
+}
+
+/// Any std error converts, capturing its `source()` chain as context.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut msgs = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        // Root cause first, outermost message last.
+        msgs.reverse();
+        Error { stack: msgs }
+    }
+}
+
+/// `anyhow::Result<T>` with the error type defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(...)` / `.with_context(...)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, c: C) -> Result<T, Error>;
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, c: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(c))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, c: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Early-return with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<u32> {
+        let v: u32 = s.parse().context("not a number")?;
+        Ok(v)
+    }
+
+    #[test]
+    fn context_chains_render() {
+        let e = parse("x").unwrap_err();
+        assert_eq!(format!("{e}"), "not a number");
+        let full = format!("{e:#}");
+        assert!(full.starts_with("not a number: "), "{full}");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.with_context(|| format!("missing {}", 7)).unwrap_err();
+        assert_eq!(format!("{e}"), "missing 7");
+    }
+
+    #[test]
+    fn bail_and_anyhow() {
+        fn f(flag: bool) -> Result<()> {
+            if flag {
+                bail!("flag was {flag}");
+            }
+            Err(anyhow!("fell through"))
+        }
+        assert_eq!(format!("{}", f(true).unwrap_err()), "flag was true");
+        assert_eq!(format!("{}", f(false).unwrap_err()), "fell through");
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let e: Error = std::fs::read_to_string("/definitely/not/here")
+            .context("reading config")
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "reading config");
+    }
+}
