@@ -139,6 +139,47 @@ fn main() {
         "pool cumulative", ps.generations, ps.tasks, ps.steals
     );
 
+    // --- sharded H2* enumeration on the pool --------------------------------
+    // Smoke assertion for CI: the H2* (and H1*) column enumeration must
+    // execute as work-stealing tasks on the pool workers — if the
+    // enumeration span ever falls back to the scheduler thread the shard
+    // stats go to zero and this bench exits nonzero.
+    let sphere = datasets::sphere(150, 1.0, 0.0, 1);
+    let fs = EdgeFiltration::build(&sphere, 1.0);
+    let opts = EngineOptions {
+        max_dim: 2,
+        threads: 4,
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let r = dory::homology::compute_ph_from_filtration(&fs, &opts);
+    let dt = t0.elapsed().as_secs_f64();
+    let s2 = r.stats.h2_sched;
+    println!(
+        "{:<42} {dt:>11.3} s    (H2* enum: {} shards, {} cols, busy {:.3}s, blocked {:.3}s)",
+        "engine 4 threads (H2, sphere150)",
+        s2.enum_shards,
+        s2.enum_columns,
+        s2.enum_busy_ns as f64 * 1e-9,
+        s2.enum_block_ns as f64 * 1e-9,
+    );
+    // Deterministic counters only (shard/column counts, not measured
+    // nanoseconds) so a coarse platform clock cannot flake this CI gate.
+    assert!(
+        s2.enum_shards > 0 && s2.enum_columns > 0,
+        "H2* column enumeration ran on the scheduler thread (no pool shards recorded)"
+    );
+    assert!(
+        r.stats.h1_sched.enum_shards > 0 && r.stats.h1_sched.enum_columns > 0,
+        "H1* column enumeration ran on the scheduler thread (no pool shards recorded)"
+    );
+    out = out
+        .field("h2_engine_4t_s", dt)
+        .field("h2_enum_shards", s2.enum_shards as i64)
+        .field("h2_enum_columns", s2.enum_columns as i64)
+        .field("h2_enum_busy_s", s2.enum_busy_ns as f64 * 1e-9)
+        .field("h2_enum_block_s", s2.enum_block_ns as f64 * 1e-9);
+
     // --- F1 construction ----------------------------------------------------
     let t0 = Instant::now();
     let f2 = EdgeFiltration::build(&data, 0.3);

@@ -203,6 +203,20 @@ impl TriCursor {
     }
 }
 
+/// Append the H1\* column ids (edge orders, descending) of `range` that
+/// survive dim-0 clearing (`negative[e]` edges killed a component and
+/// are skipped). The per-shard primitive of the sharded H1\*
+/// enumeration: tiling `0..n_e` with descending ranges and
+/// concatenating the outputs reproduces the sequential
+/// `(0..n_e).rev().filter(..)` stream exactly.
+pub fn edge_columns_in_range(range: std::ops::Range<u32>, negative: &[bool], out: &mut Vec<u64>) {
+    for e in range.rev() {
+        if !negative[e as usize] {
+            out.push(e as u64);
+        }
+    }
+}
+
 /// Reference enumeration of `δe` by brute force, in key order. Test oracle.
 pub fn brute_force_coboundary(
     nb: &Neighborhoods,
@@ -328,6 +342,27 @@ mod tests {
                 assert_eq!(c, fresh, "state must be canonical at {}", c.cur);
                 c.find_next(&nb);
             }
+        }
+    }
+
+    #[test]
+    fn edge_column_shards_tile_to_sequential_stream() {
+        let mut rng = Pcg32::new(31);
+        let ne = 57u32;
+        let negative: Vec<bool> = (0..ne).map(|_| rng.next_f64() < 0.3).collect();
+        let want: Vec<u64> = (0..ne as u64)
+            .rev()
+            .filter(|&e| !negative[e as usize])
+            .collect();
+        for grain in [1u32, 4, 13, ne] {
+            let mut got = Vec::new();
+            let mut hi = ne;
+            while hi > 0 {
+                let lo = hi.saturating_sub(grain);
+                edge_columns_in_range(lo..hi, &negative, &mut got);
+                hi = lo;
+            }
+            assert_eq!(got, want, "grain={grain}");
         }
     }
 

@@ -255,6 +255,35 @@ pub fn brute_force_coboundary(
     out
 }
 
+/// Visit, in canonical reverse-filtration order, every triangle whose
+/// diameter edge lies in `range`: diameter edges walked descending,
+/// secondaries descending within each edge — exactly the order the H2\*
+/// engine feeds its reduction. `visit` returning `false` drops the
+/// triangle from the stream (clearing) without breaking the walk.
+///
+/// This is the per-shard enumeration primitive of the sharded H2\*
+/// pipeline: tiling `0..n_e` with ranges (descending) and concatenating
+/// the shards' outputs reproduces the full sequential enumeration
+/// byte for byte (pinned by `rust/tests/differential.rs`).
+pub fn triangles_with_diameter_in_range(
+    nb: &Neighborhoods,
+    f1: &crate::filtration::EdgeFiltration,
+    range: std::ops::Range<u32>,
+    mut visit: impl FnMut(Key) -> bool,
+    out: &mut Vec<u64>,
+) {
+    for e in range.rev() {
+        let (a, b) = f1.edges[e as usize];
+        let tris = triangles_with_diameter(nb, e, a, b);
+        for &v in tris.iter().rev() {
+            let t = Key::new(e, v);
+            if visit(t) {
+                out.push(t.pack());
+            }
+        }
+    }
+}
+
 /// All case-1 triangles of edge `e` (diameter = e), i.e. all triangles with
 /// primary key `e`, as secondary keys sorted ascending. Used by the engine
 /// to enumerate triangle columns grouped by diameter edge.
@@ -382,6 +411,36 @@ mod tests {
                 c.find_next(&nb);
             }
         }
+    }
+
+    #[test]
+    fn range_enumeration_tiles_to_full_sequence() {
+        // Concatenating descending shard ranges must reproduce the full
+        // descending enumeration byte for byte, for every tiling.
+        let f = random_filtration(18, 3, 0.9, 21);
+        let nb = Neighborhoods::build(&f, false);
+        let ne = f.n_edges() as u32;
+        let mut want: Vec<u64> = Vec::new();
+        triangles_with_diameter_in_range(&nb, &f, 0..ne, |_| true, &mut want);
+        for grain in [1u32, 2, 5, ne.max(1)] {
+            let mut got: Vec<u64> = Vec::new();
+            let mut hi = ne;
+            while hi > 0 {
+                let lo = hi.saturating_sub(grain);
+                triangles_with_diameter_in_range(&nb, &f, lo..hi, |_| true, &mut got);
+                hi = lo;
+            }
+            assert_eq!(got, want, "grain={grain}");
+        }
+        // The filter drops exactly the rejected keys, preserving order.
+        let mut filtered: Vec<u64> = Vec::new();
+        triangles_with_diameter_in_range(&nb, &f, 0..ne, |t| t.s % 2 == 0, &mut filtered);
+        let expect: Vec<u64> = want
+            .iter()
+            .copied()
+            .filter(|&p| Key::unpack(p).s % 2 == 0)
+            .collect();
+        assert_eq!(filtered, expect);
     }
 
     #[test]

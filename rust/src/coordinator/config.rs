@@ -135,6 +135,15 @@ pub struct RunConfig {
     pub batch_max: usize,
     /// Columns per work-stealing task; 0 = auto.
     pub steal_grain: usize,
+    /// Serial-fraction bounds for the batch adaptation (double below
+    /// `adapt_low`, halve above `adapt_high`).
+    pub adapt_low: f64,
+    pub adapt_high: f64,
+    /// Shards for the pooled H1*/H2* column enumeration; 0 = auto.
+    pub enum_shards: usize,
+    /// Diameter edges per enumeration shard; 0 = auto (wins over
+    /// `enum_shards` when both are set).
+    pub enum_grain: usize,
     pub dense_lookup: bool,
     pub algorithm: String,
     pub artifacts: PathBuf,
@@ -162,6 +171,10 @@ impl Default for RunConfig {
             batch_min: 16,
             batch_max: 8192,
             steal_grain: 0,
+            adapt_low: 0.25,
+            adapt_high: 0.75,
+            enum_shards: 0,
+            enum_grain: 0,
             dense_lookup: false,
             algorithm: "fast-column".into(),
             artifacts: PathBuf::from("artifacts"),
@@ -242,6 +255,18 @@ impl RunConfig {
                             "steal_grain" => {
                                 cfg.steal_grain = v.as_usize().context("engine.steal_grain")?
                             }
+                            "adapt_low" => {
+                                cfg.adapt_low = v.as_f64().context("engine.adapt_low")?
+                            }
+                            "adapt_high" => {
+                                cfg.adapt_high = v.as_f64().context("engine.adapt_high")?
+                            }
+                            "enum_shards" => {
+                                cfg.enum_shards = v.as_usize().context("engine.enum_shards")?
+                            }
+                            "enum_grain" => {
+                                cfg.enum_grain = v.as_usize().context("engine.enum_grain")?
+                            }
                             "dense_lookup" => {
                                 cfg.dense_lookup = v.as_bool().context("engine.dense_lookup")?
                             }
@@ -301,6 +326,12 @@ impl RunConfig {
         }
         if self.batch_min == 0 || self.batch_min > self.batch_max {
             bail!("batch_min must be >= 1 and <= batch_max");
+        }
+        if !(0.0..=1.0).contains(&self.adapt_low)
+            || !(0.0..=1.0).contains(&self.adapt_high)
+            || self.adapt_low > self.adapt_high
+        {
+            bail!("adapt_low/adapt_high must satisfy 0 <= adapt_low <= adapt_high <= 1");
         }
         Ok(())
     }
@@ -383,6 +414,30 @@ diagram_csv = "out/pd.csv"
         assert_eq!(cfg.batch_min, 4);
         assert_eq!(cfg.batch_max, 256);
         assert_eq!(cfg.steal_grain, 8);
+    }
+
+    #[test]
+    fn enumeration_and_adaptation_knobs_parse() {
+        let cfg = RunConfig::from_str(
+            "[engine]\nenum_shards = 12\nenum_grain = 64\nadapt_low = 0.1\nadapt_high = 0.9\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.enum_shards, 12);
+        assert_eq!(cfg.enum_grain, 64);
+        assert_eq!(cfg.adapt_low, 0.1);
+        assert_eq!(cfg.adapt_high, 0.9);
+        // Defaults match the original hard-coded 25%/75% thresholds.
+        let d = RunConfig::default();
+        assert_eq!((d.adapt_low, d.adapt_high), (0.25, 0.75));
+        assert_eq!((d.enum_shards, d.enum_grain), (0, 0));
+    }
+
+    #[test]
+    fn rejects_bad_adaptation_bounds() {
+        assert!(RunConfig::from_str("[engine]\nadapt_low = 0.8\nadapt_high = 0.2\n").is_err());
+        assert!(RunConfig::from_str("[engine]\nadapt_high = 1.5\n").is_err());
+        assert!(RunConfig::from_str("[engine]\nadapt_low = -0.1\n").is_err());
+        assert!(RunConfig::from_str("[engine]\nadapt_low = 0.5\nadapt_high = 0.5\n").is_ok());
     }
 
     #[test]

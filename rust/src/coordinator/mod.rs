@@ -123,6 +123,10 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
         batch_min: cfg.batch_min,
         batch_max: cfg.batch_max,
         steal_grain: cfg.steal_grain,
+        adapt_low: cfg.adapt_low,
+        adapt_high: cfg.adapt_high,
+        enum_shards: cfg.enum_shards,
+        enum_grain: cfg.enum_grain,
         dense_lookup: cfg.dense_lookup,
         algorithm: match cfg.algorithm.as_str() {
             "implicit-row" => Algorithm::ImplicitRow,
@@ -237,6 +241,10 @@ pub fn summary_json(cfg: &RunConfig, r: &RunReport) -> Json {
             "scheduler",
             Json::obj()
                 .field("adaptive_batch", cfg.adaptive_batch)
+                .field("adapt_low", cfg.adapt_low)
+                .field("adapt_high", cfg.adapt_high)
+                .field("enum_shards", cfg.enum_shards)
+                .field("enum_grain", cfg.enum_grain)
                 .field("h1", r.result.stats.h1_sched.to_json())
                 .field("h2", r.result.stats.h2_sched.to_json()),
         )

@@ -10,19 +10,32 @@
 //!   triangle of a trivial H1 pair is `smallest_tri[e]`); pairs `(t, h)`
 //!   are H2 (birth, death).
 //!
+//! With `threads > 1` the column enumeration of both H1* and H2* is
+//! **sharded over the work-stealing pool**: the descending diameter-edge
+//! range is tiled into shards ([`crate::reduction::shard_plan`], knobs
+//! `enum_shards`/`enum_grain`), workers enumerate each shard into a
+//! private buffer (driving `triangles_with_diameter` per edge), and the
+//! pipelined scheduler splices the shards back in canonical order while
+//! already reducing earlier chunks — see
+//! [`crate::reduction::serial_parallel`] for the three-stage pipeline.
+//! The [`Engine`] owns one persistent pool, reused across H1*/H2* and
+//! across repeated [`Engine::compute`] calls (multi-run service mode).
+//!
 //! Engine choices (sequential fast-column, serial–parallel fast-column,
 //! implicit-row) and the sparse/dense `edge_order` lookup (Dory vs DoryNS)
 //! are the paper's ablation axes (Tables 3 & 4).
 
 use std::collections::HashSet;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
-use crate::coboundary::triangles::triangles_with_diameter;
+use crate::coboundary::edges::edge_columns_in_range;
+use crate::coboundary::triangles::{triangles_with_diameter, triangles_with_diameter_in_range};
 use crate::filtration::{EdgeFiltration, Key, Neighborhoods};
 use crate::geometry::MetricData;
 use crate::reduction::pool::ThreadPool;
 use crate::reduction::{
-    fast_column, implicit_row, serial_parallel, EdgeColumns, ReduceResult, ReduceStats,
-    SchedConfig, SchedStats, TriangleColumns,
+    fast_column, implicit_row, serial_parallel, shard_plan, ColumnShards, EdgeColumns,
+    ReduceResult, ReduceStats, SchedConfig, SchedStats, TriangleColumns,
 };
 use crate::util::timer::PhaseTimer;
 
@@ -55,6 +68,16 @@ pub struct EngineOptions {
     pub batch_max: usize,
     /// Columns per work-stealing task; 0 = auto.
     pub steal_grain: usize,
+    /// Serial-fraction bounds steering the batch-size adaptation: below
+    /// `adapt_low` the batch doubles, above `adapt_high` it halves.
+    pub adapt_low: f64,
+    pub adapt_high: f64,
+    /// Shards for the pooled H1*/H2* column enumeration; 0 = auto.
+    /// Ignored (enumeration is inline) for sequential runs.
+    pub enum_shards: usize,
+    /// Diameter edges per enumeration shard; 0 = auto. Takes precedence
+    /// over `enum_shards` when both are set.
+    pub enum_grain: usize,
     /// DoryNS: O(n²) dense edge-order lookup instead of binary search.
     pub dense_lookup: bool,
     pub algorithm: Algorithm,
@@ -70,6 +93,10 @@ impl Default for EngineOptions {
             batch_min: 16,
             batch_max: 8192,
             steal_grain: 0,
+            adapt_low: 0.25,
+            adapt_high: 0.75,
+            enum_shards: 0,
+            enum_grain: 0,
             dense_lookup: false,
             algorithm: Algorithm::FastColumn,
         }
@@ -85,7 +112,14 @@ impl EngineOptions {
             batch_min: self.batch_min,
             batch_max: self.batch_max,
             steal_grain: self.steal_grain,
+            adapt_low: self.adapt_low,
+            adapt_high: self.adapt_high,
         }
+    }
+
+    /// The enumeration shard plan over `n_e` diameter edges.
+    pub fn enum_plan(&self, n_edges: usize) -> Vec<std::ops::Range<u32>> {
+        shard_plan(n_edges, self.threads, self.enum_shards, self.enum_grain)
     }
 }
 
@@ -125,176 +159,284 @@ pub struct PhResult {
     pub h1_essential_edges: Vec<u32>,
 }
 
-/// Compute PH of a metric input up to `opts.max_dim` with threshold `tau`.
-pub fn compute_ph(data: &MetricData, tau: f64, opts: &EngineOptions) -> PhResult {
-    let mut timings = PhaseTimer::new();
-    timings.start("F1");
-    let f = EdgeFiltration::build(data, tau);
-    timings.stop();
-    let mut r = compute_ph_from_filtration_timed(&f, opts, timings);
-    r.stats.n = data.n();
-    r
+/// Sharded H1\* column source: edge orders descending, dim-0 clearing
+/// applied inside each shard.
+struct H1Shards<'a> {
+    negative: &'a [bool],
+    ranges: Vec<std::ops::Range<u32>>,
 }
 
-/// Compute PH from a pre-built edge filtration.
-pub fn compute_ph_from_filtration(f: &EdgeFiltration, opts: &EngineOptions) -> PhResult {
-    compute_ph_from_filtration_timed(f, opts, PhaseTimer::new())
+impl ColumnShards for H1Shards<'_> {
+    fn n_shards(&self) -> usize {
+        self.ranges.len()
+    }
+
+    fn fill(&self, shard: usize, out: &mut Vec<u64>) {
+        edge_columns_in_range(self.ranges[shard].clone(), self.negative, out);
+    }
 }
 
-fn compute_ph_from_filtration_timed(
-    f: &EdgeFiltration,
-    opts: &EngineOptions,
-    mut timings: PhaseTimer,
-) -> PhResult {
-    assert!(opts.max_dim <= 2, "Dory computes up to H2 (paper scope)");
-    let mut stats = EngineStats {
-        n: f.n as usize,
-        n_edges: f.n_edges(),
-        base_memory_bytes: f.base_memory_model_bytes(),
-        ..Default::default()
-    };
-    let mut diagram = Diagram::new(opts.max_dim);
+/// Sharded H2\* column source: triangles grouped by descending diameter
+/// edge, with trivial-death and H1-death clearing applied inside each
+/// shard. Cleared counts accumulate order-independently into an atomic,
+/// so the total is deterministic across steal schedules.
+struct H2Shards<'a> {
+    nb: &'a Neighborhoods,
+    f: &'a EdgeFiltration,
+    smallest_tri: &'a [Key],
+    h1_deaths: &'a HashSet<u64>,
+    ranges: Vec<std::ops::Range<u32>>,
+    cleared: AtomicUsize,
+}
 
-    timings.start("neighborhoods");
-    let nb = Neighborhoods::build(f, opts.dense_lookup);
-    timings.stop();
-
-    // ---- H0 -------------------------------------------------------------
-    timings.start("H0");
-    let h0r = h0::compute(f);
-    for &e in &h0r.death_edges {
-        diagram.push(0, 0.0, f.values[e as usize]);
+impl ColumnShards for H2Shards<'_> {
+    fn n_shards(&self) -> usize {
+        self.ranges.len()
     }
-    for _ in 0..h0r.essential {
-        diagram.push(0, 0.0, f64::INFINITY);
+
+    fn fill(&self, shard: usize, out: &mut Vec<u64>) {
+        let mut cleared = 0usize;
+        triangles_with_diameter_in_range(
+            self.nb,
+            self.f,
+            self.ranges[shard].clone(),
+            |t| {
+                if self.smallest_tri[t.p as usize] == t || self.h1_deaths.contains(&t.pack()) {
+                    cleared += 1; // death of a trivial or real H1 pair
+                    false
+                } else {
+                    true
+                }
+            },
+            out,
+        );
+        self.cleared.fetch_add(cleared, Ordering::Relaxed);
     }
-    stats.h0_deaths = h0r.death_edges.len();
-    stats.h0_essential = h0r.essential;
-    timings.stop();
+}
 
-    let mut h1_pairs = Vec::new();
-    let mut h1_essential_edges = Vec::new();
+/// A persistent PH engine: options plus the worker pool they imply.
+///
+/// The pool is created once and reused across the H1\* and H2\* phases
+/// *and* across repeated [`Engine::compute`] calls — no worker threads
+/// are spawned or torn down between runs, which is what the multi-run
+/// service mode needs. `rust/tests/differential.rs` stress-tests that
+/// reuse (20 back-to-back runs on one engine, bit-identical output,
+/// deterministic generation accounting).
+pub struct Engine {
+    opts: EngineOptions,
+    pool: Option<ThreadPool>,
+}
 
-    let pool = if opts.threads > 1 {
-        Some(ThreadPool::new(opts.threads))
-    } else {
-        None
-    };
+impl Engine {
+    pub fn new(opts: EngineOptions) -> Self {
+        assert!(opts.max_dim <= 2, "Dory computes up to H2 (paper scope)");
+        // Only the fast-column scheduler consumes the pool; implicit-row
+        // is sequential by design (Table 4 ablation), so a persistent
+        // engine must not park idle workers for it.
+        let pool = if opts.threads > 1 && opts.algorithm == Algorithm::FastColumn {
+            Some(ThreadPool::new(opts.threads))
+        } else {
+            None
+        };
+        Self { opts, pool }
+    }
 
-    if opts.max_dim >= 1 {
-        // ---- H1* ---------------------------------------------------------
-        timings.start("H1*");
-        let space = EdgeColumns::new(&nb, f);
-        let ne = f.n_edges();
-        let cols: Vec<u64> = (0..ne as u64)
-            .rev()
-            .filter(|&e| !h0r.negative[e as usize])
-            .collect();
-        stats.h1_cleared = ne - cols.len();
-        // H1 keeps zero-persistence pairs: their death triangles feed the
-        // dim-2 clearing set.
-        let res = run_reduction(&space, &cols, opts, &pool, true, f);
-        stats.h1_sched = res.sched;
-        for &(col, key) in &res.pairs {
-            let e = col as u32;
-            diagram.push(1, f.values[e as usize], f.key_value(key));
-            h1_pairs.push((e, key));
-        }
-        for &col in &res.essential {
-            let e = col as u32;
-            diagram.push(1, f.values[e as usize], f64::INFINITY);
-            h1_essential_edges.push(e);
-        }
-        stats.h1 = res.stats;
+    pub fn options(&self) -> &EngineOptions {
+        &self.opts
+    }
+
+    /// The engine's persistent pool (`None` for sequential engines).
+    pub fn pool(&self) -> Option<&ThreadPool> {
+        self.pool.as_ref()
+    }
+
+    /// Compute PH of a metric input up to `max_dim` with threshold `tau`.
+    pub fn compute_metric(&self, data: &MetricData, tau: f64) -> PhResult {
+        let mut timings = PhaseTimer::new();
+        timings.start("F1");
+        let f = EdgeFiltration::build(data, tau);
+        timings.stop();
+        let mut r = self.compute_timed(&f, timings);
+        r.stats.n = data.n();
+        r
+    }
+
+    /// Compute PH from a pre-built edge filtration.
+    pub fn compute(&self, f: &EdgeFiltration) -> PhResult {
+        self.compute_timed(f, PhaseTimer::new())
+    }
+
+    fn compute_timed(&self, f: &EdgeFiltration, mut timings: PhaseTimer) -> PhResult {
+        let opts = &self.opts;
+        let mut stats = EngineStats {
+            n: f.n as usize,
+            n_edges: f.n_edges(),
+            base_memory_bytes: f.base_memory_model_bytes(),
+            ..Default::default()
+        };
+        let mut diagram = Diagram::new(opts.max_dim);
+
+        timings.start("neighborhoods");
+        let nb = Neighborhoods::build(f, opts.dense_lookup);
         timings.stop();
 
-        if opts.max_dim >= 2 {
-            // ---- H2* -------------------------------------------------------
-            timings.start("H2*");
-            let h1_deaths: HashSet<u64> = res.pairs.iter().map(|&(_, k)| k.pack()).collect();
-            let tspace = TriangleColumns::new(&nb, f);
-            // Enumerate triangle columns in reverse filtration order,
-            // applying clearing on the fly (trivial-death skip is O(1)).
-            let mut cols: Vec<u64> = Vec::new();
-            let mut cleared = 0usize;
-            for e in (0..ne as u32).rev() {
-                let (a, b) = f.edges[e as usize];
-                let tris = triangles_with_diameter(&nb, e, a, b);
-                for &v in tris.iter().rev() {
-                    let t = Key::new(e, v);
-                    if space.smallest_tri[e as usize] == t {
-                        cleared += 1; // death of a trivial H1 pair
-                        continue;
-                    }
-                    if h1_deaths.contains(&t.pack()) {
-                        cleared += 1;
-                        continue;
-                    }
-                    cols.push(t.pack());
-                }
+        // ---- H0 ---------------------------------------------------------
+        timings.start("H0");
+        let h0r = h0::compute(f);
+        for &e in &h0r.death_edges {
+            diagram.push(0, 0.0, f.values[e as usize]);
+        }
+        for _ in 0..h0r.essential {
+            diagram.push(0, 0.0, f64::INFINITY);
+        }
+        stats.h0_deaths = h0r.death_edges.len();
+        stats.h0_essential = h0r.essential;
+        timings.stop();
+
+        let mut h1_pairs = Vec::new();
+        let mut h1_essential_edges = Vec::new();
+
+        if opts.max_dim >= 1 {
+            // ---- H1* ----------------------------------------------------
+            timings.start("H1*");
+            let space = EdgeColumns::new(&nb, f);
+            let ne = f.n_edges();
+            let h1_src = H1Shards {
+                negative: &h0r.negative,
+                ranges: opts.enum_plan(ne),
+            };
+            // H1 keeps zero-persistence pairs: their death triangles feed
+            // the dim-2 clearing set.
+            let res = self.run_reduction(&space, &h1_src, true, f);
+            stats.h1_cleared = ne - res.stats.columns;
+            stats.h1_sched = res.sched;
+            for &(col, key) in &res.pairs {
+                let e = col as u32;
+                diagram.push(1, f.values[e as usize], f.key_value(key));
+                h1_pairs.push((e, key));
             }
-            stats.h2_cleared = cleared;
-            let res2 = run_reduction(&tspace, &cols, opts, &pool, false, f);
-            stats.h2_sched = res2.sched;
-            for &(col, key) in &res2.pairs {
-                let t = Key::unpack(col);
-                diagram.push(2, f.key_value(t), f.key_value(key));
+            for &col in &res.essential {
+                let e = col as u32;
+                diagram.push(1, f.values[e as usize], f64::INFINITY);
+                h1_essential_edges.push(e);
             }
-            for &col in &res2.essential {
-                let t = Key::unpack(col);
-                diagram.push(2, f.key_value(t), f64::INFINITY);
-            }
-            stats.h2 = res2.stats;
+            stats.h1 = res.stats;
             timings.stop();
+
+            if opts.max_dim >= 2 {
+                // ---- H2* ------------------------------------------------
+                // Triangle columns are enumerated in reverse filtration
+                // order with clearing applied on the fly (the trivial-
+                // death skip is O(1)); with a pool, the enumeration runs
+                // sharded on the workers inside the reduction pipeline.
+                timings.start("H2*");
+                let h1_deaths: HashSet<u64> =
+                    res.pairs.iter().map(|&(_, k)| k.pack()).collect();
+                let tspace = TriangleColumns::new(&nb, f);
+                let h2_src = H2Shards {
+                    nb: &nb,
+                    f,
+                    smallest_tri: &space.smallest_tri,
+                    h1_deaths: &h1_deaths,
+                    ranges: opts.enum_plan(ne),
+                    cleared: AtomicUsize::new(0),
+                };
+                let res2 = self.run_reduction(&tspace, &h2_src, false, f);
+                stats.h2_cleared = h2_src.cleared.load(Ordering::Relaxed);
+                stats.h2_sched = res2.sched;
+                for &(col, key) in &res2.pairs {
+                    let t = Key::unpack(col);
+                    diagram.push(2, f.key_value(t), f.key_value(key));
+                }
+                for &col in &res2.essential {
+                    let t = Key::unpack(col);
+                    diagram.push(2, f.key_value(t), f64::INFINITY);
+                }
+                stats.h2 = res2.stats;
+                timings.stop();
+            }
+        }
+
+        timings.stop();
+        PhResult {
+            diagram,
+            stats,
+            timings,
+            h1_pairs,
+            h1_essential_edges,
         }
     }
 
-    timings.stop();
-    PhResult {
-        diagram,
-        stats,
-        timings,
-        h1_pairs,
-        h1_essential_edges,
+    fn run_reduction<S: crate::reduction::ColumnSpace, Src: ColumnShards>(
+        &self,
+        space: &S,
+        src: &Src,
+        keep_zero_pairs: bool,
+        f: &EdgeFiltration,
+    ) -> ReduceResult {
+        let opts = &self.opts;
+        // Column birth value: for edges the id *is* the order; for
+        // triangles the id is a packed key whose primary carries the
+        // value. Both cases are covered by inspecting the id width: edge
+        // ids < 2^32.
+        let value_of = |col: u64| -> f64 {
+            if col <= u32::MAX as u64 {
+                f.values[col as usize]
+            } else {
+                f.key_value(Key::unpack(col))
+            }
+        };
+        let key_value = |k: Key| f.key_value(k);
+        match (opts.algorithm, &self.pool) {
+            (Algorithm::FastColumn, Some(pool)) => serial_parallel::reduce_stream(
+                space,
+                src,
+                &opts.sched_config(),
+                pool,
+                keep_zero_pairs,
+                value_of,
+                key_value,
+            ),
+            (algorithm, _) => {
+                // Sequential paths materialize the stream inline through
+                // the same shard primitives, so the column sequence is
+                // identical by construction.
+                let mut cols: Vec<u64> = Vec::new();
+                for s in 0..src.n_shards() {
+                    src.fill(s, &mut cols);
+                }
+                match algorithm {
+                    Algorithm::ImplicitRow => implicit_row::reduce_all(
+                        space,
+                        cols.iter().copied(),
+                        keep_zero_pairs,
+                        value_of,
+                        key_value,
+                    ),
+                    Algorithm::FastColumn => fast_column::reduce_all(
+                        space,
+                        cols.iter().copied(),
+                        keep_zero_pairs,
+                        value_of,
+                        key_value,
+                    ),
+                }
+            }
+        }
     }
 }
 
-fn run_reduction<S: crate::reduction::ColumnSpace>(
-    space: &S,
-    cols: &[u64],
-    opts: &EngineOptions,
-    pool: &Option<ThreadPool>,
-    keep_zero_pairs: bool,
-    f: &EdgeFiltration,
-) -> ReduceResult {
-    // Column birth value: for edges the id *is* the order; for triangles
-    // the id is a packed key whose primary carries the value. Both cases
-    // are covered by inspecting the id width: edge ids < 2^32.
-    let value_of = |col: u64| -> f64 {
-        if col <= u32::MAX as u64 {
-            f.values[col as usize]
-        } else {
-            f.key_value(Key::unpack(col))
-        }
-    };
-    let key_value = |k: Key| f.key_value(k);
-    match (opts.algorithm, pool) {
-        (Algorithm::ImplicitRow, _) => {
-            implicit_row::reduce_all(space, cols.iter().copied(), keep_zero_pairs, value_of, key_value)
-        }
-        (Algorithm::FastColumn, None) => {
-            fast_column::reduce_all(space, cols.iter().copied(), keep_zero_pairs, value_of, key_value)
-        }
-        (Algorithm::FastColumn, Some(pool)) => serial_parallel::reduce_all(
-            space,
-            cols,
-            &opts.sched_config(),
-            pool,
-            keep_zero_pairs,
-            value_of,
-            key_value,
-        ),
-    }
+/// Compute PH of a metric input up to `opts.max_dim` with threshold
+/// `tau`, on a transient [`Engine`].
+pub fn compute_ph(data: &MetricData, tau: f64, opts: &EngineOptions) -> PhResult {
+    Engine::new(opts.clone()).compute_metric(data, tau)
+}
+
+/// Compute PH from a pre-built edge filtration, on a transient
+/// [`Engine`]. Callers computing many filtrations should hold an
+/// [`Engine`] instead to reuse its worker pool.
+pub fn compute_ph_from_filtration(f: &EdgeFiltration, opts: &EngineOptions) -> PhResult {
+    Engine::new(opts.clone()).compute(f)
 }
 
 /// Count simplices of the flag complex (Table 1's `N` column).
@@ -386,26 +528,92 @@ mod tests {
                 for dense in [false, true] {
                     for (batch, adaptive) in [(1usize, false), (7, false), (100, false), (8, true)]
                     {
-                        let opts = EngineOptions {
-                            max_dim: 2,
-                            threads,
-                            batch_size: batch,
-                            adaptive_batch: adaptive,
-                            batch_min: 2,
-                            dense_lookup: dense,
-                            algorithm,
-                            ..Default::default()
-                        };
-                        let got = compute_ph_from_filtration(&f, &opts).diagram;
-                        assert!(
-                            got.multiset_eq(&reference, 1e-9),
-                            "algo={algorithm:?} threads={threads} dense={dense} batch={batch} adaptive={adaptive}:\n{}",
-                            got.diff_summary(&reference)
-                        );
+                        for (enum_shards, enum_grain) in [(0usize, 0usize), (3, 0), (0, 2)] {
+                            let opts = EngineOptions {
+                                max_dim: 2,
+                                threads,
+                                batch_size: batch,
+                                adaptive_batch: adaptive,
+                                batch_min: 2,
+                                enum_shards,
+                                enum_grain,
+                                dense_lookup: dense,
+                                algorithm,
+                                ..Default::default()
+                            };
+                            let got = compute_ph_from_filtration(&f, &opts).diagram;
+                            assert!(
+                                got.multiset_eq(&reference, 1e-9),
+                                "algo={algorithm:?} threads={threads} dense={dense} batch={batch} adaptive={adaptive} shards={enum_shards} grain={enum_grain}:\n{}",
+                                got.diff_summary(&reference)
+                            );
+                        }
                     }
                 }
             }
         }
+    }
+
+    #[test]
+    fn pooled_enumeration_runs_on_workers() {
+        // With a pool, both H1* and H2* column enumeration must execute
+        // as pool tasks (nonzero shards and worker busy time), not on
+        // the scheduler thread.
+        let data = random_cloud(24, 3, 7);
+        let f = EdgeFiltration::build(&data, 0.9);
+        let opts = EngineOptions {
+            max_dim: 2,
+            threads: 4,
+            enum_shards: 5,
+            ..Default::default()
+        };
+        let r = compute_ph_from_filtration(&f, &opts);
+        for (label, s) in [("h1", &r.stats.h1_sched), ("h2", &r.stats.h2_sched)] {
+            assert!(s.enum_shards > 0, "{label}: no enumeration shards on the pool");
+            assert!(s.tasks >= s.enum_shards, "{label}: shards must be pool tasks");
+        }
+        // H1 always has surviving (non-negative) edge columns here; H2
+        // column counts depend on clearing, so only H1 is asserted.
+        assert!(r.stats.h1_sched.enum_columns > 0);
+        assert_eq!(
+            r.stats.h1_sched.enum_columns as usize + r.stats.h1_cleared,
+            f.n_edges(),
+            "enumerated + cleared H1 columns must cover every edge"
+        );
+        // Sequential runs enumerate inline: shard stats stay zero.
+        let seq = compute_ph_from_filtration(
+            &f,
+            &EngineOptions {
+                max_dim: 2,
+                threads: 1,
+                ..Default::default()
+            },
+        );
+        assert_eq!(seq.stats.h2_sched.enum_shards, 0);
+        assert!(r.diagram.multiset_eq(&seq.diagram, 0.0));
+    }
+
+    #[test]
+    fn engine_reuses_pool_across_runs() {
+        let data = random_cloud(22, 3, 13);
+        let f = EdgeFiltration::build(&data, 0.85);
+        let engine = Engine::new(EngineOptions {
+            max_dim: 2,
+            threads: 3,
+            adaptive_batch: false,
+            batch_size: 9,
+            ..Default::default()
+        });
+        let gens0 = engine.pool().unwrap().stats().generations;
+        let first = engine.compute(&f);
+        let gens1 = engine.pool().unwrap().stats().generations;
+        assert!(gens1 > gens0, "pooled run must submit generations");
+        let second = engine.compute(&f);
+        assert!(first.diagram.multiset_eq(&second.diagram, 0.0));
+        // With adaptation off the generation structure is deterministic,
+        // so a repeated run submits exactly as many generations again.
+        let gens2 = engine.pool().unwrap().stats().generations;
+        assert_eq!(gens2 - gens1, gens1 - gens0);
     }
 
     #[test]

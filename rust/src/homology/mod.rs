@@ -7,4 +7,6 @@ pub mod h0;
 pub mod representatives;
 
 pub use diagram::Diagram;
-pub use engine::{compute_ph, compute_ph_from_filtration, Algorithm, EngineOptions, PhResult};
+pub use engine::{
+    compute_ph, compute_ph_from_filtration, Algorithm, Engine, EngineOptions, PhResult,
+};

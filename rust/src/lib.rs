@@ -14,11 +14,11 @@
 //!   default build ships a graceful native-fallback stub). Python never
 //!   runs on the request path.
 //!
-//! ## The pipelined scheduler
+//! ## The three-stage pipelined scheduler
 //!
 //! The hot path — reduction of the coboundary columns — runs on
 //! [`reduction::serial_parallel`], which rebuilt the paper's §4.4
-//! batched scheduler around two ideas:
+//! batched scheduler around three ideas:
 //!
 //! * **work stealing** ([`reduction::pool::ThreadPool`]): a batch is
 //!   split into small tasks dealt into per-worker deques; idle workers
@@ -29,27 +29,45 @@
 //!   is already pushing batch *k+1* against that base. The committed
 //!   pivot maps are insert-only, so stale reads either return final
 //!   entries or miss — and a miss just means the serial phase resumes
-//!   that column against the full state. Output is therefore
-//!   **bit-identical to the sequential reduction** for every batch
-//!   size, thread count and steal schedule.
+//!   that column against the full state;
+//! * **sharded column enumeration**: H1*/H2* columns are not listed up
+//!   front on the scheduler thread. The descending diameter-edge range
+//!   is tiled into shards ([`reduction::shard_plan`]) and workers
+//!   enumerate shard *k+2* — driving the coboundary cursors and
+//!   `triangles_with_diameter` — **in the same pool generation** that
+//!   pushes batch *k+1*, while batch *k* commits. Shard buffers splice
+//!   back in shard order, so the reduction consumes a stream identical
+//!   to the sequential enumeration.
+//!
+//! Output is therefore **bit-identical to the sequential reduction**
+//! for every batch size, shard plan, thread count and steal schedule.
+//! The pool is owned by a persistent [`homology::Engine`] and reused
+//! across the H1*/H2* phases and across repeated runs.
 //!
 //! Config knobs (via [`homology::EngineOptions`], the TOML config, or
 //! CLI flags): `batch_size` (initial batch), `adaptive_batch` (walk the
 //! batch size toward the serial≈push equilibrium; on by default),
-//! `batch_min`/`batch_max` (adaptation bounds), `steal_grain` (columns
-//! per steal task; 0 = auto). `EngineStats::{h1_sched, h2_sched}`
-//! report batches, steals, worker utilization, serial/push overlap and
-//! residual barrier idle per phase.
+//! `batch_min`/`batch_max` (adaptation bounds), `adapt_low`/`adapt_high`
+//! (serial-fraction thresholds steering the adaptation; defaults
+//! 0.25/0.75), `steal_grain` (columns per steal task; 0 = auto),
+//! `enum_shards`/`enum_grain` (enumeration shard plan; 0 = auto).
+//! `EngineStats::{h1_sched, h2_sched}` report batches, steals, worker
+//! utilization, serial/push overlap, residual barrier idle, and the
+//! enumeration span (shards, columns, worker busy time, scheduler time
+//! blocked on enumeration) per phase.
 //!
 //! The exactness guarantee is enforced by a differential test harness
 //! (`rust/tests/differential.rs`: scheduler vs the explicit
-//! boundary-matrix oracle across batch-size × thread-count sweeps, plus
-//! structural pair-level comparison against the sequential engine) and
+//! boundary-matrix oracle across shard-count × batch-size ×
+//! thread-count sweeps, a 40-seed byte-identity property for the
+//! sharded enumeration stream, structural pair-level comparison against
+//! the sequential engine, and a 20-round pool-reuse stress test) and
 //! golden persistence-diagram fixtures with bit-exact expected values
-//! (`rust/tests/golden_pd.rs`).
+//! at multiple shard counts (`rust/tests/golden_pd.rs`).
 //!
-//! Entry points: [`homology::engine`] for the full pipeline,
-//! [`coordinator`] for config-driven runs, `examples/` for walkthroughs.
+//! Entry points: [`homology::Engine`] / [`homology::engine`] for the
+//! full pipeline, [`coordinator`] for config-driven runs, `examples/`
+//! for walkthroughs.
 
 pub mod baselines;
 pub mod bench_support;

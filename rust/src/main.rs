@@ -67,6 +67,10 @@ run flags:
   --batch-min <int>         adaptive batch lower bound  [16]
   --batch-max <int>         adaptive batch upper bound  [8192]
   --steal-grain <int>       columns per steal task (0 = auto)
+  --adapt-low <float>       serial fraction below which batch doubles [0.25]
+  --adapt-high <float>      serial fraction above which batch halves  [0.75]
+  --enum-shards <int>       H1*/H2* enumeration shards (0 = auto)
+  --enum-grain <int>        diameter edges per enumeration shard (0 = auto)
   --ns                      DoryNS dense edge-order lookup
   --algorithm <a>           fast-column|implicit-row
   --no-pjrt                 skip the PJRT/Pallas distance kernel
@@ -127,6 +131,10 @@ fn cmd_run(args: &[String]) -> Result<()> {
             "--batch-min" => cfg.batch_min = val()?.parse()?,
             "--batch-max" => cfg.batch_max = val()?.parse()?,
             "--steal-grain" => cfg.steal_grain = val()?.parse()?,
+            "--adapt-low" => cfg.adapt_low = val()?.parse()?,
+            "--adapt-high" => cfg.adapt_high = val()?.parse()?,
+            "--enum-shards" => cfg.enum_shards = val()?.parse()?,
+            "--enum-grain" => cfg.enum_grain = val()?.parse()?,
             "--ns" => cfg.dense_lookup = true,
             "--algorithm" => cfg.algorithm = val()?.clone(),
             "--no-pjrt" => cfg.use_pjrt = false,

@@ -22,7 +22,7 @@ pub mod implicit_row;
 pub mod pool;
 pub mod serial_parallel;
 
-pub use serial_parallel::{SchedConfig, SchedStats};
+pub use serial_parallel::{shard_plan, ColumnShards, SchedConfig, SchedStats, SliceShards};
 
 use crate::coboundary::{TetCursor, TriCursor};
 use crate::filtration::{EdgeFiltration, Key, Neighborhoods};

@@ -218,10 +218,41 @@ impl ThreadPool {
     where
         F: Fn(usize, Range<usize>) + Send + Sync + 'scope,
     {
+        // SAFETY: forwarded to submit_stealing_regions under the same
+        // contract (caller must not leak the ticket).
+        unsafe { self.submit_stealing_regions(&[(len, grain)], f) }
+    }
+
+    /// Start a generation over several concatenated index *regions*, each
+    /// with its own task grain. Region `r` covers the global indices
+    /// `offset_r..offset_r + len_r` where `offset_r` is the summed length
+    /// of all earlier regions, and is split into `grain_r`-sized tasks.
+    /// Tasks never straddle a region boundary, so a heterogeneous
+    /// generation (e.g. fine-grained column pushes alongside coarse
+    /// enumeration shards) keeps each region independently stealable.
+    ///
+    /// Regions are dealt in order, continuing the round-robin across the
+    /// boundary: a later region's tasks land at the *backs* of the worker
+    /// deques, which is exactly where idle workers steal from first.
+    ///
+    /// # Safety
+    ///
+    /// Identical contract to [`Self::submit_stealing`].
+    pub unsafe fn submit_stealing_regions<'scope, F>(
+        &'scope self,
+        regions: &[(usize, usize)],
+        f: F,
+    ) -> Ticket<'scope>
+    where
+        F: Fn(usize, Range<usize>) + Send + Sync + 'scope,
+    {
         let arc: Arc<dyn Fn(usize, Range<usize>) + Send + Sync + 'scope> = Arc::new(f);
         // Erase the lifetime (see safety note above).
         let arc: Job = unsafe { std::mem::transmute(arc) };
-        let grain = grain.max(1);
+        let mut n_tasks = 0usize;
+        for &(len, grain) in regions {
+            n_tasks += len.div_ceil(grain.max(1));
+        }
         let mut st = self.shared.state.lock().unwrap();
         assert!(
             !st.in_flight,
@@ -230,7 +261,7 @@ impl ThreadPool {
         st.generation += 1;
         let gen = st.generation;
         self.shared.generations.fetch_add(1, Ordering::Relaxed);
-        if len == 0 {
+        if n_tasks == 0 {
             // Nothing to do: pre-resolve so wait() returns immediately.
             st.done_gen = gen;
             return Ticket {
@@ -239,22 +270,26 @@ impl ThreadPool {
                 done: true,
             };
         }
-        let n_tasks = len.div_ceil(grain);
         // Publish the task count before any queue is filled: stragglers
         // from the previous generation are fenced off by the generation
         // tag on each task, and nothing of this generation can retire
         // before the state lock (held throughout) is released.
         self.shared.remaining.store(n_tasks, Ordering::Release);
-        let mut start = 0usize;
+        let mut offset = 0usize;
         let mut w = 0usize;
-        while start < len {
-            let end = (start + grain).min(len);
-            self.shared.queues[w % self.n]
-                .lock()
-                .unwrap()
-                .push_back((gen, start..end));
-            start = end;
-            w += 1;
+        for &(len, grain) in regions {
+            let grain = grain.max(1);
+            let mut start = 0usize;
+            while start < len {
+                let end = (start + grain).min(len);
+                self.shared.queues[w % self.n]
+                    .lock()
+                    .unwrap()
+                    .push_back((gen, offset + start..offset + end));
+                start = end;
+                w += 1;
+            }
+            offset += len;
         }
         st.job = Some(arc);
         st.in_flight = true;
@@ -607,6 +642,74 @@ mod tests {
                 "seed={seed} threads={threads} len={len} grain={grain}"
             );
         }
+    }
+
+    #[test]
+    fn regions_cover_concatenated_range_exactly_once() {
+        let pool = ThreadPool::new(4);
+        for (la, ga, lb, gb) in [
+            (100usize, 7usize, 13usize, 1usize),
+            (0, 1, 20, 3),
+            (20, 3, 0, 1),
+            (1, 1, 1, 1),
+            (997, 16, 31, 1),
+        ] {
+            let total = la + lb;
+            let marks: Vec<AtomicU64> = (0..total).map(|_| AtomicU64::new(0)).collect();
+            let pool_ref = &pool;
+            // SAFETY: the ticket is waited on before `marks` goes away.
+            unsafe { pool_ref.submit_stealing_regions(&[(la, ga), (lb, gb)], |_t, r| {
+                for i in r {
+                    marks[i].fetch_add(1, Ordering::SeqCst);
+                }
+            }) }
+            .wait();
+            assert!(
+                marks.iter().all(|m| m.load(Ordering::SeqCst) == 1),
+                "la={la} ga={ga} lb={lb} gb={gb}"
+            );
+        }
+    }
+
+    #[test]
+    fn region_tasks_respect_their_own_grain() {
+        // Region A (grain 5) must never hand out a range crossing into
+        // region B's index space, and region B (grain 1) must arrive as
+        // single-index tasks.
+        let pool = ThreadPool::new(3);
+        let (la, lb) = (23usize, 9usize);
+        let bad = AtomicU64::new(0);
+        let b_tasks = AtomicU64::new(0);
+        pool_run_regions(&pool, &[(la, 5), (lb, 1)], |r: Range<usize>| {
+            if r.start < la && r.end > la {
+                bad.fetch_add(1, Ordering::SeqCst);
+            }
+            if r.start >= la {
+                b_tasks.fetch_add(1, Ordering::SeqCst);
+                if r.len() != 1 {
+                    bad.fetch_add(1, Ordering::SeqCst);
+                }
+            }
+        });
+        assert_eq!(bad.load(Ordering::SeqCst), 0);
+        assert_eq!(b_tasks.load(Ordering::SeqCst), lb as u64);
+    }
+
+    fn pool_run_regions(pool: &ThreadPool, regions: &[(usize, usize)], f: impl Fn(Range<usize>) + Send + Sync) {
+        // SAFETY: waited on before returning, so captures outlive workers.
+        unsafe { pool.submit_stealing_regions(regions, |_t, r| f(r)) }.wait();
+    }
+
+    #[test]
+    fn empty_regions_generation_completes() {
+        let pool = ThreadPool::new(2);
+        pool_run_regions(&pool, &[(0, 1), (0, 4)], |_r| panic!("no tasks must run"));
+        pool_run_regions(&pool, &[], |_r| panic!("no tasks must run"));
+        let hits = AtomicU64::new(0);
+        pool_run_regions(&pool, &[(0, 1), (6, 2)], |r| {
+            hits.fetch_add(r.len() as u64, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 6);
     }
 
     #[test]

@@ -16,6 +16,29 @@
 //! work-stealing pool is already pushing batch *k+1* against a frozen
 //! snapshot of the committed state.
 //!
+//! ## The third stage: sharded column enumeration
+//!
+//! Columns do not have to be materialized up front. A
+//! [`ColumnShards`] source describes the column stream as an ordered
+//! sequence of *shards* (for H2\*: runs of descending diameter edges
+//! whose triangles are enumerated on the fly); [`reduce_stream`] runs
+//! shard enumeration as extra work-stealing tasks **in the same pool
+//! generation as the next batch's push**, so the pipeline becomes three
+//! stages deep:
+//!
+//! ```text
+//!   enumerate chunk k+2   (pool workers, region B of the generation)
+//!   push      batch k+1   (pool workers, region A of the generation)
+//!   commit    batch k     (scheduler thread, concurrently)
+//! ```
+//!
+//! Shard buffers are spliced back in shard order at the generation
+//! boundary, so the reduction consumes a column sequence **identical to
+//! the sequential enumeration** — sharding is invisible to the output.
+//! If the lookahead falls behind (a shard-heavy region), the scheduler
+//! blocks on enumeration-only generations; that time is reported as
+//! `enum_block_ns`, distinct from the push `barrier_wait_ns`.
+//!
 //! ## Why the overlap is exact
 //!
 //! The committed pivot maps are insert-only: an entry, once written,
@@ -31,8 +54,9 @@
 //! and the serial phase replays any remaining steps in filtration order
 //! against the exact sequential state — so pairs, essentials and V⊥ are
 //! **bit-identical** to the sequential algorithm, for every batch size,
-//! thread count and steal schedule. `rust/tests/differential.rs` pins
-//! this down against the explicit boundary-matrix oracle.
+//! shard plan, thread count and steal schedule.
+//! `rust/tests/differential.rs` pins this down against the explicit
+//! boundary-matrix oracle.
 //!
 //! Mechanically, batch *k*'s commits land in a [`PivotState`] *delta*
 //! while workers read only the frozen *base*; the serial phase reads an
@@ -47,11 +71,13 @@
 //! the parallel push of batch *k+1*, so when [`SchedConfig::adaptive`]
 //! is set the scheduler walks the batch size toward that point using the
 //! observed serial/push time ratio of the previous iteration (halving
-//! when serial-bound, doubling when push-bound, clamped to
+//! when the serial fraction exceeds [`SchedConfig::adapt_high`],
+//! doubling when it falls below [`SchedConfig::adapt_low`], clamped to
 //! `[batch_min, batch_max]`). Output is identical for every trajectory,
 //! so adaptation is purely a performance knob.
 
 use std::ops::Range;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -78,6 +104,10 @@ pub struct SchedConfig {
     /// Columns per work-stealing task; 0 = auto (batch / (threads · 8),
     /// clamped to [1, 64]).
     pub steal_grain: usize,
+    /// Serial fraction below which the batch size doubles (push-bound).
+    pub adapt_low: f64,
+    /// Serial fraction above which the batch size halves (serial-bound).
+    pub adapt_high: f64,
 }
 
 impl Default for SchedConfig {
@@ -88,6 +118,8 @@ impl Default for SchedConfig {
             batch_min: 16,
             batch_max: 8192,
             steal_grain: 0,
+            adapt_low: 0.25,
+            adapt_high: 0.75,
         }
     }
 }
@@ -101,25 +133,46 @@ pub struct SchedStats {
     pub batches: usize,
     pub min_batch: usize,
     pub max_batch: usize,
-    /// Work-stealing tasks dispatched / stolen across all batches.
+    /// Work-stealing tasks dispatched / stolen across all batches
+    /// (pushes *and* enumeration shards).
     pub tasks: u64,
     pub steals: u64,
     /// Columns committed straight off their pre-push (fast path).
     pub prepushed_columns: usize,
     /// Columns whose stop-pivot was claimed meanwhile → serial resume.
     pub resumed_columns: usize,
-    /// Sum of worker time inside push tasks.
+    /// Sum of worker time inside push and enumeration tasks.
     pub parallel_busy_ns: u64,
     /// Scheduler time in serial commit phases.
     pub serial_ns: u64,
-    /// Serial-commit time that ran while a push was in flight — work the
-    /// seed's hard barrier would have serialized.
+    /// Serial-commit time that ran while a pool generation (the next
+    /// batch's push, plus any ride-along enumeration shards sharing its
+    /// generation) was in flight — work the seed's hard barrier would
+    /// have serialized. The generation span does not distinguish push
+    /// from enumeration time, so on enumeration-heavy phases this reads
+    /// as "commit hidden under pool work", not "under pushes alone".
     pub overlap_ns: u64,
-    /// Scheduler time blocked waiting on a push after its commit phase
-    /// ended (the residual phase-barrier idle).
+    /// Scheduler time blocked waiting, after its commit phase ended, on
+    /// a generation that contained a push (the residual phase-barrier
+    /// idle). The generation may also carry ride-along enumeration
+    /// shards; a tail where shards outlast the push is booked here, not
+    /// in `enum_block_ns` — the pool does not attribute a mixed
+    /// generation's wait per region.
     pub barrier_wait_ns: u64,
     /// Wall time of the whole reduction.
     pub wall_ns: u64,
+    /// Column-enumeration shards executed as pool tasks (zero for the
+    /// sequential engines, whose enumeration runs inline).
+    pub enum_shards: u64,
+    /// Columns produced by the sharded enumeration.
+    pub enum_columns: u64,
+    /// Worker time spent inside shard-enumeration task bodies.
+    pub enum_busy_ns: u64,
+    /// Scheduler time blocked on enumeration-only work (the batch-0
+    /// bootstrap and catch-up generations with no push in flight) — a
+    /// lower bound on the enumeration span the pipeline failed to hide,
+    /// since mixed-generation tails land in `barrier_wait_ns`.
+    pub enum_block_ns: u64,
 }
 
 impl SchedStats {
@@ -137,6 +190,18 @@ impl SchedStats {
             return 0.0;
         }
         self.overlap_ns as f64 / self.serial_ns as f64
+    }
+
+    /// Fraction of the worker-side enumeration span hidden under the
+    /// pipeline (1 − blocked/busy, clamped to [0, 1]). Optimistic: only
+    /// enumeration-only blocking counts as visible (see
+    /// [`SchedStats::enum_block_ns`]).
+    pub fn enum_hidden_fraction(&self) -> f64 {
+        if self.enum_busy_ns == 0 {
+            return 0.0;
+        }
+        let visible = self.enum_block_ns.min(self.enum_busy_ns);
+        1.0 - visible as f64 / self.enum_busy_ns as f64
     }
 
     pub fn merge(&mut self, o: &SchedStats) {
@@ -159,6 +224,10 @@ impl SchedStats {
         self.overlap_ns += o.overlap_ns;
         self.barrier_wait_ns += o.barrier_wait_ns;
         self.wall_ns += o.wall_ns;
+        self.enum_shards += o.enum_shards;
+        self.enum_columns += o.enum_columns;
+        self.enum_busy_ns += o.enum_busy_ns;
+        self.enum_block_ns += o.enum_block_ns;
     }
 
     /// Machine-readable form for run summaries and bench dumps.
@@ -178,12 +247,17 @@ impl SchedStats {
             .field("barrier_idle_s", self.barrier_wait_ns as f64 * 1e-9)
             .field("wall_s", self.wall_ns as f64 * 1e-9)
             .field("utilization", self.utilization())
+            .field("enum_shards", self.enum_shards as i64)
+            .field("enum_columns", self.enum_columns as i64)
+            .field("enum_busy_s", self.enum_busy_ns as f64 * 1e-9)
+            .field("enum_block_s", self.enum_block_ns as f64 * 1e-9)
+            .field("enum_hidden", self.enum_hidden_fraction())
     }
 
     /// One-line human summary for the CLI and benches.
     pub fn summary(&self) -> String {
         format!(
-            "batches {} (size {}..{}), steals {}/{} tasks, resumed {}, util {:.0}%, overlap {:.3}s ({:.0}% of serial), idle {:.3}s",
+            "batches {} (size {}..{}), steals {}/{} tasks, resumed {}, util {:.0}%, overlap {:.3}s ({:.0}% of serial), idle {:.3}s, enum {} shards ({:.3}s busy, {:.3}s blocked, {:.0}% hidden)",
             self.batches,
             self.min_batch,
             self.max_batch,
@@ -194,8 +268,75 @@ impl SchedStats {
             self.overlap_ns as f64 * 1e-9,
             self.overlap_fraction() * 100.0,
             self.barrier_wait_ns as f64 * 1e-9,
+            self.enum_shards,
+            self.enum_busy_ns as f64 * 1e-9,
+            self.enum_block_ns as f64 * 1e-9,
+            self.enum_hidden_fraction() * 100.0,
         )
     }
+}
+
+/// A column stream served shard by shard, in canonical order.
+///
+/// Concatenating `fill(0), fill(1), …, fill(n_shards()-1)` must yield
+/// exactly the sequential column enumeration — the reduction's output is
+/// defined over that sequence, and [`reduce_stream`] splices shard
+/// buffers back in shard order to reconstruct it. `fill` is called at
+/// most once per shard, possibly concurrently (distinct shards) from
+/// pool worker threads.
+pub trait ColumnShards: Sync {
+    fn n_shards(&self) -> usize;
+    /// Append shard `shard`'s columns to `out`.
+    fn fill(&self, shard: usize, out: &mut Vec<u64>);
+}
+
+/// Pre-materialized columns served in fixed chunks — the adapter behind
+/// [`reduce_all`] and a useful test double for sharded sources.
+pub struct SliceShards<'a> {
+    pub cols: &'a [u64],
+    pub chunk: usize,
+}
+
+impl ColumnShards for SliceShards<'_> {
+    fn n_shards(&self) -> usize {
+        self.cols.len().div_ceil(self.chunk.max(1))
+    }
+
+    fn fill(&self, shard: usize, out: &mut Vec<u64>) {
+        let c = self.chunk.max(1);
+        let lo = shard * c;
+        let hi = (lo + c).min(self.cols.len());
+        out.extend_from_slice(&self.cols[lo..hi]);
+    }
+}
+
+/// Partition `0..n` (an edge-order universe) into **descending** shards
+/// for sharded column enumeration: shard 0 covers the highest orders, so
+/// walking shards in index order (each walked descending internally)
+/// reproduces the engine's reverse-filtration sweep. With
+/// `enum_grain > 0` every shard spans that many orders; otherwise with
+/// `enum_shards > 0` the range splits into that many near-equal shards;
+/// otherwise the grain targets ~16 shards per worker (clamped so tiny
+/// inputs do not shatter into empty shards).
+pub fn shard_plan(n: usize, threads: usize, enum_shards: usize, enum_grain: usize) -> Vec<Range<u32>> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let grain = if enum_grain > 0 {
+        enum_grain
+    } else if enum_shards > 0 {
+        n.div_ceil(enum_shards)
+    } else {
+        n.div_ceil(threads.max(1) * 16).clamp(8, 16384)
+    };
+    let mut out = Vec::with_capacity(n.div_ceil(grain));
+    let mut hi = n;
+    while hi > 0 {
+        let lo = hi.saturating_sub(grain);
+        out.push(lo as u32..hi as u32);
+        hi = lo;
+    }
+    out
 }
 
 enum Pending<C: Copy> {
@@ -215,63 +356,167 @@ fn new_slots<C: Copy>(n: usize) -> Vec<Slot<C>> {
         .collect()
 }
 
-/// Submit the parallel push of `columns[range]` against the frozen
-/// `base`, writing outcomes into `slots` (one per column of the range).
+/// Submit one combined pool generation: region A pushes
+/// `columns[push]` against the frozen `base` into `slots` (one per
+/// column of the range), region B enumerates shards
+/// `first_shard..first_shard + enum_slots.len()` of `src` into
+/// `enum_slots` (one task per shard, so every shard stays individually
+/// stealable). Either region may be empty.
 ///
 /// # Safety
 ///
 /// The returned ticket must be waited on (or dropped) before any of the
 /// borrowed arguments is released or mutably borrowed — see
-/// [`ThreadPool::submit_stealing`]. `reduce_all` upholds this: every
-/// ticket is resolved before `base` is merged into or the slot vector
-/// is consumed.
-unsafe fn submit_push<'a, S: ColumnSpace>(
+/// [`ThreadPool::submit_stealing_regions`]. [`reduce_stream`] upholds
+/// this: every ticket is resolved before `columns` grows, `base` is
+/// merged into, or either slot vector is consumed.
+#[allow(clippy::too_many_arguments)]
+unsafe fn submit_batch<'a, S: ColumnSpace, Src: ColumnShards>(
     pool: &'a ThreadPool,
     space: &'a S,
+    src: &'a Src,
     columns: &'a [u64],
-    range: Range<usize>,
+    push: Range<usize>,
+    grain: usize,
     base: &'a PivotState,
     slots: &'a [Slot<S::Cursor>],
-    grain: usize,
+    first_shard: usize,
+    enum_slots: &'a [Mutex<Vec<u64>>],
+    enum_busy_ns: &'a AtomicU64,
 ) -> Ticket<'a> {
-    let start = range.start;
-    pool.submit_stealing(range.len(), grain, move |_tid, r| {
-        for i in r {
-            let mut stats = ReduceStats::default();
-            let out = reduce_against(space, base, columns[start + i], &mut stats);
-            let p = match out {
-                ColumnOutcome::Zero => Pending::Zero,
-                ColumnOutcome::Claim {
-                    low,
-                    self_trivial,
-                    table,
-                } => Pending::Stopped {
-                    low,
-                    self_trivial,
-                    table,
-                },
-            };
-            *slots[i].lock().unwrap() = (Some(p), stats);
-        }
-    })
+    let push_len = push.len();
+    let start = push.start;
+    pool.submit_stealing_regions(
+        &[(push_len, grain), (enum_slots.len(), 1)],
+        move |_tid, r| {
+            for i in r {
+                if i < push_len {
+                    let mut stats = ReduceStats::default();
+                    let out = reduce_against(space, base, columns[start + i], &mut stats);
+                    let p = match out {
+                        ColumnOutcome::Zero => Pending::Zero,
+                        ColumnOutcome::Claim {
+                            low,
+                            self_trivial,
+                            table,
+                        } => Pending::Stopped {
+                            low,
+                            self_trivial,
+                            table,
+                        },
+                    };
+                    *slots[i].lock().unwrap() = (Some(p), stats);
+                } else {
+                    let j = i - push_len;
+                    let t0 = Instant::now();
+                    let mut buf = enum_slots[j].lock().unwrap();
+                    src.fill(first_shard + j, &mut buf);
+                    enum_busy_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                }
+            }
+        },
+    )
 }
 
-/// Reduce `columns` (already in reverse filtration order, clearing
-/// applied by the caller) with the pipelined work-stealing scheduler.
-/// Output is bit-identical to [`super::fast_column::reduce_all`].
-pub fn reduce_all<S: ColumnSpace>(
+/// Enumerate `count` shards starting at `first` on the pool, blocking,
+/// and splice the buffers into `columns` in shard order.
+fn enum_blocking<Src: ColumnShards>(
+    pool: &ThreadPool,
+    src: &Src,
+    first: usize,
+    count: usize,
+    columns: &mut Vec<u64>,
+    enum_busy_ns: &AtomicU64,
+) {
+    if count == 0 {
+        return;
+    }
+    let slots: Vec<Mutex<Vec<u64>>> = (0..count).map(|_| Mutex::new(Vec::new())).collect();
+    pool.run_stealing(count, 1, |_tid, r| {
+        for i in r {
+            let t0 = Instant::now();
+            let mut buf = slots[i].lock().unwrap();
+            src.fill(first + i, &mut buf);
+            enum_busy_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        }
+    });
+    for s in slots {
+        columns.append(&mut s.into_inner().unwrap());
+    }
+}
+
+/// Splice a generation's ride-along shard buffers into `columns` in
+/// shard order (canonical) and advance the shard accounting. Must only
+/// be called after the generation's ticket resolved.
+fn splice_shards(
+    enum_slots: Vec<Mutex<Vec<u64>>>,
+    columns: &mut Vec<u64>,
+    shard_cursor: &mut usize,
+    enum_tasks: &mut u64,
+) {
+    let n = enum_slots.len();
+    for s in enum_slots {
+        columns.append(&mut s.into_inner().unwrap());
+    }
+    *shard_cursor += n;
+    *enum_tasks += n as u64;
+}
+
+/// Blocking enumeration until `columns` holds at least `want_cols`
+/// entries or the stream is exhausted, in `enum_cap`-shard rounds.
+/// Used for the bootstrap (nothing to overlap yet) and for catch-up
+/// when the ride-along lookahead fell behind. Returns the ns the
+/// scheduler spent blocked (0 when there was nothing to do).
+#[allow(clippy::too_many_arguments)]
+fn enum_until<Src: ColumnShards>(
+    pool: &ThreadPool,
+    src: &Src,
+    want_cols: usize,
+    n_shards: usize,
+    enum_cap: usize,
+    shard_cursor: &mut usize,
+    enum_tasks: &mut u64,
+    columns: &mut Vec<u64>,
+    enum_busy_ns: &AtomicU64,
+) -> u64 {
+    if columns.len() >= want_cols || *shard_cursor >= n_shards {
+        return 0;
+    }
+    let t0 = Instant::now();
+    while columns.len() < want_cols && *shard_cursor < n_shards {
+        let k = enum_cap.min(n_shards - *shard_cursor);
+        enum_blocking(pool, src, *shard_cursor, k, columns, enum_busy_ns);
+        *shard_cursor += k;
+        *enum_tasks += k as u64;
+    }
+    t0.elapsed().as_nanos() as u64
+}
+
+/// Reduce the column stream of `src` (canonical reverse filtration
+/// order, clearing applied inside the source) with the three-stage
+/// pipelined work-stealing scheduler: shard enumeration and batch
+/// pushes run as pool tasks while the scheduler thread commits the
+/// previous batch. Output is bit-identical to materializing the stream
+/// and running [`super::fast_column::reduce_all`] sequentially.
+pub fn reduce_stream<S: ColumnSpace, Src: ColumnShards>(
     space: &S,
-    columns: &[u64],
+    src: &Src,
     cfg: &SchedConfig,
     pool: &ThreadPool,
     keep_zero_pairs: bool,
     value_of: impl Fn(u64) -> f64,
     key_value: impl Fn(Key) -> f64,
 ) -> ReduceResult {
-    let len = columns.len();
     let threads = pool.threads();
     let wall0 = Instant::now();
     let pool0 = pool.stats();
+
+    let n_shards = src.n_shards();
+    let mut shard_cursor = 0usize; // next shard to schedule
+    let mut columns: Vec<u64> = Vec::new();
+    let enum_busy_ns = AtomicU64::new(0);
+    let mut enum_block_ns = 0u64;
+    let mut enum_tasks = 0u64;
 
     let mut base = PivotState::new();
     let mut delta = PivotState::new();
@@ -298,54 +543,124 @@ pub fn reduce_all<S: ColumnSpace>(
             (l / (threads * 8).max(1)).clamp(1, 64)
         }
     };
+    // Shards per ride-along generation / blocking round are capped so a
+    // mis-estimated shard size cannot monopolize a generation.
+    let enum_cap = (threads * 4).max(1);
+    // The lookahead keeps ~2 batches of columns enumerated beyond the
+    // in-flight push, sized with the running columns-per-shard average.
+    let lookahead = |cols_len: usize, target_end: usize, batch: usize, cursor: usize| -> usize {
+        if cursor >= n_shards {
+            return 0;
+        }
+        let want = target_end + 2 * batch;
+        if cols_len >= want {
+            return 0;
+        }
+        let avg = if cursor == 0 {
+            1.0
+        } else {
+            (cols_len as f64 / cursor as f64).max(1.0)
+        };
+        (((want - cols_len) as f64 / avg).ceil() as usize)
+            .max(1)
+            .min(n_shards - cursor)
+            .min(enum_cap)
+    };
     let mut batch = clamp_batch(cfg.batch_size);
 
-    // Prefetch batch 0 synchronously — there is nothing to overlap yet.
+    // ---- bootstrap: enumerate (in parallel, blocking) until batch 0
+    // has columns or the stream is exhausted.
+    enum_block_ns += enum_until(
+        pool,
+        src,
+        batch,
+        n_shards,
+        enum_cap,
+        &mut shard_cursor,
+        &mut enum_tasks,
+        &mut columns,
+        &enum_busy_ns,
+    );
+
+    // ---- batch 0: push synchronously (nothing to overlap yet), with
+    // the first ride-along enumeration chunk sharing the generation.
     let mut cur_start = 0usize;
-    let mut cur_end = batch.min(len);
+    let mut cur_end = batch.min(columns.len());
     let mut cur_slots: Vec<Slot<S::Cursor>> = new_slots(cur_end - cur_start);
     if cur_end > cur_start {
+        let n_enum = lookahead(columns.len(), cur_end, batch, shard_cursor);
+        let enum_slots: Vec<Mutex<Vec<u64>>> =
+            (0..n_enum).map(|_| Mutex::new(Vec::new())).collect();
         // SAFETY: waited on immediately — no borrow is released first.
         unsafe {
-            submit_push(
+            submit_batch(
                 pool,
                 space,
-                columns,
+                src,
+                &columns,
                 cur_start..cur_end,
+                grain_for(cur_end - cur_start),
                 &base,
                 &cur_slots,
-                grain_for(cur_end - cur_start),
+                shard_cursor,
+                &enum_slots,
+                &enum_busy_ns,
             )
         }
         .wait();
+        splice_shards(enum_slots, &mut columns, &mut shard_cursor, &mut enum_tasks);
     }
 
     while cur_start < cur_end {
-        // Kick off the next batch's push against the frozen base before
-        // committing the current batch: this is the pipeline overlap.
+        // Catch-up: the push we are about to submit reads materialized
+        // columns, so if the ride-along lookahead fell behind while
+        // shards remain, block on enumeration-only generations now.
+        enum_block_ns += enum_until(
+            pool,
+            src,
+            cur_end + batch,
+            n_shards,
+            enum_cap,
+            &mut shard_cursor,
+            &mut enum_tasks,
+            &mut columns,
+            &enum_busy_ns,
+        );
+
+        // Kick off the next batch's push (plus the next enumeration
+        // chunk) against the frozen base before committing the current
+        // batch: this is the pipeline overlap.
         let next_start = cur_end;
-        let next_end = (next_start + batch).min(len);
+        let next_end = (next_start + batch).min(columns.len());
         let next_slots: Vec<Slot<S::Cursor>> = new_slots(next_end - next_start);
+        let n_enum = lookahead(columns.len(), next_end, batch, shard_cursor);
+        let enum_slots: Vec<Mutex<Vec<u64>>> =
+            (0..n_enum).map(|_| Mutex::new(Vec::new())).collect();
         let span0 = pool.stats().span_ns;
-        // SAFETY: the ticket is resolved below (`t.wait()`) before `base`
-        // is mutated (merge_from) and before `next_slots` is moved into
-        // `cur_slots`; nothing it borrows is released earlier.
-        let ticket = if next_end > next_start {
+        let had_push = next_end > next_start;
+        // SAFETY: the ticket is resolved below (`t.wait()`) before
+        // `columns` is extended, before `base` is mutated (merge_from)
+        // and before `next_slots`/`enum_slots` are consumed; nothing it
+        // borrows is released earlier.
+        let ticket = if had_push || n_enum > 0 {
             Some(unsafe {
-                submit_push(
+                submit_batch(
                     pool,
                     space,
-                    columns,
+                    src,
+                    &columns,
                     next_start..next_end,
+                    grain_for(next_end - next_start),
                     &base,
                     &next_slots,
-                    grain_for(next_end - next_start),
+                    shard_cursor,
+                    &enum_slots,
+                    &enum_busy_ns,
                 )
             })
         } else {
             None
         };
-        let had_next = ticket.is_some();
 
         // ---- Serial commit of the current batch -----------------------
         // Visit in filtration-processing order; commits land in `delta`
@@ -439,19 +754,23 @@ pub fn reduce_all<S: ColumnSpace>(
         let serial_ns = t_serial.elapsed().as_nanos() as u64;
         sched.serial_ns += serial_ns;
 
-        // ---- Join the pipelined push, then publish the delta ----------
+        // ---- Join the pipelined generation, publish delta + columns ---
         let t_wait = Instant::now();
         if let Some(t) = ticket {
             t.wait();
         }
         let wait_ns = t_wait.elapsed().as_nanos() as u64;
-        if had_next {
+        if had_push {
             sched.barrier_wait_ns += wait_ns;
             let push_span = pool.stats().span_ns.saturating_sub(span0);
             sched.overlap_ns += serial_ns.min(push_span);
+        } else if n_enum > 0 {
+            enum_block_ns += wait_ns;
         }
-        // No reader is live now: drain the batch's commits into the base
-        // so the next serial phase (and the push after it) see them.
+        // No reader is live now: splice the enumerated shards and drain
+        // the batch's commits into the base so the next serial phase
+        // (and the push after it) see them.
+        splice_shards(enum_slots, &mut columns, &mut shard_cursor, &mut enum_tasks);
         base.merge_from(&mut delta);
 
         let cur_len = cur_end - cur_start;
@@ -460,16 +779,24 @@ pub fn reduce_all<S: ColumnSpace>(
         max_batch = max_batch.max(cur_len);
 
         // ---- Adapt the batch size -------------------------------------
-        // Serial-bound (commit > ~75% of the push span): halve, pushing
-        // collision resolution back into the parallel phase. Push-bound
-        // (commit < ~25%): double, amortizing dispatch and widening the
-        // overlap window. Correctness is batch-size independent.
-        if had_next && cfg.adaptive {
+        // Serial-bound (commit > adapt_high of the generation span):
+        // halve, pushing collision resolution back into the parallel
+        // phase. Generation-bound (commit < adapt_low): double,
+        // amortizing dispatch and widening the overlap window. The span
+        // deliberately covers the WHOLE generation — push plus any
+        // ride-along enumeration — because `wait_ns` is real scheduler
+        // idle either way, and filling it with a larger commit is the
+        // right move regardless of which region caused it; an
+        // enumeration-inflated doubling self-corrects within a few
+        // batches once the shards drain (frac rises past adapt_high).
+        // Correctness is batch-size independent.
+        if had_push && cfg.adaptive {
             let span = serial_ns + wait_ns;
             if span > 0 {
-                if serial_ns * 4 > span * 3 {
+                let frac = serial_ns as f64 / span as f64;
+                if frac > cfg.adapt_high {
                     batch = clamp_batch(batch / 2);
-                } else if serial_ns * 4 < span {
+                } else if frac < cfg.adapt_low {
                     batch = clamp_batch(batch.saturating_mul(2));
                 }
             }
@@ -479,6 +806,7 @@ pub fn reduce_all<S: ColumnSpace>(
         cur_end = next_end;
         cur_slots = next_slots;
     }
+    debug_assert_eq!(shard_cursor, n_shards, "every shard must be enumerated");
 
     let pool1 = pool.stats();
     sched.tasks = pool1.tasks - pool0.tasks;
@@ -487,12 +815,39 @@ pub fn reduce_all<S: ColumnSpace>(
     sched.wall_ns = wall0.elapsed().as_nanos() as u64;
     sched.min_batch = if sched.batches > 0 { min_batch } else { 0 };
     sched.max_batch = max_batch;
+    sched.enum_shards = enum_tasks;
+    sched.enum_columns = columns.len() as u64;
+    sched.enum_busy_ns = enum_busy_ns.load(Ordering::Relaxed);
+    sched.enum_block_ns = enum_block_ns;
 
     result.stats.columns = total.columns;
     result.stats.appends = total.appends;
     result.stats.find_next_calls = total.find_next_calls;
     result.sched = sched;
     result
+}
+
+/// Reduce `columns` (already in reverse filtration order, clearing
+/// applied by the caller) with the pipelined work-stealing scheduler.
+/// Output is bit-identical to [`super::fast_column::reduce_all`].
+///
+/// Thin adapter over [`reduce_stream`]: the pre-materialized columns
+/// stream through the same three-stage pipeline in fixed chunks (the
+/// enumeration stage degenerates to cheap buffer copies).
+pub fn reduce_all<S: ColumnSpace>(
+    space: &S,
+    columns: &[u64],
+    cfg: &SchedConfig,
+    pool: &ThreadPool,
+    keep_zero_pairs: bool,
+    value_of: impl Fn(u64) -> f64,
+    key_value: impl Fn(Key) -> f64,
+) -> ReduceResult {
+    let src = SliceShards {
+        cols: columns,
+        chunk: 4096,
+    };
+    reduce_stream(space, &src, cfg, pool, keep_zero_pairs, value_of, key_value)
 }
 
 #[cfg(test)]
@@ -511,16 +866,18 @@ mod tests {
         }
     }
 
+    fn test_space(seed: u64, n: usize, tau: f64) -> (EdgeFiltration, Neighborhoods) {
+        let mut rng = Pcg32::new(seed);
+        let coords = (0..n * 3).map(|_| rng.next_f64()).collect();
+        let f = EdgeFiltration::build(&MetricData::Points(PointCloud::new(3, coords)), tau);
+        let nb = Neighborhoods::build(&f, false);
+        (f, nb)
+    }
+
     #[test]
     fn pipelined_matches_sequential_for_all_batch_sizes() {
         for seed in 0..4 {
-            let mut rng = Pcg32::new(seed);
-            let coords = (0..24 * 3).map(|_| rng.next_f64()).collect();
-            let f = EdgeFiltration::build(
-                &MetricData::Points(PointCloud::new(3, coords)),
-                0.9,
-            );
-            let nb = Neighborhoods::build(&f, false);
+            let (f, nb) = test_space(seed, 24, 0.9);
             let space = EdgeColumns::new(&nb, &f);
             let cols: Vec<u64> = (0..f.n_edges() as u64).rev().collect();
             let seq = crate::reduction::fast_column::reduce_all(
@@ -541,6 +898,7 @@ mod tests {
                 batch_min: 2,
                 batch_max: 64,
                 steal_grain: 1,
+                ..Default::default()
             });
             for cfg in cfgs {
                 let par = reduce_all(
@@ -575,16 +933,190 @@ mod tests {
                         && handled <= cols.len(),
                     "seed={seed} cfg={cfg:?}: handled={handled}"
                 );
+                assert_eq!(par.sched.enum_columns as usize, cols.len());
             }
         }
     }
 
     #[test]
+    fn sharded_stream_matches_slice_for_all_geometries() {
+        // The same column sequence served through different shard
+        // geometries (including shards far smaller than a batch, and one
+        // giant shard) must give identical output and consume every
+        // column exactly once.
+        let (f, nb) = test_space(11, 30, 0.8);
+        let space = EdgeColumns::new(&nb, &f);
+        let cols: Vec<u64> = (0..f.n_edges() as u64).rev().collect();
+        let seq = crate::reduction::fast_column::reduce_all(
+            &space,
+            cols.iter().copied(),
+            true,
+            |c| f.values[c as usize],
+            |k| f.key_value(k),
+        );
+        let pool = ThreadPool::new(4);
+        for chunk in [1usize, 3, 17, 100, usize::MAX / 2] {
+            for batch in [1usize, 7, 100] {
+                let src = SliceShards {
+                    cols: &cols,
+                    chunk,
+                };
+                let r = reduce_stream(
+                    &space,
+                    &src,
+                    &fixed(batch),
+                    &pool,
+                    true,
+                    |c| f.values[c as usize],
+                    |k| f.key_value(k),
+                );
+                let mut a = seq.pairs.clone();
+                let mut b = r.pairs.clone();
+                a.sort_unstable();
+                b.sort_unstable();
+                assert_eq!(a, b, "chunk={chunk} batch={batch}");
+                assert_eq!(r.stats.columns, cols.len(), "chunk={chunk} batch={batch}");
+                assert_eq!(
+                    r.sched.enum_shards as usize,
+                    src.n_shards(),
+                    "chunk={chunk} batch={batch}"
+                );
+                assert_eq!(
+                    r.sched.enum_columns as usize,
+                    cols.len(),
+                    "chunk={chunk} batch={batch}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn adapt_high_zero_shrinks_batch_to_min() {
+        // Synthetic serial-bound workload: adapt_high = 0 classifies
+        // every batch as serial-bound (any nonzero commit time exceeds
+        // the bound), so the adaptation must walk the batch down to
+        // batch_min — with output still exact.
+        let (f, nb) = test_space(5, 40, 0.7);
+        let space = EdgeColumns::new(&nb, &f);
+        let cols: Vec<u64> = (0..f.n_edges() as u64).rev().collect();
+        assert!(cols.len() > 200, "need enough columns for several batches");
+        let pool = ThreadPool::new(2);
+        let cfg = SchedConfig {
+            batch_size: 64,
+            adaptive: true,
+            batch_min: 2,
+            batch_max: 64,
+            steal_grain: 0,
+            adapt_low: 0.0,
+            adapt_high: 0.0,
+        };
+        let r = reduce_all(
+            &space,
+            &cols,
+            &cfg,
+            &pool,
+            true,
+            |c| f.values[c as usize],
+            |k| f.key_value(k),
+        );
+        // Halving fires whenever a batch's commit registers any nonzero
+        // time; require a real shrink but not that *every* batch halved,
+        // so a coarse monotonic clock (commit rounding to 0ns) cannot
+        // flake the test. On ns-resolution clocks this reaches batch_min.
+        // (No lower-bound assert: min_batch records actual batch
+        // lengths, and the final partial batch may be smaller than
+        // batch_min when the column count doesn't divide evenly.)
+        assert!(
+            r.sched.min_batch < 64,
+            "batch must shrink under a serial-bound classification, got min {}",
+            r.sched.min_batch
+        );
+        let seq = crate::reduction::fast_column::reduce_all(
+            &space,
+            cols.iter().copied(),
+            true,
+            |c| f.values[c as usize],
+            |k| f.key_value(k),
+        );
+        let mut a = seq.pairs.clone();
+        let mut b = r.pairs.clone();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b, "shrinking trajectory must not change the output");
+    }
+
+    #[test]
+    fn adapt_low_one_grows_batch() {
+        // With adapt_low = adapt_high = 1.0 every batch whose commit
+        // finished before the push (serial fraction < 1) is push-bound,
+        // so the batch size must grow from its floor.
+        let (f, nb) = test_space(6, 40, 0.7);
+        let space = EdgeColumns::new(&nb, &f);
+        let cols: Vec<u64> = (0..f.n_edges() as u64).rev().collect();
+        let pool = ThreadPool::new(2);
+        let cfg = SchedConfig {
+            batch_size: 2,
+            adaptive: true,
+            batch_min: 2,
+            batch_max: 128,
+            steal_grain: 0,
+            adapt_low: 1.0,
+            adapt_high: 1.0,
+        };
+        let r = reduce_all(
+            &space,
+            &cols,
+            &cfg,
+            &pool,
+            true,
+            |c| f.values[c as usize],
+            |k| f.key_value(k),
+        );
+        // Growth requires at least one batch whose barrier wait measured
+        // nonzero (frac < 1 strictly); on a pathologically coarse clock
+        // every wait can round to 0 and no doubling fires, so only
+        // require growth when some wait was actually observed.
+        assert!(
+            r.sched.max_batch > 2 || r.sched.barrier_wait_ns == 0,
+            "batch must grow under a push-bound classification, got max {} with {}ns barrier wait",
+            r.sched.max_batch,
+            r.sched.barrier_wait_ns
+        );
+    }
+
+    #[test]
+    fn shard_plan_tiles_descending() {
+        for (n, threads, shards, grain) in [
+            (0usize, 4usize, 0usize, 0usize),
+            (1, 1, 0, 0),
+            (100, 4, 0, 0),
+            (100, 4, 7, 0),
+            (100, 4, 0, 9),
+            (100, 4, 3, 9), // grain wins over shards
+            (5, 8, 100, 0), // more shards requested than items
+            (1_000_000, 8, 0, 0),
+        ] {
+            let plan = shard_plan(n, threads, shards, grain);
+            // Tiles [0, n) exactly, descending, no gaps or overlaps.
+            let mut hi = n as u32;
+            for r in &plan {
+                assert_eq!(r.end, hi, "n={n} shards={shards} grain={grain}");
+                assert!(r.start < r.end);
+                hi = r.start;
+            }
+            assert_eq!(hi, 0, "n={n}: plan must reach order 0");
+            if grain > 0 {
+                assert!(plan.iter().all(|r| (r.end - r.start) as usize <= grain));
+            } else if shards > 0 && n > 0 {
+                assert!(plan.len() <= shards.max(1));
+            }
+        }
+        assert!(shard_plan(0, 4, 3, 2).is_empty());
+    }
+
+    #[test]
     fn empty_column_set() {
-        let mut rng = Pcg32::new(9);
-        let coords = (0..12 * 2).map(|_| rng.next_f64()).collect();
-        let f = EdgeFiltration::build(&MetricData::Points(PointCloud::new(2, coords)), 0.5);
-        let nb = Neighborhoods::build(&f, false);
+        let (f, nb) = test_space(9, 12, 0.5);
         let space = EdgeColumns::new(&nb, &f);
         let pool = ThreadPool::new(2);
         let r = reduce_all(
@@ -599,5 +1131,6 @@ mod tests {
         assert_eq!(r.stats.columns, 0);
         assert!(r.pairs.is_empty() && r.essential.is_empty());
         assert_eq!(r.sched.batches, 0);
+        assert_eq!(r.sched.enum_shards, 0);
     }
 }

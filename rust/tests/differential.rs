@@ -1,32 +1,41 @@
-//! Differential verification of the pipelined work-stealing scheduler.
+//! Differential verification of the pipelined work-stealing scheduler
+//! and the sharded column enumeration.
 //!
 //! The paper's guarantee is *exact* equality with the sequential
-//! reduction — not closeness. These tests pin that down at two levels:
+//! reduction — not closeness. These tests pin that down at three levels:
 //!
-//! * **engine vs oracle** — the full engine (work-stealing scheduler
-//!   included) against the explicit boundary-matrix reduction
-//!   (`reduction::explicit`), on randomized point clouds (seeded PCG,
-//!   n ≤ 200, point dimension ≤ 3) and random sparse graphs, swept
-//!   across batch sizes {1, 7, 100} × thread counts {1, 2, 8}, with a
-//!   zero tolerance: every birth/death must match to the bit;
+//! * **engine vs oracle** — the full engine (work-stealing scheduler and
+//!   sharded enumeration included) against the explicit boundary-matrix
+//!   reduction (`reduction::explicit`), on randomized point clouds
+//!   (seeded PCG, n ≤ 200, point dimension ≤ 3) and random sparse
+//!   graphs, swept across enumeration shard counts {auto, 1, 5} ×
+//!   batch sizes {1, 7, 100} × thread counts {1, 2, 8}, with a zero
+//!   tolerance: every birth/death must match to the bit;
 //! * **scheduler vs sequential reduction** — `serial_parallel::
 //!   reduce_all` against `fast_column::reduce_all` on the same column
 //!   set, comparing the *structural* output (pairs, essential columns,
 //!   trivial-pair counts) exactly, across pools, batch sizes, steal
-//!   grains and adaptive batching.
+//!   grains and adaptive batching;
+//! * **enumeration stream** — the sharded H2* column sequence against a
+//!   `brute_force_coboundary`-backed sequential enumeration, byte for
+//!   byte, over 40 random filtration seeds and several shard plans
+//!   (both filled inline and through the work-stealing pool).
 //!
 //! Failures print the seed for exact reproduction.
 
+use dory::coboundary::edges::brute_force_coboundary;
+use dory::coboundary::triangles::triangles_with_diameter_in_range;
 use dory::filtration::{EdgeFiltration, Neighborhoods};
 use dory::geometry::{MetricData, PointCloud, SparseDistances};
-use dory::homology::{compute_ph_from_filtration, EngineOptions};
+use dory::homology::{compute_ph_from_filtration, Engine, EngineOptions};
 use dory::reduction::explicit::oracle_diagram;
 use dory::reduction::pool::ThreadPool;
-use dory::reduction::{fast_column, serial_parallel, EdgeColumns, SchedConfig};
+use dory::reduction::{fast_column, serial_parallel, shard_plan, EdgeColumns, SchedConfig};
 use dory::util::rng::Pcg32;
 
 const BATCHES: [usize; 3] = [1, 7, 100];
 const THREADS: [usize; 3] = [1, 2, 8];
+const ENUM_SHARDS: [usize; 3] = [0, 1, 5];
 
 fn random_cloud(rng: &mut Pcg32, n: usize, dim: usize) -> MetricData {
     MetricData::Points(PointCloud::new(
@@ -41,23 +50,27 @@ fn check_instance(f: &EdgeFiltration, max_dim: usize, label: &str) {
     let nb = Neighborhoods::build(f, false);
     let want = oracle_diagram(f, &nb, max_dim);
     for threads in THREADS {
-        for batch in BATCHES {
-            let opts = EngineOptions {
-                max_dim,
-                threads,
-                batch_size: batch,
-                adaptive_batch: false,
-                ..Default::default()
-            };
-            let got = compute_ph_from_filtration(f, &opts).diagram;
-            assert!(
-                got.multiset_eq(&want, 0.0),
-                "{label} threads={threads} batch={batch}:\n{}",
-                got.diff_summary(&want)
-            );
+        for enum_shards in ENUM_SHARDS {
+            for batch in BATCHES {
+                let opts = EngineOptions {
+                    max_dim,
+                    threads,
+                    batch_size: batch,
+                    adaptive_batch: false,
+                    enum_shards,
+                    ..Default::default()
+                };
+                let got = compute_ph_from_filtration(f, &opts).diagram;
+                assert!(
+                    got.multiset_eq(&want, 0.0),
+                    "{label} threads={threads} shards={enum_shards} batch={batch}:\n{}",
+                    got.diff_summary(&want)
+                );
+            }
         }
         // Adaptive batching walks through many sizes in one run; the
-        // output must not depend on the trajectory.
+        // output must not depend on the trajectory (nor on a shard plan
+        // misaligned with the batch trajectory).
         let opts = EngineOptions {
             max_dim,
             threads,
@@ -65,6 +78,7 @@ fn check_instance(f: &EdgeFiltration, max_dim: usize, label: &str) {
             adaptive_batch: true,
             batch_min: 2,
             batch_max: 64,
+            enum_shards: 3,
             ..Default::default()
         };
         let got = compute_ph_from_filtration(f, &opts).diagram;
@@ -183,6 +197,7 @@ fn differential_pipelined_reduction_structurally_exact() {
                 batch_min: 2,
                 batch_max: 32,
                 steal_grain: 0,
+                ..Default::default()
             });
             for cfg in cfgs {
                 let par = serial_parallel::reduce_all(
@@ -218,6 +233,114 @@ fn differential_pipelined_reduction_structurally_exact() {
             }
         }
     }
+}
+
+#[test]
+fn sharded_enumeration_byte_identical_over_40_seeds() {
+    // The H2* column stream: for every diameter edge (descending) the
+    // triangles ⟨e, v⟩ with secondary descending. The reference sequence
+    // is rebuilt from `brute_force_coboundary` (a triangle has diameter
+    // e iff its key in δe has primary e), entirely independently of the
+    // cursor/merge machinery the sharded enumeration uses. Every shard
+    // plan — filled inline or concurrently on the pool — must reproduce
+    // it byte for byte.
+    let pool = ThreadPool::new(4);
+    for seed in 0..40u64 {
+        let mut rng = Pcg32::new(0x5EED + seed);
+        let n = 12 + rng.gen_range(9) as usize;
+        let data = random_cloud(&mut rng, n, 3);
+        let tau = rng.uniform(0.6, 1.1);
+        let f = EdgeFiltration::build(&data, tau);
+        let nb = Neighborhoods::build(&f, false);
+        let ne = f.n_edges();
+        let mut want: Vec<u64> = Vec::new();
+        for e in (0..ne as u32).rev() {
+            let keys = brute_force_coboundary(&nb, &f, e);
+            for k in keys.iter().rev().filter(|k| k.p == e) {
+                want.push(k.pack());
+            }
+        }
+        for (enum_shards, enum_grain) in [(1usize, 0usize), (2, 0), (3, 0), (7, 0), (16, 0), (0, 1), (0, 4)] {
+            let plan = shard_plan(ne, 4, enum_shards, enum_grain);
+            // Inline, shard order.
+            let mut got: Vec<u64> = Vec::new();
+            for r in &plan {
+                triangles_with_diameter_in_range(&nb, &f, r.clone(), |_| true, &mut got);
+            }
+            assert_eq!(
+                got, want,
+                "seed={seed} shards={enum_shards} grain={enum_grain}: inline stream diverges"
+            );
+            // Concurrently on the pool, spliced back in shard order.
+            let slots: Vec<std::sync::Mutex<Vec<u64>>> =
+                plan.iter().map(|_| std::sync::Mutex::new(Vec::new())).collect();
+            pool.run_stealing(plan.len(), 1, |_tid, range| {
+                for s in range {
+                    let mut buf = slots[s].lock().unwrap();
+                    triangles_with_diameter_in_range(&nb, &f, plan[s].clone(), |_| true, &mut buf);
+                }
+            });
+            let mut pooled: Vec<u64> = Vec::new();
+            for s in slots {
+                pooled.append(&mut s.into_inner().unwrap());
+            }
+            assert_eq!(
+                pooled, want,
+                "seed={seed} shards={enum_shards} grain={enum_grain}: pooled stream diverges"
+            );
+        }
+    }
+}
+
+#[test]
+fn engine_pool_reuse_stress_h1_h2_20_rounds() {
+    // One Engine, one pool, 20 back-to-back H0→H1*→H2* runs: output must
+    // stay bit-identical, the pool must accept fresh generations after
+    // every run (no stuck in-flight state), and — with adaptation off —
+    // the generation accounting must advance by the same amount each
+    // round (a straggler or leaked ticket would skew it).
+    let mut rng = Pcg32::new(0x9001);
+    let data = random_cloud(&mut rng, 40, 3);
+    let f = EdgeFiltration::build(&data, 0.55);
+    let engine = Engine::new(EngineOptions {
+        max_dim: 2,
+        threads: 4,
+        batch_size: 13,
+        adaptive_batch: false,
+        enum_shards: 6,
+        ..Default::default()
+    });
+    let pool_stats = |e: &Engine| e.pool().unwrap().stats();
+    let reference = engine.compute(&f);
+    assert!(
+        reference.stats.h2_sched.enum_shards > 0,
+        "H2* enumeration must run on the pool"
+    );
+    let mut last_gens = pool_stats(&engine).generations;
+    let per_run = last_gens;
+    let mut deltas = Vec::new();
+    for round in 0..20 {
+        let r = engine.compute(&f);
+        assert!(
+            r.diagram.multiset_eq(&reference.diagram, 0.0),
+            "round={round}: diagram deviates on a reused pool"
+        );
+        assert_eq!(
+            r.stats.h2_sched.enum_columns, reference.stats.h2_sched.enum_columns,
+            "round={round}"
+        );
+        let gens = pool_stats(&engine).generations;
+        deltas.push(gens - last_gens);
+        last_gens = gens;
+        // The pool must be cleanly reusable right now: an extra empty
+        // generation completes without touching the run's state.
+        engine.pool().unwrap().run_stealing(0, 1, |_t, _r| {});
+        last_gens += 1;
+    }
+    assert!(
+        deltas.iter().all(|&d| d == per_run),
+        "generation counters must advance identically each round: first={per_run} deltas={deltas:?}"
+    );
 }
 
 #[test]

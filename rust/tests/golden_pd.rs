@@ -204,6 +204,51 @@ fn check_fixture(file: &str) {
                 ..Default::default()
             },
         ),
+        // Sharded column enumeration at several shard geometries: the
+        // spliced stream must leave the golden bits untouched.
+        (
+            "t4-shards1",
+            EngineOptions {
+                max_dim: fx.max_dim,
+                threads: 4,
+                enum_shards: 1,
+                ..Default::default()
+            },
+        ),
+        (
+            "t4-shards3",
+            EngineOptions {
+                max_dim: fx.max_dim,
+                threads: 4,
+                batch_size: 17,
+                adaptive_batch: false,
+                enum_shards: 3,
+                ..Default::default()
+            },
+        ),
+        (
+            "t8-shards13",
+            EngineOptions {
+                max_dim: fx.max_dim,
+                threads: 8,
+                batch_size: 32,
+                adaptive_batch: false,
+                enum_shards: 13,
+                steal_grain: 1,
+                ..Default::default()
+            },
+        ),
+        (
+            "t2-grain5",
+            EngineOptions {
+                max_dim: fx.max_dim,
+                threads: 2,
+                batch_size: 7,
+                adaptive_batch: false,
+                enum_grain: 5,
+                ..Default::default()
+            },
+        ),
     ];
     for (label, opts) in configs {
         let r = compute_ph(&fx.data, fx.tau, &opts);
