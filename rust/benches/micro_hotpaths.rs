@@ -173,12 +173,61 @@ fn main() {
         r.stats.h1_sched.enum_shards > 0 && r.stats.h1_sched.enum_columns > 0,
         "H1* column enumeration ran on the scheduler thread (no pool shards recorded)"
     );
+
+    // --- apparent-pair shortcut on the sphere workload ----------------------
+    // CI gate for the enumeration-time shortcut: a nonzero fraction of
+    // the H2* columns surviving clearing must be resolved in-shard
+    // (apparent pairs), never entering a BucketTable. Counter-based and
+    // deterministic — a zero skip rate means the shortcut regressed.
+    let h2 = &r.stats.h2;
+    let h2_skip = h2.skip_rate();
+    println!(
+        "{:<42} {:>10} / {:<8} ({:.1}% skipped, trivial total {})",
+        "H2* shortcut pairs (sphere150)",
+        h2.shortcut_pairs,
+        h2.columns + h2.shortcut_pairs,
+        h2_skip * 100.0,
+        h2.trivial_pairs,
+    );
+    assert!(
+        h2.shortcut_pairs > 0 && h2_skip > 0.0,
+        "H2*-on-sphere skip rate is zero — the apparent-pair shortcut is inactive"
+    );
+    assert!(
+        r.stats.h1.shortcut_pairs > 0,
+        "H1*-on-sphere skip rate is zero — the apparent-pair shortcut is inactive"
+    );
+    // Exact-fallback comparison (shortcut off): same instance, every
+    // trivial pair resolved inside the reduction instead.
+    let t0 = Instant::now();
+    let r_off = dory::homology::compute_ph_from_filtration(
+        &fs,
+        &EngineOptions {
+            shortcut: false,
+            ..opts.clone()
+        },
+    );
+    let dt_off = t0.elapsed().as_secs_f64();
+    println!(
+        "{:<42} {dt_off:>11.3} s    (shortcut off; trivial in-reduction {})",
+        "engine 4 threads (H2, sphere150, no-skip)", r_off.stats.h2.trivial_pairs
+    );
+    assert_eq!(
+        h2.trivial_pairs, r_off.stats.h2.trivial_pairs,
+        "trivial-pair totals must be invariant under the shortcut"
+    );
     out = out
         .field("h2_engine_4t_s", dt)
+        .field("h2_engine_4t_noshortcut_s", dt_off)
         .field("h2_enum_shards", s2.enum_shards as i64)
         .field("h2_enum_columns", s2.enum_columns as i64)
         .field("h2_enum_busy_s", s2.enum_busy_ns as f64 * 1e-9)
-        .field("h2_enum_block_s", s2.enum_block_ns as f64 * 1e-9);
+        .field("h2_enum_block_s", s2.enum_block_ns as f64 * 1e-9)
+        .field("h2_shortcut_pairs", h2.shortcut_pairs)
+        .field("h2_skip_rate", h2_skip)
+        .field("h1_shortcut_pairs", r.stats.h1.shortcut_pairs)
+        .field("h1_skip_rate", r.stats.h1.skip_rate())
+        .field("max_rss_bytes", dory::util::memtrack::max_rss_bytes());
 
     // --- F1 construction ----------------------------------------------------
     let t0 = Instant::now();

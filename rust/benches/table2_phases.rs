@@ -50,8 +50,8 @@ fn main() {
 
     println!("\n== Table 2: Dory phase timings (seconds, 4 threads) ==");
     println!(
-        "{:<12} {:>10} {:>12} {:>8} {:>8} {:>8}",
-        "dataset", "create F1", "create N,E", "H0", "H1*", "H2*"
+        "{:<12} {:>10} {:>12} {:>8} {:>8} {:>8} {:>7} {:>10}",
+        "dataset", "create F1", "create N,E", "H0", "H1*", "H2*", "skip%", "max RSS"
     );
     let mut t2 = Json::arr();
     let mut sched_rows = Vec::new();
@@ -64,17 +64,37 @@ fn main() {
         let m = bs::run_engine(&ds.data, ds.tau, &opts);
         let t = &m.result.timings;
         let g = |name: &str| t.get(name).map(|d| d.as_secs_f64()).unwrap_or(0.0);
+        // Per-phase max-RSS high-water marks (sampled at each phase
+        // boundary) — the headline memory claim, per dataset.
+        let stats = &m.result.stats;
+        let candidates = stats.h1.columns
+            + stats.h1.shortcut_pairs
+            + stats.h2.columns
+            + stats.h2.shortcut_pairs;
+        let skipped = stats.h1.shortcut_pairs + stats.h2.shortcut_pairs;
+        let skip_pct = if candidates > 0 {
+            skipped as f64 / candidates as f64 * 100.0
+        } else {
+            0.0
+        };
+        let run_rss = t.phases().iter().map(|p| p.max_rss_end).max().unwrap_or(0);
         println!(
-            "{:<12} {:>10.3} {:>12.3} {:>8.3} {:>8.3} {:>8.3}",
+            "{:<12} {:>10.3} {:>12.3} {:>8.3} {:>8.3} {:>8.3} {:>6.1}% {:>10}",
             ds.name,
             g("F1"),
             g("neighborhoods"),
             g("H0"),
             g("H1*"),
             g("H2*"),
+            skip_pct,
+            dory::util::memtrack::fmt_bytes(run_rss),
         );
         let sched = m.result.stats.sched_total();
         sched_rows.push((ds.name.clone(), sched));
+        let mut phase_rss = Json::obj();
+        for p in t.phases() {
+            phase_rss = phase_rss.field(&p.name, p.max_rss_end);
+        }
         t2.push(
             Json::obj()
                 .field("dataset", ds.name.as_str())
@@ -84,6 +104,12 @@ fn main() {
                 .field("h1", g("H1*"))
                 .field("h2", g("H2*"))
                 .field("total", m.seconds)
+                .field("max_rss_bytes", run_rss)
+                .field("phase_max_rss_bytes", phase_rss)
+                .field("h1_shortcut_pairs", stats.h1.shortcut_pairs)
+                .field("h1_skip_rate", stats.h1.skip_rate())
+                .field("h2_shortcut_pairs", stats.h2.shortcut_pairs)
+                .field("h2_skip_rate", stats.h2.skip_rate())
                 .field("sched_h1", m.result.stats.h1_sched.to_json())
                 .field("sched_h2", m.result.stats.h2_sched.to_json()),
         );
@@ -97,7 +123,7 @@ fn main() {
     // hide under pushes/commits).
     println!("\n== Pipelined scheduler (4 threads, H1*+H2* combined) ==");
     println!(
-        "{:<12} {:>8} {:>12} {:>9} {:>10} {:>10} {:>10} {:>6} {:>7} {:>9} {:>9}",
+        "{:<12} {:>8} {:>12} {:>9} {:>10} {:>10} {:>10} {:>6} {:>7} {:>9} {:>9} {:>9}",
         "dataset",
         "batches",
         "batch range",
@@ -108,11 +134,12 @@ fn main() {
         "util",
         "shards",
         "enum s",
-        "blocked s"
+        "blocked s",
+        "skipped"
     );
     for (name, s) in &sched_rows {
         println!(
-            "{:<12} {:>8} {:>6}..{:<5} {:>9} {:>10.3} {:>10.3} {:>10.3} {:>5.0}% {:>7} {:>9.3} {:>9.3}",
+            "{:<12} {:>8} {:>6}..{:<5} {:>9} {:>10.3} {:>10.3} {:>10.3} {:>5.0}% {:>7} {:>9.3} {:>9.3} {:>9}",
             name,
             s.batches,
             s.min_batch,
@@ -125,6 +152,7 @@ fn main() {
             s.enum_shards,
             s.enum_busy_ns as f64 * 1e-9,
             s.enum_block_ns as f64 * 1e-9,
+            s.shortcut_columns,
         );
     }
 
@@ -137,5 +165,7 @@ fn main() {
     println!("scheduler shape check: overlap ≈ serial (commit hidden under");
     println!("the next push) and idle ≪ serial on the reduction-bound sets;");
     println!("enumeration shards > 0 everywhere (H1*/H2* columns are");
-    println!("enumerated on the pool) with blocked ≪ enum busy.");
+    println!("enumerated on the pool) with blocked ≪ enum busy; skip% high");
+    println!("on the d=2 sets (most columns are apparent pairs resolved");
+    println!("in-shard, never entering a BucketTable).");
 }

@@ -217,6 +217,53 @@ pub fn edge_columns_in_range(range: std::ops::Range<u32>, negative: &[bool], out
     }
 }
 
+/// Apparent-pair test for an edge column given its precomputed smallest
+/// cofacet triangle (paper §4.3.5). The maximal equal-diameter facet of
+/// a case-1 triangle `⟨e, v⟩` is the diameter edge `e` itself (its two
+/// other edges are strictly smaller by construction), so the
+/// cofacet→facet round-trip degenerates to a primary-key comparison:
+/// `(e, smallest_cofacet)` is an apparent (trivial, zero-persistence)
+/// pair iff the smallest triangle of `δe` has diameter `e`.
+#[inline]
+pub fn is_apparent_edge_pair(e: u32, smallest_cofacet: Key) -> bool {
+    !smallest_cofacet.is_none() && smallest_cofacet.p == e
+}
+
+/// [`edge_columns_in_range`] with the in-shard apparent-pair shortcut:
+/// edges forming an apparent pair with their smallest cofacet (see
+/// [`is_apparent_edge_pair`]; `smallest_tri[e]` is the precomputed
+/// smallest triangle of `δe`) are resolved right here — counted, never
+/// emitted into the column stream, never reduced. Dim-0 clearing is
+/// checked first, exactly as the unshortcut stream would (a negative
+/// edge is cleared before any trivial probe could see it). Returns the
+/// number of shortcut columns in the range.
+///
+/// Exactness: an apparent column's reduction claims its own trivial
+/// pivot at the very first `find_low` — it stores no pair, owns no
+/// entry in p⊥/V⊥ (trivial pivots never enter the committed maps), and
+/// other columns probe trivial owners against the *space*, not the
+/// stream — so suppressing it leaves every other column's reduction,
+/// and the output, bit-identical (`rust/tests/differential.rs`).
+pub fn edge_columns_in_range_shortcut(
+    range: std::ops::Range<u32>,
+    negative: &[bool],
+    smallest_tri: &[Key],
+    out: &mut Vec<u64>,
+) -> usize {
+    let mut skipped = 0usize;
+    for e in range.rev() {
+        if negative[e as usize] {
+            continue;
+        }
+        if is_apparent_edge_pair(e, smallest_tri[e as usize]) {
+            skipped += 1;
+        } else {
+            out.push(e as u64);
+        }
+    }
+    skipped
+}
+
 /// Reference enumeration of `δe` by brute force, in key order. Test oracle.
 pub fn brute_force_coboundary(
     nb: &Neighborhoods,
@@ -363,6 +410,59 @@ mod tests {
                 hi = lo;
             }
             assert_eq!(got, want, "grain={grain}");
+        }
+    }
+
+    #[test]
+    fn shortcut_stream_drops_exactly_the_apparent_edges() {
+        // Real filtration: the shortcut stream must equal the plain
+        // stream minus the apparent-pair edges, for every tiling, with
+        // skip counts adding up across shards.
+        let data = random_cloud(26, 3, 17);
+        let f = EdgeFiltration::build(&data, 0.9);
+        let nb = Neighborhoods::build(&f, false);
+        let ne = f.n_edges() as u32;
+        let smallest: Vec<Key> = (0..ne)
+            .map(|e| {
+                let (a, b) = f.edges[e as usize];
+                TriCursor::find_smallest(&nb, e, a, b).cur
+            })
+            .collect();
+        let mut rng = Pcg32::new(5);
+        let negative: Vec<bool> = (0..ne).map(|_| rng.next_f64() < 0.25).collect();
+        let mut plain: Vec<u64> = Vec::new();
+        edge_columns_in_range(0..ne, &negative, &mut plain);
+        let want: Vec<u64> = plain
+            .iter()
+            .copied()
+            .filter(|&e| !is_apparent_edge_pair(e as u32, smallest[e as usize]))
+            .collect();
+        let want_skipped = plain.len() - want.len();
+        // Apparent pairs always exist on a dense-enough cloud; make the
+        // test meaningful.
+        assert!(want_skipped > 0, "need at least one apparent pair");
+        for grain in [1u32, 4, 13, ne] {
+            let mut got = Vec::new();
+            let mut skipped = 0usize;
+            let mut hi = ne;
+            while hi > 0 {
+                let lo = hi.saturating_sub(grain);
+                skipped += edge_columns_in_range_shortcut(lo..hi, &negative, &smallest, &mut got);
+                hi = lo;
+            }
+            assert_eq!(got, want, "grain={grain}");
+            assert_eq!(skipped, want_skipped, "grain={grain}");
+        }
+        // An apparent edge pair has equal birth/death diameters by
+        // construction (the cofacet's diameter IS the edge).
+        for e in 0..ne {
+            if is_apparent_edge_pair(e, smallest[e as usize]) {
+                assert_eq!(
+                    f.key_value(smallest[e as usize]).to_bits(),
+                    f.values[e as usize].to_bits(),
+                    "apparent pair must have zero persistence (e={e})"
+                );
+            }
         }
     }
 

@@ -255,6 +255,44 @@ pub fn brute_force_coboundary(
     out
 }
 
+/// Greatest facet of tetrahedron `h = ⟨kp, ks⟩` that shares its
+/// diameter edge: the triangle `⟨kp, max(c, d)⟩` with `{c,d} =
+/// f1⁻¹(ks)` (paper §4.3.5 — every other facet either has a smaller
+/// diameter or a smaller opposite vertex). This is the facet half of
+/// the apparent-pair round-trip; by construction its key shares `h`'s
+/// primary, i.e. the pair has equal diameter and zero persistence.
+#[inline]
+pub fn max_equal_facet_of_tet(f1: &crate::filtration::EdgeFiltration, h: Key) -> Key {
+    let (c, d) = f1.edges[h.s as usize];
+    Key::new(h.p, c.max(d))
+}
+
+/// Apparent-pair probe for a triangle column `t`: find its minimal
+/// cofacet `h` with the `FindSmallesth` cursor machinery; `(t, h)` is an
+/// apparent (trivial, zero-persistence) pair iff `h` shares `t`'s
+/// diameter edge and its greatest equal-diameter facet
+/// ([`max_equal_facet_of_tet`]) round-trips back to `t`. Returns the
+/// paired tetrahedron when apparent.
+///
+/// This is exactly the condition the reduction's first-`find_low`
+/// trivial test applies (`is_self_trivial_first` on the smallest
+/// coboundary simplex), hoisted to enumeration time so apparent columns
+/// can be resolved inside the shard fills on pool workers and never
+/// enter a `BucketTable` — see the in-shard shortcut in
+/// `homology::engine`.
+pub fn apparent_cofacet(
+    nb: &Neighborhoods,
+    f1: &crate::filtration::EdgeFiltration,
+    t: Key,
+) -> Option<Key> {
+    let h = TetCursor::find_smallest(nb, f1, t).cur;
+    if !h.is_none() && max_equal_facet_of_tet(f1, h) == t {
+        Some(h)
+    } else {
+        None
+    }
+}
+
 /// Visit, in canonical reverse-filtration order, every triangle whose
 /// diameter edge lies in `range`: diameter edges walked descending,
 /// secondaries descending within each edge — exactly the order the H2\*
@@ -441,6 +479,47 @@ mod tests {
             .filter(|&p| Key::unpack(p).s % 2 == 0)
             .collect();
         assert_eq!(filtered, expect);
+    }
+
+    #[test]
+    fn apparent_cofacet_matches_reduction_trivial_probe() {
+        // The enumeration-time shortcut must fire on exactly the columns
+        // the reduction's own machinery would resolve as self-trivial:
+        // (t, h) apparent ⟺ trivial_owner(h) == t with h the smallest
+        // simplex of δt. Also pins the zero-persistence property (equal
+        // primaries ⇒ equal diameters, bit for bit).
+        use crate::reduction::{ColumnSpace, TriangleColumns};
+        for seed in 0..4 {
+            let f = random_filtration(16, 3, 0.95, 100 + seed);
+            let nb = Neighborhoods::build(&f, false);
+            let space = TriangleColumns::new(&nb, &f);
+            let mut apparent_seen = 0usize;
+            for t in all_triangles(&nb, &f) {
+                let h = TetCursor::find_smallest(&nb, &f, t).cur;
+                let via_shortcut = apparent_cofacet(&nb, &f, t);
+                let via_reduction = if !h.is_none()
+                    && space.is_self_trivial_first(t.pack(), h)
+                {
+                    Some(h)
+                } else {
+                    None
+                };
+                assert_eq!(via_shortcut, via_reduction, "seed={seed} t={t}");
+                if let Some(h) = via_shortcut {
+                    apparent_seen += 1;
+                    assert_eq!(h.p, t.p, "apparent pair must share the diameter edge");
+                    assert_eq!(
+                        f.key_value(h).to_bits(),
+                        f.key_value(t).to_bits(),
+                        "apparent pair must have zero persistence"
+                    );
+                    assert_eq!(max_equal_facet_of_tet(&f, h), t, "round-trip");
+                    // And the trivial-owner probe agrees it is t's pivot.
+                    assert_eq!(space.trivial_owner(h), Some(t.pack()), "seed={seed} t={t}");
+                }
+            }
+            assert!(apparent_seen > 0, "seed={seed}: no apparent pairs found");
+        }
     }
 
     #[test]

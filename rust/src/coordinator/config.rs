@@ -144,6 +144,9 @@ pub struct RunConfig {
     /// Diameter edges per enumeration shard; 0 = auto (wins over
     /// `enum_shards` when both are set).
     pub enum_grain: usize,
+    /// Apparent-pair shortcut at enumeration time (on by default; off =
+    /// exact fallback for differential testing).
+    pub shortcut: bool,
     pub dense_lookup: bool,
     pub algorithm: String,
     pub artifacts: PathBuf,
@@ -175,6 +178,7 @@ impl Default for RunConfig {
             adapt_high: 0.75,
             enum_shards: 0,
             enum_grain: 0,
+            shortcut: true,
             dense_lookup: false,
             algorithm: "fast-column".into(),
             artifacts: PathBuf::from("artifacts"),
@@ -266,6 +270,9 @@ impl RunConfig {
                             }
                             "enum_grain" => {
                                 cfg.enum_grain = v.as_usize().context("engine.enum_grain")?
+                            }
+                            "shortcut" => {
+                                cfg.shortcut = v.as_bool().context("engine.shortcut")?
                             }
                             "dense_lookup" => {
                                 cfg.dense_lookup = v.as_bool().context("engine.dense_lookup")?
@@ -430,6 +437,16 @@ diagram_csv = "out/pd.csv"
         let d = RunConfig::default();
         assert_eq!((d.adapt_low, d.adapt_high), (0.25, 0.75));
         assert_eq!((d.enum_shards, d.enum_grain), (0, 0));
+    }
+
+    #[test]
+    fn shortcut_knob_parses_and_defaults_on() {
+        assert!(RunConfig::default().shortcut);
+        let cfg = RunConfig::from_str("[engine]\nshortcut = false\n").unwrap();
+        assert!(!cfg.shortcut);
+        let cfg = RunConfig::from_str("[engine]\nshortcut = true\n").unwrap();
+        assert!(cfg.shortcut);
+        assert!(RunConfig::from_str("[engine]\nshortcut = 1\n").is_err());
     }
 
     #[test]

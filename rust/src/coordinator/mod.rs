@@ -127,6 +127,7 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
         adapt_high: cfg.adapt_high,
         enum_shards: cfg.enum_shards,
         enum_grain: cfg.enum_grain,
+        shortcut: cfg.shortcut,
         dense_lookup: cfg.dense_lookup,
         algorithm: match cfg.algorithm.as_str() {
             "implicit-row" => Algorithm::ImplicitRow,
@@ -207,8 +208,10 @@ pub fn summary_json(cfg: &RunConfig, r: &RunReport) -> Json {
         );
     }
     let mut phases = Json::obj();
-    for (name, dur) in r.result.timings.phases() {
-        phases = phases.field(name, dur.as_secs_f64());
+    let mut phase_rss = Json::obj();
+    for p in r.result.timings.phases() {
+        phases = phases.field(&p.name, p.duration.as_secs_f64());
+        phase_rss = phase_rss.field(&p.name, p.max_rss_end);
     }
     Json::obj()
         .field("n_points", r.n_points)
@@ -220,23 +223,13 @@ pub fn summary_json(cfg: &RunConfig, r: &RunReport) -> Json {
         .field("dense_lookup", cfg.dense_lookup)
         .field("edge_source", r.edge_source)
         .field("peak_heap_bytes", r.peak_heap_bytes)
+        .field("max_rss_bytes", memtrack::max_rss_bytes())
         .field("base_memory_model_bytes", r.result.stats.base_memory_bytes)
         .field("betti", betti)
         .field("phase_seconds", phases)
-        .field(
-            "h1",
-            Json::obj()
-                .field("pairs", r.result.stats.h1.pairs)
-                .field("trivial", r.result.stats.h1.trivial_pairs)
-                .field("essential", r.result.stats.h1.essential),
-        )
-        .field(
-            "h2",
-            Json::obj()
-                .field("pairs", r.result.stats.h2.pairs)
-                .field("trivial", r.result.stats.h2.trivial_pairs)
-                .field("essential", r.result.stats.h2.essential),
-        )
+        .field("phase_max_rss_bytes", phase_rss)
+        .field("h1", reduction_json(&r.result.stats.h1))
+        .field("h2", reduction_json(&r.result.stats.h2))
         .field(
             "scheduler",
             Json::obj()
@@ -245,9 +238,25 @@ pub fn summary_json(cfg: &RunConfig, r: &RunReport) -> Json {
                 .field("adapt_high", cfg.adapt_high)
                 .field("enum_shards", cfg.enum_shards)
                 .field("enum_grain", cfg.enum_grain)
+                .field("shortcut", cfg.shortcut)
                 .field("h1", r.result.stats.h1_sched.to_json())
                 .field("h2", r.result.stats.h2_sched.to_json()),
         )
+}
+
+/// Per-dimension reduction counters, including the apparent-pair
+/// shortcut's skip accounting (columns = streamed into the reduction;
+/// shortcut = resolved in-shard; skip_rate = shortcut / (columns +
+/// shortcut), the fraction of clearing survivors that never entered a
+/// `BucketTable`).
+fn reduction_json(s: &crate::reduction::ReduceStats) -> Json {
+    Json::obj()
+        .field("pairs", s.pairs)
+        .field("trivial", s.trivial_pairs)
+        .field("essential", s.essential)
+        .field("columns", s.columns)
+        .field("shortcut", s.shortcut_pairs)
+        .field("skip_rate", s.skip_rate())
 }
 
 #[cfg(test)]

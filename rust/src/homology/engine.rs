@@ -10,6 +10,20 @@
 //!   triangle of a trivial H1 pair is `smallest_tri[e]`); pairs `(t, h)`
 //!   are H2 (birth, death).
 //!
+//! **Apparent-pair shortcut (on by default, `EngineOptions::shortcut`):**
+//! the overwhelming majority of surviving columns form zero-persistence
+//! apparent pairs — their minimal cofacet shares their diameter and its
+//! maximal equal-diameter facet round-trips back to the column. Both
+//! shard sources detect this *at enumeration time*, inside the shard
+//! fills on pool workers (H1\*: an O(1) `smallest_tri` lookup; H2\*: one
+//! `FindSmallesth` probe per candidate via
+//! [`crate::coboundary::triangles::apparent_cofacet`]), count the pair,
+//! and suppress the column — it never enters the stream, a
+//! `BucketTable`, or the batch pipeline. Output is bit-identical with
+//! the shortcut on or off (the fallback is the reduction's own
+//! first-low trivial test), pinned by the differential harness sweeping
+//! both settings.
+//!
 //! With `threads > 1` the column enumeration of both H1* and H2* is
 //! **sharded over the work-stealing pool**: the descending diameter-edge
 //! range is tiled into shards ([`crate::reduction::shard_plan`], knobs
@@ -28,8 +42,10 @@
 use std::collections::HashSet;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-use crate::coboundary::edges::edge_columns_in_range;
-use crate::coboundary::triangles::{triangles_with_diameter, triangles_with_diameter_in_range};
+use crate::coboundary::edges::{edge_columns_in_range, edge_columns_in_range_shortcut};
+use crate::coboundary::triangles::{
+    apparent_cofacet, triangles_with_diameter, triangles_with_diameter_in_range,
+};
 use crate::filtration::{EdgeFiltration, Key, Neighborhoods};
 use crate::geometry::MetricData;
 use crate::reduction::pool::ThreadPool;
@@ -78,6 +94,15 @@ pub struct EngineOptions {
     /// Diameter edges per enumeration shard; 0 = auto. Takes precedence
     /// over `enum_shards` when both are set.
     pub enum_grain: usize,
+    /// Apparent-pair shortcut at enumeration time (on by default):
+    /// columns whose minimal cofacet round-trips back to them — a
+    /// zero-persistence trivial pair — are resolved inside the shard
+    /// fills (on pool workers for threaded runs) and never enter the
+    /// column stream, a `BucketTable`, or the batch pipeline. Off =
+    /// exact fallback: every column is streamed and the reduction's own
+    /// first-low trivial test resolves them; output is bit-identical
+    /// either way (differential harness sweeps both).
+    pub shortcut: bool,
     /// DoryNS: O(n²) dense edge-order lookup instead of binary search.
     pub dense_lookup: bool,
     pub algorithm: Algorithm,
@@ -97,6 +122,7 @@ impl Default for EngineOptions {
             adapt_high: 0.75,
             enum_shards: 0,
             enum_grain: 0,
+            shortcut: true,
             dense_lookup: false,
             algorithm: Algorithm::FastColumn,
         }
@@ -160,10 +186,16 @@ pub struct PhResult {
 }
 
 /// Sharded H1\* column source: edge orders descending, dim-0 clearing
-/// applied inside each shard.
+/// applied inside each shard. With the shortcut on, apparent pairs —
+/// edges whose precomputed smallest cofacet shares their diameter — are
+/// resolved in-shard too (`skipped`, order-independent atomic) and
+/// suppressed from the stream.
 struct H1Shards<'a> {
     negative: &'a [bool],
+    /// `Some(smallest_tri)` enables the in-shard apparent-pair shortcut.
+    shortcut_tri: Option<&'a [Key]>,
     ranges: Vec<std::ops::Range<u32>>,
+    skipped: AtomicUsize,
 }
 
 impl ColumnShards for H1Shards<'_> {
@@ -172,21 +204,39 @@ impl ColumnShards for H1Shards<'_> {
     }
 
     fn fill(&self, shard: usize, out: &mut Vec<u64>) {
-        edge_columns_in_range(self.ranges[shard].clone(), self.negative, out);
+        match self.shortcut_tri {
+            Some(smallest_tri) => {
+                let skipped = edge_columns_in_range_shortcut(
+                    self.ranges[shard].clone(),
+                    self.negative,
+                    smallest_tri,
+                    out,
+                );
+                self.skipped.fetch_add(skipped, Ordering::Relaxed);
+            }
+            None => edge_columns_in_range(self.ranges[shard].clone(), self.negative, out),
+        }
     }
 }
 
 /// Sharded H2\* column source: triangles grouped by descending diameter
 /// edge, with trivial-death and H1-death clearing applied inside each
-/// shard. Cleared counts accumulate order-independently into an atomic,
-/// so the total is deterministic across steal schedules.
+/// shard. With the shortcut on, each surviving triangle is probed for an
+/// apparent pair (minimal cofacet via `FindSmallesth`, maximal
+/// equal-diameter facet round-trip) right here on the enumerating pool
+/// worker; apparent columns are counted in `skipped` and suppressed, so
+/// they never reach a `BucketTable`. Cleared/skipped counts accumulate
+/// order-independently into atomics, so totals are deterministic across
+/// steal schedules.
 struct H2Shards<'a> {
     nb: &'a Neighborhoods,
     f: &'a EdgeFiltration,
     smallest_tri: &'a [Key],
     h1_deaths: &'a HashSet<u64>,
     ranges: Vec<std::ops::Range<u32>>,
+    shortcut: bool,
     cleared: AtomicUsize,
+    skipped: AtomicUsize,
 }
 
 impl ColumnShards for H2Shards<'_> {
@@ -196,13 +246,19 @@ impl ColumnShards for H2Shards<'_> {
 
     fn fill(&self, shard: usize, out: &mut Vec<u64>) {
         let mut cleared = 0usize;
+        let mut skipped = 0usize;
         triangles_with_diameter_in_range(
             self.nb,
             self.f,
             self.ranges[shard].clone(),
             |t| {
+                // Clearing first — exactly where the unshortcut stream
+                // drops these columns, before any trivial probe.
                 if self.smallest_tri[t.p as usize] == t || self.h1_deaths.contains(&t.pack()) {
                     cleared += 1; // death of a trivial or real H1 pair
+                    false
+                } else if self.shortcut && apparent_cofacet(self.nb, self.f, t).is_some() {
+                    skipped += 1; // zero-persistence apparent pair
                     false
                 } else {
                     true
@@ -211,6 +267,7 @@ impl ColumnShards for H2Shards<'_> {
             out,
         );
         self.cleared.fetch_add(cleared, Ordering::Relaxed);
+        self.skipped.fetch_add(skipped, Ordering::Relaxed);
     }
 }
 
@@ -303,12 +360,20 @@ impl Engine {
             let ne = f.n_edges();
             let h1_src = H1Shards {
                 negative: &h0r.negative,
+                shortcut_tri: opts.shortcut.then_some(&space.smallest_tri[..]),
                 ranges: opts.enum_plan(ne),
+                skipped: AtomicUsize::new(0),
             };
             // H1 keeps zero-persistence pairs: their death triangles feed
-            // the dim-2 clearing set.
-            let res = self.run_reduction(&space, &h1_src, true, f);
-            stats.h1_cleared = ne - res.stats.columns;
+            // the dim-2 clearing set. (Trivial pairs are not stored, so
+            // in-shard shortcut columns feed dim-2 clearing through
+            // `smallest_tri` exactly as before.)
+            let mut res = self.run_reduction(&space, &h1_src, true, f);
+            let h1_skipped = h1_src.skipped.load(Ordering::Relaxed);
+            res.stats.shortcut_pairs = h1_skipped;
+            res.stats.trivial_pairs += h1_skipped;
+            res.sched.shortcut_columns = h1_skipped as u64;
+            stats.h1_cleared = ne - res.stats.columns - h1_skipped;
             stats.h1_sched = res.sched;
             for &(col, key) in &res.pairs {
                 let e = col as u32;
@@ -339,9 +404,15 @@ impl Engine {
                     smallest_tri: &space.smallest_tri,
                     h1_deaths: &h1_deaths,
                     ranges: opts.enum_plan(ne),
+                    shortcut: opts.shortcut,
                     cleared: AtomicUsize::new(0),
+                    skipped: AtomicUsize::new(0),
                 };
-                let res2 = self.run_reduction(&tspace, &h2_src, false, f);
+                let mut res2 = self.run_reduction(&tspace, &h2_src, false, f);
+                let h2_skipped = h2_src.skipped.load(Ordering::Relaxed);
+                res2.stats.shortcut_pairs = h2_skipped;
+                res2.stats.trivial_pairs += h2_skipped;
+                res2.sched.shortcut_columns = h2_skipped as u64;
                 stats.h2_cleared = h2_src.cleared.load(Ordering::Relaxed);
                 stats.h2_sched = res2.sched;
                 for &(col, key) in &res2.pairs {
@@ -529,24 +600,27 @@ mod tests {
                     for (batch, adaptive) in [(1usize, false), (7, false), (100, false), (8, true)]
                     {
                         for (enum_shards, enum_grain) in [(0usize, 0usize), (3, 0), (0, 2)] {
-                            let opts = EngineOptions {
-                                max_dim: 2,
-                                threads,
-                                batch_size: batch,
-                                adaptive_batch: adaptive,
-                                batch_min: 2,
-                                enum_shards,
-                                enum_grain,
-                                dense_lookup: dense,
-                                algorithm,
-                                ..Default::default()
-                            };
-                            let got = compute_ph_from_filtration(&f, &opts).diagram;
-                            assert!(
-                                got.multiset_eq(&reference, 1e-9),
-                                "algo={algorithm:?} threads={threads} dense={dense} batch={batch} adaptive={adaptive} shards={enum_shards} grain={enum_grain}:\n{}",
-                                got.diff_summary(&reference)
-                            );
+                            for shortcut in [true, false] {
+                                let opts = EngineOptions {
+                                    max_dim: 2,
+                                    threads,
+                                    batch_size: batch,
+                                    adaptive_batch: adaptive,
+                                    batch_min: 2,
+                                    enum_shards,
+                                    enum_grain,
+                                    shortcut,
+                                    dense_lookup: dense,
+                                    algorithm,
+                                    ..Default::default()
+                                };
+                                let got = compute_ph_from_filtration(&f, &opts).diagram;
+                                assert!(
+                                    got.multiset_eq(&reference, 1e-9),
+                                    "algo={algorithm:?} threads={threads} dense={dense} batch={batch} adaptive={adaptive} shards={enum_shards} grain={enum_grain} shortcut={shortcut}:\n{}",
+                                    got.diff_summary(&reference)
+                                );
+                            }
                         }
                     }
                 }
@@ -576,9 +650,11 @@ mod tests {
         // column counts depend on clearing, so only H1 is asserted.
         assert!(r.stats.h1_sched.enum_columns > 0);
         assert_eq!(
-            r.stats.h1_sched.enum_columns as usize + r.stats.h1_cleared,
+            r.stats.h1_sched.enum_columns as usize
+                + r.stats.h1_cleared
+                + r.stats.h1.shortcut_pairs,
             f.n_edges(),
-            "enumerated + cleared H1 columns must cover every edge"
+            "streamed + cleared + shortcut H1 columns must cover every edge"
         );
         // Sequential runs enumerate inline: shard stats stay zero.
         let seq = compute_ph_from_filtration(
@@ -591,6 +667,57 @@ mod tests {
         );
         assert_eq!(seq.stats.h2_sched.enum_shards, 0);
         assert!(r.diagram.multiset_eq(&seq.diagram, 0.0));
+    }
+
+    #[test]
+    fn shortcut_accounting_is_exact_and_output_invariant() {
+        // The same instance with the shortcut on/off: identical diagram
+        // at zero tolerance; trivial-pair totals invariant; the on-run
+        // moves columns from the stream into `shortcut_pairs` one for
+        // one; clearing untouched.
+        let data = random_cloud(22, 3, 31);
+        let f = EdgeFiltration::build(&data, 0.85);
+        for threads in [1usize, 4] {
+            let mk = |shortcut: bool| EngineOptions {
+                max_dim: 2,
+                threads,
+                shortcut,
+                ..Default::default()
+            };
+            let on = compute_ph_from_filtration(&f, &mk(true));
+            let off = compute_ph_from_filtration(&f, &mk(false));
+            assert!(
+                on.diagram.multiset_eq(&off.diagram, 0.0),
+                "threads={threads}: shortcut must not change the diagram"
+            );
+            for (label, s_on, s_off) in [
+                ("h1", &on.stats.h1, &off.stats.h1),
+                ("h2", &on.stats.h2, &off.stats.h2),
+            ] {
+                assert_eq!(s_off.shortcut_pairs, 0, "{label} threads={threads}");
+                assert_eq!(
+                    s_on.trivial_pairs, s_off.trivial_pairs,
+                    "{label} threads={threads}: trivial totals must be invariant"
+                );
+                assert_eq!(
+                    s_on.columns + s_on.shortcut_pairs,
+                    s_off.columns,
+                    "{label} threads={threads}: shortcut columns must leave the stream 1:1"
+                );
+                assert_eq!(s_on.pairs, s_off.pairs, "{label} threads={threads}");
+                assert_eq!(s_on.essential, s_off.essential, "{label} threads={threads}");
+            }
+            // Every trivial pair is apparent at its first low, so with
+            // the shortcut on none should survive into the reduction.
+            assert_eq!(on.stats.h1.shortcut_pairs, on.stats.h1.trivial_pairs);
+            assert_eq!(on.stats.h2.shortcut_pairs, on.stats.h2.trivial_pairs);
+            // A dense-enough cloud always has apparent pairs in both dims.
+            assert!(on.stats.h1.shortcut_pairs > 0, "threads={threads}");
+            assert!(on.stats.h2.shortcut_pairs > 0, "threads={threads}");
+            assert_eq!(on.stats.h1_cleared, off.stats.h1_cleared, "threads={threads}");
+            assert_eq!(on.stats.h2_cleared, off.stats.h2_cleared, "threads={threads}");
+            assert!(on.stats.h1.skip_rate() > 0.0 && on.stats.h1.skip_rate() <= 1.0);
+        }
     }
 
     #[test]

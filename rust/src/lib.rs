@@ -44,17 +44,29 @@
 //! The pool is owned by a persistent [`homology::Engine`] and reused
 //! across the H1*/H2* phases and across repeated runs.
 //!
+//! On top of the pipeline sits the **enumeration-time apparent-pair
+//! shortcut** (`EngineOptions::shortcut`, on by default): most
+//! surviving columns form zero-persistence apparent pairs whose pivot
+//! is determined by one cofacet/facet round-trip, and the shard fills
+//! resolve those *while enumerating* on the pool workers — the columns
+//! never enter the stream, a `BucketTable`, or the batch pipeline
+//! (shortcut + clearing, Ripser-style, atop the paper's trivial-pair
+//! machinery).
+//!
 //! Config knobs (via [`homology::EngineOptions`], the TOML config, or
 //! CLI flags): `batch_size` (initial batch), `adaptive_batch` (walk the
 //! batch size toward the serial≈push equilibrium; on by default),
 //! `batch_min`/`batch_max` (adaptation bounds), `adapt_low`/`adapt_high`
 //! (serial-fraction thresholds steering the adaptation; defaults
 //! 0.25/0.75), `steal_grain` (columns per steal task; 0 = auto),
-//! `enum_shards`/`enum_grain` (enumeration shard plan; 0 = auto).
-//! `EngineStats::{h1_sched, h2_sched}` report batches, steals, worker
-//! utilization, serial/push overlap, residual barrier idle, and the
-//! enumeration span (shards, columns, worker busy time, scheduler time
-//! blocked on enumeration) per phase.
+//! `enum_shards`/`enum_grain` (enumeration shard plan; 0 = auto),
+//! `shortcut` (apparent-pair skip; `--no-shortcut` for the exact
+//! fallback). `EngineStats::{h1_sched, h2_sched}` report batches,
+//! steals, worker utilization, serial/push overlap, residual barrier
+//! idle, the enumeration span (shards, columns, worker busy time,
+//! scheduler time blocked on enumeration) and the shortcut skip rate
+//! per phase; `PhaseTimer` samples the max-RSS high-water mark at every
+//! phase boundary for the per-phase memory claim.
 //!
 //! The exactness guarantee is enforced by a differential test harness
 //! (`rust/tests/differential.rs`: scheduler vs the explicit

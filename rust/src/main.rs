@@ -71,6 +71,8 @@ run flags:
   --adapt-high <float>      serial fraction above which batch halves  [0.75]
   --enum-shards <int>       H1*/H2* enumeration shards (0 = auto)
   --enum-grain <int>        diameter edges per enumeration shard (0 = auto)
+  --no-shortcut             disable the enumeration-time apparent-pair
+                            shortcut (exact fallback; on by default)
   --ns                      DoryNS dense edge-order lookup
   --algorithm <a>           fast-column|implicit-row
   --no-pjrt                 skip the PJRT/Pallas distance kernel
@@ -135,6 +137,7 @@ fn cmd_run(args: &[String]) -> Result<()> {
             "--adapt-high" => cfg.adapt_high = val()?.parse()?,
             "--enum-shards" => cfg.enum_shards = val()?.parse()?,
             "--enum-grain" => cfg.enum_grain = val()?.parse()?,
+            "--no-shortcut" => cfg.shortcut = false,
             "--ns" => cfg.dense_lookup = true,
             "--algorithm" => cfg.algorithm = val()?.clone(),
             "--no-pjrt" => cfg.use_pjrt = false,
@@ -184,6 +187,21 @@ fn cmd_run(args: &[String]) -> Result<()> {
         memtrack::fmt_bytes(memtrack::max_rss_bytes()),
     );
     println!("phases: {}", report.result.timings.summary());
+    let rss = report.result.timings.rss_summary();
+    if !rss.is_empty() {
+        println!("phase max-RSS: {rss}");
+    }
+    let st = &report.result.stats;
+    let skipped = st.h1.shortcut_pairs + st.h2.shortcut_pairs;
+    if skipped > 0 {
+        println!(
+            "shortcut: {skipped} apparent pairs resolved at enumeration (H1* {:.0}% of {} candidates, H2* {:.0}% of {})",
+            st.h1.skip_rate() * 100.0,
+            st.h1.columns + st.h1.shortcut_pairs,
+            st.h2.skip_rate() * 100.0,
+            st.h2.columns + st.h2.shortcut_pairs,
+        );
+    }
     if cfg.threads > 1 {
         let s = report.result.stats.sched_total();
         if s.batches > 0 {

@@ -30,14 +30,22 @@ use crate::filtration::{EdgeFiltration, Key, Neighborhoods};
 /// Counters reported by EXPERIMENTS.md and the ablation benches.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ReduceStats {
+    /// Columns that entered the reduction stream (shortcut columns are
+    /// resolved at enumeration time and counted separately).
     pub columns: usize,
     pub cleared: usize,
+    /// Total trivial (apparent) pairs, wherever they were resolved —
+    /// invariant under the enumeration-time shortcut.
     pub trivial_pairs: usize,
     pub pairs: usize,
     pub essential: usize,
     pub appends: usize,
     pub find_next_calls: usize,
     pub zero_columns: usize,
+    /// Trivial pairs resolved by the in-shard apparent-pair shortcut
+    /// (subset of `trivial_pairs`): these columns never entered a
+    /// `BucketTable`, the batch pipeline, or the column stream.
+    pub shortcut_pairs: usize,
 }
 
 impl ReduceStats {
@@ -50,6 +58,18 @@ impl ReduceStats {
         self.appends += o.appends;
         self.find_next_calls += o.find_next_calls;
         self.zero_columns += o.zero_columns;
+        self.shortcut_pairs += o.shortcut_pairs;
+    }
+
+    /// Fraction of reduction candidates (surviving clearing) resolved by
+    /// the enumeration-time apparent-pair shortcut.
+    pub fn skip_rate(&self) -> f64 {
+        let total = self.columns + self.shortcut_pairs;
+        if total == 0 {
+            0.0
+        } else {
+            self.shortcut_pairs as f64 / total as f64
+        }
     }
 }
 

@@ -402,6 +402,19 @@ fn worker_loop(tid: usize, shared: Arc<Shared>) {
                 shared.done_cv.notify_all();
             }
         }
+        // Between generations, drop any buffer capacity a pathological
+        // generation left in this worker's deque: the tasks are gone,
+        // but without the shrink the high-water mark would pin memory
+        // for the pool's (engine-long) lifetime. The bound mirrors
+        // `BucketTable::clear`'s retained-capacity discipline. No new
+        // generation can be dealt yet — the previous ticket cannot
+        // resolve before `live_jobs` drops below.
+        {
+            let mut q = shared.queues[tid].lock().unwrap();
+            if q.is_empty() && q.capacity() > 4096 {
+                q.shrink_to(4096);
+            }
+        }
         // Release the job clone *before* announcing it: the ticket only
         // resolves once every worker has dropped its closure, so the
         // caller's borrowed data can never be touched afterwards (not

@@ -173,6 +173,13 @@ pub struct SchedStats {
     /// lower bound on the enumeration span the pipeline failed to hide,
     /// since mixed-generation tails land in `barrier_wait_ns`.
     pub enum_block_ns: u64,
+    /// Columns resolved by the enumeration-time apparent-pair shortcut:
+    /// suppressed inside the shard fills, so they never entered the
+    /// column stream, a push task, or a serial commit. Set by the
+    /// homology engine after the reduction (the scheduler itself never
+    /// sees these columns); zero with the shortcut off and for the raw
+    /// `reduce_all`/`reduce_stream` entry points.
+    pub shortcut_columns: u64,
 }
 
 impl SchedStats {
@@ -204,6 +211,23 @@ impl SchedStats {
         1.0 - visible as f64 / self.enum_busy_ns as f64
     }
 
+    /// Fraction of the enumerated column universe resolved by the
+    /// in-shard apparent-pair shortcut. Defined only for pooled runs
+    /// (`enum_columns` counts the surviving stream); sequential engines
+    /// leave `enum_columns` at 0, and this reports 0 rather than a
+    /// fabricated 100% — use the engine-level `ReduceStats::skip_rate`
+    /// for a path-independent rate.
+    pub fn skip_fraction(&self) -> f64 {
+        // `enum_shards > 0` marks a pooled run (sharded enumeration
+        // actually executed); it distinguishes "sequential, stream size
+        // unknown here" from "pooled and everything was skipped".
+        let total = self.shortcut_columns + self.enum_columns;
+        if total == 0 || self.enum_shards == 0 {
+            return 0.0;
+        }
+        self.shortcut_columns as f64 / total as f64
+    }
+
     pub fn merge(&mut self, o: &SchedStats) {
         self.threads = self.threads.max(o.threads);
         self.batches += o.batches;
@@ -228,6 +252,7 @@ impl SchedStats {
         self.enum_columns += o.enum_columns;
         self.enum_busy_ns += o.enum_busy_ns;
         self.enum_block_ns += o.enum_block_ns;
+        self.shortcut_columns += o.shortcut_columns;
     }
 
     /// Machine-readable form for run summaries and bench dumps.
@@ -252,12 +277,14 @@ impl SchedStats {
             .field("enum_busy_s", self.enum_busy_ns as f64 * 1e-9)
             .field("enum_block_s", self.enum_block_ns as f64 * 1e-9)
             .field("enum_hidden", self.enum_hidden_fraction())
+            .field("shortcut_columns", self.shortcut_columns as i64)
+            .field("skip_rate", self.skip_fraction())
     }
 
     /// One-line human summary for the CLI and benches.
     pub fn summary(&self) -> String {
         format!(
-            "batches {} (size {}..{}), steals {}/{} tasks, resumed {}, util {:.0}%, overlap {:.3}s ({:.0}% of serial), idle {:.3}s, enum {} shards ({:.3}s busy, {:.3}s blocked, {:.0}% hidden)",
+            "batches {} (size {}..{}), steals {}/{} tasks, resumed {}, util {:.0}%, overlap {:.3}s ({:.0}% of serial), idle {:.3}s, enum {} shards ({:.3}s busy, {:.3}s blocked, {:.0}% hidden), shortcut {} cols ({:.0}% skipped)",
             self.batches,
             self.min_batch,
             self.max_batch,
@@ -272,6 +299,8 @@ impl SchedStats {
             self.enum_busy_ns as f64 * 1e-9,
             self.enum_block_ns as f64 * 1e-9,
             self.enum_hidden_fraction() * 100.0,
+            self.shortcut_columns,
+            self.skip_fraction() * 100.0,
         )
     }
 }
@@ -394,7 +423,8 @@ unsafe fn submit_batch<'a, S: ColumnSpace, Src: ColumnShards>(
                     let mut stats = ReduceStats::default();
                     let out = reduce_against(space, base, columns[start + i], &mut stats);
                     let p = match out {
-                        ColumnOutcome::Zero => Pending::Zero,
+                        // Workers cannot reuse across slots; drop the table.
+                        ColumnOutcome::Zero { .. } => Pending::Zero,
                         ColumnOutcome::Claim {
                             low,
                             self_trivial,
@@ -724,7 +754,7 @@ pub fn reduce_stream<S: ColumnSpace, Src: ColumnShards>(
                     };
                     total.merge(&stats);
                     match outcome {
-                        ColumnOutcome::Zero => {
+                        ColumnOutcome::Zero { .. } => {
                             result.stats.zero_columns += 1;
                             result.stats.essential += 1;
                             result.essential.push(col);

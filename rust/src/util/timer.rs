@@ -1,11 +1,29 @@
 //! Phase timing for Table-2-style breakdowns and bench statistics.
+//!
+//! Each phase boundary also samples the OS max-RSS high-water mark
+//! (`util::memtrack::max_rss_bytes`), so per-phase peak-memory growth —
+//! Dory's headline memory claim — is measured, not estimated.
 
 use std::time::{Duration, Instant};
+
+/// One completed phase: wall time plus the process max-RSS high-water
+/// mark sampled at the instant the phase ended. Clamped monotone across
+/// the timer's phases (Linux `VmHWM` is monotone already; the portable
+/// `ps` fallback reports *current* RSS, which can dip), so the delta
+/// between consecutive phases localizes where the peak grew; 0 when the
+/// platform exposes no RSS source.
+#[derive(Debug, Clone)]
+pub struct PhaseRecord {
+    pub name: String,
+    pub duration: Duration,
+    /// `util::memtrack::max_rss_bytes()` at the phase boundary.
+    pub max_rss_end: usize,
+}
 
 /// Records named phases in order; renders the paper's Table-2 row format.
 #[derive(Debug, Default)]
 pub struct PhaseTimer {
-    phases: Vec<(String, Duration)>,
+    phases: Vec<PhaseRecord>,
     current: Option<(String, Instant)>,
 }
 
@@ -20,14 +38,22 @@ impl PhaseTimer {
         self.current = Some((name.to_string(), Instant::now()));
     }
 
-    /// End the running phase (no-op when idle).
+    /// End the running phase (no-op when idle), sampling max-RSS at the
+    /// boundary (clamped to the previous phase's mark so the series
+    /// stays monotone even on platforms whose fallback reports current
+    /// RSS).
     pub fn stop(&mut self) {
         if let Some((name, t0)) = self.current.take() {
-            self.phases.push((name, t0.elapsed()));
+            let prev = self.phases.last().map(|p| p.max_rss_end).unwrap_or(0);
+            self.phases.push(PhaseRecord {
+                name,
+                duration: t0.elapsed(),
+                max_rss_end: crate::util::memtrack::max_rss_bytes().max(prev),
+            });
         }
     }
 
-    pub fn phases(&self) -> &[(String, Duration)] {
+    pub fn phases(&self) -> &[PhaseRecord] {
         &self.phases
     }
 
@@ -35,19 +61,47 @@ impl PhaseTimer {
         self.phases
             .iter()
             .rev()
-            .find(|(n, _)| n == name)
-            .map(|(_, d)| *d)
+            .find(|p| p.name == name)
+            .map(|p| p.duration)
+    }
+
+    /// Max-RSS high-water mark at the end of the named phase.
+    pub fn get_rss(&self, name: &str) -> Option<usize> {
+        self.phases
+            .iter()
+            .rev()
+            .find(|p| p.name == name)
+            .map(|p| p.max_rss_end)
     }
 
     pub fn total(&self) -> Duration {
-        self.phases.iter().map(|(_, d)| *d).sum()
+        self.phases.iter().map(|p| p.duration).sum()
     }
 
     /// "F1 1.14s | nbhd 0.49s | H0 0.14s" style summary.
     pub fn summary(&self) -> String {
         self.phases
             .iter()
-            .map(|(n, d)| format!("{n} {:.3}s", d.as_secs_f64()))
+            .map(|p| format!("{} {:.3}s", p.name, p.duration.as_secs_f64()))
+            .collect::<Vec<_>>()
+            .join(" | ")
+    }
+
+    /// "F1 41.2 MB | H1* 63.0 MB" style per-phase max-RSS summary
+    /// (empty when the platform reports no RSS).
+    pub fn rss_summary(&self) -> String {
+        if self.phases.iter().all(|p| p.max_rss_end == 0) {
+            return String::new();
+        }
+        self.phases
+            .iter()
+            .map(|p| {
+                format!(
+                    "{} {}",
+                    p.name,
+                    crate::util::memtrack::fmt_bytes(p.max_rss_end)
+                )
+            })
             .collect::<Vec<_>>()
             .join(" | ")
     }
@@ -105,9 +159,26 @@ mod tests {
         std::thread::sleep(Duration::from_millis(2));
         t.stop();
         assert_eq!(t.phases().len(), 2);
-        assert_eq!(t.phases()[0].0, "a");
+        assert_eq!(t.phases()[0].name, "a");
         assert!(t.get("b").unwrap() >= Duration::from_millis(1));
         assert!(t.total() >= Duration::from_millis(3));
+    }
+
+    #[test]
+    fn rss_sampled_at_phase_boundaries() {
+        let mut t = PhaseTimer::new();
+        t.start("x");
+        t.start("y");
+        t.stop();
+        // Monotone high-water mark (both 0 when the platform has none).
+        let rx = t.get_rss("x").unwrap();
+        let ry = t.get_rss("y").unwrap();
+        assert!(ry >= rx);
+        assert_eq!(t.phases()[1].max_rss_end, ry);
+        if rx > 0 {
+            assert!(!t.rss_summary().is_empty());
+        }
+        assert_eq!(t.get_rss("nope"), None);
     }
 
     #[test]

@@ -23,9 +23,12 @@
 //!
 //! Failures print the seed for exact reproduction.
 
-use dory::coboundary::edges::brute_force_coboundary;
-use dory::coboundary::triangles::triangles_with_diameter_in_range;
-use dory::filtration::{EdgeFiltration, Neighborhoods};
+use dory::coboundary::edges::{brute_force_coboundary, is_apparent_edge_pair};
+use dory::coboundary::triangles::{
+    apparent_cofacet, max_equal_facet_of_tet, triangles_with_diameter_in_range,
+};
+use dory::coboundary::TetCursor;
+use dory::filtration::{EdgeFiltration, Key, Neighborhoods};
 use dory::geometry::{MetricData, PointCloud, SparseDistances};
 use dory::homology::{compute_ph_from_filtration, Engine, EngineOptions};
 use dory::reduction::explicit::oracle_diagram;
@@ -45,48 +48,56 @@ fn random_cloud(rng: &mut Pcg32, n: usize, dim: usize) -> MetricData {
 }
 
 /// Sweep the scheduler grid on one filtration, asserting bit-exact
-/// agreement with the explicit oracle diagram.
+/// agreement with the explicit oracle diagram. The apparent-pair
+/// shortcut is swept on/off across the whole grid: on is the production
+/// path (columns resolved in-shard), off is the exact fallback (the
+/// reduction's own first-low trivial test), and both must hit the
+/// oracle bits.
 fn check_instance(f: &EdgeFiltration, max_dim: usize, label: &str) {
     let nb = Neighborhoods::build(f, false);
     let want = oracle_diagram(f, &nb, max_dim);
     for threads in THREADS {
-        for enum_shards in ENUM_SHARDS {
-            for batch in BATCHES {
-                let opts = EngineOptions {
-                    max_dim,
-                    threads,
-                    batch_size: batch,
-                    adaptive_batch: false,
-                    enum_shards,
-                    ..Default::default()
-                };
-                let got = compute_ph_from_filtration(f, &opts).diagram;
-                assert!(
-                    got.multiset_eq(&want, 0.0),
-                    "{label} threads={threads} shards={enum_shards} batch={batch}:\n{}",
-                    got.diff_summary(&want)
-                );
+        for shortcut in [true, false] {
+            for enum_shards in ENUM_SHARDS {
+                for batch in BATCHES {
+                    let opts = EngineOptions {
+                        max_dim,
+                        threads,
+                        batch_size: batch,
+                        adaptive_batch: false,
+                        enum_shards,
+                        shortcut,
+                        ..Default::default()
+                    };
+                    let got = compute_ph_from_filtration(f, &opts).diagram;
+                    assert!(
+                        got.multiset_eq(&want, 0.0),
+                        "{label} threads={threads} shards={enum_shards} batch={batch} shortcut={shortcut}:\n{}",
+                        got.diff_summary(&want)
+                    );
+                }
             }
+            // Adaptive batching walks through many sizes in one run; the
+            // output must not depend on the trajectory (nor on a shard
+            // plan misaligned with the batch trajectory).
+            let opts = EngineOptions {
+                max_dim,
+                threads,
+                batch_size: 16,
+                adaptive_batch: true,
+                batch_min: 2,
+                batch_max: 64,
+                enum_shards: 3,
+                shortcut,
+                ..Default::default()
+            };
+            let got = compute_ph_from_filtration(f, &opts).diagram;
+            assert!(
+                got.multiset_eq(&want, 0.0),
+                "{label} threads={threads} adaptive shortcut={shortcut}:\n{}",
+                got.diff_summary(&want)
+            );
         }
-        // Adaptive batching walks through many sizes in one run; the
-        // output must not depend on the trajectory (nor on a shard plan
-        // misaligned with the batch trajectory).
-        let opts = EngineOptions {
-            max_dim,
-            threads,
-            batch_size: 16,
-            adaptive_batch: true,
-            batch_min: 2,
-            batch_max: 64,
-            enum_shards: 3,
-            ..Default::default()
-        };
-        let got = compute_ph_from_filtration(f, &opts).diagram;
-        assert!(
-            got.multiset_eq(&want, 0.0),
-            "{label} threads={threads} adaptive:\n{}",
-            got.diff_summary(&want)
-        );
     }
 }
 
@@ -287,6 +298,104 @@ fn sharded_enumeration_byte_identical_over_40_seeds() {
             assert_eq!(
                 pooled, want,
                 "seed={seed} shards={enum_shards} grain={enum_grain}: pooled stream diverges"
+            );
+        }
+    }
+}
+
+#[test]
+fn shortcut_property_every_skipped_pair_has_zero_persistence() {
+    // Two halves. (a) Property: every column the in-shard shortcut
+    // would skip is an apparent pair — its minimal cofacet shares its
+    // diameter, so birth == death to the bit — and the round-trip is
+    // consistent with the cursor machinery. (b) Accounting: the engine's
+    // shortcut counter equals an independent recount of the apparent,
+    // non-cleared columns, and on/off runs agree bit for bit with
+    // trivial totals invariant.
+    for seed in 0..4u64 {
+        let mut rng = Pcg32::new(0xA44A + seed);
+        let data = random_cloud(&mut rng, 40, 3);
+        let tau = rng.uniform(0.5, 0.75);
+        let f = EdgeFiltration::build(&data, tau);
+        let nb = Neighborhoods::build(&f, false);
+        let ne = f.n_edges() as u32;
+
+        // (a) H2*: the apparent property over the full triangle universe.
+        let mut tris: Vec<u64> = Vec::new();
+        triangles_with_diameter_in_range(&nb, &f, 0..ne, |_| true, &mut tris);
+        for &p in &tris {
+            let t = Key::unpack(p);
+            if let Some(h) = apparent_cofacet(&nb, &f, t) {
+                assert_eq!(h.p, t.p, "seed={seed} t={t}: diameters must match");
+                assert_eq!(
+                    f.key_value(t).to_bits(),
+                    f.key_value(h).to_bits(),
+                    "seed={seed} t={t}: skipped pair must have birth == death"
+                );
+                assert_eq!(max_equal_facet_of_tet(&f, h), t, "seed={seed} t={t}");
+                assert_eq!(TetCursor::find_smallest(&nb, &f, t).cur, h, "seed={seed}");
+            }
+        }
+        // (a) H1*: same property for edge columns.
+        let space = EdgeColumns::new(&nb, &f);
+        for e in 0..ne {
+            if is_apparent_edge_pair(e, space.smallest_tri[e as usize]) {
+                let t = space.smallest_tri[e as usize];
+                assert_eq!(
+                    f.values[e as usize].to_bits(),
+                    f.key_value(t).to_bits(),
+                    "seed={seed} e={e}: skipped pair must have birth == death"
+                );
+            }
+        }
+
+        // (b) Engine accounting, threaded and sequential.
+        for threads in [1usize, 4] {
+            let mk = |shortcut: bool| EngineOptions {
+                max_dim: 2,
+                threads,
+                shortcut,
+                ..Default::default()
+            };
+            let on = compute_ph_from_filtration(&f, &mk(true));
+            let off = compute_ph_from_filtration(&f, &mk(false));
+            assert!(
+                on.diagram.multiset_eq(&off.diagram, 0.0),
+                "seed={seed} threads={threads}: shortcut changed the diagram"
+            );
+            assert_eq!(on.stats.h1.trivial_pairs, off.stats.h1.trivial_pairs);
+            assert_eq!(on.stats.h2.trivial_pairs, off.stats.h2.trivial_pairs);
+            assert_eq!(
+                on.stats.h1.columns + on.stats.h1.shortcut_pairs,
+                off.stats.h1.columns,
+                "seed={seed} threads={threads}"
+            );
+            assert_eq!(
+                on.stats.h2.columns + on.stats.h2.shortcut_pairs,
+                off.stats.h2.columns,
+                "seed={seed} threads={threads}"
+            );
+            // Independent recount of what the H2* shard filter skips:
+            // apparent triangles that survive trivial-death and
+            // H1-death clearing.
+            let h1_deaths: std::collections::HashSet<u64> =
+                on.h1_pairs.iter().map(|&(_, k)| k.pack()).collect();
+            let expected_h2: usize = tris
+                .iter()
+                .filter(|&&p| {
+                    let t = Key::unpack(p);
+                    space.smallest_tri[t.p as usize] != t
+                        && !h1_deaths.contains(&p)
+                        && apparent_cofacet(&nb, &f, t).is_some()
+                })
+                .count();
+            assert_eq!(
+                on.stats.h2.shortcut_pairs, expected_h2,
+                "seed={seed} threads={threads}: H2* shortcut recount"
+            );
+            assert!(
+                on.stats.h2.shortcut_pairs > 0,
+                "seed={seed} threads={threads}: expected apparent H2* pairs"
             );
         }
     }

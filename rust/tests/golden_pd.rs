@@ -249,6 +249,29 @@ fn check_fixture(file: &str) {
                 ..Default::default()
             },
         ),
+        // The apparent-pair shortcut is on in every configuration above
+        // (the default); the exact fallback must hit the same bits.
+        (
+            "seq-noshortcut",
+            EngineOptions {
+                max_dim: fx.max_dim,
+                threads: 1,
+                shortcut: false,
+                ..Default::default()
+            },
+        ),
+        (
+            "t4-noshortcut",
+            EngineOptions {
+                max_dim: fx.max_dim,
+                threads: 4,
+                batch_size: 17,
+                adaptive_batch: false,
+                enum_shards: 3,
+                shortcut: false,
+                ..Default::default()
+            },
+        ),
     ];
     for (label, opts) in configs {
         let r = compute_ph(&fx.data, fx.tau, &opts);

@@ -105,8 +105,10 @@ fn pair_count_decomposition_invariant() {
             s.h0_deaths + s.h1.pairs + s.h1.trivial_pairs + s.h1.essential,
             "edge decomposition (seed={seed})"
         );
-        // Triangle columns: cleared (H1 deaths) + H2 pairs + essential.
-        let triangles = s.h2.columns + s.h2_cleared;
+        // Triangle columns: streamed + shortcut-skipped (apparent pairs
+        // resolved at enumeration, counted in h2.trivial_pairs) +
+        // cleared (H1 deaths) = H2 pairs + trivial + essential.
+        let triangles = s.h2.columns + s.h2.shortcut_pairs + s.h2_cleared;
         assert_eq!(
             triangles,
             s.h1.pairs + s.h1.trivial_pairs + s.h2.pairs + s.h2.trivial_pairs + s.h2.essential,
