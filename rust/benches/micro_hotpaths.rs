@@ -236,5 +236,70 @@ fn main() {
     println!("{:<42} {dt:>11.3} s    (n_e {})", "F1 build (dist+sort)", f2.n_edges());
     out = out.field("f1_build_s", dt);
 
+    // --- pooled filtration front-end ----------------------------------------
+    // CI gate for the parallel front-end: on a 4-thread engine at
+    // infinite tau the distance kernel, the key sort and the CSR fill
+    // must all execute as pool work (nonzero tile/chunk counters), and
+    // the enclosing-radius truncation must prune a nonzero number of
+    // edges on the sphere workload (r_enc < the diameter for a generic
+    // sample). Counter-based and deterministic — zero means the
+    // front-end fell back to the scheduler thread or the truncation
+    // regressed.
+    let sphere_fe = datasets::sphere(300, 1.0, 0.0, 2);
+    let engine = dory::homology::Engine::new(EngineOptions {
+        max_dim: 0,
+        threads: 4,
+        ..Default::default()
+    });
+    let t0 = Instant::now();
+    let r_fe = engine.compute_metric(&sphere_fe, f64::INFINITY);
+    let dt_fe = t0.elapsed().as_secs_f64();
+    let fs = r_fe.stats.filtration;
+    println!(
+        "{:<42} {dt_fe:>11.3} s    ({} tiles, {} sort chunks, {} nb chunks)",
+        "front-end 4 threads (sphere300, tau=inf)", fs.tiles, fs.sort_chunks, fs.nb_chunks
+    );
+    println!(
+        "{:<42} {:>10} / {:<10} ({} pruned at r_enc={:.4})",
+        "enclosing-radius pruning (sphere300)",
+        fs.edges_kept,
+        fs.edges_considered,
+        fs.edges_pruned,
+        fs.enclosing_radius,
+    );
+    assert!(
+        fs.tiles > 0,
+        "front-end distance pass ran on the scheduler thread (no pool tiles recorded)"
+    );
+    assert!(
+        fs.sort_chunks > 0 && fs.nb_chunks > 0,
+        "front-end sort/CSR phases ran on the scheduler thread"
+    );
+    assert!(
+        fs.edges_pruned > 0,
+        "enclosing-radius pruning is inactive on the sphere workload"
+    );
+    assert_eq!(fs.edges_considered, fs.edges_kept + fs.edges_pruned);
+    // Byte-identity smoke vs the serial reference at tau = r_enc.
+    let serial_fe = EdgeFiltration::build(&sphere_fe, fs.enclosing_radius);
+    assert_eq!(
+        serial_fe.n_edges() as u64,
+        fs.edges_kept,
+        "pooled front-end kept set deviates from the serial build at r_enc"
+    );
+    out = out
+        .field("f1_frontend_s", dt_fe)
+        .field("f1_dist_s", fs.dist_ns as f64 * 1e-9)
+        .field("f1_sort_s", fs.sort_ns as f64 * 1e-9)
+        .field("f1_nb_s", fs.nb_ns as f64 * 1e-9)
+        .field("f1_tiles", fs.tiles as f64)
+        .field("f1_sort_chunks", fs.sort_chunks as f64)
+        .field("f1_nb_chunks", fs.nb_chunks as f64)
+        .field("f1_considered", fs.edges_considered as f64)
+        .field("f1_kept", fs.edges_kept as f64)
+        .field("f1_pruned", fs.edges_pruned as f64)
+        .field("f1_prune_rate", fs.edges_pruned as f64 / fs.edges_considered as f64)
+        .field("f1_r_enc", fs.enclosing_radius);
+
     bs::write_json("micro_hotpaths.json", &out);
 }

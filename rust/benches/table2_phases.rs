@@ -55,6 +55,7 @@ fn main() {
     );
     let mut t2 = Json::arr();
     let mut sched_rows = Vec::new();
+    let mut frontend_rows: Vec<(String, dory::filtration::FiltrationStats)> = Vec::new();
     for ds in &suite {
         let opts = EngineOptions {
             max_dim: ds.max_dim,
@@ -91,14 +92,22 @@ fn main() {
         );
         let sched = m.result.stats.sched_total();
         sched_rows.push((ds.name.clone(), sched));
+        frontend_rows.push((ds.name.clone(), m.result.stats.filtration));
         let mut phase_rss = Json::obj();
         for p in t.phases() {
             phase_rss = phase_rss.field(&p.name, p.max_rss_end);
         }
+        let fs = &m.result.stats.filtration;
         t2.push(
             Json::obj()
                 .field("dataset", ds.name.as_str())
                 .field("f1", g("F1"))
+                .field("f1_dist", fs.dist_ns as f64 * 1e-9)
+                .field("f1_sort", fs.sort_ns as f64 * 1e-9)
+                .field("f1_nb", fs.nb_ns as f64 * 1e-9)
+                .field("f1_tiles", fs.tiles as f64)
+                .field("f1_kept", fs.edges_kept as f64)
+                .field("f1_pruned", fs.edges_pruned as f64)
                 .field("neighborhoods", g("neighborhoods"))
                 .field("h0", g("H0"))
                 .field("h1", g("H1*"))
@@ -153,6 +162,29 @@ fn main() {
             s.enum_busy_ns as f64 * 1e-9,
             s.enum_block_ns as f64 * 1e-9,
             s.shortcut_columns,
+        );
+    }
+
+    // The pooled front-end breakdown: distance tiles, sort chunks and
+    // CSR fill all execute on the worker pool; `pruned` counts edges
+    // dropped by the enclosing-radius truncation (nonzero only on the
+    // infinite-tau sets).
+    println!("\n== Front-end (pool-tiled F1, 4 threads) ==");
+    println!(
+        "{:<12} {:>9} {:>9} {:>9} {:>7} {:>7} {:>12} {:>10}",
+        "dataset", "dist s", "sort s", "nbhd s", "tiles", "chunks", "kept", "pruned"
+    );
+    for (name, fs) in &frontend_rows {
+        println!(
+            "{:<12} {:>9.3} {:>9.3} {:>9.3} {:>7} {:>7} {:>12} {:>10}",
+            name,
+            fs.dist_ns as f64 * 1e-9,
+            fs.sort_ns as f64 * 1e-9,
+            fs.nb_ns as f64 * 1e-9,
+            fs.tiles,
+            fs.sort_chunks + fs.nb_chunks,
+            fs.edges_kept,
+            fs.edges_pruned,
         );
     }
 

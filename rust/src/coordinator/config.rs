@@ -147,6 +147,12 @@ pub struct RunConfig {
     /// Apparent-pair shortcut at enumeration time (on by default; off =
     /// exact fallback for differential testing).
     pub shortcut: bool,
+    /// Point rows per front-end distance tile; 0 = auto.
+    pub f1_tile: usize,
+    /// Enclosing-radius truncation of the filtration when `tau` is
+    /// infinite (on by default; diagrams are unchanged, the edge set
+    /// shrinks). `--no-enclosing` = exact full-filtration fallback.
+    pub enclosing: bool,
     pub dense_lookup: bool,
     pub algorithm: String,
     pub artifacts: PathBuf,
@@ -179,6 +185,8 @@ impl Default for RunConfig {
             enum_shards: 0,
             enum_grain: 0,
             shortcut: true,
+            f1_tile: 0,
+            enclosing: true,
             dense_lookup: false,
             algorithm: "fast-column".into(),
             artifacts: PathBuf::from("artifacts"),
@@ -273,6 +281,12 @@ impl RunConfig {
                             }
                             "shortcut" => {
                                 cfg.shortcut = v.as_bool().context("engine.shortcut")?
+                            }
+                            "f1_tile" => {
+                                cfg.f1_tile = v.as_usize().context("engine.f1_tile")?
+                            }
+                            "enclosing" => {
+                                cfg.enclosing = v.as_bool().context("engine.enclosing")?
                             }
                             "dense_lookup" => {
                                 cfg.dense_lookup = v.as_bool().context("engine.dense_lookup")?
@@ -437,6 +451,18 @@ diagram_csv = "out/pd.csv"
         let d = RunConfig::default();
         assert_eq!((d.adapt_low, d.adapt_high), (0.25, 0.75));
         assert_eq!((d.enum_shards, d.enum_grain), (0, 0));
+    }
+
+    #[test]
+    fn frontend_knobs_parse_and_default() {
+        let d = RunConfig::default();
+        assert_eq!(d.f1_tile, 0);
+        assert!(d.enclosing);
+        let cfg = RunConfig::from_str("[engine]\nf1_tile = 64\nenclosing = false\n").unwrap();
+        assert_eq!(cfg.f1_tile, 64);
+        assert!(!cfg.enclosing);
+        assert!(RunConfig::from_str("[engine]\nenclosing = 1\n").is_err());
+        assert!(RunConfig::from_str("[engine]\nf1_tile = -3\n").is_err());
     }
 
     #[test]

@@ -15,14 +15,15 @@ use anyhow::{bail, Context, Result};
 pub use config::{DatasetSpec, RunConfig};
 
 use crate::datasets;
-use crate::filtration::EdgeFiltration;
+use crate::filtration::{EdgeFiltration, FiltrationStats};
 use crate::geometry::MetricData;
 use crate::hic;
-use crate::homology::{self, Algorithm, EngineOptions};
+use crate::homology::{self, Algorithm, Engine, EngineOptions};
 use crate::io;
 use crate::runtime::Runtime;
 use crate::util::json::Json;
 use crate::util::memtrack;
+use crate::util::timer::PhaseTimer;
 
 /// Everything a run produces.
 pub struct RunReport {
@@ -74,18 +75,72 @@ pub fn build_dataset(spec: &DatasetSpec) -> Result<MetricData> {
 }
 
 /// Build the edge filtration, preferring the PJRT distance kernel.
-/// Returns the filtration and which path produced it.
+/// Returns the filtration and which path produced it. Serial compat
+/// wrapper (no pool, no enclosing truncation) over
+/// [`build_filtration_pooled`], which is the engine-pool path the
+/// coordinator itself runs — one PJRT dispatch to keep in sync, not
+/// two.
 pub fn build_filtration(
     data: &MetricData,
     tau: f64,
     runtime: Option<&Runtime>,
 ) -> (EdgeFiltration, &'static str) {
+    let engine = Engine::new(EngineOptions {
+        threads: 1,
+        enclosing: false,
+        ..Default::default()
+    });
+    build_filtration_pooled(data, tau, runtime, &engine, &mut FiltrationStats::default())
+}
+
+/// Build the edge filtration on the engine's worker pool. The PJRT
+/// Pallas kernel, when an artifact fits, enumerates the thresholded
+/// pair list and the pool key-sorts it; otherwise the native tiled
+/// front-end (distance kernel + sort + enclosing truncation per the
+/// engine's `f1_tile`/`enclosing` knobs) runs entirely as pool work.
+pub fn build_filtration_pooled(
+    data: &MetricData,
+    tau: f64,
+    runtime: Option<&Runtime>,
+    engine: &Engine,
+    fstats: &mut FiltrationStats,
+) -> (EdgeFiltration, &'static str) {
     if let (MetricData::Points(pc), Some(rt)) = (data, runtime) {
         if rt.has_distance_kernel() {
             match rt.distance_edges(pc, tau) {
-                Ok(raw) => {
+                Ok(mut raw) => {
+                    let n = pc.n();
+                    let mut tau_eff = tau;
+                    // Enclosing-radius truncation applies to the kernel
+                    // path too: at τ = +∞ the returned pair list is
+                    // complete (guarded by the exact count, which makes
+                    // the radius derivable from the list alone), so the
+                    // same cut happens before the key sort — the
+                    // accelerated path must not ship a larger edge set
+                    // downstream than the native one.
+                    if engine.frontend_options().enclosing
+                        && tau == f64::INFINITY
+                        && n >= 2
+                        && raw.len() == n * (n - 1) / 2
+                    {
+                        let r = crate::filtration::enclosing_radius_of_edges(n, &raw);
+                        if r.is_finite() {
+                            let before = raw.len() as u64;
+                            raw.retain(|&(d, _, _)| d <= r);
+                            fstats.enclosing_radius = r;
+                            fstats.edges_pruned += before - raw.len() as u64;
+                            fstats.edges_considered += before - raw.len() as u64;
+                            tau_eff = r;
+                        }
+                    }
                     return (
-                        EdgeFiltration::from_weighted_edges(pc.n() as u32, raw, tau),
+                        EdgeFiltration::from_weighted_edges_pooled(
+                            pc.n() as u32,
+                            raw,
+                            tau_eff,
+                            engine.pool(),
+                            fstats,
+                        ),
                         "pjrt-pallas",
                     )
                 }
@@ -95,7 +150,10 @@ pub fn build_filtration(
             }
         }
     }
-    (EdgeFiltration::build(data, tau), "native")
+    (
+        EdgeFiltration::build_pooled(data, tau, engine.pool(), &engine.frontend_options(), fstats),
+        "native",
+    )
 }
 
 /// Execute a full configured run.
@@ -113,8 +171,6 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
         None
     };
 
-    memtrack::reset_peak();
-    let (f, edge_source) = build_filtration(&data, cfg.tau, runtime.as_ref());
     let opts = EngineOptions {
         max_dim: cfg.max_dim,
         threads: cfg.threads,
@@ -128,13 +184,25 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
         enum_shards: cfg.enum_shards,
         enum_grain: cfg.enum_grain,
         shortcut: cfg.shortcut,
+        f1_tile: cfg.f1_tile,
+        enclosing: cfg.enclosing,
         dense_lookup: cfg.dense_lookup,
         algorithm: match cfg.algorithm.as_str() {
             "implicit-row" => Algorithm::ImplicitRow,
             _ => Algorithm::FastColumn,
         },
     };
-    let mut result = homology::compute_ph_from_filtration(&f, &opts);
+    // The engine (and its persistent pool) exists before the filtration
+    // is built, so the whole front-end runs as pool work.
+    let engine = Engine::new(opts);
+    memtrack::reset_peak();
+    let mut timings = PhaseTimer::new();
+    let mut fstats = FiltrationStats::default();
+    timings.start("F1");
+    let (f, edge_source) =
+        build_filtration_pooled(&data, cfg.tau, runtime.as_ref(), &engine, &mut fstats);
+    timings.stop();
+    let mut result = engine.compute_with_stats(&f, timings, fstats);
     result.stats.n = data.n();
     let peak = memtrack::section_peak_bytes();
 
@@ -231,6 +299,16 @@ pub fn summary_json(cfg: &RunConfig, r: &RunReport) -> Json {
         .field("h1", reduction_json(&r.result.stats.h1))
         .field("h2", reduction_json(&r.result.stats.h2))
         .field(
+            "filtration",
+            r.result
+                .stats
+                .filtration
+                .to_json()
+                .field("f1_tile", cfg.f1_tile)
+                .field("enclosing", cfg.enclosing)
+                .field("front_memory_bytes", r.result.stats.front_memory_bytes),
+        )
+        .field(
             "scheduler",
             Json::obj()
                 .field("adaptive_batch", cfg.adaptive_batch)
@@ -287,6 +365,44 @@ mod tests {
         assert!(dir.join("pd.csv").is_file());
         let s = std::fs::read_to_string(dir.join("summary.json")).unwrap();
         assert!(s.contains("\"n_points\":80"), "{s}");
+        assert!(s.contains("\"filtration\""), "{s}");
+        assert!(s.contains("\"edges_pruned\""), "{s}");
+        // threads = 2: the front-end must have run as pool work.
+        assert!(r.result.stats.filtration.tiles > 0, "front-end ran serially");
+    }
+
+    #[test]
+    fn infinite_tau_run_prunes_at_enclosing_radius() {
+        let cfg = RunConfig {
+            dataset: DatasetSpec::Named {
+                kind: "circle".into(),
+                n: 60,
+                seed: 11,
+            },
+            tau: f64::INFINITY,
+            max_dim: 1,
+            threads: 2,
+            use_pjrt: false,
+            ..Default::default()
+        };
+        let on = run(&cfg).unwrap();
+        let fs = &on.result.stats.filtration;
+        assert!(fs.enclosing_radius.is_finite());
+        assert!(fs.edges_pruned > 0, "noisy circle must prune past r_enc");
+        assert_eq!(fs.edges_considered, fs.edges_kept + fs.edges_pruned);
+        assert!(on.n_edges < 60 * 59 / 2);
+        // Exact fallback: full filtration, identical diagram.
+        let off = run(&RunConfig {
+            enclosing: false,
+            ..cfg
+        })
+        .unwrap();
+        assert_eq!(off.n_edges, 60 * 59 / 2);
+        assert_eq!(off.result.stats.filtration.edges_pruned, 0);
+        assert!(on
+            .result
+            .diagram
+            .multiset_eq(&off.result.diagram, 0.0));
     }
 
     #[test]

@@ -4,6 +4,34 @@
 //! length; 2-/3-simplices are *never* materialized — they are identified by
 //! paired keys `⟨primary, secondary⟩` (§4.1) and enumerated on the fly from
 //! the neighborhoods (§4.2).
+//!
+//! ## The parallel front-end
+//!
+//! Building F1 used to be the last fully serial stretch of the pipeline:
+//! an O(n²) distance loop, a comparator sort, and a serial CSR fill all
+//! ran before a single pool worker woke up. [`EdgeFiltration::build_pooled`]
+//! runs the whole front-end on the engine's persistent work-stealing pool
+//! while keeping the output **byte-identical** to the serial build:
+//!
+//! * **tiled distance kernel** — the upper-triangular (i, j) index space
+//!   is cut into row-band tiles dispatched through the pool; each tile
+//!   filters by `τ` into a local buffer and tiles are spliced back in
+//!   canonical order;
+//! * **total-order key sort** — every kept edge is packed into a `u128`
+//!   whose unsigned order equals the filtration's total order (monotone
+//!   f64→u64 bits, tie-broken by the packed `(a, b)`), then sorted by a
+//!   chunk-sort-then-merge pass on the pool. No `partial_cmp().unwrap()`
+//!   in the hot loop, and the fully sorted order is schedule-independent
+//!   because keys are strictly unique;
+//! * **enclosing-radius truncation** — when no finite `τ` was requested,
+//!   nothing outlives `r_enc = min_i max_j d(i, j)` (beyond it the VR
+//!   complex is a cone over the argmin vertex, so every diagram point is
+//!   unchanged), and the kernel filters by `r_enc` instead of `+∞`;
+//! * **parallel CSR fill** — see [`Neighborhoods::build_pooled`].
+//!
+//! [`FiltrationStats`] carries the per-stage times and the
+//! considered/kept/pruned edge counters up through `EngineStats`, the run
+//! summary JSON and the benches.
 
 pub mod neighborhoods;
 pub mod sparsify;
@@ -12,7 +40,145 @@ pub mod paired;
 pub use neighborhoods::Neighborhoods;
 pub use paired::Key;
 
+use std::sync::Mutex;
+use std::time::Instant;
+
 use crate::geometry::MetricData;
+use crate::reduction::pool::{SharedSlice, ThreadPool};
+
+/// Knobs for the pooled filtration front-end.
+#[derive(Clone, Copy, Debug)]
+pub struct FrontendOptions {
+    /// Point rows per distance tile (`f1_tile`); 0 = auto (~8 tiles per
+    /// worker so stealing levels the triangular row costs).
+    pub tile: usize,
+    /// Enclosing-radius truncation when `tau_max` is exactly `+inf`:
+    /// cut the edge set at `r_enc = min_i max_j d(i, j)` — diagrams are
+    /// unchanged (the complex is a cone beyond `r_enc`), the edge list
+    /// shrinks. Inapplicable to pre-thresholded sparse inputs.
+    pub enclosing: bool,
+}
+
+impl Default for FrontendOptions {
+    fn default() -> Self {
+        Self {
+            tile: 0,
+            enclosing: true,
+        }
+    }
+}
+
+/// Counters and stage times of one front-end run (distance kernel, key
+/// sort, CSR fill). All-zero except `enclosing_radius` (+∞) until a
+/// build fills them; pooled stages leave their tile/chunk counters
+/// nonzero, serial fallbacks leave them 0.
+#[derive(Clone, Copy, Debug)]
+pub struct FiltrationStats {
+    /// Wall time of the distance pass (tile kernel; the enclosing-
+    /// radius row maxima ride along in the same sweep).
+    pub dist_ns: u64,
+    /// Wall time of the edge key sort (chunk sorts + merge).
+    pub sort_ns: u64,
+    /// Wall time of the `Neighborhoods` CSR build.
+    pub nb_ns: u64,
+    /// Distance/row-max tiles dispatched to pool workers (0 = serial).
+    pub tiles: u64,
+    /// Sorted chunks merged by the pooled key sort (0 = serial sort).
+    pub sort_chunks: u64,
+    /// CSR counting/scatter chunks dispatched to pool workers (0 =
+    /// serial).
+    pub nb_chunks: u64,
+    /// Candidate pairs examined by the distance kernel.
+    pub edges_considered: u64,
+    /// Edges kept in the filtration.
+    pub edges_kept: u64,
+    /// Edges dropped by the enclosing-radius truncation. Edges above a
+    /// caller-supplied finite `τ` are *filtered*, not pruned, and are
+    /// not counted here.
+    pub edges_pruned: u64,
+    /// `r_enc = min_i max_j d(i, j)` when the truncation ran; +∞ when it
+    /// was off or inapplicable.
+    pub enclosing_radius: f64,
+}
+
+impl Default for FiltrationStats {
+    fn default() -> Self {
+        Self {
+            dist_ns: 0,
+            sort_ns: 0,
+            nb_ns: 0,
+            tiles: 0,
+            sort_chunks: 0,
+            nb_chunks: 0,
+            edges_considered: 0,
+            edges_kept: 0,
+            edges_pruned: 0,
+            enclosing_radius: f64::INFINITY,
+        }
+    }
+}
+
+impl FiltrationStats {
+    /// Machine-readable form for run summaries and bench dumps.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        crate::util::json::Json::obj()
+            .field("dist_s", self.dist_ns as f64 * 1e-9)
+            .field("sort_s", self.sort_ns as f64 * 1e-9)
+            .field("nb_s", self.nb_ns as f64 * 1e-9)
+            .field("tiles", self.tiles as f64)
+            .field("sort_chunks", self.sort_chunks as f64)
+            .field("nb_chunks", self.nb_chunks as f64)
+            .field("edges_considered", self.edges_considered as f64)
+            .field("edges_kept", self.edges_kept as f64)
+            .field("edges_pruned", self.edges_pruned as f64)
+            .field("enclosing_radius", self.enclosing_radius)
+    }
+}
+
+/// Order-preserving map from a (non-NaN) f64 to u64: sorting the keys
+/// as unsigned integers sorts the floats. `-0.0` is normalized to
+/// `+0.0` first — the comparator this replaces treated the two as equal
+/// ties, so the normalization is order-neutral.
+#[inline]
+pub fn f64_order_key(d: f64) -> u64 {
+    debug_assert!(!d.is_nan());
+    // IEEE: x + 0.0 == x bit-for-bit except -0.0, which becomes +0.0.
+    let b = (d + 0.0).to_bits();
+    if b >> 63 == 0 {
+        b | (1u64 << 63)
+    } else {
+        !b
+    }
+}
+
+/// Inverse of [`f64_order_key`].
+#[inline]
+pub fn f64_from_order_key(k: u64) -> f64 {
+    f64::from_bits(if k >> 63 == 1 { k & !(1u64 << 63) } else { !k })
+}
+
+/// One weighted edge packed into its 128-bit sort key: unsigned u128
+/// order == the filtration total order (length, ties by `(a, b)`). Keys
+/// are strictly unique because `(a, b)` pairs are.
+#[inline]
+fn edge_key(d: f64, a: u32, b: u32) -> u128 {
+    ((f64_order_key(d) as u128) << 64) | ((a as u128) << 32) | b as u128
+}
+
+#[inline]
+fn unpack_edge_key(k: u128) -> (f64, u32, u32) {
+    (f64_from_order_key((k >> 64) as u64), (k >> 32) as u32, k as u32)
+}
+
+/// Rows per distance tile: the `f1_tile` knob, or ~8 tiles per worker,
+/// at least 16 rows each, when 0.
+fn effective_tile(n: usize, knob: usize, threads: usize) -> usize {
+    let n = n.max(1);
+    if knob > 0 {
+        return knob.min(n);
+    }
+    n.div_ceil(threads.max(1) * 8).max(16).min(n)
+}
 
 /// The 1-skeleton filtration: edges sorted ascending by (length, a, b).
 ///
@@ -25,70 +191,158 @@ pub struct EdgeFiltration {
     pub edges: Vec<(u32, u32)>,
     /// `values[o]` = length of edge `o`; non-decreasing.
     pub values: Vec<f64>,
-    /// Max permissible filtration parameter used to build this filtration.
+    /// Max permissible filtration parameter used to build this filtration
+    /// (the enclosing radius when the truncation fired).
     pub tau_max: f64,
 }
 
 impl EdgeFiltration {
     /// Build F1 from any metric input, keeping edges with `d <= tau_max`.
+    /// Serial reference path: no pool, no enclosing-radius truncation.
     pub fn build(data: &MetricData, tau_max: f64) -> Self {
-        let n = data.n();
-        assert!(n < u32::MAX as usize, "vertex count must fit u32");
-        let mut raw: Vec<(f64, u32, u32)> = Vec::new();
-        match data {
-            MetricData::Points(pc) => {
-                for i in 0..n {
-                    let pi = pc.point(i);
-                    for j in (i + 1)..n {
-                        let pj = pc.point(j);
-                        let mut s = 0.0;
-                        for k in 0..pc.dim {
-                            let d = pi[k] - pj[k];
-                            s += d * d;
-                        }
-                        let d = s.sqrt();
-                        if d <= tau_max {
-                            raw.push((d, i as u32, j as u32));
-                        }
-                    }
-                }
-            }
-            MetricData::Dense(dd) => {
-                for i in 0..n {
-                    for j in (i + 1)..n {
-                        let d = dd.get(i, j);
-                        if d <= tau_max {
-                            raw.push((d, i as u32, j as u32));
-                        }
-                    }
-                }
-            }
-            MetricData::Sparse(sd) => {
-                for &(u, v, d) in &sd.entries {
-                    debug_assert!(u < v);
-                    if d <= tau_max {
-                        raw.push((d, u, v));
-                    }
-                }
-            }
-        }
-        Self::from_weighted_edges(n as u32, raw, tau_max)
+        let fe = FrontendOptions {
+            tile: 0,
+            enclosing: false,
+        };
+        Self::build_pooled(data, tau_max, None, &fe, &mut FiltrationStats::default())
     }
 
-    /// Build from an explicit weighted edge list (deduplicated by caller).
-    pub fn from_weighted_edges(n: u32, mut raw: Vec<(f64, u32, u32)>, tau_max: f64) -> Self {
-        // Deterministic total order: by length, ties by (a, b).
-        raw.sort_unstable_by(|x, y| {
-            x.0.partial_cmp(&y.0)
-                .unwrap()
-                .then(x.1.cmp(&y.1))
-                .then(x.2.cmp(&y.2))
-        });
-        let mut edges = Vec::with_capacity(raw.len());
-        let mut values = Vec::with_capacity(raw.len());
-        for (d, a, b) in raw {
-            edges.push((a, b));
-            values.push(d);
+    /// Build F1 with the pooled front-end. Byte-identical to
+    /// [`Self::build`] for every pool size and tile plan when
+    /// `fe.enclosing` is off (or `tau_max` is finite); with the
+    /// truncation on and `tau_max` infinite, the edge set is cut at the
+    /// enclosing radius and every persistence diagram is still
+    /// unchanged.
+    pub fn build_pooled(
+        data: &MetricData,
+        tau_max: f64,
+        pool: Option<&ThreadPool>,
+        fe: &FrontendOptions,
+        stats: &mut FiltrationStats,
+    ) -> Self {
+        let n = data.n();
+        assert!(n < u32::MAX as usize, "vertex count must fit u32");
+        let t0 = Instant::now();
+        // Enclosing-radius truncation: with no cap requested (tau must
+        // be exactly +inf — a caller asking for tau = -inf wants an
+        // empty filtration and gets one), nothing outlives
+        // r_enc = min_i max_j d(i, j): at r_enc the argmin vertex
+        // neighbors every other vertex, so the flag complex is a cone
+        // (contractible above dim 0) from there on. Sparse inputs are
+        // already thresholded (absent pairs are unknown, not infinite),
+        // so the radius cannot be derived there. Row maxima ride along
+        // in the same tile pass that computes the keys (each pair's
+        // distance is evaluated exactly once), and the key list is
+        // truncated before the sort ever sees it.
+        let applicable = !matches!(data, MetricData::Sparse(_)) && n >= 2;
+        let (keys, r_enc) = if fe.enclosing && tau_max == f64::INFINITY && applicable {
+            // Pass 1 accumulates row maxima only (O(n) memory, no key
+            // storage); pass 2 is the ordinary thresholded kernel at
+            // r_enc, so peak memory is proportional to the *kept* set —
+            // the point of pruning. The price is evaluating each
+            // distance twice, which still beats the full-materialization
+            // alternative (16 bytes per candidate pair) at the scales
+            // where the truncation matters.
+            let r = enclosing_radius_rowmax(data, pool, fe, stats);
+            let tau_eff = if r.is_finite() { r } else { tau_max };
+            (distance_keys(data, tau_eff, pool, fe, stats), r)
+        } else {
+            (distance_keys(data, tau_max, pool, fe, stats), f64::INFINITY)
+        };
+        stats.enclosing_radius = r_enc;
+        stats.dist_ns += t0.elapsed().as_nanos() as u64;
+
+        let t1 = Instant::now();
+        let keys = sort_keys(keys, pool, stats);
+        let f = Self::from_sorted_keys(
+            n as u32,
+            &keys,
+            if r_enc.is_finite() { r_enc } else { tau_max },
+            pool,
+        );
+        stats.sort_ns += t1.elapsed().as_nanos() as u64;
+        stats.edges_kept += f.n_edges() as u64;
+        if r_enc.is_finite() {
+            // With τ infinite every dropped candidate was dropped by the
+            // truncation (NaN distances aside, which the serial filter
+            // also drops — see `MetricData::validate`).
+            stats.edges_pruned += stats.edges_considered - stats.edges_kept;
+        }
+        f
+    }
+
+    /// Build from an explicit weighted edge list (deduplicated and
+    /// thresholded by the caller). NaN distances are rejected with a
+    /// descriptive panic instead of the old comparator sort's opaque
+    /// `partial_cmp().unwrap()` mid-sort failure.
+    pub fn from_weighted_edges(n: u32, raw: Vec<(f64, u32, u32)>, tau_max: f64) -> Self {
+        Self::from_weighted_edges_pooled(n, raw, tau_max, None, &mut FiltrationStats::default())
+    }
+
+    /// [`Self::from_weighted_edges`] with the key sort running on the
+    /// pool (chunk-sort + merge); byte-identical output for every pool
+    /// size. This is the PJRT/Pallas kernel path: the accelerator hands
+    /// back the thresholded pair list, the pool orders it.
+    pub fn from_weighted_edges_pooled(
+        n: u32,
+        raw: Vec<(f64, u32, u32)>,
+        tau_max: f64,
+        pool: Option<&ThreadPool>,
+        stats: &mut FiltrationStats,
+    ) -> Self {
+        let t0 = Instant::now();
+        let mut keys: Vec<u128> = Vec::with_capacity(raw.len());
+        for &(d, a, b) in &raw {
+            assert!(
+                !d.is_nan(),
+                "EdgeFiltration: NaN distance on edge ({a}, {b}); reject NaN inputs at \
+                 ingestion (MetricData::validate)"
+            );
+            keys.push(edge_key(d, a, b));
+        }
+        stats.edges_considered += raw.len() as u64;
+        drop(raw);
+        let keys = sort_keys(keys, pool, stats);
+        let f = Self::from_sorted_keys(n, &keys, tau_max, pool);
+        stats.sort_ns += t0.elapsed().as_nanos() as u64;
+        stats.edges_kept += f.n_edges() as u64;
+        f
+    }
+
+    /// Unpack sorted keys into the `edges`/`values` arrays (tiled over
+    /// the pool when one is given; writes are index-disjoint).
+    fn from_sorted_keys(
+        n: u32,
+        keys: &[u128],
+        tau_max: f64,
+        pool: Option<&ThreadPool>,
+    ) -> Self {
+        let m = keys.len();
+        let mut edges = vec![(0u32, 0u32); m];
+        let mut values = vec![0f64; m];
+        match pool {
+            Some(pool) if pool.threads() > 1 && m >= 4096 => {
+                let se = SharedSlice::new(&mut edges);
+                let sv = SharedSlice::new(&mut values);
+                let grain = m.div_ceil(pool.threads() * 4).max(1024);
+                pool.run_stealing(m, grain, |_tid, r| {
+                    for i in r {
+                        let (d, a, b) = unpack_edge_key(keys[i]);
+                        // SAFETY: stealing hands out each index once.
+                        unsafe {
+                            se.write(i, (a, b));
+                            sv.write(i, d);
+                        }
+                    }
+                });
+            }
+            _ => {
+                for (i, &k) in keys.iter().enumerate() {
+                    let (d, a, b) = unpack_edge_key(k);
+                    edges[i] = (a, b);
+                    values[i] = d;
+                }
+            }
         }
         Self {
             n,
@@ -111,6 +365,326 @@ impl EdgeFiltration {
     /// Base memory model from paper App. E: `(3n + 12 n_e) * 4` bytes.
     pub fn base_memory_model_bytes(&self) -> usize {
         (3 * self.n as usize + 12 * self.n_edges()) * 4
+    }
+
+    /// Measured heap bytes of the built filtration arrays (the edge list
+    /// plus the value array — what the front-end actually materializes).
+    pub fn memory_bytes(&self) -> usize {
+        self.edges.len() * std::mem::size_of::<(u32, u32)>()
+            + self.values.len() * std::mem::size_of::<f64>()
+    }
+}
+
+/// `r_enc = min_i max_j d(i, j)` by a triangular sweep that stores no
+/// keys — O(n) memory. Pooled runs keep one partial row-max array per
+/// *worker* (a stolen tile accumulates into the thief's array; `tid`
+/// names the executing worker, which runs its tasks sequentially, so
+/// the slot is uncontended); the element-wise max-merge is
+/// schedule-independent because every pair contributes to the same two
+/// rows exactly once and `f64::max` over a fixed multiset is
+/// associative and commutative (NaN contributions are ignored).
+fn enclosing_radius_rowmax(
+    data: &MetricData,
+    pool: Option<&ThreadPool>,
+    fe: &FrontendOptions,
+    stats: &mut FiltrationStats,
+) -> f64 {
+    let n = data.n();
+    debug_assert!(n >= 2);
+    match pool {
+        Some(pool) if pool.threads() > 1 => {
+            let tile = effective_tile(n, fe.tile, pool.threads());
+            let n_tiles = n.div_ceil(tile);
+            let maxes: Vec<Mutex<Vec<f64>>> =
+                (0..pool.threads()).map(|_| Mutex::new(Vec::new())).collect();
+            pool.run_stealing(n_tiles, 1, |tid, range| {
+                let mut mx = maxes[tid].lock().unwrap();
+                if mx.is_empty() {
+                    mx.resize(n, f64::NEG_INFINITY);
+                }
+                for t in range {
+                    rowmax_rows(data, t * tile..((t + 1) * tile).min(n), &mut mx[..]);
+                }
+            });
+            stats.tiles += n_tiles as u64;
+            let mut row_max = vec![f64::NEG_INFINITY; n];
+            for m in maxes {
+                let m = m.into_inner().unwrap();
+                for (r, &v) in row_max.iter_mut().zip(&m) {
+                    *r = r.max(v);
+                }
+            }
+            row_max.into_iter().fold(f64::INFINITY, f64::min)
+        }
+        _ => {
+            let mut row_max = vec![f64::NEG_INFINITY; n];
+            rowmax_rows(data, 0..n, &mut row_max);
+            row_max.into_iter().fold(f64::INFINITY, f64::min)
+        }
+    }
+}
+
+/// One row band of the row-max sweep: fold each upper-triangular
+/// distance into both endpoints' maxima.
+fn rowmax_rows(data: &MetricData, rows: std::ops::Range<usize>, row_max: &mut [f64]) {
+    let n = data.n();
+    match data {
+        MetricData::Points(pc) => {
+            for i in rows {
+                for j in (i + 1)..n {
+                    let d = pc.dist(i, j);
+                    row_max[i] = row_max[i].max(d);
+                    row_max[j] = row_max[j].max(d);
+                }
+            }
+        }
+        MetricData::Dense(dd) => {
+            for i in rows {
+                for j in (i + 1)..n {
+                    let d = dd.get(i, j);
+                    row_max[i] = row_max[i].max(d);
+                    row_max[j] = row_max[j].max(d);
+                }
+            }
+        }
+        MetricData::Sparse(_) => unreachable!("sparse inputs are never truncated"),
+    }
+}
+
+/// `min_i max_j d(i, j)` from a **complete** weighted pair list (every
+/// unordered pair present exactly once) — the shape the PJRT distance
+/// kernel returns at `τ = +∞`. The coordinator uses this to apply the
+/// enclosing-radius truncation to accelerator-produced edge lists
+/// before they are key-sorted. NaN entries are ignored.
+pub fn enclosing_radius_of_edges(n: usize, edges: &[(f64, u32, u32)]) -> f64 {
+    debug_assert_eq!(edges.len(), n * (n.saturating_sub(1)) / 2);
+    let mut row_max = vec![f64::NEG_INFINITY; n];
+    for &(d, a, b) in edges {
+        row_max[a as usize] = row_max[a as usize].max(d);
+        row_max[b as usize] = row_max[b as usize].max(d);
+    }
+    row_max.into_iter().fold(f64::INFINITY, f64::min)
+}
+
+/// The thresholded distance pass: every candidate pair with `d <= tau`
+/// becomes a packed sort key. Pooled runs tile the upper-triangular
+/// index space by point rows (sparse inputs: by entry chunks) and
+/// splice the tile buffers back in canonical order; the serial path
+/// walks the same loops inline. The produced key *set* is identical
+/// either way, and the subsequent sort makes the order canonical.
+fn distance_keys(
+    data: &MetricData,
+    tau: f64,
+    pool: Option<&ThreadPool>,
+    fe: &FrontendOptions,
+    stats: &mut FiltrationStats,
+) -> Vec<u128> {
+    let n = data.n();
+    match (data, pool) {
+        (MetricData::Sparse(sd), Some(pool)) if pool.threads() > 1 && !sd.entries.is_empty() => {
+            let len = sd.entries.len();
+            let chunk = len.div_ceil(pool.threads() * 8).max(1);
+            let n_chunks = len.div_ceil(chunk);
+            let slots: Vec<Mutex<Vec<u128>>> =
+                (0..n_chunks).map(|_| Mutex::new(Vec::new())).collect();
+            pool.run_stealing(n_chunks, 1, |_tid, range| {
+                for c in range {
+                    let mut buf = Vec::new();
+                    for &(u, v, d) in &sd.entries[c * chunk..((c + 1) * chunk).min(len)] {
+                        debug_assert!(u < v);
+                        if d <= tau {
+                            buf.push(edge_key(d, u, v));
+                        }
+                    }
+                    *slots[c].lock().unwrap() = buf;
+                }
+            });
+            stats.tiles += n_chunks as u64;
+            stats.edges_considered += len as u64;
+            splice(slots)
+        }
+        (MetricData::Sparse(sd), _) => {
+            let mut keys = Vec::new();
+            for &(u, v, d) in &sd.entries {
+                debug_assert!(u < v);
+                if d <= tau {
+                    keys.push(edge_key(d, u, v));
+                }
+            }
+            stats.edges_considered += sd.entries.len() as u64;
+            keys
+        }
+        (_, Some(pool)) if pool.threads() > 1 && n >= 2 => {
+            let tile = effective_tile(n, fe.tile, pool.threads());
+            let n_tiles = n.div_ceil(tile);
+            let slots: Vec<Mutex<Vec<u128>>> =
+                (0..n_tiles).map(|_| Mutex::new(Vec::new())).collect();
+            pool.run_stealing(n_tiles, 1, |_tid, range| {
+                for t in range {
+                    let mut buf = Vec::new();
+                    fill_rows(data, t * tile..((t + 1) * tile).min(n), tau, &mut buf);
+                    *slots[t].lock().unwrap() = buf;
+                }
+            });
+            stats.tiles += n_tiles as u64;
+            stats.edges_considered += (n * (n - 1) / 2) as u64;
+            splice(slots)
+        }
+        _ => {
+            let mut keys = Vec::new();
+            fill_rows(data, 0..n, tau, &mut keys);
+            if n >= 2 {
+                stats.edges_considered += (n * (n - 1) / 2) as u64;
+            }
+            keys
+        }
+    }
+}
+
+/// One row band of the upper-triangular distance kernel. Identical
+/// arithmetic to the serial reference (`PointCloud::dist` /
+/// `DenseDistances::get` per pair), so kept distances are bit-equal.
+fn fill_rows(data: &MetricData, rows: std::ops::Range<usize>, tau: f64, out: &mut Vec<u128>) {
+    let n = data.n();
+    match data {
+        MetricData::Points(pc) => {
+            for i in rows {
+                for j in (i + 1)..n {
+                    let d = pc.dist(i, j);
+                    if d <= tau {
+                        out.push(edge_key(d, i as u32, j as u32));
+                    }
+                }
+            }
+        }
+        MetricData::Dense(dd) => {
+            for i in rows {
+                for j in (i + 1)..n {
+                    let d = dd.get(i, j);
+                    if d <= tau {
+                        out.push(edge_key(d, i as u32, j as u32));
+                    }
+                }
+            }
+        }
+        MetricData::Sparse(_) => unreachable!("sparse inputs are chunked by entry"),
+    }
+}
+
+/// Concatenate per-tile buffers in tile order.
+fn splice(slots: Vec<Mutex<Vec<u128>>>) -> Vec<u128> {
+    let mut bufs: Vec<Vec<u128>> = slots
+        .into_iter()
+        .map(|s| s.into_inner().unwrap())
+        .collect();
+    let total: usize = bufs.iter().map(Vec::len).sum();
+    let mut keys = Vec::with_capacity(total);
+    for b in &mut bufs {
+        keys.append(b);
+    }
+    keys
+}
+
+/// Sort packed edge keys: chunk-sort on the pool followed by pooled
+/// pairwise merge rounds, or a plain `sort_unstable` serially. Keys
+/// are strictly unique, so both paths produce the same byte sequence
+/// for any chunk plan or steal schedule.
+fn sort_keys(
+    mut keys: Vec<u128>,
+    pool: Option<&ThreadPool>,
+    stats: &mut FiltrationStats,
+) -> Vec<u128> {
+    match pool {
+        Some(pool) if pool.threads() > 1 && keys.len() > 1 => {
+            let c = pool.threads().min(keys.len());
+            let bounds: Vec<usize> = (0..=c).map(|k| k * keys.len() / c).collect();
+            {
+                let shared = SharedSlice::new(&mut keys);
+                let bounds = &bounds;
+                pool.run_stealing(c, 1, |_tid, range| {
+                    for ci in range {
+                        // SAFETY: chunk ranges are pairwise disjoint.
+                        let s = unsafe { shared.slice_mut(bounds[ci]..bounds[ci + 1]) };
+                        s.sort_unstable();
+                    }
+                });
+            }
+            stats.sort_chunks += c as u64;
+            merge_sorted_runs_pooled(pool, keys, bounds)
+        }
+        _ => {
+            keys.sort_unstable();
+            keys
+        }
+    }
+}
+
+/// Merge the sorted runs `keys[bounds[i]..bounds[i+1]]` by pairwise
+/// merge rounds executed on the pool (⌈log₂ runs⌉ generations, each
+/// round merging adjacent run pairs into disjoint regions of a
+/// ping-pong buffer), so the merge is not a serial critical path that
+/// grows with the pool width. Keys are strictly unique, so the fully
+/// merged sequence is the same bytes for any round structure.
+fn merge_sorted_runs_pooled(
+    pool: &ThreadPool,
+    keys: Vec<u128>,
+    mut bounds: Vec<usize>,
+) -> Vec<u128> {
+    let mut src = keys;
+    let mut dst = vec![0u128; src.len()];
+    while bounds.len() > 2 {
+        let r = bounds.len() - 1;
+        let tasks = r.div_ceil(2);
+        {
+            let shared = SharedSlice::new(&mut dst);
+            let (bounds, src) = (&bounds, &src);
+            pool.run_stealing(tasks, 1, |_tid, range| {
+                for k in range {
+                    let s = bounds[2 * k];
+                    if 2 * k + 2 <= r {
+                        let (mid, e) = (bounds[2 * k + 1], bounds[2 * k + 2]);
+                        // SAFETY: output regions of distinct tasks are
+                        // disjoint (adjacent run pairs).
+                        let out = unsafe { shared.slice_mut(s..e) };
+                        merge_two(&src[s..mid], &src[mid..e], out);
+                    } else {
+                        // Odd run count: the last run rides over as-is.
+                        let e = bounds[2 * k + 1];
+                        let out = unsafe { shared.slice_mut(s..e) };
+                        out.copy_from_slice(&src[s..e]);
+                    }
+                }
+            });
+        }
+        std::mem::swap(&mut src, &mut dst);
+        let last = *bounds.last().unwrap();
+        let mut nb: Vec<usize> = bounds.iter().copied().step_by(2).collect();
+        if *nb.last().unwrap() != last {
+            nb.push(last);
+        }
+        bounds = nb;
+    }
+    src
+}
+
+/// Standard two-way merge of sorted slices into `out`
+/// (`out.len() == a.len() + b.len()`).
+fn merge_two(a: &[u128], b: &[u128], out: &mut [u128]) {
+    debug_assert_eq!(out.len(), a.len() + b.len());
+    let (mut i, mut j) = (0usize, 0usize);
+    for slot in out.iter_mut() {
+        let take_a = match (a.get(i), b.get(j)) {
+            (Some(&x), Some(&y)) => x <= y,
+            (Some(_), None) => true,
+            _ => false,
+        };
+        if take_a {
+            *slot = a[i];
+            i += 1;
+        } else {
+            *slot = b[j];
+            j += 1;
+        }
     }
 }
 
@@ -177,5 +751,216 @@ mod tests {
     fn base_memory_model() {
         let f = EdgeFiltration::build(&square_cloud(), 2.0);
         assert_eq!(f.base_memory_model_bytes(), (3 * 4 + 12 * 6) * 4);
+        assert_eq!(f.memory_bytes(), 6 * 8 + 6 * 8);
+    }
+
+    #[test]
+    fn f64_key_roundtrip_and_order() {
+        let xs = [
+            f64::NEG_INFINITY,
+            -3.5,
+            -1.0,
+            -f64::MIN_POSITIVE,
+            0.0,
+            f64::MIN_POSITIVE,
+            0.25,
+            1.0,
+            1.0000000000000002,
+            1e300,
+            f64::INFINITY,
+        ];
+        for w in xs.windows(2) {
+            assert!(
+                f64_order_key(w[0]) < f64_order_key(w[1]),
+                "{} vs {}",
+                w[0],
+                w[1]
+            );
+        }
+        for &x in &xs {
+            assert_eq!(f64_from_order_key(f64_order_key(x)).to_bits(), x.to_bits());
+        }
+        // -0.0 normalizes to +0.0 (the comparator treated them equal).
+        assert_eq!(f64_order_key(-0.0), f64_order_key(0.0));
+        assert_eq!(f64_from_order_key(f64_order_key(-0.0)).to_bits(), 0.0f64.to_bits());
+    }
+
+    #[test]
+    fn edge_key_orders_like_the_old_comparator() {
+        let mut raw = vec![
+            (1.5, 3u32, 7u32),
+            (1.5, 3, 5),
+            (0.5, 9, 10),
+            (1.5, 2, 11),
+            (0.5, 0, 1),
+        ];
+        let mut keys: Vec<u128> = raw.iter().map(|&(d, a, b)| edge_key(d, a, b)).collect();
+        keys.sort_unstable();
+        raw.sort_by(|x, y| {
+            x.0.partial_cmp(&y.0)
+                .unwrap()
+                .then(x.1.cmp(&y.1))
+                .then(x.2.cmp(&y.2))
+        });
+        let unpacked: Vec<(f64, u32, u32)> = keys.iter().map(|&k| unpack_edge_key(k)).collect();
+        assert_eq!(unpacked, raw);
+    }
+
+    #[test]
+    #[should_panic(expected = "NaN distance")]
+    fn nan_weighted_edge_rejected_with_clear_error() {
+        let _ = EdgeFiltration::from_weighted_edges(
+            3,
+            vec![(0.5, 0, 1), (f64::NAN, 0, 2)],
+            1.0,
+        );
+    }
+
+    #[test]
+    fn pooled_build_matches_serial_bits() {
+        let pool = ThreadPool::new(4);
+        for tau in [1.1, 2.0, f64::INFINITY] {
+            let serial = EdgeFiltration::build(&square_cloud(), tau);
+            let mut stats = FiltrationStats::default();
+            let fe = FrontendOptions {
+                tile: 1,
+                enclosing: false,
+            };
+            let pooled =
+                EdgeFiltration::build_pooled(&square_cloud(), tau, Some(&pool), &fe, &mut stats);
+            assert_eq!(serial.edges, pooled.edges, "tau={tau}");
+            let sb: Vec<u64> = serial.values.iter().map(|v| v.to_bits()).collect();
+            let pb: Vec<u64> = pooled.values.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(sb, pb, "tau={tau}");
+            assert!(stats.tiles > 0, "tau={tau}: tiles must run on the pool");
+            assert_eq!(stats.edges_kept as usize, pooled.n_edges());
+            assert_eq!(stats.edges_pruned, 0);
+        }
+    }
+
+    #[test]
+    fn enclosing_truncates_at_min_max_radius() {
+        // Square + one far-away point: r_enc = max distance from the
+        // far point's nearest-to-farthest... computed brute force below.
+        let md = MetricData::Points(PointCloud::new(
+            2,
+            vec![0.0, 0.0, 1.0, 0.0, 1.0, 1.0, 0.0, 1.0, 5.0, 0.0],
+        ));
+        let pc = match &md {
+            MetricData::Points(p) => p.clone(),
+            _ => unreachable!(),
+        };
+        let n = pc.n();
+        let mut r_enc = f64::INFINITY;
+        for i in 0..n {
+            let mut m = f64::NEG_INFINITY;
+            for j in 0..n {
+                if j != i {
+                    m = m.max(pc.dist(i, j));
+                }
+            }
+            r_enc = r_enc.min(m);
+        }
+        for pool in [None, Some(ThreadPool::new(3))] {
+            let mut stats = FiltrationStats::default();
+            let fe = FrontendOptions {
+                tile: 2,
+                enclosing: true,
+            };
+            let f = EdgeFiltration::build_pooled(
+                &md,
+                f64::INFINITY,
+                pool.as_ref(),
+                &fe,
+                &mut stats,
+            );
+            assert_eq!(stats.enclosing_radius.to_bits(), r_enc.to_bits());
+            assert!(f.values.iter().all(|&v| v <= r_enc));
+            assert_eq!(f.tau_max.to_bits(), r_enc.to_bits());
+            assert!(stats.edges_pruned > 0, "far edges must be pruned");
+            assert_eq!(
+                stats.edges_considered,
+                stats.edges_kept + stats.edges_pruned
+            );
+            // The truncated set must equal the serial build at tau = r_enc.
+            let want = EdgeFiltration::build(&md, r_enc);
+            assert_eq!(f.edges, want.edges);
+        }
+    }
+
+    #[test]
+    fn enclosing_radius_of_edges_matches_metric_and_truncates_like_native() {
+        // Simulates the PJRT flow: a complete pair list at tau = +inf,
+        // radius derived from the list, list truncated, key-sorted —
+        // must land on the same filtration as the native enclosing path.
+        let md = MetricData::Points(PointCloud::new(
+            2,
+            vec![0.0, 0.0, 1.0, 0.0, 1.0, 1.0, 0.0, 1.0, 5.0, 0.0],
+        ));
+        let pc = match &md {
+            MetricData::Points(p) => p.clone(),
+            _ => unreachable!(),
+        };
+        let n = pc.n();
+        let mut raw = Vec::new();
+        for i in 0..n {
+            for j in (i + 1)..n {
+                raw.push((pc.dist(i, j), i as u32, j as u32));
+            }
+        }
+        let r = enclosing_radius_of_edges(n, &raw);
+        let mut stats = FiltrationStats::default();
+        let native = EdgeFiltration::build_pooled(
+            &md,
+            f64::INFINITY,
+            None,
+            &FrontendOptions::default(),
+            &mut stats,
+        );
+        assert_eq!(r.to_bits(), stats.enclosing_radius.to_bits());
+        raw.retain(|&(d, _, _)| d <= r);
+        let kernel_path = EdgeFiltration::from_weighted_edges(n as u32, raw, r);
+        assert_eq!(kernel_path.edges, native.edges);
+        let kb: Vec<u64> = kernel_path.values.iter().map(|v| v.to_bits()).collect();
+        let nb: Vec<u64> = native.values.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(kb, nb);
+    }
+
+    #[test]
+    fn negative_infinity_tau_yields_empty_filtration() {
+        // tau = -inf asks for an empty filtration; the enclosing
+        // truncation must NOT fire (it applies to +inf only).
+        let fe = FrontendOptions::default();
+        for pool in [None, Some(ThreadPool::new(2))] {
+            let mut stats = FiltrationStats::default();
+            let f = EdgeFiltration::build_pooled(
+                &square_cloud(),
+                f64::NEG_INFINITY,
+                pool.as_ref(),
+                &fe,
+                &mut stats,
+            );
+            assert_eq!(f.n_edges(), 0);
+            assert!(stats.enclosing_radius.is_infinite());
+            assert_eq!(stats.edges_pruned, 0);
+        }
+    }
+
+    #[test]
+    fn enclosing_noop_on_finite_tau_and_sparse() {
+        let mut stats = FiltrationStats::default();
+        let fe = FrontendOptions::default();
+        let f = EdgeFiltration::build_pooled(&square_cloud(), 1.1, None, &fe, &mut stats);
+        assert_eq!(f.n_edges(), 4);
+        assert!(stats.enclosing_radius.is_infinite());
+        assert_eq!(stats.edges_pruned, 0);
+        let sd = MetricData::Sparse(SparseDistances {
+            n: 3,
+            entries: vec![(0, 1, 1.0), (1, 2, 2.0)],
+        });
+        let mut stats = FiltrationStats::default();
+        let f = EdgeFiltration::build_pooled(&sd, f64::INFINITY, None, &fe, &mut stats);
+        assert_eq!(f.n_edges(), 2, "sparse inputs are never truncated");
+        assert!(stats.enclosing_radius.is_infinite());
     }
 }

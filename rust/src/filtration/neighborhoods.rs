@@ -14,7 +14,17 @@
 //! (DoryNS, `-D COMBIDX` in the paper) trades `O(n^2)` memory for an O(1)
 //! packed-triangular table lookup.
 
-use super::EdgeFiltration;
+//! With a pool ([`Neighborhoods::build_pooled`]) the CSR fill runs as
+//! two-pass counting + scatter over edge chunks on the workers,
+//! producing arrays byte-identical to the serial build: chunk counts
+//! turn into deterministic per-chunk write cursors, so every vertex run
+//! still comes out sorted by edge order regardless of steal schedule.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use super::{EdgeFiltration, FiltrationStats};
+use crate::reduction::pool::{SharedSlice, ThreadPool};
 
 #[derive(Clone, Debug)]
 pub struct Neighborhoods {
@@ -33,9 +43,57 @@ pub struct Neighborhoods {
 
 pub const NO_EDGE: u32 = u32::MAX;
 
+/// Slot count of the DoryNS packed strict-lower-triangular table,
+/// refusing — before any allocation — sizes whose index arithmetic or
+/// allocation would overflow. The cap also guarantees `hi * (hi - 1)`
+/// in [`Neighborhoods::edge_order`] can never wrap: it is bounded by
+/// `2 * slots`.
+fn dense_table_slots(n: usize) -> usize {
+    match n.checked_mul(n.saturating_sub(1)).map(|x| x / 2) {
+        Some(slots) if slots <= (isize::MAX as usize) / 8 => slots,
+        _ => panic!(
+            "Neighborhoods: the DoryNS dense edge-order table for n = {n} needs \
+             n(n-1)/2 packed-triangular entries, which overflows the index space \
+             or the allocation limit on this platform; use the sparse lookup \
+             (dense_lookup = false / drop --ns)"
+        ),
+    }
+}
+
 impl Neighborhoods {
     /// Build from F1. `dense_lookup = true` selects the DoryNS layout.
+    /// Serial reference path; see [`Self::build_pooled`] for the
+    /// front-end that runs on the engine's worker pool.
     pub fn build(f: &EdgeFiltration, dense_lookup: bool) -> Self {
+        Self::build_pooled(f, dense_lookup, None, &mut FiltrationStats::default())
+    }
+
+    /// Build from F1, running the counting/scatter passes as pool work
+    /// when a pool is given. Output arrays are byte-identical to
+    /// [`Self::build`] for every pool size, chunk plan and steal
+    /// schedule; `stats` records the CSR phase time and chunk count.
+    pub fn build_pooled(
+        f: &EdgeFiltration,
+        dense_lookup: bool,
+        pool: Option<&ThreadPool>,
+        stats: &mut FiltrationStats,
+    ) -> Self {
+        if dense_lookup {
+            // Refuse infeasible DoryNS sizes before any allocation.
+            dense_table_slots(f.n as usize);
+        }
+        let t0 = Instant::now();
+        let out = match pool {
+            Some(pool) if pool.threads() > 1 && f.n_edges() > 0 => {
+                Self::build_on_pool(f, dense_lookup, pool, stats)
+            }
+            _ => Self::build_serial(f, dense_lookup),
+        };
+        stats.nb_ns += t0.elapsed().as_nanos() as u64;
+        out
+    }
+
+    fn build_serial(f: &EdgeFiltration, dense_lookup: bool) -> Self {
         let n = f.n as usize;
         let ne = f.n_edges();
         let mut off = vec![0u32; n + 1];
@@ -82,7 +140,7 @@ impl Neighborhoods {
         }
 
         let dense = if dense_lookup {
-            let mut tbl = vec![NO_EDGE; n * (n - 1) / 2];
+            let mut tbl = vec![NO_EDGE; dense_table_slots(n)];
             for (o, &(a, b)) in f.edges.iter().enumerate() {
                 let (hi, lo) = (b as usize, a as usize);
                 tbl[hi * (hi - 1) / 2 + lo] = o as u32;
@@ -92,6 +150,159 @@ impl Neighborhoods {
             None
         };
 
+        Self {
+            n: f.n,
+            off,
+            vn_vtx,
+            vn_ord,
+            en_ord,
+            en_vtx,
+            dense,
+        }
+    }
+
+    /// The pooled CSR build: (1) per-chunk incidence counts, (2) a
+    /// serial prefix pass turning counts into per-chunk write cursors,
+    /// (3) the edge-neighborhood scatter, (4) per-vertex re-sorts for
+    /// the vertex-neighborhood, (5) the DoryNS table scatter. Within a
+    /// chunk edges ascend and chunk cursor bases ascend with the chunk
+    /// index, so every vertex run comes out sorted by edge order — the
+    /// exact bytes of the serial fill.
+    fn build_on_pool(
+        f: &EdgeFiltration,
+        dense_lookup: bool,
+        pool: &ThreadPool,
+        stats: &mut FiltrationStats,
+    ) -> Self {
+        let n = f.n as usize;
+        let ne = f.n_edges();
+        let threads = pool.threads();
+        let n_chunks = (threads * 2).min(ne).max(1);
+        let cb: Vec<usize> = (0..=n_chunks).map(|k| k * ne / n_chunks).collect();
+
+        // Pass 1: count each chunk's incidences per vertex. The slots
+        // stay in place through the prefix pass and are *taken* (not
+        // cloned) by the scatter pass — one O(chunks × n) array set for
+        // the whole build.
+        let count_slots: Vec<Mutex<Vec<u32>>> =
+            (0..n_chunks).map(|_| Mutex::new(Vec::new())).collect();
+        pool.run_stealing(n_chunks, 1, |_tid, range| {
+            for c in range {
+                let mut cnt = vec![0u32; n];
+                for &(a, b) in &f.edges[cb[c]..cb[c + 1]] {
+                    cnt[a as usize] += 1;
+                    cnt[b as usize] += 1;
+                }
+                *count_slots[c].lock().unwrap() = cnt;
+            }
+        });
+
+        // Serial prefix: `off` plus per-chunk base cursors (slot c at
+        // vertex v becomes chunk c's first write position into vertex
+        // v's run).
+        let mut off = vec![0u32; n + 1];
+        {
+            let mut guards: Vec<_> = count_slots
+                .iter()
+                .map(|m| m.lock().unwrap())
+                .collect();
+            for v in 0..n {
+                let mut acc = off[v];
+                for g in guards.iter_mut() {
+                    let t = g[v];
+                    g[v] = acc;
+                    acc += t;
+                }
+                off[v + 1] = acc;
+            }
+        }
+        let total = off[n] as usize;
+        debug_assert_eq!(total, 2 * ne);
+
+        // Pass 2: scatter the edge-neighborhood at the precomputed
+        // cursors (disjoint windows per chunk per vertex). Each chunk
+        // takes ownership of its cursor array — exactly one worker ever
+        // touches slot c.
+        let mut en_ord = vec![0u32; total];
+        let mut en_vtx = vec![0u32; total];
+        {
+            let so = SharedSlice::new(&mut en_ord);
+            let sv = SharedSlice::new(&mut en_vtx);
+            let count_slots = &count_slots;
+            pool.run_stealing(n_chunks, 1, |_tid, range| {
+                for c in range {
+                    let mut cur = std::mem::take(&mut *count_slots[c].lock().unwrap());
+                    for (k, &(a, b)) in f.edges[cb[c]..cb[c + 1]].iter().enumerate() {
+                        let o = (cb[c] + k) as u32;
+                        let ca = cur[a as usize] as usize;
+                        cur[a as usize] += 1;
+                        let cbx = cur[b as usize] as usize;
+                        cur[b as usize] += 1;
+                        // SAFETY: cursor windows of distinct chunks are
+                        // disjoint by the prefix construction above.
+                        unsafe {
+                            so.write(ca, o);
+                            sv.write(ca, b);
+                            so.write(cbx, o);
+                            sv.write(cbx, a);
+                        }
+                    }
+                }
+            });
+        }
+        drop(count_slots);
+
+        // Vertex-neighborhood: per-vertex re-sort by neighbor id, tiled
+        // over vertex ranges (each vertex writes its own run).
+        let mut vn_vtx = vec![0u32; total];
+        let mut vn_ord = vec![0u32; total];
+        {
+            let sx = SharedSlice::new(&mut vn_vtx);
+            let so = SharedSlice::new(&mut vn_ord);
+            let (en_vtx, en_ord, off) = (&en_vtx, &en_ord, &off);
+            let grain = n.div_ceil(threads * 8).max(1);
+            pool.run_stealing(n, grain, |_tid, vr| {
+                let mut scratch: Vec<(u32, u32)> = Vec::new();
+                for a in vr {
+                    let (s, e) = (off[a] as usize, off[a + 1] as usize);
+                    scratch.clear();
+                    scratch.extend(
+                        en_vtx[s..e].iter().zip(&en_ord[s..e]).map(|(&v, &o)| (v, o)),
+                    );
+                    scratch.sort_unstable();
+                    for (k, &(v, o)) in scratch.iter().enumerate() {
+                        // SAFETY: vertex runs are disjoint slices of the
+                        // shared arrays.
+                        unsafe {
+                            sx.write(s + k, v);
+                            so.write(s + k, o);
+                        }
+                    }
+                }
+            });
+        }
+
+        // DoryNS table: one unique slot per edge, scattered in chunks.
+        let dense = if dense_lookup {
+            let mut tbl = vec![NO_EDGE; dense_table_slots(n)];
+            {
+                let st = SharedSlice::new(&mut tbl);
+                let grain = ne.div_ceil(threads * 8).max(1);
+                pool.run_stealing(ne, grain, |_tid, er| {
+                    for o in er {
+                        let (a, b) = f.edges[o];
+                        let (hi, lo) = (b as usize, a as usize);
+                        // SAFETY: every edge owns a distinct table slot.
+                        unsafe { st.write(hi * (hi - 1) / 2 + lo, o as u32) };
+                    }
+                });
+            }
+            Some(tbl)
+        } else {
+            None
+        };
+
+        stats.nb_chunks += n_chunks as u64;
         Self {
             n: f.n,
             off,
@@ -243,5 +454,48 @@ mod tests {
         let nb = Neighborhoods::build(&f, false);
         let total: u32 = (0..f.n).map(|a| nb.degree(a)).sum();
         assert_eq!(total as usize, 2 * f.n_edges());
+    }
+
+    #[test]
+    fn pooled_build_matches_serial_arrays() {
+        use crate::geometry::MetricData;
+        use crate::util::rng::Pcg32;
+        let pool = ThreadPool::new(4);
+        for seed in 0..6u64 {
+            let mut rng = Pcg32::new(0xC5A + seed);
+            let n = 10 + rng.gen_range(30) as usize;
+            let pc = PointCloud::new(3, (0..n * 3).map(|_| rng.next_f64()).collect());
+            let f = EdgeFiltration::build(&MetricData::Points(pc), rng.uniform(0.4, 1.0));
+            for dense in [false, true] {
+                let want = Neighborhoods::build(&f, dense);
+                let mut stats = FiltrationStats::default();
+                let got = Neighborhoods::build_pooled(&f, dense, Some(&pool), &mut stats);
+                assert_eq!(got.off, want.off, "seed={seed} dense={dense}");
+                assert_eq!(got.en_ord, want.en_ord, "seed={seed} dense={dense}");
+                assert_eq!(got.en_vtx, want.en_vtx, "seed={seed} dense={dense}");
+                assert_eq!(got.vn_vtx, want.vn_vtx, "seed={seed} dense={dense}");
+                assert_eq!(got.vn_ord, want.vn_ord, "seed={seed} dense={dense}");
+                assert_eq!(got.dense, want.dense, "seed={seed} dense={dense}");
+                assert_eq!(got.memory_bytes(), want.memory_bytes());
+                if f.n_edges() > 0 {
+                    assert!(stats.nb_chunks > 0, "CSR fill must run on the pool");
+                    assert!(stats.nb_ns > 0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "DoryNS dense edge-order table")]
+    fn dense_mode_refuses_packed_index_overflow() {
+        // A fake filtration with a huge vertex count and no edges: the
+        // guard must fire before any table (or even `off`) allocation.
+        let f = EdgeFiltration {
+            n: u32::MAX - 2,
+            edges: Vec::new(),
+            values: Vec::new(),
+            tau_max: 1.0,
+        };
+        let _ = Neighborhoods::build(&f, true);
     }
 }

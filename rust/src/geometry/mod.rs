@@ -151,6 +151,55 @@ impl MetricData {
             MetricData::Sparse(s) => s.n,
         }
     }
+
+    /// Reject NaN coordinates/distances up front with a descriptive
+    /// error. NaN is the front-end footgun: the old comparator sort
+    /// panicked on `partial_cmp().unwrap()` deep inside
+    /// `from_weighted_edges`, and the thresholded distance filter drops
+    /// NaN pairs silently (`NaN <= τ` is false) — neither is an
+    /// acceptable way to learn the input is bad. Called by every file
+    /// ingestion path.
+    pub fn validate(&self) -> Result<(), String> {
+        match self {
+            MetricData::Points(pc) => {
+                for (i, &c) in pc.coords.iter().enumerate() {
+                    if c.is_nan() {
+                        return Err(format!(
+                            "point {} coordinate {} is NaN",
+                            i / pc.dim,
+                            i % pc.dim
+                        ));
+                    }
+                }
+            }
+            MetricData::Dense(dd) => {
+                for i in 1..dd.n {
+                    for j in 0..i {
+                        if dd.get(i, j).is_nan() {
+                            return Err(format!("distance ({i}, {j}) is NaN"));
+                        }
+                    }
+                }
+            }
+            MetricData::Sparse(sd) => {
+                for &(u, v, d) in &sd.entries {
+                    if d.is_nan() {
+                        return Err(format!("sparse entry ({u}, {v}) is NaN"));
+                    }
+                    if u >= v {
+                        return Err(format!("sparse entry ({u}, {v}) must have u < v"));
+                    }
+                    if v as usize >= sd.n {
+                        return Err(format!(
+                            "sparse entry ({u}, {v}) out of range for n = {}",
+                            sd.n
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -185,6 +234,41 @@ mod tests {
         assert_eq!(dd.get(0, 1), 1.0);
         assert_eq!(dd.get(2, 0), 2.0);
         assert_eq!(dd.get(1, 2), 3.0);
+    }
+
+    #[test]
+    fn validate_rejects_nan_everywhere() {
+        let good = MetricData::Points(PointCloud::new(2, vec![0.0, 0.0, 1.0, 1.0]));
+        assert!(good.validate().is_ok());
+        let bad = MetricData::Points(PointCloud::new(2, vec![0.0, 0.0, f64::NAN, 1.0]));
+        let e = bad.validate().unwrap_err();
+        assert!(e.contains("NaN"), "{e}");
+        assert!(e.contains("point 1"), "{e}");
+
+        let bad = MetricData::Dense(DenseDistances::new(3, vec![1.0, f64::NAN, 2.0]));
+        assert!(bad.validate().unwrap_err().contains("NaN"));
+
+        let bad = MetricData::Sparse(SparseDistances {
+            n: 3,
+            entries: vec![(0, 1, f64::NAN)],
+        });
+        assert!(bad.validate().unwrap_err().contains("NaN"));
+        let bad = MetricData::Sparse(SparseDistances {
+            n: 3,
+            entries: vec![(2, 1, 0.5)],
+        });
+        assert!(bad.validate().unwrap_err().contains("u < v"));
+        let bad = MetricData::Sparse(SparseDistances {
+            n: 2,
+            entries: vec![(0, 5, 0.5)],
+        });
+        assert!(bad.validate().unwrap_err().contains("out of range"));
+        // Infinities are legal filtration values; only NaN is rejected.
+        let inf = MetricData::Sparse(SparseDistances {
+            n: 2,
+            entries: vec![(0, 1, f64::INFINITY)],
+        });
+        assert!(inf.validate().is_ok());
     }
 
     #[test]

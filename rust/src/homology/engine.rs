@@ -46,7 +46,7 @@ use crate::coboundary::edges::{edge_columns_in_range, edge_columns_in_range_shor
 use crate::coboundary::triangles::{
     apparent_cofacet, triangles_with_diameter, triangles_with_diameter_in_range,
 };
-use crate::filtration::{EdgeFiltration, Key, Neighborhoods};
+use crate::filtration::{EdgeFiltration, FiltrationStats, FrontendOptions, Key, Neighborhoods};
 use crate::geometry::MetricData;
 use crate::reduction::pool::ThreadPool;
 use crate::reduction::{
@@ -103,6 +103,17 @@ pub struct EngineOptions {
     /// first-low trivial test resolves them; output is bit-identical
     /// either way (differential harness sweeps both).
     pub shortcut: bool,
+    /// Point rows per front-end distance tile (0 = auto): the
+    /// granularity at which `compute_metric`'s F1 build is dealt onto
+    /// the worker pool. Output is byte-identical for every tile plan.
+    pub f1_tile: usize,
+    /// Enclosing-radius truncation (on by default): when no finite
+    /// `tau` was requested, cut the filtration at
+    /// `r_enc = min_i max_j d(i, j)` — the VR complex is a cone beyond
+    /// it, so diagrams are unchanged while the edge set shrinks
+    /// (`FiltrationStats::edges_pruned` reports by how much). Off =
+    /// exact full-filtration fallback.
+    pub enclosing: bool,
     /// DoryNS: O(n²) dense edge-order lookup instead of binary search.
     pub dense_lookup: bool,
     pub algorithm: Algorithm,
@@ -123,6 +134,8 @@ impl Default for EngineOptions {
             enum_shards: 0,
             enum_grain: 0,
             shortcut: true,
+            f1_tile: 0,
+            enclosing: true,
             dense_lookup: false,
             algorithm: Algorithm::FastColumn,
         }
@@ -160,9 +173,18 @@ pub struct EngineStats {
     pub h1_cleared: usize,
     pub h2_cleared: usize,
     pub base_memory_bytes: usize,
+    /// Measured heap bytes of every array the front-end materializes
+    /// (the `EdgeFiltration` edge/value arrays plus all `Neighborhoods`
+    /// CSR arrays and the optional DoryNS table).
+    pub front_memory_bytes: usize,
     /// Pipelined-scheduler reports (all-zero for sequential runs).
     pub h1_sched: SchedStats,
     pub h2_sched: SchedStats,
+    /// Front-end report: distance/sort/CSR phase times, tile and chunk
+    /// counts, considered/kept/pruned edges, the enclosing radius.
+    /// Default (all-zero) when the caller pre-built the filtration
+    /// without stats.
+    pub filtration: FiltrationStats,
 }
 
 impl EngineStats {
@@ -307,23 +329,58 @@ impl Engine {
         self.pool.as_ref()
     }
 
-    /// Compute PH of a metric input up to `max_dim` with threshold `tau`.
+    /// The front-end knobs implied by the options.
+    pub fn frontend_options(&self) -> FrontendOptions {
+        FrontendOptions {
+            tile: self.opts.f1_tile,
+            enclosing: self.opts.enclosing,
+        }
+    }
+
+    /// Compute PH of a metric input up to `max_dim` with threshold
+    /// `tau`. The F1 build (tiled distance kernel, key sort, enclosing
+    /// truncation) runs on the engine's pool when it has one.
     pub fn compute_metric(&self, data: &MetricData, tau: f64) -> PhResult {
         let mut timings = PhaseTimer::new();
+        let mut fstats = FiltrationStats::default();
         timings.start("F1");
-        let f = EdgeFiltration::build(data, tau);
+        let f = EdgeFiltration::build_pooled(
+            data,
+            tau,
+            self.pool(),
+            &self.frontend_options(),
+            &mut fstats,
+        );
         timings.stop();
-        let mut r = self.compute_timed(&f, timings);
+        let mut r = self.compute_with_stats(&f, timings, fstats);
         r.stats.n = data.n();
         r
     }
 
     /// Compute PH from a pre-built edge filtration.
     pub fn compute(&self, f: &EdgeFiltration) -> PhResult {
-        self.compute_timed(f, PhaseTimer::new())
+        self.compute_with_stats(f, PhaseTimer::new(), FiltrationStats::default())
     }
 
-    fn compute_timed(&self, f: &EdgeFiltration, mut timings: PhaseTimer) -> PhResult {
+    /// Compute PH from a filtration the caller built (with whatever
+    /// timer/front-end stats that build produced — the coordinator's
+    /// PJRT path lands here). The `Neighborhoods` CSR fill still runs
+    /// on the engine's pool and is added to `fstats`.
+    pub fn compute_with_stats(
+        &self,
+        f: &EdgeFiltration,
+        timings: PhaseTimer,
+        fstats: FiltrationStats,
+    ) -> PhResult {
+        self.compute_timed(f, timings, fstats)
+    }
+
+    fn compute_timed(
+        &self,
+        f: &EdgeFiltration,
+        mut timings: PhaseTimer,
+        mut fstats: FiltrationStats,
+    ) -> PhResult {
         let opts = &self.opts;
         let mut stats = EngineStats {
             n: f.n as usize,
@@ -333,9 +390,18 @@ impl Engine {
         };
         let mut diagram = Diagram::new(opts.max_dim);
 
+        // Sub-phase records for the front-end breakdown ('/' names are
+        // excluded from PhaseTimer::total, so F1 is not double-counted).
+        if fstats.dist_ns > 0 || fstats.sort_ns > 0 {
+            timings.record("F1/dist", std::time::Duration::from_nanos(fstats.dist_ns));
+            timings.record("F1/sort", std::time::Duration::from_nanos(fstats.sort_ns));
+        }
+
         timings.start("neighborhoods");
-        let nb = Neighborhoods::build(f, opts.dense_lookup);
+        let nb = Neighborhoods::build_pooled(f, opts.dense_lookup, self.pool(), &mut fstats);
         timings.stop();
+        stats.filtration = fstats;
+        stats.front_memory_bytes = f.memory_bytes() + nb.memory_bytes();
 
         // ---- H0 ---------------------------------------------------------
         timings.start("H0");

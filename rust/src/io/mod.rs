@@ -41,7 +41,17 @@ pub fn read_points(path: &Path) -> Result<MetricData> {
     if dim == 0 {
         bail!("no points in {path:?}");
     }
-    Ok(MetricData::Points(PointCloud::new(dim, coords)))
+    validated(MetricData::Points(PointCloud::new(dim, coords)), path)
+}
+
+/// Reject bad metric inputs (NaN, malformed sparse entries) at
+/// ingestion with a clear error naming the offending entry — the
+/// front-end either panics opaquely or silently drops them otherwise.
+fn validated(data: MetricData, path: &Path) -> Result<MetricData> {
+    match data.validate() {
+        Ok(()) => Ok(data),
+        Err(e) => bail!("invalid metric input {path:?}: {e}"),
+    }
 }
 
 /// Load a lower-triangular distance matrix: row i has i entries
@@ -69,7 +79,7 @@ pub fn read_lower_distance(path: &Path) -> Result<MetricData> {
         tri.extend(row);
         rows += 1;
     }
-    Ok(MetricData::Dense(DenseDistances::new(rows, tri)))
+    validated(MetricData::Dense(DenseDistances::new(rows, tri)), path)
 }
 
 /// Load a sparse COO distance list: `i j d` per line (0-based).
@@ -99,7 +109,7 @@ pub fn read_sparse_coo(path: &Path) -> Result<MetricData> {
         n = n.max(v as usize + 1);
         entries.push((u, v, d));
     }
-    Ok(MetricData::Sparse(SparseDistances { n, entries }))
+    validated(MetricData::Sparse(SparseDistances { n, entries }), path)
 }
 
 /// Write a point cloud (for round-trips and dataset export).
@@ -223,6 +233,20 @@ mod tests {
         assert!(read_points(&p).is_err(), "ragged rows");
         std::fs::write(&p, "not a number\n").unwrap();
         assert!(read_points(&p).is_err());
+    }
+
+    #[test]
+    fn nan_inputs_rejected_at_ingestion() {
+        let p = tmp("nan-pts.txt");
+        std::fs::write(&p, "0.0 0.0\nNaN 1.0\n").unwrap();
+        let e = read_points(&p).unwrap_err().to_string();
+        assert!(e.contains("NaN"), "{e}");
+        let p = tmp("nan-ldm.txt");
+        std::fs::write(&p, "1.0\nNaN 2.0\n").unwrap();
+        assert!(read_lower_distance(&p).unwrap_err().to_string().contains("NaN"));
+        let p = tmp("nan-coo.txt");
+        std::fs::write(&p, "0 1 NaN\n").unwrap();
+        assert!(read_sparse_coo(&p).unwrap_err().to_string().contains("NaN"));
     }
 
     #[test]

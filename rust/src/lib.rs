@@ -53,6 +53,25 @@
 //! (shortcut + clearing, Ripser-style, atop the paper's trivial-pair
 //! machinery).
 //!
+//! ## The parallel filtration front-end
+//!
+//! Everything *before* the reduction — the O(n²) distance pass, the
+//! edge sort, and the `Neighborhoods` CSR fill — also runs on the same
+//! persistent pool ([`filtration::EdgeFiltration::build_pooled`],
+//! [`filtration::Neighborhoods::build_pooled`]): row-band distance
+//! tiles spliced in canonical order, a monotone bit-packed key sort
+//! (order-preserving f64→u64 bits, ties by the packed `(a, b)` — no
+//! `partial_cmp().unwrap()` anywhere hot) chunk-sorted on the pool and
+//! merged, and a two-pass counting/scatter CSR build. Output is
+//! byte-identical to the serial front-end for every tile plan, pool
+//! width and steal schedule. When no finite `τ` is requested, the
+//! **enclosing-radius truncation** (`enclosing`, on by default) cuts
+//! the filtration at `r_enc = min_i max_j d(i, j)` — the VR complex is
+//! a cone beyond `r_enc`, so diagrams are bit-unchanged while the edge
+//! set (and everything downstream) shrinks;
+//! [`filtration::FiltrationStats`] reports the per-stage times and the
+//! considered/kept/pruned counters end to end.
+//!
 //! Config knobs (via [`homology::EngineOptions`], the TOML config, or
 //! CLI flags): `batch_size` (initial batch), `adaptive_batch` (walk the
 //! batch size toward the serial≈push equilibrium; on by default),
@@ -61,7 +80,9 @@
 //! 0.25/0.75), `steal_grain` (columns per steal task; 0 = auto),
 //! `enum_shards`/`enum_grain` (enumeration shard plan; 0 = auto),
 //! `shortcut` (apparent-pair skip; `--no-shortcut` for the exact
-//! fallback). `EngineStats::{h1_sched, h2_sched}` report batches,
+//! fallback), `f1_tile` (front-end distance tile rows; 0 = auto),
+//! `enclosing` (enclosing-radius truncation; `--no-enclosing` for the
+//! exact full filtration). `EngineStats::{h1_sched, h2_sched}` report batches,
 //! steals, worker utilization, serial/push overlap, residual barrier
 //! idle, the enumeration span (shards, columns, worker busy time,
 //! scheduler time blocked on enumeration) and the shortcut skip rate

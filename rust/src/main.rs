@@ -73,6 +73,10 @@ run flags:
   --enum-grain <int>        diameter edges per enumeration shard (0 = auto)
   --no-shortcut             disable the enumeration-time apparent-pair
                             shortcut (exact fallback; on by default)
+  --f1-tile <int>           point rows per front-end distance tile (0 = auto)
+  --no-enclosing            disable the enclosing-radius truncation of
+                            infinite-tau filtrations (exact fallback;
+                            on by default, diagrams unchanged either way)
   --ns                      DoryNS dense edge-order lookup
   --algorithm <a>           fast-column|implicit-row
   --no-pjrt                 skip the PJRT/Pallas distance kernel
@@ -138,6 +142,8 @@ fn cmd_run(args: &[String]) -> Result<()> {
             "--enum-shards" => cfg.enum_shards = val()?.parse()?,
             "--enum-grain" => cfg.enum_grain = val()?.parse()?,
             "--no-shortcut" => cfg.shortcut = false,
+            "--f1-tile" => cfg.f1_tile = val()?.parse()?,
+            "--no-enclosing" => cfg.enclosing = false,
             "--ns" => cfg.dense_lookup = true,
             "--algorithm" => cfg.algorithm = val()?.clone(),
             "--no-pjrt" => cfg.use_pjrt = false,
@@ -192,6 +198,29 @@ fn cmd_run(args: &[String]) -> Result<()> {
         println!("phase max-RSS: {rss}");
     }
     let st = &report.result.stats;
+    let fs = &st.filtration;
+    if fs.edges_considered > 0 {
+        let pruned = if fs.edges_pruned > 0 {
+            format!(
+                ", {} pruned at r_enc={:.6}",
+                fs.edges_pruned, fs.enclosing_radius
+            )
+        } else {
+            String::new()
+        };
+        println!(
+            "front-end: dist {:.3}s ({} tiles) | sort {:.3}s ({} chunks) | nbhd {:.3}s ({} chunks) | {} kept of {} considered{}",
+            fs.dist_ns as f64 * 1e-9,
+            fs.tiles,
+            fs.sort_ns as f64 * 1e-9,
+            fs.sort_chunks,
+            fs.nb_ns as f64 * 1e-9,
+            fs.nb_chunks,
+            fs.edges_kept,
+            fs.edges_considered,
+            pruned,
+        );
+    }
     let skipped = st.h1.shortcut_pairs + st.h2.shortcut_pairs;
     if skipped > 0 {
         println!(

@@ -36,6 +36,63 @@ use std::time::Instant;
 
 type Job = Arc<dyn Fn(usize, Range<usize>) + Send + Sync>;
 
+/// A raw shared view of a mutable slice for pool jobs that write
+/// provably disjoint index sets (filtration tile splices, the CSR
+/// counting-scatter, sorted-chunk splits). The safe alternative — one
+/// `Mutex` per destination — would serialize exactly the writes the
+/// parallel front-end exists to spread across workers.
+pub struct SharedSlice<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _life: std::marker::PhantomData<&'a mut [T]>,
+}
+
+unsafe impl<T: Send> Send for SharedSlice<'_, T> {}
+unsafe impl<T: Send> Sync for SharedSlice<'_, T> {}
+
+impl<'a, T> SharedSlice<'a, T> {
+    pub fn new(slice: &'a mut [T]) -> Self {
+        Self {
+            ptr: slice.as_mut_ptr(),
+            len: slice.len(),
+            _life: std::marker::PhantomData,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Write slot `i`.
+    ///
+    /// # Safety
+    ///
+    /// While the generation runs, no two tasks may touch the same index
+    /// and nobody may read an index a writer holds.
+    #[inline]
+    pub unsafe fn write(&self, i: usize, v: T) {
+        debug_assert!(i < self.len);
+        unsafe { self.ptr.add(i).write(v) }
+    }
+
+    /// Exclusive view of `range`.
+    ///
+    /// # Safety
+    ///
+    /// Ranges handed to concurrently running tasks must be pairwise
+    /// disjoint, and nobody may read them while the tasks run.
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice_mut(&self, range: Range<usize>) -> &'a mut [T] {
+        debug_assert!(range.start <= range.end && range.end <= self.len);
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.add(range.start), range.len()) }
+    }
+}
+
 /// Per-worker deque of `(generation, index range)` tasks.
 type TaskQueue = Mutex<VecDeque<(u64, Range<usize>)>>;
 
@@ -723,6 +780,38 @@ mod tests {
             hits.fetch_add(r.len() as u64, Ordering::SeqCst);
         });
         assert_eq!(hits.load(Ordering::SeqCst), 6);
+    }
+
+    #[test]
+    fn shared_slice_disjoint_writes_from_workers() {
+        let pool = ThreadPool::new(4);
+        let mut data = vec![0u64; 1000];
+        {
+            let s = SharedSlice::new(&mut data);
+            assert_eq!(s.len(), 1000);
+            assert!(!s.is_empty());
+            pool.run_stealing(1000, 7, |_t, r| {
+                for i in r {
+                    // SAFETY: stealing hands out each index exactly once.
+                    unsafe { s.write(i, i as u64 + 1) };
+                }
+            });
+        }
+        assert!(data.iter().enumerate().all(|(i, &v)| v == i as u64 + 1));
+        let mut chunks = vec![0u32; 64];
+        {
+            let s = SharedSlice::new(&mut chunks);
+            pool.run_stealing(4, 1, |_t, r| {
+                for c in r {
+                    // SAFETY: chunk ranges are pairwise disjoint.
+                    let sl = unsafe { s.slice_mut(c * 16..(c + 1) * 16) };
+                    sl.fill(c as u32 + 1);
+                }
+            });
+        }
+        for (i, &v) in chunks.iter().enumerate() {
+            assert_eq!(v, (i / 16) as u32 + 1);
+        }
     }
 
     #[test]

@@ -53,6 +53,19 @@ impl PhaseTimer {
         }
     }
 
+    /// Append an externally measured record — used for sub-phase
+    /// breakdowns like `"F1/dist"`. Names containing `'/'` are treated
+    /// as sub-phases of the segment before the slash and excluded from
+    /// [`Self::total`], so a parent phase is never double-counted.
+    pub fn record(&mut self, name: &str, duration: Duration) {
+        let prev = self.phases.last().map(|p| p.max_rss_end).unwrap_or(0);
+        self.phases.push(PhaseRecord {
+            name: name.to_string(),
+            duration,
+            max_rss_end: crate::util::memtrack::max_rss_bytes().max(prev),
+        });
+    }
+
     pub fn phases(&self) -> &[PhaseRecord] {
         &self.phases
     }
@@ -75,7 +88,11 @@ impl PhaseTimer {
     }
 
     pub fn total(&self) -> Duration {
-        self.phases.iter().map(|p| p.duration).sum()
+        self.phases
+            .iter()
+            .filter(|p| !p.name.contains('/'))
+            .map(|p| p.duration)
+            .sum()
     }
 
     /// "F1 1.14s | nbhd 0.49s | H0 0.14s" style summary.
@@ -179,6 +196,22 @@ mod tests {
             assert!(!t.rss_summary().is_empty());
         }
         assert_eq!(t.get_rss("nope"), None);
+    }
+
+    #[test]
+    fn recorded_subphases_excluded_from_total() {
+        let mut t = PhaseTimer::new();
+        t.start("F1");
+        std::thread::sleep(Duration::from_millis(2));
+        t.stop();
+        let f1 = t.get("F1").unwrap();
+        t.record("F1/dist", Duration::from_millis(500));
+        t.record("F1/sort", Duration::from_millis(500));
+        assert_eq!(t.get("F1/dist"), Some(Duration::from_millis(500)));
+        assert_eq!(t.phases().len(), 3);
+        // Sub-phases show in the summary but never in the total.
+        assert!(t.summary().contains("F1/dist"));
+        assert_eq!(t.total(), f1);
     }
 
     #[test]

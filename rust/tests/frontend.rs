@@ -1,0 +1,310 @@
+//! Differential verification of the parallel filtration front-end.
+//!
+//! The tentpole guarantee: the pool-tiled distance kernel, the
+//! total-order key sort and the pooled CSR fill are **byte-identical**
+//! to the serial front-end for every tile plan, pool size and steal
+//! schedule — and the enclosing-radius truncation changes the edge set
+//! but never a persistence diagram (beyond `r_enc` the VR complex is a
+//! cone). Failures print the seed for exact reproduction.
+
+use dory::filtration::{EdgeFiltration, FiltrationStats, FrontendOptions, Neighborhoods};
+use dory::geometry::{MetricData, PointCloud, SparseDistances};
+use dory::homology::{compute_ph_from_filtration, Engine, EngineOptions};
+use dory::reduction::pool::ThreadPool;
+use dory::util::rng::Pcg32;
+
+fn random_cloud(rng: &mut Pcg32, max_n: usize, dim: usize) -> MetricData {
+    let n = 16 + rng.gen_range((max_n - 16) as u32) as usize;
+    MetricData::Points(PointCloud::new(
+        dim,
+        (0..n * dim).map(|_| rng.next_f64()).collect(),
+    ))
+}
+
+fn random_graph(rng: &mut Pcg32, max_n: u32) -> MetricData {
+    let n = 8 + rng.gen_range(max_n - 8);
+    let mut entries = Vec::new();
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if rng.next_f64() < 0.6 {
+                entries.push((i, j, rng.uniform(0.05, 1.0)));
+            }
+        }
+    }
+    MetricData::Sparse(SparseDistances {
+        n: n as usize,
+        entries,
+    })
+}
+
+fn assert_filtrations_equal(a: &EdgeFiltration, b: &EdgeFiltration, label: &str) {
+    assert_eq!(a.n, b.n, "{label}: n");
+    assert_eq!(a.edges, b.edges, "{label}: edge order");
+    let ab: Vec<u64> = a.values.iter().map(|v| v.to_bits()).collect();
+    let bb: Vec<u64> = b.values.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(ab, bb, "{label}: value bits");
+    assert_eq!(a.tau_max.to_bits(), b.tau_max.to_bits(), "{label}: tau_max");
+}
+
+fn assert_neighborhoods_equal(a: &Neighborhoods, b: &Neighborhoods, n: u32, label: &str) {
+    assert_eq!(a.is_dense(), b.is_dense(), "{label}");
+    assert_eq!(a.memory_bytes(), b.memory_bytes(), "{label}: memory");
+    for v in 0..n {
+        assert_eq!(a.degree(v), b.degree(v), "{label}: degree({v})");
+        assert_eq!(a.vn(v), b.vn(v), "{label}: vn({v})");
+        assert_eq!(a.en(v), b.en(v), "{label}: en({v})");
+    }
+}
+
+/// The satellite's headline property: pooled front-end ==
+/// serial front-end, byte for byte, across ≥20 seeds × tile plans ×
+/// pool widths × metric input kinds, for both the sparse and the
+/// DoryNS neighborhood layout.
+#[test]
+fn property_pooled_frontend_byte_identical_over_20_seeds() {
+    let pools = [ThreadPool::new(2), ThreadPool::new(4)];
+    for seed in 0..22u64 {
+        let mut rng = Pcg32::new(0xF1F1 + seed);
+        let (data, tau) = match seed % 4 {
+            0 => (random_cloud(&mut rng, 56, 2), rng.uniform(0.3, 0.7)),
+            1 => (random_cloud(&mut rng, 44, 3), rng.uniform(0.5, 1.0)),
+            2 => (random_cloud(&mut rng, 40, 3), f64::INFINITY),
+            _ => (random_graph(&mut rng, 36), f64::INFINITY),
+        };
+        let serial = EdgeFiltration::build(&data, tau);
+        let nb_serial = Neighborhoods::build(&serial, false);
+        let nb_serial_dense = Neighborhoods::build(&serial, true);
+        for pool in &pools {
+            for tile in [0usize, 1, 3, 17] {
+                let label = format!(
+                    "seed={seed} threads={} tile={tile} tau={tau}",
+                    pool.threads()
+                );
+                let fe = FrontendOptions {
+                    tile,
+                    enclosing: false,
+                };
+                let mut stats = FiltrationStats::default();
+                let pooled =
+                    EdgeFiltration::build_pooled(&data, tau, Some(pool), &fe, &mut stats);
+                assert_filtrations_equal(&serial, &pooled, &label);
+                assert!(stats.tiles > 0, "{label}: distance pass not on the pool");
+                if serial.n_edges() > 1 {
+                    assert!(stats.sort_chunks > 0, "{label}: sort not on the pool");
+                }
+                assert_eq!(stats.edges_kept as usize, serial.n_edges(), "{label}");
+                assert_eq!(stats.edges_pruned, 0, "{label}: nothing may be pruned");
+
+                let mut nstats = FiltrationStats::default();
+                let nb = Neighborhoods::build_pooled(&pooled, false, Some(pool), &mut nstats);
+                assert_neighborhoods_equal(&nb_serial, &nb, serial.n, &label);
+                if serial.n_edges() > 0 {
+                    assert!(nstats.nb_chunks > 0, "{label}: CSR fill not on the pool");
+                }
+                let nb_d = Neighborhoods::build_pooled(
+                    &pooled,
+                    true,
+                    Some(pool),
+                    &mut FiltrationStats::default(),
+                );
+                assert_neighborhoods_equal(&nb_serial_dense, &nb_d, serial.n, &label);
+                for (o, &(a, b)) in serial.edges.iter().enumerate() {
+                    assert_eq!(nb.edge_order(a, b), Some(o as u32), "{label}");
+                    assert_eq!(nb_d.edge_order(b, a), Some(o as u32), "{label}");
+                }
+            }
+        }
+    }
+}
+
+/// The PJRT path: an explicit weighted edge list (with heavy value
+/// ties) key-sorted on the pool must match the serial sort byte for
+/// byte.
+#[test]
+fn pooled_key_sort_matches_serial_under_ties() {
+    let pool = ThreadPool::new(4);
+    for seed in 0..20u64 {
+        let mut rng = Pcg32::new(0x50FA + seed);
+        let n = 40u32;
+        let mut raw = Vec::new();
+        for a in 0..n {
+            for b in (a + 1)..n {
+                if rng.next_f64() < 0.7 {
+                    // Quantized weights force large tie groups so the
+                    // (a, b) tie-break actually decides the order.
+                    let d = (rng.gen_range(12) as f64) * 0.125;
+                    raw.push((d, a, b));
+                }
+            }
+        }
+        let serial = EdgeFiltration::from_weighted_edges(n, raw.clone(), 2.0);
+        let mut stats = FiltrationStats::default();
+        let pooled = EdgeFiltration::from_weighted_edges_pooled(
+            n,
+            raw,
+            2.0,
+            Some(&pool),
+            &mut stats,
+        );
+        assert_filtrations_equal(&serial, &pooled, &format!("seed={seed}"));
+        if serial.n_edges() > 1 {
+            assert!(stats.sort_chunks > 0, "seed={seed}");
+        }
+    }
+}
+
+/// Enclosing-radius truncation: r_enc matches the brute-force
+/// definition, the kept edge set is exactly the serial build at
+/// tau = r_enc, and every persistence diagram is bit-identical to the
+/// full infinite-tau filtration — across thread counts and tile plans,
+/// in both metric input shapes.
+#[test]
+fn enclosing_radius_preserves_diagrams_bit_for_bit() {
+    for seed in 0..6u64 {
+        let mut rng = Pcg32::new(0xE2C + seed);
+        let data = random_cloud(&mut rng, 36, 3);
+        let n = data.n();
+        // Brute-force r_enc = min_i max_j d(i, j).
+        let pc = match &data {
+            MetricData::Points(p) => p.clone(),
+            _ => unreachable!(),
+        };
+        let mut r_enc = f64::INFINITY;
+        for i in 0..n {
+            let mut m = f64::NEG_INFINITY;
+            for j in 0..n {
+                if j != i {
+                    m = m.max(pc.dist(i, j));
+                }
+            }
+            r_enc = r_enc.min(m);
+        }
+
+        let full = EdgeFiltration::build(&data, f64::INFINITY);
+        let want = compute_ph_from_filtration(
+            &full,
+            &EngineOptions {
+                max_dim: 2,
+                ..Default::default()
+            },
+        )
+        .diagram;
+
+        for threads in [1usize, 4] {
+            for tile in [0usize, 5] {
+                let engine = Engine::new(EngineOptions {
+                    max_dim: 2,
+                    threads,
+                    f1_tile: tile,
+                    enclosing: true,
+                    ..Default::default()
+                });
+                let r = engine.compute_metric(&data, f64::INFINITY);
+                let fs = &r.stats.filtration;
+                let label = format!("seed={seed} threads={threads} tile={tile}");
+                assert_eq!(
+                    fs.enclosing_radius.to_bits(),
+                    r_enc.to_bits(),
+                    "{label}: r_enc"
+                );
+                assert_eq!(
+                    fs.edges_considered,
+                    fs.edges_kept + fs.edges_pruned,
+                    "{label}"
+                );
+                assert!(fs.edges_pruned > 0, "{label}: generic cloud must prune");
+                assert_eq!(
+                    r.stats.n_edges,
+                    EdgeFiltration::build(&data, r_enc).n_edges(),
+                    "{label}: kept set == serial build at tau = r_enc"
+                );
+                assert!(
+                    r.diagram.multiset_eq(&want, 0.0),
+                    "{label}: truncation changed a diagram"
+                );
+                // Exact fallback restores the full filtration.
+                let off = Engine::new(EngineOptions {
+                    max_dim: 2,
+                    threads,
+                    f1_tile: tile,
+                    enclosing: false,
+                    ..Default::default()
+                })
+                .compute_metric(&data, f64::INFINITY);
+                assert_eq!(off.stats.n_edges, full.n_edges(), "{label}");
+                assert_eq!(off.stats.filtration.edges_pruned, 0, "{label}");
+                assert!(off.diagram.multiset_eq(&want, 0.0), "{label}");
+            }
+        }
+    }
+}
+
+/// The full engine sweep the acceptance criterion names: diagrams
+/// bit-identical across tiles × threads × {enclosing on, off} for
+/// finite and infinite thresholds.
+#[test]
+fn differential_engine_sweep_tiles_threads_enclosing() {
+    for seed in 0..4u64 {
+        let mut rng = Pcg32::new(0x7E57 + seed);
+        let data = random_cloud(&mut rng, 32, 3);
+        for tau in [rng.uniform(0.5, 0.9), f64::INFINITY] {
+            let want = Engine::new(EngineOptions {
+                max_dim: 2,
+                threads: 1,
+                enclosing: false,
+                ..Default::default()
+            })
+            .compute_metric(&data, tau)
+            .diagram;
+            for threads in [1usize, 2, 4] {
+                for tile in [0usize, 1, 7] {
+                    for enclosing in [true, false] {
+                        let r = Engine::new(EngineOptions {
+                            max_dim: 2,
+                            threads,
+                            f1_tile: tile,
+                            enclosing,
+                            ..Default::default()
+                        })
+                        .compute_metric(&data, tau);
+                        assert!(
+                            r.diagram.multiset_eq(&want, 0.0),
+                            "seed={seed} tau={tau} threads={threads} tile={tile} enclosing={enclosing}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Pool reuse: the same engine runs front-end + reduction repeatedly;
+/// the front-end must keep producing identical bytes on the reused
+/// pool (no stale tile state between runs).
+#[test]
+fn frontend_stable_across_engine_reuse() {
+    let mut rng = Pcg32::new(0xAB1E);
+    let data = random_cloud(&mut rng, 40, 3);
+    let engine = Engine::new(EngineOptions {
+        max_dim: 1,
+        threads: 4,
+        ..Default::default()
+    });
+    let first = engine.compute_metric(&data, f64::INFINITY);
+    // The front-end memory accounting covers every materialized array.
+    let f = EdgeFiltration::build(&data, first.stats.filtration.enclosing_radius);
+    let nb = Neighborhoods::build(&f, false);
+    assert_eq!(
+        first.stats.front_memory_bytes,
+        f.memory_bytes() + nb.memory_bytes()
+    );
+    for round in 0..5 {
+        let r = engine.compute_metric(&data, f64::INFINITY);
+        assert_eq!(r.stats.n_edges, first.stats.n_edges, "round={round}");
+        assert_eq!(
+            r.stats.filtration.edges_pruned, first.stats.filtration.edges_pruned,
+            "round={round}"
+        );
+        assert!(r.diagram.multiset_eq(&first.diagram, 0.0), "round={round}");
+    }
+}

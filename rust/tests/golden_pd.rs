@@ -272,7 +272,73 @@ fn check_fixture(file: &str) {
                 ..Default::default()
             },
         ),
+        // The pooled front-end builds the filtration for every threaded
+        // config above (enclosing is on by default); these two pin the
+        // enclosing knob in both positions, with a non-auto tile plan,
+        // against the same golden bits.
+        (
+            "t4-enclosing-tile7",
+            EngineOptions {
+                max_dim: fx.max_dim,
+                threads: 4,
+                f1_tile: 7,
+                enclosing: true,
+                ..Default::default()
+            },
+        ),
+        (
+            "t4-noenclosing",
+            EngineOptions {
+                max_dim: fx.max_dim,
+                threads: 4,
+                batch_size: 17,
+                adaptive_batch: false,
+                f1_tile: 3,
+                enclosing: false,
+                ..Default::default()
+            },
+        ),
     ];
+    // The fixtures carry finite taus, where the enclosing truncation is
+    // inert by design — so the knob is additionally pinned at τ = +∞ on
+    // the metric (points) fixtures: with and without the truncation,
+    // serial and pooled, the diagrams must agree to the bit (the VR
+    // complex is a cone beyond r_enc).
+    if matches!(fx.data, MetricData::Points(_)) {
+        // Capped at H1: the τ = +∞ flag complex on the larger fixtures
+        // is too big for debug-mode H2 (dim-2 enclosing coverage lives
+        // in rust/tests/frontend.rs on small clouds).
+        let mk = |threads: usize, enclosing: bool| EngineOptions {
+            max_dim: fx.max_dim.min(1),
+            threads,
+            enclosing,
+            ..Default::default()
+        };
+        let reference = compute_ph(&fx.data, f64::INFINITY, &mk(1, false));
+        for (label, opts) in [
+            ("inf-seq-enclosing", mk(1, true)),
+            ("inf-t4-enclosing", mk(4, true)),
+            ("inf-t4-noenclosing", mk(4, false)),
+        ] {
+            let r = compute_ph(&fx.data, f64::INFINITY, &opts);
+            let got = diagram_bits(&r.diagram, fx.max_dim);
+            let want = diagram_bits(&reference.diagram, fx.max_dim);
+            assert_eq!(
+                got, want,
+                "{} [{}]: enclosing truncation changed the diagram at tau = inf",
+                fx.name, label
+            );
+            if opts.enclosing {
+                assert!(
+                    r.stats.filtration.edges_pruned > 0,
+                    "{} [{}]: truncation never fired",
+                    fx.name,
+                    label
+                );
+            }
+        }
+    }
+
     for (label, opts) in configs {
         let r = compute_ph(&fx.data, fx.tau, &opts);
         let got = diagram_bits(&r.diagram, fx.max_dim);
