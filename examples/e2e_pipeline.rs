@@ -15,11 +15,12 @@
 
 use dory::baselines::ripser_like;
 use dory::datasets;
-use dory::filtration::EdgeFiltration;
+use dory::filtration::{EdgeFiltration, FiltrationStats};
 use dory::geometry::MetricData;
-use dory::homology::{compute_ph_from_filtration, EngineOptions};
+use dory::homology::{EngineOptions, PhRequest, Session};
 use dory::runtime::{default_artifact_dir, Runtime};
 use dory::util::memtrack;
+use dory::util::timer::PhaseTimer;
 
 fn main() -> anyhow::Result<()> {
     let n = 1800usize; // fits the dist_2048x16 artifact
@@ -30,10 +31,20 @@ fn main() -> anyhow::Result<()> {
         _ => unreachable!(),
     };
 
+    // ---- L3 session (owns the persistent pool) ----------------------------
+    let opts = EngineOptions {
+        max_dim: 2,
+        threads: 4,
+        batch_size: 100,
+        ..Default::default()
+    };
+    let mut session = Session::new(opts);
+
     // ---- L1/L2 via PJRT: distance kernel ---------------------------------
     let rt = Runtime::load(&default_artifact_dir())?;
     println!("PJRT platform: {}", rt.platform());
     let t0 = std::time::Instant::now();
+    let mut fstats = FiltrationStats::default();
     let (f, source) = if rt.has_distance_kernel() {
         let raw = rt.distance_edges(&pc, tau)?;
         (
@@ -42,7 +53,16 @@ fn main() -> anyhow::Result<()> {
         )
     } else {
         eprintln!("(no artifacts — run `make artifacts`; using native path)");
-        (EdgeFiltration::build(&data, tau), "native")
+        (
+            EdgeFiltration::build_pooled(
+                &data,
+                tau,
+                session.engine().pool(),
+                &session.engine().frontend_options(),
+                &mut fstats,
+            ),
+            "native",
+        )
     };
     let t_edges = t0.elapsed().as_secs_f64();
     println!(
@@ -50,16 +70,11 @@ fn main() -> anyhow::Result<()> {
         f.n_edges()
     );
 
-    // ---- L3: Dory engine --------------------------------------------------
+    // ---- L3: Dory engine over the session ---------------------------------
     memtrack::reset_peak();
     let t0 = std::time::Instant::now();
-    let opts = EngineOptions {
-        max_dim: 2,
-        threads: 4,
-        batch_size: 100,
-        ..Default::default()
-    };
-    let r = compute_ph_from_filtration(&f, &opts);
+    let handle = session.ingest_filtration(f, PhaseTimer::new(), fstats, source)?;
+    let r = session.query(&handle, &PhRequest::at(tau))?.result;
     let t_dory = t0.elapsed().as_secs_f64();
     let dory_peak = memtrack::section_peak_bytes();
     println!(

@@ -8,12 +8,13 @@
 //! reproduce: auxin (cohesin degradation) eliminates most loops (H1) and
 //! most voids (H2) are never born.
 
+use dory::error::DoryError;
 use dory::geometry::MetricData;
 use dory::hic::{self, Condition, HiCParams};
-use dory::homology::{compute_ph, EngineOptions};
+use dory::homology::{EngineOptions, PhRequest, Session};
 use dory::util::memtrack;
 
-fn main() {
+fn main() -> Result<(), DoryError> {
     let mut bins = 20_000usize;
     let args: Vec<String> = std::env::args().collect();
     if let Some(i) = args.iter().position(|a| a == "--bins") {
@@ -23,11 +24,13 @@ fn main() {
         n_bins: bins,
         ..Default::default()
     };
-    let opts = EngineOptions {
+    // One session — both conditions share the engine's worker pool
+    // (handles are per-dataset; no pool is torn down in between).
+    let mut session = Session::new(EngineOptions {
         max_dim: 2,
         threads: 4,
         ..Default::default()
-    };
+    });
 
     let mut results = Vec::new();
     for cond in [Condition::Control, Condition::Auxin] {
@@ -35,7 +38,8 @@ fn main() {
         let ne = sd.entries.len();
         memtrack::reset_peak();
         let t0 = std::time::Instant::now();
-        let r = compute_ph(&MetricData::Sparse(sd), params.tau_max, &opts);
+        let handle = session.ingest(&MetricData::Sparse(sd), params.tau_max)?;
+        let r = session.query(&handle, &PhRequest::at(params.tau_max))?.result;
         println!(
             "{cond:?}: n={bins} n_e={ne} | {:.2}s, peak heap {} | {}",
             t0.elapsed().as_secs_f64(),
@@ -76,4 +80,5 @@ fn main() {
     println!("\nPaper's qualitative result: strong reduction in loops at all");
     println!("thresholds and voids mostly not born under auxin — corroborated");
     println!("if the d_b1%/d_b2% columns are strongly negative.");
+    Ok(())
 }

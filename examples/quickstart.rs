@@ -3,24 +3,29 @@
 //!     cargo run --release --example quickstart
 //!
 //! Reproduces the paper's Figure 1/4 story: a multi-scale data set whose
-//! PD shows two small loops and one large one, at different scales.
+//! PD shows two small loops and one large one, at different scales —
+//! served through the session API, whose whole point is multi-scale
+//! exploration: ingest once, then query several thresholds from the
+//! same sorted edge set.
 
 use dory::datasets;
-use dory::homology::{compute_ph, EngineOptions};
+use dory::error::DoryError;
+use dory::homology::{EngineOptions, PhRequest, Session};
 
-fn main() {
+fn main() -> Result<(), DoryError> {
     // 1. Data: two small circles + one large annulus (paper Fig. 1).
     let data = datasets::multi_scale_demo(600, 7);
 
-    // 2. Compute PH up to H1 with the default engine (fast implicit
-    //    column). τ = 8 covers all three features' deaths.
-    let opts = EngineOptions {
+    // 2. A session with the default engine (fast implicit column) and
+    //    one ingest at τ = 8, covering all three features' deaths.
+    let mut session = Session::new(EngineOptions {
         max_dim: 1,
         threads: 2,
         ..Default::default()
-    };
+    });
     let t0 = std::time::Instant::now();
-    let r = compute_ph(&data, 8.0, &opts);
+    let handle = session.ingest(&data, 8.0)?;
+    let r = session.query(&handle, &PhRequest::at(8.0))?.result;
     println!(
         "n={} edges={} in {:.2}s  ({})",
         r.stats.n,
@@ -52,4 +57,23 @@ fn main() {
     }
     println!("\nExpected: two mid-persistence loops (the small circles, dying");
     println!("around 2.5·√3 ≈ 4.3) and one large/essential loop (the annulus).");
+
+    // 4. The multi-scale zoom, free of charge: sub-τ queries reuse the
+    //    ingest (prefix truncation — no distances recomputed).
+    println!("\nzoom (same ingest, no rebuild):");
+    for tau in [2.0, 5.0] {
+        let zoom = session.query(&handle, &PhRequest::at(tau))?;
+        println!(
+            "  tau={tau}: {} edges, {} H1 classes alive at {:.1}",
+            zoom.n_edges,
+            zoom.result.diagram.betti_at(1, tau * 0.9),
+            tau * 0.9,
+        );
+    }
+    let st = session.stats();
+    println!(
+        "session: {} queries, {} filtration build (amortized)",
+        st.queries, st.filtration_builds
+    );
+    Ok(())
 }

@@ -1,0 +1,110 @@
+//! Service mode: one ingest, a batch of τ-queries, typed errors.
+//!
+//!     cargo run --release --example service_batch
+//!
+//! The session API is the seam the "heavy traffic" deployment plugs
+//! into: a `Session` owns the persistent engine + worker pool, ingests
+//! a dataset **once** (pooled distance tiles + key sort + CSR build),
+//! and serves every subsequent threshold query from the shared sorted
+//! edge set — sub-τ queries prefix-truncate, nothing is rebuilt, and
+//! diagrams are bit-identical to cold one-shot runs. This example
+//! measures that amortization directly and then walks the typed error
+//! surface a server would branch on.
+
+use dory::datasets;
+use dory::error::DoryError;
+use dory::homology::{compute_ph, EngineOptions, PhRequest, Session};
+
+fn main() -> Result<(), DoryError> {
+    let n = 700usize;
+    let data = datasets::sphere(n, 1.0, 0.0, 11);
+    let taus = [0.15, 0.2, 0.25, 0.3, 0.35, 0.4, 0.45, 0.5];
+    let opts = EngineOptions {
+        max_dim: 1,
+        threads: 4,
+        ..Default::default()
+    };
+
+    // ---- one ingest, eight queries ----------------------------------
+    let mut session = Session::new(opts.clone());
+    let t0 = std::time::Instant::now();
+    let handle = session.ingest(&data, 0.5)?;
+    let t_ingest = t0.elapsed().as_secs_f64();
+    println!(
+        "ingest: n={} -> {} edges in {:.3}s (the only F1/CSR build this run)",
+        handle.n_points(),
+        handle.n_edges(),
+        t_ingest
+    );
+
+    let reqs: Vec<PhRequest> = taus
+        .iter()
+        .map(|&tau| PhRequest {
+            tau,
+            label: Some(format!("tau={tau}")),
+            ..Default::default()
+        })
+        .collect();
+    let t0 = std::time::Instant::now();
+    let responses = session.run_batch(&handle, &reqs)?;
+    let t_batch = t_ingest + t0.elapsed().as_secs_f64();
+    println!("\n  {:<10} {:>8} {:>6} {:>9}", "query", "edges", "H1", "served");
+    for r in &responses {
+        println!(
+            "  {:<10} {:>8} {:>6} {:>9}",
+            r.label.as_deref().unwrap_or("-"),
+            r.n_edges,
+            r.result.diagram.betti_at(1, r.tau * 0.9),
+            if r.truncated { "prefix" } else { "full" },
+        );
+    }
+    let st = session.stats();
+    println!(
+        "\nsession counters: {} queries, {} F1 builds, {} CSR builds (amortized!)",
+        st.queries, st.filtration_builds, st.nb_builds
+    );
+
+    // ---- the same eight answers, cold -------------------------------
+    let t0 = std::time::Instant::now();
+    for (&tau, resp) in taus.iter().zip(&responses) {
+        let cold = compute_ph(&data, tau, &opts);
+        assert!(
+            cold.diagram.multiset_eq(&resp.result.diagram, 0.0),
+            "session answers must be bit-identical to cold runs"
+        );
+    }
+    let t_cold = t0.elapsed().as_secs_f64();
+    println!(
+        "batch-of-{} on one ingest: {:.3}s | {} cold runs: {:.3}s | amortization x{:.2}",
+        taus.len(),
+        t_batch,
+        taus.len(),
+        t_cold,
+        t_cold / t_batch
+    );
+
+    // ---- the typed error surface ------------------------------------
+    println!("\ntyped errors:");
+    match session.query(&handle, &PhRequest::at(0.75)) {
+        Err(DoryError::TauExceedsIngest {
+            requested,
+            ingested,
+        }) => println!("  tau {requested} > ingest {ingested}: TauExceedsIngest (re-ingest to serve)"),
+        other => panic!("expected TauExceedsIngest, got {:?}", other.err()),
+    }
+    let nan = dory::geometry::MetricData::Points(dory::geometry::PointCloud::new(
+        2,
+        vec![0.0, 0.0, f64::NAN, 1.0],
+    ));
+    match session.ingest(&nan, 1.0) {
+        Err(e @ DoryError::InvalidInput(_)) => println!("  NaN ingest: {e}"),
+        other => panic!("expected InvalidInput, got {:?}", other.err()),
+    }
+    // The session survives refused requests: serve one more query.
+    let again = session.query(&handle, &PhRequest::at(0.3))?;
+    println!(
+        "  ...session still healthy: re-served tau=0.3 ({} edges)",
+        again.n_edges
+    );
+    Ok(())
+}

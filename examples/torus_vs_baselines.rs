@@ -9,7 +9,7 @@
 
 use dory::baselines::{gudhi_like, ripser_like};
 use dory::datasets;
-use dory::homology::{compute_ph, Algorithm, EngineOptions};
+use dory::homology::{Algorithm, EngineOptions, PhRequest, Session};
 use dory::util::memtrack;
 
 fn main() {
@@ -43,7 +43,11 @@ fn main() {
         };
         memtrack::reset_peak();
         let t0 = std::time::Instant::now();
-        let r = compute_ph(&data, tau, &opts);
+        // Session per engine configuration (the ablation varies
+        // handle-level knobs like dense_lookup, so each row ingests).
+        let mut session = Session::new(opts);
+        let h = session.ingest(&data, tau).expect("ingest");
+        let r = session.query(&h, &PhRequest::at(tau)).expect("query").result;
         let dt = t0.elapsed().as_secs_f64();
         println!(
             "{name:<28} {:>8.2}s {:>12} {:>8} {:>10}",

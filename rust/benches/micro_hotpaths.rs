@@ -229,6 +229,62 @@ fn main() {
         .field("h1_skip_rate", r.stats.h1.skip_rate())
         .field("max_rss_bytes", dory::util::memtrack::max_rss_bytes());
 
+    // --- session batch amortization -----------------------------------------
+    // CI gate for the service mode: a batch of 8 τ-queries served from
+    // ONE Session ingest must beat 8 cold one-shot runs (each cold run
+    // pays the full O(n²) distance pass + sort + CSR build again). The
+    // answers must also be bit-identical, and the session counters must
+    // show exactly one filtration/CSR build for the whole batch. A
+    // ratio <= 1.0 means the prefix-truncation path regressed into
+    // rebuilding.
+    let svc_data = datasets::sphere(900, 1.0, 0.0, 5);
+    let svc_taus = [0.08, 0.10, 0.12, 0.15, 0.18, 0.20, 0.22, 0.25];
+    let svc_opts = EngineOptions {
+        max_dim: 1,
+        threads: 4,
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let mut session = dory::homology::Session::new(svc_opts.clone());
+    let handle = session.ingest(&svc_data, 0.25).expect("session ingest");
+    let reqs: Vec<dory::homology::PhRequest> = svc_taus
+        .iter()
+        .map(|&t| dory::homology::PhRequest::at(t))
+        .collect();
+    let responses = session.run_batch(&handle, &reqs).expect("session batch");
+    let t_session = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    for (&tau, resp) in svc_taus.iter().zip(&responses) {
+        let cold = dory::homology::compute_ph(&svc_data, tau, &svc_opts);
+        assert!(
+            cold.diagram.multiset_eq(&resp.result.diagram, 0.0),
+            "session answer at tau={tau} deviates from the cold run"
+        );
+    }
+    let t_cold = t0.elapsed().as_secs_f64();
+    let amortization = t_cold / t_session.max(1e-12);
+    let st = session.stats();
+    println!(
+        "{:<42} {t_session:>11.3} s    (8 cold runs {t_cold:.3}s -> x{amortization:.2}; {} F1 builds, {} CSR builds)",
+        "session batch-of-8 (sphere900, H1)", st.filtration_builds, st.nb_builds
+    );
+    assert_eq!(
+        (st.filtration_builds, st.nb_builds),
+        (1, 1),
+        "a batch must amortize exactly one build"
+    );
+    assert!(
+        amortization > 1.0,
+        "session batch-of-8 ({t_session:.3}s) must beat 8 cold runs ({t_cold:.3}s): \
+         amortization {amortization:.3} <= 1.0 — the shared-ingest path regressed"
+    );
+    out = out
+        .field("session_batch8_s", t_session)
+        .field("session_cold8_s", t_cold)
+        .field("session_amortization", amortization)
+        .field("session_f1_builds", st.filtration_builds)
+        .field("session_nb_builds", st.nb_builds);
+
     // --- F1 construction ----------------------------------------------------
     let t0 = Instant::now();
     let f2 = EdgeFiltration::build(&data, 0.3);

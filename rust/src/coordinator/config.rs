@@ -1,13 +1,26 @@
 //! Run configuration: a small TOML-subset parser plus typed config.
 //!
 //! The offline vendor set has no serde/toml, so we parse the subset we
-//! need: `[section]` headers, `key = value` with string / number / bool
-//! values, `#` comments. Unknown keys are rejected (typo safety).
+//! need: `[section]` headers, `[[array]]` array-of-tables headers,
+//! `key = value` with string / number / bool values, `#` comments.
+//! Unknown keys are rejected (typo safety). Every parse failure is a
+//! typed [`DoryError::Config`].
+//!
+//! A config may carry a `[[query]]` array: each entry is one PH query
+//! (τ plus optional per-query `max_dim`/`shortcut`/`enclosing`/`label`
+//! overrides) and the coordinator serves the whole array from **one**
+//! dataset ingest over the session layer ([`crate::coordinator::run_batch`]).
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use crate::error::DoryError;
+
+type Result<T> = std::result::Result<T, DoryError>;
+
+fn cfg_err(msg: impl std::fmt::Display) -> DoryError {
+    DoryError::Config(msg.to_string())
+}
 
 #[derive(Clone, Debug, PartialEq)]
 pub enum Value {
@@ -46,32 +59,83 @@ impl Value {
     }
 }
 
-/// Parse the TOML subset into section -> key -> value.
-pub fn parse_toml(text: &str) -> Result<HashMap<String, HashMap<String, Value>>> {
-    let mut out: HashMap<String, HashMap<String, Value>> = HashMap::new();
-    let mut section = String::new();
+/// A parsed TOML-subset document: plain `[section]` tables plus
+/// `[[name]]` array-of-tables entries in file order.
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    pub sections: HashMap<String, HashMap<String, Value>>,
+    pub arrays: Vec<(String, HashMap<String, Value>)>,
+}
+
+/// Parse the TOML subset, including `[[array]]` headers.
+pub fn parse_toml_doc(text: &str) -> Result<TomlDoc> {
+    // Where the current `key = value` lines land: a named section map,
+    // or the newest entry of a named array.
+    enum Target {
+        Section(String),
+        Array(usize),
+    }
+    let mut doc = TomlDoc::default();
+    let mut target = Target::Section(String::new());
     for (lineno, raw) in text.lines().enumerate() {
         let line = strip_comment(raw).trim().to_string();
         if line.is_empty() {
             continue;
         }
+        if let Some(rest) = line.strip_prefix("[[") {
+            let name = rest
+                .strip_suffix("]]")
+                .ok_or_else(|| cfg_err(format!("line {}: malformed [[array]] header", lineno + 1)))?
+                .trim()
+                .to_string();
+            if name.is_empty() {
+                return Err(cfg_err(format!("line {}: empty [[array]] name", lineno + 1)));
+            }
+            doc.arrays.push((name, HashMap::new()));
+            target = Target::Array(doc.arrays.len() - 1);
+            continue;
+        }
         if line.starts_with('[') {
             if !line.ends_with(']') {
-                bail!("line {}: malformed section header", lineno + 1);
+                return Err(cfg_err(format!(
+                    "line {}: malformed section header",
+                    lineno + 1
+                )));
             }
-            section = line[1..line.len() - 1].trim().to_string();
-            out.entry(section.clone()).or_default();
+            let section = line[1..line.len() - 1].trim().to_string();
+            doc.sections.entry(section.clone()).or_default();
+            target = Target::Section(section);
             continue;
         }
         let (k, v) = line
             .split_once('=')
-            .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            .ok_or_else(|| cfg_err(format!("line {}: expected key = value", lineno + 1)))?;
         let key = k.trim().to_string();
         let val = parse_value(v.trim())
-            .with_context(|| format!("line {}: bad value for {key}", lineno + 1))?;
-        out.entry(section.clone()).or_default().insert(key, val);
+            .ok_or_else(|| cfg_err(format!("line {}: bad value for {key}", lineno + 1)))?;
+        match &target {
+            Target::Section(s) => {
+                doc.sections.entry(s.clone()).or_default().insert(key, val);
+            }
+            Target::Array(i) => {
+                doc.arrays[*i].1.insert(key, val);
+            }
+        }
     }
-    Ok(out)
+    Ok(doc)
+}
+
+/// Parse the TOML subset into section -> key -> value (no arrays;
+/// documents with `[[array]]` headers are rejected — use
+/// [`parse_toml_doc`]).
+pub fn parse_toml(text: &str) -> Result<HashMap<String, HashMap<String, Value>>> {
+    let doc = parse_toml_doc(text)?;
+    if let Some((name, _)) = doc.arrays.first() {
+        return Err(cfg_err(format!(
+            "[[{name}]] arrays are not supported here; use parse_toml_doc"
+        )));
+    }
+    Ok(doc.sections)
 }
 
 fn strip_comment(line: &str) -> &str {
@@ -87,20 +151,17 @@ fn strip_comment(line: &str) -> &str {
     line
 }
 
-fn parse_value(s: &str) -> Result<Value> {
+fn parse_value(s: &str) -> Option<Value> {
     if s.starts_with('"') && s.ends_with('"') && s.len() >= 2 {
-        return Ok(Value::Str(s[1..s.len() - 1].to_string()));
+        return Some(Value::Str(s[1..s.len() - 1].to_string()));
     }
     match s {
-        "true" => return Ok(Value::Bool(true)),
-        "false" => return Ok(Value::Bool(false)),
-        "inf" => return Ok(Value::Num(f64::INFINITY)),
+        "true" => return Some(Value::Bool(true)),
+        "false" => return Some(Value::Bool(false)),
+        "inf" => return Some(Value::Num(f64::INFINITY)),
         _ => {}
     }
-    if let Ok(x) = s.parse::<f64>() {
-        return Ok(Value::Num(x));
-    }
-    bail!("cannot parse value: {s}")
+    s.parse::<f64>().ok().map(Value::Num)
 }
 
 /// Which data source a run uses.
@@ -119,6 +180,30 @@ pub enum DatasetSpec {
     PointsFile(PathBuf),
     LowerDistanceFile(PathBuf),
     SparseFile(PathBuf),
+}
+
+/// One entry of the `[[query]]` array (or one repeated CLI `--tau`):
+/// a τ plus optional per-query knob overrides. `None` inherits the
+/// `[engine]` value.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuerySpec {
+    pub tau: f64,
+    pub max_dim: Option<usize>,
+    pub shortcut: Option<bool>,
+    pub enclosing: Option<bool>,
+    pub label: Option<String>,
+}
+
+impl QuerySpec {
+    pub fn at(tau: f64) -> Self {
+        Self {
+            tau,
+            max_dim: None,
+            shortcut: None,
+            enclosing: None,
+            label: None,
+        }
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -162,6 +247,13 @@ pub struct RunConfig {
     pub diagram_csv: Option<PathBuf>,
     pub diagram_json: Option<PathBuf>,
     pub summary_json: Option<PathBuf>,
+    /// Batch mode: the `[[query]]` array (or repeated CLI `--tau`
+    /// flags). Empty = one query at `tau`. All queries are served from
+    /// **one** dataset ingest over the session layer, at the largest
+    /// query τ ([`Self::ingest_tau`]); when the array is non-empty,
+    /// `tau` only participates as the single-query fallback and is
+    /// otherwise ignored.
+    pub queries: Vec<QuerySpec>,
 }
 
 impl Default for RunConfig {
@@ -196,20 +288,22 @@ impl Default for RunConfig {
             diagram_csv: None,
             diagram_json: None,
             summary_json: None,
+            queries: Vec::new(),
         }
     }
 }
 
 impl RunConfig {
     pub fn from_file(path: &Path) -> Result<Self> {
-        let text = std::fs::read_to_string(path).with_context(|| format!("read {path:?}"))?;
+        let text =
+            std::fs::read_to_string(path).map_err(|e| DoryError::io(path, e))?;
         Self::from_str(&text)
     }
 
     pub fn from_str(text: &str) -> Result<Self> {
-        let doc = parse_toml(text)?;
+        let doc = parse_toml_doc(text)?;
         let mut cfg = RunConfig::default();
-        for (section, keys) in &doc {
+        for (section, keys) in &doc.sections {
             match section.as_str() {
                 "dataset" => {
                     let kind = keys
@@ -241,61 +335,48 @@ impl RunConfig {
                     };
                     for k in keys.keys() {
                         if !["kind", "n", "seed", "condition", "path"].contains(&k.as_str()) {
-                            bail!("unknown key dataset.{k}");
+                            return Err(cfg_err(format!("unknown key dataset.{k}")));
                         }
                     }
                 }
                 "engine" => {
                     for (k, v) in keys {
+                        let num = || {
+                            v.as_f64()
+                                .ok_or_else(|| cfg_err(format!("engine.{k}: expected a number")))
+                        };
+                        let uint = || {
+                            v.as_usize()
+                                .ok_or_else(|| cfg_err(format!("engine.{k}: expected a non-negative integer")))
+                        };
+                        let flag = || {
+                            v.as_bool()
+                                .ok_or_else(|| cfg_err(format!("engine.{k}: expected a bool")))
+                        };
                         match k.as_str() {
-                            "tau" => cfg.tau = v.as_f64().context("engine.tau")?,
-                            "max_dim" => cfg.max_dim = v.as_usize().context("engine.max_dim")?,
-                            "threads" => cfg.threads = v.as_usize().context("engine.threads")?,
-                            "batch_size" => {
-                                cfg.batch_size = v.as_usize().context("engine.batch_size")?
-                            }
-                            "adaptive_batch" => {
-                                cfg.adaptive_batch =
-                                    v.as_bool().context("engine.adaptive_batch")?
-                            }
-                            "batch_min" => {
-                                cfg.batch_min = v.as_usize().context("engine.batch_min")?
-                            }
-                            "batch_max" => {
-                                cfg.batch_max = v.as_usize().context("engine.batch_max")?
-                            }
-                            "steal_grain" => {
-                                cfg.steal_grain = v.as_usize().context("engine.steal_grain")?
-                            }
-                            "adapt_low" => {
-                                cfg.adapt_low = v.as_f64().context("engine.adapt_low")?
-                            }
-                            "adapt_high" => {
-                                cfg.adapt_high = v.as_f64().context("engine.adapt_high")?
-                            }
-                            "enum_shards" => {
-                                cfg.enum_shards = v.as_usize().context("engine.enum_shards")?
-                            }
-                            "enum_grain" => {
-                                cfg.enum_grain = v.as_usize().context("engine.enum_grain")?
-                            }
-                            "shortcut" => {
-                                cfg.shortcut = v.as_bool().context("engine.shortcut")?
-                            }
-                            "f1_tile" => {
-                                cfg.f1_tile = v.as_usize().context("engine.f1_tile")?
-                            }
-                            "enclosing" => {
-                                cfg.enclosing = v.as_bool().context("engine.enclosing")?
-                            }
-                            "dense_lookup" => {
-                                cfg.dense_lookup = v.as_bool().context("engine.dense_lookup")?
-                            }
+                            "tau" => cfg.tau = num()?,
+                            "max_dim" => cfg.max_dim = uint()?,
+                            "threads" => cfg.threads = uint()?,
+                            "batch_size" => cfg.batch_size = uint()?,
+                            "adaptive_batch" => cfg.adaptive_batch = flag()?,
+                            "batch_min" => cfg.batch_min = uint()?,
+                            "batch_max" => cfg.batch_max = uint()?,
+                            "steal_grain" => cfg.steal_grain = uint()?,
+                            "adapt_low" => cfg.adapt_low = num()?,
+                            "adapt_high" => cfg.adapt_high = num()?,
+                            "enum_shards" => cfg.enum_shards = uint()?,
+                            "enum_grain" => cfg.enum_grain = uint()?,
+                            "shortcut" => cfg.shortcut = flag()?,
+                            "f1_tile" => cfg.f1_tile = uint()?,
+                            "enclosing" => cfg.enclosing = flag()?,
+                            "dense_lookup" => cfg.dense_lookup = flag()?,
                             "algorithm" => {
-                                cfg.algorithm =
-                                    v.as_str().context("engine.algorithm")?.to_string()
+                                cfg.algorithm = v
+                                    .as_str()
+                                    .ok_or_else(|| cfg_err("engine.algorithm: expected a string"))?
+                                    .to_string()
                             }
-                            _ => bail!("unknown key engine.{k}"),
+                            _ => return Err(cfg_err(format!("unknown key engine.{k}"))),
                         }
                     }
                 }
@@ -303,56 +384,153 @@ impl RunConfig {
                     for (k, v) in keys {
                         match k.as_str() {
                             "artifacts" => {
-                                cfg.artifacts =
-                                    PathBuf::from(v.as_str().context("runtime.artifacts")?)
+                                cfg.artifacts = PathBuf::from(
+                                    v.as_str().ok_or_else(|| {
+                                        cfg_err("runtime.artifacts: expected a string")
+                                    })?,
+                                )
                             }
                             "use_pjrt" => {
-                                cfg.use_pjrt = v.as_bool().context("runtime.use_pjrt")?
+                                cfg.use_pjrt = v
+                                    .as_bool()
+                                    .ok_or_else(|| cfg_err("runtime.use_pjrt: expected a bool"))?
                             }
-                            "pimage" => cfg.pimage = v.as_bool().context("runtime.pimage")?,
+                            "pimage" => {
+                                cfg.pimage = v
+                                    .as_bool()
+                                    .ok_or_else(|| cfg_err("runtime.pimage: expected a bool"))?
+                            }
                             "pimage_span" => {
-                                cfg.pimage_span = v.as_f64().context("runtime.pimage_span")?
+                                cfg.pimage_span = v.as_f64().ok_or_else(|| {
+                                    cfg_err("runtime.pimage_span: expected a number")
+                                })?
                             }
-                            _ => bail!("unknown key runtime.{k}"),
+                            _ => return Err(cfg_err(format!("unknown key runtime.{k}"))),
                         }
                     }
                 }
                 "output" => {
                     for (k, v) in keys {
-                        let p = Some(PathBuf::from(v.as_str().context("output path")?));
+                        let p = Some(PathBuf::from(
+                            v.as_str()
+                                .ok_or_else(|| cfg_err(format!("output.{k}: expected a path")))?,
+                        ));
                         match k.as_str() {
                             "diagram_csv" => cfg.diagram_csv = p,
                             "diagram_json" => cfg.diagram_json = p,
                             "summary_json" => cfg.summary_json = p,
-                            _ => bail!("unknown key output.{k}"),
+                            _ => return Err(cfg_err(format!("unknown key output.{k}"))),
                         }
                     }
                 }
-                other => bail!("unknown section [{other}]"),
+                other => return Err(cfg_err(format!("unknown section [{other}]"))),
             }
+        }
+        for (name, keys) in &doc.arrays {
+            if name != "query" {
+                return Err(cfg_err(format!("unknown array [[{name}]]")));
+            }
+            let mut q = QuerySpec::at(f64::NAN);
+            let mut have_tau = false;
+            for (k, v) in keys {
+                match k.as_str() {
+                    "tau" => {
+                        q.tau = v
+                            .as_f64()
+                            .ok_or_else(|| cfg_err("query.tau: expected a number"))?;
+                        have_tau = true;
+                    }
+                    "max_dim" => {
+                        q.max_dim = Some(
+                            v.as_usize()
+                                .ok_or_else(|| cfg_err("query.max_dim: expected an integer"))?,
+                        )
+                    }
+                    "shortcut" => {
+                        q.shortcut = Some(
+                            v.as_bool()
+                                .ok_or_else(|| cfg_err("query.shortcut: expected a bool"))?,
+                        )
+                    }
+                    "enclosing" => {
+                        q.enclosing = Some(
+                            v.as_bool()
+                                .ok_or_else(|| cfg_err("query.enclosing: expected a bool"))?,
+                        )
+                    }
+                    "label" => {
+                        q.label = Some(
+                            v.as_str()
+                                .ok_or_else(|| cfg_err("query.label: expected a string"))?
+                                .to_string(),
+                        )
+                    }
+                    _ => return Err(cfg_err(format!("unknown key query.{k}"))),
+                }
+            }
+            if !have_tau {
+                return Err(cfg_err("[[query]] entries require a tau"));
+            }
+            cfg.queries.push(q);
         }
         cfg.validate()?;
         Ok(cfg)
     }
 
+    /// The queries a run serves: the `[[query]]` array, or the single
+    /// `[engine] tau` when the array is empty.
+    pub fn effective_queries(&self) -> Vec<QuerySpec> {
+        if self.queries.is_empty() {
+            vec![QuerySpec::at(self.tau)]
+        } else {
+            self.queries.clone()
+        }
+    }
+
+    /// The threshold the dataset must be ingested at to serve every
+    /// query: the max over query τ and (in single-query mode) `tau`.
+    pub fn ingest_tau(&self) -> f64 {
+        self.effective_queries()
+            .iter()
+            .map(|q| q.tau)
+            .fold(f64::NEG_INFINITY, f64::max)
+    }
+
     pub fn validate(&self) -> Result<()> {
         if self.max_dim > 2 {
-            bail!("max_dim must be <= 2 (paper scope)");
+            return Err(cfg_err("max_dim must be <= 2 (paper scope)"));
         }
         if !["fast-column", "implicit-row"].contains(&self.algorithm.as_str()) {
-            bail!("algorithm must be fast-column or implicit-row");
+            return Err(cfg_err("algorithm must be fast-column or implicit-row"));
         }
         if self.threads == 0 || self.batch_size == 0 {
-            bail!("threads and batch_size must be >= 1");
+            return Err(cfg_err("threads and batch_size must be >= 1"));
         }
         if self.batch_min == 0 || self.batch_min > self.batch_max {
-            bail!("batch_min must be >= 1 and <= batch_max");
+            return Err(cfg_err("batch_min must be >= 1 and <= batch_max"));
         }
         if !(0.0..=1.0).contains(&self.adapt_low)
             || !(0.0..=1.0).contains(&self.adapt_high)
             || self.adapt_low > self.adapt_high
         {
-            bail!("adapt_low/adapt_high must satisfy 0 <= adapt_low <= adapt_high <= 1");
+            return Err(cfg_err(
+                "adapt_low/adapt_high must satisfy 0 <= adapt_low <= adapt_high <= 1",
+            ));
+        }
+        if self.tau.is_nan() {
+            return Err(cfg_err("tau must not be NaN"));
+        }
+        for (i, q) in self.queries.iter().enumerate() {
+            if q.tau.is_nan() {
+                return Err(cfg_err(format!("query #{i}: tau must not be NaN")));
+            }
+            if let Some(d) = q.max_dim {
+                if d > 2 {
+                    return Err(cfg_err(format!(
+                        "query #{i}: max_dim must be <= 2 (paper scope)"
+                    )));
+                }
+            }
         }
         Ok(())
     }
@@ -362,7 +540,7 @@ fn path_key(keys: &HashMap<String, Value>, k: &str) -> Result<PathBuf> {
     Ok(PathBuf::from(
         keys.get(k)
             .and_then(Value::as_str)
-            .with_context(|| format!("dataset.{k} required"))?,
+            .ok_or_else(|| cfg_err(format!("dataset.{k} required")))?,
     ))
 }
 
@@ -408,21 +586,34 @@ diagram_csv = "out/pd.csv"
         assert_eq!(cfg.tau, 0.15);
         assert_eq!(cfg.threads, 4);
         assert_eq!(cfg.diagram_csv, Some(PathBuf::from("out/pd.csv")));
+        assert!(cfg.queries.is_empty());
+        assert_eq!(cfg.effective_queries(), vec![QuerySpec::at(0.15)]);
+        assert_eq!(cfg.ingest_tau(), 0.15);
     }
 
     #[test]
     fn rejects_unknown_keys() {
         assert!(RunConfig::from_str("[engine]\nbogus = 1\n").is_err());
         assert!(RunConfig::from_str("[bogus]\n").is_err());
+        assert!(RunConfig::from_str("[[bogus]]\ntau = 1\n").is_err());
+        assert!(RunConfig::from_str("[[query]]\ntau = 1\nbogus = 2\n").is_err());
     }
 
     #[test]
-    fn rejects_invalid_values() {
-        assert!(RunConfig::from_str("[engine]\nmax_dim = 3\n").is_err());
-        assert!(RunConfig::from_str("[engine]\nalgorithm = \"quantum\"\n").is_err());
-        assert!(RunConfig::from_str("[engine]\nthreads = 0\n").is_err());
-        assert!(RunConfig::from_str("[engine]\nbatch_min = 0\n").is_err());
-        assert!(RunConfig::from_str("[engine]\nbatch_min = 64\nbatch_max = 8\n").is_err());
+    fn rejects_invalid_values_with_typed_config_errors() {
+        for bad in [
+            "[engine]\nmax_dim = 3\n",
+            "[engine]\nalgorithm = \"quantum\"\n",
+            "[engine]\nthreads = 0\n",
+            "[engine]\nbatch_min = 0\n",
+            "[engine]\nbatch_min = 64\nbatch_max = 8\n",
+            "[engine]\ntau = \"high\"\n",
+            "[[query]]\nmax_dim = 1\n", // tau required
+            "[[query]]\ntau = 0.5\nmax_dim = 7\n",
+        ] {
+            let e = RunConfig::from_str(bad).unwrap_err();
+            assert!(matches!(e, DoryError::Config(_)), "{bad}: {e}");
+        }
     }
 
     #[test]
@@ -490,6 +681,45 @@ diagram_csv = "out/pd.csv"
         assert_eq!(root["a"], Value::Num(f64::INFINITY));
         assert_eq!(root["b"], Value::Bool(true));
         assert_eq!(root["c"], Value::Str("x # not comment".into()));
+    }
+
+    #[test]
+    fn query_array_parses_in_order() {
+        let cfg = RunConfig::from_str(
+            r#"
+[dataset]
+kind = "circle"
+n = 64
+
+[engine]
+tau = 2.0
+max_dim = 2
+
+[[query]]
+tau = 0.5
+label = "coarse"
+max_dim = 1
+
+[[query]]
+tau = 1.25
+shortcut = false
+
+[[query]]
+tau = 2.0
+enclosing = true
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.queries.len(), 3);
+        assert_eq!(cfg.queries[0].tau, 0.5);
+        assert_eq!(cfg.queries[0].label.as_deref(), Some("coarse"));
+        assert_eq!(cfg.queries[0].max_dim, Some(1));
+        assert_eq!(cfg.queries[1].shortcut, Some(false));
+        assert_eq!(cfg.queries[2].enclosing, Some(true));
+        assert_eq!(cfg.effective_queries().len(), 3);
+        assert_eq!(cfg.ingest_tau(), 2.0);
+        // parse_toml (sections-only) refuses array documents.
+        assert!(parse_toml("[[query]]\ntau = 1\n").is_err());
     }
 
     #[test]

@@ -1,37 +1,66 @@
-//! L3 coordinator: config-driven pipeline orchestration.
+//! L3 coordinator: config-driven pipeline orchestration over the
+//! session layer.
 //!
-//! dataset → edge filtration (PJRT Pallas kernel when an artifact fits,
-//! native Rust otherwise) → Dory engine (H0/H1*/H2*) → reports (PD CSV /
-//! JSON, summary JSON, optional persistence image through the second
-//! Pallas kernel). Python never runs here — artifacts were AOT-compiled
-//! at build time.
+//! dataset → **one ingest** (PJRT Pallas kernel when an artifact fits,
+//! native pooled front-end otherwise) → a [`Session`] answering every
+//! configured query (`[[query]]` array / repeated `--tau`) from the
+//! shared [`FiltrationHandle`] → reports (per-query PD CSV/JSON, one
+//! summary JSON with a `queries` array, optional persistence image
+//! through the second Pallas kernel). Python never runs here —
+//! artifacts were AOT-compiled at build time.
+//!
+//! Every fallible step returns a typed [`DoryError`]; the CLI maps that
+//! to a nonzero exit code instead of a panic backtrace.
 
 pub mod config;
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
-
-pub use config::{DatasetSpec, RunConfig};
+pub use config::{DatasetSpec, QuerySpec, RunConfig};
 
 use crate::datasets;
-use crate::filtration::{EdgeFiltration, FiltrationStats};
+use crate::error::DoryError;
+use crate::filtration::{EdgeFiltration, FiltrationStats, FrontendOptions};
 use crate::geometry::MetricData;
 use crate::hic;
-use crate::homology::{self, Algorithm, Engine, EngineOptions};
+use crate::homology::{
+    self, Algorithm, EngineOptions, PhRequest, PhResponse, Session, SessionStats,
+};
 use crate::io;
+use crate::reduction::pool::ThreadPool;
 use crate::runtime::Runtime;
 use crate::util::json::Json;
 use crate::util::memtrack;
 use crate::util::timer::PhaseTimer;
 
-/// Everything a run produces.
+type Result<T> = std::result::Result<T, DoryError>;
+
+/// Everything a single-query run produces (legacy shape; see
+/// [`BatchReport`] for the multi-query service run).
 pub struct RunReport {
     pub result: homology::PhResult,
     pub edge_source: &'static str,
     pub n_points: usize,
     pub n_edges: usize,
     pub peak_heap_bytes: usize,
+    pub pimage: Option<(usize, Vec<f32>)>,
+}
+
+/// Everything a batch run produces: the shared-ingest facts plus one
+/// [`PhResponse`] per configured query.
+pub struct BatchReport {
+    pub edge_source: &'static str,
+    pub n_points: usize,
+    /// Edges of the shared ingest (each query serves a prefix of them).
+    pub ingest_edges: usize,
+    pub peak_heap_bytes: usize,
+    /// Front-end report of the one build every query amortizes
+    /// (`f1_builds`/`nb_builds` stay 1 regardless of query count).
+    pub ingest_stats: FiltrationStats,
+    pub session: SessionStats,
+    pub responses: Vec<PhResponse>,
+    /// Persistence image of the first query's diagram (PJRT kernel),
+    /// when requested and available.
     pub pimage: Option<(usize, Vec<f32>)>,
 }
 
@@ -49,7 +78,7 @@ pub fn build_dataset(spec: &DatasetSpec) -> Result<MetricData> {
             "fractal" => datasets::fractal_network(5),
             "random" => datasets::random_cloud(*n, 3, *seed),
             "multi-scale" => datasets::multi_scale_demo(*n, *seed),
-            other => bail!("unknown dataset kind: {other}"),
+            other => return Err(DoryError::Dataset(format!("unknown dataset kind: {other}"))),
         },
         DatasetSpec::Hic {
             n_bins,
@@ -59,7 +88,11 @@ pub fn build_dataset(spec: &DatasetSpec) -> Result<MetricData> {
             let cond = match condition.as_str() {
                 "control" => hic::Condition::Control,
                 "auxin" => hic::Condition::Auxin,
-                other => bail!("hic condition must be control|auxin, got {other}"),
+                other => {
+                    return Err(DoryError::Dataset(format!(
+                        "hic condition must be control|auxin, got {other}"
+                    )))
+                }
             };
             let params = hic::HiCParams {
                 n_bins: *n_bins,
@@ -74,35 +107,19 @@ pub fn build_dataset(spec: &DatasetSpec) -> Result<MetricData> {
     })
 }
 
-/// Build the edge filtration, preferring the PJRT distance kernel.
-/// Returns the filtration and which path produced it. Serial compat
-/// wrapper (no pool, no enclosing truncation) over
-/// [`build_filtration_pooled`], which is the engine-pool path the
-/// coordinator itself runs — one PJRT dispatch to keep in sync, not
-/// two.
+/// Build the edge filtration, preferring the PJRT distance kernel. The
+/// **single** entry for both the serial and the pooled path (the old
+/// drifted serial copy is gone): pass the engine's pool (or `None`) and
+/// the front-end knobs. The PJRT Pallas kernel, when an artifact fits,
+/// enumerates the thresholded pair list and the pool key-sorts it;
+/// otherwise the native tiled front-end (distance kernel + sort +
+/// enclosing truncation per `fe`) runs entirely as pool work.
 pub fn build_filtration(
     data: &MetricData,
     tau: f64,
     runtime: Option<&Runtime>,
-) -> (EdgeFiltration, &'static str) {
-    let engine = Engine::new(EngineOptions {
-        threads: 1,
-        enclosing: false,
-        ..Default::default()
-    });
-    build_filtration_pooled(data, tau, runtime, &engine, &mut FiltrationStats::default())
-}
-
-/// Build the edge filtration on the engine's worker pool. The PJRT
-/// Pallas kernel, when an artifact fits, enumerates the thresholded
-/// pair list and the pool key-sorts it; otherwise the native tiled
-/// front-end (distance kernel + sort + enclosing truncation per the
-/// engine's `f1_tile`/`enclosing` knobs) runs entirely as pool work.
-pub fn build_filtration_pooled(
-    data: &MetricData,
-    tau: f64,
-    runtime: Option<&Runtime>,
-    engine: &Engine,
+    pool: Option<&ThreadPool>,
+    fe: &FrontendOptions,
     fstats: &mut FiltrationStats,
 ) -> (EdgeFiltration, &'static str) {
     if let (MetricData::Points(pc), Some(rt)) = (data, runtime) {
@@ -118,7 +135,7 @@ pub fn build_filtration_pooled(
                     // same cut happens before the key sort — the
                     // accelerated path must not ship a larger edge set
                     // downstream than the native one.
-                    if engine.frontend_options().enclosing
+                    if fe.enclosing
                         && tau == f64::INFINITY
                         && n >= 2
                         && raw.len() == n * (n - 1) / 2
@@ -138,11 +155,11 @@ pub fn build_filtration_pooled(
                             pc.n() as u32,
                             raw,
                             tau_eff,
-                            engine.pool(),
+                            pool,
                             fstats,
                         ),
                         "pjrt-pallas",
-                    )
+                    );
                 }
                 Err(e) => {
                     eprintln!("[dory] PJRT distance path unavailable ({e}); using native");
@@ -151,13 +168,34 @@ pub fn build_filtration_pooled(
         }
     }
     (
-        EdgeFiltration::build_pooled(data, tau, engine.pool(), &engine.frontend_options(), fstats),
+        EdgeFiltration::build_pooled(data, tau, pool, fe, fstats),
         "native",
     )
 }
 
-/// Execute a full configured run.
+/// Execute a full configured run — a thin **deprecated shim** over
+/// [`run_batch`] kept for single-query callers and the existing test
+/// fixtures: the first (usually only) configured query's response is
+/// adapted into the legacy [`RunReport`] shape.
 pub fn run(cfg: &RunConfig) -> Result<RunReport> {
+    let mut batch = run_batch(cfg)?;
+    let first = batch.responses.remove(0);
+    Ok(RunReport {
+        n_points: batch.n_points,
+        n_edges: first.n_edges,
+        edge_source: batch.edge_source,
+        peak_heap_bytes: batch.peak_heap_bytes,
+        pimage: batch.pimage,
+        result: first.result,
+    })
+}
+
+/// Execute every configured query (`[[query]]` array, or the single
+/// `[engine] tau`) over **one** dataset ingest on a [`Session`]. Output
+/// files: per-query diagrams (suffixed `.qN` before the extension when
+/// more than one query runs) and one summary JSON with a `queries`
+/// array plus the session amortization counters.
+pub fn run_batch(cfg: &RunConfig) -> Result<BatchReport> {
     let data = build_dataset(&cfg.dataset)?;
     let runtime = if cfg.use_pjrt {
         match Runtime::load(&cfg.artifacts) {
@@ -192,26 +230,60 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
             _ => Algorithm::FastColumn,
         },
     };
-    // The engine (and its persistent pool) exists before the filtration
-    // is built, so the whole front-end runs as pool work.
-    let engine = Engine::new(opts);
+    // The session (and its persistent pool) exists before the
+    // filtration is built, so the whole front-end runs as pool work —
+    // once, no matter how many queries follow.
+    let mut session = Session::new(opts);
     memtrack::reset_peak();
     let mut timings = PhaseTimer::new();
     let mut fstats = FiltrationStats::default();
     timings.start("F1");
-    let (f, edge_source) =
-        build_filtration_pooled(&data, cfg.tau, runtime.as_ref(), &engine, &mut fstats);
+    let (f, edge_source) = build_filtration(
+        &data,
+        cfg.ingest_tau(),
+        runtime.as_ref(),
+        session.engine().pool(),
+        &session.engine().frontend_options(),
+        &mut fstats,
+    );
     timings.stop();
-    let mut result = engine.compute_with_stats(&f, timings, fstats);
-    result.stats.n = data.n();
+    let handle = session.ingest_filtration(f, timings, fstats, edge_source)?;
+
+    let specs = cfg.effective_queries();
+    let multi = specs.len() > 1;
+    let mut responses = Vec::with_capacity(specs.len());
+    for (i, q) in specs.iter().enumerate() {
+        let req = PhRequest {
+            tau: q.tau,
+            max_dim: q.max_dim,
+            shortcut: q.shortcut,
+            enclosing: q.enclosing,
+            label: q.label.clone(),
+        };
+        let resp = session.query(&handle, &req)?;
+        if let Some(p) = &cfg.diagram_csv {
+            let p = query_path(p, i, multi);
+            ensure_parent(&p)?;
+            io::write_diagram_csv(&p, &resp.result.diagram)?;
+        }
+        if let Some(p) = &cfg.diagram_json {
+            let p = query_path(p, i, multi);
+            ensure_parent(&p)?;
+            io::write_diagram_json(&p, &resp.result.diagram)?;
+        }
+        responses.push(resp);
+    }
     let peak = memtrack::section_peak_bytes();
 
-    // Optional persistence image through the second Pallas kernel.
+    // Optional persistence image (first query) through the second
+    // Pallas kernel.
     let pimage = if cfg.pimage {
         match &runtime {
             Some(rt) if rt.has_pimage_kernel() => {
-                let dim = cfg.max_dim.min(1);
-                let pairs: Vec<(f32, f32, f32)> = result
+                let q0 = &specs[0];
+                let dim = q0.max_dim.unwrap_or(cfg.max_dim).min(1);
+                let pairs: Vec<(f32, f32, f32)> = responses[0]
+                    .result
                     .diagram
                     .finite(dim)
                     .iter()
@@ -231,60 +303,61 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
         None
     };
 
-    if let Some(p) = &cfg.diagram_csv {
-        ensure_parent(p)?;
-        io::write_diagram_csv(p, &result.diagram)?;
-    }
-    if let Some(p) = &cfg.diagram_json {
-        ensure_parent(p)?;
-        io::write_diagram_json(p, &result.diagram)?;
-    }
-    let report = RunReport {
-        n_points: data.n(),
-        n_edges: f.n_edges(),
+    let report = BatchReport {
         edge_source,
+        n_points: handle.n_points(),
+        ingest_edges: handle.n_edges(),
         peak_heap_bytes: peak,
+        ingest_stats: *handle.stats(),
+        session: session.stats(),
+        responses,
         pimage,
-        result,
     };
     if let Some(p) = &cfg.summary_json {
         ensure_parent(p)?;
-        std::fs::write(p, summary_json(cfg, &report).render())?;
+        std::fs::write(p, batch_summary_json(cfg, &report).render())
+            .map_err(|e| DoryError::io(p, e))?;
     }
     Ok(report)
+}
+
+/// `pd.csv` → `pd.q3.csv` when a batch writes one file per query.
+fn query_path(p: &Path, i: usize, multi: bool) -> PathBuf {
+    if !multi {
+        return p.to_path_buf();
+    }
+    match p.extension().and_then(|e| e.to_str()) {
+        Some(ext) => p.with_extension(format!("q{i}.{ext}")),
+        None => PathBuf::from(format!("{}.q{i}", p.display())),
+    }
 }
 
 fn ensure_parent(p: &Path) -> Result<()> {
     if let Some(dir) = p.parent() {
         if !dir.as_os_str().is_empty() {
-            std::fs::create_dir_all(dir).with_context(|| format!("mkdir {dir:?}"))?;
+            std::fs::create_dir_all(dir).map_err(|e| DoryError::io(dir, e))?;
         }
     }
     Ok(())
 }
 
-/// The machine-readable run summary (consumed by benches and EXPERIMENTS).
-pub fn summary_json(cfg: &RunConfig, r: &RunReport) -> Json {
-    let d = &r.result.diagram;
-    let mut betti = Json::arr();
-    for dim in 0..=cfg.max_dim {
-        betti.push(
-            Json::obj()
-                .field("dim", dim)
-                .field("finite", d.finite(dim).len())
-                .field("essential", d.essential_count(dim)),
-        );
+/// The machine-readable run summary (consumed by benches and
+/// EXPERIMENTS): shared-ingest facts at the top level (plus the first
+/// query's legacy fields, so single-query consumers keep working), a
+/// `queries` array with one entry per response, and the session
+/// amortization counters.
+pub fn batch_summary_json(cfg: &RunConfig, r: &BatchReport) -> Json {
+    let first = &r.responses[0];
+    let mut queries = Json::arr();
+    for (i, resp) in r.responses.iter().enumerate() {
+        queries.push(query_json(i, resp));
     }
-    let mut phases = Json::obj();
-    let mut phase_rss = Json::obj();
-    for p in r.result.timings.phases() {
-        phases = phases.field(&p.name, p.duration.as_secs_f64());
-        phase_rss = phase_rss.field(&p.name, p.max_rss_end);
-    }
+    let (phases, phase_rss) = phases_json(&first.result.timings);
     Json::obj()
         .field("n_points", r.n_points)
-        .field("n_edges", r.n_edges)
-        .field("tau", cfg.tau)
+        .field("n_edges", first.n_edges)
+        .field("ingest_edges", r.ingest_edges)
+        .field("tau", first.tau)
         .field("max_dim", cfg.max_dim)
         .field("threads", cfg.threads)
         .field("algorithm", cfg.algorithm.as_str())
@@ -292,21 +365,28 @@ pub fn summary_json(cfg: &RunConfig, r: &RunReport) -> Json {
         .field("edge_source", r.edge_source)
         .field("peak_heap_bytes", r.peak_heap_bytes)
         .field("max_rss_bytes", memtrack::max_rss_bytes())
-        .field("base_memory_model_bytes", r.result.stats.base_memory_bytes)
-        .field("betti", betti)
+        .field(
+            "base_memory_model_bytes",
+            first.result.stats.base_memory_bytes,
+        )
+        .field(
+            "betti",
+            betti_json(&first.result.diagram, first.result.diagram.max_dim()),
+        )
         .field("phase_seconds", phases)
         .field("phase_max_rss_bytes", phase_rss)
-        .field("h1", reduction_json(&r.result.stats.h1))
-        .field("h2", reduction_json(&r.result.stats.h2))
+        .field("h1", reduction_json(&first.result.stats.h1))
+        .field("h2", reduction_json(&first.result.stats.h2))
         .field(
             "filtration",
-            r.result
-                .stats
-                .filtration
+            r.ingest_stats
                 .to_json()
                 .field("f1_tile", cfg.f1_tile)
                 .field("enclosing", cfg.enclosing)
-                .field("front_memory_bytes", r.result.stats.front_memory_bytes),
+                .field(
+                    "front_memory_bytes",
+                    first.result.stats.front_memory_bytes,
+                ),
         )
         .field(
             "scheduler",
@@ -317,9 +397,56 @@ pub fn summary_json(cfg: &RunConfig, r: &RunReport) -> Json {
                 .field("enum_shards", cfg.enum_shards)
                 .field("enum_grain", cfg.enum_grain)
                 .field("shortcut", cfg.shortcut)
-                .field("h1", r.result.stats.h1_sched.to_json())
-                .field("h2", r.result.stats.h2_sched.to_json()),
+                .field("h1", first.result.stats.h1_sched.to_json())
+                .field("h2", first.result.stats.h2_sched.to_json()),
         )
+        .field("session", r.session.to_json())
+        .field("queries", queries)
+}
+
+/// One `queries[]` entry: the per-query JSON report.
+fn query_json(i: usize, resp: &PhResponse) -> Json {
+    let mut q = Json::obj()
+        .field("index", i)
+        .field("tau", resp.tau)
+        .field("tau_effective", resp.tau_effective)
+        .field("n_edges", resp.n_edges)
+        .field("truncated", resp.truncated)
+        .field("max_dim", resp.result.diagram.max_dim())
+        .field(
+            "betti",
+            betti_json(&resp.result.diagram, resp.result.diagram.max_dim()),
+        )
+        .field("phase_seconds", phases_json(&resp.result.timings).0)
+        .field("h1", reduction_json(&resp.result.stats.h1))
+        .field("h2", reduction_json(&resp.result.stats.h2));
+    if let Some(label) = &resp.label {
+        q = q.field("label", label.as_str());
+    }
+    q
+}
+
+fn betti_json(d: &homology::Diagram, max_dim: usize) -> Json {
+    let mut betti = Json::arr();
+    for dim in 0..=max_dim {
+        betti.push(
+            Json::obj()
+                .field("dim", dim)
+                .field("finite", d.finite(dim).len())
+                .field("essential", d.essential_count(dim)),
+        );
+    }
+    betti
+}
+
+fn phases_json(t: &PhaseTimer) -> (Json, Json) {
+    let mut phases = Json::obj();
+    let mut phase_rss = Json::obj();
+    for p in t.phases() {
+        phases = phases.field(&p.name, p.duration.as_secs_f64());
+        phase_rss = phase_rss.field(&p.name, p.max_rss_end);
+    }
+    (phases, phase_rss)
 }
 
 /// Per-dimension reduction counters, including the apparent-pair
@@ -367,8 +494,13 @@ mod tests {
         assert!(s.contains("\"n_points\":80"), "{s}");
         assert!(s.contains("\"filtration\""), "{s}");
         assert!(s.contains("\"edges_pruned\""), "{s}");
+        assert!(s.contains("\"queries\""), "{s}");
+        assert!(s.contains("\"session\""), "{s}");
         // threads = 2: the front-end must have run as pool work.
         assert!(r.result.stats.filtration.tiles > 0, "front-end ran serially");
+        // The ingest-once counters: one build for the run.
+        assert_eq!(r.result.stats.filtration.f1_builds, 1);
+        assert_eq!(r.result.stats.filtration.nb_builds, 1);
     }
 
     #[test]
@@ -406,6 +538,65 @@ mod tests {
     }
 
     #[test]
+    fn batch_run_serves_queries_from_one_ingest() {
+        let dir = std::env::temp_dir().join("dory-coord-batch-test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = RunConfig {
+            dataset: DatasetSpec::Named {
+                kind: "circle".into(),
+                n: 70,
+                seed: 5,
+            },
+            tau: 3.0,
+            max_dim: 1,
+            threads: 2,
+            use_pjrt: false,
+            diagram_csv: Some(dir.join("pd.csv")),
+            summary_json: Some(dir.join("summary.json")),
+            queries: vec![
+                QuerySpec::at(1.0),
+                QuerySpec {
+                    label: Some("full".into()),
+                    ..QuerySpec::at(3.0)
+                },
+            ],
+            ..Default::default()
+        };
+        let b = run_batch(&cfg).unwrap();
+        assert_eq!(b.responses.len(), 2);
+        assert_eq!(b.session.ingests, 1);
+        assert_eq!(b.session.filtration_builds, 1);
+        assert_eq!(b.session.nb_builds, 1);
+        assert_eq!(b.session.queries, 2);
+        assert!(b.responses[0].truncated);
+        assert!(!b.responses[1].truncated);
+        // Per-query diagram files, one summary.
+        assert!(dir.join("pd.q0.csv").is_file());
+        assert!(dir.join("pd.q1.csv").is_file());
+        let s = std::fs::read_to_string(dir.join("summary.json")).unwrap();
+        assert!(s.contains("\"queries\""), "{s}");
+        assert!(s.contains("\"label\":\"full\""), "{s}");
+        // Each query matches an independent single run at its τ.
+        for (i, tau) in [(0usize, 1.0f64), (1, 3.0)] {
+            let single = run(&RunConfig {
+                tau,
+                queries: Vec::new(),
+                diagram_csv: None,
+                summary_json: None,
+                ..cfg.clone()
+            })
+            .unwrap();
+            assert!(
+                b.responses[i]
+                    .result
+                    .diagram
+                    .multiset_eq(&single.result.diagram, 0.0),
+                "query {i} deviates from the independent run at tau={tau}"
+            );
+        }
+    }
+
+    #[test]
     fn all_named_datasets_build() {
         for kind in [
             "circle",
@@ -426,12 +617,13 @@ mod tests {
             let d = build_dataset(&spec).unwrap();
             assert!(d.n() >= 64, "{kind}");
         }
-        assert!(build_dataset(&DatasetSpec::Named {
+        let e = build_dataset(&DatasetSpec::Named {
             kind: "nope".into(),
             n: 10,
-            seed: 1
+            seed: 1,
         })
-        .is_err());
+        .unwrap_err();
+        assert!(matches!(e, DoryError::Dataset(_)), "{e}");
     }
 
     #[test]

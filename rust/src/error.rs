@@ -1,0 +1,116 @@
+//! Typed service errors.
+//!
+//! Every fallible entry point of the service surface —
+//! [`crate::homology::Session`] ingestion and queries, the `io` readers,
+//! the [`crate::coordinator`] — returns a [`DoryError`] instead of
+//! panicking, so a server embedding the crate can branch on the failure
+//! class (reject the request, re-ingest, surface a config diagnostic)
+//! rather than parse panic messages. The legacy one-shot wrappers
+//! (`compute_ph`, `Neighborhoods::build`) keep their panic contract by
+//! unwrapping these same errors, so nothing is reported twice.
+
+use std::fmt;
+
+/// The failure classes of the Dory service surface.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DoryError {
+    /// The metric input itself is unusable (NaN coordinates/distances,
+    /// malformed sparse entries, ragged point files).
+    InvalidInput(String),
+    /// A [`crate::homology::PhRequest`] that no handle state could
+    /// serve (bad `max_dim`, NaN `tau`, an override that contradicts
+    /// how the handle was ingested).
+    Request(String),
+    /// A query asked for a larger filtration than the handle ingested;
+    /// re-ingest at the larger threshold to serve it. `ingested` is the
+    /// handle's effective threshold (the enclosing radius when the
+    /// ingest truncation fired).
+    TauExceedsIngest { requested: f64, ingested: f64 },
+    /// A size guard refused an allocation whose index arithmetic or
+    /// byte count would overflow (the DoryNS dense edge-order table).
+    Overflow(String),
+    /// Run-configuration errors: TOML syntax, unknown keys/sections,
+    /// out-of-range knob values.
+    Config(String),
+    /// Filesystem I/O failures, tagged with the offending path.
+    Io(String),
+    /// Dataset construction failures (unknown kind, bad Hi-C condition).
+    Dataset(String),
+}
+
+impl fmt::Display for DoryError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DoryError::InvalidInput(m) => write!(f, "invalid input: {m}"),
+            DoryError::Request(m) => write!(f, "bad request: {m}"),
+            DoryError::TauExceedsIngest {
+                requested,
+                ingested,
+            } => write!(
+                f,
+                "tau {requested} exceeds the ingested filtration threshold {ingested}; \
+                 re-ingest the dataset at tau >= {requested} to serve this query"
+            ),
+            DoryError::Overflow(m) => write!(f, "{m}"),
+            DoryError::Config(m) => write!(f, "config error: {m}"),
+            DoryError::Io(m) => write!(f, "io error: {m}"),
+            DoryError::Dataset(m) => write!(f, "dataset error: {m}"),
+        }
+    }
+}
+
+/// `std::error::Error` so `?` lifts a [`DoryError`] into `anyhow::Error`
+/// at the CLI boundary (the vendored shim's blanket `From` applies).
+impl std::error::Error for DoryError {}
+
+impl From<std::io::Error> for DoryError {
+    fn from(e: std::io::Error) -> Self {
+        DoryError::Io(e.to_string())
+    }
+}
+
+impl DoryError {
+    /// Tag an I/O failure with the path it concerned.
+    pub fn io(path: &std::path::Path, e: impl fmt::Display) -> Self {
+        DoryError::Io(format!("{path:?}: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn displays_are_actionable() {
+        let e = DoryError::TauExceedsIngest {
+            requested: 0.9,
+            ingested: 0.5,
+        };
+        let s = e.to_string();
+        assert!(s.contains("0.9") && s.contains("0.5") && s.contains("re-ingest"), "{s}");
+        assert!(DoryError::Config("x".into()).to_string().contains("config"));
+        assert!(DoryError::io(std::path::Path::new("/nope"), "gone")
+            .to_string()
+            .contains("/nope"));
+    }
+
+    #[test]
+    fn converts_into_anyhow_for_the_cli() {
+        fn f() -> anyhow::Result<()> {
+            let typed: Result<(), DoryError> =
+                Err(DoryError::Dataset("unknown kind".into()));
+            typed?;
+            Ok(())
+        }
+        let e = f().unwrap_err();
+        assert!(format!("{e}").contains("unknown kind"));
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let e: DoryError = std::fs::read_to_string("/definitely/not/here")
+            .map_err(DoryError::from)
+            .unwrap_err();
+        assert!(matches!(e, DoryError::Io(_)));
+    }
+}

@@ -99,6 +99,14 @@ pub struct FiltrationStats {
     /// `r_enc = min_i max_j d(i, j)` when the truncation ran; +∞ when it
     /// was off or inapplicable.
     pub enclosing_radius: f64,
+    /// Full F1 builds recorded into this stats object (distance pass +
+    /// key sort). The session layer's "ingest once" guarantee is pinned
+    /// on this counter: a batch of N queries over one
+    /// [`crate::homology::FiltrationHandle`] leaves it at 1.
+    pub f1_builds: u64,
+    /// `Neighborhoods` CSR builds recorded into this stats object; the
+    /// session counterpart of `f1_builds`.
+    pub nb_builds: u64,
 }
 
 impl Default for FiltrationStats {
@@ -114,6 +122,8 @@ impl Default for FiltrationStats {
             edges_kept: 0,
             edges_pruned: 0,
             enclosing_radius: f64::INFINITY,
+            f1_builds: 0,
+            nb_builds: 0,
         }
     }
 }
@@ -132,6 +142,8 @@ impl FiltrationStats {
             .field("edges_kept", self.edges_kept as f64)
             .field("edges_pruned", self.edges_pruned as f64)
             .field("enclosing_radius", self.enclosing_radius)
+            .field("f1_builds", self.f1_builds as f64)
+            .field("nb_builds", self.nb_builds as f64)
     }
 }
 
@@ -222,6 +234,7 @@ impl EdgeFiltration {
     ) -> Self {
         let n = data.n();
         assert!(n < u32::MAX as usize, "vertex count must fit u32");
+        stats.f1_builds += 1;
         let t0 = Instant::now();
         // Enclosing-radius truncation: with no cap requested (tau must
         // be exactly +inf — a caller asking for tau = -inf wants an
@@ -290,6 +303,7 @@ impl EdgeFiltration {
         pool: Option<&ThreadPool>,
         stats: &mut FiltrationStats,
     ) -> Self {
+        stats.f1_builds += 1;
         let t0 = Instant::now();
         let mut keys: Vec<u128> = Vec::with_capacity(raw.len());
         for &(d, a, b) in &raw {
@@ -354,6 +368,34 @@ impl EdgeFiltration {
 
     pub fn n_edges(&self) -> usize {
         self.edges.len()
+    }
+
+    /// Number of edges with value `<= tau` — the length of the sorted
+    /// prefix a sub-τ query is served from. Edges are sorted ascending
+    /// by (value, a, b), so the kept set of any `tau <= tau_max` is
+    /// exactly a prefix of this filtration.
+    pub fn prefix_len(&self, tau: f64) -> usize {
+        self.values.partition_point(|&v| v <= tau)
+    }
+
+    /// The sub-filtration of the first `m` edges (those with value
+    /// `<= tau_eff`), as an owned copy of the prefix. No distance is
+    /// recomputed and nothing is re-sorted, so the arrays are bit-equal
+    /// to a fresh `build(data, tau_eff)` of the same input — the
+    /// session layer's sub-τ query path. The copy is a deliberate
+    /// tradeoff: O(m) memcpy per query (the reduction reads
+    /// `edges`/`values` as plain arrays throughout the engine) against
+    /// the O(n² + m log m) rebuild it replaces; `Arc`-backed prefix
+    /// views, as `Neighborhoods::truncated` already does for the CSR,
+    /// are the follow-up if the copy ever shows up in service profiles.
+    pub fn prefix(&self, m: usize, tau_eff: f64) -> EdgeFiltration {
+        debug_assert!(m <= self.n_edges());
+        EdgeFiltration {
+            n: self.n,
+            edges: self.edges[..m].to_vec(),
+            values: self.values[..m].to_vec(),
+            tau_max: tau_eff,
+        }
     }
 
     /// Filtration value of a triangle/tetrahedron key = value of its diameter.
@@ -451,19 +493,51 @@ fn rowmax_rows(data: &MetricData, rows: std::ops::Range<usize>, row_max: &mut [f
     }
 }
 
-/// `min_i max_j d(i, j)` from a **complete** weighted pair list (every
-/// unordered pair present exactly once) — the shape the PJRT distance
-/// kernel returns at `τ = +∞`. The coordinator uses this to apply the
-/// enclosing-radius truncation to accelerator-produced edge lists
-/// before they are key-sorted. NaN entries are ignored.
-pub fn enclosing_radius_of_edges(n: usize, edges: &[(f64, u32, u32)]) -> f64 {
-    debug_assert_eq!(edges.len(), n * (n.saturating_sub(1)) / 2);
+/// The one row-max sweep behind every query/kernel-side enclosing
+/// radius: `min_i max_j d(i, j)` over a complete unordered pair list.
+/// `f64::max`/`min` over a fixed multiset are order-independent, so the
+/// result is bit-equal to the build-time tiled sweep regardless of the
+/// pair order the caller iterates in. NaN entries are ignored.
+fn enclosing_radius_from_pairs(
+    n: usize,
+    pairs: impl Iterator<Item = (f64, u32, u32)>,
+) -> f64 {
     let mut row_max = vec![f64::NEG_INFINITY; n];
-    for &(d, a, b) in edges {
+    for (d, a, b) in pairs {
         row_max[a as usize] = row_max[a as usize].max(d);
         row_max[b as usize] = row_max[b as usize].max(d);
     }
     row_max.into_iter().fold(f64::INFINITY, f64::min)
+}
+
+/// `min_i max_j d(i, j)` from a **complete** weighted pair list (every
+/// unordered pair present exactly once) — the shape the PJRT distance
+/// kernel returns at `τ = +∞`. The coordinator uses this to apply the
+/// enclosing-radius truncation to accelerator-produced edge lists
+/// before they are key-sorted.
+pub fn enclosing_radius_of_edges(n: usize, edges: &[(f64, u32, u32)]) -> f64 {
+    debug_assert_eq!(edges.len(), n * (n.saturating_sub(1)) / 2);
+    enclosing_radius_from_pairs(n, edges.iter().copied())
+}
+
+/// `min_i max_j d(i, j)` over a **complete** built filtration (every
+/// unordered pair kept, i.e. built at `τ = +∞` without the enclosing
+/// truncation), so a session can apply the truncation at *query* time
+/// to a handle that ingested the full filtration — bit-equal to the
+/// build-time sweep (see [`enclosing_radius_from_pairs`]). Returns +∞
+/// when the edge list is not the complete pair list.
+pub fn enclosing_radius_of_filtration(f: &EdgeFiltration) -> f64 {
+    let n = f.n as usize;
+    if n < 2 || f.n_edges() != n * (n - 1) / 2 {
+        return f64::INFINITY;
+    }
+    enclosing_radius_from_pairs(
+        n,
+        f.edges
+            .iter()
+            .zip(&f.values)
+            .map(|(&(a, b), &d)| (d, a, b)),
+    )
 }
 
 /// The thresholded distance pass: every candidate pair with `d <= tau`
@@ -944,6 +1018,61 @@ mod tests {
             assert!(stats.enclosing_radius.is_infinite());
             assert_eq!(stats.edges_pruned, 0);
         }
+    }
+
+    #[test]
+    fn prefix_is_bit_equal_to_fresh_build() {
+        use crate::util::rng::Pcg32;
+        let mut rng = Pcg32::new(0xF00D);
+        let pc = PointCloud::new(3, (0..30 * 3).map(|_| rng.next_f64()).collect());
+        let md = MetricData::Points(pc);
+        let full = EdgeFiltration::build(&md, 1.2);
+        for tau in [0.0, 0.3, 0.55, 0.8, 1.2] {
+            let m = full.prefix_len(tau);
+            let p = full.prefix(m, tau);
+            let fresh = EdgeFiltration::build(&md, tau);
+            assert_eq!(p.edges, fresh.edges, "tau={tau}");
+            let pb: Vec<u64> = p.values.iter().map(|v| v.to_bits()).collect();
+            let fb: Vec<u64> = fresh.values.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(pb, fb, "tau={tau}");
+            assert_eq!(p.tau_max, tau);
+        }
+        assert_eq!(full.prefix_len(f64::NEG_INFINITY), 0);
+        assert_eq!(full.prefix_len(f64::INFINITY), full.n_edges());
+    }
+
+    #[test]
+    fn enclosing_radius_of_filtration_matches_build_time_sweep() {
+        let md = MetricData::Points(PointCloud::new(
+            2,
+            vec![0.0, 0.0, 1.0, 0.0, 1.0, 1.0, 0.0, 1.0, 5.0, 0.0],
+        ));
+        // Build-time radius (the row-max sweep over the metric).
+        let mut stats = FiltrationStats::default();
+        let fe = FrontendOptions::default();
+        let truncated = EdgeFiltration::build_pooled(&md, f64::INFINITY, None, &fe, &mut stats);
+        // Query-time radius (derived from the complete built filtration).
+        let full = EdgeFiltration::build(&md, f64::INFINITY);
+        let r = enclosing_radius_of_filtration(&full);
+        assert_eq!(r.to_bits(), stats.enclosing_radius.to_bits());
+        // Prefix at r must equal the build-time-truncated edge set.
+        let p = full.prefix(full.prefix_len(r), r);
+        assert_eq!(p.edges, truncated.edges);
+        // Not a complete pair list -> inapplicable.
+        assert!(enclosing_radius_of_filtration(&p).is_infinite());
+    }
+
+    #[test]
+    fn build_counters_count_builds() {
+        let mut stats = FiltrationStats::default();
+        let fe = FrontendOptions::default();
+        let f = EdgeFiltration::build_pooled(&square_cloud(), 2.0, None, &fe, &mut stats);
+        assert_eq!(stats.f1_builds, 1);
+        assert_eq!(stats.nb_builds, 0);
+        let _ = Neighborhoods::build_pooled(&f, false, None, &mut stats);
+        assert_eq!(stats.nb_builds, 1);
+        let _ = EdgeFiltration::build_pooled(&square_cloud(), 2.0, None, &fe, &mut stats);
+        assert_eq!(stats.f1_builds, 2);
     }
 
     #[test]

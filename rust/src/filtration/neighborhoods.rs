@@ -20,25 +20,38 @@
 //! turn into deterministic per-chunk write cursors, so every vertex run
 //! still comes out sorted by edge order regardless of steal schedule.
 
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use super::{EdgeFiltration, FiltrationStats};
+use crate::error::DoryError;
 use crate::reduction::pool::{SharedSlice, ThreadPool};
 
+/// The CSR arrays are `Arc`-shared so a [`Neighborhoods::truncated`]
+/// view — the session layer's sub-τ query path — costs O(n) (per-vertex
+/// `E^a` cut positions) instead of an array rebuild. A view hides every
+/// edge with order `>= cap` behind the same accessors: `edge_order`
+/// filters, `en` returns the per-vertex prefix (runs are sorted by
+/// order), and `vn` stays full because its consumers re-check orders
+/// against the column's own order, which is below any cap.
 #[derive(Clone, Debug)]
 pub struct Neighborhoods {
     pub n: u32,
-    off: Vec<u32>,
+    off: Arc<Vec<u32>>,
     // Vertex-neighborhood arrays (sorted by neighbor id within a vertex).
-    vn_vtx: Vec<u32>,
-    vn_ord: Vec<u32>,
+    vn_vtx: Arc<Vec<u32>>,
+    vn_ord: Arc<Vec<u32>>,
     // Edge-neighborhood arrays (sorted by edge order within a vertex).
-    en_ord: Vec<u32>,
-    en_vtx: Vec<u32>,
+    en_ord: Arc<Vec<u32>>,
+    en_vtx: Arc<Vec<u32>>,
     /// DoryNS: packed strict-lower-triangular `n(n-1)/2` table of edge
     /// orders (`u32::MAX` = edge absent from the filtration).
-    dense: Option<Vec<u32>>,
+    dense: Option<Arc<Vec<u32>>>,
+    /// Edge orders `>= cap` are treated as absent (truncated views);
+    /// `NO_EDGE` = no cap. Real orders never reach `u32::MAX`.
+    cap: u32,
+    /// Per-vertex `E^a` run lengths under `cap` (`None` = full runs).
+    en_len: Option<Arc<Vec<u32>>>,
 }
 
 pub const NO_EDGE: u32 = u32::MAX;
@@ -48,16 +61,21 @@ pub const NO_EDGE: u32 = u32::MAX;
 /// allocation would overflow. The cap also guarantees `hi * (hi - 1)`
 /// in [`Neighborhoods::edge_order`] can never wrap: it is bounded by
 /// `2 * slots`.
-fn dense_table_slots(n: usize) -> usize {
+fn dense_table_slots(n: usize) -> Result<usize, DoryError> {
     match n.checked_mul(n.saturating_sub(1)).map(|x| x / 2) {
-        Some(slots) if slots <= (isize::MAX as usize) / 8 => slots,
-        _ => panic!(
+        Some(slots) if slots <= (isize::MAX as usize) / 8 => Ok(slots),
+        _ => Err(DoryError::Overflow(format!(
             "Neighborhoods: the DoryNS dense edge-order table for n = {n} needs \
              n(n-1)/2 packed-triangular entries, which overflows the index space \
              or the allocation limit on this platform; use the sparse lookup \
              (dense_lookup = false / drop --ns)"
-        ),
+        ))),
     }
+}
+
+/// [`dense_table_slots`] after the build-entry guard already passed.
+fn dense_slots_guarded(n: usize) -> usize {
+    dense_table_slots(n).expect("guarded at build entry")
 }
 
 impl Neighborhoods {
@@ -72,16 +90,33 @@ impl Neighborhoods {
     /// when a pool is given. Output arrays are byte-identical to
     /// [`Self::build`] for every pool size, chunk plan and steal
     /// schedule; `stats` records the CSR phase time and chunk count.
+    /// Panicking compatibility wrapper over [`Self::try_build_pooled`]
+    /// (the session layer takes the typed-error path instead).
     pub fn build_pooled(
         f: &EdgeFiltration,
         dense_lookup: bool,
         pool: Option<&ThreadPool>,
         stats: &mut FiltrationStats,
     ) -> Self {
+        match Self::try_build_pooled(f, dense_lookup, pool, stats) {
+            Ok(nb) => nb,
+            Err(e) => panic!("{e}"),
+        }
+    }
+
+    /// [`Self::build_pooled`] with the infeasible-size guard surfaced
+    /// as a typed [`DoryError::Overflow`] instead of a panic.
+    pub fn try_build_pooled(
+        f: &EdgeFiltration,
+        dense_lookup: bool,
+        pool: Option<&ThreadPool>,
+        stats: &mut FiltrationStats,
+    ) -> Result<Self, DoryError> {
         if dense_lookup {
             // Refuse infeasible DoryNS sizes before any allocation.
-            dense_table_slots(f.n as usize);
+            dense_table_slots(f.n as usize)?;
         }
+        stats.nb_builds += 1;
         let t0 = Instant::now();
         let out = match pool {
             Some(pool) if pool.threads() > 1 && f.n_edges() > 0 => {
@@ -90,7 +125,35 @@ impl Neighborhoods {
             _ => Self::build_serial(f, dense_lookup),
         };
         stats.nb_ns += t0.elapsed().as_nanos() as u64;
-        out
+        Ok(out)
+    }
+
+    /// A view of this structure restricted to edge orders `< cap` — the
+    /// neighborhoods of the prefix sub-filtration, without rebuilding
+    /// any CSR array (the arrays are `Arc`-shared; only the per-vertex
+    /// `E^a` cut positions are computed, O(n log deg)). Every accessor
+    /// of the view behaves exactly as if built from
+    /// [`EdgeFiltration::prefix`]`(cap)`: capped orders are absent from
+    /// `edge_order` and `en`, and `vn` consumers re-check orders.
+    pub fn truncated(&self, cap: u32) -> Neighborhoods {
+        let cap = cap.min(self.cap);
+        let n = self.n as usize;
+        let mut en_len = Vec::with_capacity(n);
+        for a in 0..n {
+            let (s, e) = (self.off[a] as usize, self.off[a + 1] as usize);
+            en_len.push(self.en_ord[s..e].partition_point(|&o| o < cap) as u32);
+        }
+        Neighborhoods {
+            n: self.n,
+            off: Arc::clone(&self.off),
+            vn_vtx: Arc::clone(&self.vn_vtx),
+            vn_ord: Arc::clone(&self.vn_ord),
+            en_ord: Arc::clone(&self.en_ord),
+            en_vtx: Arc::clone(&self.en_vtx),
+            dense: self.dense.clone(),
+            cap,
+            en_len: Some(Arc::new(en_len)),
+        }
     }
 
     fn build_serial(f: &EdgeFiltration, dense_lookup: bool) -> Self {
@@ -140,24 +203,26 @@ impl Neighborhoods {
         }
 
         let dense = if dense_lookup {
-            let mut tbl = vec![NO_EDGE; dense_table_slots(n)];
+            let mut tbl = vec![NO_EDGE; dense_slots_guarded(n)];
             for (o, &(a, b)) in f.edges.iter().enumerate() {
                 let (hi, lo) = (b as usize, a as usize);
                 tbl[hi * (hi - 1) / 2 + lo] = o as u32;
             }
-            Some(tbl)
+            Some(Arc::new(tbl))
         } else {
             None
         };
 
         Self {
             n: f.n,
-            off,
-            vn_vtx,
-            vn_ord,
-            en_ord,
-            en_vtx,
+            off: Arc::new(off),
+            vn_vtx: Arc::new(vn_vtx),
+            vn_ord: Arc::new(vn_ord),
+            en_ord: Arc::new(en_ord),
+            en_vtx: Arc::new(en_vtx),
             dense,
+            cap: NO_EDGE,
+            en_len: None,
         }
     }
 
@@ -284,7 +349,7 @@ impl Neighborhoods {
 
         // DoryNS table: one unique slot per edge, scattered in chunks.
         let dense = if dense_lookup {
-            let mut tbl = vec![NO_EDGE; dense_table_slots(n)];
+            let mut tbl = vec![NO_EDGE; dense_slots_guarded(n)];
             {
                 let st = SharedSlice::new(&mut tbl);
                 let grain = ne.div_ceil(threads * 8).max(1);
@@ -297,7 +362,7 @@ impl Neighborhoods {
                     }
                 });
             }
-            Some(tbl)
+            Some(Arc::new(tbl))
         } else {
             None
         };
@@ -305,12 +370,14 @@ impl Neighborhoods {
         stats.nb_chunks += n_chunks as u64;
         Self {
             n: f.n,
-            off,
-            vn_vtx,
-            vn_ord,
-            en_ord,
-            en_vtx,
+            off: Arc::new(off),
+            vn_vtx: Arc::new(vn_vtx),
+            vn_ord: Arc::new(vn_ord),
+            en_ord: Arc::new(en_ord),
+            en_vtx: Arc::new(en_vtx),
             dense,
+            cap: NO_EDGE,
+            en_len: None,
         }
     }
 
@@ -327,21 +394,30 @@ impl Neighborhoods {
     }
 
     /// `E^a` as `(edge orders, neighbor ids)`, sorted by edge order.
+    /// Truncated views return the per-vertex prefix below the cap (runs
+    /// are sorted by order, so the cut is a precomputed prefix length).
     #[inline]
     pub fn en(&self, a: u32) -> (&[u32], &[u32]) {
-        let (s, e) = (self.off[a as usize] as usize, self.off[a as usize + 1] as usize);
+        let s = self.off[a as usize] as usize;
+        let e = match &self.en_len {
+            Some(len) => s + len[a as usize] as usize,
+            None => self.off[a as usize + 1] as usize,
+        };
         (&self.en_ord[s..e], &self.en_vtx[s..e])
     }
 
     /// Order of edge `{a, b}` if present. The §4.6 hot path: O(1) with the
     /// dense table, binary search in the smaller neighborhood otherwise.
+    /// Truncated views report capped orders as absent.
     #[inline]
     pub fn edge_order(&self, a: u32, b: u32) -> Option<u32> {
         debug_assert_ne!(a, b);
         if let Some(tbl) = &self.dense {
             let (hi, lo) = if a > b { (a as usize, b as usize) } else { (b as usize, a as usize) };
             let o = tbl[hi * (hi - 1) / 2 + lo];
-            return if o == NO_EDGE { None } else { Some(o) };
+            // `NO_EDGE >= cap` always, so one compare covers both the
+            // absent sentinel and truncated-view filtering.
+            return if o >= self.cap { None } else { Some(o) };
         }
         let (qa, qb) = if self.degree(a) <= self.degree(b) {
             (a, b)
@@ -350,8 +426,8 @@ impl Neighborhoods {
         };
         let (vtx, ord) = self.vn(qa);
         match vtx.binary_search(&qb) {
-            Ok(i) => Some(ord[i]),
-            Err(_) => None,
+            Ok(i) if ord[i] < self.cap => Some(ord[i]),
+            _ => None,
         }
     }
 
@@ -374,13 +450,16 @@ impl Neighborhoods {
     }
 
     /// Measured heap bytes of the structure (paper App. E base memory).
+    /// Truncated views share the backing arrays with their parent, so
+    /// they report the full arrays plus their own O(n) cut table.
     pub fn memory_bytes(&self) -> usize {
         4 * (self.off.len()
             + self.vn_vtx.len()
             + self.vn_ord.len()
             + self.en_ord.len()
             + self.en_vtx.len()
-            + self.dense.as_ref().map_or(0, |d| d.len()))
+            + self.dense.as_ref().map_or(0, |d| d.len())
+            + self.en_len.as_ref().map_or(0, |l| l.len()))
     }
 }
 
@@ -483,6 +562,85 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn truncated_view_equals_rebuilt_prefix() {
+        use crate::geometry::MetricData;
+        use crate::util::rng::Pcg32;
+        for seed in 0..4u64 {
+            let mut rng = Pcg32::new(0xBEEF + seed);
+            let n = 12 + rng.gen_range(20) as usize;
+            let pc = PointCloud::new(3, (0..n * 3).map(|_| rng.next_f64()).collect());
+            let md = MetricData::Points(pc);
+            let f = EdgeFiltration::build(&md, 1.1);
+            for dense in [false, true] {
+                let full = Neighborhoods::build(&f, dense);
+                for cap_frac in [0usize, 1, 2, 3] {
+                    let m = f.n_edges() * cap_frac / 3;
+                    let view = full.truncated(m as u32);
+                    let fp = f.prefix(m, f.values.get(m.wrapping_sub(1)).copied().unwrap_or(0.0));
+                    let want = Neighborhoods::build(&fp, dense);
+                    // edge_order agrees with the rebuilt prefix on every
+                    // vertex pair (capped orders absent).
+                    for a in 0..f.n {
+                        for b in (a + 1)..f.n {
+                            assert_eq!(
+                                view.edge_order(a, b),
+                                want.edge_order(a, b),
+                                "seed={seed} dense={dense} m={m} ({a},{b})"
+                            );
+                        }
+                        // E^a runs agree element-wise.
+                        let (vo, vv) = view.en(a);
+                        let (wo, wv) = want.en(a);
+                        assert_eq!(vo, wo, "seed={seed} dense={dense} m={m} E^{a} orders");
+                        assert_eq!(vv, wv, "seed={seed} dense={dense} m={m} E^{a} vertices");
+                        // en_lower_bound probes agree for every in-range order.
+                        for probe in [0u32, (m as u32) / 2, m as u32] {
+                            assert_eq!(
+                                view.en_lower_bound(a, probe),
+                                want.en_lower_bound(a, probe),
+                                "seed={seed} m={m} probe={probe}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn truncated_view_is_cheap_and_idempotent() {
+        let f = fixture();
+        let nb = Neighborhoods::build(&f, false);
+        let v2 = nb.truncated(2);
+        // Re-truncating a view tightens, never widens.
+        let v1 = v2.truncated(3);
+        for a in 0..f.n {
+            let (ord, _) = v1.en(a);
+            assert!(ord.iter().all(|&o| o < 2), "cap must not widen");
+        }
+        assert!(v2.memory_bytes() >= nb.memory_bytes(), "view adds its cut table");
+    }
+
+    #[test]
+    fn try_build_reports_overflow_as_typed_error() {
+        let f = EdgeFiltration {
+            n: u32::MAX - 2,
+            edges: Vec::new(),
+            values: Vec::new(),
+            tau_max: 1.0,
+        };
+        let e = Neighborhoods::try_build_pooled(
+            &f,
+            true,
+            None,
+            &mut FiltrationStats::default(),
+        )
+        .unwrap_err();
+        assert!(matches!(e, crate::error::DoryError::Overflow(_)), "{e}");
+        assert!(e.to_string().contains("DoryNS dense edge-order table"));
     }
 
     #[test]

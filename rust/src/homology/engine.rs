@@ -372,16 +372,57 @@ impl Engine {
         timings: PhaseTimer,
         fstats: FiltrationStats,
     ) -> PhResult {
-        self.compute_timed(f, timings, fstats)
+        let (nb, timings, fstats) = self
+            .prepare(f, timings, fstats)
+            .unwrap_or_else(|e| panic!("{e}"));
+        self.compute_prepared(f, &nb, timings, fstats, &self.opts)
     }
 
-    fn compute_timed(
+    /// The shared front-end finish every entry path runs exactly once
+    /// per build: record the F1 sub-phase breakdown and build the
+    /// `Neighborhoods` CSR (pooled) under its own phase. One
+    /// implementation serves both the one-shot wrappers (which unwrap)
+    /// and the session ingest (which propagates the typed error).
+    pub fn prepare(
         &self,
         f: &EdgeFiltration,
         mut timings: PhaseTimer,
         mut fstats: FiltrationStats,
+    ) -> Result<(Neighborhoods, PhaseTimer, FiltrationStats), crate::error::DoryError> {
+        // Sub-phase records for the front-end breakdown ('/' names are
+        // excluded from PhaseTimer::total, so F1 is not double-counted).
+        if fstats.dist_ns > 0 || fstats.sort_ns > 0 {
+            timings.record("F1/dist", std::time::Duration::from_nanos(fstats.dist_ns));
+            timings.record("F1/sort", std::time::Duration::from_nanos(fstats.sort_ns));
+        }
+        timings.start("neighborhoods");
+        let nb = Neighborhoods::try_build_pooled(
+            f,
+            self.opts.dense_lookup,
+            self.pool(),
+            &mut fstats,
+        )?;
+        timings.stop();
+        Ok((nb, timings, fstats))
+    }
+
+    /// The reduction pipeline (H0 → H1* → H2*) over a filtration whose
+    /// `Neighborhoods` the caller already holds — the session layer's
+    /// entry: one handle's CSR serves many queries, with `opts` carrying
+    /// per-request knob overrides (`max_dim`, `shortcut`, scheduler
+    /// knobs; `threads`/`algorithm` stay engine-level, the persistent
+    /// pool is `self`'s). `fstats` is carried into the result verbatim —
+    /// for session queries it is the *shared ingest's* front-end report,
+    /// not per-query work (its `f1_builds`/`nb_builds` counters pin the
+    /// ingest-once guarantee).
+    pub fn compute_prepared(
+        &self,
+        f: &EdgeFiltration,
+        nb: &Neighborhoods,
+        mut timings: PhaseTimer,
+        fstats: FiltrationStats,
+        opts: &EngineOptions,
     ) -> PhResult {
-        let opts = &self.opts;
         let mut stats = EngineStats {
             n: f.n as usize,
             n_edges: f.n_edges(),
@@ -389,17 +430,6 @@ impl Engine {
             ..Default::default()
         };
         let mut diagram = Diagram::new(opts.max_dim);
-
-        // Sub-phase records for the front-end breakdown ('/' names are
-        // excluded from PhaseTimer::total, so F1 is not double-counted).
-        if fstats.dist_ns > 0 || fstats.sort_ns > 0 {
-            timings.record("F1/dist", std::time::Duration::from_nanos(fstats.dist_ns));
-            timings.record("F1/sort", std::time::Duration::from_nanos(fstats.sort_ns));
-        }
-
-        timings.start("neighborhoods");
-        let nb = Neighborhoods::build_pooled(f, opts.dense_lookup, self.pool(), &mut fstats);
-        timings.stop();
         stats.filtration = fstats;
         stats.front_memory_bytes = f.memory_bytes() + nb.memory_bytes();
 
@@ -422,7 +452,7 @@ impl Engine {
         if opts.max_dim >= 1 {
             // ---- H1* ----------------------------------------------------
             timings.start("H1*");
-            let space = EdgeColumns::new(&nb, f);
+            let space = EdgeColumns::new(nb, f);
             let ne = f.n_edges();
             let h1_src = H1Shards {
                 negative: &h0r.negative,
@@ -434,7 +464,7 @@ impl Engine {
             // the dim-2 clearing set. (Trivial pairs are not stored, so
             // in-shard shortcut columns feed dim-2 clearing through
             // `smallest_tri` exactly as before.)
-            let mut res = self.run_reduction(&space, &h1_src, true, f);
+            let mut res = self.run_reduction(&space, &h1_src, true, f, opts);
             let h1_skipped = h1_src.skipped.load(Ordering::Relaxed);
             res.stats.shortcut_pairs = h1_skipped;
             res.stats.trivial_pairs += h1_skipped;
@@ -463,9 +493,9 @@ impl Engine {
                 timings.start("H2*");
                 let h1_deaths: HashSet<u64> =
                     res.pairs.iter().map(|&(_, k)| k.pack()).collect();
-                let tspace = TriangleColumns::new(&nb, f);
+                let tspace = TriangleColumns::new(nb, f);
                 let h2_src = H2Shards {
-                    nb: &nb,
+                    nb,
                     f,
                     smallest_tri: &space.smallest_tri,
                     h1_deaths: &h1_deaths,
@@ -474,7 +504,7 @@ impl Engine {
                     cleared: AtomicUsize::new(0),
                     skipped: AtomicUsize::new(0),
                 };
-                let mut res2 = self.run_reduction(&tspace, &h2_src, false, f);
+                let mut res2 = self.run_reduction(&tspace, &h2_src, false, f, opts);
                 let h2_skipped = h2_src.skipped.load(Ordering::Relaxed);
                 res2.stats.shortcut_pairs = h2_skipped;
                 res2.stats.trivial_pairs += h2_skipped;
@@ -510,8 +540,8 @@ impl Engine {
         src: &Src,
         keep_zero_pairs: bool,
         f: &EdgeFiltration,
+        opts: &EngineOptions,
     ) -> ReduceResult {
-        let opts = &self.opts;
         // Column birth value: for edges the id *is* the order; for
         // triangles the id is a packed key whose primary carries the
         // value. Both cases are covered by inspecting the id width: edge
@@ -564,16 +594,52 @@ impl Engine {
 }
 
 /// Compute PH of a metric input up to `opts.max_dim` with threshold
-/// `tau`, on a transient [`Engine`].
+/// `tau`, on a transient one-query [`super::Session`].
+///
+/// **Deprecated shim** (kept so existing tests and fixtures pin
+/// behavior): every call pays a full ingest — filtration, CSR, pool
+/// spin-up. Services answering more than one query should hold a
+/// [`super::Session`], [`super::Session::ingest`] once, and query the
+/// handle; fallible paths then surface as typed
+/// [`crate::error::DoryError`]s instead of the panics this wrapper
+/// re-raises.
 pub fn compute_ph(data: &MetricData, tau: f64, opts: &EngineOptions) -> PhResult {
-    Engine::new(opts.clone()).compute_metric(data, tau)
+    let mut session = super::Session::new(opts.clone());
+    let handle = session
+        .ingest(data, tau)
+        .unwrap_or_else(|e| panic!("{e}"));
+    session
+        .query(&handle, &super::PhRequest::at(tau))
+        .unwrap_or_else(|e| panic!("{e}"))
+        .result
 }
 
 /// Compute PH from a pre-built edge filtration, on a transient
-/// [`Engine`]. Callers computing many filtrations should hold an
-/// [`Engine`] instead to reuse its worker pool.
+/// one-query [`super::Session`].
+///
+/// **Deprecated shim**: copies the filtration into a throwaway handle
+/// and queries its full capacity. Assumes the documented
+/// [`EdgeFiltration::from_weighted_edges`] contract (every edge value
+/// `<= tau_max`), under which the capacity query serves the whole edge
+/// set. Callers computing many filtrations (or many τ on one
+/// filtration) should hold a [`super::Session`] and use
+/// [`super::Session::ingest_filtration`] to keep the pool and the CSR
+/// alive across queries.
 pub fn compute_ph_from_filtration(f: &EdgeFiltration, opts: &EngineOptions) -> PhResult {
-    Engine::new(opts.clone()).compute(f)
+    let mut session = super::Session::new(opts.clone());
+    let handle = session
+        .ingest_filtration(
+            f.clone(),
+            PhaseTimer::new(),
+            FiltrationStats::default(),
+            "caller",
+        )
+        .unwrap_or_else(|e| panic!("{e}"));
+    let tau = handle.tau_capacity();
+    session
+        .query(&handle, &super::PhRequest::at(tau))
+        .unwrap_or_else(|e| panic!("{e}"))
+        .result
 }
 
 /// Count simplices of the flag complex (Table 1's `N` column).

@@ -1,12 +1,17 @@
-//! The full PH pipeline: H0 (union-find) → H1* → H2* with clearing.
+//! The full PH pipeline: H0 (union-find) → H1* → H2* with clearing,
+//! served either one-shot (`compute_ph*`, deprecated shims) or through
+//! the [`Session`] service API (ingest once, answer many typed
+//! [`PhRequest`]s from the shared build).
 
 pub mod analysis;
 pub mod diagram;
 pub mod engine;
 pub mod h0;
 pub mod representatives;
+pub mod session;
 
 pub use diagram::Diagram;
 pub use engine::{
     compute_ph, compute_ph_from_filtration, Algorithm, Engine, EngineOptions, PhResult,
 };
+pub use session::{FiltrationHandle, PhRequest, PhResponse, Session, SessionStats};

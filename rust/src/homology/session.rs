@@ -1,0 +1,556 @@
+//! Session-oriented service API: ingest a dataset once, answer a
+//! stream of PH queries from the shared build.
+//!
+//! The one-shot entry points (`compute_ph`, `coordinator::run`) rebuild
+//! the edge filtration, the `Neighborhoods` CSR and — without a held
+//! [`Engine`] — the worker pool on every call, even though those builds
+//! are the shared, amortizable cost across queries on the same dataset.
+//! A [`Session`] holds the persistent engine (and its pool) and splits
+//! the pipeline at the natural seam:
+//!
+//! * [`Session::ingest`] runs the front-end once — pooled distance
+//!   tiles, key sort, optional enclosing-radius truncation, pooled CSR
+//!   fill, DoryNS table — into a [`FiltrationHandle`];
+//! * [`Session::query`] / [`Session::run_batch`] answer typed
+//!   [`PhRequest`]s against a handle. A sub-τ request is served by
+//!   **prefix-truncating the shared sorted edge set**
+//!   ([`EdgeFiltration::prefix`]) and viewing the shared CSR through an
+//!   order cap ([`Neighborhoods::truncated`]) — no distance is
+//!   recomputed, nothing is re-sorted, no CSR array is rebuilt — yet
+//!   the reduction consumes byte-for-byte the stream a fresh build at
+//!   that τ would produce, so diagrams are **bit-identical** to
+//!   independent one-shot runs (pinned by `rust/tests/session.rs`).
+//!
+//! Every fallible entry returns a typed [`DoryError`] instead of
+//! panicking: NaN inputs are [`DoryError::InvalidInput`], the DoryNS
+//! size guard is [`DoryError::Overflow`], a request beyond the ingested
+//! threshold is [`DoryError::TauExceedsIngest`].
+
+use crate::error::DoryError;
+use crate::filtration::{
+    enclosing_radius_of_filtration, EdgeFiltration, FiltrationStats, Neighborhoods,
+};
+use crate::geometry::MetricData;
+use crate::util::timer::PhaseTimer;
+
+use super::engine::{Engine, EngineOptions, PhResult};
+
+/// One dataset, ingested once: the sorted edge set, its neighborhoods
+/// (and DoryNS table when the session runs dense lookup), and the
+/// front-end report of the single build that produced them. Handles are
+/// independent values — one session can serve several datasets.
+pub struct FiltrationHandle {
+    f: EdgeFiltration,
+    nb: Neighborhoods,
+    /// Front-end report of the ingest build; its `f1_builds`/`nb_builds`
+    /// counters stay at 1 no matter how many queries the handle serves.
+    fstats: FiltrationStats,
+    /// `F1` (+ sub-phases) and `neighborhoods` phase records of the
+    /// ingest; cloned into every response as the shared-build prefix.
+    timings: PhaseTimer,
+    n_points: usize,
+    /// The τ the ingest was asked for (`tau_max` of `f` may be the
+    /// enclosing radius instead when the truncation fired).
+    tau_requested: f64,
+    /// The ingest applied the enclosing-radius truncation.
+    enclosing_applied: bool,
+    /// The edge set is the complete pair list (τ = +∞, truncation off,
+    /// non-sparse input): any τ — and a query-time enclosing cut — can
+    /// be served from it.
+    complete: bool,
+    /// Which path produced the edge list ("native", "pjrt-pallas", …).
+    pub edge_source: &'static str,
+}
+
+impl FiltrationHandle {
+    pub fn n_points(&self) -> usize {
+        self.n_points
+    }
+
+    pub fn n_edges(&self) -> usize {
+        self.f.n_edges()
+    }
+
+    /// The largest τ a query can ask for without re-ingesting: +∞ for a
+    /// complete or enclosing-truncated handle (the truncation preserves
+    /// every diagram), the ingest τ otherwise.
+    pub fn tau_capacity(&self) -> f64 {
+        if self.complete || self.enclosing_applied {
+            f64::INFINITY
+        } else {
+            self.f.tau_max
+        }
+    }
+
+    /// The ingest's front-end report (build counters, stage times,
+    /// pruning).
+    pub fn stats(&self) -> &FiltrationStats {
+        &self.fstats
+    }
+
+    /// The shared sorted edge set.
+    pub fn filtration(&self) -> &EdgeFiltration {
+        &self.f
+    }
+
+    /// The τ the ingest was asked for (the effective build threshold is
+    /// `filtration().tau_max`, which is the enclosing radius when the
+    /// ingest truncation fired).
+    pub fn tau_requested(&self) -> f64 {
+        self.tau_requested
+    }
+}
+
+/// One typed PH query against a [`FiltrationHandle`]. `None` overrides
+/// inherit the session's [`EngineOptions`].
+#[derive(Clone, Debug, Default)]
+pub struct PhRequest {
+    /// Filtration threshold; must be servable from the handle
+    /// ([`FiltrationHandle::tau_capacity`]).
+    pub tau: f64,
+    /// Highest homology dimension (0..=2); `None` = session default.
+    pub max_dim: Option<usize>,
+    /// Apparent-pair shortcut override; `None` = session default.
+    pub shortcut: Option<bool>,
+    /// Query-time enclosing-radius truncation. Only consulted when
+    /// `tau` is `+∞`: `Some(true)` on a complete handle derives
+    /// `r_enc` from the shared edge set and serves the truncated
+    /// prefix; `Some(false)` on a handle whose *ingest* already
+    /// truncated is refused (the pruned edges were never ingested).
+    /// `None` serves the handle as ingested.
+    pub enclosing: Option<bool>,
+    /// Caller tag echoed into the response and the batch summary.
+    pub label: Option<String>,
+}
+
+impl PhRequest {
+    /// A plain query at `tau` with every knob inherited.
+    pub fn at(tau: f64) -> Self {
+        Self {
+            tau,
+            ..Default::default()
+        }
+    }
+}
+
+/// A served query: the full [`PhResult`] (diagram + engine stats +
+/// timings, where the timing prefix is the shared ingest's) plus the
+/// request echo and how the handle served it.
+pub struct PhResponse {
+    pub label: Option<String>,
+    /// The requested τ.
+    pub tau: f64,
+    /// The τ the filtration was actually cut at (the enclosing radius
+    /// for a query-time truncation, else the requested τ).
+    pub tau_effective: f64,
+    /// Edges of the served (possibly prefix-truncated) filtration.
+    pub n_edges: usize,
+    /// The query was served from a proper prefix of the handle.
+    pub truncated: bool,
+    pub result: PhResult,
+}
+
+/// Lifetime counters of a session — the service-level proof that N
+/// queries cost one build.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SessionStats {
+    pub ingests: u64,
+    pub queries: u64,
+    /// Queries served from a proper prefix of a handle.
+    pub truncated_queries: u64,
+    /// Queries served from a handle's full edge set.
+    pub full_queries: u64,
+    /// F1 builds performed by this session (== `ingests`: queries never
+    /// build).
+    pub filtration_builds: u64,
+    /// `Neighborhoods` CSR builds performed by this session
+    /// (== `ingests`).
+    pub nb_builds: u64,
+}
+
+impl SessionStats {
+    /// Machine-readable form for the run summary JSON.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        crate::util::json::Json::obj()
+            .field("ingests", self.ingests)
+            .field("queries", self.queries)
+            .field("truncated_queries", self.truncated_queries)
+            .field("full_queries", self.full_queries)
+            .field("filtration_builds", self.filtration_builds)
+            .field("nb_builds", self.nb_builds)
+    }
+}
+
+/// A persistent PH service endpoint: the [`Engine`] (with its worker
+/// pool) plus session counters. Create once, ingest datasets into
+/// [`FiltrationHandle`]s, answer [`PhRequest`]s.
+pub struct Session {
+    engine: Engine,
+    stats: SessionStats,
+}
+
+impl Session {
+    /// A session running `opts`; `threads > 1` spawns the persistent
+    /// pool that every ingest and query reuses.
+    pub fn new(opts: EngineOptions) -> Self {
+        Self {
+            engine: Engine::new(opts),
+            stats: SessionStats::default(),
+        }
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    pub fn options(&self) -> &EngineOptions {
+        self.engine.options()
+    }
+
+    pub fn stats(&self) -> SessionStats {
+        self.stats
+    }
+
+    /// Ingest a metric dataset at threshold `tau`: validate, build the
+    /// edge filtration and its neighborhoods once (pooled, with the
+    /// session's `f1_tile`/`enclosing`/`dense_lookup` knobs), and
+    /// return the reusable handle. NaN inputs are rejected with
+    /// [`DoryError::InvalidInput`]; the DoryNS size guard returns
+    /// [`DoryError::Overflow`].
+    pub fn ingest(&mut self, data: &MetricData, tau: f64) -> Result<FiltrationHandle, DoryError> {
+        if tau.is_nan() {
+            return Err(DoryError::Request("ingest tau is NaN".into()));
+        }
+        data.validate().map_err(DoryError::InvalidInput)?;
+        let mut fstats = FiltrationStats::default();
+        let mut timings = PhaseTimer::new();
+        timings.start("F1");
+        let f = EdgeFiltration::build_pooled(
+            data,
+            tau,
+            self.engine.pool(),
+            &self.engine.frontend_options(),
+            &mut fstats,
+        );
+        timings.stop();
+        let sparse = matches!(data, MetricData::Sparse(_));
+        self.finish_ingest(data.n(), f, timings, fstats, "native", tau, sparse)
+    }
+
+    /// Ingest a filtration someone else built — the coordinator's
+    /// PJRT/Pallas kernel path, or a caller migrating from
+    /// `compute_ph_from_filtration`. `timings`/`fstats` carry whatever
+    /// the build recorded (an `F1` phase on the kernel path); the
+    /// neighborhoods build is added here.
+    pub fn ingest_filtration(
+        &mut self,
+        f: EdgeFiltration,
+        timings: PhaseTimer,
+        fstats: FiltrationStats,
+        edge_source: &'static str,
+    ) -> Result<FiltrationHandle, DoryError> {
+        let n = f.n as usize;
+        let tau = f.tau_max;
+        // A pre-built filtration carries no truncation provenance; treat
+        // a finite tau_max as the plain ingest threshold. Completeness
+        // is decidable from the shape alone.
+        self.finish_ingest(n, f, timings, fstats, edge_source, tau, false)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn finish_ingest(
+        &mut self,
+        n_points: usize,
+        f: EdgeFiltration,
+        timings: PhaseTimer,
+        fstats: FiltrationStats,
+        edge_source: &'static str,
+        tau_requested: f64,
+        sparse: bool,
+    ) -> Result<FiltrationHandle, DoryError> {
+        let (nb, timings, fstats) = self.engine.prepare(&f, timings, fstats)?;
+        let enclosing_applied = fstats.enclosing_radius.is_finite();
+        let n = f.n as usize;
+        let complete = !sparse
+            && !enclosing_applied
+            && f.tau_max == f64::INFINITY
+            && n >= 2
+            && f.n_edges() == n * (n - 1) / 2;
+        self.stats.ingests += 1;
+        self.stats.filtration_builds += fstats.f1_builds;
+        self.stats.nb_builds += fstats.nb_builds;
+        Ok(FiltrationHandle {
+            f,
+            nb,
+            fstats,
+            timings,
+            n_points,
+            tau_requested,
+            enclosing_applied,
+            complete,
+            edge_source,
+        })
+    }
+
+    /// Serve one request from a handle. Sub-τ requests reuse the shared
+    /// sorted edge set (prefix copy) and CSR (capped view); diagrams are
+    /// bit-identical to a fresh one-shot run at the same τ and options.
+    pub fn query(
+        &mut self,
+        h: &FiltrationHandle,
+        req: &PhRequest,
+    ) -> Result<PhResponse, DoryError> {
+        let opts_eff = self.effective_options(req)?;
+        let (m, tau_effective) = self.resolve_cut(h, req)?;
+        let ne = h.f.n_edges();
+        let mut timings = h.timings.clone();
+        let truncated = m < ne;
+        let mut result = if truncated {
+            timings.start("truncate");
+            let fq = h.f.prefix(m, tau_effective);
+            let nbq = h.nb.truncated(m as u32);
+            timings.stop();
+            self.engine
+                .compute_prepared(&fq, &nbq, timings, h.fstats, &opts_eff)
+        } else {
+            self.engine
+                .compute_prepared(&h.f, &h.nb, timings, h.fstats, &opts_eff)
+        };
+        result.stats.n = h.n_points;
+        self.stats.queries += 1;
+        if truncated {
+            self.stats.truncated_queries += 1;
+        } else {
+            self.stats.full_queries += 1;
+        }
+        Ok(PhResponse {
+            label: req.label.clone(),
+            tau: req.tau,
+            tau_effective,
+            n_edges: m,
+            truncated,
+            result,
+        })
+    }
+
+    /// Serve many requests over the one ingest (and the one pool),
+    /// sequentially, failing fast on the first refused request. The
+    /// amortization claim of the service mode: N responses, one build —
+    /// `stats().filtration_builds` does not move.
+    pub fn run_batch(
+        &mut self,
+        h: &FiltrationHandle,
+        reqs: &[PhRequest],
+    ) -> Result<Vec<PhResponse>, DoryError> {
+        let mut out = Vec::with_capacity(reqs.len());
+        for req in reqs {
+            out.push(self.query(h, req)?);
+        }
+        Ok(out)
+    }
+
+    /// The session options with this request's overrides applied.
+    fn effective_options(&self, req: &PhRequest) -> Result<EngineOptions, DoryError> {
+        let mut opts = self.engine.options().clone();
+        if let Some(d) = req.max_dim {
+            if d > 2 {
+                return Err(DoryError::Request(format!(
+                    "max_dim must be <= 2 (paper scope), got {d}"
+                )));
+            }
+            opts.max_dim = d;
+        }
+        if let Some(s) = req.shortcut {
+            opts.shortcut = s;
+        }
+        if req.tau.is_nan() {
+            return Err(DoryError::Request("query tau is NaN".into()));
+        }
+        Ok(opts)
+    }
+
+    /// How many edges of the handle's sorted set serve this request,
+    /// and the τ that cut corresponds to.
+    fn resolve_cut(
+        &self,
+        h: &FiltrationHandle,
+        req: &PhRequest,
+    ) -> Result<(usize, f64), DoryError> {
+        let ne = h.f.n_edges();
+        if req.tau == f64::INFINITY {
+            if req.enclosing == Some(false) && h.enclosing_applied {
+                return Err(DoryError::Request(
+                    "enclosing = false requested at tau = inf, but the handle's ingest \
+                     already truncated at the enclosing radius; re-ingest with \
+                     enclosing off to serve the full filtration"
+                        .into(),
+                ));
+            }
+            if req.enclosing == Some(true) && h.complete {
+                // Query-time truncation of a complete handle: derive
+                // r_enc from the shared edge set (bit-equal to the
+                // build-time row-max sweep) and serve the prefix.
+                let r = enclosing_radius_of_filtration(&h.f);
+                if r.is_finite() {
+                    return Ok((h.f.prefix_len(r), r));
+                }
+            }
+            return if h.tau_capacity() == f64::INFINITY {
+                Ok((ne, h.f.tau_max))
+            } else {
+                Err(DoryError::TauExceedsIngest {
+                    requested: req.tau,
+                    ingested: h.f.tau_max,
+                })
+            };
+        }
+        // Finite τ at or beyond the ingest's enclosing radius: the flag
+        // complex is a cone past r_enc, so the full truncated set serves
+        // any such τ with unchanged diagrams (this is what makes
+        // `tau_capacity()` +∞ for enclosing-truncated handles; such
+        // answers are diagram-equal to a fresh untruncated run at that
+        // τ, whose extra cone edges only ever form zero-persistence
+        // pairs).
+        if h.enclosing_applied && req.tau >= h.f.tau_max {
+            return Ok((ne, h.f.tau_max));
+        }
+        // Finite (or -inf) τ: a prefix of the sorted set, as long as the
+        // ingest covered it.
+        if req.tau > h.f.tau_max && !h.complete {
+            return Err(DoryError::TauExceedsIngest {
+                requested: req.tau,
+                ingested: h.f.tau_max,
+            });
+        }
+        Ok((h.f.prefix_len(req.tau), req.tau))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::PointCloud;
+    use crate::homology::engine::compute_ph;
+    use crate::util::rng::Pcg32;
+
+    fn cloud(n: usize, seed: u64) -> MetricData {
+        let mut rng = Pcg32::new(seed);
+        MetricData::Points(PointCloud::new(
+            3,
+            (0..n * 3).map(|_| rng.next_f64()).collect(),
+        ))
+    }
+
+    fn bits(d: &crate::homology::Diagram) -> Vec<(usize, u64, u64)> {
+        let mut out = Vec::new();
+        for dim in 0..=d.max_dim() {
+            for p in d.points(dim) {
+                out.push((dim, p.birth.to_bits(), p.death.to_bits()));
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn one_ingest_serves_sub_tau_queries_bit_identically() {
+        let data = cloud(24, 9);
+        let opts = EngineOptions {
+            max_dim: 2,
+            threads: 2,
+            ..Default::default()
+        };
+        let mut s = Session::new(opts.clone());
+        let h = s.ingest(&data, 0.9).unwrap();
+        for tau in [0.2, 0.45, 0.7, 0.9] {
+            let resp = s.query(&h, &PhRequest::at(tau)).unwrap();
+            let fresh = compute_ph(&data, tau, &opts);
+            assert_eq!(
+                bits(&resp.result.diagram),
+                bits(&fresh.diagram),
+                "tau={tau}"
+            );
+            assert_eq!(resp.result.stats.h1.pairs, fresh.stats.h1.pairs, "tau={tau}");
+        }
+        let st = s.stats();
+        assert_eq!(st.ingests, 1);
+        assert_eq!(st.filtration_builds, 1);
+        assert_eq!(st.nb_builds, 1);
+        assert_eq!(st.queries, 4);
+        assert_eq!(st.truncated_queries, 3);
+        assert_eq!(st.full_queries, 1);
+    }
+
+    #[test]
+    fn typed_errors_on_bad_requests() {
+        let data = cloud(12, 3);
+        let mut s = Session::new(EngineOptions {
+            max_dim: 1,
+            threads: 1,
+            ..Default::default()
+        });
+        let h = s.ingest(&data, 0.5).unwrap();
+        assert!(matches!(
+            s.query(&h, &PhRequest::at(0.8)).unwrap_err(),
+            DoryError::TauExceedsIngest { .. }
+        ));
+        assert!(matches!(
+            s.query(&h, &PhRequest::at(f64::INFINITY)).unwrap_err(),
+            DoryError::TauExceedsIngest { .. }
+        ));
+        assert!(matches!(
+            s.query(&h, &PhRequest::at(f64::NAN)).unwrap_err(),
+            DoryError::Request(_)
+        ));
+        let bad_dim = PhRequest {
+            tau: 0.3,
+            max_dim: Some(3),
+            ..Default::default()
+        };
+        assert!(matches!(
+            s.query(&h, &bad_dim).unwrap_err(),
+            DoryError::Request(_)
+        ));
+        // NaN data refused at ingestion.
+        let nan = MetricData::Points(PointCloud::new(2, vec![0.0, 0.0, f64::NAN, 1.0]));
+        assert!(matches!(
+            s.ingest(&nan, 1.0).unwrap_err(),
+            DoryError::InvalidInput(_)
+        ));
+    }
+
+    #[test]
+    fn per_request_overrides_apply() {
+        let data = cloud(20, 5);
+        let mut s = Session::new(EngineOptions {
+            max_dim: 2,
+            threads: 1,
+            ..Default::default()
+        });
+        let h = s.ingest(&data, 0.8).unwrap();
+        let d1 = s
+            .query(
+                &h,
+                &PhRequest {
+                    tau: 0.8,
+                    max_dim: Some(1),
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        assert_eq!(d1.result.diagram.max_dim(), 1);
+        let off = s
+            .query(
+                &h,
+                &PhRequest {
+                    tau: 0.8,
+                    shortcut: Some(false),
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        assert_eq!(off.result.stats.h1.shortcut_pairs, 0);
+        let on = s.query(&h, &PhRequest::at(0.8)).unwrap();
+        assert!(on.result.stats.h1.shortcut_pairs > 0);
+        assert_eq!(bits(&on.result.diagram), bits(&off.result.diagram));
+    }
+}

@@ -5,23 +5,38 @@
 //! comma-separated point files (Ripser's `point-cloud` input),
 //! lower-triangular distance matrices (`lower-distance`), and `i j d`
 //! sparse COO lists (the Hi-C inputs).
+//!
+//! Every reader/writer returns a typed [`DoryError`] — [`DoryError::Io`]
+//! for filesystem failures (tagged with the path),
+//! [`DoryError::InvalidInput`] for malformed or NaN content — so a
+//! service can branch on the failure class instead of parsing panic
+//! text.
 
 use std::io::{BufRead, BufWriter, Write};
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
-
+use crate::error::DoryError;
 use crate::geometry::{DenseDistances, MetricData, PointCloud, SparseDistances};
 use crate::homology::diagram::Diagram;
 use crate::util::json::Json;
 
+type Result<T> = std::result::Result<T, DoryError>;
+
+fn open(path: &Path) -> Result<std::fs::File> {
+    std::fs::File::open(path).map_err(|e| DoryError::io(path, e))
+}
+
+fn invalid(path: &Path, msg: impl std::fmt::Display) -> DoryError {
+    DoryError::InvalidInput(format!("{path:?}: {msg}"))
+}
+
 /// Load a point cloud: one point per line, comma/space separated floats.
 pub fn read_points(path: &Path) -> Result<MetricData> {
-    let file = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let file = open(path)?;
     let mut coords = Vec::new();
     let mut dim = 0usize;
     for (lineno, line) in std::io::BufReader::new(file).lines().enumerate() {
-        let line = line?;
+        let line = line.map_err(|e| DoryError::io(path, e))?;
         let t = line.trim();
         if t.is_empty() || t.starts_with('#') {
             continue;
@@ -29,41 +44,51 @@ pub fn read_points(path: &Path) -> Result<MetricData> {
         let row: Vec<f64> = t
             .split(|c: char| c == ',' || c.is_whitespace())
             .filter(|s| !s.is_empty())
-            .map(|s| s.parse::<f64>().with_context(|| format!("line {}", lineno + 1)))
+            .map(|s| {
+                s.parse::<f64>()
+                    .map_err(|e| invalid(path, format!("line {}: {e}", lineno + 1)))
+            })
             .collect::<Result<_>>()?;
         if dim == 0 {
             dim = row.len();
         } else if row.len() != dim {
-            bail!("line {}: expected {dim} coordinates, got {}", lineno + 1, row.len());
+            return Err(invalid(
+                path,
+                format!(
+                    "line {}: expected {dim} coordinates, got {}",
+                    lineno + 1,
+                    row.len()
+                ),
+            ));
         }
         coords.extend(row);
     }
     if dim == 0 {
-        bail!("no points in {path:?}");
+        return Err(invalid(path, "no points"));
     }
     validated(MetricData::Points(PointCloud::new(dim, coords)), path)
 }
 
 /// Reject bad metric inputs (NaN, malformed sparse entries) at
-/// ingestion with a clear error naming the offending entry — the
+/// ingestion with a typed error naming the offending entry — the
 /// front-end either panics opaquely or silently drops them otherwise.
 fn validated(data: MetricData, path: &Path) -> Result<MetricData> {
     match data.validate() {
         Ok(()) => Ok(data),
-        Err(e) => bail!("invalid metric input {path:?}: {e}"),
+        Err(e) => Err(invalid(path, format!("invalid metric input: {e}"))),
     }
 }
 
 /// Load a lower-triangular distance matrix: row i has i entries
 /// (d(i,0) .. d(i,i-1)), comma/space separated; blank/comment lines skipped.
 pub fn read_lower_distance(path: &Path) -> Result<MetricData> {
-    let file = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let file = open(path)?;
     let mut tri = Vec::new();
     // Row 0 is implicit (zero entries); the k-th data line holds the k+1
     // distances d(k+1, 0..=k).
     let mut rows = 1usize;
     for line in std::io::BufReader::new(file).lines() {
-        let line = line?;
+        let line = line.map_err(|e| DoryError::io(path, e))?;
         let t = line.trim();
         if t.is_empty() || t.starts_with('#') {
             continue;
@@ -71,10 +96,16 @@ pub fn read_lower_distance(path: &Path) -> Result<MetricData> {
         let row: Vec<f64> = t
             .split(|c: char| c == ',' || c.is_whitespace())
             .filter(|s| !s.is_empty())
-            .map(|s| s.parse::<f64>().map_err(Into::into))
+            .map(|s| {
+                s.parse::<f64>()
+                    .map_err(|e| invalid(path, format!("data line {rows}: {e}")))
+            })
             .collect::<Result<_>>()?;
         if row.len() != rows {
-            bail!("data line {} must have {} entries, got {}", rows, rows, row.len());
+            return Err(invalid(
+                path,
+                format!("data line {rows} must have {rows} entries, got {}", row.len()),
+            ));
         }
         tri.extend(row);
         rows += 1;
@@ -84,24 +115,25 @@ pub fn read_lower_distance(path: &Path) -> Result<MetricData> {
 
 /// Load a sparse COO distance list: `i j d` per line (0-based).
 pub fn read_sparse_coo(path: &Path) -> Result<MetricData> {
-    let file = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let file = open(path)?;
     let mut entries = Vec::new();
     let mut n = 0usize;
     for (lineno, line) in std::io::BufReader::new(file).lines().enumerate() {
-        let line = line?;
+        let line = line.map_err(|e| DoryError::io(path, e))?;
         let t = line.trim();
         if t.is_empty() || t.starts_with('#') {
             continue;
         }
         let mut it = t.split_whitespace();
-        let (i, j, d): (u32, u32, f64) = (|| -> Option<_> {
+        let parsed: Option<(u32, u32, f64)> = (|| {
             Some((
                 it.next()?.parse().ok()?,
                 it.next()?.parse().ok()?,
                 it.next()?.parse().ok()?,
             ))
-        })()
-        .with_context(|| format!("line {}: expected `i j d`", lineno + 1))?;
+        })();
+        let (i, j, d) = parsed
+            .ok_or_else(|| invalid(path, format!("line {}: expected `i j d`", lineno + 1)))?;
         if i == j {
             continue;
         }
@@ -114,20 +146,22 @@ pub fn read_sparse_coo(path: &Path) -> Result<MetricData> {
 
 /// Write a point cloud (for round-trips and dataset export).
 pub fn write_points(path: &Path, pc: &PointCloud) -> Result<()> {
-    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    let file = std::fs::File::create(path).map_err(|e| DoryError::io(path, e))?;
+    let mut w = BufWriter::new(file);
     for i in 0..pc.n() {
         let row: Vec<String> = pc.point(i).iter().map(|x| format!("{x}")).collect();
-        writeln!(w, "{}", row.join(" "))?;
+        writeln!(w, "{}", row.join(" ")).map_err(|e| DoryError::io(path, e))?;
     }
     Ok(())
 }
 
 /// Write a sparse distance list (`i j d`).
 pub fn write_sparse_coo(path: &Path, sd: &SparseDistances) -> Result<()> {
-    let mut w = BufWriter::new(std::fs::File::create(path)?);
-    writeln!(w, "# n={}", sd.n)?;
+    let file = std::fs::File::create(path).map_err(|e| DoryError::io(path, e))?;
+    let mut w = BufWriter::new(file);
+    writeln!(w, "# n={}", sd.n).map_err(|e| DoryError::io(path, e))?;
     for &(i, j, d) in &sd.entries {
-        writeln!(w, "{i} {j} {d}")?;
+        writeln!(w, "{i} {j} {d}").map_err(|e| DoryError::io(path, e))?;
     }
     Ok(())
 }
@@ -135,14 +169,16 @@ pub fn write_sparse_coo(path: &Path, sd: &SparseDistances) -> Result<()> {
 /// Persistence diagram as CSV: `dim,birth,death` (death `inf` for
 /// essential classes) — the format the plotting scripts consume.
 pub fn write_diagram_csv(path: &Path, d: &Diagram) -> Result<()> {
-    let mut w = BufWriter::new(std::fs::File::create(path)?);
-    writeln!(w, "dim,birth,death")?;
+    let file = std::fs::File::create(path).map_err(|e| DoryError::io(path, e))?;
+    let mut w = BufWriter::new(file);
+    let werr = |e: std::io::Error| DoryError::io(path, e);
+    writeln!(w, "dim,birth,death").map_err(werr)?;
     for dim in 0..=d.max_dim() {
         for p in d.points(dim) {
             if p.is_essential() {
-                writeln!(w, "{dim},{},inf", p.birth)?;
+                writeln!(w, "{dim},{},inf", p.birth).map_err(werr)?;
             } else {
-                writeln!(w, "{dim},{},{}", p.birth, p.death)?;
+                writeln!(w, "{dim},{},{}", p.birth, p.death).map_err(werr)?;
             }
         }
     }
@@ -166,8 +202,7 @@ pub fn diagram_to_json(d: &Diagram) -> Json {
 }
 
 pub fn write_diagram_json(path: &Path, d: &Diagram) -> Result<()> {
-    std::fs::write(path, diagram_to_json(d).render())?;
-    Ok(())
+    std::fs::write(path, diagram_to_json(d).render()).map_err(|e| DoryError::io(path, e))
 }
 
 #[cfg(test)]
@@ -227,20 +262,32 @@ mod tests {
     }
 
     #[test]
-    fn malformed_inputs_rejected() {
+    fn malformed_inputs_are_typed_invalid_input() {
         let p = tmp("bad.txt");
         std::fs::write(&p, "1.0 2.0\n3.0\n").unwrap();
-        assert!(read_points(&p).is_err(), "ragged rows");
+        assert!(matches!(
+            read_points(&p).unwrap_err(),
+            DoryError::InvalidInput(_)
+        ));
         std::fs::write(&p, "not a number\n").unwrap();
-        assert!(read_points(&p).is_err());
+        assert!(matches!(
+            read_points(&p).unwrap_err(),
+            DoryError::InvalidInput(_)
+        ));
+        // Missing files are Io, not InvalidInput.
+        assert!(matches!(
+            read_points(std::path::Path::new("/definitely/not/here.xyz")).unwrap_err(),
+            DoryError::Io(_)
+        ));
     }
 
     #[test]
     fn nan_inputs_rejected_at_ingestion() {
         let p = tmp("nan-pts.txt");
         std::fs::write(&p, "0.0 0.0\nNaN 1.0\n").unwrap();
-        let e = read_points(&p).unwrap_err().to_string();
-        assert!(e.contains("NaN"), "{e}");
+        let e = read_points(&p).unwrap_err();
+        assert!(matches!(e, DoryError::InvalidInput(_)), "{e}");
+        assert!(e.to_string().contains("NaN"), "{e}");
         let p = tmp("nan-ldm.txt");
         std::fs::write(&p, "1.0\nNaN 2.0\n").unwrap();
         assert!(read_lower_distance(&p).unwrap_err().to_string().contains("NaN"));

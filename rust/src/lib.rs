@@ -98,15 +98,47 @@
 //! golden persistence-diagram fixtures with bit-exact expected values
 //! at multiple shard counts (`rust/tests/golden_pd.rs`).
 //!
-//! Entry points: [`homology::Engine`] / [`homology::engine`] for the
-//! full pipeline, [`coordinator`] for config-driven runs, `examples/`
-//! for walkthroughs.
+//! ## The session service API
+//!
+//! The service surface is **session-oriented** ([`homology::Session`]):
+//! a session owns the persistent engine + pool,
+//! [`homology::Session::ingest`]s a dataset **once** into a
+//! [`homology::FiltrationHandle`] (sorted edge set + `Neighborhoods`
+//! CSR + optional DoryNS table, all built pooled), and answers a stream
+//! of typed [`homology::PhRequest`]s
+//! ([`homology::Session::query`] / [`homology::Session::run_batch`]).
+//! A sub-τ request never rebuilds anything: the sorted edge set is
+//! **prefix-truncated** ([`filtration::EdgeFiltration::prefix`]) and
+//! the shared CSR is viewed through an edge-order cap
+//! ([`filtration::Neighborhoods::truncated`], `Arc`-shared arrays), so
+//! the reduction consumes exactly the stream a fresh build at that τ
+//! would produce — diagrams are **bit-identical** to independent
+//! one-shot runs (`rust/tests/session.rs` pins this over τ × threads ×
+//! shortcut sweeps, and `SessionStats`/`FiltrationStats::f1_builds`
+//! prove the build ran once). Fallible entry points — ingestion, the
+//! `io` readers, the [`coordinator`] — return typed
+//! [`error::DoryError`]s (`InvalidInput`, `TauExceedsIngest`,
+//! `Overflow`, `Config`, …) instead of panicking; the one-shot wrappers
+//! `homology::compute_ph*` remain as deprecated shims over the session
+//! layer so existing fixtures pin behavior.
+//!
+//! The [`coordinator`] exposes the same batching end to end: a TOML
+//! config may carry a `[[query]]` array (or the CLI repeated `--tau`
+//! flags), and [`coordinator::run_batch`] serves every query from one
+//! ingest, emitting a single summary JSON with a per-query `queries`
+//! array plus the session amortization counters.
+//!
+//! Entry points: [`homology::Session`] for services,
+//! [`homology::Engine`] / [`homology::engine`] for the bare pipeline,
+//! [`coordinator`] for config-driven runs, `examples/` for
+//! walkthroughs (`examples/service_batch.rs` is the session tour).
 
 pub mod baselines;
 pub mod bench_support;
 pub mod coboundary;
 pub mod coordinator;
 pub mod datasets;
+pub mod error;
 pub mod filtration;
 pub mod geometry;
 pub mod hic;
@@ -115,6 +147,8 @@ pub mod homology;
 pub mod reduction;
 pub mod runtime;
 pub mod util;
+
+pub use error::DoryError;
 
 use util::memtrack::CountingAlloc;
 

@@ -1,7 +1,8 @@
 //! `dory` — CLI launcher for the persistent-homology engine.
 //!
 //! Subcommands:
-//!   run       compute PH (flags or --config TOML)
+//!   run       compute PH (flags or --config TOML; repeat --tau for a
+//!             multi-query batch served from one ingest)
 //!   generate  export a synthetic dataset to disk
 //!   info      show PJRT platform + artifact inventory
 //!   help      this text
@@ -9,15 +10,20 @@
 //! Examples:
 //!   dory run --dataset torus4 --n 8000 --tau 0.2 --dim 2 --threads 4 \
 //!            --pd out/pd.csv --summary out/summary.json
+//!   dory run --dataset sphere --n 1000 --tau 0.4 --tau 0.6 --tau 0.8 \
+//!            --summary out/batch.json
 //!   dory run --config configs/hic_control.toml
 //!   dory generate --dataset hic --n 20000 --condition auxin --out hic_auxin.coo
 //!   dory info
+//!
+//! Failures surface as typed `DoryError`s: one `error:` line and a
+//! nonzero exit code, never a panic backtrace.
 
 use std::path::PathBuf;
 use std::process::ExitCode;
 
 use anyhow::{bail, Context, Result};
-use dory::coordinator::{self, DatasetSpec, RunConfig};
+use dory::coordinator::{self, DatasetSpec, QuerySpec, RunConfig};
 use dory::util::memtrack;
 
 fn main() -> ExitCode {
@@ -50,7 +56,8 @@ dory — scalable persistent homology (Aggarwal & Periwal 2021 reproduction)
 USAGE: dory <run|generate|info|help> [flags]
 
 run flags:
-  --config <file.toml>      load a full run config (other flags override)
+  --config <file.toml>      load a full run config (other flags override;
+                            a [[query]] array runs a multi-query batch)
   --dataset <kind>          circle|figure-eight|sphere|torus3|torus4|o3|
                             dragon|fractal|random|multi-scale|hic
   --points <file>           load a point cloud instead
@@ -59,7 +66,10 @@ run flags:
   --n <int>                 dataset size            [200]
   --seed <int>              dataset RNG seed        [1]
   --condition <c>           hic: control|auxin      [control]
-  --tau <float|inf>         filtration threshold    [inf]
+  --tau <float|inf>         filtration threshold    [inf]; repeat the
+                            flag to serve several thresholds from ONE
+                            ingest (session batch; replaces any config
+                            [[query]] array)
   --dim <0|1|2>             max homology dimension  [2]
   --threads <int>           worker threads          [4]
   --batch <int>             serial-parallel batch   [100]
@@ -81,9 +91,11 @@ run flags:
   --algorithm <a>           fast-column|implicit-row
   --no-pjrt                 skip the PJRT/Pallas distance kernel
   --pimage                  also compute a persistence image (PJRT)
-  --pd <file.csv>           write the persistence diagram (CSV)
+  --pd <file.csv>           write the persistence diagram (CSV; batch
+                            runs write one file per query, pd.qN.csv)
   --pd-json <file.json>     write the persistence diagram (JSON)
-  --summary <file.json>     write the machine-readable run summary
+  --summary <file.json>     write the machine-readable run summary (one
+                            file; batch runs add a `queries` array)
 
 generate flags:
   --dataset <kind> --n <int> --seed <int> [--condition control|auxin]
@@ -101,6 +113,7 @@ fn cmd_run(args: &[String]) -> Result<()> {
     let mut n: Option<usize> = None;
     let mut seed: Option<u64> = None;
     let mut condition: Option<String> = None;
+    let mut taus: Vec<f64> = Vec::new();
     let mut it = args.iter();
     while let Some(a) = it.next() {
         let mut val = || -> Result<&String> {
@@ -128,7 +141,7 @@ fn cmd_run(args: &[String]) -> Result<()> {
             "--condition" => condition = Some(val()?.clone()),
             "--tau" => {
                 let v = val()?;
-                cfg.tau = if v == "inf" { f64::INFINITY } else { v.parse()? };
+                taus.push(if v == "inf" { f64::INFINITY } else { v.parse()? });
             }
             "--dim" => cfg.max_dim = val()?.parse()?,
             "--threads" => cfg.threads = val()?.parse()?,
@@ -177,28 +190,35 @@ fn cmd_run(args: &[String]) -> Result<()> {
             DatasetSpec::Named { kind, n, seed }
         };
     }
+    // Repeated --tau flags define the query batch (replacing any config
+    // [[query]] array); a single --tau keeps the legacy one-shot shape.
+    match taus.len() {
+        0 => {}
+        1 => {
+            cfg.tau = taus[0];
+            cfg.queries.clear();
+        }
+        _ => {
+            cfg.tau = taus.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+            cfg.queries = taus.iter().map(|&t| QuerySpec::at(t)).collect();
+        }
+    }
     cfg.validate()?;
 
     let t0 = std::time::Instant::now();
-    let report = coordinator::run(&cfg)?;
+    let report = coordinator::run_batch(&cfg)?;
     let dt = t0.elapsed().as_secs_f64();
-    let d = &report.result.diagram;
     println!(
-        "n={} edges={} via {} | total {:.2}s | peak heap {} (rss {})",
+        "n={} ingest edges={} via {} | {} queries on 1 ingest | total {:.2}s | peak heap {} (rss {})",
         report.n_points,
-        report.n_edges,
+        report.ingest_edges,
         report.edge_source,
+        report.responses.len(),
         dt,
         memtrack::fmt_bytes(report.peak_heap_bytes),
         memtrack::fmt_bytes(memtrack::max_rss_bytes()),
     );
-    println!("phases: {}", report.result.timings.summary());
-    let rss = report.result.timings.rss_summary();
-    if !rss.is_empty() {
-        println!("phase max-RSS: {rss}");
-    }
-    let st = &report.result.stats;
-    let fs = &st.filtration;
+    let fs = &report.ingest_stats;
     if fs.edges_considered > 0 {
         let pruned = if fs.edges_pruned > 0 {
             format!(
@@ -221,27 +241,58 @@ fn cmd_run(args: &[String]) -> Result<()> {
             pruned,
         );
     }
-    let skipped = st.h1.shortcut_pairs + st.h2.shortcut_pairs;
-    if skipped > 0 {
-        println!(
-            "shortcut: {skipped} apparent pairs resolved at enumeration (H1* {:.0}% of {} candidates, H2* {:.0}% of {})",
-            st.h1.skip_rate() * 100.0,
-            st.h1.columns + st.h1.shortcut_pairs,
-            st.h2.skip_rate() * 100.0,
-            st.h2.columns + st.h2.shortcut_pairs,
-        );
-    }
-    if cfg.threads > 1 {
-        let s = report.result.stats.sched_total();
-        if s.batches > 0 {
-            println!("scheduler: {}", s.summary());
+    let multi = report.responses.len() > 1;
+    for (i, resp) in report.responses.iter().enumerate() {
+        let d = &resp.result.diagram;
+        let st = &resp.result.stats;
+        if multi {
+            let label = resp
+                .label
+                .as_deref()
+                .map(|l| format!(" ({l})"))
+                .unwrap_or_default();
+            let served = if resp.truncated {
+                format!("prefix of {} edges", resp.n_edges)
+            } else {
+                "full ingest".to_string()
+            };
+            println!("query {i}{label}: tau={} | {served}", resp.tau);
+        }
+        println!("phases: {}", resp.result.timings.summary());
+        let rss = resp.result.timings.rss_summary();
+        if !rss.is_empty() && !multi {
+            println!("phase max-RSS: {rss}");
+        }
+        let skipped = st.h1.shortcut_pairs + st.h2.shortcut_pairs;
+        if skipped > 0 {
+            println!(
+                "shortcut: {skipped} apparent pairs resolved at enumeration (H1* {:.0}% of {} candidates, H2* {:.0}% of {})",
+                st.h1.skip_rate() * 100.0,
+                st.h1.columns + st.h1.shortcut_pairs,
+                st.h2.skip_rate() * 100.0,
+                st.h2.columns + st.h2.shortcut_pairs,
+            );
+        }
+        if cfg.threads > 1 {
+            let s = st.sched_total();
+            if s.batches > 0 {
+                println!("scheduler: {}", s.summary());
+            }
+        }
+        for dim in 0..=d.max_dim() {
+            println!(
+                "H{dim}: {} finite pairs, {} essential",
+                d.finite(dim).len(),
+                d.essential_count(dim)
+            );
         }
     }
-    for dim in 0..=cfg.max_dim {
+    if multi {
+        let s = &report.session;
         println!(
-            "H{dim}: {} finite pairs, {} essential",
-            d.finite(dim).len(),
-            d.essential_count(dim)
+            "session: {} queries served from {} ingest ({} truncated, {} full); builds: F1 {}, CSR {}",
+            s.queries, s.ingests, s.truncated_queries, s.full_queries,
+            s.filtration_builds, s.nb_builds,
         );
     }
     if let Some((g, img)) = &report.pimage {

@@ -142,6 +142,12 @@ impl From<u32> for Json {
         Json::Int(x as i64)
     }
 }
+impl From<u64> for Json {
+    fn from(x: u64) -> Json {
+        // Counters in practice; saturate rather than wrap if ever huge.
+        Json::Int(i64::try_from(x).unwrap_or(i64::MAX))
+    }
+}
 impl From<&str> for Json {
     fn from(s: &str) -> Json {
         Json::Str(s.to_string())

@@ -21,7 +21,9 @@ pub struct PhaseRecord {
 }
 
 /// Records named phases in order; renders the paper's Table-2 row format.
-#[derive(Debug, Default)]
+/// Cloning snapshots the completed phases (a session clones its ingest
+/// timings into every response served from the same handle).
+#[derive(Debug, Default, Clone)]
 pub struct PhaseTimer {
     phases: Vec<PhaseRecord>,
     current: Option<(String, Instant)>,

@@ -1,0 +1,500 @@
+//! Session-API exactness and typed-error harness.
+//!
+//! The service contract under test:
+//!
+//! * **N-query session ≡ N independent fresh runs, bit for bit** — a
+//!   batch of τ-queries served from one ingest produces diagrams whose
+//!   (dim, birth-bits, death-bits) sequences equal independent
+//!   `compute_ph` runs at the same τ and options, swept over τ prefixes
+//!   × threads × shortcut/enclosing overrides;
+//! * **one build** — the session's `filtration_builds`/`nb_builds`
+//!   counters (and the handle's `FiltrationStats`) prove the filtration
+//!   and the `Neighborhoods` CSR were built exactly once for the whole
+//!   batch;
+//! * **typed errors** — NaN ingest, the DoryNS overflow guard, bad
+//!   TOML, and out-of-capacity τ requests surface as the matching
+//!   `DoryError` variants, never as panics.
+
+use dory::coordinator::{self, DatasetSpec, QuerySpec, RunConfig};
+use dory::error::DoryError;
+use dory::filtration::{EdgeFiltration, FiltrationStats};
+use dory::geometry::{MetricData, PointCloud, SparseDistances};
+use dory::homology::{compute_ph, EngineOptions, PhRequest, Session};
+use dory::util::rng::Pcg32;
+use dory::util::timer::PhaseTimer;
+
+fn cloud(n: usize, dim: usize, seed: u64) -> MetricData {
+    let mut rng = Pcg32::new(seed);
+    MetricData::Points(PointCloud::new(
+        dim,
+        (0..n * dim).map(|_| rng.next_f64()).collect(),
+    ))
+}
+
+/// The exact byte content of a diagram, in emission order.
+fn diagram_bits(d: &dory::homology::Diagram) -> Vec<(usize, u64, u64)> {
+    let mut out = Vec::new();
+    for dim in 0..=d.max_dim() {
+        for p in d.points(dim) {
+            out.push((dim, p.birth.to_bits(), p.death.to_bits()));
+        }
+    }
+    out
+}
+
+/// Pair/essential/trivial counts per dimension — the structural echo of
+/// the diagram comparison.
+fn pair_counts(r: &dory::homology::PhResult) -> [(usize, usize, usize); 2] {
+    [
+        (r.stats.h1.pairs, r.stats.h1.essential, r.stats.h1.trivial_pairs),
+        (r.stats.h2.pairs, r.stats.h2.essential, r.stats.h2.trivial_pairs),
+    ]
+}
+
+#[test]
+fn eight_query_session_is_bit_identical_to_eight_fresh_runs() {
+    // The acceptance pin: 8 τ-queries on one ingest vs 8 independent
+    // compute_ph runs, swept over threads × shortcut, with the build
+    // counters proving one filtration + one CSR build per session.
+    let data = cloud(30, 3, 2024);
+    let tau_ingest = 0.95;
+    let taus = [0.25, 0.35, 0.45, 0.55, 0.65, 0.75, 0.85, 0.95];
+    for threads in [1usize, 4] {
+        for shortcut in [true, false] {
+            let opts = EngineOptions {
+                max_dim: 2,
+                threads,
+                shortcut,
+                ..Default::default()
+            };
+            let mut session = Session::new(opts.clone());
+            let handle = session.ingest(&data, tau_ingest).unwrap();
+            assert_eq!(handle.stats().f1_builds, 1);
+            assert_eq!(handle.stats().nb_builds, 1);
+            let reqs: Vec<PhRequest> = taus.iter().map(|&t| PhRequest::at(t)).collect();
+            let responses = session.run_batch(&handle, &reqs).unwrap();
+            assert_eq!(responses.len(), taus.len());
+            for (resp, &tau) in responses.iter().zip(&taus) {
+                let fresh = compute_ph(&data, tau, &opts);
+                assert_eq!(
+                    diagram_bits(&resp.result.diagram),
+                    diagram_bits(&fresh.diagram),
+                    "threads={threads} shortcut={shortcut} tau={tau}: diagram bytes deviate"
+                );
+                assert_eq!(
+                    pair_counts(&resp.result),
+                    pair_counts(&fresh),
+                    "threads={threads} shortcut={shortcut} tau={tau}: pair counts deviate"
+                );
+                assert_eq!(
+                    resp.n_edges,
+                    fresh.stats.n_edges,
+                    "threads={threads} shortcut={shortcut} tau={tau}: served edge count deviates"
+                );
+                // Responses carry the SHARED ingest's front-end report:
+                // still the one build, never a fresh one per query.
+                assert_eq!(resp.result.stats.filtration.f1_builds, 1);
+                assert_eq!(resp.result.stats.filtration.nb_builds, 1);
+            }
+            // The filtration and Neighborhoods were built exactly once.
+            let st = session.stats();
+            assert_eq!(st.ingests, 1, "threads={threads} shortcut={shortcut}");
+            assert_eq!(st.filtration_builds, 1, "threads={threads} shortcut={shortcut}");
+            assert_eq!(st.nb_builds, 1, "threads={threads} shortcut={shortcut}");
+            assert_eq!(st.queries, taus.len() as u64);
+            assert_eq!(st.truncated_queries, taus.len() as u64 - 1);
+            assert_eq!(st.full_queries, 1);
+        }
+    }
+}
+
+#[test]
+fn dense_lookup_session_matches_fresh_runs() {
+    // DoryNS handles: the dense edge-order table is part of the shared
+    // build; truncated views must filter it exactly like a rebuilt one.
+    let data = cloud(24, 3, 7);
+    let opts = EngineOptions {
+        max_dim: 2,
+        threads: 2,
+        dense_lookup: true,
+        ..Default::default()
+    };
+    let mut session = Session::new(opts.clone());
+    let handle = session.ingest(&data, 0.9).unwrap();
+    for tau in [0.3, 0.6, 0.9] {
+        let resp = session.query(&handle, &PhRequest::at(tau)).unwrap();
+        let fresh = compute_ph(&data, tau, &opts);
+        assert_eq!(
+            diagram_bits(&resp.result.diagram),
+            diagram_bits(&fresh.diagram),
+            "dense tau={tau}"
+        );
+    }
+    assert_eq!(session.stats().nb_builds, 1);
+}
+
+#[test]
+fn infinite_tau_handle_enclosing_semantics() {
+    let data = cloud(26, 3, 55);
+    // Enclosing ON at ingest: the handle holds the truncated set; τ=∞
+    // queries serve it unchanged and sub-τ queries prefix it.
+    let opts_on = EngineOptions {
+        max_dim: 1,
+        threads: 2,
+        enclosing: true,
+        ..Default::default()
+    };
+    let mut s_on = Session::new(opts_on.clone());
+    let h_on = s_on.ingest(&data, f64::INFINITY).unwrap();
+    assert!(h_on.stats().enclosing_radius.is_finite());
+    let full = s_on.query(&h_on, &PhRequest::at(f64::INFINITY)).unwrap();
+    let fresh = compute_ph(&data, f64::INFINITY, &opts_on);
+    assert_eq!(diagram_bits(&full.result.diagram), diagram_bits(&fresh.diagram));
+    let sub = s_on.query(&h_on, &PhRequest::at(0.4)).unwrap();
+    let fresh_sub = compute_ph(&data, 0.4, &opts_on);
+    assert_eq!(diagram_bits(&sub.result.diagram), diagram_bits(&fresh_sub.diagram));
+    // Finite τ at/beyond r_enc: servable from the truncated set (the
+    // complex is a cone past r_enc), consistent with tau_capacity() = ∞.
+    // The fresh untruncated run at that τ has extra cone edges whose
+    // pairs are all zero-persistence, so diagrams are multiset-equal at
+    // zero tolerance.
+    let r_enc = h_on.stats().enclosing_radius;
+    let beyond = s_on.query(&h_on, &PhRequest::at(r_enc * 1.5)).unwrap();
+    assert!(!beyond.truncated);
+    assert_eq!(beyond.n_edges, h_on.n_edges());
+    assert_eq!(beyond.tau_effective.to_bits(), r_enc.to_bits());
+    let fresh_beyond = compute_ph(&data, r_enc * 1.5, &opts_on);
+    assert!(
+        beyond
+            .result
+            .diagram
+            .multiset_eq(&fresh_beyond.diagram, 0.0),
+        "cone-range query must be diagram-equal to the fresh run"
+    );
+    // ... but an explicit enclosing=false override needs edges the
+    // ingest pruned: a typed refusal, not silence.
+    let err = s_on
+        .query(
+            &h_on,
+            &PhRequest {
+                tau: f64::INFINITY,
+                enclosing: Some(false),
+                ..Default::default()
+            },
+        )
+        .unwrap_err();
+    assert!(matches!(err, DoryError::Request(_)), "{err}");
+
+    // Enclosing OFF at ingest (complete handle): a query-time
+    // enclosing=true override derives r_enc from the shared edge set
+    // and must match a fresh enclosing-on run bit for bit.
+    let opts_off = EngineOptions {
+        enclosing: false,
+        ..opts_on.clone()
+    };
+    let mut s_off = Session::new(opts_off);
+    let h_off = s_off.ingest(&data, f64::INFINITY).unwrap();
+    let n = data.n();
+    assert_eq!(h_off.n_edges(), n * (n - 1) / 2, "complete pair list");
+    let cut = s_off
+        .query(
+            &h_off,
+            &PhRequest {
+                tau: f64::INFINITY,
+                enclosing: Some(true),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    assert!(cut.truncated, "query-time truncation must fire");
+    assert_eq!(diagram_bits(&cut.result.diagram), diagram_bits(&fresh.diagram));
+    assert_eq!(cut.tau_effective.to_bits(), h_on.stats().enclosing_radius.to_bits());
+}
+
+#[test]
+fn sparse_handle_queries_match_fresh_runs() {
+    // Sparse (pre-thresholded) inputs: prefix queries over the COO set.
+    let mut rng = Pcg32::new(99);
+    let n = 40usize;
+    let mut entries = Vec::new();
+    for u in 0..n as u32 {
+        for v in (u + 1)..n as u32 {
+            if rng.next_f64() < 0.4 {
+                entries.push((u, v, rng.uniform(0.1, 2.0)));
+            }
+        }
+    }
+    let data = MetricData::Sparse(SparseDistances { n, entries });
+    let opts = EngineOptions {
+        max_dim: 1,
+        threads: 2,
+        ..Default::default()
+    };
+    let mut session = Session::new(opts.clone());
+    let handle = session.ingest(&data, f64::INFINITY).unwrap();
+    for tau in [0.5, 1.0, 1.7, f64::INFINITY] {
+        let resp = session.query(&handle, &PhRequest::at(tau)).unwrap();
+        let fresh = compute_ph(&data, tau, &opts);
+        assert_eq!(
+            diagram_bits(&resp.result.diagram),
+            diagram_bits(&fresh.diagram),
+            "sparse tau={tau}"
+        );
+    }
+    assert_eq!(session.stats().filtration_builds, 1);
+}
+
+#[test]
+fn per_request_override_sweep_matches_fresh_runs() {
+    // shortcut / max_dim overrides per request, against fresh runs with
+    // the same effective options.
+    let data = cloud(22, 3, 31);
+    let base = EngineOptions {
+        max_dim: 2,
+        threads: 2,
+        shortcut: true,
+        ..Default::default()
+    };
+    let mut session = Session::new(base.clone());
+    let handle = session.ingest(&data, 0.85).unwrap();
+    for tau in [0.5, 0.85] {
+        for shortcut in [true, false] {
+            for max_dim in [1usize, 2] {
+                let req = PhRequest {
+                    tau,
+                    max_dim: Some(max_dim),
+                    shortcut: Some(shortcut),
+                    ..Default::default()
+                };
+                let resp = session.query(&handle, &req).unwrap();
+                let fresh = compute_ph(
+                    &data,
+                    tau,
+                    &EngineOptions {
+                        max_dim,
+                        shortcut,
+                        ..base.clone()
+                    },
+                );
+                assert_eq!(
+                    diagram_bits(&resp.result.diagram),
+                    diagram_bits(&fresh.diagram),
+                    "tau={tau} shortcut={shortcut} max_dim={max_dim}"
+                );
+            }
+        }
+    }
+    assert_eq!(session.stats().filtration_builds, 1);
+}
+
+// ---------------------------------------------------------------------
+// Typed error paths
+// ---------------------------------------------------------------------
+
+#[test]
+fn nan_ingest_is_invalid_input() {
+    let mut session = Session::new(EngineOptions {
+        max_dim: 1,
+        threads: 1,
+        ..Default::default()
+    });
+    let nan_points = MetricData::Points(PointCloud::new(2, vec![0.0, 0.0, f64::NAN, 1.0]));
+    let e = session.ingest(&nan_points, 1.0).unwrap_err();
+    assert!(matches!(e, DoryError::InvalidInput(_)), "{e}");
+    assert!(e.to_string().contains("NaN"), "{e}");
+    let nan_sparse = MetricData::Sparse(SparseDistances {
+        n: 3,
+        entries: vec![(0, 1, f64::NAN)],
+    });
+    assert!(matches!(
+        session.ingest(&nan_sparse, 1.0).unwrap_err(),
+        DoryError::InvalidInput(_)
+    ));
+    // The session is still usable after a refused ingest.
+    let ok = session.ingest(&cloud(10, 2, 1), 1.0).unwrap();
+    assert!(session.query(&ok, &PhRequest::at(0.5)).is_ok());
+}
+
+#[test]
+fn dory_ns_overflow_guard_is_typed() {
+    // A vertex count whose n(n-1)/2 table cannot exist: the session
+    // refuses with Overflow before allocating anything.
+    let mut session = Session::new(EngineOptions {
+        max_dim: 1,
+        threads: 1,
+        dense_lookup: true,
+        ..Default::default()
+    });
+    let fake = EdgeFiltration {
+        n: u32::MAX - 2,
+        edges: Vec::new(),
+        values: Vec::new(),
+        tau_max: 1.0,
+    };
+    let e = session
+        .ingest_filtration(fake, PhaseTimer::new(), FiltrationStats::default(), "test")
+        .unwrap_err();
+    assert!(matches!(e, DoryError::Overflow(_)), "{e}");
+    assert!(e.to_string().contains("DoryNS"), "{e}");
+}
+
+#[test]
+fn tau_beyond_ingest_is_typed_and_recoverable() {
+    let data = cloud(16, 3, 77);
+    let mut session = Session::new(EngineOptions {
+        max_dim: 1,
+        threads: 1,
+        ..Default::default()
+    });
+    let handle = session.ingest(&data, 0.5).unwrap();
+    match session.query(&handle, &PhRequest::at(0.75)).unwrap_err() {
+        DoryError::TauExceedsIngest {
+            requested,
+            ingested,
+        } => {
+            assert_eq!(requested, 0.75);
+            assert_eq!(ingested, 0.5);
+        }
+        other => panic!("wrong variant: {other}"),
+    }
+    // Re-ingesting at the larger τ serves it (the documented recovery).
+    let wider = session.ingest(&data, 0.75).unwrap();
+    assert!(session.query(&wider, &PhRequest::at(0.75)).is_ok());
+    assert_eq!(session.stats().ingests, 2);
+}
+
+#[test]
+fn bad_toml_is_typed_config_error() {
+    for bad in [
+        "[engine]\nbogus = 1\n",
+        "[bogus]\n",
+        "[engine]\nmax_dim = 7\n",
+        "[engine]\ntau = \"high\"\n",
+        "[[query]]\nmax_dim = 1\n",
+        "[[query]]\ntau = 0.5\nunknown_knob = true\n",
+        "[engine\ntau = 1\n",
+    ] {
+        let e = RunConfig::from_str(bad).unwrap_err();
+        assert!(matches!(e, DoryError::Config(_)), "{bad:?} gave {e}");
+    }
+    // Missing config files are Io, not Config.
+    assert!(matches!(
+        RunConfig::from_file(std::path::Path::new("/definitely/not/here.toml")).unwrap_err(),
+        DoryError::Io(_)
+    ));
+}
+
+// ---------------------------------------------------------------------
+// Coordinator batch mode
+// ---------------------------------------------------------------------
+
+#[test]
+fn coordinator_query_array_matches_single_runs() {
+    let dir = std::env::temp_dir().join("dory-session-test-batch");
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = RunConfig {
+        dataset: DatasetSpec::Named {
+            kind: "figure-eight".into(),
+            n: 60,
+            seed: 9,
+        },
+        tau: 1.5,
+        max_dim: 1,
+        threads: 2,
+        use_pjrt: false,
+        summary_json: Some(dir.join("summary.json")),
+        diagram_csv: Some(dir.join("pd.csv")),
+        queries: vec![
+            QuerySpec {
+                label: Some("coarse".into()),
+                ..QuerySpec::at(0.6)
+            },
+            QuerySpec::at(1.0),
+            QuerySpec::at(1.5),
+        ],
+        ..Default::default()
+    };
+    let batch = coordinator::run_batch(&cfg).unwrap();
+    assert_eq!(batch.responses.len(), 3);
+    assert_eq!(batch.session.filtration_builds, 1);
+    assert_eq!(batch.session.nb_builds, 1);
+    for (i, q) in cfg.queries.iter().enumerate() {
+        let single = coordinator::run(&RunConfig {
+            tau: q.tau,
+            queries: Vec::new(),
+            summary_json: None,
+            diagram_csv: None,
+            ..cfg.clone()
+        })
+        .unwrap();
+        assert_eq!(
+            diagram_bits(&batch.responses[i].result.diagram),
+            diagram_bits(&single.result.diagram),
+            "query {i} (tau={})",
+            q.tau
+        );
+        assert!(dir.join(format!("pd.q{i}.csv")).is_file(), "pd.q{i}.csv");
+    }
+    let summary = std::fs::read_to_string(dir.join("summary.json")).unwrap();
+    assert!(summary.contains("\"queries\""), "{summary}");
+    assert!(summary.contains("\"label\":\"coarse\""), "{summary}");
+    assert!(summary.contains("\"session\""), "{summary}");
+    assert!(summary.contains("\"filtration_builds\":1"), "{summary}");
+}
+
+#[test]
+fn coordinator_surfaces_out_of_capacity_query() {
+    // A [[query]] τ above every other τ defines the ingest threshold,
+    // so batches are self-consistent; but a handle ingested at a finite
+    // τ refuses an ∞ query with the typed error end to end.
+    let cfg = RunConfig {
+        dataset: DatasetSpec::Named {
+            kind: "circle".into(),
+            n: 40,
+            seed: 2,
+        },
+        tau: 1.0,
+        max_dim: 1,
+        threads: 1,
+        use_pjrt: false,
+        queries: vec![QuerySpec::at(0.5), QuerySpec::at(f64::INFINITY)],
+        ..Default::default()
+    };
+    // ingest_tau covers the ∞ query, so this succeeds (enclosing fires).
+    assert_eq!(cfg.ingest_tau(), f64::INFINITY);
+    let b = coordinator::run_batch(&cfg).unwrap();
+    assert_eq!(b.responses.len(), 2);
+
+    // Bad dataset kinds keep their typed error through run_batch.
+    let e = coordinator::run_batch(&RunConfig {
+        dataset: DatasetSpec::Named {
+            kind: "no-such".into(),
+            n: 10,
+            seed: 1,
+        },
+        ..cfg
+    })
+    .unwrap_err();
+    assert!(matches!(e, DoryError::Dataset(_)), "{e}");
+}
+
+#[test]
+fn legacy_shims_still_pin_one_shot_behavior() {
+    // compute_ph (the deprecated shim) must agree with an explicitly
+    // session-served query — the migration is a pure refactor.
+    let data = cloud(20, 3, 123);
+    let opts = EngineOptions {
+        max_dim: 2,
+        threads: 2,
+        ..Default::default()
+    };
+    let one_shot = compute_ph(&data, 0.8, &opts);
+    let mut session = Session::new(opts);
+    let handle = session.ingest(&data, 0.8).unwrap();
+    let served = session.query(&handle, &PhRequest::at(0.8)).unwrap();
+    assert_eq!(
+        diagram_bits(&one_shot.diagram),
+        diagram_bits(&served.result.diagram)
+    );
+    assert_eq!(one_shot.stats.n_edges, served.n_edges);
+}
