@@ -38,7 +38,7 @@ fn main() -> anyhow::Result<()> {
         batch_size: 100,
         ..Default::default()
     };
-    let mut session = Session::new(opts);
+    let session = Session::new(opts);
 
     // ---- L1/L2 via PJRT: distance kernel ---------------------------------
     let rt = Runtime::load(&default_artifact_dir())?;

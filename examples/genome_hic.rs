@@ -26,7 +26,7 @@ fn main() -> Result<(), DoryError> {
     };
     // One session — both conditions share the engine's worker pool
     // (handles are per-dataset; no pool is torn down in between).
-    let mut session = Session::new(EngineOptions {
+    let session = Session::new(EngineOptions {
         max_dim: 2,
         threads: 4,
         ..Default::default()

@@ -18,7 +18,7 @@ fn main() -> Result<(), DoryError> {
 
     // 2. A session with the default engine (fast implicit column) and
     //    one ingest at τ = 8, covering all three features' deaths.
-    let mut session = Session::new(EngineOptions {
+    let session = Session::new(EngineOptions {
         max_dim: 1,
         threads: 2,
         ..Default::default()

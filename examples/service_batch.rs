@@ -26,7 +26,7 @@ fn main() -> Result<(), DoryError> {
     };
 
     // ---- one ingest, eight queries ----------------------------------
-    let mut session = Session::new(opts.clone());
+    let session = Session::new(opts.clone());
     let t0 = std::time::Instant::now();
     let handle = session.ingest(&data, 0.5)?;
     let t_ingest = t0.elapsed().as_secs_f64();
@@ -83,6 +83,38 @@ fn main() -> Result<(), DoryError> {
         t_cold / t_batch
     );
 
+    // ---- the same queries, concurrently -----------------------------
+    // Every session entry point takes `&self`: scoped threads fire the
+    // whole batch at once against the one handle, the shared pool
+    // interleaves the queries' task generations fairly, and each answer
+    // is still bit-identical to its serial counterpart.
+    let t0 = std::time::Instant::now();
+    let concurrent: Vec<_> = std::thread::scope(|scope| {
+        let joins: Vec<_> = taus
+            .iter()
+            .map(|&tau| {
+                let session = &session;
+                let handle = &handle;
+                scope.spawn(move || session.query(handle, &PhRequest::at(tau)))
+            })
+            .collect();
+        joins.into_iter().map(|j| j.join().unwrap()).collect()
+    });
+    let t_conc = t0.elapsed().as_secs_f64();
+    for (conc, serial) in concurrent.iter().zip(&responses) {
+        let conc = conc.as_ref().expect("concurrent query");
+        assert!(
+            conc.result.diagram.multiset_eq(&serial.result.diagram, 0.0),
+            "concurrent answers must be bit-identical to serial ones"
+        );
+    }
+    println!(
+        "{} concurrent queries on one handle: {:.3}s (serial batch was {:.3}s) — same bits",
+        taus.len(),
+        t_conc,
+        t_batch - t_ingest
+    );
+
     // ---- the typed error surface ------------------------------------
     println!("\ntyped errors:");
     match session.query(&handle, &PhRequest::at(0.75)) {
@@ -99,6 +131,16 @@ fn main() -> Result<(), DoryError> {
     match session.ingest(&nan, 1.0) {
         Err(e @ DoryError::InvalidInput(_)) => println!("  NaN ingest: {e}"),
         other => panic!("expected InvalidInput, got {:?}", other.err()),
+    }
+    // NaN or negative τ would silently serve an empty diagram (every
+    // `v <= tau` comparison false); both are refused up front instead.
+    match session.query(&handle, &PhRequest::at(-0.5)) {
+        Err(e @ DoryError::Request(_)) => println!("  negative-tau query: {e}"),
+        other => panic!("expected Request, got {:?}", other.err()),
+    }
+    match session.query(&handle, &PhRequest::at(f64::NAN)) {
+        Err(e @ DoryError::Request(_)) => println!("  NaN-tau query: {e}"),
+        other => panic!("expected Request, got {:?}", other.err()),
     }
     // The session survives refused requests: serve one more query.
     let again = session.query(&handle, &PhRequest::at(0.3))?;

@@ -45,7 +45,7 @@ fn main() {
         let t0 = std::time::Instant::now();
         // Session per engine configuration (the ablation varies
         // handle-level knobs like dense_lookup, so each row ingests).
-        let mut session = Session::new(opts);
+        let session = Session::new(opts);
         let h = session.ingest(&data, tau).expect("ingest");
         let r = session.query(&h, &PhRequest::at(tau)).expect("query").result;
         let dt = t0.elapsed().as_secs_f64();

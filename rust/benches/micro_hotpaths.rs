@@ -245,7 +245,7 @@ fn main() {
         ..Default::default()
     };
     let t0 = Instant::now();
-    let mut session = dory::homology::Session::new(svc_opts.clone());
+    let session = dory::homology::Session::new(svc_opts.clone());
     let handle = session.ingest(&svc_data, 0.25).expect("session ingest");
     let reqs: Vec<dory::homology::PhRequest> = svc_taus
         .iter()
@@ -284,6 +284,69 @@ fn main() {
         .field("session_amortization", amortization)
         .field("session_f1_builds", st.filtration_builds)
         .field("session_nb_builds", st.nb_builds);
+
+    // --- concurrent queries on one handle ------------------------------------
+    // CI gate for the concurrent-serving mode: 8 threads issuing the
+    // same query through `&self` on ONE session/handle must finish in
+    // less than 8x the single-query wall time — i.e. the shared pool's
+    // multi-generation scheduler actually interleaves the queries
+    // instead of serializing them behind a lock. Answers must stay
+    // bit-identical to the serial response. The bound is deliberately
+    // loose (any overlap at all beats 8x) so platform noise cannot
+    // flake it; the speedup itself is exported for the trajectory.
+    let conc_req = dory::homology::PhRequest::at(0.20);
+    let serial_resp = session.query(&handle, &conc_req).expect("serial query");
+    let serial_bits: Vec<(u64, u64)> = {
+        let d = &serial_resp.result.diagram;
+        (0..=d.max_dim())
+            .flat_map(|k| d.points(k).iter().map(|p| (p.birth.to_bits(), p.death.to_bits())))
+            .collect()
+    };
+    // Best of 3 so a cold first run cannot inflate the budget's base.
+    let mut t_single = f64::INFINITY;
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        session.query(&handle, &conc_req).expect("single query");
+        t_single = t_single.min(t0.elapsed().as_secs_f64());
+    }
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for _ in 0..8 {
+            let session = &session;
+            let handle = &handle;
+            let conc_req = &conc_req;
+            let serial_bits = &serial_bits;
+            scope.spawn(move || {
+                let resp = session.query(handle, conc_req).expect("concurrent query");
+                let d = &resp.result.diagram;
+                let bits: Vec<(u64, u64)> = (0..=d.max_dim())
+                    .flat_map(|k| {
+                        d.points(k).iter().map(|p| (p.birth.to_bits(), p.death.to_bits()))
+                    })
+                    .collect();
+                assert_eq!(
+                    &bits, serial_bits,
+                    "concurrent query deviates from the serial response"
+                );
+            });
+        }
+    });
+    let t_conc = t0.elapsed().as_secs_f64();
+    let speedup = 8.0 * t_single / t_conc.max(1e-12);
+    println!(
+        "{:<42} {t_conc:>11.3} s    (single {t_single:.3}s -> x{speedup:.2} vs 8x-serial)",
+        "8 concurrent queries, one handle"
+    );
+    assert!(
+        t_conc < 8.0 * t_single,
+        "8 concurrent queries ({t_conc:.3}s) must beat 8x the single-query time \
+         ({:.3}s) — the shared pool serialized the tenants",
+        8.0 * t_single
+    );
+    out = out
+        .field("single_query_s", t_single)
+        .field("concurrent8_s", t_conc)
+        .field("concurrency_speedup", speedup);
 
     // --- F1 construction ----------------------------------------------------
     let t0 = Instant::now();

@@ -520,9 +520,15 @@ impl RunConfig {
         if self.tau.is_nan() {
             return Err(cfg_err("tau must not be NaN"));
         }
+        if self.tau < 0.0 {
+            return Err(cfg_err("tau must be non-negative"));
+        }
         for (i, q) in self.queries.iter().enumerate() {
             if q.tau.is_nan() {
                 return Err(cfg_err(format!("query #{i}: tau must not be NaN")));
+            }
+            if q.tau < 0.0 {
+                return Err(cfg_err(format!("query #{i}: tau must be non-negative")));
             }
             if let Some(d) = q.max_dim {
                 if d > 2 {
@@ -608,8 +614,11 @@ diagram_csv = "out/pd.csv"
             "[engine]\nbatch_min = 0\n",
             "[engine]\nbatch_min = 64\nbatch_max = 8\n",
             "[engine]\ntau = \"high\"\n",
+            "[engine]\ntau = -0.5\n",
+            "[engine]\ntau = nan\n",
             "[[query]]\nmax_dim = 1\n", // tau required
             "[[query]]\ntau = 0.5\nmax_dim = 7\n",
+            "[[query]]\ntau = -1.0\n",
         ] {
             let e = RunConfig::from_str(bad).unwrap_err();
             assert!(matches!(e, DoryError::Config(_)), "{bad}: {e}");

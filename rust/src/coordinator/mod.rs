@@ -233,7 +233,7 @@ pub fn run_batch(cfg: &RunConfig) -> Result<BatchReport> {
     // The session (and its persistent pool) exists before the
     // filtration is built, so the whole front-end runs as pool work —
     // once, no matter how many queries follow.
-    let mut session = Session::new(opts);
+    let session = Session::new(opts);
     memtrack::reset_peak();
     let mut timings = PhaseTimer::new();
     let mut fstats = FiltrationStats::default();

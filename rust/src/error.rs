@@ -74,6 +74,21 @@ impl DoryError {
     pub fn io(path: &std::path::Path, e: impl fmt::Display) -> Self {
         DoryError::Io(format!("{path:?}: {e}"))
     }
+
+    /// Stable machine-readable failure class, used as the `kind` field
+    /// of wire errors (`dory serve`) so clients branch without parsing
+    /// messages.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            DoryError::InvalidInput(_) => "InvalidInput",
+            DoryError::Request(_) => "Request",
+            DoryError::TauExceedsIngest { .. } => "TauExceedsIngest",
+            DoryError::Overflow(_) => "Overflow",
+            DoryError::Config(_) => "Config",
+            DoryError::Io(_) => "Io",
+            DoryError::Dataset(_) => "Dataset",
+        }
+    }
 }
 
 #[cfg(test)]

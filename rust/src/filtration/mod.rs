@@ -43,6 +43,7 @@ pub use paired::Key;
 use std::sync::Mutex;
 use std::time::Instant;
 
+use crate::error::DoryError;
 use crate::geometry::MetricData;
 use crate::reduction::pool::{SharedSlice, ThreadPool};
 
@@ -284,18 +285,16 @@ impl EdgeFiltration {
         f
     }
 
-    /// Build from an explicit weighted edge list (deduplicated and
-    /// thresholded by the caller). NaN distances are rejected with a
-    /// descriptive panic instead of the old comparator sort's opaque
-    /// `partial_cmp().unwrap()` mid-sort failure.
+    /// Build from an explicit weighted edge list (thresholded by the
+    /// caller). Panicking wrapper over [`Self::try_from_weighted_edges`]
+    /// for legacy callers; new code (the serve layer, anything taking
+    /// untrusted input) should use the `try_` variant and surface the
+    /// typed error.
     pub fn from_weighted_edges(n: u32, raw: Vec<(f64, u32, u32)>, tau_max: f64) -> Self {
         Self::from_weighted_edges_pooled(n, raw, tau_max, None, &mut FiltrationStats::default())
     }
 
-    /// [`Self::from_weighted_edges`] with the key sort running on the
-    /// pool (chunk-sort + merge); byte-identical output for every pool
-    /// size. This is the PJRT/Pallas kernel path: the accelerator hands
-    /// back the thresholded pair list, the pool orders it.
+    /// Panicking wrapper over [`Self::try_from_weighted_edges_pooled`].
     pub fn from_weighted_edges_pooled(
         n: u32,
         raw: Vec<(f64, u32, u32)>,
@@ -303,24 +302,85 @@ impl EdgeFiltration {
         pool: Option<&ThreadPool>,
         stats: &mut FiltrationStats,
     ) -> Self {
+        match Self::try_from_weighted_edges_pooled(n, raw, tau_max, pool, stats) {
+            Ok(f) => f,
+            Err(e) => panic!("EdgeFiltration: {e}"),
+        }
+    }
+
+    /// Validating variant of [`Self::from_weighted_edges`].
+    pub fn try_from_weighted_edges(
+        n: u32,
+        raw: Vec<(f64, u32, u32)>,
+        tau_max: f64,
+    ) -> Result<Self, DoryError> {
+        Self::try_from_weighted_edges_pooled(n, raw, tau_max, None, &mut FiltrationStats::default())
+    }
+
+    /// Build from an explicit weighted edge list with the key sort
+    /// running on the pool (chunk-sort + merge); byte-identical output
+    /// for every pool size. This is the PJRT/Pallas kernel path: the
+    /// accelerator hands back the thresholded pair list, the pool
+    /// orders it.
+    ///
+    /// The list is validated on the way in — a malformed pair list
+    /// would otherwise corrupt the CSR degree counts and break the
+    /// strict-unique-key assumption of the pooled sort. Rejected with a
+    /// typed [`DoryError::InvalidInput`] naming the offending edge:
+    /// NaN distances, endpoints outside `0..n`, self-loops (`a == b`),
+    /// and duplicate pairs (in either orientation — endpoint order is
+    /// normalized to `a < b` first, so `(a, b)` and `(b, a)` collide).
+    pub fn try_from_weighted_edges_pooled(
+        n: u32,
+        raw: Vec<(f64, u32, u32)>,
+        tau_max: f64,
+        pool: Option<&ThreadPool>,
+        stats: &mut FiltrationStats,
+    ) -> Result<Self, DoryError> {
+        let mut keys: Vec<u128> = Vec::with_capacity(raw.len());
+        let mut pairs: Vec<u64> = Vec::with_capacity(raw.len());
+        for &(d, a, b) in &raw {
+            if d.is_nan() {
+                return Err(DoryError::InvalidInput(format!(
+                    "NaN distance on edge ({a}, {b}); reject NaN inputs at ingestion \
+                     (MetricData::validate)"
+                )));
+            }
+            if a == b {
+                return Err(DoryError::InvalidInput(format!(
+                    "self-loop edge ({a}, {b}); Rips edges join distinct vertices"
+                )));
+            }
+            let (a, b) = if a < b { (a, b) } else { (b, a) };
+            if b >= n {
+                return Err(DoryError::InvalidInput(format!(
+                    "edge ({a}, {b}) references vertex {b} outside 0..{n}"
+                )));
+            }
+            keys.push(edge_key(d, a, b));
+            pairs.push(((a as u64) << 32) | b as u64);
+        }
+        // Duplicate detection on the normalized pairs. The value-sorted
+        // keys don't make pair-duplicates adjacent (two weights for one
+        // pair sort far apart), so sort the pairs themselves.
+        pairs.sort_unstable();
+        if let Some(w) = pairs.windows(2).find(|w| w[0] == w[1]) {
+            let (a, b) = ((w[0] >> 32) as u32, w[0] as u32);
+            return Err(DoryError::InvalidInput(format!(
+                "duplicate edge ({a}, {b}) in weighted input; pairs must be unique up to \
+                 orientation"
+            )));
+        }
+        drop(pairs);
         stats.f1_builds += 1;
         let t0 = Instant::now();
-        let mut keys: Vec<u128> = Vec::with_capacity(raw.len());
-        for &(d, a, b) in &raw {
-            assert!(
-                !d.is_nan(),
-                "EdgeFiltration: NaN distance on edge ({a}, {b}); reject NaN inputs at \
-                 ingestion (MetricData::validate)"
-            );
-            keys.push(edge_key(d, a, b));
-        }
         stats.edges_considered += raw.len() as u64;
         drop(raw);
         let keys = sort_keys(keys, pool, stats);
         let f = Self::from_sorted_keys(n, &keys, tau_max, pool);
         stats.sort_ns += t0.elapsed().as_nanos() as u64;
         stats.edges_kept += f.n_edges() as u64;
-        f
+        Ok(f)
     }
 
     /// Unpack sorted keys into the `edges`/`values` arrays (tiled over
@@ -888,6 +948,62 @@ mod tests {
             vec![(0.5, 0, 1), (f64::NAN, 0, 2)],
             1.0,
         );
+    }
+
+    #[test]
+    fn malformed_weighted_edges_are_typed_errors() {
+        use crate::error::DoryError;
+        // Self-loop.
+        let e = EdgeFiltration::try_from_weighted_edges(3, vec![(0.5, 1, 1)], 1.0).unwrap_err();
+        assert!(matches!(&e, DoryError::InvalidInput(m) if m.contains("self-loop")), "{e}");
+        // Out-of-range endpoint.
+        let e = EdgeFiltration::try_from_weighted_edges(3, vec![(0.5, 0, 3)], 1.0).unwrap_err();
+        assert!(matches!(&e, DoryError::InvalidInput(m) if m.contains("outside")), "{e}");
+        // Duplicate pair, same orientation — different weights, so the
+        // value-sorted keys are unique and only pair-level validation
+        // catches it.
+        let e = EdgeFiltration::try_from_weighted_edges(
+            3,
+            vec![(0.5, 0, 1), (0.9, 0, 1)],
+            1.0,
+        )
+        .unwrap_err();
+        assert!(matches!(&e, DoryError::InvalidInput(m) if m.contains("duplicate")), "{e}");
+        // Duplicate pair across orientations.
+        let e = EdgeFiltration::try_from_weighted_edges(
+            3,
+            vec![(0.5, 0, 1), (0.7, 1, 0)],
+            1.0,
+        )
+        .unwrap_err();
+        assert!(matches!(&e, DoryError::InvalidInput(m) if m.contains("duplicate")), "{e}");
+        // NaN distance.
+        let e =
+            EdgeFiltration::try_from_weighted_edges(3, vec![(f64::NAN, 0, 1)], 1.0).unwrap_err();
+        assert!(matches!(&e, DoryError::InvalidInput(m) if m.contains("NaN")), "{e}");
+    }
+
+    #[test]
+    fn reversed_orientation_is_normalized() {
+        // (b, a) input must come out as the canonical (a, b) edge with
+        // identical bits to the already-normalized build.
+        let fwd = EdgeFiltration::try_from_weighted_edges(
+            3,
+            vec![(0.5, 0, 1), (0.25, 1, 2)],
+            1.0,
+        )
+        .unwrap();
+        let rev = EdgeFiltration::try_from_weighted_edges(
+            3,
+            vec![(0.5, 1, 0), (0.25, 2, 1)],
+            1.0,
+        )
+        .unwrap();
+        assert_eq!(fwd.edges, rev.edges);
+        assert_eq!(fwd.edges, vec![(1, 2), (0, 1)]);
+        let fb: Vec<u64> = fwd.values.iter().map(|v| v.to_bits()).collect();
+        let rb: Vec<u64> = rev.values.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(fb, rb);
     }
 
     #[test]

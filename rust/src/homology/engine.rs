@@ -604,7 +604,7 @@ impl Engine {
 /// [`crate::error::DoryError`]s instead of the panics this wrapper
 /// re-raises.
 pub fn compute_ph(data: &MetricData, tau: f64, opts: &EngineOptions) -> PhResult {
-    let mut session = super::Session::new(opts.clone());
+    let session = super::Session::new(opts.clone());
     let handle = session
         .ingest(data, tau)
         .unwrap_or_else(|e| panic!("{e}"));
@@ -626,7 +626,7 @@ pub fn compute_ph(data: &MetricData, tau: f64, opts: &EngineOptions) -> PhResult
 /// [`super::Session::ingest_filtration`] to keep the pool and the CSR
 /// alive across queries.
 pub fn compute_ph_from_filtration(f: &EdgeFiltration, opts: &EngineOptions) -> PhResult {
-    let mut session = super::Session::new(opts.clone());
+    let session = super::Session::new(opts.clone());
     let handle = session
         .ingest_filtration(
             f.clone(),

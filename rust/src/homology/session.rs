@@ -21,10 +21,24 @@
 //!   that τ would produce, so diagrams are **bit-identical** to
 //!   independent one-shot runs (pinned by `rust/tests/session.rs`).
 //!
+//! **Concurrency.** Every post-ingest structure is immutable, so
+//! [`Session::query`] and [`Session::run_batch`] take `&self`: N
+//! threads may serve queries against one handle (or several) at once,
+//! all sharing the engine's work-stealing pool through its
+//! multi-generation scheduler (`reduction::pool`). Per-query state —
+//! reduction scratch, bucket tables, phase timers, stat accumulators —
+//! lives on the calling thread's stack, and the session counters are
+//! atomics, so a concurrent schedule produces byte-for-byte the same
+//! diagrams as running the queries back to back (pinned by
+//! `rust/tests/concurrent.rs`).
+//!
 //! Every fallible entry returns a typed [`DoryError`] instead of
-//! panicking: NaN inputs are [`DoryError::InvalidInput`], the DoryNS
-//! size guard is [`DoryError::Overflow`], a request beyond the ingested
-//! threshold is [`DoryError::TauExceedsIngest`].
+//! panicking: NaN inputs are [`DoryError::InvalidInput`], a NaN or
+//! negative query τ is [`DoryError::Request`], the DoryNS size guard is
+//! [`DoryError::Overflow`], a request beyond the ingested threshold is
+//! [`DoryError::TauExceedsIngest`].
+
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::error::DoryError;
 use crate::filtration::{
@@ -38,7 +52,8 @@ use super::engine::{Engine, EngineOptions, PhResult};
 /// One dataset, ingested once: the sorted edge set, its neighborhoods
 /// (and DoryNS table when the session runs dense lookup), and the
 /// front-end report of the single build that produced them. Handles are
-/// independent values — one session can serve several datasets.
+/// independent values — one session can serve several datasets — and
+/// `Sync`, so any number of query threads may share one.
 pub struct FiltrationHandle {
     f: EdgeFiltration,
     nb: Neighborhoods,
@@ -73,13 +88,23 @@ impl FiltrationHandle {
 
     /// The largest τ a query can ask for without re-ingesting: +∞ for a
     /// complete or enclosing-truncated handle (the truncation preserves
-    /// every diagram), the ingest τ otherwise.
+    /// every diagram), the ingest τ otherwise. A query past an
+    /// enclosing-truncated handle's own `r_enc` is *served* — with
+    /// unchanged diagrams — but the response reports the clamp through
+    /// [`PhResponse::tau_effective`] / [`PhResponse::truncated`].
     pub fn tau_capacity(&self) -> f64 {
         if self.complete || self.enclosing_applied {
             f64::INFINITY
         } else {
             self.f.tau_max
         }
+    }
+
+    /// The ingest applied the enclosing-radius truncation (the handle's
+    /// edge set ends at `r_enc` even though [`Self::tau_capacity`] is
+    /// +∞).
+    pub fn enclosing_applied(&self) -> bool {
+        self.enclosing_applied
     }
 
     /// The ingest's front-end report (build counters, stage times,
@@ -91,6 +116,12 @@ impl FiltrationHandle {
     /// The shared sorted edge set.
     pub fn filtration(&self) -> &EdgeFiltration {
         &self.f
+    }
+
+    /// Heap footprint of the shared structures (edge set + CSR/DoryNS),
+    /// the unit the serve layer's byte-budget cache evicts on.
+    pub fn memory_bytes(&self) -> usize {
+        self.f.memory_bytes() + self.nb.memory_bytes()
     }
 
     /// The τ the ingest was asked for (the effective build threshold is
@@ -106,7 +137,8 @@ impl FiltrationHandle {
 #[derive(Clone, Debug, Default)]
 pub struct PhRequest {
     /// Filtration threshold; must be servable from the handle
-    /// ([`FiltrationHandle::tau_capacity`]).
+    /// ([`FiltrationHandle::tau_capacity`]). NaN and negative values
+    /// are refused with [`DoryError::Request`].
     pub tau: f64,
     /// Highest homology dimension (0..=2); `None` = session default.
     pub max_dim: Option<usize>,
@@ -140,25 +172,32 @@ pub struct PhResponse {
     pub label: Option<String>,
     /// The requested τ.
     pub tau: f64,
-    /// The τ the filtration was actually cut at (the enclosing radius
-    /// for a query-time truncation, else the requested τ).
+    /// The τ the filtration was actually cut at: the enclosing radius
+    /// when the request was clamped to an enclosing-truncated handle
+    /// (or asked for a query-time truncation), else the requested τ.
     pub tau_effective: f64,
     /// Edges of the served (possibly prefix-truncated) filtration.
     pub n_edges: usize,
-    /// The query was served from a proper prefix of the handle.
+    /// The served edge set is smaller than the requested τ nominally
+    /// implies: either a proper prefix of the handle (a sub-τ query),
+    /// or the handle's enclosing-truncated set standing in for a
+    /// requested τ beyond `r_enc` (diagrams unchanged — see
+    /// `tau_effective` for the actual cut).
     pub truncated: bool,
     pub result: PhResult,
 }
 
 /// Lifetime counters of a session — the service-level proof that N
-/// queries cost one build.
+/// queries cost one build. A snapshot: the live counters are atomics
+/// inside the session (queries increment them through `&self`).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct SessionStats {
     pub ingests: u64,
     pub queries: u64,
-    /// Queries served from a proper prefix of a handle.
+    /// Queries served from a smaller edge set than the requested τ
+    /// nominally implies (proper prefix, or enclosing clamp).
     pub truncated_queries: u64,
-    /// Queries served from a handle's full edge set.
+    /// Queries served from a handle's full edge set at its own τ.
     pub full_queries: u64,
     /// F1 builds performed by this session (== `ingests`: queries never
     /// build).
@@ -181,12 +220,49 @@ impl SessionStats {
     }
 }
 
+/// Live session counters, bumped through `&self` by concurrent queries.
+#[derive(Default)]
+struct SessionCounters {
+    ingests: AtomicU64,
+    queries: AtomicU64,
+    truncated_queries: AtomicU64,
+    full_queries: AtomicU64,
+    filtration_builds: AtomicU64,
+    nb_builds: AtomicU64,
+}
+
+impl SessionCounters {
+    fn snapshot(&self) -> SessionStats {
+        SessionStats {
+            ingests: self.ingests.load(Ordering::Relaxed),
+            queries: self.queries.load(Ordering::Relaxed),
+            truncated_queries: self.truncated_queries.load(Ordering::Relaxed),
+            full_queries: self.full_queries.load(Ordering::Relaxed),
+            filtration_builds: self.filtration_builds.load(Ordering::Relaxed),
+            nb_builds: self.nb_builds.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// How [`Session::resolve_cut`] decided to serve a request.
+struct Cut {
+    /// Edges of the handle's sorted set that serve the request.
+    m: usize,
+    /// The τ that cut corresponds to.
+    tau_effective: f64,
+    /// The requested τ exceeded the handle's enclosing-truncated edge
+    /// set and was clamped to `r_enc` (served set unchanged, diagrams
+    /// unchanged; reported through the response).
+    clamped: bool,
+}
+
 /// A persistent PH service endpoint: the [`Engine`] (with its worker
 /// pool) plus session counters. Create once, ingest datasets into
-/// [`FiltrationHandle`]s, answer [`PhRequest`]s.
+/// [`FiltrationHandle`]s, answer [`PhRequest`]s — from as many threads
+/// as you like: all entry points take `&self`.
 pub struct Session {
     engine: Engine,
-    stats: SessionStats,
+    counters: SessionCounters,
 }
 
 impl Session {
@@ -195,7 +271,7 @@ impl Session {
     pub fn new(opts: EngineOptions) -> Self {
         Self {
             engine: Engine::new(opts),
-            stats: SessionStats::default(),
+            counters: SessionCounters::default(),
         }
     }
 
@@ -207,8 +283,11 @@ impl Session {
         self.engine.options()
     }
 
+    /// Snapshot of the lifetime counters (consistent-enough under
+    /// concurrency: each counter is exact; cross-counter sums may lag a
+    /// query that is mid-flight).
     pub fn stats(&self) -> SessionStats {
-        self.stats
+        self.counters.snapshot()
     }
 
     /// Ingest a metric dataset at threshold `tau`: validate, build the
@@ -217,7 +296,7 @@ impl Session {
     /// return the reusable handle. NaN inputs are rejected with
     /// [`DoryError::InvalidInput`]; the DoryNS size guard returns
     /// [`DoryError::Overflow`].
-    pub fn ingest(&mut self, data: &MetricData, tau: f64) -> Result<FiltrationHandle, DoryError> {
+    pub fn ingest(&self, data: &MetricData, tau: f64) -> Result<FiltrationHandle, DoryError> {
         if tau.is_nan() {
             return Err(DoryError::Request("ingest tau is NaN".into()));
         }
@@ -243,7 +322,7 @@ impl Session {
     /// the build recorded (an `F1` phase on the kernel path); the
     /// neighborhoods build is added here.
     pub fn ingest_filtration(
-        &mut self,
+        &self,
         f: EdgeFiltration,
         timings: PhaseTimer,
         fstats: FiltrationStats,
@@ -259,7 +338,7 @@ impl Session {
 
     #[allow(clippy::too_many_arguments)]
     fn finish_ingest(
-        &mut self,
+        &self,
         n_points: usize,
         f: EdgeFiltration,
         timings: PhaseTimer,
@@ -276,9 +355,13 @@ impl Session {
             && f.tau_max == f64::INFINITY
             && n >= 2
             && f.n_edges() == n * (n - 1) / 2;
-        self.stats.ingests += 1;
-        self.stats.filtration_builds += fstats.f1_builds;
-        self.stats.nb_builds += fstats.nb_builds;
+        self.counters.ingests.fetch_add(1, Ordering::Relaxed);
+        self.counters
+            .filtration_builds
+            .fetch_add(fstats.f1_builds, Ordering::Relaxed);
+        self.counters
+            .nb_builds
+            .fetch_add(fstats.nb_builds, Ordering::Relaxed);
         Ok(FiltrationHandle {
             f,
             nb,
@@ -295,20 +378,20 @@ impl Session {
     /// Serve one request from a handle. Sub-τ requests reuse the shared
     /// sorted edge set (prefix copy) and CSR (capped view); diagrams are
     /// bit-identical to a fresh one-shot run at the same τ and options.
-    pub fn query(
-        &mut self,
-        h: &FiltrationHandle,
-        req: &PhRequest,
-    ) -> Result<PhResponse, DoryError> {
+    ///
+    /// Takes `&self`: any number of threads may query one session (and
+    /// one handle) concurrently; all per-query state is local to this
+    /// call and the pool interleaves the queries' generations fairly.
+    pub fn query(&self, h: &FiltrationHandle, req: &PhRequest) -> Result<PhResponse, DoryError> {
         let opts_eff = self.effective_options(req)?;
-        let (m, tau_effective) = self.resolve_cut(h, req)?;
+        let cut = self.resolve_cut(h, req)?;
         let ne = h.f.n_edges();
         let mut timings = h.timings.clone();
-        let truncated = m < ne;
-        let mut result = if truncated {
+        let prefix = cut.m < ne;
+        let mut result = if prefix {
             timings.start("truncate");
-            let fq = h.f.prefix(m, tau_effective);
-            let nbq = h.nb.truncated(m as u32);
+            let fq = h.f.prefix(cut.m, cut.tau_effective);
+            let nbq = h.nb.truncated(cut.m as u32);
             timings.stop();
             self.engine
                 .compute_prepared(&fq, &nbq, timings, h.fstats, &opts_eff)
@@ -317,17 +400,18 @@ impl Session {
                 .compute_prepared(&h.f, &h.nb, timings, h.fstats, &opts_eff)
         };
         result.stats.n = h.n_points;
-        self.stats.queries += 1;
+        let truncated = prefix || cut.clamped;
+        self.counters.queries.fetch_add(1, Ordering::Relaxed);
         if truncated {
-            self.stats.truncated_queries += 1;
+            self.counters.truncated_queries.fetch_add(1, Ordering::Relaxed);
         } else {
-            self.stats.full_queries += 1;
+            self.counters.full_queries.fetch_add(1, Ordering::Relaxed);
         }
         Ok(PhResponse {
             label: req.label.clone(),
             tau: req.tau,
-            tau_effective,
-            n_edges: m,
+            tau_effective: cut.tau_effective,
+            n_edges: cut.m,
             truncated,
             result,
         })
@@ -336,9 +420,11 @@ impl Session {
     /// Serve many requests over the one ingest (and the one pool),
     /// sequentially, failing fast on the first refused request. The
     /// amortization claim of the service mode: N responses, one build —
-    /// `stats().filtration_builds` does not move.
+    /// `stats().filtration_builds` does not move. Callers wanting the
+    /// requests *concurrent* simply issue [`Session::query`] calls from
+    /// scoped threads — see the serve layer's batch handler.
     pub fn run_batch(
-        &mut self,
+        &self,
         h: &FiltrationHandle,
         reqs: &[PhRequest],
     ) -> Result<Vec<PhResponse>, DoryError> {
@@ -363,19 +449,26 @@ impl Session {
         if let Some(s) = req.shortcut {
             opts.shortcut = s;
         }
+        // A NaN τ would make every `v <= tau` comparison false and
+        // silently serve the empty diagram; a negative τ is the same
+        // trap one comparison later (distances are non-negative). Both
+        // are caller errors, refused before any work is scheduled.
         if req.tau.is_nan() {
             return Err(DoryError::Request("query tau is NaN".into()));
+        }
+        if req.tau < 0.0 {
+            return Err(DoryError::Request(format!(
+                "query tau must be non-negative, got {}",
+                req.tau
+            )));
         }
         Ok(opts)
     }
 
     /// How many edges of the handle's sorted set serve this request,
-    /// and the τ that cut corresponds to.
-    fn resolve_cut(
-        &self,
-        h: &FiltrationHandle,
-        req: &PhRequest,
-    ) -> Result<(usize, f64), DoryError> {
+    /// the τ that cut corresponds to, and whether the request was
+    /// clamped to an enclosing-truncated handle's edge set.
+    fn resolve_cut(&self, h: &FiltrationHandle, req: &PhRequest) -> Result<Cut, DoryError> {
         let ne = h.f.n_edges();
         if req.tau == f64::INFINITY {
             if req.enclosing == Some(false) && h.enclosing_applied {
@@ -392,11 +485,22 @@ impl Session {
                 // build-time row-max sweep) and serve the prefix.
                 let r = enclosing_radius_of_filtration(&h.f);
                 if r.is_finite() {
-                    return Ok((h.f.prefix_len(r), r));
+                    return Ok(Cut {
+                        m: h.f.prefix_len(r),
+                        tau_effective: r,
+                        clamped: false,
+                    });
                 }
             }
             return if h.tau_capacity() == f64::INFINITY {
-                Ok((ne, h.f.tau_max))
+                // On an enclosing-truncated handle the requested +∞
+                // exceeds the stored set: same clamp as the finite case
+                // below, reported the same way.
+                Ok(Cut {
+                    m: ne,
+                    tau_effective: h.f.tau_max,
+                    clamped: h.enclosing_applied,
+                })
             } else {
                 Err(DoryError::TauExceedsIngest {
                     requested: req.tau,
@@ -404,25 +508,37 @@ impl Session {
                 })
             };
         }
-        // Finite τ at or beyond the ingest's enclosing radius: the flag
-        // complex is a cone past r_enc, so the full truncated set serves
-        // any such τ with unchanged diagrams (this is what makes
-        // `tau_capacity()` +∞ for enclosing-truncated handles; such
-        // answers are diagram-equal to a fresh untruncated run at that
-        // τ, whose extra cone edges only ever form zero-persistence
-        // pairs).
+        // Finite τ at or beyond the ingest's enclosing radius. Past
+        // r_enc = min_i max_j d(i,j) the flag complex is a cone: some
+        // vertex c is within r_enc of every vertex, so every simplex
+        // entering after r_enc has its coface with c entering at the
+        // same value, and those simplices pair off into zero-persistence
+        // pairs. The truncated set therefore serves ANY τ ≥ r_enc with
+        // diagrams identical to a fresh untruncated build at that τ
+        // (this is what makes `tau_capacity()` +∞ here) — but the
+        // *request* asked for more edges than the handle stores, so the
+        // response must report the clamp: `tau_effective` is r_enc, not
+        // the requested τ, and `truncated` is set.
         if h.enclosing_applied && req.tau >= h.f.tau_max {
-            return Ok((ne, h.f.tau_max));
+            return Ok(Cut {
+                m: ne,
+                tau_effective: h.f.tau_max,
+                clamped: req.tau > h.f.tau_max,
+            });
         }
-        // Finite (or -inf) τ: a prefix of the sorted set, as long as the
-        // ingest covered it.
+        // Finite τ: a prefix of the sorted set, as long as the ingest
+        // covered it.
         if req.tau > h.f.tau_max && !h.complete {
             return Err(DoryError::TauExceedsIngest {
                 requested: req.tau,
                 ingested: h.f.tau_max,
             });
         }
-        Ok((h.f.prefix_len(req.tau), req.tau))
+        Ok(Cut {
+            m: h.f.prefix_len(req.tau),
+            tau_effective: req.tau,
+            clamped: false,
+        })
     }
 }
 
@@ -459,7 +575,7 @@ mod tests {
             threads: 2,
             ..Default::default()
         };
-        let mut s = Session::new(opts.clone());
+        let s = Session::new(opts.clone());
         let h = s.ingest(&data, 0.9).unwrap();
         for tau in [0.2, 0.45, 0.7, 0.9] {
             let resp = s.query(&h, &PhRequest::at(tau)).unwrap();
@@ -483,7 +599,7 @@ mod tests {
     #[test]
     fn typed_errors_on_bad_requests() {
         let data = cloud(12, 3);
-        let mut s = Session::new(EngineOptions {
+        let s = Session::new(EngineOptions {
             max_dim: 1,
             threads: 1,
             ..Default::default()
@@ -499,6 +615,16 @@ mod tests {
         ));
         assert!(matches!(
             s.query(&h, &PhRequest::at(f64::NAN)).unwrap_err(),
+            DoryError::Request(_)
+        ));
+        // Negative τ (including -inf) is refused up front, not served as
+        // an empty diagram.
+        assert!(matches!(
+            s.query(&h, &PhRequest::at(-0.25)).unwrap_err(),
+            DoryError::Request(_)
+        ));
+        assert!(matches!(
+            s.query(&h, &PhRequest::at(f64::NEG_INFINITY)).unwrap_err(),
             DoryError::Request(_)
         ));
         let bad_dim = PhRequest {
@@ -521,7 +647,7 @@ mod tests {
     #[test]
     fn per_request_overrides_apply() {
         let data = cloud(20, 5);
-        let mut s = Session::new(EngineOptions {
+        let s = Session::new(EngineOptions {
             max_dim: 2,
             threads: 1,
             ..Default::default()

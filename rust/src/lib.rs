@@ -128,7 +128,19 @@
 //! ingest, emitting a single summary JSON with a per-query `queries`
 //! array plus the session amortization counters.
 //!
-//! Entry points: [`homology::Session`] for services,
+//! Since the concurrent-serving revision every session entry point
+//! takes `&self`: N threads may ingest and query one session (even one
+//! handle) simultaneously, and the pool's multi-generation scheduler
+//! interleaves their task generations fairly — a large tenant cannot
+//! starve a small one, and every concurrent schedule stays
+//! bit-identical to serial execution. The [`serve`] module builds the
+//! multi-tenant front on top: a byte-budgeted LRU cache of
+//! `FiltrationHandle`s keyed by dataset content hash, a line-delimited
+//! JSON-RPC loop (`dory serve`), typed [`error::DoryError`]s on the
+//! wire, and per-tenant counters in the summary.
+//!
+//! Entry points: [`homology::Session`] for services, [`serve::Server`]
+//! for the multi-tenant wire front,
 //! [`homology::Engine`] / [`homology::engine`] for the bare pipeline,
 //! [`coordinator`] for config-driven runs, `examples/` for
 //! walkthroughs (`examples/service_batch.rs` is the session tour).
@@ -146,6 +158,7 @@ pub mod io;
 pub mod homology;
 pub mod reduction;
 pub mod runtime;
+pub mod serve;
 pub mod util;
 
 pub use error::DoryError;

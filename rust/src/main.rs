@@ -3,6 +3,8 @@
 //! Subcommands:
 //!   run       compute PH (flags or --config TOML; repeat --tau for a
 //!             multi-query batch served from one ingest)
+//!   serve     multi-tenant JSON-RPC loop over stdio (one request per
+//!             line; see `dory::serve` for the wire protocol)
 //!   generate  export a synthetic dataset to disk
 //!   info      show PJRT platform + artifact inventory
 //!   help      this text
@@ -40,6 +42,7 @@ fn main() -> ExitCode {
 fn dispatch(args: &[String]) -> Result<()> {
     match args.first().map(String::as_str) {
         Some("run") => cmd_run(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
         Some("generate") => cmd_generate(&args[1..]),
         Some("info") => cmd_info(),
         Some("help") | Some("--help") | Some("-h") | None => {
@@ -97,6 +100,17 @@ run flags:
   --summary <file.json>     write the machine-readable run summary (one
                             file; batch runs add a `queries` array)
 
+serve flags:
+  --threads <int>           worker threads shared by all tenants [4]
+  --dim <0|1|2>             default max homology dimension       [2]
+  --no-shortcut             default the apparent-pair shortcut off
+  --cache-mb <int>          handle-cache byte budget in MiB      [256]
+  Reads one JSON request per line on stdin, writes one JSON response
+  per line on stdout; EOF or a {\"method\":\"shutdown\"} request ends the
+  loop with a {\"summary\":...} trailer (per-tenant counters, cache and
+  session stats, peak RSS). See the `dory::serve` module docs for the
+  ingest/query/batch wire schema.
+
 generate flags:
   --dataset <kind> --n <int> --seed <int> [--condition control|auxin]
   --out <file>              points file (.xyz) or sparse list for hic
@@ -141,7 +155,13 @@ fn cmd_run(args: &[String]) -> Result<()> {
             "--condition" => condition = Some(val()?.clone()),
             "--tau" => {
                 let v = val()?;
-                taus.push(if v == "inf" { f64::INFINITY } else { v.parse()? });
+                let t = if v == "inf" { f64::INFINITY } else { v.parse()? };
+                // `"NaN".parse::<f64>()` succeeds, and a NaN (or negative)
+                // τ would silently serve an empty diagram downstream.
+                if t.is_nan() || t < 0.0 {
+                    bail!("--tau must be a non-negative number or `inf`, got {v}");
+                }
+                taus.push(t);
             }
             "--dim" => cfg.max_dim = val()?.parse()?,
             "--threads" => cfg.threads = val()?.parse()?,
@@ -299,6 +319,39 @@ fn cmd_run(args: &[String]) -> Result<()> {
         let mx = img.iter().cloned().fold(0.0f32, f32::max);
         println!("persistence image: {g}x{g}, max intensity {mx:.4}");
     }
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let mut threads = 4usize;
+    let mut max_dim = 2usize;
+    let mut shortcut = true;
+    let mut cache_mb = 256usize;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        let mut val = || it.next().with_context(|| format!("{a} needs a value"));
+        match a.as_str() {
+            "--threads" => threads = val()?.parse()?,
+            "--dim" => max_dim = val()?.parse()?,
+            "--no-shortcut" => shortcut = false,
+            "--cache-mb" => cache_mb = val()?.parse()?,
+            other => bail!("unknown flag {other}"),
+        }
+    }
+    if max_dim > 2 {
+        bail!("--dim must be 0, 1 or 2 (paper scope)");
+    }
+    let opts = dory::homology::EngineOptions {
+        max_dim,
+        threads,
+        shortcut,
+        ..Default::default()
+    };
+    let server = dory::serve::Server::new(opts, cache_mb << 20);
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    let served = server.serve(stdin.lock(), stdout.lock())?;
+    eprintln!("served {served} requests");
     Ok(())
 }
 

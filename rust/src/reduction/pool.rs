@@ -14,11 +14,20 @@
 //!   steals from the *back* of a victim's deque (classic Chase–Lev
 //!   discipline, here with plain mutexed deques — tasks are
 //!   column-granular, so queue ops are not the bottleneck);
-//! * tasks carry their generation tag, so a straggler from generation
-//!   `k` can never execute (or steal) generation `k+1` work;
 //! * completion is task-counted, not worker-counted: the caller's
-//!   [`Ticket`] resolves when the last *task* retires, no matter which
-//!   workers ran it.
+//!   [`Ticket`] resolves when the last *task* of its generation retires,
+//!   no matter which workers ran it.
+//!
+//! **Multiple generations may be in flight at once.** Each generation
+//! owns its job closure, task count, and panic flag, and every queued
+//! task is tagged with its generation, so N callers (concurrent session
+//! queries, the pipelined scheduler, the parallel front-end) share one
+//! pool without coordinating. Per-worker queues keep one *lane* per live
+//! generation and pick lanes with a rotating cursor — bounded streaks of
+//! same-generation tasks for job-handle locality, then a forced rotation
+//! — so a huge generation cannot starve a small one submitted after it.
+//! Panics are reported to the owning generation's ticket only; other
+//! in-flight generations are unaffected.
 //!
 //! [`ThreadPool::submit_stealing`] returns without blocking, which is
 //! what lets the serial–parallel scheduler overlap batch *k*'s serial
@@ -29,12 +38,18 @@
 
 use std::collections::VecDeque;
 use std::ops::Range;
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
 type Job = Arc<dyn Fn(usize, Range<usize>) + Send + Sync>;
+
+/// Max consecutive same-generation tasks a worker runs before the lane
+/// pick is forced to rotate. Small enough that a competing generation is
+/// served within a few column-granular tasks; large enough to amortize
+/// the state-lock job acquire/release across a streak.
+const FAIR_STREAK: u32 = 8;
 
 /// A raw shared view of a mutable slice for pool jobs that write
 /// provably disjoint index sets (filtration tile splices, the CSR
@@ -93,11 +108,31 @@ impl<'a, T> SharedSlice<'a, T> {
     }
 }
 
-/// Per-worker deque of `(generation, index range)` tasks.
-type TaskQueue = Mutex<VecDeque<(u64, Range<usize>)>>;
+/// Per-worker task queues: one non-empty *lane* of index ranges per live
+/// generation, in submit order. Lanes are pruned the moment they drain,
+/// so `lanes` only ever holds generations with queued work here.
+#[derive(Default)]
+struct WorkerQueues {
+    lanes: Vec<(u64, VecDeque<Range<usize>>)>,
+    /// Retired lane buffers kept for reuse (bounded, mirroring
+    /// `BucketTable::clear`'s retained-capacity discipline — without the
+    /// cap a pathological generation would pin its high-water mark for
+    /// the pool's engine-long lifetime).
+    spares: Vec<VecDeque<Range<usize>>>,
+}
+
+impl WorkerQueues {
+    fn retire_lane(&mut self, idx: usize) {
+        let (_, dq) = self.lanes.remove(idx);
+        if self.spares.len() < 2 && dq.capacity() <= 4096 {
+            self.spares.push(dq);
+        }
+    }
+}
 
 /// Cumulative pool counters (monotone; snapshot before/after a section
-/// and subtract to get per-section numbers).
+/// and subtract to get per-section numbers). With concurrent callers the
+/// deltas attribute the *pool's* work in a window, not one caller's.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct PoolStats {
     /// Generations submitted.
@@ -112,16 +147,40 @@ pub struct PoolStats {
     pub span_ns: u64,
 }
 
+/// One in-flight generation: its job closure, progress counters and
+/// panic flag. Lives in `State::live` from submit until the owning
+/// [`Ticket`] observes completion and removes it.
+struct GenEntry {
+    gen: u64,
+    job: Job,
+    /// Tasks of this generation not yet retired.
+    remaining: usize,
+    /// Workers currently holding a clone of `job`. The ticket resolves
+    /// only when this hits zero, so captured borrows are never released
+    /// while any worker still holds the (lifetime-erased) closure — true
+    /// scoped-thread semantics, not just last-task-retired.
+    held: usize,
+    /// A task body of this generation panicked (re-raised by the owning
+    /// ticket's wait; other generations are unaffected).
+    panicked: bool,
+    /// Submit instant (for span accounting).
+    started: Instant,
+}
+
 struct Shared {
     state: Mutex<State>,
     work_cv: Condvar,
     done_cv: Condvar,
-    /// Per-worker deques of `(generation, index range)` tasks.
-    queues: Vec<TaskQueue>,
-    /// Tasks of the in-flight generation not yet retired.
-    remaining: AtomicUsize,
-    /// A job body panicked (reported by the ticket's wait).
-    panicked: AtomicBool,
+    /// Per-worker task queues.
+    queues: Vec<Mutex<WorkerQueues>>,
+    /// Tasks dealt into queues and not yet popped (any generation).
+    /// Governs worker sleep: incremented under the state lock at submit,
+    /// decremented at pop, re-checked under the state lock before a
+    /// worker parks — so a wakeup can never be lost.
+    pending: AtomicUsize,
+    /// Rotating lane cursor shared by all workers: statistically fair
+    /// selection among live generations without per-worker bookkeeping.
+    rr: AtomicUsize,
     generations: AtomicU64,
     tasks: AtomicU64,
     steals: AtomicU64,
@@ -130,23 +189,17 @@ struct Shared {
 }
 
 struct State {
+    /// Last generation id handed out.
     generation: u64,
-    /// Highest generation whose last task has retired.
-    done_gen: u64,
-    job: Option<Job>,
-    /// Workers still holding a clone of some generation's job closure.
-    /// A ticket resolves only when this hits zero, so captured borrows
-    /// are never released while any worker still holds the (lifetime-
-    /// erased) closure — true scoped-thread semantics, not just
-    /// last-task-retired.
-    live_jobs: usize,
-    /// Submit instant of the in-flight generation (for span accounting).
-    started: Option<Instant>,
-    in_flight: bool,
+    /// In-flight generations, submit order. Small (one per concurrent
+    /// caller), so linear scans are fine.
+    live: Vec<GenEntry>,
     shutdown: bool,
 }
 
-/// Fixed-size pool; workers live for the pool's lifetime.
+/// Fixed-size pool; workers live for the pool's lifetime. `Sync`: any
+/// number of threads may submit generations concurrently through a
+/// shared reference.
 pub struct ThreadPool {
     shared: Arc<Shared>,
     workers: Vec<JoinHandle<()>>,
@@ -163,7 +216,8 @@ pub struct Ticket<'p> {
 }
 
 impl Ticket<'_> {
-    /// Block until every task of this generation has retired.
+    /// Block until every task of this generation has retired and every
+    /// worker has dropped its handle on the job closure.
     pub fn wait(mut self) {
         self.wait_ref();
     }
@@ -174,14 +228,24 @@ impl Ticket<'_> {
         }
         let shared = &self.pool.shared;
         let mut st = shared.state.lock().unwrap();
-        while st.done_gen < self.gen || st.live_jobs > 0 {
+        let entry = loop {
+            let idx = st
+                .live
+                .iter()
+                .position(|e| e.gen == self.gen)
+                .expect("ticket's generation must be live until its own wait removes it");
+            if st.live[idx].remaining == 0 && st.live[idx].held == 0 {
+                break st.live.remove(idx);
+            }
             st = shared.done_cv.wait(st).unwrap();
-        }
-        st.job = None;
-        st.in_flight = false;
+        };
         drop(st);
         self.done = true;
-        if shared.panicked.swap(false, Ordering::Relaxed) {
+        let panicked = entry.panicked;
+        // The job closure (and any captured values' destructors) drops
+        // here, on the owning caller's thread, outside the state lock.
+        drop(entry);
+        if panicked {
             panic!("ThreadPool: a job panicked in a worker thread");
         }
     }
@@ -199,18 +263,14 @@ impl ThreadPool {
         let shared = Arc::new(Shared {
             state: Mutex::new(State {
                 generation: 0,
-                done_gen: 0,
-                job: None,
-                live_jobs: 0,
-                started: None,
-                in_flight: false,
+                live: Vec::new(),
                 shutdown: false,
             }),
             work_cv: Condvar::new(),
             done_cv: Condvar::new(),
-            queues: (0..n).map(|_| Mutex::new(VecDeque::new())).collect(),
-            remaining: AtomicUsize::new(0),
-            panicked: AtomicBool::new(false),
+            queues: (0..n).map(|_| Mutex::new(WorkerQueues::default())).collect(),
+            pending: AtomicUsize::new(0),
+            rr: AtomicUsize::new(0),
             generations: AtomicU64::new(0),
             tasks: AtomicU64::new(0),
             steals: AtomicU64::new(0),
@@ -247,9 +307,10 @@ impl ThreadPool {
     /// Start a generation: split `0..len` into `grain`-sized tasks, deal
     /// them round-robin into the worker deques, wake the pool and return
     /// immediately. `f(tid, range)` runs once per task on whichever
-    /// worker pops (or steals) it. At most one generation may be in
-    /// flight per pool; the caller must resolve the [`Ticket`] before
-    /// submitting again (dropping it resolves it).
+    /// worker pops (or steals) it. Any number of generations may be in
+    /// flight at once — concurrent session queries and the pipelined
+    /// scheduler all share the pool — and the workers interleave them
+    /// fairly (see the module docs).
     ///
     /// The returned ticket is tied to `'scope`, so the borrow checker
     /// keeps everything the closure captures alive until the ticket is
@@ -311,27 +372,29 @@ impl ThreadPool {
             n_tasks += len.div_ceil(grain.max(1));
         }
         let mut st = self.shared.state.lock().unwrap();
-        assert!(
-            !st.in_flight,
-            "ThreadPool: generation already in flight (wait on the previous Ticket first)"
-        );
         st.generation += 1;
         let gen = st.generation;
         self.shared.generations.fetch_add(1, Ordering::Relaxed);
         if n_tasks == 0 {
             // Nothing to do: pre-resolve so wait() returns immediately.
-            st.done_gen = gen;
             return Ticket {
                 pool: self,
                 gen,
                 done: true,
             };
         }
-        // Publish the task count before any queue is filled: stragglers
-        // from the previous generation are fenced off by the generation
-        // tag on each task, and nothing of this generation can retire
-        // before the state lock (held throughout) is released.
-        self.shared.remaining.store(n_tasks, Ordering::Release);
+        st.live.push(GenEntry {
+            gen,
+            job: arc,
+            remaining: n_tasks,
+            held: 0,
+            panicked: false,
+            started: Instant::now(),
+        });
+        // Deal while holding the state lock: nothing of this generation
+        // can retire before the lock is released, and workers parked on
+        // `work_cv` re-check `pending` under the same lock, so the
+        // increment below can never be missed.
         let mut offset = 0usize;
         let mut w = 0usize;
         for &(len, grain) in regions {
@@ -339,18 +402,23 @@ impl ThreadPool {
             let mut start = 0usize;
             while start < len {
                 let end = (start + grain).min(len);
-                self.shared.queues[w % self.n]
-                    .lock()
+                let mut q = self.shared.queues[w % self.n].lock().unwrap();
+                if q.lanes.last().map(|l| l.0) != Some(gen) {
+                    let dq = q.spares.pop().unwrap_or_default();
+                    q.lanes.push((gen, dq));
+                }
+                q.lanes
+                    .last_mut()
                     .unwrap()
-                    .push_back((gen, offset + start..offset + end));
+                    .1
+                    .push_back(offset + start..offset + end);
+                drop(q);
                 start = end;
                 w += 1;
             }
             offset += len;
         }
-        st.job = Some(arc);
-        st.in_flight = true;
-        st.started = Some(Instant::now());
+        self.shared.pending.fetch_add(n_tasks, Ordering::Release);
         self.shared.work_cv.notify_all();
         drop(st);
         Ticket {
@@ -385,104 +453,153 @@ impl ThreadPool {
     }
 }
 
-fn pop_own(shared: &Shared, tid: usize, gen: u64) -> Option<Range<usize>> {
+/// Pop a task from this worker's own queue, front-first within a lane.
+/// `prefer` biases the pick toward the generation whose job handle the
+/// worker already holds; the caller clears it every [`FAIR_STREAK`]
+/// tasks so a competing generation is always served promptly.
+fn pop_own(shared: &Shared, tid: usize, prefer: Option<u64>) -> Option<(u64, Range<usize>)> {
     let mut q = shared.queues[tid].lock().unwrap();
-    if q.front().is_some_and(|&(g, _)| g == gen) {
-        return q.pop_front().map(|(_, r)| r);
+    let k = q.lanes.len();
+    if k == 0 {
+        return None;
     }
-    None
+    let idx = prefer
+        .and_then(|g| q.lanes.iter().position(|l| l.0 == g))
+        .unwrap_or_else(|| shared.rr.fetch_add(1, Ordering::Relaxed) % k);
+    let gen = q.lanes[idx].0;
+    // Lanes are pruned when drained, so every lane is non-empty.
+    let r = q.lanes[idx].1.pop_front().unwrap();
+    if q.lanes[idx].1.is_empty() {
+        q.retire_lane(idx);
+    }
+    drop(q);
+    shared.pending.fetch_sub(1, Ordering::AcqRel);
+    Some((gen, r))
 }
 
-fn steal(shared: &Shared, tid: usize, gen: u64) -> Option<Range<usize>> {
+/// Steal a task from a victim's queue, back-first within a rotating lane.
+fn steal(shared: &Shared, tid: usize) -> Option<(u64, Range<usize>)> {
     let n = shared.queues.len();
     for off in 1..n {
         let victim = (tid + off) % n;
         let mut q = shared.queues[victim].lock().unwrap();
-        if q.back().is_some_and(|&(g, _)| g == gen) {
-            let task = q.pop_back().map(|(_, r)| r);
-            drop(q);
-            shared.steals.fetch_add(1, Ordering::Relaxed);
-            return task;
+        let k = q.lanes.len();
+        if k == 0 {
+            continue;
         }
+        let idx = shared.rr.fetch_add(1, Ordering::Relaxed) % k;
+        let gen = q.lanes[idx].0;
+        let r = q.lanes[idx].1.pop_back().unwrap();
+        if q.lanes[idx].1.is_empty() {
+            q.retire_lane(idx);
+        }
+        drop(q);
+        shared.pending.fetch_sub(1, Ordering::AcqRel);
+        shared.steals.fetch_add(1, Ordering::Relaxed);
+        return Some((gen, r));
     }
     None
 }
 
+/// Clone the generation's job and mark this worker as holding it.
+fn acquire_job(shared: &Shared, gen: u64) -> Job {
+    let mut st = shared.state.lock().unwrap();
+    let e = st
+        .live
+        .iter_mut()
+        .find(|e| e.gen == gen)
+        .expect("a queued task's generation must be live");
+    e.held += 1;
+    e.job.clone()
+}
+
+/// Drop the held job clone and, if that was the last handle on a fully
+/// retired generation, wake its ticket. The clone is dropped *before*
+/// the bookkeeping, so once a ticket sees `held == 0` no worker can
+/// touch the closure again (not even destructors of captured values).
+fn release_job(shared: &Shared, held: &mut Option<(u64, Job)>) {
+    let Some((gen, job)) = held.take() else {
+        return;
+    };
+    drop(job);
+    let mut st = shared.state.lock().unwrap();
+    let e = st
+        .live
+        .iter_mut()
+        .find(|e| e.gen == gen)
+        .expect("a held generation stays live until every handle is released");
+    e.held -= 1;
+    let resolve = e.held == 0 && e.remaining == 0;
+    drop(st);
+    if resolve {
+        shared.done_cv.notify_all();
+    }
+}
+
 fn worker_loop(tid: usize, shared: Arc<Shared>) {
-    let mut last_gen = 0u64;
+    // Job handle cached across consecutive same-generation tasks, and a
+    // streak counter that forces the lane pick to rotate (fairness).
+    let mut held: Option<(u64, Job)> = None;
+    let mut streak = 0u32;
     loop {
-        // Sleep until a new generation is published (or shutdown).
-        let (job, gen) = {
-            let mut st = shared.state.lock().unwrap();
-            loop {
-                if st.shutdown {
-                    return;
-                }
-                if st.generation != last_gen && st.job.is_some() {
-                    last_gen = st.generation;
-                    st.live_jobs += 1;
-                    break (st.job.clone().unwrap(), st.generation);
-                }
-                st = shared.work_cv.wait(st).unwrap();
-            }
+        let prefer = match &held {
+            Some((g, _)) if streak < FAIR_STREAK => Some(*g),
+            _ => None,
         };
-        // Drain: own deque first, then steal. Tasks never re-enter a
-        // queue, so an empty sweep means this worker is done for the
-        // generation (others may still be executing their last task).
-        loop {
-            let Some(range) = pop_own(&shared, tid, gen).or_else(|| steal(&shared, tid, gen))
-            else {
-                break;
-            };
-            let t0 = Instant::now();
-            let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                job(tid, range);
-            }));
-            shared
-                .busy_ns
-                .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-            shared.tasks.fetch_add(1, Ordering::Relaxed);
-            if ok.is_err() {
-                shared.panicked.store(true, Ordering::Relaxed);
-            }
-            if shared.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
-                // Last task of the generation: stamp the span, publish
-                // completion, wake the ticket holder.
-                let mut st = shared.state.lock().unwrap();
-                if let Some(t) = st.started.take() {
-                    shared
-                        .span_ns
-                        .fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        match pop_own(&shared, tid, prefer).or_else(|| steal(&shared, tid)) {
+            Some((gen, range)) => {
+                if held.as_ref().map(|(g, _)| *g) != Some(gen) {
+                    release_job(&shared, &mut held);
+                    held = Some((gen, acquire_job(&shared, gen)));
                 }
-                st.done_gen = gen;
-                drop(st);
-                shared.done_cv.notify_all();
+                // A rotated (non-preferred) pick starts a fresh streak.
+                streak = if prefer.is_some() { streak + 1 } else { 1 };
+                let job = &held.as_ref().unwrap().1;
+                let t0 = Instant::now();
+                let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    job(tid, range);
+                }));
+                shared
+                    .busy_ns
+                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                shared.tasks.fetch_add(1, Ordering::Relaxed);
+                // Retire the task against its generation.
+                let mut st = shared.state.lock().unwrap();
+                let e = st
+                    .live
+                    .iter_mut()
+                    .find(|e| e.gen == gen)
+                    .expect("an executing task's generation must be live");
+                if ok.is_err() {
+                    e.panicked = true;
+                }
+                e.remaining -= 1;
+                if e.remaining == 0 {
+                    // Last task of the generation: stamp the span. The
+                    // ticket still waits for `held` to drain — this very
+                    // worker holds a handle — so no wakeup is needed yet;
+                    // the final `release_job` delivers it.
+                    let span = e.started.elapsed().as_nanos() as u64;
+                    shared.span_ns.fetch_add(span, Ordering::Relaxed);
+                }
             }
-        }
-        // Between generations, drop any buffer capacity a pathological
-        // generation left in this worker's deque: the tasks are gone,
-        // but without the shrink the high-water mark would pin memory
-        // for the pool's (engine-long) lifetime. The bound mirrors
-        // `BucketTable::clear`'s retained-capacity discipline. No new
-        // generation can be dealt yet — the previous ticket cannot
-        // resolve before `live_jobs` drops below.
-        {
-            let mut q = shared.queues[tid].lock().unwrap();
-            if q.is_empty() && q.capacity() > 4096 {
-                q.shrink_to(4096);
+            None => {
+                // Out of work: release the cached job handle (waking any
+                // ticket this worker was the last holder for), then park
+                // until new tasks are dealt.
+                release_job(&shared, &mut held);
+                streak = 0;
+                let mut st = shared.state.lock().unwrap();
+                loop {
+                    if st.shutdown {
+                        return;
+                    }
+                    if shared.pending.load(Ordering::Acquire) > 0 {
+                        break;
+                    }
+                    st = shared.work_cv.wait(st).unwrap();
+                }
             }
-        }
-        // Release the job clone *before* announcing it: the ticket only
-        // resolves once every worker has dropped its closure, so the
-        // caller's borrowed data can never be touched afterwards (not
-        // even by destructors of captured values).
-        drop(job);
-        let mut st = shared.state.lock().unwrap();
-        st.live_jobs -= 1;
-        let release = st.live_jobs == 0;
-        drop(st);
-        if release {
-            shared.done_cv.notify_all();
         }
     }
 }
@@ -712,6 +829,117 @@ mod tests {
                 "seed={seed} threads={threads} len={len} grain={grain}"
             );
         }
+    }
+
+    #[test]
+    fn concurrent_generations_cover_their_ranges_exactly_once() {
+        // N caller threads share one pool, each submitting its own
+        // generations; every caller's indices execute exactly once.
+        let pool = ThreadPool::new(4);
+        let callers = 6usize;
+        let marks: Vec<Vec<AtomicU64>> = (0..callers)
+            .map(|_| (0..503).map(|_| AtomicU64::new(0)).collect())
+            .collect();
+        std::thread::scope(|s| {
+            for (c, m) in marks.iter().enumerate() {
+                let pool = &pool;
+                s.spawn(move || {
+                    for _round in 0..3 {
+                        pool.run_stealing(m.len(), 1 + c % 5, |_t, r| {
+                            for i in r {
+                                m[i].fetch_add(1, Ordering::SeqCst);
+                            }
+                        });
+                    }
+                });
+            }
+        });
+        for (c, m) in marks.iter().enumerate() {
+            assert!(
+                m.iter().all(|x| x.load(Ordering::SeqCst) == 3),
+                "caller {c} lost or duplicated tasks"
+            );
+        }
+    }
+
+    #[test]
+    fn overlapping_submits_from_one_thread() {
+        // Two generations in flight at once from a single caller: the
+        // second submit must not require the first ticket to resolve.
+        let pool = ThreadPool::new(3);
+        let a = AtomicU64::new(0);
+        let b = AtomicU64::new(0);
+        // SAFETY: both tickets are waited on below, before a/b die.
+        let ta = unsafe {
+            pool.submit_stealing(100, 7, |_t, r| {
+                for _ in r {
+                    a.fetch_add(1, Ordering::SeqCst);
+                }
+            })
+        };
+        let tb = unsafe {
+            pool.submit_stealing(64, 3, |_t, r| {
+                for _ in r {
+                    b.fetch_add(1, Ordering::SeqCst);
+                }
+            })
+        };
+        tb.wait();
+        ta.wait();
+        assert_eq!(a.load(Ordering::SeqCst), 100);
+        assert_eq!(b.load(Ordering::SeqCst), 64);
+    }
+
+    #[test]
+    fn small_generation_completes_while_large_one_runs() {
+        // Fairness: a small generation submitted after a large one must
+        // finish long before the pool drains the large one's tasks.
+        let pool = ThreadPool::new(2);
+        let slow_done = AtomicU64::new(0);
+        let sink = AtomicU64::new(0);
+        // SAFETY: waited below; captures outlive the workers' use.
+        let big = unsafe {
+            pool.submit_stealing(4000, 1, |_t, r| {
+                for _ in r {
+                    for k in 0..2000u64 {
+                        sink.fetch_add(k, Ordering::Relaxed);
+                    }
+                    slow_done.fetch_add(1, Ordering::SeqCst);
+                }
+            })
+        };
+        let hits = AtomicU64::new(0);
+        pool.run_stealing(8, 1, |_t, r| {
+            hits.fetch_add(r.len() as u64, Ordering::SeqCst);
+        });
+        // The small generation resolved; the big one must still have
+        // work outstanding (8 interleaved tasks ≪ 4000 slow ones).
+        assert_eq!(hits.load(Ordering::SeqCst), 8);
+        assert!(
+            slow_done.load(Ordering::SeqCst) < 4000,
+            "small generation was starved behind the large one"
+        );
+        big.wait();
+        assert_eq!(slow_done.load(Ordering::SeqCst), 4000);
+    }
+
+    #[test]
+    fn panic_reported_to_owning_ticket_only() {
+        let pool = ThreadPool::new(4);
+        let good = AtomicU64::new(0);
+        let bad = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run_stealing(16, 1, |_t, r| {
+                if r.start == 7 {
+                    panic!("intentional test panic");
+                }
+            });
+        }));
+        assert!(bad.is_err(), "panicking generation must re-raise");
+        // The pool stays healthy and later generations are unaffected.
+        pool.run_stealing(32, 2, |_t, r| {
+            good.fetch_add(r.len() as u64, Ordering::SeqCst);
+        });
+        assert_eq!(good.load(Ordering::SeqCst), 32);
     }
 
     #[test]

@@ -1,0 +1,221 @@
+//! Byte-budgeted LRU cache of [`FiltrationHandle`]s.
+//!
+//! The serving layer keys handles by a content fingerprint of the
+//! ingested dataset (+ its τ), so two tenants posting the same dataset
+//! share one ingest. Eviction is strict LRU over a monotone use tick —
+//! no wall-clock, no ties — which makes the eviction order a pure
+//! function of the request sequence and therefore testable bit-for-bit.
+//!
+//! Handles are held behind `Arc`: eviction never invalidates a query
+//! in flight, it only stops *new* lookups from finding the handle.
+
+use std::sync::Arc;
+
+use crate::homology::FiltrationHandle;
+
+/// One cached ingest.
+struct Entry {
+    key: String,
+    /// Payload size charged against the budget (edge set + CSR bytes).
+    bytes: usize,
+    /// Monotone use tick; larger = more recently used.
+    last_used: u64,
+    handle: Arc<FiltrationHandle>,
+}
+
+/// Lifetime counters of the cache, reported in the serve summary.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub insertions: u64,
+    pub evictions: u64,
+    /// Bytes currently charged.
+    pub bytes: usize,
+    /// High-water mark of `bytes`.
+    pub peak_bytes: usize,
+}
+
+/// Strict-LRU handle cache with a byte budget.
+///
+/// Not internally synchronized — the server wraps it in a `Mutex`;
+/// queries clone the `Arc` out under the lock and reduce outside it.
+pub struct HandleCache {
+    entries: Vec<Entry>,
+    budget_bytes: usize,
+    tick: u64,
+    stats: CacheStats,
+}
+
+impl HandleCache {
+    /// A cache evicting down to `budget_bytes`. A budget of 0 still
+    /// admits each insert (the newest entry is never evicted by its own
+    /// insertion) but evicts it on the next one.
+    pub fn new(budget_bytes: usize) -> Self {
+        Self {
+            entries: Vec::new(),
+            budget_bytes,
+            tick: 0,
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Look up `key`, bumping its recency on a hit.
+    pub fn get(&mut self, key: &str) -> Option<Arc<FiltrationHandle>> {
+        self.tick += 1;
+        match self.entries.iter_mut().find(|e| e.key == key) {
+            Some(e) => {
+                e.last_used = self.tick;
+                self.stats.hits += 1;
+                Some(Arc::clone(&e.handle))
+            }
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert `handle` under `key` (replacing any same-key entry), then
+    /// evict least-recently-used entries until the budget holds —
+    /// except the entry just inserted, which always survives its own
+    /// insertion even when it alone exceeds the budget (the caller is
+    /// about to query it). Returns the evicted keys, oldest first.
+    pub fn insert(&mut self, key: &str, handle: Arc<FiltrationHandle>) -> Vec<String> {
+        self.tick += 1;
+        let bytes = handle.memory_bytes();
+        if let Some(pos) = self.entries.iter().position(|e| e.key == key) {
+            let old = self.entries.remove(pos);
+            self.stats.bytes -= old.bytes;
+        }
+        self.entries.push(Entry {
+            key: key.to_string(),
+            bytes,
+            last_used: self.tick,
+            handle,
+        });
+        self.stats.insertions += 1;
+        self.stats.bytes += bytes;
+        self.stats.peak_bytes = self.stats.peak_bytes.max(self.stats.bytes);
+
+        let mut evicted = Vec::new();
+        while self.stats.bytes > self.budget_bytes && self.entries.len() > 1 {
+            let oldest = self
+                .entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(i, _)| i)
+                .expect("len > 1");
+            let e = self.entries.remove(oldest);
+            self.stats.bytes -= e.bytes;
+            self.stats.evictions += 1;
+            evicted.push(e.key);
+        }
+        evicted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::MetricData;
+    use crate::homology::{EngineOptions, Session};
+
+    fn handle_of(n: usize, seed: u64, s: &Session) -> Arc<FiltrationHandle> {
+        let data: MetricData = crate::datasets::random_cloud(n, 3, seed);
+        Arc::new(s.ingest(&data, f64::INFINITY).unwrap())
+    }
+
+    #[test]
+    fn lru_eviction_is_deterministic() {
+        let s = Session::new(EngineOptions {
+            threads: 1,
+            ..Default::default()
+        });
+        let a = handle_of(24, 1, &s);
+        let per = a.memory_bytes();
+        // Budget fits exactly two entries of this shape.
+        let mut c = HandleCache::new(2 * per + per / 2);
+        assert!(c.insert("a", Arc::clone(&a)).is_empty());
+        assert!(c.insert("b", handle_of(24, 2, &s)).is_empty());
+        // Touch "a" so "b" becomes the LRU victim.
+        assert!(c.get("a").is_some());
+        let evicted = c.insert("c", handle_of(24, 3, &s));
+        assert_eq!(evicted, vec!["b".to_string()]);
+        assert!(c.get("a").is_some());
+        assert!(c.get("b").is_none());
+        assert!(c.get("c").is_some());
+        let st = c.stats();
+        assert_eq!(st.insertions, 3);
+        assert_eq!(st.evictions, 1);
+        assert_eq!(st.hits, 3);
+        assert_eq!(st.misses, 1);
+        assert_eq!(st.bytes, 2 * per);
+        assert!(st.peak_bytes >= st.bytes);
+    }
+
+    #[test]
+    fn newest_insert_survives_even_over_budget() {
+        let s = Session::new(EngineOptions {
+            threads: 1,
+            ..Default::default()
+        });
+        let mut c = HandleCache::new(0);
+        let evicted = c.insert("only", handle_of(16, 7, &s));
+        assert!(evicted.is_empty());
+        assert_eq!(c.len(), 1);
+        assert!(c.get("only").is_some());
+        // The next insert evicts it.
+        let evicted = c.insert("next", handle_of(16, 8, &s));
+        assert_eq!(evicted, vec!["only".to_string()]);
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn same_key_reinsert_replaces_without_eviction() {
+        let s = Session::new(EngineOptions {
+            threads: 1,
+            ..Default::default()
+        });
+        let h = handle_of(16, 9, &s);
+        let per = h.memory_bytes();
+        let mut c = HandleCache::new(4 * per);
+        assert!(c.insert("k", Arc::clone(&h)).is_empty());
+        assert!(c.insert("k", h).is_empty());
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.stats().bytes, per);
+        assert_eq!(c.stats().insertions, 2);
+        assert_eq!(c.stats().evictions, 0);
+    }
+
+    #[test]
+    fn evicted_handle_stays_usable_through_its_arc() {
+        let s = Session::new(EngineOptions {
+            threads: 1,
+            ..Default::default()
+        });
+        let h = handle_of(20, 11, &s);
+        let mut c = HandleCache::new(0);
+        c.insert("a", Arc::clone(&h));
+        c.insert("b", handle_of(20, 12, &s)); // evicts "a"
+        assert!(c.get("a").is_none());
+        // The in-flight clone still serves queries.
+        let resp = s
+            .query(&h, &crate::homology::PhRequest::at(f64::INFINITY))
+            .unwrap();
+        assert!(!resp.result.diagram.points(0).is_empty());
+    }
+}

@@ -1,0 +1,740 @@
+//! Multi-tenant serving front: line-delimited JSON-RPC over any
+//! `BufRead`/`Write` pair (`dory serve` wires it to stdio).
+//!
+//! One request per line, one response per line, in request order:
+//!
+//! ```text
+//! {"id":1,"tenant":"a","method":"ingest","tau":1.5,"dataset":{"kind":"circle","n":64,"seed":7}}
+//! {"id":1,"ok":{"handle":"h9c…","cached":false,"n_points":64,"n_edges":812,"tau_capacity":1.5,"evicted":[]}}
+//! {"id":2,"tenant":"a","method":"query","handle":"h9c…","tau":0.9,"max_dim":1}
+//! {"id":2,"ok":{"tau":0.9,"tau_effective":0.9,"n_edges":..,"truncated":true,"betti":[…]}}
+//! ```
+//!
+//! Methods:
+//! - `ingest` — `dataset` is one of `{"kind","n","seed"}` (named
+//!   generator), `{"points":[[…],…]}` (point cloud), or
+//!   `{"n":N,"edges":[[a,b,d],…]}` (explicit weighted edges, validated
+//!   by the filtration front-end); `tau` defaults to `+∞` (use the
+//!   `1e999` overflow convention for ∞ on the wire). The dataset is
+//!   fingerprinted (content hash + τ bits) and served from the handle
+//!   cache when already ingested — the response says `"cached":true`
+//!   and charges a tenant cache hit.
+//! - `query` — a [`PhRequest`] against a cached `handle`
+//!   (`tau`, optional `max_dim`/`shortcut`/`enclosing`/`label`).
+//! - `batch` — `queries` (array of query bodies) against one `handle`,
+//!   run **concurrently** on scoped threads through the session's
+//!   `&self` query path; responses come back in request order and are
+//!   bit-identical to serial execution.
+//! - `stats` — the summary object (per-tenant counters, cache, session,
+//!   peak RSS) without stopping.
+//! - `shutdown` — acknowledge and stop; EOF stops too. Either way the
+//!   final line written is `{"summary":…}`.
+//!
+//! Failures never kill the loop: each is answered in place as
+//! `{"id":…,"error":{"kind":"<DoryError variant>","message":…}}` so a
+//! client can branch on the class ([`DoryError::kind`]) without parsing
+//! prose. Every response carries the request's `id` verbatim.
+//!
+//! Handles are cached in a byte-budgeted strict-LRU [`HandleCache`]
+//! behind a mutex; the handles themselves are `Arc`-shared, so eviction
+//! never races an in-flight query. The session and pool are shared by
+//! all tenants — concurrency comes from the pool's fair multi-generation
+//! scheduling, not from per-tenant engines.
+
+pub mod cache;
+
+pub use cache::{CacheStats, HandleCache};
+
+use std::collections::BTreeMap;
+use std::hash::Hasher;
+use std::io::{BufRead, Write};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::coordinator::{self, DatasetSpec};
+use crate::error::DoryError;
+use crate::filtration::{EdgeFiltration, FiltrationStats};
+use crate::geometry::{MetricData, PointCloud};
+use crate::homology::{EngineOptions, FiltrationHandle, PhRequest, PhResponse, Session};
+use crate::util::fxhash::FxHasher;
+use crate::util::json::Json;
+use crate::util::memtrack;
+use crate::util::timer::PhaseTimer;
+
+/// Per-tenant lifetime counters, reported in the summary.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TenantCounters {
+    pub ingests: u64,
+    pub queries: u64,
+    pub cache_hits: u64,
+    pub errors: u64,
+    /// Batch scheduling latency: per batched query, the time between
+    /// batch dispatch and that query's thread starting, summed.
+    pub queue_wait_ns: u64,
+}
+
+impl TenantCounters {
+    fn to_json(self) -> Json {
+        Json::obj()
+            .field("ingests", self.ingests)
+            .field("queries", self.queries)
+            .field("cache_hits", self.cache_hits)
+            .field("errors", self.errors)
+            .field("queue_wait_ns", self.queue_wait_ns)
+    }
+}
+
+/// The serving state: one shared [`Session`] (and worker pool), the
+/// handle cache, and per-tenant counters. All methods take `&self`.
+pub struct Server {
+    session: Session,
+    cache: Mutex<HandleCache>,
+    tenants: Mutex<BTreeMap<String, TenantCounters>>,
+}
+
+impl Server {
+    /// A server running `opts`, caching at most `cache_budget_bytes` of
+    /// handle payload (edge sets + CSRs).
+    pub fn new(opts: EngineOptions, cache_budget_bytes: usize) -> Self {
+        Self {
+            session: Session::new(opts),
+            cache: Mutex::new(HandleCache::new(cache_budget_bytes)),
+            tenants: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    pub fn session(&self) -> &Session {
+        &self.session
+    }
+
+    /// Drive the request loop until EOF or a `shutdown` request, then
+    /// write the `{"summary":…}` trailer. Returns the number of
+    /// requests served (including errored ones).
+    pub fn serve<R: BufRead, W: Write>(&self, reader: R, mut out: W) -> std::io::Result<u64> {
+        let mut served = 0u64;
+        for line in reader.lines() {
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            served += 1;
+            let (response, stop) = self.handle_line(&line);
+            writeln!(out, "{}", response.render())?;
+            out.flush()?;
+            if stop {
+                break;
+            }
+        }
+        writeln!(
+            out,
+            "{}",
+            Json::obj().field("summary", self.summary_json()).render()
+        )?;
+        out.flush()?;
+        Ok(served)
+    }
+
+    /// Serve one request line; returns the response and whether the
+    /// loop should stop.
+    pub fn handle_line(&self, line: &str) -> (Json, bool) {
+        let req = match Json::parse(line) {
+            Ok(j) => j,
+            Err(e) => {
+                let err = DoryError::Request(format!("parse: {e}"));
+                return (wire_error(Json::Null, &err), false);
+            }
+        };
+        let id = req.get("id").cloned().unwrap_or(Json::Null);
+        let tenant = req
+            .get("tenant")
+            .and_then(|t| t.as_str())
+            .unwrap_or("default")
+            .to_string();
+        let method = match req.get("method").and_then(|m| m.as_str()) {
+            Some(m) => m.to_string(),
+            None => {
+                let err = DoryError::Request("missing string field 'method'".into());
+                self.bump_tenant(&tenant, |t| t.errors += 1);
+                return (wire_error(id, &err), false);
+            }
+        };
+        let (result, stop) = match method.as_str() {
+            "ingest" => (self.handle_ingest(&tenant, &req), false),
+            "query" => (self.handle_query(&tenant, &req), false),
+            "batch" => (self.handle_batch(&tenant, &req), false),
+            "stats" => (Ok(self.summary_json()), false),
+            "shutdown" => (Ok(Json::obj().field("stopping", true)), true),
+            other => (
+                Err(DoryError::Request(format!("unknown method '{other}'"))),
+                false,
+            ),
+        };
+        match result {
+            Ok(ok) => (Json::obj().field("id", id).field("ok", ok), stop),
+            Err(e) => {
+                self.bump_tenant(&tenant, |t| t.errors += 1);
+                (wire_error(id, &e), stop)
+            }
+        }
+    }
+
+    fn bump_tenant(&self, tenant: &str, f: impl FnOnce(&mut TenantCounters)) {
+        let mut map = self.tenants.lock().unwrap();
+        f(map.entry(tenant.to_string()).or_default());
+    }
+
+    fn handle_ingest(&self, tenant: &str, req: &Json) -> Result<Json, DoryError> {
+        let dataset = req
+            .get("dataset")
+            .ok_or_else(|| DoryError::Request("ingest needs a 'dataset' object".into()))?;
+        let tau = match req.get("tau") {
+            None => f64::INFINITY,
+            Some(t) => t
+                .as_f64()
+                .ok_or_else(|| DoryError::Request("'tau' must be a number".into()))?,
+        };
+        if tau.is_nan() {
+            return Err(DoryError::Request("ingest tau is NaN".into()));
+        }
+        if tau < 0.0 {
+            return Err(DoryError::Request(format!(
+                "ingest tau must be non-negative, got {tau}"
+            )));
+        }
+        let key = fingerprint(dataset, tau);
+        if let Some(h) = self.cache.lock().unwrap().get(&key) {
+            self.bump_tenant(tenant, |t| {
+                t.ingests += 1;
+                t.cache_hits += 1;
+            });
+            return Ok(ingest_ok(&key, &h, true, &[]));
+        }
+        let handle = Arc::new(self.build_handle(dataset, tau)?);
+        let evicted = self.cache.lock().unwrap().insert(&key, Arc::clone(&handle));
+        self.bump_tenant(tenant, |t| t.ingests += 1);
+        Ok(ingest_ok(&key, &handle, false, &evicted))
+    }
+
+    /// Materialize and ingest one wire dataset form.
+    fn build_handle(&self, dataset: &Json, tau: f64) -> Result<FiltrationHandle, DoryError> {
+        if dataset.get("kind").is_some() {
+            let kind = dataset
+                .get("kind")
+                .and_then(|k| k.as_str())
+                .ok_or_else(|| DoryError::Request("'kind' must be a string".into()))?
+                .to_string();
+            let n = match dataset.get("n") {
+                None => 64,
+                Some(v) => v
+                    .as_usize()
+                    .ok_or_else(|| DoryError::Request("'n' must be a non-negative integer".into()))?,
+            };
+            let seed = match dataset.get("seed") {
+                None => 0,
+                Some(v) => v.as_usize().ok_or_else(|| {
+                    DoryError::Request("'seed' must be a non-negative integer".into())
+                })? as u64,
+            };
+            let spec = DatasetSpec::Named { kind, n, seed };
+            let data =
+                coordinator::build_dataset(&spec).map_err(|e| DoryError::Dataset(e.to_string()))?;
+            return self.session.ingest(&data, tau);
+        }
+        if let Some(rows) = dataset.get("points") {
+            let rows = rows
+                .as_arr()
+                .ok_or_else(|| DoryError::Request("'points' must be an array of rows".into()))?;
+            let mut coords = Vec::new();
+            let mut dim = 0usize;
+            for (i, row) in rows.iter().enumerate() {
+                let row = row.as_arr().ok_or_else(|| {
+                    DoryError::Request(format!("points[{i}] must be an array of numbers"))
+                })?;
+                if i == 0 {
+                    dim = row.len();
+                    if dim == 0 {
+                        return Err(DoryError::Request("points rows must be non-empty".into()));
+                    }
+                } else if row.len() != dim {
+                    return Err(DoryError::Request(format!(
+                        "points[{i}] has {} coordinates, expected {dim}",
+                        row.len()
+                    )));
+                }
+                for (j, v) in row.iter().enumerate() {
+                    coords.push(v.as_f64().ok_or_else(|| {
+                        DoryError::Request(format!("points[{i}][{j}] must be a number"))
+                    })?);
+                }
+            }
+            if coords.is_empty() {
+                return Err(DoryError::Request("'points' must be non-empty".into()));
+            }
+            let data = MetricData::Points(PointCloud::new(dim, coords));
+            return self.session.ingest(&data, tau);
+        }
+        if let Some(rows) = dataset.get("edges") {
+            let n = req_usize(dataset, "n")? as u32;
+            let rows = rows
+                .as_arr()
+                .ok_or_else(|| DoryError::Request("'edges' must be an array of [a,b,d]".into()))?;
+            let mut raw = Vec::with_capacity(rows.len());
+            for (i, row) in rows.iter().enumerate() {
+                let row = row.as_arr().filter(|r| r.len() == 3).ok_or_else(|| {
+                    DoryError::Request(format!("edges[{i}] must be [vertex, vertex, distance]"))
+                })?;
+                let a = row[0].as_usize().ok_or_else(|| {
+                    DoryError::Request(format!("edges[{i}][0] must be a vertex index"))
+                })?;
+                let b = row[1].as_usize().ok_or_else(|| {
+                    DoryError::Request(format!("edges[{i}][1] must be a vertex index"))
+                })?;
+                let d = row[2].as_f64().ok_or_else(|| {
+                    DoryError::Request(format!("edges[{i}][2] must be a distance"))
+                })?;
+                if a > u32::MAX as usize || b > u32::MAX as usize {
+                    return Err(DoryError::Request(format!(
+                        "edges[{i}] vertex index exceeds u32"
+                    )));
+                }
+                // Keep over-τ edges out, but let NaN through to the
+                // front-end validator so it reports the typed error.
+                if d > tau {
+                    continue;
+                }
+                raw.push((d, a as u32, b as u32));
+            }
+            let mut fstats = FiltrationStats::default();
+            let mut timings = PhaseTimer::new();
+            timings.start("F1");
+            let f = EdgeFiltration::try_from_weighted_edges_pooled(
+                n,
+                raw,
+                tau,
+                self.session.engine().pool(),
+                &mut fstats,
+            )?;
+            timings.stop();
+            return self.session.ingest_filtration(f, timings, fstats, "wire-edges");
+        }
+        Err(DoryError::Request(
+            "dataset must specify 'kind', 'points', or 'edges'".into(),
+        ))
+    }
+
+    fn lookup(&self, req: &Json) -> Result<Arc<FiltrationHandle>, DoryError> {
+        let key = req
+            .get("handle")
+            .and_then(|h| h.as_str())
+            .ok_or_else(|| DoryError::Request("missing string field 'handle'".into()))?;
+        self.cache.lock().unwrap().get(key).ok_or_else(|| {
+            DoryError::Request(format!(
+                "unknown or evicted handle '{key}'; re-ingest the dataset"
+            ))
+        })
+    }
+
+    fn handle_query(&self, tenant: &str, req: &Json) -> Result<Json, DoryError> {
+        let h = self.lookup(req)?;
+        let ph = parse_ph_request(req)?;
+        let resp = self.session.query(&h, &ph)?;
+        self.bump_tenant(tenant, |t| t.queries += 1);
+        Ok(query_ok(&resp))
+    }
+
+    fn handle_batch(&self, tenant: &str, req: &Json) -> Result<Json, DoryError> {
+        let h = self.lookup(req)?;
+        let bodies = req
+            .get("queries")
+            .and_then(|q| q.as_arr())
+            .ok_or_else(|| DoryError::Request("batch needs a 'queries' array".into()))?;
+        let phs = bodies
+            .iter()
+            .map(parse_ph_request)
+            .collect::<Result<Vec<_>, _>>()?;
+        // Fan the batch out over scoped threads: every query goes through
+        // the same `&self` session path a lone `query` request takes, so
+        // the pool interleaves them fairly and results stay bit-identical
+        // to serial execution. Responses return in request order.
+        let t0 = Instant::now();
+        let mut wait_ns = 0u64;
+        let results: Vec<Result<PhResponse, DoryError>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = phs
+                .iter()
+                .map(|ph| {
+                    let h = &h;
+                    scope.spawn(move || {
+                        let waited = t0.elapsed().as_nanos() as u64;
+                        (waited, self.session.query(h, ph))
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|jh| match jh.join() {
+                    Ok((waited, r)) => {
+                        wait_ns += waited;
+                        r
+                    }
+                    Err(_) => Err(DoryError::Request("batch query worker panicked".into())),
+                })
+                .collect()
+        });
+        self.bump_tenant(tenant, |t| {
+            t.queries += results.len() as u64;
+            t.queue_wait_ns += wait_ns;
+        });
+        let mut arr = Json::arr();
+        for r in results {
+            arr.push(query_ok(&r?));
+        }
+        Ok(Json::obj().field("responses", arr))
+    }
+
+    /// The summary object: per-tenant counters, cache stats, session
+    /// stats, peak RSS.
+    pub fn summary_json(&self) -> Json {
+        let mut tenants = Json::obj();
+        for (name, c) in self.tenants.lock().unwrap().iter() {
+            tenants = tenants.field(name, c.to_json());
+        }
+        let cs = self.cache.lock().unwrap().stats();
+        let cache = Json::obj()
+            .field("hits", cs.hits)
+            .field("misses", cs.misses)
+            .field("insertions", cs.insertions)
+            .field("evictions", cs.evictions)
+            .field("bytes", cs.bytes)
+            .field("peak_bytes", cs.peak_bytes);
+        Json::obj()
+            .field("tenants", tenants)
+            .field("cache", cache)
+            .field("session", self.session.stats().to_json())
+            .field("max_rss_bytes", memtrack::max_rss_bytes())
+    }
+}
+
+/// `{"id":…,"error":{"kind":…,"message":…}}`.
+fn wire_error(id: Json, e: &DoryError) -> Json {
+    Json::obj().field("id", id).field(
+        "error",
+        Json::obj()
+            .field("kind", e.kind())
+            .field("message", e.to_string()),
+    )
+}
+
+fn req_usize(obj: &Json, key: &str) -> Result<usize, DoryError> {
+    obj.get(key).and_then(|v| v.as_usize()).ok_or_else(|| {
+        DoryError::Request(format!("missing non-negative integer field '{key}'"))
+    })
+}
+
+/// The query body shared by `query` and each `batch` element. τ is
+/// required; NaN/negative τ pass through to the session's typed guard.
+fn parse_ph_request(req: &Json) -> Result<PhRequest, DoryError> {
+    let tau = req
+        .get("tau")
+        .and_then(|t| t.as_f64())
+        .ok_or_else(|| DoryError::Request("query needs a numeric 'tau'".into()))?;
+    let mut ph = PhRequest::at(tau);
+    if let Some(v) = req.get("max_dim") {
+        ph.max_dim = Some(v.as_usize().ok_or_else(|| {
+            DoryError::Request("'max_dim' must be a non-negative integer".into())
+        })?);
+    }
+    if let Some(v) = req.get("shortcut") {
+        ph.shortcut = Some(
+            v.as_bool()
+                .ok_or_else(|| DoryError::Request("'shortcut' must be a boolean".into()))?,
+        );
+    }
+    if let Some(v) = req.get("enclosing") {
+        ph.enclosing = Some(
+            v.as_bool()
+                .ok_or_else(|| DoryError::Request("'enclosing' must be a boolean".into()))?,
+        );
+    }
+    if let Some(v) = req.get("label") {
+        ph.label = Some(
+            v.as_str()
+                .ok_or_else(|| DoryError::Request("'label' must be a string".into()))?
+                .to_string(),
+        );
+    }
+    Ok(ph)
+}
+
+fn ingest_ok(key: &str, h: &FiltrationHandle, cached: bool, evicted: &[String]) -> Json {
+    let mut ev = Json::arr();
+    for k in evicted {
+        ev.push(k.as_str());
+    }
+    Json::obj()
+        .field("handle", key)
+        .field("cached", cached)
+        .field("n_points", h.n_points())
+        .field("n_edges", h.n_edges())
+        .field("tau_capacity", h.tau_capacity())
+        .field("memory_bytes", h.memory_bytes())
+        .field("evicted", ev)
+}
+
+fn query_ok(resp: &PhResponse) -> Json {
+    let d = &resp.result.diagram;
+    let mut betti = Json::arr();
+    for dim in 0..=d.max_dim() {
+        betti.push(
+            Json::obj()
+                .field("dim", dim)
+                .field("finite", d.finite(dim).len())
+                .field("essential", d.essential_count(dim)),
+        );
+    }
+    let mut obj = Json::obj();
+    if let Some(l) = &resp.label {
+        obj = obj.field("label", l.as_str());
+    }
+    obj.field("tau", resp.tau)
+        .field("tau_effective", resp.tau_effective)
+        .field("n_edges", resp.n_edges)
+        .field("truncated", resp.truncated)
+        .field("betti", betti)
+}
+
+/// Content fingerprint of an ingest: the dataset value's canonical
+/// rendering plus the τ bits, FxHash-mixed into a 64-bit key. Two
+/// tenants posting the same dataset at the same τ share one handle.
+/// FxHash is not collision-resistant against crafted inputs — tenants
+/// of one server share a process and are trusted to that extent.
+fn fingerprint(dataset: &Json, tau: f64) -> String {
+    let mut h = FxHasher::default();
+    h.write(dataset.render().as_bytes());
+    h.write_u64(tau.to_bits());
+    format!("h{:016x}", h.finish())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn server() -> Server {
+        Server::new(
+            EngineOptions {
+                threads: 2,
+                ..Default::default()
+            },
+            64 << 20,
+        )
+    }
+
+    fn drive(srv: &Server, lines: &str) -> Vec<Json> {
+        let mut out = Vec::new();
+        srv.serve(Cursor::new(lines.to_string()), &mut out).unwrap();
+        String::from_utf8(out)
+            .unwrap()
+            .lines()
+            .map(|l| Json::parse(l).unwrap())
+            .collect()
+    }
+
+    #[test]
+    fn ingest_query_roundtrip_with_cache_hit() {
+        let srv = server();
+        let lines = concat!(
+            r#"{"id":1,"tenant":"a","method":"ingest","tau":1e999,"dataset":{"kind":"circle","n":48,"seed":7}}"#,
+            "\n",
+            r#"{"id":2,"tenant":"b","method":"ingest","tau":1e999,"dataset":{"kind":"circle","n":48,"seed":7}}"#,
+            "\n",
+        );
+        let out = drive(&srv, lines);
+        let h1 = out[0].get("ok").unwrap();
+        let h2 = out[1].get("ok").unwrap();
+        assert_eq!(h1.get("cached").unwrap().as_bool(), Some(false));
+        assert_eq!(h2.get("cached").unwrap().as_bool(), Some(true));
+        let key = h1.get("handle").unwrap().as_str().unwrap().to_string();
+        assert_eq!(h2.get("handle").unwrap().as_str().unwrap(), key);
+
+        let q = format!(
+            "{{\"id\":3,\"tenant\":\"a\",\"method\":\"query\",\"handle\":\"{key}\",\"tau\":0.4,\"max_dim\":1}}\n"
+        );
+        let out = drive(&srv, &q);
+        let ok = out[0].get("ok").unwrap();
+        assert_eq!(ok.get("truncated").unwrap().as_bool(), Some(true));
+        let betti = ok.get("betti").unwrap().as_arr().unwrap();
+        assert_eq!(betti[0].get("dim").unwrap().as_usize(), Some(0));
+        // One filtration build served both tenants' ingests.
+        let summary = out.last().unwrap().get("summary").unwrap();
+        let session = summary.get("session").unwrap();
+        assert_eq!(session.get("filtration_builds").unwrap().as_usize(), Some(1));
+        let tenants = summary.get("tenants").unwrap();
+        assert_eq!(
+            tenants
+                .get("b")
+                .unwrap()
+                .get("cache_hits")
+                .unwrap()
+                .as_usize(),
+            Some(1)
+        );
+    }
+
+    #[test]
+    fn typed_errors_cross_the_wire() {
+        let srv = server();
+        let lines = concat!(
+            r#"{"id":1,"method":"ingest","dataset":{"n":3,"edges":[[0,0,0.5]]}}"#,
+            "\n",
+            r#"{"id":2,"method":"query","handle":"hdeadbeef00000000","tau":0.5}"#,
+            "\n",
+            r#"{"id":3,"method":"nope"}"#,
+            "\n",
+            r#"this is not json"#,
+            "\n",
+        );
+        let out = drive(&srv, lines);
+        let e1 = out[0].get("error").unwrap();
+        assert_eq!(e1.get("kind").unwrap().as_str(), Some("InvalidInput"));
+        assert!(e1.get("message").unwrap().as_str().unwrap().contains("self-loop"));
+        let e2 = out[1].get("error").unwrap();
+        assert_eq!(e2.get("kind").unwrap().as_str(), Some("Request"));
+        assert!(e2.get("message").unwrap().as_str().unwrap().contains("evicted"));
+        let e3 = out[2].get("error").unwrap();
+        assert!(e3.get("message").unwrap().as_str().unwrap().contains("unknown method"));
+        let e4 = out[3].get("error").unwrap();
+        assert!(e4.get("message").unwrap().as_str().unwrap().contains("parse"));
+        // Errors were counted against the (default) tenant.
+        let summary = out.last().unwrap().get("summary").unwrap();
+        let t = summary.get("tenants").unwrap().get("default").unwrap();
+        assert_eq!(t.get("errors").unwrap().as_usize(), Some(4));
+    }
+
+    #[test]
+    fn negative_tau_refused_on_the_wire() {
+        let srv = server();
+        let out = drive(
+            &srv,
+            concat!(
+                r#"{"id":1,"method":"ingest","dataset":{"kind":"circle","n":32,"seed":1}}"#,
+                "\n",
+                r#"{"id":2,"method":"ingest","tau":-1.0,"dataset":{"kind":"circle","n":32,"seed":1}}"#,
+                "\n",
+            ),
+        );
+        let key = out[0]
+            .get("ok")
+            .unwrap()
+            .get("handle")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .to_string();
+        let e = out[1].get("error").unwrap();
+        assert_eq!(e.get("kind").unwrap().as_str(), Some("Request"));
+        // Negative τ on a query: typed refusal from the session guard.
+        let q = format!(
+            "{{\"id\":3,\"method\":\"query\",\"handle\":\"{key}\",\"tau\":-0.25}}\n"
+        );
+        let out = drive(&srv, &q);
+        let e = out[0].get("error").unwrap();
+        assert_eq!(e.get("kind").unwrap().as_str(), Some("Request"));
+        assert!(e
+            .get("message")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .contains("non-negative"));
+    }
+
+    #[test]
+    fn batch_is_concurrent_and_order_preserving() {
+        let srv = server();
+        let out = drive(
+            &srv,
+            concat!(
+                r#"{"id":1,"method":"ingest","dataset":{"kind":"torus4","n":40,"seed":3}}"#,
+                "\n",
+            ),
+        );
+        let key = out[0]
+            .get("ok")
+            .unwrap()
+            .get("handle")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .to_string();
+        let taus = [0.5, 0.8, 1.1, 1.4];
+        let queries: Vec<String> = taus
+            .iter()
+            .map(|t| format!("{{\"tau\":{t},\"max_dim\":1,\"label\":\"t{t}\"}}"))
+            .collect();
+        let batch = format!(
+            "{{\"id\":2,\"tenant\":\"c\",\"method\":\"batch\",\"handle\":\"{key}\",\"queries\":[{}]}}\n",
+            queries.join(",")
+        );
+        let out = drive(&srv, &batch);
+        let resps = out[0]
+            .get("ok")
+            .unwrap()
+            .get("responses")
+            .unwrap()
+            .as_arr()
+            .unwrap();
+        assert_eq!(resps.len(), taus.len());
+        for (r, t) in resps.iter().zip(taus) {
+            assert_eq!(r.get("tau").unwrap().as_f64(), Some(t));
+            assert_eq!(r.get("label").unwrap().as_str(), Some(format!("t{t}").as_str()));
+        }
+        // Batch results match issuing the same queries serially.
+        let h = srv.lookup(&Json::parse(&format!("{{\"handle\":\"{key}\"}}")).unwrap()).unwrap();
+        for (r, t) in resps.iter().zip(taus) {
+            let serial = srv
+                .session
+                .query(&h, &PhRequest {
+                    tau: t,
+                    max_dim: Some(1),
+                    ..Default::default()
+                })
+                .unwrap();
+            let betti = r.get("betti").unwrap().as_arr().unwrap();
+            for dim in 0..=1usize {
+                assert_eq!(
+                    betti[dim].get("finite").unwrap().as_usize(),
+                    Some(serial.result.diagram.finite(dim).len())
+                );
+                assert_eq!(
+                    betti[dim].get("essential").unwrap().as_usize(),
+                    Some(serial.result.diagram.essential_count(dim))
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn shutdown_stops_and_summarizes() {
+        let srv = server();
+        let out = drive(
+            &srv,
+            concat!(
+                r#"{"id":1,"method":"shutdown"}"#,
+                "\n",
+                r#"{"id":2,"method":"stats"}"#,
+                "\n",
+            ),
+        );
+        // The post-shutdown request was never served.
+        assert_eq!(out.len(), 2);
+        assert_eq!(
+            out[0]
+                .get("ok")
+                .unwrap()
+                .get("stopping")
+                .unwrap()
+                .as_bool(),
+            Some(true)
+        );
+        assert!(out[1].get("summary").is_some());
+    }
+}

@@ -1,7 +1,11 @@
-//! Minimal JSON writer (no serde in the offline vendor set).
+//! Minimal JSON writer + parser (no serde in the offline vendor set).
 //!
-//! Only what the bench/report paths need: objects, arrays, strings,
-//! numbers, bools. Escapes per RFC 8259.
+//! The writer covers what the bench/report paths need: objects, arrays,
+//! strings, numbers, bools. Escapes per RFC 8259. The parser covers the
+//! serve layer's line-delimited wire requests (full RFC 8259 value
+//! grammar, including `\uXXXX` escapes with surrogate pairs), plus the
+//! writer's own `±1e999` infinity convention (f64 parsing maps it to
+//! ±∞ naturally).
 
 use std::fmt::Write as _;
 
@@ -49,6 +53,68 @@ impl Json {
         s
     }
 
+    /// Parse one JSON value from `src` (the whole string must be the
+    /// value, modulo surrounding whitespace). Errors are positioned
+    /// human-readable strings — the serve layer wraps them in
+    /// `DoryError::Request`.
+    pub fn parse(src: &str) -> Result<Json, String> {
+        let bytes = src.as_bytes();
+        let mut p = Parser { b: bytes, i: 0 };
+        p.ws();
+        let v = p.value()?;
+        p.ws();
+        if p.i != bytes.len() {
+            return Err(format!("trailing bytes at offset {}", p.i));
+        }
+        Ok(v)
+    }
+
+    /// Object member lookup (None on non-objects / absent keys).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Numeric view: `Num`, `Int`, or a `Null` from a serialized NaN.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            Json::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Json::Int(i) if *i >= 0 => Some(*i as usize),
+            Json::Num(x) if *x >= 0.0 && x.fract() == 0.0 => Some(*x as usize),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
@@ -90,6 +156,215 @@ impl Json {
                 }
                 out.push('}');
             }
+        }
+    }
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl Parser<'_> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn eat(&mut self, c: u8) -> Result<(), String> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(format!(
+                "expected '{}' at offset {}",
+                c as char, self.i
+            ))
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Json) -> Result<Json, String> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            Err(format!("bad literal at offset {}", self.i))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.lit("true", Json::Bool(true)),
+            Some(b'f') => self.lit("false", Json::Bool(false)),
+            Some(b'n') => self.lit("null", Json::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            Some(c) => Err(format!("unexpected byte '{}' at offset {}", c as char, self.i)),
+            None => Err("unexpected end of input".into()),
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.eat(b'{')?;
+        let mut fields = Vec::new();
+        self.ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            self.ws();
+            let k = self.string()?;
+            self.ws();
+            self.eat(b':')?;
+            self.ws();
+            let v = self.value()?;
+            fields.push((k, v));
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                _ => return Err(format!("expected ',' or '}}' at offset {}", self.i)),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.eat(b'[')?;
+        let mut items = Vec::new();
+        self.ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            self.ws();
+            items.push(self.value()?);
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => return Err(format!("expected ',' or ']' at offset {}", self.i)),
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u16, String> {
+        if self.i + 4 > self.b.len() {
+            return Err("truncated \\u escape".into());
+        }
+        let s = std::str::from_utf8(&self.b[self.i..self.i + 4])
+            .map_err(|_| "bad \\u escape".to_string())?;
+        let v = u16::from_str_radix(s, 16).map_err(|_| format!("bad \\u escape '{s}'"))?;
+        self.i += 4;
+        Ok(v)
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            let Some(c) = self.peek() else {
+                return Err("unterminated string".into());
+            };
+            self.i += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let Some(e) = self.peek() else {
+                        return Err("unterminated escape".into());
+                    };
+                    self.i += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => {
+                            let hi = self.hex4()?;
+                            let cp = if (0xD800..0xDC00).contains(&hi) {
+                                // Surrogate pair: a second \uXXXX must follow.
+                                if self.peek() != Some(b'\\') {
+                                    return Err("lone high surrogate".into());
+                                }
+                                self.i += 1;
+                                self.eat(b'u')?;
+                                let lo = self.hex4()?;
+                                if !(0xDC00..0xE000).contains(&lo) {
+                                    return Err("bad low surrogate".into());
+                                }
+                                0x10000 + (((hi as u32 - 0xD800) << 10) | (lo as u32 - 0xDC00))
+                            } else if (0xDC00..0xE000).contains(&hi) {
+                                return Err("lone low surrogate".into());
+                            } else {
+                                hi as u32
+                            };
+                            out.push(char::from_u32(cp).ok_or("bad codepoint")?);
+                        }
+                        _ => return Err(format!("bad escape '\\{}'", e as char)),
+                    }
+                }
+                _ => {
+                    // Copy the raw UTF-8 byte run up to the next quote
+                    // or backslash (the input is a &str, so it's valid).
+                    let start = self.i - 1;
+                    while self
+                        .peek()
+                        .is_some_and(|c| c != b'"' && c != b'\\')
+                    {
+                        self.i += 1;
+                    }
+                    out.push_str(std::str::from_utf8(&self.b[start..self.i]).unwrap());
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        let mut is_float = false;
+        while let Some(c) = self.peek() {
+            match c {
+                b'0'..=b'9' => self.i += 1,
+                b'.' | b'e' | b'E' | b'+' | b'-' => {
+                    is_float = true;
+                    self.i += 1;
+                }
+                _ => break,
+            }
+        }
+        let s = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+        if is_float {
+            // `1e999` overflows to +inf, matching the writer's encoding.
+            s.parse::<f64>()
+                .map(Json::Num)
+                .map_err(|_| format!("bad number '{s}'"))
+        } else {
+            s.parse::<i64>().map(Json::Int).or_else(|_| {
+                s.parse::<f64>()
+                    .map(Json::Num)
+                    .map_err(|_| format!("bad number '{s}'"))
+            })
         }
     }
 }
@@ -185,5 +460,49 @@ mod tests {
     fn infinity_encodes() {
         let j = Json::Num(f64::INFINITY);
         assert_eq!(j.render(), "1e999");
+    }
+
+    #[test]
+    fn parses_what_it_writes() {
+        let mut arr = Json::arr();
+        arr.push(1i64);
+        arr.push(2.5f64);
+        arr.push(Json::Null);
+        let j = Json::obj()
+            .field("name", "dory \"v2\"\nline")
+            .field("ok", true)
+            .field("inf", f64::INFINITY)
+            .field("neg", -3i64)
+            .field("xs", arr);
+        let back = Json::parse(&j.render()).unwrap();
+        assert_eq!(back.get("name").unwrap().as_str(), Some("dory \"v2\"\nline"));
+        assert_eq!(back.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(back.get("inf").unwrap().as_f64(), Some(f64::INFINITY));
+        assert_eq!(back.get("neg").unwrap().as_f64(), Some(-3.0));
+        let xs = back.get("xs").unwrap().as_arr().unwrap();
+        assert_eq!(xs.len(), 3);
+        assert_eq!(xs[0].as_usize(), Some(1));
+        assert_eq!(xs[1].as_f64(), Some(2.5));
+        assert!(matches!(xs[2], Json::Null));
+    }
+
+    #[test]
+    fn parses_escapes_and_whitespace() {
+        let v = Json::parse(" { \"k\" : [ \"a\\u00e9\\u20ac\", \"\\ud83d\\ude00\", -1.5e2 ] } ")
+            .unwrap();
+        let xs = v.get("k").unwrap().as_arr().unwrap();
+        assert_eq!(xs[0].as_str(), Some("aé€"));
+        assert_eq!(xs[1].as_str(), Some("😀"));
+        assert_eq!(xs[2].as_f64(), Some(-150.0));
+    }
+
+    #[test]
+    fn parse_errors_are_typed_strings() {
+        assert!(Json::parse("{\"a\": }").is_err());
+        assert!(Json::parse("[1, 2").is_err());
+        assert!(Json::parse("12 34").is_err());
+        assert!(Json::parse("\"\\ud800\"").is_err());
+        assert!(Json::parse("").is_err());
+        assert!(Json::parse("tru").is_err());
     }
 }

@@ -1,0 +1,385 @@
+//! Concurrent-serving exactness harness.
+//!
+//! The multi-tenant contract under test:
+//!
+//! * **Concurrent ≡ serial, bit for bit** — M threads querying one
+//!   session through `&self` (same handle or distinct handles, shortcut
+//!   on or off, batches or single queries) produce diagrams whose
+//!   (dim, birth-bits, death-bits) sequences equal a serial baseline at
+//!   tolerance zero, for every interleaving the scheduler happens to
+//!   pick;
+//! * **fair shared pool** — all of it on ONE work-stealing pool whose
+//!   multi-generation scheduler interleaves the queries' task
+//!   generations; nothing is rebuilt (`filtration_builds` stays at the
+//!   ingest count);
+//! * **wire front under contention** — concurrent `Server::handle_line`
+//!   calls (mixed tenants, cache hits, malformed requests) keep every
+//!   response well-formed and every typed error intact.
+
+use dory::error::DoryError;
+use dory::geometry::{MetricData, PointCloud};
+use dory::homology::{compute_ph, EngineOptions, PhRequest, PhResponse, Session};
+use dory::serve::Server;
+use dory::util::json::Json;
+use dory::util::rng::Pcg32;
+
+fn cloud(n: usize, dim: usize, seed: u64) -> MetricData {
+    let mut rng = Pcg32::new(seed);
+    MetricData::Points(PointCloud::new(
+        dim,
+        (0..n * dim).map(|_| rng.next_f64()).collect(),
+    ))
+}
+
+fn diagram_bits(d: &dory::homology::Diagram) -> Vec<(usize, u64, u64)> {
+    let mut out = Vec::new();
+    for dim in 0..=d.max_dim() {
+        for p in d.points(dim) {
+            out.push((dim, p.birth.to_bits(), p.death.to_bits()));
+        }
+    }
+    out
+}
+
+fn response_bits(r: &PhResponse) -> Vec<(usize, u64, u64)> {
+    diagram_bits(&r.result.diagram)
+}
+
+/// 8 threads hammer ONE handle of one session concurrently, each at its
+/// own τ, swept over shortcut on/off. Every response must be
+/// bit-identical to the serial baseline computed beforehand.
+#[test]
+fn concurrent_queries_on_one_handle_match_serial_baseline() {
+    let data = cloud(28, 3, 9001);
+    let taus = [0.25, 0.35, 0.45, 0.55, 0.65, 0.75, 0.85, 0.95];
+    for shortcut in [true, false] {
+        let opts = EngineOptions {
+            max_dim: 2,
+            threads: 4,
+            shortcut,
+            ..Default::default()
+        };
+        let session = Session::new(opts.clone());
+        let handle = session.ingest(&data, 0.95).unwrap();
+        // Serial baseline first, on the same session (prefix queries are
+        // already pinned bit-identical to fresh runs by tests/session.rs).
+        let serial: Vec<_> = taus
+            .iter()
+            .map(|&t| response_bits(&session.query(&handle, &PhRequest::at(t)).unwrap()))
+            .collect();
+        let queries_before = session.stats().queries;
+        for round in 0..3 {
+            let concurrent: Vec<_> = std::thread::scope(|scope| {
+                let handles: Vec<_> = taus
+                    .iter()
+                    .map(|&t| {
+                        let session = &session;
+                        let handle = &handle;
+                        scope.spawn(move || {
+                            response_bits(&session.query(handle, &PhRequest::at(t)).unwrap())
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            for (i, (c, s)) in concurrent.iter().zip(&serial).enumerate() {
+                assert_eq!(
+                    c, s,
+                    "shortcut={shortcut} round={round} tau={}: concurrent diagram deviates",
+                    taus[i]
+                );
+            }
+        }
+        let st = session.stats();
+        assert_eq!(st.queries - queries_before, 3 * taus.len() as u64);
+        // One ingest, one build — concurrency rebuilt nothing.
+        assert_eq!(st.filtration_builds, 1);
+        assert_eq!(st.nb_builds, 1);
+    }
+}
+
+/// Distinct handles (different datasets) queried concurrently on one
+/// session: per-handle results must match each handle's serial run.
+#[test]
+fn concurrent_queries_on_distinct_handles_match_serial_baseline() {
+    let opts = EngineOptions {
+        max_dim: 1,
+        threads: 4,
+        ..Default::default()
+    };
+    let session = Session::new(opts);
+    let datasets: Vec<MetricData> = (0..6).map(|i| cloud(24 + 2 * i, 3, 100 + i as u64)).collect();
+    let handles: Vec<_> = datasets
+        .iter()
+        .map(|d| session.ingest(d, f64::INFINITY).unwrap())
+        .collect();
+    let serial: Vec<_> = handles
+        .iter()
+        .map(|h| {
+            response_bits(
+                &session
+                    .query(h, &PhRequest::at(f64::INFINITY))
+                    .unwrap(),
+            )
+        })
+        .collect();
+    let concurrent: Vec<_> = std::thread::scope(|scope| {
+        let joins: Vec<_> = handles
+            .iter()
+            .map(|h| {
+                let session = &session;
+                scope.spawn(move || {
+                    response_bits(
+                        &session
+                            .query(h, &PhRequest::at(f64::INFINITY))
+                            .unwrap(),
+                    )
+                })
+            })
+            .collect();
+        joins.into_iter().map(|j| j.join().unwrap()).collect()
+    });
+    assert_eq!(concurrent, serial);
+    assert_eq!(session.stats().filtration_builds, handles.len() as u64);
+}
+
+/// Concurrent `run_batch` calls — a large batch and several small ones
+/// in flight together — all bit-identical to fresh one-shot runs.
+#[test]
+fn concurrent_batches_match_fresh_runs() {
+    let data = cloud(26, 3, 777);
+    let opts = EngineOptions {
+        max_dim: 2,
+        threads: 4,
+        ..Default::default()
+    };
+    let session = Session::new(opts.clone());
+    let handle = session.ingest(&data, f64::INFINITY).unwrap();
+    let big: Vec<PhRequest> = (1..=10).map(|i| PhRequest::at(0.09 * i as f64)).collect();
+    let small: Vec<PhRequest> = vec![PhRequest::at(0.3), PhRequest::at(0.6)];
+    let (big_out, small_out) = std::thread::scope(|scope| {
+        let s = &session;
+        let h = &handle;
+        let a = scope.spawn(move || s.run_batch(h, &big).unwrap());
+        let b = scope.spawn(move || s.run_batch(h, &small).unwrap());
+        (a.join().unwrap(), b.join().unwrap())
+    });
+    for resp in big_out.iter().chain(small_out.iter()) {
+        let fresh = compute_ph(&data, resp.tau, &opts);
+        assert_eq!(
+            response_bits(resp),
+            diagram_bits(&fresh.diagram),
+            "tau={}: batch response deviates from fresh run",
+            resp.tau
+        );
+    }
+}
+
+/// Typed request errors hold under concurrency: bad requests racing
+/// good ones poison nothing and return the right `DoryError` variants.
+#[test]
+fn typed_errors_survive_concurrent_traffic() {
+    let data = cloud(20, 3, 31);
+    let session = Session::new(EngineOptions {
+        max_dim: 1,
+        threads: 2,
+        ..Default::default()
+    });
+    let handle = session.ingest(&data, f64::INFINITY).unwrap();
+    std::thread::scope(|scope| {
+        let s = &session;
+        let h = &handle;
+        let good = scope.spawn(move || {
+            for _ in 0..4 {
+                s.query(h, &PhRequest::at(0.5)).unwrap();
+            }
+        });
+        let nan = scope.spawn(move || {
+            for _ in 0..4 {
+                let e = s.query(h, &PhRequest::at(f64::NAN)).unwrap_err();
+                assert!(matches!(e, DoryError::Request(_)), "{e}");
+            }
+        });
+        let neg = scope.spawn(move || {
+            for _ in 0..4 {
+                let e = s.query(h, &PhRequest::at(-1.0)).unwrap_err();
+                assert!(matches!(e, DoryError::Request(_)), "{e}");
+            }
+        });
+        good.join().unwrap();
+        nan.join().unwrap();
+        neg.join().unwrap();
+    });
+    // Refused requests were never counted as served queries.
+    assert_eq!(session.stats().queries, 4);
+}
+
+/// The wire front under contention: interleaved tenants drive
+/// `Server::handle_line` from racing threads. Every response must stay
+/// well-formed, cache hits must deduplicate the shared dataset, and the
+/// betti numbers must match a direct session query.
+#[test]
+fn server_handles_racing_tenants() {
+    let srv = Server::new(
+        EngineOptions {
+            max_dim: 1,
+            threads: 2,
+            ..Default::default()
+        },
+        256 << 20,
+    );
+    // Serial warm-up ingest so every tenant's ingest is a cache hit and
+    // all threads race on the same handle.
+    let ingest = r#"{"id":0,"tenant":"warm","method":"ingest","dataset":{"kind":"circle","n":40,"seed":5}}"#;
+    let (resp, _) = srv.handle_line(ingest);
+    let key = resp
+        .get("ok")
+        .and_then(|o| o.get("handle"))
+        .and_then(|h| h.as_str())
+        .unwrap()
+        .to_string();
+    let direct = {
+        let probe = format!("{{\"id\":0,\"method\":\"query\",\"handle\":\"{key}\",\"tau\":0.4}}");
+        let (r, _) = srv.handle_line(&probe);
+        r.get("ok").unwrap().get("betti").unwrap().render()
+    };
+    std::thread::scope(|scope| {
+        for t in 0..6 {
+            let srv = &srv;
+            let key = &key;
+            let direct = &direct;
+            scope.spawn(move || {
+                let tenant = format!("t{t}");
+                for i in 0..5 {
+                    let (r, stop) = srv.handle_line(&format!(
+                        "{{\"id\":{i},\"tenant\":\"{tenant}\",\"method\":\"ingest\",\"dataset\":{{\"kind\":\"circle\",\"n\":40,\"seed\":5}}}}"
+                    ));
+                    assert!(!stop);
+                    assert_eq!(
+                        r.get("ok").unwrap().get("cached").unwrap().as_bool(),
+                        Some(true)
+                    );
+                    let (r, _) = srv.handle_line(&format!(
+                        "{{\"id\":{i},\"tenant\":\"{tenant}\",\"method\":\"query\",\"handle\":\"{key}\",\"tau\":0.4}}"
+                    ));
+                    assert_eq!(
+                        r.get("ok").unwrap().get("betti").unwrap().render(),
+                        *direct
+                    );
+                    // A malformed request racing the good ones: typed
+                    // error, loop and session unharmed.
+                    let (r, _) = srv.handle_line(&format!(
+                        "{{\"id\":{i},\"tenant\":\"{tenant}\",\"method\":\"query\",\"handle\":\"{key}\",\"tau\":-3}}"
+                    ));
+                    assert_eq!(
+                        r.get("error").unwrap().get("kind").unwrap().as_str(),
+                        Some("Request")
+                    );
+                }
+            });
+        }
+    });
+    let summary = srv.summary_json();
+    let session = summary.get("session").unwrap();
+    // 1 warm-up build; 30 tenant ingests were all cache hits.
+    assert_eq!(session.get("filtration_builds").unwrap().as_usize(), Some(1));
+    assert_eq!(session.get("queries").unwrap().as_usize(), Some(1 + 30));
+    let t0 = summary.get("tenants").unwrap().get("t0").unwrap();
+    assert_eq!(t0.get("cache_hits").unwrap().as_usize(), Some(5));
+    assert_eq!(t0.get("errors").unwrap().as_usize(), Some(5));
+}
+
+/// Cache-eviction determinism end to end: a tight budget server evicts
+/// in pure LRU order, so re-running the same request sequence yields
+/// the same eviction keys and the same final cache contents.
+#[test]
+fn cache_eviction_is_deterministic_across_runs() {
+    let run = || {
+        let srv = Server::new(
+            EngineOptions {
+                max_dim: 1,
+                threads: 1,
+                ..Default::default()
+            },
+            1, // 1-byte budget: every insert evicts the previous handle
+        );
+        let mut log = Vec::new();
+        for seed in [1u64, 2, 3] {
+            let (r, _) = srv.handle_line(&format!(
+                "{{\"id\":1,\"method\":\"ingest\",\"dataset\":{{\"kind\":\"circle\",\"n\":24,\"seed\":{seed}}}}}"
+            ));
+            let ok = r.get("ok").unwrap();
+            log.push((
+                ok.get("handle").unwrap().as_str().unwrap().to_string(),
+                ok.get("evicted").unwrap().render(),
+            ));
+        }
+        log
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, b);
+    // Each insert evicted exactly the previous key.
+    assert_eq!(a[0].1, "[]");
+    assert_eq!(a[1].1, format!("[\"{}\"]", a[0].0));
+    assert_eq!(a[2].1, format!("[\"{}\"]", a[1].0));
+}
+
+/// The serve loop itself over an in-memory pipe: interleaved tenants,
+/// a shared dataset, a batch, an error, a shutdown — responses arrive
+/// in request order with ids echoed, and the summary trailer closes it.
+#[test]
+fn serve_loop_interleaves_tenants_over_a_pipe() {
+    let srv = Server::new(
+        EngineOptions {
+            max_dim: 1,
+            threads: 2,
+            ..Default::default()
+        },
+        256 << 20,
+    );
+    let mut out = Vec::new();
+    let script = concat!(
+        r#"{"id":1,"tenant":"a","method":"ingest","dataset":{"kind":"figure-eight","n":36,"seed":2}}"#,
+        "\n",
+        r#"{"id":2,"tenant":"b","method":"ingest","dataset":{"kind":"figure-eight","n":36,"seed":2}}"#,
+        "\n",
+        r#"{"id":3,"tenant":"b","method":"query","handle":"hmissing","tau":0.5}"#,
+        "\n",
+        r#"{"id":4,"method":"stats"}"#,
+        "\n",
+        r#"{"id":5,"method":"shutdown"}"#,
+        "\n",
+    );
+    let served = srv
+        .serve(std::io::Cursor::new(script.to_string()), &mut out)
+        .unwrap();
+    assert_eq!(served, 5);
+    let lines: Vec<Json> = String::from_utf8(out)
+        .unwrap()
+        .lines()
+        .map(|l| Json::parse(l).unwrap())
+        .collect();
+    assert_eq!(lines.len(), 6); // 5 responses + summary trailer
+    for (i, l) in lines[..5].iter().enumerate() {
+        assert_eq!(l.get("id").unwrap().as_usize(), Some(i + 1));
+    }
+    assert_eq!(
+        lines[1].get("ok").unwrap().get("cached").unwrap().as_bool(),
+        Some(true)
+    );
+    assert_eq!(
+        lines[2].get("error").unwrap().get("kind").unwrap().as_str(),
+        Some("Request")
+    );
+    let summary = lines[5].get("summary").unwrap();
+    assert_eq!(
+        summary
+            .get("cache")
+            .unwrap()
+            .get("hits")
+            .unwrap()
+            .as_usize(),
+        Some(1)
+    );
+}

@@ -67,7 +67,7 @@ fn eight_query_session_is_bit_identical_to_eight_fresh_runs() {
                 shortcut,
                 ..Default::default()
             };
-            let mut session = Session::new(opts.clone());
+            let session = Session::new(opts.clone());
             let handle = session.ingest(&data, tau_ingest).unwrap();
             assert_eq!(handle.stats().f1_builds, 1);
             assert_eq!(handle.stats().nb_builds, 1);
@@ -119,7 +119,7 @@ fn dense_lookup_session_matches_fresh_runs() {
         dense_lookup: true,
         ..Default::default()
     };
-    let mut session = Session::new(opts.clone());
+    let session = Session::new(opts.clone());
     let handle = session.ingest(&data, 0.9).unwrap();
     for tau in [0.3, 0.6, 0.9] {
         let resp = session.query(&handle, &PhRequest::at(tau)).unwrap();
@@ -144,7 +144,7 @@ fn infinite_tau_handle_enclosing_semantics() {
         enclosing: true,
         ..Default::default()
     };
-    let mut s_on = Session::new(opts_on.clone());
+    let s_on = Session::new(opts_on.clone());
     let h_on = s_on.ingest(&data, f64::INFINITY).unwrap();
     assert!(h_on.stats().enclosing_radius.is_finite());
     let full = s_on.query(&h_on, &PhRequest::at(f64::INFINITY)).unwrap();
@@ -160,7 +160,9 @@ fn infinite_tau_handle_enclosing_semantics() {
     // zero tolerance.
     let r_enc = h_on.stats().enclosing_radius;
     let beyond = s_on.query(&h_on, &PhRequest::at(r_enc * 1.5)).unwrap();
-    assert!(!beyond.truncated);
+    // The response must report the clamp: the requested τ exceeds the
+    // handle's truncated set, so the served cut is r_enc, not τ.
+    assert!(beyond.truncated);
     assert_eq!(beyond.n_edges, h_on.n_edges());
     assert_eq!(beyond.tau_effective.to_bits(), r_enc.to_bits());
     let fresh_beyond = compute_ph(&data, r_enc * 1.5, &opts_on);
@@ -192,7 +194,7 @@ fn infinite_tau_handle_enclosing_semantics() {
         enclosing: false,
         ..opts_on.clone()
     };
-    let mut s_off = Session::new(opts_off);
+    let s_off = Session::new(opts_off);
     let h_off = s_off.ingest(&data, f64::INFINITY).unwrap();
     let n = data.n();
     assert_eq!(h_off.n_edges(), n * (n - 1) / 2, "complete pair list");
@@ -230,7 +232,7 @@ fn sparse_handle_queries_match_fresh_runs() {
         threads: 2,
         ..Default::default()
     };
-    let mut session = Session::new(opts.clone());
+    let session = Session::new(opts.clone());
     let handle = session.ingest(&data, f64::INFINITY).unwrap();
     for tau in [0.5, 1.0, 1.7, f64::INFINITY] {
         let resp = session.query(&handle, &PhRequest::at(tau)).unwrap();
@@ -255,7 +257,7 @@ fn per_request_override_sweep_matches_fresh_runs() {
         shortcut: true,
         ..Default::default()
     };
-    let mut session = Session::new(base.clone());
+    let session = Session::new(base.clone());
     let handle = session.ingest(&data, 0.85).unwrap();
     for tau in [0.5, 0.85] {
         for shortcut in [true, false] {
@@ -293,7 +295,7 @@ fn per_request_override_sweep_matches_fresh_runs() {
 
 #[test]
 fn nan_ingest_is_invalid_input() {
-    let mut session = Session::new(EngineOptions {
+    let session = Session::new(EngineOptions {
         max_dim: 1,
         threads: 1,
         ..Default::default()
@@ -319,7 +321,7 @@ fn nan_ingest_is_invalid_input() {
 fn dory_ns_overflow_guard_is_typed() {
     // A vertex count whose n(n-1)/2 table cannot exist: the session
     // refuses with Overflow before allocating anything.
-    let mut session = Session::new(EngineOptions {
+    let session = Session::new(EngineOptions {
         max_dim: 1,
         threads: 1,
         dense_lookup: true,
@@ -341,7 +343,7 @@ fn dory_ns_overflow_guard_is_typed() {
 #[test]
 fn tau_beyond_ingest_is_typed_and_recoverable() {
     let data = cloud(16, 3, 77);
-    let mut session = Session::new(EngineOptions {
+    let session = Session::new(EngineOptions {
         max_dim: 1,
         threads: 1,
         ..Default::default()
@@ -489,7 +491,7 @@ fn legacy_shims_still_pin_one_shot_behavior() {
         ..Default::default()
     };
     let one_shot = compute_ph(&data, 0.8, &opts);
-    let mut session = Session::new(opts);
+    let session = Session::new(opts);
     let handle = session.ingest(&data, 0.8).unwrap();
     let served = session.query(&handle, &PhRequest::at(0.8)).unwrap();
     assert_eq!(
