@@ -420,5 +420,110 @@ fn main() {
         .field("f1_prune_rate", fs.edges_pruned as f64 / fs.edges_considered as f64)
         .field("f1_r_enc", fs.enclosing_radius);
 
+    // --- large sparse ingest: streamed vs in-memory --------------------------
+    // CI gate for the million-point ingestion path: a 150k-edge sparse
+    // file ingested through the budgeted streaming reader must (a) spill
+    // sorted runs to disk, (b) peak BELOW the in-memory reader's heap
+    // (which holds the full entry vector and the full key vector at
+    // once), and (c) produce the identical edge set. Counter-based and
+    // deterministic; the peaks come from the counting allocator, not RSS.
+    let spath = std::env::temp_dir().join("dory-bench-stream.coo");
+    {
+        use std::io::Write as _;
+        let mut w = std::io::BufWriter::new(std::fs::File::create(&spath).expect("bench tmp"));
+        for i in 0..150_000u32 {
+            let d = 1.0 + (i % 997) as f64 / 1000.0;
+            writeln!(w, "{} {} {d}", i, i + 1).expect("bench tmp write");
+        }
+    }
+    let stream_session = dory::homology::Session::new(EngineOptions {
+        max_dim: 0,
+        threads: 4,
+        ..Default::default()
+    });
+    dory::util::memtrack::reset_peak();
+    let t0 = Instant::now();
+    let smd = dory::io::read_sparse_coo(&spath).expect("bench read");
+    let h_mem = stream_session.ingest(&smd, 3.0).expect("bench ingest");
+    let inmem_s = t0.elapsed().as_secs_f64();
+    let inmem_peak = dory::util::memtrack::section_peak_bytes();
+    let inmem_edges = h_mem.n_edges();
+    drop(h_mem);
+    drop(smd);
+    dory::util::memtrack::reset_peak();
+    let t0 = Instant::now();
+    let (h_s, sstats) = stream_session
+        .ingest_sparse_file(
+            &spath,
+            3.0,
+            &dory::io::stream::StreamOptions {
+                chunk_lines: 8192,
+                budget_bytes: 1 << 20,
+                spill_dir: None,
+            },
+        )
+        .expect("bench stream ingest");
+    let stream_s = t0.elapsed().as_secs_f64();
+    let stream_peak = dory::util::memtrack::section_peak_bytes();
+    println!(
+        "{:<42} {stream_s:>11.3} s    (peak {} vs in-memory {} in {inmem_s:.3}s; {} runs spilled)",
+        "streamed ingest (150k edges, 1 MiB budget)",
+        dory::util::memtrack::fmt_bytes(stream_peak),
+        dory::util::memtrack::fmt_bytes(inmem_peak),
+        sstats.spilled_runs,
+    );
+    assert_eq!(h_s.n_edges(), inmem_edges, "streamed edge set deviates");
+    assert!(sstats.spilled_runs > 0, "a 2.4 MB key stream must spill at 1 MiB");
+    assert!(
+        stream_peak < inmem_peak,
+        "streamed ingest peak {stream_peak} must stay below the in-memory peak {inmem_peak}"
+    );
+    drop(h_s);
+    let _ = std::fs::remove_file(&spath);
+    out = out
+        .field("stream_peak_rss_bytes", stream_peak)
+        .field("inmem_peak_rss_bytes", inmem_peak)
+        .field("stream_ingest_s", stream_s)
+        .field("inmem_ingest_s", inmem_s)
+        .field("stream_spilled_runs", sstats.spilled_runs)
+        .field("stream_staging_peak_bytes", sstats.staging_peak_bytes);
+
+    // --- k-NN net-graph front-end -------------------------------------------
+    // CI gate for the sparse-neighbor-graph kernel: uncapped, the
+    // cell-pair scan must reproduce the dense thresholded edge set
+    // exactly (triangle-inequality pruning is conservative); capped, it
+    // must keep strictly fewer entries. Counter-based and deterministic.
+    let knn_md = datasets::circle(1200, 1.0, 0.05, 7);
+    let dory::geometry::MetricData::Points(knn_pc) = &knn_md else {
+        unreachable!("circle is a point cloud");
+    };
+    let knn_tau = 0.6;
+    let t0 = Instant::now();
+    let cover = dory::filtration::sparsify::NetCover::build(knn_pc, 140, 0.0, 3);
+    let exact = dory::filtration::sparsify::net_graph_edges(knn_pc, &cover, knn_tau, 0, None);
+    let knn_build_s = t0.elapsed().as_secs_f64();
+    let dense = EdgeFiltration::build(&knn_md, knn_tau);
+    let capped = dory::filtration::sparsify::net_graph_edges(knn_pc, &cover, knn_tau, 6, None);
+    println!(
+        "{:<42} {knn_build_s:>11.3} s    (exact {} == dense {}, capped k=6 {})",
+        "net-graph kernel (circle1200, 140 cells)",
+        exact.entries.len(),
+        dense.n_edges(),
+        capped.entries.len(),
+    );
+    assert_eq!(
+        exact.entries.len(),
+        dense.n_edges(),
+        "uncapped net-graph kernel deviates from the dense edge set"
+    );
+    assert!(
+        capped.entries.len() < exact.entries.len(),
+        "k-NN cap kept every edge — capping is inactive"
+    );
+    out = out
+        .field("knn_build_s", knn_build_s)
+        .field("knn_edges_kept", capped.entries.len())
+        .field("knn_edges_exact", exact.entries.len());
+
     bs::write_json("micro_hotpaths.json", &out);
 }

@@ -238,6 +238,21 @@ pub struct RunConfig {
     /// infinite (on by default; diagrams are unchanged, the edge set
     /// shrinks). `--no-enclosing` = exact full-filtration fallback.
     pub enclosing: bool,
+    /// Lines per chunk for the streaming sparse-file reader. Any
+    /// nonzero value (or a nonzero `edge_budget_mb`) routes
+    /// `sparse-file` datasets through the streaming ingest path;
+    /// 0 + budget 0 = the in-memory reader. Output is bit-identical
+    /// either way.
+    pub stream_chunk: usize,
+    /// Greedy-net k-NN front-end for point clouds: keep at most this
+    /// many nearest kept neighbors per point (union-symmetrized),
+    /// building edges from the cover graph instead of the dense O(n²)
+    /// pass. 0 = off (exact dense pass). Approximate when it actually
+    /// caps; composes with the net-based enclosing bound at τ = ∞.
+    pub knn_k: usize,
+    /// Staging budget (MiB) for the streaming sparse-file reader;
+    /// sorted key runs spill to disk past it. 0 = unbounded staging.
+    pub edge_budget_mb: usize,
     pub dense_lookup: bool,
     pub algorithm: String,
     pub artifacts: PathBuf,
@@ -279,6 +294,9 @@ impl Default for RunConfig {
             shortcut: true,
             f1_tile: 0,
             enclosing: true,
+            stream_chunk: 0,
+            knn_k: 0,
+            edge_budget_mb: 0,
             dense_lookup: false,
             algorithm: "fast-column".into(),
             artifacts: PathBuf::from("artifacts"),
@@ -369,6 +387,9 @@ impl RunConfig {
                             "shortcut" => cfg.shortcut = flag()?,
                             "f1_tile" => cfg.f1_tile = uint()?,
                             "enclosing" => cfg.enclosing = flag()?,
+                            "stream_chunk" => cfg.stream_chunk = uint()?,
+                            "knn_k" => cfg.knn_k = uint()?,
+                            "edge_budget_mb" => cfg.edge_budget_mb = uint()?,
                             "dense_lookup" => cfg.dense_lookup = flag()?,
                             "algorithm" => {
                                 cfg.algorithm = v
@@ -673,6 +694,24 @@ diagram_csv = "out/pd.csv"
         let cfg = RunConfig::from_str("[engine]\nshortcut = true\n").unwrap();
         assert!(cfg.shortcut);
         assert!(RunConfig::from_str("[engine]\nshortcut = 1\n").is_err());
+    }
+
+    #[test]
+    fn streaming_knobs_parse_and_default_off() {
+        let d = RunConfig::default();
+        assert_eq!(d.stream_chunk, 0);
+        assert_eq!(d.knn_k, 0);
+        assert_eq!(d.edge_budget_mb, 0);
+        let cfg = RunConfig::from_str(
+            "[engine]\nstream_chunk = 4096\nknn_k = 12\nedge_budget_mb = 64\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.stream_chunk, 4096);
+        assert_eq!(cfg.knn_k, 12);
+        assert_eq!(cfg.edge_budget_mb, 64);
+        assert!(RunConfig::from_str("[engine]\nstream_chunk = -1\n").is_err());
+        assert!(RunConfig::from_str("[engine]\nknn_k = true\n").is_err());
+        assert!(RunConfig::from_str("[engine]\nedge_budget_mb = \"big\"\n").is_err());
     }
 
     #[test]

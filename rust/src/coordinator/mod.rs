@@ -20,7 +20,7 @@ pub use config::{DatasetSpec, QuerySpec, RunConfig};
 
 use crate::datasets;
 use crate::error::DoryError;
-use crate::filtration::{EdgeFiltration, FiltrationStats, FrontendOptions};
+use crate::filtration::{sparsify, EdgeFiltration, FiltrationStats, FrontendOptions};
 use crate::geometry::MetricData;
 use crate::hic;
 use crate::homology::{
@@ -196,7 +196,16 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
 /// more than one query runs) and one summary JSON with a `queries`
 /// array plus the session amortization counters.
 pub fn run_batch(cfg: &RunConfig) -> Result<BatchReport> {
-    let data = build_dataset(&cfg.dataset)?;
+    // Streaming gate: a sparse edge file with either streaming knob set
+    // never goes through `build_dataset` — the raw entry list would be
+    // exactly the allocation the budget exists to avoid.
+    let streaming = matches!(&cfg.dataset, DatasetSpec::SparseFile(_))
+        && (cfg.stream_chunk > 0 || cfg.edge_budget_mb > 0);
+    let data = if streaming {
+        None
+    } else {
+        Some(build_dataset(&cfg.dataset)?)
+    };
     let runtime = if cfg.use_pjrt {
         match Runtime::load(&cfg.artifacts) {
             Ok(rt) => Some(rt),
@@ -235,19 +244,70 @@ pub fn run_batch(cfg: &RunConfig) -> Result<BatchReport> {
     // once, no matter how many queries follow.
     let session = Session::new(opts);
     memtrack::reset_peak();
-    let mut timings = PhaseTimer::new();
-    let mut fstats = FiltrationStats::default();
-    timings.start("F1");
-    let (f, edge_source) = build_filtration(
-        &data,
-        cfg.ingest_tau(),
-        runtime.as_ref(),
-        session.engine().pool(),
-        &session.engine().frontend_options(),
-        &mut fstats,
-    );
-    timings.stop();
-    let handle = session.ingest_filtration(f, timings, fstats, edge_source)?;
+    let handle = if streaming {
+        let DatasetSpec::SparseFile(p) = &cfg.dataset else {
+            unreachable!("streaming gate requires a sparse file dataset");
+        };
+        let sopts = io::stream::StreamOptions {
+            chunk_lines: cfg.stream_chunk,
+            budget_bytes: cfg.edge_budget_mb << 20,
+            spill_dir: None,
+        };
+        session.ingest_sparse_file(p, cfg.ingest_tau(), &sopts)?.0
+    } else if let (true, Some(MetricData::Points(pc))) = (cfg.knn_k > 0, data.as_ref()) {
+        // Net-graph sparse front-end: build edges from a greedy-net
+        // cover instead of materializing all n(n-1)/2 pairs. Cover
+        // granularity (~4√n cells) is a perf knob only — the kernel is
+        // exact for any cover when uncapped; `knn_k` then caps each
+        // vertex to its k nearest incident entries (2ε-stable).
+        let mut timings = PhaseTimer::new();
+        let mut fstats = FiltrationStats::default();
+        timings.start("F1");
+        let k_net = (((pc.n() as f64).sqrt().ceil() as usize) * 4).clamp(1, pc.n());
+        let cover = sparsify::NetCover::build(pc, k_net, 0.0, 1);
+        let tau_ing = cfg.ingest_tau();
+        let tau_eff = if tau_ing == f64::INFINITY && cfg.enclosing && pc.n() >= 2 {
+            // Net-based upper bound on r_enc: the cone argument holds
+            // at any cut ≥ r_enc, so truncating here preserves every
+            // diagram while the bound scan stays O(|net|·n).
+            sparsify::net_enclosing_bound(pc, &cover)
+        } else {
+            tau_ing
+        };
+        let sd = sparsify::net_graph_edges(pc, &cover, tau_eff, cfg.knn_k, session.engine().pool());
+        let sdata = MetricData::Sparse(sd);
+        let f = EdgeFiltration::build_pooled(
+            &sdata,
+            tau_eff,
+            session.engine().pool(),
+            &session.engine().frontend_options(),
+            &mut fstats,
+        );
+        // Sparse builds never run the enclosing sweep themselves, so
+        // record the net bound after the build (which resets the field)
+        // — queries past the cut then clamp-and-report as truncated.
+        if tau_eff.is_finite() && tau_ing == f64::INFINITY {
+            fstats.enclosing_radius = tau_eff;
+        }
+        timings.stop();
+        session.ingest_filtration(f, timings, fstats, "knn-net")?
+    } else {
+        let data = data.as_ref().expect("non-streaming path materializes the dataset");
+        let mut timings = PhaseTimer::new();
+        let mut fstats = FiltrationStats::default();
+        timings.start("F1");
+        let (f, edge_source) = build_filtration(
+            data,
+            cfg.ingest_tau(),
+            runtime.as_ref(),
+            session.engine().pool(),
+            &session.engine().frontend_options(),
+            &mut fstats,
+        );
+        timings.stop();
+        session.ingest_filtration(f, timings, fstats, edge_source)?
+    };
+    let edge_source = handle.edge_source;
 
     let specs = cfg.effective_queries();
     let multi = specs.len() > 1;
@@ -624,6 +684,93 @@ mod tests {
         })
         .unwrap_err();
         assert!(matches!(e, DoryError::Dataset(_)), "{e}");
+    }
+
+    #[test]
+    fn streaming_sparse_file_run_matches_in_memory() {
+        let dir = std::env::temp_dir().join("dory-coord-stream-test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cycle.coo");
+        let mut text = String::new();
+        for i in 0u32..8 {
+            text.push_str(&format!("{} {} 1.0\n", i, (i + 1) % 8));
+        }
+        std::fs::write(&path, text).unwrap();
+        let base = RunConfig {
+            dataset: DatasetSpec::SparseFile(path),
+            tau: 2.0,
+            max_dim: 1,
+            threads: 2,
+            use_pjrt: false,
+            ..Default::default()
+        };
+        let inmem = run(&base).unwrap();
+        assert_eq!(inmem.edge_source, "native");
+        let streamed = run(&RunConfig {
+            stream_chunk: 3,
+            ..base.clone()
+        })
+        .unwrap();
+        assert_eq!(streamed.edge_source, "stream");
+        assert_eq!(streamed.n_edges, inmem.n_edges);
+        assert!(streamed
+            .result
+            .diagram
+            .multiset_eq(&inmem.result.diagram, 0.0));
+        // The budget knob alone also routes through the stream reader.
+        let budgeted = run(&RunConfig {
+            edge_budget_mb: 1,
+            ..base
+        })
+        .unwrap();
+        assert_eq!(budgeted.edge_source, "stream");
+        assert!(budgeted
+            .result
+            .diagram
+            .multiset_eq(&inmem.result.diagram, 0.0));
+    }
+
+    #[test]
+    fn knn_net_run_keeps_topology_with_fewer_edges() {
+        let base = RunConfig {
+            dataset: DatasetSpec::Named {
+                kind: "circle".into(),
+                n: 90,
+                seed: 4,
+            },
+            tau: 3.0,
+            max_dim: 1,
+            threads: 2,
+            use_pjrt: false,
+            ..Default::default()
+        };
+        let dense = run(&base).unwrap();
+        let knn = run(&RunConfig {
+            knn_k: 8,
+            ..base.clone()
+        })
+        .unwrap();
+        assert_eq!(knn.edge_source, "knn-net");
+        assert!(
+            knn.n_edges < dense.n_edges,
+            "cap must drop edges: {} vs {}",
+            knn.n_edges,
+            dense.n_edges
+        );
+        assert_eq!(knn.result.diagram.essential_count(0), 1);
+        // The dominant circle class survives the k-NN cap.
+        assert!(!knn.result.diagram.significant(1, 0.5).is_empty());
+        // At τ = +∞ the net bound stands in for the enclosing radius.
+        let inf = run(&RunConfig {
+            tau: f64::INFINITY,
+            knn_k: 8,
+            ..base
+        })
+        .unwrap();
+        assert_eq!(inf.edge_source, "knn-net");
+        assert!(inf.result.stats.filtration.enclosing_radius.is_finite());
+        assert_eq!(inf.result.diagram.essential_count(0), 1);
     }
 
     #[test]

@@ -172,15 +172,25 @@ pub fn f64_from_order_key(k: u64) -> f64 {
 
 /// One weighted edge packed into its 128-bit sort key: unsigned u128
 /// order == the filtration total order (length, ties by `(a, b)`). Keys
-/// are strictly unique because `(a, b)` pairs are.
+/// are strictly unique because `(a, b)` pairs are. `pub(crate)` so the
+/// streaming reader (`io::stream`) packs per-chunk keys in exactly the
+/// front-end's order — the spill-merge output is then byte-identical to
+/// the in-memory sort.
 #[inline]
-fn edge_key(d: f64, a: u32, b: u32) -> u128 {
+pub(crate) fn edge_key(d: f64, a: u32, b: u32) -> u128 {
     ((f64_order_key(d) as u128) << 64) | ((a as u128) << 32) | b as u128
 }
 
 #[inline]
-fn unpack_edge_key(k: u128) -> (f64, u32, u32) {
+pub(crate) fn unpack_edge_key(k: u128) -> (f64, u32, u32) {
     (f64_from_order_key((k >> 64) as u64), (k >> 32) as u32, k as u32)
+}
+
+/// Pooled sort for externally staged key runs (the `io::stream` spill
+/// store): the front-end's chunk-sort + pairwise-merge pass without the
+/// stats plumbing. Byte-identical to `sort_unstable` for unique keys.
+pub(crate) fn sort_run_u128(keys: Vec<u128>, pool: Option<&ThreadPool>) -> Vec<u128> {
+    sort_keys(keys, pool, &mut FiltrationStats::default())
 }
 
 /// Rows per distance tile: the `f1_tile` knob, or ~8 tiles per worker,

@@ -1,25 +1,48 @@
-//! SimBa-style filtration sparsification (paper §7 / Dey et al. 2019).
+//! SimBa-style filtration sparsification (paper §7 / Dey et al. 2019)
+//! and the greedy-net cover-graph front-end.
 //!
 //! "SimBa reduces the number of simplices in the filtration by
 //! approximating it to a sparse filtration such that the PDs … are
 //! within a theoretical error of margin" — the Discussion notes Dory can
-//! serve as SimBa's exact backend. This module provides the complementary
-//! ingredient: farthest-point (greedy permutation) subsampling, whose
-//! VR filtration on the ε-net is a classic 2·ε-interleaving of the full
-//! one — so `bottleneck(PD_full, PD_net) ≤ 2ε` per stability. The bench
-//! tests assert exactly that bound via [`crate::homology::analysis`].
+//! serve as SimBa's exact backend. This module provides two ingredients:
+//!
+//! 1. Farthest-point (greedy permutation) subsampling, whose VR
+//!    filtration on the ε-net is a classic 2·ε-interleaving of the full
+//!    one — so `bottleneck(PD_full, PD_net) ≤ 2ε` per stability. The
+//!    tests assert exactly that bound via [`crate::homology::analysis`].
+//! 2. A cover-graph edge kernel ([`net_graph_edges`]): partition the
+//!    cloud into net cells, then scan member pairs only for cell pairs
+//!    whose centers are within `τ + 2ε` — by the triangle inequality no
+//!    pair at distance ≤ τ can live in a farther cell pair, so the
+//!    uncapped kernel recovers the *exact* thresholded edge set without
+//!    materializing all n(n−1)/2 candidates. An optional per-point
+//!    k-nearest-neighbor cap (`knn_k`) sparsifies further (approximate;
+//!    union-symmetrized so each point keeps its k nearest).
 
-use crate::geometry::{MetricData, PointCloud};
+use std::sync::Mutex;
+
+use crate::geometry::{MetricData, PointCloud, SparseDistances};
+use crate::reduction::pool::ThreadPool;
 use crate::util::rng::Pcg32;
 
-/// Result of a greedy permutation: selected indices and their cover
-/// radius (the ε of the ε-net).
+/// Result of a greedy permutation: selected indices, their exact cover
+/// radius (the ε of the ε-net), and each point's assigned cell.
 pub struct GreedyNet {
     pub indices: Vec<u32>,
+    /// Exact post-selection cover radius: `max_i min_c d(i, c)` over
+    /// the *final* center set. Recomputed from the maintained
+    /// nearest-center distances after the loop exits, so the `2ε`
+    /// stability gates downstream can rely on it regardless of whether
+    /// selection stopped on `k` or on `min_radius`.
     pub radius: f64,
+    /// `assign[i]` = index into `indices` of the nearest selected
+    /// center (ties broken by selection order: the earliest center at
+    /// the minimal distance wins).
+    pub assign: Vec<u32>,
 }
 
 /// Farthest-point subsample of `k` points (or until radius ≤ `min_r`).
+/// At least one point is always selected.
 pub fn farthest_point_sample(
     pc: &PointCloud,
     k: usize,
@@ -28,14 +51,16 @@ pub fn farthest_point_sample(
 ) -> GreedyNet {
     let n = pc.n();
     assert!(n > 0);
-    let k = k.min(n);
+    let k = k.clamp(1, n);
     let mut rng = Pcg32::new(seed);
     let first = rng.gen_range(n as u32) as usize;
     let mut dist = vec![f64::INFINITY; n];
-    let mut chosen = Vec::with_capacity(k);
+    let mut assign = vec![0u32; n];
+    let mut chosen: Vec<u32> = Vec::with_capacity(k);
     let mut cur = first;
     let mut radius = f64::INFINITY;
     while chosen.len() < k && radius > min_radius {
+        let cell = chosen.len() as u32;
         chosen.push(cur as u32);
         let mut far = 0usize;
         let mut fard = -1.0;
@@ -43,6 +68,7 @@ pub fn farthest_point_sample(
             let d = pc.dist(cur, i);
             if d < dist[i] {
                 dist[i] = d;
+                assign[i] = cell;
             }
             if dist[i] > fard {
                 fard = dist[i];
@@ -52,9 +78,15 @@ pub fn farthest_point_sample(
         radius = fard;
         cur = far;
     }
+    // Pin the reported ε to the final center set structurally: the loop
+    // above already folds the last selection into `dist`, but the gate
+    // tests depend on this being the exact cover radius, so recompute
+    // it from `dist` rather than trusting loop-exit bookkeeping.
+    let radius = dist.iter().cloned().fold(0.0f64, f64::max);
     GreedyNet {
         indices: chosen,
-        radius: radius.max(0.0),
+        radius,
+        assign,
     }
 }
 
@@ -67,20 +99,228 @@ pub fn subsample_cloud(pc: &PointCloud, net: &GreedyNet) -> MetricData {
     MetricData::Points(PointCloud::new(pc.dim, coords))
 }
 
+/// A greedy ε-net plus the CSR of its cells: `members(c)` lists the
+/// points whose nearest center is `indices[c]`, in ascending point
+/// order. Cells partition the cloud, which is what makes the
+/// cover-graph kernel below visit each unordered point pair exactly
+/// once.
+pub struct NetCover {
+    pub net: GreedyNet,
+    cell_start: Vec<u32>,
+    members: Vec<u32>,
+}
+
+impl NetCover {
+    pub fn build(pc: &PointCloud, k: usize, min_radius: f64, seed: u64) -> Self {
+        let net = farthest_point_sample(pc, k, min_radius, seed);
+        let n = pc.n();
+        let nc = net.indices.len();
+        // Counting scatter: stable, so members stay in ascending order.
+        let mut counts = vec![0u32; nc + 1];
+        for &c in &net.assign {
+            counts[c as usize + 1] += 1;
+        }
+        for c in 0..nc {
+            counts[c + 1] += counts[c];
+        }
+        let cell_start = counts.clone();
+        let mut cursor = counts;
+        let mut members = vec![0u32; n];
+        for (i, &c) in net.assign.iter().enumerate() {
+            members[cursor[c as usize] as usize] = i as u32;
+            cursor[c as usize] += 1;
+        }
+        Self {
+            net,
+            cell_start,
+            members,
+        }
+    }
+
+    pub fn n_cells(&self) -> usize {
+        self.net.indices.len()
+    }
+
+    pub fn members(&self, c: usize) -> &[u32] {
+        &self.members[self.cell_start[c] as usize..self.cell_start[c + 1] as usize]
+    }
+}
+
+/// Build the sparse edge set of the full cloud from the cover graph:
+/// only cell pairs whose centers are within `τ + 2ε` are scanned, and
+/// within a scanned pair only edges with `d ≤ τ` are kept.
+///
+/// With `knn_k == 0` this is **exact**: the triangle inequality puts
+/// any pair at distance ≤ τ inside a scanned cell pair
+/// (`d(c_u, c_v) ≤ d(c_u,u) + d(u,v) + d(v,c_v) ≤ 2ε + τ`), so the
+/// result is the full thresholded edge set and downstream diagrams are
+/// bit-identical to the dense pass at the same finite τ.
+///
+/// With `knn_k > 0` each point keeps at most its `knn_k` nearest kept
+/// neighbors, union-symmetrized (an edge survives if *either* endpoint
+/// ranks it); this is an approximation with no blanket stability bound
+/// — use the ε-net subsample when a certified `2ε` bound is needed.
+pub fn net_graph_edges(
+    pc: &PointCloud,
+    cover: &NetCover,
+    tau: f64,
+    knn_k: usize,
+    pool: Option<&ThreadPool>,
+) -> SparseDistances {
+    let n = pc.n();
+    let nc = cover.n_cells();
+    let eps = cover.net.radius;
+    let reach = tau + 2.0 * eps; // +∞ stays +∞: scan everything
+    let mut cell_pairs: Vec<(u32, u32)> = Vec::new();
+    for ci in 0..nc {
+        let a = cover.net.indices[ci] as usize;
+        for cj in ci..nc {
+            let b = cover.net.indices[cj] as usize;
+            if ci == cj || pc.dist(a, b) <= reach {
+                cell_pairs.push((ci as u32, cj as u32));
+            }
+        }
+    }
+
+    let scan_pair = |ci: usize, cj: usize, out: &mut Vec<(u32, u32, f64)>| {
+        let ms = cover.members(ci);
+        if ci == cj {
+            for (x, &u) in ms.iter().enumerate() {
+                for &v in &ms[x + 1..] {
+                    let d = pc.dist(u as usize, v as usize);
+                    if d <= tau {
+                        out.push((u.min(v), u.max(v), d));
+                    }
+                }
+            }
+        } else {
+            for &u in ms {
+                for &v in cover.members(cj) {
+                    let d = pc.dist(u as usize, v as usize);
+                    if d <= tau {
+                        out.push((u.min(v), u.max(v), d));
+                    }
+                }
+            }
+        }
+    };
+
+    let entries: Vec<(u32, u32, f64)> = match pool {
+        Some(pool) if cell_pairs.len() >= 2 => {
+            // Chunked fan-out with in-order splice, same shape as the
+            // sparse distance kernel: deterministic output order for
+            // every schedule.
+            let nchunks = cell_pairs
+                .len()
+                .div_ceil((pool.threads() * 8).max(1))
+                .max(1);
+            let chunk = cell_pairs.len().div_ceil(nchunks);
+            let nchunks = cell_pairs.len().div_ceil(chunk);
+            let slots: Vec<Mutex<Vec<(u32, u32, f64)>>> =
+                (0..nchunks).map(|_| Mutex::new(Vec::new())).collect();
+            pool.run_stealing(nchunks, 1, |_tid, range| {
+                for c in range {
+                    let lo = c * chunk;
+                    let hi = (lo + chunk).min(cell_pairs.len());
+                    let mut local = Vec::new();
+                    for &(ci, cj) in &cell_pairs[lo..hi] {
+                        scan_pair(ci as usize, cj as usize, &mut local);
+                    }
+                    *slots[c].lock().unwrap() = local;
+                }
+            });
+            let mut all = Vec::new();
+            for s in slots {
+                all.append(&mut s.into_inner().unwrap());
+            }
+            all
+        }
+        _ => {
+            let mut all = Vec::new();
+            for &(ci, cj) in &cell_pairs {
+                scan_pair(ci as usize, cj as usize, &mut all);
+            }
+            all
+        }
+    };
+
+    let entries = if knn_k == 0 {
+        entries
+    } else {
+        knn_cap(n, entries, knn_k)
+    };
+    SparseDistances { n, entries }
+}
+
+/// Keep, per vertex, its `k` nearest incident entries (ties broken by
+/// the neighbor index), union-symmetrized across endpoints. Entry order
+/// is preserved, so the result is deterministic.
+fn knn_cap(n: usize, entries: Vec<(u32, u32, f64)>, k: usize) -> Vec<(u32, u32, f64)> {
+    use super::f64_order_key;
+    let mut adj: Vec<Vec<(u64, u32, u32)>> = vec![Vec::new(); n];
+    for (idx, &(u, v, d)) in entries.iter().enumerate() {
+        let key = f64_order_key(d);
+        adj[u as usize].push((key, v, idx as u32));
+        adj[v as usize].push((key, u, idx as u32));
+    }
+    let mut keep = vec![false; entries.len()];
+    for list in &mut adj {
+        list.sort_unstable();
+        for &(_, _, idx) in list.iter().take(k) {
+            keep[idx as usize] = true;
+        }
+    }
+    entries
+        .into_iter()
+        .zip(keep)
+        .filter_map(|(e, kept)| kept.then_some(e))
+        .collect()
+}
+
+/// Upper bound on the enclosing radius from the net:
+/// `min_{c ∈ centers} max_j d(c, j)`. Since centers are a subset of the
+/// vertices this is ≥ `r_enc = min_i max_j d(i, j)`, and the cone
+/// argument holds for *any* cut at or above `r_enc` — the center
+/// achieving the bound cones off the whole complex at that value — so
+/// truncating an infinite-τ build here preserves every diagram while
+/// costing O(|net|·n) distances instead of O(n²).
+pub fn net_enclosing_bound(pc: &PointCloud, cover: &NetCover) -> f64 {
+    let n = pc.n();
+    let mut best = f64::INFINITY;
+    for &c in &cover.net.indices {
+        let mut rowmax = f64::NEG_INFINITY;
+        for j in 0..n {
+            let d = pc.dist(c as usize, j);
+            if d > rowmax {
+                rowmax = d;
+            }
+        }
+        if rowmax < best {
+            best = rowmax;
+        }
+    }
+    best
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::datasets;
+    use crate::filtration::EdgeFiltration;
     use crate::homology::analysis::bottleneck_distance;
     use crate::homology::{compute_ph, EngineOptions};
+
+    fn cloud(data: &MetricData) -> PointCloud {
+        match data {
+            MetricData::Points(p) => p.clone(),
+            _ => unreachable!(),
+        }
+    }
 
     #[test]
     fn net_is_a_cover() {
         let data = datasets::circle(200, 1.0, 0.02, 3);
-        let pc = match &data {
-            MetricData::Points(p) => p.clone(),
-            _ => unreachable!(),
-        };
+        let pc = cloud(&data);
         let net = farthest_point_sample(&pc, 50, 0.0, 1);
         assert_eq!(net.indices.len(), 50);
         // Every point is within `radius` of some net point.
@@ -98,15 +338,89 @@ mod tests {
     }
 
     #[test]
+    fn reported_radius_and_assignment_are_exact() {
+        // The reported ε must equal the brute-force cover radius of the
+        // final center set bit-for-bit (f64 min/max over the same
+        // distances is order-independent), and each point's assigned
+        // center must achieve its nearest-center distance.
+        let data = datasets::torus3(150, 2.0, 0.7, 11);
+        let pc = cloud(&data);
+        for k in [1usize, 7, 40, 150] {
+            let net = farthest_point_sample(&pc, k, 0.0, 5);
+            let mut brute = 0.0f64;
+            for i in 0..pc.n() {
+                let nearest = net
+                    .indices
+                    .iter()
+                    .map(|&c| pc.dist(i, c as usize))
+                    .fold(f64::INFINITY, f64::min);
+                brute = brute.max(nearest);
+                let assigned = pc.dist(i, net.indices[net.assign[i] as usize] as usize);
+                assert_eq!(assigned, nearest, "k={k} point {i}");
+            }
+            assert_eq!(net.radius, brute, "k={k}");
+        }
+    }
+
+    #[test]
     fn radius_decreases_with_k() {
         let data = datasets::torus3(300, 2.0, 0.7, 4);
-        let pc = match &data {
-            MetricData::Points(p) => p.clone(),
-            _ => unreachable!(),
-        };
+        let pc = cloud(&data);
         let r20 = farthest_point_sample(&pc, 20, 0.0, 1).radius;
         let r100 = farthest_point_sample(&pc, 100, 0.0, 1).radius;
         assert!(r100 < r20);
+    }
+
+    #[test]
+    fn cells_partition_the_cloud() {
+        let data = datasets::circle(160, 1.0, 0.01, 2);
+        let pc = cloud(&data);
+        let cover = NetCover::build(&pc, 24, 0.0, 3);
+        let mut seen = vec![false; pc.n()];
+        for c in 0..cover.n_cells() {
+            for &m in cover.members(c) {
+                assert!(!seen[m as usize], "point {m} in two cells");
+                seen[m as usize] = true;
+                assert_eq!(cover.net.assign[m as usize] as usize, c);
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn net_graph_kernel_is_exact_uncapped() {
+        // Uncapped cover-graph scan == dense thresholded edge set,
+        // byte-for-byte after the front-end sort.
+        let data = datasets::circle(150, 1.0, 0.02, 9);
+        let pc = cloud(&data);
+        let tau = 0.6;
+        let dense = EdgeFiltration::build(&data, tau);
+        for k in [5usize, 20, 60] {
+            let cover = NetCover::build(&pc, k, 0.0, 4);
+            let sd = net_graph_edges(&pc, &cover, tau, 0, None);
+            assert_eq!(sd.entries.len(), dense.n_edges(), "k={k}");
+            let f = EdgeFiltration::build(&MetricData::Sparse(sd), tau);
+            assert_eq!(f.edges, dense.edges, "k={k}");
+            assert_eq!(
+                f.values.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                dense.values.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "k={k}"
+            );
+        }
+    }
+
+    #[test]
+    fn net_graph_kernel_pooled_matches_serial() {
+        let data = datasets::torus3(120, 2.0, 0.7, 6);
+        let pc = cloud(&data);
+        let cover = NetCover::build(&pc, 30, 0.0, 8);
+        let serial = net_graph_edges(&pc, &cover, 1.5, 0, None);
+        let pool = ThreadPool::new(4);
+        let pooled = net_graph_edges(&pc, &cover, 1.5, 0, Some(&pool));
+        assert_eq!(serial.entries, pooled.entries);
+        let capped_s = net_graph_edges(&pc, &cover, 1.5, 6, None);
+        let capped_p = net_graph_edges(&pc, &cover, 1.5, 6, Some(&pool));
+        assert_eq!(capped_s.entries, capped_p.entries);
     }
 
     #[test]
@@ -115,10 +429,7 @@ mod tests {
         // (interleaving + stability). This validates the whole pipeline:
         // sparsifier, engine, and the bottleneck implementation together.
         let data = datasets::circle(240, 1.0, 0.0, 7);
-        let pc = match &data {
-            MetricData::Points(p) => p.clone(),
-            _ => unreachable!(),
-        };
+        let pc = cloud(&data);
         let opts = EngineOptions {
             max_dim: 1,
             ..Default::default()
@@ -137,12 +448,83 @@ mod tests {
     }
 
     #[test]
+    fn net_graph_bottleneck_sweep() {
+        // Sweep net sizes: route the subsample's edge set through the
+        // cover-graph kernel (a coarser net over the net) and assert the
+        // 2ε stability gate at every scale. Exercises the kernel as the
+        // actual front-end of the bounded-error pipeline.
+        let data = datasets::circle(240, 1.0, 0.0, 7);
+        let pc = cloud(&data);
+        let opts = EngineOptions {
+            max_dim: 1,
+            ..Default::default()
+        };
+        let tau = 3.0;
+        let full = compute_ph(&data, tau, &opts).diagram;
+        for k in [40usize, 80, 140] {
+            let net = farthest_point_sample(&pc, k, 0.0, 2);
+            let sub_pc = cloud(&subsample_cloud(&pc, &net));
+            let inner = NetCover::build(&sub_pc, (k / 4).max(1), 0.0, 3);
+            let sd = net_graph_edges(&sub_pc, &inner, tau, 0, None);
+            let sub = compute_ph(&MetricData::Sparse(sd), tau, &opts).diagram;
+            let d = bottleneck_distance(&full, &sub, 1);
+            assert!(
+                d <= 2.0 * net.radius + 1e-9,
+                "k={k}: bottleneck {d} > 2ε = {}",
+                2.0 * net.radius
+            );
+        }
+    }
+
+    #[test]
+    fn knn_cap_keeps_nearest_neighbors_and_loop() {
+        let data = datasets::circle(100, 1.0, 0.0, 5);
+        let pc = cloud(&data);
+        let cover = NetCover::build(&pc, 20, 0.0, 3);
+        let uncapped = net_graph_edges(&pc, &cover, 3.0, 0, None);
+        let capped = net_graph_edges(&pc, &cover, 3.0, 4, None);
+        assert!(capped.entries.len() < uncapped.entries.len());
+        // Union symmetrization: every point keeps its ring neighbors,
+        // so the H1 loop survives the cap.
+        let opts = EngineOptions {
+            max_dim: 1,
+            ..Default::default()
+        };
+        let pd = compute_ph(&MetricData::Sparse(capped), 3.0, &opts).diagram;
+        assert!(!pd.significant(1, 0.5).is_empty());
+    }
+
+    #[test]
+    fn net_enclosing_bound_dominates_r_enc() {
+        let data = datasets::circle(120, 1.0, 0.02, 8);
+        let pc = cloud(&data);
+        let cover = NetCover::build(&pc, 30, 0.0, 2);
+        let bound = net_enclosing_bound(&pc, &cover);
+        // Brute-force r_enc.
+        let mut r_enc = f64::INFINITY;
+        for i in 0..pc.n() {
+            let rm = (0..pc.n())
+                .map(|j| pc.dist(i, j))
+                .fold(f64::NEG_INFINITY, f64::max);
+            r_enc = r_enc.min(rm);
+        }
+        assert!(bound >= r_enc);
+        assert!(bound.is_finite());
+        // Truncating at the bound preserves the diagram (cone argument).
+        let opts = EngineOptions {
+            max_dim: 1,
+            ..Default::default()
+        };
+        let full = compute_ph(&data, f64::INFINITY, &opts).diagram;
+        let cut = compute_ph(&data, bound, &opts).diagram;
+        let d = bottleneck_distance(&full, &cut, 1);
+        assert!(d <= 1e-12, "cut at net bound changed H1: {d}");
+    }
+
+    #[test]
     fn min_radius_stopping() {
         let data = datasets::circle(100, 1.0, 0.0, 5);
-        let pc = match &data {
-            MetricData::Points(p) => p.clone(),
-            _ => unreachable!(),
-        };
+        let pc = cloud(&data);
         let net = farthest_point_sample(&pc, 100, 0.5, 1);
         assert!(net.indices.len() < 100, "should stop early");
         assert!(net.radius <= 0.5 + 1e-9 || net.indices.len() == 100);

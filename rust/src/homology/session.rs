@@ -45,6 +45,7 @@ use crate::filtration::{
     enclosing_radius_of_filtration, EdgeFiltration, FiltrationStats, Neighborhoods,
 };
 use crate::geometry::MetricData;
+use crate::io::stream::{StreamOptions, StreamStats};
 use crate::util::timer::PhaseTimer;
 
 use super::engine::{Engine, EngineOptions, PhResult};
@@ -314,6 +315,35 @@ impl Session {
         timings.stop();
         let sparse = matches!(data, MetricData::Sparse(_));
         self.finish_ingest(data.n(), f, timings, fstats, "native", tau, sparse)
+    }
+
+    /// Stream-ingest a sparse `i j d` COO file at threshold `tau`,
+    /// staging at most `opts.budget_bytes` (+ one line chunk) of
+    /// transient memory: chunked parse, per-chunk `u128` key packing,
+    /// budgeted spill to disk, k-way merge straight into the filtration
+    /// arrays. Validation and the resulting diagrams are identical to
+    /// `ingest(&io::read_sparse_coo(path)?, tau)` — bit-for-bit at
+    /// tol 0 — only the transient memory profile differs. The returned
+    /// [`StreamStats`] report spill activity and the staging peak for
+    /// budget assertions.
+    pub fn ingest_sparse_file(
+        &self,
+        path: &std::path::Path,
+        tau: f64,
+        opts: &StreamOptions,
+    ) -> Result<(FiltrationHandle, StreamStats), DoryError> {
+        if tau.is_nan() {
+            return Err(DoryError::Request("ingest tau is NaN".into()));
+        }
+        let mut fstats = FiltrationStats::default();
+        let mut timings = PhaseTimer::new();
+        timings.start("F1");
+        let (f, sstats) =
+            crate::io::stream::stream_sparse_file(path, tau, opts, self.engine.pool(), &mut fstats)?;
+        timings.stop();
+        let n = f.n as usize;
+        let h = self.finish_ingest(n, f, timings, fstats, "stream", tau, true)?;
+        Ok((h, sstats))
     }
 
     /// Ingest a filtration someone else built — the coordinator's

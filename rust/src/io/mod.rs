@@ -20,6 +20,8 @@ use crate::geometry::{DenseDistances, MetricData, PointCloud, SparseDistances};
 use crate::homology::diagram::Diagram;
 use crate::util::json::Json;
 
+pub mod stream;
+
 type Result<T> = std::result::Result<T, DoryError>;
 
 fn open(path: &Path) -> Result<std::fs::File> {
@@ -113,7 +115,52 @@ pub fn read_lower_distance(path: &Path) -> Result<MetricData> {
     validated(MetricData::Dense(DenseDistances::new(rows, tri)), path)
 }
 
+/// Parse one `i j d` sparse-COO data line (extra trailing tokens
+/// ignored, matching the historical reader). Shared with the streaming
+/// reader so both front doors accept the identical grammar.
+pub(crate) fn parse_coo_line(t: &str) -> Option<(u32, u32, f64)> {
+    let mut it = t.split_whitespace();
+    Some((
+        it.next()?.parse().ok()?,
+        it.next()?.parse().ok()?,
+        it.next()?.parse().ok()?,
+    ))
+}
+
+/// Typed rejection for a self-loop `i i d` line — the same contract
+/// `from_weighted_edges*` enforces for API ingestion, so file and wire
+/// inputs agree instead of the file path silently dropping the entry.
+pub(crate) fn self_loop_error(path: &Path, lineno: usize, i: u32) -> DoryError {
+    invalid(
+        path,
+        format!("line {lineno}: self-loop entry ({i}, {i}); Rips edges join distinct vertices"),
+    )
+}
+
+/// Typed rejection for a vertex pair seen twice (in either orientation).
+pub(crate) fn duplicate_error(path: &Path, a: u32, b: u32) -> DoryError {
+    invalid(
+        path,
+        format!("duplicate entry ({a}, {b}); pairs must be unique up to orientation"),
+    )
+}
+
+/// Find a repeated pair among packed `(a << 32) | b` keys. Sorts in
+/// place; duplicates become adjacent because keys are unique per pair.
+pub(crate) fn find_duplicate_pair(pairs: &mut [u64]) -> Option<(u32, u32)> {
+    pairs.sort_unstable();
+    pairs
+        .windows(2)
+        .find(|w| w[0] == w[1])
+        .map(|w| ((w[0] >> 32) as u32, w[0] as u32))
+}
+
 /// Load a sparse COO distance list: `i j d` per line (0-based).
+///
+/// Self-loops and duplicate pairs (in either orientation) are refused
+/// with typed [`DoryError::InvalidInput`] — the same validation
+/// `from_weighted_edges*` applies to API ingestion. A duplicate pair
+/// would otherwise corrupt the CSR degree counts downstream.
 pub fn read_sparse_coo(path: &Path) -> Result<MetricData> {
     let file = open(path)?;
     let mut entries = Vec::new();
@@ -124,22 +171,21 @@ pub fn read_sparse_coo(path: &Path) -> Result<MetricData> {
         if t.is_empty() || t.starts_with('#') {
             continue;
         }
-        let mut it = t.split_whitespace();
-        let parsed: Option<(u32, u32, f64)> = (|| {
-            Some((
-                it.next()?.parse().ok()?,
-                it.next()?.parse().ok()?,
-                it.next()?.parse().ok()?,
-            ))
-        })();
-        let (i, j, d) = parsed
+        let (i, j, d) = parse_coo_line(t)
             .ok_or_else(|| invalid(path, format!("line {}: expected `i j d`", lineno + 1)))?;
         if i == j {
-            continue;
+            return Err(self_loop_error(path, lineno + 1, i));
         }
         let (u, v) = (i.min(j), i.max(j));
         n = n.max(v as usize + 1);
         entries.push((u, v, d));
+    }
+    let mut pairs: Vec<u64> = entries
+        .iter()
+        .map(|&(u, v, _)| ((u as u64) << 32) | v as u64)
+        .collect();
+    if let Some((a, b)) = find_duplicate_pair(&mut pairs) {
+        return Err(duplicate_error(path, a, b));
     }
     validated(MetricData::Sparse(SparseDistances { n, entries }), path)
 }
@@ -294,6 +340,25 @@ mod tests {
         let p = tmp("nan-coo.txt");
         std::fs::write(&p, "0 1 NaN\n").unwrap();
         assert!(read_sparse_coo(&p).unwrap_err().to_string().contains("NaN"));
+    }
+
+    #[test]
+    fn sparse_self_loops_and_duplicates_rejected() {
+        // Regression: the reader used to `continue` past self-loops and
+        // accept duplicate pairs that the weighted-edge API refuses.
+        let p = tmp("loop-coo.txt");
+        std::fs::write(&p, "0 1 1.0\n2 2 0.5\n").unwrap();
+        let e = read_sparse_coo(&p).unwrap_err();
+        assert!(matches!(e, DoryError::InvalidInput(_)), "{e}");
+        assert!(e.to_string().contains("self-loop"), "{e}");
+        assert!(e.to_string().contains("line 2"), "{e}");
+
+        // Reversed orientation of the same pair is still a duplicate.
+        let p = tmp("dup-coo.txt");
+        std::fs::write(&p, "0 1 1.0\n2 3 2.0\n1 0 1.5\n").unwrap();
+        let e = read_sparse_coo(&p).unwrap_err();
+        assert!(matches!(e, DoryError::InvalidInput(_)), "{e}");
+        assert!(e.to_string().contains("duplicate entry (0, 1)"), "{e}");
     }
 
     #[test]

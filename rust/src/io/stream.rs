@@ -1,0 +1,542 @@
+//! Streaming sparse-COO ingestion: chunked parse, budgeted spill store,
+//! k-way merge.
+//!
+//! The in-memory reader ([`super::read_sparse_coo`]) materializes every
+//! entry before the front-end repacks and sorts them — three full-size
+//! transients (entry vector, key vector, final arrays) that cap n long
+//! before the reduction does. This module reads the file in line chunks,
+//! validates each entry with the same typed rules as the in-memory path,
+//! and bit-packs the `u128` filtration sort key per chunk. Keys stage
+//! into a byte-budgeted [`SpillStore`]: once the in-memory run fills,
+//! it is sorted (on the pool) and spilled to a temp file; at EOF the
+//! sorted runs are k-way merged through small read buffers straight
+//! into the final filtration arrays. Because edge keys are strictly
+//! unique, the merged sequence is the globally sorted sequence no matter
+//! how lines were chunked or runs were cut — the streamed filtration is
+//! byte-identical to the in-memory one, so diagrams match at tol 0.
+//!
+//! A second (u64) spill store carries packed `(a, b)` vertex pairs for
+//! out-of-core duplicate detection: value order does not make equal
+//! pairs adjacent, so pairs get their own sorted merge, mirroring the
+//! separate pair sort in `try_from_weighted_edges*`.
+//!
+//! Resident staging is `O(budget + chunk)`: the two run buffers are
+//! allocated at their budget share and never grow, the line chunk is a
+//! fixed-capacity scratch vector, and the merge holds one buffered
+//! reader per run. The final filtration arrays (the output itself) are
+//! the only full-size allocation.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use crate::error::DoryError;
+use crate::filtration::{edge_key, sort_run_u128, unpack_edge_key, EdgeFiltration, FiltrationStats};
+use crate::reduction::pool::ThreadPool;
+
+use super::{duplicate_error, invalid, open, parse_coo_line, self_loop_error};
+
+type Result<T> = std::result::Result<T, DoryError>;
+
+/// Default lines parsed per chunk when `chunk_lines` is 0.
+const DEFAULT_CHUNK_LINES: usize = 65_536;
+/// Floor on keys per spilled run so pathological budgets still make
+/// progress (and tests can force spills with tiny budgets).
+const MIN_RUN_KEYS: usize = 64;
+/// Read-buffer bytes per run during the k-way merge.
+const MERGE_BUF_BYTES: usize = 64 << 10;
+
+/// Knobs for [`stream_sparse_file`] / `Session::ingest_sparse_file`.
+#[derive(Clone, Debug, Default)]
+pub struct StreamOptions {
+    /// Lines parsed + packed per chunk (0 = 65536). Output is invariant
+    /// to this; it only bounds the parse scratch buffer.
+    pub chunk_lines: usize,
+    /// Staging budget in bytes across both spill stores (0 = unbounded:
+    /// everything stays in memory and nothing touches disk).
+    pub budget_bytes: usize,
+    /// Directory for spilled runs (`None` = `std::env::temp_dir()`).
+    pub spill_dir: Option<PathBuf>,
+}
+
+/// Counters from one streamed ingest, for benches and budget asserts.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StreamStats {
+    /// Non-blank, non-comment data lines parsed.
+    pub lines: u64,
+    /// Line chunks staged.
+    pub chunks: u64,
+    /// Validated entries (all of them, including those above τ).
+    pub entries: u64,
+    /// Entries with `d <= τ` that became filtration keys.
+    pub kept: u64,
+    /// Sorted runs spilled to disk (both stores).
+    pub spilled_runs: u64,
+    /// Bytes written to spill files.
+    pub spilled_bytes: u64,
+    /// Peak resident staging: run buffers + chunk scratch, in bytes.
+    /// Tracks `budget_bytes` (plus the chunk scratch), not the input
+    /// size.
+    pub staging_peak_bytes: usize,
+}
+
+/// Fixed-width sortable key a [`SpillStore`] can stage and serialize.
+pub(crate) trait SpillKey: Copy + Ord + Send {
+    const BYTES: usize;
+    fn encode(self) -> [u8; 16];
+    fn decode(buf: &[u8]) -> Self;
+    /// Sort one sealed run. The u128 edge-key impl rides the pooled
+    /// front-end sort; order is what matters, and it is total.
+    fn sort_run(keys: Vec<Self>, pool: Option<&ThreadPool>) -> Vec<Self>;
+}
+
+impl SpillKey for u64 {
+    const BYTES: usize = 8;
+    fn encode(self) -> [u8; 16] {
+        let mut out = [0u8; 16];
+        out[..8].copy_from_slice(&self.to_le_bytes());
+        out
+    }
+    fn decode(buf: &[u8]) -> Self {
+        u64::from_le_bytes(buf[..8].try_into().unwrap())
+    }
+    fn sort_run(mut keys: Vec<Self>, _pool: Option<&ThreadPool>) -> Vec<Self> {
+        keys.sort_unstable();
+        keys
+    }
+}
+
+impl SpillKey for u128 {
+    const BYTES: usize = 16;
+    fn encode(self) -> [u8; 16] {
+        self.to_le_bytes()
+    }
+    fn decode(buf: &[u8]) -> Self {
+        u128::from_le_bytes(buf[..16].try_into().unwrap())
+    }
+    fn sort_run(keys: Vec<Self>, pool: Option<&ThreadPool>) -> Vec<Self> {
+        sort_run_u128(keys, pool)
+    }
+}
+
+/// Byte-budgeted staging area for sortable keys: buffer up to
+/// `run_capacity` keys, then sort the run and spill it to a temp file.
+/// [`SpillStore::finish`] hands back an iterator over the globally
+/// sorted key sequence (pure in-memory when nothing spilled, a k-way
+/// heap merge over buffered run readers otherwise).
+pub(crate) struct SpillStore<K: SpillKey> {
+    buf: Vec<K>,
+    run_capacity: usize,
+    dir: PathBuf,
+    tag: &'static str,
+    runs: Vec<PathBuf>,
+    seq: usize,
+    pub spilled_runs: u64,
+    pub spilled_bytes: u64,
+    pub peak_buf_bytes: usize,
+}
+
+impl<K: SpillKey> SpillStore<K> {
+    /// `budget_bytes == 0` means unbounded (no spilling).
+    pub fn new(budget_bytes: usize, dir: PathBuf, tag: &'static str) -> Self {
+        let run_capacity = if budget_bytes == 0 {
+            usize::MAX
+        } else {
+            (budget_bytes / K::BYTES).max(MIN_RUN_KEYS)
+        };
+        // Pre-size the budgeted buffer so pushes never reallocate past
+        // the budget (Vec doubling would overshoot it by up to 2x).
+        let buf = if budget_bytes == 0 {
+            Vec::new()
+        } else {
+            Vec::with_capacity(run_capacity)
+        };
+        Self {
+            buf,
+            run_capacity,
+            dir,
+            tag,
+            runs: Vec::new(),
+            seq: 0,
+            spilled_runs: 0,
+            spilled_bytes: 0,
+            peak_buf_bytes: 0,
+        }
+    }
+
+    pub fn push(&mut self, k: K, pool: Option<&ThreadPool>) -> Result<()> {
+        self.buf.push(k);
+        if self.buf.len() >= self.run_capacity {
+            self.spill_run(pool)?;
+        }
+        Ok(())
+    }
+
+    fn note_peak(&mut self) {
+        self.peak_buf_bytes = self.peak_buf_bytes.max(self.buf.len() * K::BYTES);
+    }
+
+    fn spill_run(&mut self, pool: Option<&ThreadPool>) -> Result<()> {
+        self.note_peak();
+        let fresh = if self.run_capacity == usize::MAX {
+            Vec::new()
+        } else {
+            Vec::with_capacity(self.run_capacity)
+        };
+        let run = std::mem::replace(&mut self.buf, fresh);
+        let sorted = K::sort_run(run, pool);
+        let path = self.dir.join(format!(
+            "dory-spill-{}-{}-{}.run",
+            self.tag,
+            std::process::id(),
+            self.seq
+        ));
+        self.seq += 1;
+        let file = File::create(&path).map_err(|e| DoryError::io(&path, e))?;
+        let mut w = BufWriter::with_capacity(MERGE_BUF_BYTES, file);
+        for &k in &sorted {
+            w.write_all(&k.encode()[..K::BYTES])
+                .map_err(|e| DoryError::io(&path, e))?;
+        }
+        w.flush().map_err(|e| DoryError::io(&path, e))?;
+        self.spilled_bytes += (sorted.len() * K::BYTES) as u64;
+        self.spilled_runs += 1;
+        self.runs.push(path);
+        Ok(())
+    }
+
+    /// Seal the store, fold its spill counters into `totals`, and
+    /// return the globally sorted key stream.
+    pub fn finish(mut self, pool: Option<&ThreadPool>, totals: &mut RunTotals) -> Result<SpillIter<K>> {
+        self.note_peak();
+        if self.runs.is_empty() {
+            totals.peak_buf_bytes += self.peak_buf_bytes;
+            let sorted = K::sort_run(std::mem::take(&mut self.buf), pool);
+            return Ok(SpillIter::Mem(sorted.into_iter()));
+        }
+        if !self.buf.is_empty() {
+            self.spill_run(pool)?;
+        }
+        totals.spilled_runs += self.spilled_runs;
+        totals.spilled_bytes += self.spilled_bytes;
+        totals.peak_buf_bytes += self.peak_buf_bytes;
+        let mut readers = Vec::with_capacity(self.runs.len());
+        let mut heap = BinaryHeap::with_capacity(self.runs.len());
+        for (i, path) in self.runs.iter().enumerate() {
+            let mut r = RunReader::<K>::open(path)?;
+            if let Some(k) = r.next()? {
+                heap.push(Reverse((k, i)));
+            }
+            readers.push(r);
+        }
+        Ok(SpillIter::Merge(KWayMerge {
+            readers,
+            heap,
+            files: std::mem::take(&mut self.runs),
+        }))
+    }
+}
+
+/// Spill counters accumulated across the stores of one streamed ingest.
+#[derive(Default)]
+pub(crate) struct RunTotals {
+    pub spilled_runs: u64,
+    pub spilled_bytes: u64,
+    pub peak_buf_bytes: usize,
+}
+
+struct RunReader<K: SpillKey> {
+    r: BufReader<File>,
+    path: PathBuf,
+    _k: std::marker::PhantomData<K>,
+}
+
+impl<K: SpillKey> RunReader<K> {
+    fn open(path: &Path) -> Result<Self> {
+        let file = File::open(path).map_err(|e| DoryError::io(path, e))?;
+        Ok(Self {
+            r: BufReader::with_capacity(MERGE_BUF_BYTES, file),
+            path: path.to_path_buf(),
+            _k: std::marker::PhantomData,
+        })
+    }
+
+    fn next(&mut self) -> Result<Option<K>> {
+        let mut buf = [0u8; 16];
+        let slot = &mut buf[..K::BYTES];
+        match self.r.read_exact(slot) {
+            Ok(()) => Ok(Some(K::decode(slot))),
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => Ok(None),
+            Err(e) => Err(DoryError::io(&self.path, e)),
+        }
+    }
+}
+
+/// Sorted key stream out of a [`SpillStore`]: in-memory when nothing
+/// spilled, a binary-heap k-way merge over run files otherwise. Run
+/// files are deleted on drop.
+pub(crate) enum SpillIter<K: SpillKey> {
+    Mem(std::vec::IntoIter<K>),
+    Merge(KWayMerge<K>),
+}
+
+impl<K: SpillKey> SpillIter<K> {
+    pub fn next(&mut self) -> Result<Option<K>> {
+        match self {
+            SpillIter::Mem(it) => Ok(it.next()),
+            SpillIter::Merge(m) => m.next(),
+        }
+    }
+}
+
+pub(crate) struct KWayMerge<K: SpillKey> {
+    readers: Vec<RunReader<K>>,
+    heap: BinaryHeap<Reverse<(K, usize)>>,
+    files: Vec<PathBuf>,
+}
+
+impl<K: SpillKey> KWayMerge<K> {
+    fn next(&mut self) -> Result<Option<K>> {
+        let Some(Reverse((k, i))) = self.heap.pop() else {
+            return Ok(None);
+        };
+        if let Some(nk) = self.readers[i].next()? {
+            self.heap.push(Reverse((nk, i)));
+        }
+        Ok(Some(k))
+    }
+}
+
+impl<K: SpillKey> Drop for KWayMerge<K> {
+    fn drop(&mut self) {
+        for p in &self.files {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}
+
+/// Stream a sparse `i j d` file into an [`EdgeFiltration`] at threshold
+/// `tau`, staging at most `opts.budget_bytes` (+ one line chunk) in
+/// memory. Validation matches [`super::read_sparse_coo`] exactly —
+/// malformed lines, NaN distances, self-loops, and duplicate pairs in
+/// either orientation are typed [`DoryError::InvalidInput`] — and the
+/// resulting filtration is byte-identical to the in-memory path's, so
+/// downstream diagrams match at tol 0.
+pub fn stream_sparse_file(
+    path: &Path,
+    tau: f64,
+    opts: &StreamOptions,
+    pool: Option<&ThreadPool>,
+    fstats: &mut FiltrationStats,
+) -> Result<(EdgeFiltration, StreamStats)> {
+    let chunk_lines = if opts.chunk_lines == 0 {
+        DEFAULT_CHUNK_LINES
+    } else {
+        opts.chunk_lines
+    };
+    let dir = opts
+        .spill_dir
+        .clone()
+        .unwrap_or_else(std::env::temp_dir);
+    // Budget split mirrors the per-entry byte ratio: 16B value key vs
+    // 8B pair key.
+    let (val_budget, pair_budget) = if opts.budget_bytes == 0 {
+        (0, 0)
+    } else {
+        let vb = opts.budget_bytes * 2 / 3;
+        (vb.max(1), (opts.budget_bytes - vb).max(1))
+    };
+    let mut vals = SpillStore::<u128>::new(val_budget, dir.clone(), "keys");
+    let mut pairs = SpillStore::<u64>::new(pair_budget, dir, "pairs");
+    let mut st = StreamStats::default();
+
+    let t_parse = Instant::now();
+    let file = open(path)?;
+    let mut r = BufReader::new(file);
+    let mut line = String::new();
+    let mut chunk: Vec<(u32, u32, f64)> = Vec::with_capacity(chunk_lines);
+    let mut lineno = 0usize;
+    let mut n = 0usize;
+
+    let mut flush_chunk = |chunk: &mut Vec<(u32, u32, f64)>,
+                           vals: &mut SpillStore<u128>,
+                           pairs: &mut SpillStore<u64>,
+                           st: &mut StreamStats|
+     -> Result<()> {
+        if chunk.is_empty() {
+            return Ok(());
+        }
+        st.chunks += 1;
+        for &(u, v, d) in chunk.iter() {
+            pairs.push(((u as u64) << 32) | v as u64, pool)?;
+            if d <= tau {
+                vals.push(edge_key(d, u, v), pool)?;
+                st.kept += 1;
+            }
+        }
+        chunk.clear();
+        Ok(())
+    };
+
+    loop {
+        line.clear();
+        let read = r.read_line(&mut line).map_err(|e| DoryError::io(path, e))?;
+        if read == 0 {
+            break;
+        }
+        lineno += 1;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        st.lines += 1;
+        let (i, j, d) = parse_coo_line(t)
+            .ok_or_else(|| invalid(path, format!("line {lineno}: expected `i j d`")))?;
+        if d.is_nan() {
+            return Err(invalid(
+                path,
+                format!("line {lineno}: sparse entry ({i}, {j}) is NaN"),
+            ));
+        }
+        if i == j {
+            return Err(self_loop_error(path, lineno, i));
+        }
+        let (u, v) = (i.min(j), i.max(j));
+        n = n.max(v as usize + 1);
+        st.entries += 1;
+        chunk.push((u, v, d));
+        if chunk.len() >= chunk_lines {
+            flush_chunk(&mut chunk, &mut vals, &mut pairs, &mut st)?;
+        }
+    }
+    flush_chunk(&mut chunk, &mut vals, &mut pairs, &mut st)?;
+    if n > u32::MAX as usize {
+        return Err(invalid(path, format!("vertex count {n} exceeds u32 range")));
+    }
+    fstats.dist_ns += t_parse.elapsed().as_nanos() as u64;
+
+    let chunk_bytes = chunk.capacity() * std::mem::size_of::<(u32, u32, f64)>();
+    drop(chunk);
+
+    // Out-of-core duplicate detection: merged pair keys are globally
+    // sorted, so a repeated pair (either orientation — entries were
+    // normalized to u < v) shows up adjacent.
+    let t_sort = Instant::now();
+    let mut totals = RunTotals::default();
+    let mut pit = pairs.finish(pool, &mut totals)?;
+    let mut prev: Option<u64> = None;
+    while let Some(k) = pit.next()? {
+        if prev == Some(k) {
+            return Err(duplicate_error(path, (k >> 32) as u32, k as u32));
+        }
+        prev = Some(k);
+    }
+    drop(pit);
+
+    // Merge the value keys straight into the final filtration arrays —
+    // the full sorted key vector is never materialized.
+    let mut edges = Vec::with_capacity(st.kept as usize);
+    let mut values = Vec::with_capacity(st.kept as usize);
+    {
+        let mut vit = vals.finish(pool, &mut totals)?;
+        while let Some(k) = vit.next()? {
+            let (d, a, b) = unpack_edge_key(k);
+            edges.push((a, b));
+            values.push(d);
+        }
+    }
+    st.spilled_runs = totals.spilled_runs;
+    st.spilled_bytes = totals.spilled_bytes;
+    st.staging_peak_bytes = totals.peak_buf_bytes + chunk_bytes;
+    fstats.sort_ns += t_sort.elapsed().as_nanos() as u64;
+    fstats.f1_builds += 1;
+    fstats.edges_considered += st.entries;
+    fstats.edges_kept += edges.len() as u64;
+
+    let f = EdgeFiltration {
+        n: n as u32,
+        edges,
+        values,
+        tau_max: tau,
+    };
+    Ok((f, st))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("dory-stream-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn spill_store_roundtrips_sorted_across_budgets() {
+        // 1000 pseudo-random unique u64 keys pushed unsorted; every
+        // budget (including ones that force many tiny runs) must yield
+        // the same sorted stream.
+        let keys: Vec<u64> = (0..1000u64).map(|i| i.wrapping_mul(0x9E3779B97F4A7C15)).collect();
+        let mut expect = keys.clone();
+        expect.sort_unstable();
+        for budget in [0usize, 512, 8 << 10, 1 << 20] {
+            let mut store = SpillStore::<u64>::new(budget, tmp(""), "test");
+            for &k in &keys {
+                store.push(k, None).unwrap();
+            }
+            let mut totals = RunTotals::default();
+            let mut it = store.finish(None, &mut totals).unwrap();
+            let mut got = Vec::new();
+            while let Some(k) = it.next().unwrap() {
+                got.push(k);
+            }
+            assert_eq!(got, expect, "budget {budget}");
+            if budget > 0 && budget < 1000 * 8 {
+                assert!(totals.spilled_runs > 0, "budget {budget} should spill");
+            }
+        }
+    }
+
+    #[test]
+    fn streamed_validation_matches_reader() {
+        let p = tmp("val.coo");
+        std::fs::write(&p, "0 1 1.0\n3 3 2.0\n").unwrap();
+        let mut fs = FiltrationStats::default();
+        let e = stream_sparse_file(&p, f64::INFINITY, &StreamOptions::default(), None, &mut fs)
+            .unwrap_err();
+        assert!(e.to_string().contains("self-loop"), "{e}");
+
+        std::fs::write(&p, "0 1 1.0\n1 2 2.0\n1 0 3.0\n").unwrap();
+        let e = stream_sparse_file(&p, f64::INFINITY, &StreamOptions::default(), None, &mut fs)
+            .unwrap_err();
+        assert!(e.to_string().contains("duplicate entry (0, 1)"), "{e}");
+
+        std::fs::write(&p, "0 1 NaN\n").unwrap();
+        let e = stream_sparse_file(&p, f64::INFINITY, &StreamOptions::default(), None, &mut fs)
+            .unwrap_err();
+        assert!(e.to_string().contains("NaN"), "{e}");
+
+        std::fs::write(&p, "0 oops 1.0\n").unwrap();
+        let e = stream_sparse_file(&p, f64::INFINITY, &StreamOptions::default(), None, &mut fs)
+            .unwrap_err();
+        assert!(e.to_string().contains("expected `i j d`"), "{e}");
+    }
+
+    #[test]
+    fn tau_filter_applies_at_the_reader() {
+        let p = tmp("tau.coo");
+        std::fs::write(&p, "0 1 1.0\n1 2 5.0\n0 2 2.0\n").unwrap();
+        let mut fs = FiltrationStats::default();
+        let (f, st) =
+            stream_sparse_file(&p, 3.0, &StreamOptions::default(), None, &mut fs).unwrap();
+        assert_eq!(st.entries, 3);
+        assert_eq!(st.kept, 2);
+        assert_eq!(f.n_edges(), 2);
+        assert_eq!(f.edges, vec![(0, 1), (0, 2)]);
+        assert_eq!(f.values, vec![1.0, 2.0]);
+    }
+}

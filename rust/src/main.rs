@@ -87,6 +87,16 @@ run flags:
   --no-shortcut             disable the enumeration-time apparent-pair
                             shortcut (exact fallback; on by default)
   --f1-tile <int>           point rows per front-end distance tile (0 = auto)
+  --stream-chunk <int>      stream-ingest --sparse files, parsing this
+                            many lines per chunk (0 = off; default
+                            65536-line chunks when only the budget is set)
+  --edge-budget-mb <int>    spill sorted edge-key runs to disk past this
+                            staging budget and k-way merge them back
+                            (0 = off; implies streaming for --sparse)
+  --knn-k <int>             sparse net-graph front-end for point clouds:
+                            keep the k nearest incident edges per vertex
+                            (0 = off/exact; diagrams 2eps-stable in the
+                            net radius)
   --no-enclosing            disable the enclosing-radius truncation of
                             infinite-tau filtrations (exact fallback;
                             on by default, diagrams unchanged either way)
@@ -176,6 +186,9 @@ fn cmd_run(args: &[String]) -> Result<()> {
             "--enum-grain" => cfg.enum_grain = val()?.parse()?,
             "--no-shortcut" => cfg.shortcut = false,
             "--f1-tile" => cfg.f1_tile = val()?.parse()?,
+            "--stream-chunk" => cfg.stream_chunk = val()?.parse()?,
+            "--edge-budget-mb" => cfg.edge_budget_mb = val()?.parse()?,
+            "--knn-k" => cfg.knn_k = val()?.parse()?,
             "--no-enclosing" => cfg.enclosing = false,
             "--ns" => cfg.dense_lookup = true,
             "--algorithm" => cfg.algorithm = val()?.clone(),

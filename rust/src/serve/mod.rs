@@ -12,19 +12,23 @@
 //!
 //! Methods:
 //! - `ingest` — `dataset` is one of `{"kind","n","seed"}` (named
-//!   generator), `{"points":[[…],…]}` (point cloud), or
+//!   generator), `{"points":[[…],…]}` (point cloud),
 //!   `{"n":N,"edges":[[a,b,d],…]}` (explicit weighted edges, validated
-//!   by the filtration front-end); `tau` defaults to `+∞` (use the
-//!   `1e999` overflow convention for ∞ on the wire). The dataset is
-//!   fingerprinted (content hash + τ bits) and served from the handle
-//!   cache when already ingested — the response says `"cached":true`
-//!   and charges a tenant cache hit.
+//!   by the filtration front-end), or `{"path":"/file.coo"}` (a sparse
+//!   `i j d` file stream-ingested from disk in bounded staging memory;
+//!   optional `stream_chunk`/`edge_budget_mb` knobs ride alongside);
+//!   `tau` defaults to `+∞` (use the `1e999` overflow convention for ∞
+//!   on the wire). The dataset is fingerprinted (content hash + τ bits;
+//!   for `path`, the path string — not file content) and served from
+//!   the handle cache when already ingested — the response says
+//!   `"cached":true` and charges a tenant cache hit.
 //! - `query` — a [`PhRequest`] against a cached `handle`
 //!   (`tau`, optional `max_dim`/`shortcut`/`enclosing`/`label`).
 //! - `batch` — `queries` (array of query bodies) against one `handle`,
-//!   run **concurrently** on scoped threads through the session's
-//!   `&self` query path; responses come back in request order and are
-//!   bit-identical to serial execution.
+//!   run **concurrently** through the session's `&self` query path by a
+//!   bounded crew of workers (≈ the pool width, never one OS thread per
+//!   query); responses come back in request order and are bit-identical
+//!   to serial execution.
 //! - `stats` — the summary object (per-tenant counters, cache, session,
 //!   peak RSS) without stopping.
 //! - `shutdown` — acknowledge and stop; EOF stops too. Either way the
@@ -48,6 +52,7 @@ pub use cache::{CacheStats, HandleCache};
 use std::collections::BTreeMap;
 use std::hash::Hasher;
 use std::io::{BufRead, Write};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -317,8 +322,36 @@ impl Server {
             timings.stop();
             return self.session.ingest_filtration(f, timings, fstats, "wire-edges");
         }
+        if let Some(p) = dataset.get("path") {
+            let path = std::path::PathBuf::from(
+                p.as_str()
+                    .ok_or_else(|| DoryError::Request("'path' must be a string".into()))?,
+            );
+            // Stream-ingest a sparse COO file from disk in bounded
+            // staging memory. Optional knobs ride in the dataset object;
+            // note the cache fingerprint covers the dataset JSON (path
+            // string + knobs + τ), not the file's content — re-ingesting
+            // a changed file under the same path serves the cached
+            // handle until it is evicted.
+            let mut opts = crate::io::stream::StreamOptions::default();
+            if let Some(v) = dataset.get("stream_chunk") {
+                opts.chunk_lines = v.as_usize().ok_or_else(|| {
+                    DoryError::Request("'stream_chunk' must be a non-negative integer".into())
+                })?;
+            }
+            if let Some(v) = dataset.get("edge_budget_mb") {
+                opts.budget_bytes = v
+                    .as_usize()
+                    .ok_or_else(|| {
+                        DoryError::Request("'edge_budget_mb' must be a non-negative integer".into())
+                    })?
+                    << 20;
+            }
+            let (h, _stats) = self.session.ingest_sparse_file(&path, tau, &opts)?;
+            return Ok(h);
+        }
         Err(DoryError::Request(
-            "dataset must specify 'kind', 'points', or 'edges'".into(),
+            "dataset must specify 'kind', 'points', 'edges', or 'path'".into(),
         ))
     }
 
@@ -352,37 +385,61 @@ impl Server {
             .iter()
             .map(parse_ph_request)
             .collect::<Result<Vec<_>, _>>()?;
-        // Fan the batch out over scoped threads: every query goes through
-        // the same `&self` session path a lone `query` request takes, so
-        // the pool interleaves them fairly and results stay bit-identical
-        // to serial execution. Responses return in request order.
+        // Fan the batch out over a *bounded* crew of scoped worker
+        // threads (≈ the pool width — more OS threads than that just
+        // queue on the same pool) pulling query indices from a shared
+        // counter: every query still goes through the same `&self`
+        // session path a lone `query` request takes, so the pool
+        // interleaves them fairly and results stay bit-identical to
+        // serial execution. Responses land in per-index slots, so they
+        // return in request order, and `queue_wait_ns` keeps its
+        // meaning: per query, the time between batch dispatch and that
+        // query starting on a worker.
+        let n_workers = self
+            .session
+            .options()
+            .threads
+            .max(1)
+            .min(phs.len().max(1));
         let t0 = Instant::now();
-        let mut wait_ns = 0u64;
-        let results: Vec<Result<PhResponse, DoryError>> = std::thread::scope(|scope| {
-            let handles: Vec<_> = phs
-                .iter()
-                .map(|ph| {
-                    let h = &h;
-                    scope.spawn(move || {
-                        let waited = t0.elapsed().as_nanos() as u64;
-                        (waited, self.session.query(h, ph))
-                    })
-                })
-                .collect();
-            handles
-                .into_iter()
-                .map(|jh| match jh.join() {
-                    Ok((waited, r)) => {
-                        wait_ns += waited;
-                        r
+        let next = AtomicUsize::new(0);
+        let wait_ns = AtomicU64::new(0);
+        let slots: Vec<Mutex<Option<Result<PhResponse, DoryError>>>> =
+            phs.iter().map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|scope| {
+            for _ in 0..n_workers {
+                let (h, phs, next, wait_ns, slots) = (&h, &phs, &next, &wait_ns, &slots);
+                scope.spawn(move || loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= phs.len() {
+                        break;
                     }
-                    Err(_) => Err(DoryError::Request("batch query worker panicked".into())),
-                })
-                .collect()
+                    let waited = t0.elapsed().as_nanos() as u64;
+                    // A panicking query must not poison the whole batch
+                    // (the per-thread fan-out reported it typed); keep
+                    // that contract and keep this worker draining.
+                    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        self.session.query(h, &phs[i])
+                    }))
+                    .unwrap_or_else(|_| {
+                        Err(DoryError::Request("batch query worker panicked".into()))
+                    });
+                    wait_ns.fetch_add(waited, Ordering::Relaxed);
+                    *slots[i].lock().unwrap() = Some(r);
+                });
+            }
         });
+        let results: Vec<Result<PhResponse, DoryError>> = slots
+            .into_iter()
+            .map(|s| {
+                s.into_inner().unwrap().unwrap_or_else(|| {
+                    Err(DoryError::Request("batch query worker panicked".into()))
+                })
+            })
+            .collect();
         self.bump_tenant(tenant, |t| {
             t.queries += results.len() as u64;
-            t.queue_wait_ns += wait_ns;
+            t.queue_wait_ns += wait_ns.load(Ordering::Relaxed);
         });
         let mut arr = Json::arr();
         for r in results {
@@ -710,6 +767,97 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn bounded_batch_handles_more_queries_than_workers() {
+        // 12 queries on a threads:2 server: the bounded crew (2 workers)
+        // must drain the whole batch in request order — the old
+        // thread-per-query fan-out is gone.
+        let srv = server();
+        let out = drive(
+            &srv,
+            concat!(
+                r#"{"id":1,"method":"ingest","dataset":{"kind":"circle","n":40,"seed":5}}"#,
+                "\n",
+            ),
+        );
+        let key = out[0]
+            .get("ok")
+            .unwrap()
+            .get("handle")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .to_string();
+        let taus: Vec<f64> = (1..=12).map(|i| 0.1 * i as f64).collect();
+        let queries: Vec<String> = taus
+            .iter()
+            .map(|t| format!("{{\"tau\":{t},\"max_dim\":1}}"))
+            .collect();
+        let batch = format!(
+            "{{\"id\":2,\"tenant\":\"w\",\"method\":\"batch\",\"handle\":\"{key}\",\"queries\":[{}]}}\n",
+            queries.join(",")
+        );
+        let out = drive(&srv, &batch);
+        let resps = out[0]
+            .get("ok")
+            .unwrap()
+            .get("responses")
+            .unwrap()
+            .as_arr()
+            .unwrap();
+        assert_eq!(resps.len(), taus.len());
+        for (r, t) in resps.iter().zip(&taus) {
+            assert_eq!(r.get("tau").unwrap().as_f64(), Some(*t));
+        }
+        let summary = out.last().unwrap().get("summary").unwrap();
+        let t = summary.get("tenants").unwrap().get("w").unwrap();
+        assert_eq!(t.get("queries").unwrap().as_usize(), Some(12));
+    }
+
+    #[test]
+    fn dataset_by_path_stream_ingests_on_the_wire() {
+        let dir = std::env::temp_dir().join("dory-serve-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("wire.coo");
+        // A 4-cycle: one H1 class at τ ≥ 1.
+        std::fs::write(&path, "0 1 1.0\n1 2 1.0\n2 3 1.0\n0 3 1.0\n").unwrap();
+        let srv = server();
+        let p = path.display();
+        let out = drive(
+            &srv,
+            &format!(
+                "{{\"id\":1,\"method\":\"ingest\",\"dataset\":{{\"path\":\"{p}\",\"edge_budget_mb\":1}}}}\n"
+            ),
+        );
+        let ok = out[0].get("ok").unwrap();
+        assert_eq!(ok.get("n_points").unwrap().as_usize(), Some(4));
+        assert_eq!(ok.get("n_edges").unwrap().as_usize(), Some(4));
+        let key = ok.get("handle").unwrap().as_str().unwrap().to_string();
+        let out = drive(
+            &srv,
+            &format!("{{\"id\":2,\"method\":\"query\",\"handle\":\"{key}\",\"tau\":1e999,\"max_dim\":1}}\n"),
+        );
+        let betti = out[0]
+            .get("ok")
+            .unwrap()
+            .get("betti")
+            .unwrap()
+            .as_arr()
+            .unwrap();
+        assert_eq!(betti[1].get("essential").unwrap().as_usize(), Some(1));
+        // A malformed file is a typed InvalidInput on the wire.
+        let bad = dir.join("wire-bad.coo");
+        std::fs::write(&bad, "0 0 1.0\n").unwrap();
+        let pb = bad.display();
+        let out = drive(
+            &srv,
+            &format!("{{\"id\":3,\"method\":\"ingest\",\"dataset\":{{\"path\":\"{pb}\"}}}}\n"),
+        );
+        let e = out[0].get("error").unwrap();
+        assert_eq!(e.get("kind").unwrap().as_str(), Some("InvalidInput"));
+        assert!(e.get("message").unwrap().as_str().unwrap().contains("self-loop"));
     }
 
     #[test]

@@ -1,0 +1,247 @@
+//! Streaming-ingest differential harness.
+//!
+//! Pins the tentpole contract of the streamed sparse front-end:
+//!
+//! * **chunking invariance** — the streamed filtration is byte-identical
+//!   to the in-memory reader's for every chunk size, because edge keys
+//!   are strictly unique and the k-way merge respects their total order;
+//! * **budget invariance** — spilling (any number of runs) never changes
+//!   a byte of the output, only where the runs briefly lived;
+//! * **the acceptance case** — a ≥1M-edge file ingests under a 4 MiB
+//!   staging budget with resident staging tracking the budget rather
+//!   than the input size (asserted via the counting allocator), and the
+//!   diagram bit-equal to the in-memory path's at tolerance zero.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::PathBuf;
+
+use dory::filtration::{EdgeFiltration, FiltrationStats};
+use dory::homology::{EngineOptions, PhRequest, Session};
+use dory::io;
+use dory::io::stream::{stream_sparse_file, StreamOptions};
+use dory::util::memtrack;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("dory-streaming-it");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+fn diagram_bits(d: &dory::homology::Diagram) -> Vec<(usize, u64, u64)> {
+    let mut out = Vec::new();
+    for dim in 0..=d.max_dim() {
+        for p in d.points(dim) {
+            out.push((dim, p.birth.to_bits(), p.death.to_bits()));
+        }
+    }
+    out
+}
+
+fn req(tau: f64, max_dim: usize) -> PhRequest {
+    PhRequest {
+        tau,
+        max_dim: Some(max_dim),
+        shortcut: None,
+        enclosing: None,
+        label: None,
+    }
+}
+
+/// A small dense-ish sparse file: every pair of 60 vertices, distances
+/// deterministic, odd lines orientation-flipped, comments and blank
+/// lines sprinkled in. τ = 1.2 leaves some entries above threshold so
+/// the reader-side filter is exercised.
+fn write_small(name: &str) -> PathBuf {
+    let p = tmp(name);
+    let mut text = String::from("# streaming differential fixture\n\n");
+    let mut line = 0u32;
+    for i in 0..60u32 {
+        for j in (i + 1)..60 {
+            let d = 0.1 + ((i * 61 + j * 17) % 173) as f64 / 100.0;
+            if line % 2 == 0 {
+                text.push_str(&format!("{i} {j} {d}\n"));
+            } else {
+                text.push_str(&format!("{j} {i} {d}\n"));
+            }
+            line += 1;
+        }
+    }
+    std::fs::write(&p, text).unwrap();
+    p
+}
+
+#[test]
+fn streamed_filtration_matches_in_memory_across_chunks_and_budgets() {
+    let p = write_small("diff.coo");
+    let tau = 1.2;
+    let md = io::read_sparse_coo(&p).unwrap();
+    let oracle = EdgeFiltration::build(&md, tau);
+    assert!(oracle.n_edges() > 0);
+    let oracle_bits: Vec<u64> = oracle.values.iter().map(|v| v.to_bits()).collect();
+
+    for chunk in [1usize, 7, 4096] {
+        for budget in [0usize, 1 << 12] {
+            let opts = StreamOptions {
+                chunk_lines: chunk,
+                budget_bytes: budget,
+                spill_dir: None,
+            };
+            let mut fs = FiltrationStats::default();
+            let (f, st) = stream_sparse_file(&p, tau, &opts, None, &mut fs).unwrap();
+            assert_eq!(f.n, oracle.n, "chunk {chunk} budget {budget}");
+            assert_eq!(f.edges, oracle.edges, "chunk {chunk} budget {budget}");
+            let bits: Vec<u64> = f.values.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(bits, oracle_bits, "chunk {chunk} budget {budget}");
+            assert_eq!(f.tau_max.to_bits(), tau.to_bits());
+            // Counter sanity: every data line is one validated entry,
+            // and the kept count is exactly the output size.
+            assert_eq!(st.lines, 60 * 59 / 2);
+            assert_eq!(st.entries, st.lines);
+            assert_eq!(st.kept as usize, f.n_edges());
+            assert!(fs.f1_builds == 1 && fs.edges_kept == st.kept);
+            if budget > 0 {
+                // ~14 KiB of entries against a 4 KiB budget must spill,
+                // and resident staging must track the budget + chunk
+                // scratch, not the input.
+                assert!(st.spilled_runs > 0, "budget {budget} did not spill");
+                let chunk_bytes = chunk * std::mem::size_of::<(u32, u32, f64)>();
+                assert!(
+                    st.staging_peak_bytes <= budget + chunk_bytes + 4096,
+                    "staging {} exceeds budget {budget} + chunk {chunk_bytes}",
+                    st.staging_peak_bytes
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn streamed_session_diagrams_are_bit_identical() {
+    let p = write_small("diff-pd.coo");
+    let tau = 1.2;
+    let session = Session::new(EngineOptions {
+        max_dim: 1,
+        threads: 2,
+        ..Default::default()
+    });
+    let md = io::read_sparse_coo(&p).unwrap();
+    let h_mem = session.ingest(&md, tau).unwrap();
+    let want = diagram_bits(&session.query(&h_mem, &req(tau, 1)).unwrap().result.diagram);
+    for budget in [0usize, 1 << 12] {
+        let opts = StreamOptions {
+            chunk_lines: 7,
+            budget_bytes: budget,
+            spill_dir: None,
+        };
+        let (h, _st) = session.ingest_sparse_file(&p, tau, &opts).unwrap();
+        assert_eq!(h.edge_source, "stream");
+        assert_eq!(h.n_edges(), h_mem.n_edges());
+        let got = diagram_bits(&session.query(&h, &req(tau, 1)).unwrap().result.diagram);
+        assert_eq!(got, want, "budget {budget}");
+    }
+}
+
+#[test]
+fn out_of_core_duplicate_detection_survives_spilling() {
+    // The duplicate pair sits ~200 lines (many tiny runs) away from its
+    // first occurrence, in flipped orientation: only the merged pair
+    // stream makes them adjacent.
+    let p = tmp("dup-spill.coo");
+    let mut text = String::from("3 7 0.5\n");
+    for i in 0..200u32 {
+        text.push_str(&format!("{} {} 1.0\n", 100 + i, 500 + i));
+    }
+    text.push_str("7 3 0.9\n");
+    std::fs::write(&p, text).unwrap();
+    let opts = StreamOptions {
+        chunk_lines: 16,
+        budget_bytes: 1024,
+        spill_dir: None,
+    };
+    let mut fs = FiltrationStats::default();
+    let e = stream_sparse_file(&p, f64::INFINITY, &opts, None, &mut fs).unwrap_err();
+    let msg = e.to_string();
+    assert!(msg.contains("duplicate entry (3, 7)"), "{msg}");
+}
+
+#[test]
+fn million_edge_ingest_stays_inside_the_budget() {
+    // ≥1M edges over ~100k vertices: each vertex joins its next 10
+    // neighbors on a line, distances deterministic in [1, 2).
+    let p = tmp("million.coo");
+    let n = 100_006u32;
+    let mut w = BufWriter::new(File::create(&p).unwrap());
+    let mut written = 0u64;
+    for i in 0..n {
+        for k in 1..=10u32 {
+            let j = i + k;
+            if j >= n {
+                break;
+            }
+            let d = 1.0 + ((i as u64 * 31 + k as u64 * 7) % 997) as f64 / 997.0;
+            writeln!(w, "{i} {j} {d}").unwrap();
+            written += 1;
+        }
+    }
+    w.flush().unwrap();
+    drop(w);
+    assert!(written >= 1_000_000, "fixture too small: {written}");
+
+    let tau = 3.0;
+    let session = Session::new(EngineOptions {
+        max_dim: 0,
+        threads: 2,
+        ..Default::default()
+    });
+
+    // In-memory baseline: full entry vector + full key vector resident.
+    memtrack::reset_peak();
+    let md = io::read_sparse_coo(&p).unwrap();
+    let h_mem = session.ingest(&md, tau).unwrap();
+    let peak_mem = memtrack::section_peak_bytes();
+    let want = diagram_bits(&session.query(&h_mem, &req(tau, 0)).unwrap().result.diagram);
+    let n_edges = h_mem.n_edges();
+    assert_eq!(n_edges as u64, written);
+    drop(h_mem);
+    drop(md);
+
+    // Streamed under a 4 MiB staging budget (default 65536-line chunks).
+    let budget = 4usize << 20;
+    memtrack::reset_peak();
+    let (h_s, st) = session
+        .ingest_sparse_file(
+            &p,
+            tau,
+            &StreamOptions {
+                chunk_lines: 0,
+                budget_bytes: budget,
+                spill_dir: None,
+            },
+        )
+        .unwrap();
+    let peak_stream = memtrack::section_peak_bytes();
+
+    assert_eq!(h_s.edge_source, "stream");
+    assert_eq!(h_s.n_edges(), n_edges);
+    assert!(st.spilled_runs > 0, "a 16 MB key stream must spill at 4 MiB");
+    assert!(st.spilled_bytes > 0);
+    // Staging = run buffers (≤ budget, pre-sized) + one line chunk.
+    let chunk_bytes = 65_536 * std::mem::size_of::<(u32, u32, f64)>();
+    assert!(
+        st.staging_peak_bytes <= budget + chunk_bytes + (1 << 20),
+        "staging {} does not track the {budget}-byte budget",
+        st.staging_peak_bytes
+    );
+    // The whole point: streamed ingest peaks below the in-memory path,
+    // which holds the full entry and key vectors simultaneously.
+    assert!(
+        peak_stream < peak_mem,
+        "streamed peak {peak_stream} not below in-memory peak {peak_mem}"
+    );
+
+    let got = diagram_bits(&session.query(&h_s, &req(tau, 0)).unwrap().result.diagram);
+    assert_eq!(got, want, "streamed diagram deviates from in-memory");
+    drop(h_s);
+    let _ = std::fs::remove_file(&p);
+}
