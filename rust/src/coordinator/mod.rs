@@ -248,9 +248,15 @@ pub fn run_batch(cfg: &RunConfig) -> Result<BatchReport> {
         let DatasetSpec::SparseFile(p) = &cfg.dataset else {
             unreachable!("streaming gate requires a sparse file dataset");
         };
+        let budget_bytes = cfg.edge_budget_mb.checked_mul(1 << 20).ok_or_else(|| {
+            DoryError::Config(format!(
+                "edge_budget_mb {} overflows the byte budget",
+                cfg.edge_budget_mb
+            ))
+        })?;
         let sopts = io::stream::StreamOptions {
             chunk_lines: cfg.stream_chunk,
-            budget_bytes: cfg.edge_budget_mb << 20,
+            budget_bytes,
             spill_dir: None,
         };
         session.ingest_sparse_file(p, cfg.ingest_tau(), &sopts)?.0

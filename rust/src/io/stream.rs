@@ -22,15 +22,20 @@
 //!
 //! Resident staging is `O(budget + chunk)`: the two run buffers are
 //! allocated at their budget share and never grow, the line chunk is a
-//! fixed-capacity scratch vector, and the merge holds one buffered
-//! reader per run. The final filtration arrays (the output itself) are
-//! the only full-size allocation.
+//! fixed-capacity scratch vector, and the spill-write / merge-read
+//! buffers are scaled so their sum tracks the budget even when a small
+//! budget cuts many runs. The final filtration arrays (the output
+//! itself) are the only full-size allocation. Run filenames embed a
+//! process-global store id, so concurrent ingests (multi-tenant
+//! serving, parallel tests) sharing one temp dir never collide; stores
+//! dropped on an error path remove their own run files.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 use std::fs::File;
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
 use crate::error::DoryError;
@@ -46,8 +51,18 @@ const DEFAULT_CHUNK_LINES: usize = 65_536;
 /// Floor on keys per spilled run so pathological budgets still make
 /// progress (and tests can force spills with tiny budgets).
 const MIN_RUN_KEYS: usize = 64;
-/// Read-buffer bytes per run during the k-way merge.
-const MERGE_BUF_BYTES: usize = 64 << 10;
+/// Ceiling on the buffered-I/O bytes per spill writer / merge reader.
+const IO_BUF_MAX: usize = 64 << 10;
+/// Floor on the same — below this, syscall-per-key I/O stops making
+/// progress in any reasonable time.
+const IO_BUF_MIN: usize = 256;
+
+/// Process-global id source for [`SpillStore`] instances. Run filenames
+/// embed it so two concurrent streamed ingests in one process (the
+/// serving model is multi-tenant `&self`, and tests spill in parallel
+/// within one binary) can never create, truncate, or delete each
+/// other's run files.
+static STORE_UID: AtomicU64 = AtomicU64::new(0);
 
 /// Knobs for [`stream_sparse_file`] / `Session::ingest_sparse_file`.
 #[derive(Clone, Debug, Default)]
@@ -77,9 +92,10 @@ pub struct StreamStats {
     pub spilled_runs: u64,
     /// Bytes written to spill files.
     pub spilled_bytes: u64,
-    /// Peak resident staging: run buffers + chunk scratch, in bytes.
-    /// Tracks `budget_bytes` (plus the chunk scratch), not the input
-    /// size.
+    /// Peak resident staging in bytes: run buffers, spill-write and
+    /// k-way-merge read buffers (scaled to the budget so their sum
+    /// stays within it), and the chunk scratch. Tracks `budget_bytes`
+    /// (plus the chunk scratch), not the input size.
     pub staging_peak_bytes: usize,
 }
 
@@ -130,8 +146,11 @@ impl SpillKey for u128 {
 pub(crate) struct SpillStore<K: SpillKey> {
     buf: Vec<K>,
     run_capacity: usize,
+    budget_bytes: usize,
     dir: PathBuf,
     tag: &'static str,
+    /// Process-unique instance id, part of every run filename.
+    uid: u64,
     runs: Vec<PathBuf>,
     seq: usize,
     pub spilled_runs: u64,
@@ -157,13 +176,27 @@ impl<K: SpillKey> SpillStore<K> {
         Self {
             buf,
             run_capacity,
+            budget_bytes,
             dir,
             tag,
+            uid: STORE_UID.fetch_add(1, Ordering::Relaxed),
             runs: Vec::new(),
             seq: 0,
             spilled_runs: 0,
             spilled_bytes: 0,
             peak_buf_bytes: 0,
+        }
+    }
+
+    /// Buffered-I/O bytes per spill writer / merge reader, scaled so
+    /// `parts` of them together stay within the store's byte budget
+    /// (modulo the [`IO_BUF_MIN`] progress floor). Unbounded stores
+    /// never spill, so their nominal buffer size is moot.
+    fn io_buf_bytes(&self, parts: usize) -> usize {
+        if self.budget_bytes == 0 {
+            IO_BUF_MAX
+        } else {
+            (self.budget_bytes / parts.max(1)).clamp(IO_BUF_MIN, IO_BUF_MAX)
         }
     }
 
@@ -180,7 +213,12 @@ impl<K: SpillKey> SpillStore<K> {
     }
 
     fn spill_run(&mut self, pool: Option<&ThreadPool>) -> Result<()> {
-        self.note_peak();
+        // Resident while writing: the full run buffer plus the write
+        // buffer — count both, so the reported staging peak is honest.
+        let wcap = self.io_buf_bytes(4);
+        self.peak_buf_bytes = self
+            .peak_buf_bytes
+            .max(self.buf.len() * K::BYTES + wcap);
         let fresh = if self.run_capacity == usize::MAX {
             Vec::new()
         } else {
@@ -189,14 +227,15 @@ impl<K: SpillKey> SpillStore<K> {
         let run = std::mem::replace(&mut self.buf, fresh);
         let sorted = K::sort_run(run, pool);
         let path = self.dir.join(format!(
-            "dory-spill-{}-{}-{}.run",
+            "dory-spill-{}-{}-{}-{}.run",
             self.tag,
             std::process::id(),
+            self.uid,
             self.seq
         ));
         self.seq += 1;
         let file = File::create(&path).map_err(|e| DoryError::io(&path, e))?;
-        let mut w = BufWriter::with_capacity(MERGE_BUF_BYTES, file);
+        let mut w = BufWriter::with_capacity(wcap, file);
         for &k in &sorted {
             w.write_all(&k.encode()[..K::BYTES])
                 .map_err(|e| DoryError::io(&path, e))?;
@@ -222,11 +261,14 @@ impl<K: SpillKey> SpillStore<K> {
         }
         totals.spilled_runs += self.spilled_runs;
         totals.spilled_bytes += self.spilled_bytes;
-        totals.peak_buf_bytes += self.peak_buf_bytes;
+        // Merge residency is one read buffer per run (the run buffers
+        // are already freed); report whichever phase peaked higher.
+        let rcap = self.io_buf_bytes(self.runs.len());
+        totals.peak_buf_bytes += self.peak_buf_bytes.max(self.runs.len() * rcap);
         let mut readers = Vec::with_capacity(self.runs.len());
         let mut heap = BinaryHeap::with_capacity(self.runs.len());
         for (i, path) in self.runs.iter().enumerate() {
-            let mut r = RunReader::<K>::open(path)?;
+            let mut r = RunReader::<K>::open(path, rcap)?;
             if let Some(k) = r.next()? {
                 heap.push(Reverse((k, i)));
             }
@@ -237,6 +279,19 @@ impl<K: SpillKey> SpillStore<K> {
             heap,
             files: std::mem::take(&mut self.runs),
         }))
+    }
+}
+
+impl<K: SpillKey> Drop for SpillStore<K> {
+    /// Error paths (duplicate-pair detection, a failed merge open) drop
+    /// the store without `finish` handing its runs to a [`KWayMerge`];
+    /// remove whatever run files are still ours so nothing leaks into
+    /// the temp dir. `finish` takes the runs out with `mem::take`, so a
+    /// cleanly handed-off store drops with an empty list.
+    fn drop(&mut self) {
+        for p in &self.runs {
+            let _ = std::fs::remove_file(p);
+        }
     }
 }
 
@@ -255,10 +310,10 @@ struct RunReader<K: SpillKey> {
 }
 
 impl<K: SpillKey> RunReader<K> {
-    fn open(path: &Path) -> Result<Self> {
+    fn open(path: &Path, buf_bytes: usize) -> Result<Self> {
         let file = File::open(path).map_err(|e| DoryError::io(path, e))?;
         Ok(Self {
-            r: BufReader::with_capacity(MERGE_BUF_BYTES, file),
+            r: BufReader::with_capacity(buf_bytes, file),
             path: path.to_path_buf(),
             _k: std::marker::PhantomData,
         })
@@ -499,6 +554,70 @@ mod tests {
                 assert!(totals.spilled_runs > 0, "budget {budget} should spill");
             }
         }
+    }
+
+    #[test]
+    fn concurrent_spilling_stores_do_not_collide() {
+        // Four stores spilling the same tag into the same dir at the
+        // same time: run filenames embed the store uid, so none may
+        // truncate or delete another's runs — every merge must yield
+        // the full sorted stream.
+        let dir = std::env::temp_dir().join("dory-stream-concurrent");
+        std::fs::create_dir_all(&dir).unwrap();
+        let keys: Vec<u64> = (0..4000u64)
+            .map(|i| i.wrapping_mul(0x9E3779B97F4A7C15))
+            .collect();
+        let mut expect = keys.clone();
+        expect.sort_unstable();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let (keys, expect, dir) = (&keys, &expect, &dir);
+                s.spawn(move || {
+                    let mut store = SpillStore::<u64>::new(1024, dir.clone(), "race");
+                    for &k in keys {
+                        store.push(k, None).unwrap();
+                    }
+                    let mut totals = RunTotals::default();
+                    let mut it = store.finish(None, &mut totals).unwrap();
+                    let mut got = Vec::with_capacity(keys.len());
+                    while let Some(k) = it.next().unwrap() {
+                        got.push(k);
+                    }
+                    assert!(totals.spilled_runs > 0);
+                    assert_eq!(&got, expect);
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn error_paths_leave_no_spill_files_behind() {
+        // A duplicate pair detected mid-merge aborts the ingest while
+        // the value store still holds spilled runs: its Drop (and the
+        // pair merge's) must clear every run file from the spill dir.
+        let dir = std::env::temp_dir().join("dory-stream-droptest");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = tmp("drop-err.coo");
+        let mut text = String::new();
+        for i in 0..300u32 {
+            text.push_str(&format!("{} {} 1.0\n", i, i + 1000));
+        }
+        text.push_str("0 1000 2.0\n");
+        std::fs::write(&p, text).unwrap();
+        let opts = StreamOptions {
+            chunk_lines: 16,
+            budget_bytes: 1024,
+            spill_dir: Some(dir.clone()),
+        };
+        let mut fs = FiltrationStats::default();
+        let e = stream_sparse_file(&p, f64::INFINITY, &opts, None, &mut fs).unwrap_err();
+        assert!(e.to_string().contains("duplicate entry"), "{e}");
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|d| d.unwrap().path())
+            .collect();
+        assert!(leftovers.is_empty(), "leaked spill files: {leftovers:?}");
     }
 
     #[test]

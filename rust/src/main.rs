@@ -115,6 +115,9 @@ serve flags:
   --dim <0|1|2>             default max homology dimension       [2]
   --no-shortcut             default the apparent-pair shortcut off
   --cache-mb <int>          handle-cache byte budget in MiB      [256]
+  --data-root <dir>         confine {"path":...} wire ingests to files
+                            under this directory (default: any path
+                            readable by the server process)
   Reads one JSON request per line on stdin, writes one JSON response
   per line on stdout; EOF or a {\"method\":\"shutdown\"} request ends the
   loop with a {\"summary\":...} trailer (per-tenant counters, cache and
@@ -340,6 +343,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let mut max_dim = 2usize;
     let mut shortcut = true;
     let mut cache_mb = 256usize;
+    let mut data_root: Option<std::path::PathBuf> = None;
     let mut it = args.iter();
     while let Some(a) = it.next() {
         let mut val = || it.next().with_context(|| format!("{a} needs a value"));
@@ -348,19 +352,26 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             "--dim" => max_dim = val()?.parse()?,
             "--no-shortcut" => shortcut = false,
             "--cache-mb" => cache_mb = val()?.parse()?,
+            "--data-root" => data_root = Some(val()?.into()),
             other => bail!("unknown flag {other}"),
         }
     }
     if max_dim > 2 {
         bail!("--dim must be 0, 1 or 2 (paper scope)");
     }
+    let cache_bytes = cache_mb
+        .checked_mul(1 << 20)
+        .with_context(|| format!("--cache-mb {cache_mb} overflows the byte budget"))?;
     let opts = dory::homology::EngineOptions {
         max_dim,
         threads,
         shortcut,
         ..Default::default()
     };
-    let server = dory::serve::Server::new(opts, cache_mb << 20);
+    let mut server = dory::serve::Server::new(opts, cache_bytes);
+    if let Some(root) = data_root {
+        server = server.with_data_root(root);
+    }
     let stdin = std::io::stdin();
     let stdout = std::io::stdout();
     let served = server.serve(stdin.lock(), stdout.lock())?;

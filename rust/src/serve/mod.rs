@@ -19,9 +19,13 @@
 //!   optional `stream_chunk`/`edge_budget_mb` knobs ride alongside);
 //!   `tau` defaults to `+∞` (use the `1e999` overflow convention for ∞
 //!   on the wire). The dataset is fingerprinted (content hash + τ bits;
-//!   for `path`, the path string — not file content) and served from
-//!   the handle cache when already ingested — the response says
-//!   `"cached":true` and charges a tenant cache hit.
+//!   `path` datasets also fold in file size + mtime, so a rewritten
+//!   file re-ingests rather than hitting a stale cache entry) and
+//!   served from the handle cache when already ingested — the response
+//!   says `"cached":true` and charges a tenant cache hit. Path ingests
+//!   can be confined to a directory with [`Server::with_data_root`]
+//!   (`dory serve --data-root`); without one, any server-readable path
+//!   is accepted.
 //! - `query` — a [`PhRequest`] against a cached `handle`
 //!   (`tau`, optional `max_dim`/`shortcut`/`enclosing`/`label`).
 //! - `batch` — `queries` (array of query bodies) against one `handle`,
@@ -95,6 +99,7 @@ pub struct Server {
     session: Session,
     cache: Mutex<HandleCache>,
     tenants: Mutex<BTreeMap<String, TenantCounters>>,
+    data_root: Option<std::path::PathBuf>,
 }
 
 impl Server {
@@ -105,7 +110,42 @@ impl Server {
             session: Session::new(opts),
             cache: Mutex::new(HandleCache::new(cache_budget_bytes)),
             tenants: Mutex::new(BTreeMap::new()),
+            data_root: None,
         }
+    }
+
+    /// Restrict `{"path":…}` wire ingests to files under `root`
+    /// (checked against the canonicalized root, so `..` segments and
+    /// symlinks cannot escape it). Without a root — the default — any
+    /// path readable by the server process is accepted, which is only
+    /// appropriate when every wire client is trusted with the server's
+    /// filesystem.
+    pub fn with_data_root(mut self, root: std::path::PathBuf) -> Self {
+        self.data_root = Some(root);
+        self
+    }
+
+    /// Refuse a wire-supplied ingest path outside the configured data
+    /// root (no-op when no root is set).
+    fn check_data_root(&self, path: &std::path::Path) -> Result<(), DoryError> {
+        let Some(root) = &self.data_root else {
+            return Ok(());
+        };
+        let refuse = || {
+            DoryError::Request(format!(
+                "path {} is outside the configured data root (or not resolvable)",
+                path.display()
+            ))
+        };
+        let canon_root = std::fs::canonicalize(root).map_err(|e| DoryError::io(root, e))?;
+        // A canonicalize failure on the client's path gets the same
+        // refusal as an out-of-root one, so probes can't distinguish
+        // missing from forbidden.
+        let canon = std::fs::canonicalize(path).map_err(|_| refuse())?;
+        if !canon.starts_with(&canon_root) {
+            return Err(refuse());
+        }
+        Ok(())
     }
 
     pub fn session(&self) -> &Session {
@@ -206,7 +246,14 @@ impl Server {
                 "ingest tau must be non-negative, got {tau}"
             )));
         }
-        let key = fingerprint(dataset, tau);
+        // Path ingests: enforce the data root before touching the file
+        // at all (fingerprinting stats it), so out-of-root probes get a
+        // uniform Request refusal rather than existence-revealing Io
+        // errors.
+        if let Some(p) = dataset.get("path").and_then(|p| p.as_str()) {
+            self.check_data_root(std::path::Path::new(p))?;
+        }
+        let key = fingerprint(dataset, tau)?;
         if let Some(h) = self.cache.lock().unwrap().get(&key) {
             self.bump_tenant(tenant, |t| {
                 t.ingests += 1;
@@ -329,10 +376,9 @@ impl Server {
             );
             // Stream-ingest a sparse COO file from disk in bounded
             // staging memory. Optional knobs ride in the dataset object;
-            // note the cache fingerprint covers the dataset JSON (path
-            // string + knobs + τ), not the file's content — re-ingesting
-            // a changed file under the same path serves the cached
-            // handle until it is evicted.
+            // the cache fingerprint covers the dataset JSON (path +
+            // knobs + τ) plus the file's size and mtime, so a rewritten
+            // file misses the cache instead of serving a stale handle.
             let mut opts = crate::io::stream::StreamOptions::default();
             if let Some(v) = dataset.get("stream_chunk") {
                 opts.chunk_lines = v.as_usize().ok_or_else(|| {
@@ -340,12 +386,14 @@ impl Server {
                 })?;
             }
             if let Some(v) = dataset.get("edge_budget_mb") {
-                opts.budget_bytes = v
-                    .as_usize()
-                    .ok_or_else(|| {
-                        DoryError::Request("'edge_budget_mb' must be a non-negative integer".into())
-                    })?
-                    << 20;
+                let mb = v.as_usize().ok_or_else(|| {
+                    DoryError::Request("'edge_budget_mb' must be a non-negative integer".into())
+                })?;
+                opts.budget_bytes = mb.checked_mul(1 << 20).ok_or_else(|| {
+                    DoryError::Request(format!(
+                        "'edge_budget_mb' {mb} overflows the byte budget"
+                    ))
+                })?;
             }
             let (h, _stats) = self.session.ingest_sparse_file(&path, tau, &opts)?;
             return Ok(h);
@@ -562,13 +610,27 @@ fn query_ok(resp: &PhResponse) -> Json {
 /// Content fingerprint of an ingest: the dataset value's canonical
 /// rendering plus the τ bits, FxHash-mixed into a 64-bit key. Two
 /// tenants posting the same dataset at the same τ share one handle.
-/// FxHash is not collision-resistant against crafted inputs — tenants
-/// of one server share a process and are trusted to that extent.
-fn fingerprint(dataset: &Json, tau: f64) -> String {
+/// `path` datasets additionally fold in the file's size and mtime, so
+/// re-ingesting a changed file under the same path misses the cache
+/// (across tenants too) instead of serving the stale handle. FxHash is
+/// not collision-resistant against crafted inputs — tenants of one
+/// server share a process and are trusted to that extent.
+fn fingerprint(dataset: &Json, tau: f64) -> Result<String, DoryError> {
     let mut h = FxHasher::default();
     h.write(dataset.render().as_bytes());
     h.write_u64(tau.to_bits());
-    format!("h{:016x}", h.finish())
+    if let Some(p) = dataset.get("path").and_then(|p| p.as_str()) {
+        let path = std::path::Path::new(p);
+        let meta = std::fs::metadata(path).map_err(|e| DoryError::io(path, e))?;
+        h.write_u64(meta.len());
+        if let Ok(mtime) = meta.modified() {
+            if let Ok(d) = mtime.duration_since(std::time::UNIX_EPOCH) {
+                h.write_u64(d.as_secs());
+                h.write_u64(d.subsec_nanos() as u64);
+            }
+        }
+    }
+    Ok(format!("h{:016x}", h.finish()))
 }
 
 #[cfg(test)]
@@ -858,6 +920,87 @@ mod tests {
         let e = out[0].get("error").unwrap();
         assert_eq!(e.get("kind").unwrap().as_str(), Some("InvalidInput"));
         assert!(e.get("message").unwrap().as_str().unwrap().contains("self-loop"));
+    }
+
+    #[test]
+    fn path_reingest_sees_file_changes() {
+        let dir = std::env::temp_dir().join("dory-serve-stale");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("stale.coo");
+        std::fs::write(&path, "0 1 1.0\n").unwrap();
+        let srv = server();
+        let p = path.display();
+        let line = format!("{{\"id\":1,\"method\":\"ingest\",\"dataset\":{{\"path\":\"{p}\"}}}}\n");
+        let out = drive(&srv, &line);
+        let h1 = out[0].get("ok").unwrap().clone();
+        assert_eq!(h1.get("n_edges").unwrap().as_usize(), Some(1));
+        // Rewrite the file (different size): the same request line must
+        // miss the cache and serve the new content, not the stale handle.
+        std::fs::write(&path, "0 1 1.0\n1 2 1.0\n2 3 1.0\n").unwrap();
+        let out = drive(&srv, &line);
+        let h2 = out[0].get("ok").unwrap();
+        assert_eq!(h2.get("cached").unwrap().as_bool(), Some(false));
+        assert_eq!(h2.get("n_edges").unwrap().as_usize(), Some(3));
+        assert_ne!(
+            h1.get("handle").unwrap().as_str(),
+            h2.get("handle").unwrap().as_str()
+        );
+    }
+
+    #[test]
+    fn oversized_edge_budget_is_a_typed_error() {
+        let dir = std::env::temp_dir().join("dory-serve-budget");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tiny.coo");
+        std::fs::write(&path, "0 1 1.0\n").unwrap();
+        let srv = server();
+        let p = path.display();
+        // 2^50 MiB would wrap usize when shifted to bytes — must be a
+        // typed refusal, not a silently tiny (or unbounded) budget.
+        let huge = 1u64 << 50;
+        let out = drive(
+            &srv,
+            &format!(
+                "{{\"id\":1,\"method\":\"ingest\",\"dataset\":{{\"path\":\"{p}\",\"edge_budget_mb\":{huge}}}}}\n"
+            ),
+        );
+        let e = out[0].get("error").unwrap();
+        assert_eq!(e.get("kind").unwrap().as_str(), Some("Request"));
+        assert!(e.get("message").unwrap().as_str().unwrap().contains("overflows"));
+    }
+
+    #[test]
+    fn data_root_confines_path_ingest() {
+        let root = std::env::temp_dir().join("dory-serve-root");
+        std::fs::create_dir_all(&root).unwrap();
+        let inside = root.join("in.coo");
+        std::fs::write(&inside, "0 1 1.0\n").unwrap();
+        let outside_dir = std::env::temp_dir().join("dory-serve-outside");
+        std::fs::create_dir_all(&outside_dir).unwrap();
+        let outside = outside_dir.join("out.coo");
+        std::fs::write(&outside, "0 1 1.0\n").unwrap();
+        let srv = Server::new(
+            EngineOptions {
+                threads: 2,
+                ..Default::default()
+            },
+            64 << 20,
+        )
+        .with_data_root(root.clone());
+        let pi = inside.display();
+        let out = drive(
+            &srv,
+            &format!("{{\"id\":1,\"method\":\"ingest\",\"dataset\":{{\"path\":\"{pi}\"}}}}\n"),
+        );
+        assert!(out[0].get("ok").is_some(), "{}", out[0].render());
+        let po = outside.display();
+        let out = drive(
+            &srv,
+            &format!("{{\"id\":2,\"method\":\"ingest\",\"dataset\":{{\"path\":\"{po}\"}}}}\n"),
+        );
+        let e = out[0].get("error").unwrap();
+        assert_eq!(e.get("kind").unwrap().as_str(), Some("Request"));
+        assert!(e.get("message").unwrap().as_str().unwrap().contains("data root"));
     }
 
     #[test]
