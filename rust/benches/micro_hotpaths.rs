@@ -12,7 +12,7 @@ use std::time::Instant;
 use dory::bench_support as bs;
 use dory::coboundary::TriCursor;
 use dory::datasets;
-use dory::filtration::{EdgeFiltration, Neighborhoods};
+use dory::filtration::{EdgeFiltration, FiltrationStats, FrontendOptions, Neighborhoods, SimdMode};
 use dory::homology::EngineOptions;
 use dory::reduction::pool::ThreadPool;
 use dory::util::json::Json;
@@ -524,6 +524,141 @@ fn main() {
         .field("knn_build_s", knn_build_s)
         .field("knn_edges_kept", capped.entries.len())
         .field("knn_edges_exact", exact.entries.len());
+
+    // --- SIMD distance kernel: scalar vs auto -------------------------------
+    // CI gate for the vector microkernel: on a dense sphere the
+    // runtime-selected kernel (AVX2/NEON when the host has it) must beat
+    // the scalar loop on the distance pass while emitting bit-identical
+    // edges. The speedup assert only fires when a vector kernel was
+    // actually selected — on a scalar-only host both runs are the same
+    // code path and the ratio is noise.
+    let simd_data = datasets::sphere(1200, 1.0, 0.0, 13);
+    let run_kernel = |mode: SimdMode| {
+        let fe = FrontendOptions {
+            tile: 0,
+            enclosing: true,
+            simd: mode,
+        };
+        let mut best_ns = u64::MAX;
+        let mut kernel = "";
+        let mut filt = None;
+        for _ in 0..3 {
+            let mut s = FiltrationStats::default();
+            let g = EdgeFiltration::build_pooled(
+                &simd_data,
+                f64::INFINITY,
+                Some(&pool),
+                &fe,
+                &mut s,
+            );
+            best_ns = best_ns.min(s.dist_ns);
+            kernel = s.dist_kernel;
+            filt = Some(g);
+        }
+        (filt.unwrap(), best_ns, kernel)
+    };
+    let (f_scalar, scalar_dist_ns, k_scalar) = run_kernel(SimdMode::Scalar);
+    let (f_simd, simd_dist_ns, k_simd) = run_kernel(SimdMode::Auto);
+    assert_eq!(k_scalar, "scalar");
+    assert_eq!(f_scalar.edges, f_simd.edges, "SIMD kernel changed the edge set");
+    let sb: Vec<u64> = f_scalar.values.iter().map(|v| v.to_bits()).collect();
+    let vb: Vec<u64> = f_simd.values.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(sb, vb, "SIMD kernel changed a distance bit");
+    assert_eq!(f_scalar.tau_max.to_bits(), f_simd.tau_max.to_bits());
+    let simd_speedup = scalar_dist_ns as f64 / (simd_dist_ns.max(1)) as f64;
+    println!(
+        "{:<42} {:>11.3} ms   (scalar {:.3} ms -> x{simd_speedup:.2}, kernel {k_simd})",
+        "SIMD distance pass (sphere1200, tau=inf)",
+        simd_dist_ns as f64 * 1e-6,
+        scalar_dist_ns as f64 * 1e-6,
+    );
+    if k_simd != "scalar" {
+        assert!(
+            simd_speedup > 1.0,
+            "vector kernel {k_simd} ({simd_dist_ns} ns) failed to beat the scalar \
+             distance pass ({scalar_dist_ns} ns): speedup {simd_speedup:.3} <= 1.0"
+        );
+    }
+    out = out
+        .field("scalar_dist_ns", scalar_dist_ns as f64)
+        .field("simd_dist_ns", simd_dist_ns as f64)
+        .field("dist_kernel", k_simd)
+        .field("simd_speedup", simd_speedup);
+
+    // --- dense streaming through the spill store ----------------------------
+    // CI gate for the budgeted dense ingest: a sphere whose kept key
+    // stream (~3.9 MB) exceeds a 256 KiB budget must spill sorted runs,
+    // with resident staging tracking budget + one wave of tile scratch
+    // (counting allocator) instead of the full key vector, and the edge
+    // set identical to the in-memory ingest. Diagram bit-identity across
+    // budgets is pinned by the streaming test suite.
+    let ds_n = 700usize;
+    let ds_tile = 16usize;
+    let ds_threads = 4usize;
+    let ds_data = datasets::sphere(ds_n, 1.0, 0.0, 17);
+    let ds_session = dory::homology::Session::new(EngineOptions {
+        max_dim: 0,
+        threads: ds_threads,
+        f1_tile: ds_tile,
+        ..Default::default()
+    });
+    dory::util::memtrack::reset_peak();
+    let t0 = Instant::now();
+    let h_dm = ds_session.ingest(&ds_data, f64::INFINITY).expect("dense ingest");
+    let dense_inmem_s = t0.elapsed().as_secs_f64();
+    let dense_inmem_peak = dory::util::memtrack::section_peak_bytes();
+    let dense_edges = h_dm.n_edges();
+    drop(h_dm);
+    dory::util::memtrack::reset_peak();
+    let t0 = Instant::now();
+    let (h_ds, dstats) = ds_session
+        .ingest_streamed(
+            &ds_data,
+            f64::INFINITY,
+            &dory::io::stream::StreamOptions {
+                chunk_lines: 0,
+                budget_bytes: 256 << 10,
+                spill_dir: None,
+            },
+        )
+        .expect("dense stream ingest");
+    let dense_stream_s = t0.elapsed().as_secs_f64();
+    let dense_stream_peak = dory::util::memtrack::section_peak_bytes();
+    println!(
+        "{:<42} {dense_stream_s:>11.3} s    (peak {} vs in-memory {} in {dense_inmem_s:.3}s; {} runs spilled)",
+        "dense streamed ingest (sphere700, 256 KiB)",
+        dory::util::memtrack::fmt_bytes(dense_stream_peak),
+        dory::util::memtrack::fmt_bytes(dense_inmem_peak),
+        dstats.spilled_runs,
+    );
+    assert_eq!(h_ds.edge_source, "dense-stream");
+    assert_eq!(h_ds.n_edges(), dense_edges, "dense streamed edge set deviates");
+    assert!(
+        dstats.spilled_runs > 0,
+        "a multi-MB dense key stream must spill at 256 KiB"
+    );
+    let full_key_bytes = dense_edges * std::mem::size_of::<u128>();
+    let wave_scratch = ds_threads * ds_n * 8
+        + 2 * ds_threads * ds_tile * ds_n * std::mem::size_of::<u128>();
+    assert!(
+        dstats.staging_peak_bytes <= (256 << 10) + wave_scratch + 4096,
+        "dense staging {} does not track the budget + wave scratch {wave_scratch}",
+        dstats.staging_peak_bytes
+    );
+    assert!(
+        dstats.staging_peak_bytes < full_key_bytes,
+        "dense staging {} not below the full key vector {full_key_bytes}",
+        dstats.staging_peak_bytes
+    );
+    drop(h_ds);
+    out = out
+        .field("dense_stream_ingest_s", dense_stream_s)
+        .field("dense_inmem_ingest_s", dense_inmem_s)
+        .field("dense_stream_peak_bytes", dense_stream_peak)
+        .field("dense_inmem_peak_bytes", dense_inmem_peak)
+        .field("dense_stream_spilled_runs", dstats.spilled_runs)
+        .field("dense_stream_spilled_bytes", dstats.spilled_bytes)
+        .field("dense_stream_staging_peak_bytes", dstats.staging_peak_bytes);
 
     bs::write_json("micro_hotpaths.json", &out);
 }

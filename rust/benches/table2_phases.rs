@@ -102,6 +102,7 @@ fn main() {
             Json::obj()
                 .field("dataset", ds.name.as_str())
                 .field("f1", g("F1"))
+                .field("dist_kernel", fs.dist_kernel)
                 .field("f1_dist", fs.dist_ns as f64 * 1e-9)
                 .field("f1_sort", fs.sort_ns as f64 * 1e-9)
                 .field("f1_nb", fs.nb_ns as f64 * 1e-9)
@@ -171,13 +172,14 @@ fn main() {
     // infinite-tau sets).
     println!("\n== Front-end (pool-tiled F1, 4 threads) ==");
     println!(
-        "{:<12} {:>9} {:>9} {:>9} {:>7} {:>7} {:>12} {:>10}",
-        "dataset", "dist s", "sort s", "nbhd s", "tiles", "chunks", "kept", "pruned"
+        "{:<12} {:>7} {:>9} {:>9} {:>9} {:>7} {:>7} {:>12} {:>10}",
+        "dataset", "kernel", "dist s", "sort s", "nbhd s", "tiles", "chunks", "kept", "pruned"
     );
     for (name, fs) in &frontend_rows {
         println!(
-            "{:<12} {:>9.3} {:>9.3} {:>9.3} {:>7} {:>7} {:>12} {:>10}",
+            "{:<12} {:>7} {:>9.3} {:>9.3} {:>9.3} {:>7} {:>7} {:>12} {:>10}",
             name,
+            if fs.dist_kernel.is_empty() { "-" } else { fs.dist_kernel },
             fs.dist_ns as f64 * 1e-9,
             fs.sort_ns as f64 * 1e-9,
             fs.nb_ns as f64 * 1e-9,

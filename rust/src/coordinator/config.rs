@@ -238,6 +238,11 @@ pub struct RunConfig {
     /// infinite (on by default; diagrams are unchanged, the edge set
     /// shrinks). `--no-enclosing` = exact full-filtration fallback.
     pub enclosing: bool,
+    /// Distance microkernel for the dense front-end: `auto` (default,
+    /// runtime CPU probe), `scalar`, `avx2`, or `neon`. Forced vector
+    /// modes degrade to scalar when the feature is absent; the emitted
+    /// edge bits are identical for every choice.
+    pub simd: String,
     /// Lines per chunk for the streaming sparse-file reader. Any
     /// nonzero value (or a nonzero `edge_budget_mb`) routes
     /// `sparse-file` datasets through the streaming ingest path;
@@ -250,8 +255,13 @@ pub struct RunConfig {
     /// pass. 0 = off (exact dense pass). Approximate when it actually
     /// caps; composes with the net-based enclosing bound at τ = ∞.
     pub knn_k: usize,
-    /// Staging budget (MiB) for the streaming sparse-file reader;
-    /// sorted key runs spill to disk past it. 0 = unbounded staging.
+    /// Staging budget (MiB) for the streaming ingest paths; sorted key
+    /// runs spill to disk past it. On a `sparse-file` dataset it (or
+    /// `stream_chunk`) routes through the streaming reader; on an
+    /// in-memory point cloud or distance table (with `knn_k` off) it
+    /// routes the dense front-end tiles through the spill store
+    /// (`edge_source = "dense-stream"`, bit-identical output).
+    /// 0 = unbounded in-memory staging.
     pub edge_budget_mb: usize,
     pub dense_lookup: bool,
     pub algorithm: String,
@@ -294,6 +304,7 @@ impl Default for RunConfig {
             shortcut: true,
             f1_tile: 0,
             enclosing: true,
+            simd: "auto".into(),
             stream_chunk: 0,
             knn_k: 0,
             edge_budget_mb: 0,
@@ -387,6 +398,12 @@ impl RunConfig {
                             "shortcut" => cfg.shortcut = flag()?,
                             "f1_tile" => cfg.f1_tile = uint()?,
                             "enclosing" => cfg.enclosing = flag()?,
+                            "simd" => {
+                                cfg.simd = v
+                                    .as_str()
+                                    .ok_or_else(|| cfg_err("engine.simd: expected a string"))?
+                                    .to_string()
+                            }
                             "stream_chunk" => cfg.stream_chunk = uint()?,
                             "knn_k" => cfg.knn_k = uint()?,
                             "edge_budget_mb" => cfg.edge_budget_mb = uint()?,
@@ -523,6 +540,9 @@ impl RunConfig {
         }
         if !["fast-column", "implicit-row"].contains(&self.algorithm.as_str()) {
             return Err(cfg_err("algorithm must be fast-column or implicit-row"));
+        }
+        if crate::filtration::SimdMode::parse(&self.simd).is_none() {
+            return Err(cfg_err("simd must be auto, scalar, avx2 or neon"));
         }
         if self.threads == 0 || self.batch_size == 0 {
             return Err(cfg_err("threads and batch_size must be >= 1"));
@@ -684,6 +704,17 @@ diagram_csv = "out/pd.csv"
         assert!(!cfg.enclosing);
         assert!(RunConfig::from_str("[engine]\nenclosing = 1\n").is_err());
         assert!(RunConfig::from_str("[engine]\nf1_tile = -3\n").is_err());
+    }
+
+    #[test]
+    fn simd_knob_parses_and_defaults_auto() {
+        assert_eq!(RunConfig::default().simd, "auto");
+        for mode in ["auto", "scalar", "avx2", "neon"] {
+            let cfg = RunConfig::from_str(&format!("[engine]\nsimd = \"{mode}\"\n")).unwrap();
+            assert_eq!(cfg.simd, mode);
+        }
+        assert!(RunConfig::from_str("[engine]\nsimd = \"sse9\"\n").is_err());
+        assert!(RunConfig::from_str("[engine]\nsimd = true\n").is_err());
     }
 
     #[test]

@@ -20,7 +20,7 @@ pub use config::{DatasetSpec, QuerySpec, RunConfig};
 
 use crate::datasets;
 use crate::error::DoryError;
-use crate::filtration::{sparsify, EdgeFiltration, FiltrationStats, FrontendOptions};
+use crate::filtration::{sparsify, EdgeFiltration, FiltrationStats, FrontendOptions, SimdMode};
 use crate::geometry::MetricData;
 use crate::hic;
 use crate::homology::{
@@ -233,6 +233,12 @@ pub fn run_batch(cfg: &RunConfig) -> Result<BatchReport> {
         shortcut: cfg.shortcut,
         f1_tile: cfg.f1_tile,
         enclosing: cfg.enclosing,
+        simd: SimdMode::parse(&cfg.simd).ok_or_else(|| {
+            DoryError::Config(format!(
+                "simd must be auto, scalar, avx2 or neon, got {}",
+                cfg.simd
+            ))
+        })?,
         dense_lookup: cfg.dense_lookup,
         algorithm: match cfg.algorithm.as_str() {
             "implicit-row" => Algorithm::ImplicitRow,
@@ -260,6 +266,31 @@ pub fn run_batch(cfg: &RunConfig) -> Result<BatchReport> {
             spill_dir: None,
         };
         session.ingest_sparse_file(p, cfg.ingest_tau(), &sopts)?.0
+    } else if cfg.edge_budget_mb > 0
+        && cfg.knn_k == 0
+        && matches!(
+            data.as_ref(),
+            Some(MetricData::Points(_)) | Some(MetricData::Dense(_))
+        )
+    {
+        // Dense streaming: a point cloud (or distance table) under an
+        // edge budget routes its row-band tiles through the spill
+        // store instead of materializing the full key array. Output is
+        // bit-identical to the in-memory build; only the transient
+        // staging profile changes.
+        let data = data.as_ref().expect("gate matched on Some");
+        let budget_bytes = cfg.edge_budget_mb.checked_mul(1 << 20).ok_or_else(|| {
+            DoryError::Config(format!(
+                "edge_budget_mb {} overflows the byte budget",
+                cfg.edge_budget_mb
+            ))
+        })?;
+        let sopts = io::stream::StreamOptions {
+            chunk_lines: cfg.stream_chunk,
+            budget_bytes,
+            spill_dir: None,
+        };
+        session.ingest_streamed(data, cfg.ingest_tau(), &sopts)?.0
     } else if let (true, Some(MetricData::Points(pc))) = (cfg.knn_k > 0, data.as_ref()) {
         // Net-graph sparse front-end: build edges from a greedy-net
         // cover instead of materializing all n(n-1)/2 pairs. Cover
@@ -449,6 +480,7 @@ pub fn batch_summary_json(cfg: &RunConfig, r: &BatchReport) -> Json {
                 .to_json()
                 .field("f1_tile", cfg.f1_tile)
                 .field("enclosing", cfg.enclosing)
+                .field("simd", cfg.simd.as_str())
                 .field(
                     "front_memory_bytes",
                     first.result.stats.front_memory_bytes,
@@ -735,6 +767,51 @@ mod tests {
             .result
             .diagram
             .multiset_eq(&inmem.result.diagram, 0.0));
+    }
+
+    #[test]
+    fn dense_budgeted_run_streams_and_matches_in_memory() {
+        let base = RunConfig {
+            dataset: DatasetSpec::Named {
+                kind: "circle".into(),
+                n: 72,
+                seed: 9,
+            },
+            tau: f64::INFINITY,
+            max_dim: 1,
+            threads: 2,
+            use_pjrt: false,
+            ..Default::default()
+        };
+        let inmem = run(&base).unwrap();
+        assert_eq!(inmem.edge_source, "native");
+        let streamed = run(&RunConfig {
+            edge_budget_mb: 1,
+            ..base.clone()
+        })
+        .unwrap();
+        assert_eq!(streamed.edge_source, "dense-stream");
+        assert_eq!(streamed.n_edges, inmem.n_edges);
+        assert!(streamed
+            .result
+            .diagram
+            .multiset_eq(&inmem.result.diagram, 0.0));
+        let fs = &streamed.result.stats.filtration;
+        assert!(!fs.dist_kernel.is_empty(), "kernel must be recorded");
+        assert_eq!(
+            fs.enclosing_radius.to_bits(),
+            inmem.result.stats.filtration.enclosing_radius.to_bits()
+        );
+        // knn_k wins over the dense budget route (a capped net graph is
+        // sparse; the spill store has nothing dense to stream).
+        let knn = run(&RunConfig {
+            edge_budget_mb: 1,
+            knn_k: 8,
+            tau: 3.0,
+            ..base
+        })
+        .unwrap();
+        assert_eq!(knn.edge_source, "knn-net");
     }
 
     #[test]

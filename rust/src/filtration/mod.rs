@@ -16,7 +16,9 @@
 //! * **tiled distance kernel** — the upper-triangular (i, j) index space
 //!   is cut into row-band tiles dispatched through the pool; each tile
 //!   filters by `τ` into a local buffer and tiles are spliced back in
-//!   canonical order;
+//!   canonical order. Inside a tile the squared distances run through an
+//!   explicit-SIMD kernel (AVX2/NEON, see [`simd`]) over a cache-aligned
+//!   SoA copy of the points, bit-identical to the scalar loop;
 //! * **total-order key sort** — every kept edge is packed into a `u128`
 //!   whose unsigned order equals the filtration's total order (monotone
 //!   f64→u64 bits, tie-broken by the packed `(a, b)`), then sorted by a
@@ -34,11 +36,13 @@
 //! summary JSON and the benches.
 
 pub mod neighborhoods;
+pub mod simd;
 pub mod sparsify;
 pub mod paired;
 
 pub use neighborhoods::Neighborhoods;
 pub use paired::Key;
+pub use simd::SimdMode;
 
 use std::sync::Mutex;
 use std::time::Instant;
@@ -58,6 +62,11 @@ pub struct FrontendOptions {
     /// unchanged (the complex is a cone beyond `r_enc`), the edge list
     /// shrinks. Inapplicable to pre-thresholded sparse inputs.
     pub enclosing: bool,
+    /// Distance kernel selection (`simd` knob): `auto` resolves to the
+    /// widest kernel the host supports at runtime, forced modes degrade
+    /// to `scalar` when unavailable. Output bits are identical for
+    /// every setting; [`FiltrationStats::dist_kernel`] records what ran.
+    pub simd: SimdMode,
 }
 
 impl Default for FrontendOptions {
@@ -65,6 +74,7 @@ impl Default for FrontendOptions {
         Self {
             tile: 0,
             enclosing: true,
+            simd: SimdMode::Auto,
         }
     }
 }
@@ -108,6 +118,18 @@ pub struct FiltrationStats {
     /// `Neighborhoods` CSR builds recorded into this stats object; the
     /// session counterpart of `f1_builds`.
     pub nb_builds: u64,
+    /// Distance kernel that ran (`"avx2"`, `"neon"`, `"scalar"`); empty
+    /// until a dense distance pass runs (sparse/weighted inputs never
+    /// run one).
+    pub dist_kernel: &'static str,
+    /// Sorted key runs spilled to disk by the *dense* streamed front-end
+    /// (`stream_dense_build`); 0 for in-memory builds.
+    pub dense_spilled_runs: u64,
+    /// Bytes written to spill files by the dense streamed front-end.
+    pub dense_spilled_bytes: u64,
+    /// Peak resident staging (spill buffer + tile scratch) of the dense
+    /// streamed front-end, in bytes.
+    pub dense_staging_peak_bytes: u64,
 }
 
 impl Default for FiltrationStats {
@@ -125,6 +147,10 @@ impl Default for FiltrationStats {
             enclosing_radius: f64::INFINITY,
             f1_builds: 0,
             nb_builds: 0,
+            dist_kernel: "",
+            dense_spilled_runs: 0,
+            dense_spilled_bytes: 0,
+            dense_staging_peak_bytes: 0,
         }
     }
 }
@@ -145,6 +171,13 @@ impl FiltrationStats {
             .field("enclosing_radius", self.enclosing_radius)
             .field("f1_builds", self.f1_builds as f64)
             .field("nb_builds", self.nb_builds as f64)
+            .field("dist_kernel", self.dist_kernel)
+            .field("dense_spilled_runs", self.dense_spilled_runs as f64)
+            .field("dense_spilled_bytes", self.dense_spilled_bytes as f64)
+            .field(
+                "dense_staging_peak_bytes",
+                self.dense_staging_peak_bytes as f64,
+            )
     }
 }
 
@@ -194,8 +227,9 @@ pub(crate) fn sort_run_u128(keys: Vec<u128>, pool: Option<&ThreadPool>) -> Vec<u
 }
 
 /// Rows per distance tile: the `f1_tile` knob, or ~8 tiles per worker,
-/// at least 16 rows each, when 0.
-fn effective_tile(n: usize, knob: usize, threads: usize) -> usize {
+/// at least 16 rows each, when 0. `pub(crate)` so the dense streamed
+/// front-end (`io::stream`) cuts identical row bands.
+pub(crate) fn effective_tile(n: usize, knob: usize, threads: usize) -> usize {
     let n = n.max(1);
     if knob > 0 {
         return knob.min(n);
@@ -221,11 +255,14 @@ pub struct EdgeFiltration {
 
 impl EdgeFiltration {
     /// Build F1 from any metric input, keeping edges with `d <= tau_max`.
-    /// Serial reference path: no pool, no enclosing-radius truncation.
+    /// Serial reference path: no pool, no enclosing-radius truncation,
+    /// scalar distance kernel — the differential oracle every pooled and
+    /// vectorised configuration is pinned against.
     pub fn build(data: &MetricData, tau_max: f64) -> Self {
         let fe = FrontendOptions {
             tile: 0,
             enclosing: false,
+            simd: SimdMode::Scalar,
         };
         Self::build_pooled(data, tau_max, None, &fe, &mut FiltrationStats::default())
     }
@@ -255,21 +292,13 @@ impl EdgeFiltration {
         // (contractible above dim 0) from there on. Sparse inputs are
         // already thresholded (absent pairs are unknown, not infinite),
         // so the radius cannot be derived there. Row maxima ride along
-        // in the same tile pass that computes the keys (each pair's
-        // distance is evaluated exactly once), and the key list is
-        // truncated before the sort ever sees it.
+        // in the same fused tile pass that emits the keys (each pair's
+        // distance is evaluated exactly once — see
+        // `fused_enclosing_keys`), and the key list is truncated before
+        // the sort ever sees it.
         let applicable = !matches!(data, MetricData::Sparse(_)) && n >= 2;
         let (keys, r_enc) = if fe.enclosing && tau_max == f64::INFINITY && applicable {
-            // Pass 1 accumulates row maxima only (O(n) memory, no key
-            // storage); pass 2 is the ordinary thresholded kernel at
-            // r_enc, so peak memory is proportional to the *kept* set —
-            // the point of pruning. The price is evaluating each
-            // distance twice, which still beats the full-materialization
-            // alternative (16 bytes per candidate pair) at the scales
-            // where the truncation matters.
-            let r = enclosing_radius_rowmax(data, pool, fe, stats);
-            let tau_eff = if r.is_finite() { r } else { tau_max };
-            (distance_keys(data, tau_eff, pool, fe, stats), r)
+            fused_enclosing_keys(data, tau_max, pool, fe, stats)
         } else {
             (distance_keys(data, tau_max, pool, fe, stats), f64::INFINITY)
         };
@@ -487,6 +516,26 @@ impl EdgeFiltration {
     }
 }
 
+/// Collapse a row-max array to `r_enc = min_i row_max[i]`. When the
+/// maxima were folded in squared space (vector kernels), each row takes
+/// one `sqrt` here — correctly-rounded `sqrt` is monotone, so
+/// `fl(sqrt(max_j s_ij)) == max_j fl(sqrt(s_ij))` and the result is
+/// bit-equal to the distance-space fold. `-inf` rows (all-NaN, only
+/// possible with infinite coordinates) pass through unrooted so they
+/// poison the min into the non-finite fallback exactly as before.
+fn rowmax_to_radius(row_max: Vec<f64>, squared: bool) -> f64 {
+    row_max
+        .into_iter()
+        .map(|m| {
+            if squared && m != f64::NEG_INFINITY {
+                m.sqrt()
+            } else {
+                m
+            }
+        })
+        .fold(f64::INFINITY, f64::min)
+}
+
 /// `r_enc = min_i max_j d(i, j)` by a triangular sweep that stores no
 /// keys — O(n) memory. Pooled runs keep one partial row-max array per
 /// *worker* (a stolen tile accumulates into the thief's array; `tid`
@@ -495,7 +544,10 @@ impl EdgeFiltration {
 /// schedule-independent because every pair contributes to the same two
 /// rows exactly once and `f64::max` over a fixed multiset is
 /// associative and commutative (NaN contributions are ignored).
-fn enclosing_radius_rowmax(
+/// `pub(crate)` for the dense streamed front-end, which needs the
+/// radius *before* it can start thresholding tiles into the spill
+/// store; the in-memory build uses the fused single pass instead.
+pub(crate) fn enclosing_radius_rowmax(
     data: &MetricData,
     pool: Option<&ThreadPool>,
     fe: &FrontendOptions,
@@ -503,19 +555,25 @@ fn enclosing_radius_rowmax(
 ) -> f64 {
     let n = data.n();
     debug_assert!(n >= 2);
-    match pool {
+    let dist = simd::Dist::new(data, fe.simd);
+    let squared = dist.rowmax_is_squared();
+    let row_max = match pool {
         Some(pool) if pool.threads() > 1 => {
             let tile = effective_tile(n, fe.tile, pool.threads());
             let n_tiles = n.div_ceil(tile);
             let maxes: Vec<Mutex<Vec<f64>>> =
                 (0..pool.threads()).map(|_| Mutex::new(Vec::new())).collect();
+            let dist = &dist;
             pool.run_stealing(n_tiles, 1, |tid, range| {
                 let mut mx = maxes[tid].lock().unwrap();
                 if mx.is_empty() {
                     mx.resize(n, f64::NEG_INFINITY);
                 }
+                let mut scratch = vec![0f64; n];
                 for t in range {
-                    rowmax_rows(data, t * tile..((t + 1) * tile).min(n), &mut mx[..]);
+                    for i in t * tile..((t + 1) * tile).min(n) {
+                        dist.fold_row_max(i, n, &mut mx[..], &mut scratch);
+                    }
                 }
             });
             stats.tiles += n_tiles as u64;
@@ -526,41 +584,112 @@ fn enclosing_radius_rowmax(
                     *r = r.max(v);
                 }
             }
-            row_max.into_iter().fold(f64::INFINITY, f64::min)
+            row_max
         }
         _ => {
             let mut row_max = vec![f64::NEG_INFINITY; n];
-            rowmax_rows(data, 0..n, &mut row_max);
-            row_max.into_iter().fold(f64::INFINITY, f64::min)
+            let mut scratch = vec![0f64; n];
+            for i in 0..n {
+                dist.fold_row_max(i, n, &mut row_max, &mut scratch);
+            }
+            row_max
         }
-    }
+    };
+    rowmax_to_radius(row_max, squared)
 }
 
-/// One row band of the row-max sweep: fold each upper-triangular
-/// distance into both endpoints' maxima.
-fn rowmax_rows(data: &MetricData, rows: std::ops::Range<usize>, row_max: &mut [f64]) {
+/// Sample rows used to seed the provisional truncation bound of the
+/// fused enclosing pass. Any row's max is an upper bound on
+/// `r_enc = min_i max_j d(i, j)`; the min over a handful of rows is
+/// generically tight.
+const ENCLOSING_SAMPLE_ROWS: usize = 16;
+
+/// Fused τ=∞ front-end pass: a single sweep over the upper triangle
+/// evaluates each pair's distance exactly once, folding the
+/// enclosing-radius row maxima *and* emitting sort keys thresholded at a
+/// provisional bound `τ_p ≥ r_enc` (the min of a few sampled row
+/// maxima). Once the sweep finishes the exact `r_enc` is known and the
+/// provisional key list is filtered down to it by key prefix —
+/// bit-identical to the old two-pass build (same distances, same order
+/// keys) at half the distance work. Peak memory tracks the kept set at
+/// `τ_p`, which coincides with the kept set at `r_enc` whenever some
+/// sampled row max sits near the min; a pathological sample costs only
+/// memory, never bits. Degenerate geometry (a non-finite radius —
+/// infinite coordinates) falls back to the untruncated kernel exactly
+/// as the two-pass build did.
+fn fused_enclosing_keys(
+    data: &MetricData,
+    tau_max: f64,
+    pool: Option<&ThreadPool>,
+    fe: &FrontendOptions,
+    stats: &mut FiltrationStats,
+) -> (Vec<u128>, f64) {
     let n = data.n();
-    match data {
-        MetricData::Points(pc) => {
-            for i in rows {
-                for j in (i + 1)..n {
-                    let d = pc.dist(i, j);
-                    row_max[i] = row_max[i].max(d);
-                    row_max[j] = row_max[j].max(d);
-                }
-            }
-        }
-        MetricData::Dense(dd) => {
-            for i in rows {
-                for j in (i + 1)..n {
-                    let d = dd.get(i, j);
-                    row_max[i] = row_max[i].max(d);
-                    row_max[j] = row_max[j].max(d);
-                }
-            }
-        }
-        MetricData::Sparse(_) => unreachable!("sparse inputs are never truncated"),
+    debug_assert!(n >= 2);
+    let dist = simd::Dist::new(data, fe.simd);
+    stats.dist_kernel = dist.kernel_name();
+    let squared = dist.rowmax_is_squared();
+    let mut scratch = vec![0f64; n];
+    let mut tau_p = f64::INFINITY;
+    for i in 0..n.min(ENCLOSING_SAMPLE_ROWS) {
+        tau_p = tau_p.min(dist.full_row_max(i, n, &mut scratch));
     }
+    let bound = simd::sq_prefilter_bound(tau_p);
+    let (keys, row_max, n_tiles) = match pool {
+        Some(pool) if pool.threads() > 1 => {
+            let tile = effective_tile(n, fe.tile, pool.threads());
+            let n_tiles = n.div_ceil(tile);
+            let slots: Vec<Mutex<Vec<u128>>> =
+                (0..n_tiles).map(|_| Mutex::new(Vec::new())).collect();
+            let maxes: Vec<Mutex<Vec<f64>>> =
+                (0..pool.threads()).map(|_| Mutex::new(Vec::new())).collect();
+            let dist = &dist;
+            pool.run_stealing(n_tiles, 1, |tid, range| {
+                let mut mx = maxes[tid].lock().unwrap();
+                if mx.is_empty() {
+                    mx.resize(n, f64::NEG_INFINITY);
+                }
+                let mut scratch = vec![0f64; n];
+                for t in range {
+                    let mut buf = Vec::new();
+                    for i in t * tile..((t + 1) * tile).min(n) {
+                        dist.fused_row(i, n, tau_p, bound, &mut buf, &mut mx[..], &mut scratch);
+                    }
+                    *slots[t].lock().unwrap() = buf;
+                }
+            });
+            let mut row_max = vec![f64::NEG_INFINITY; n];
+            for m in maxes {
+                let m = m.into_inner().unwrap();
+                for (r, &v) in row_max.iter_mut().zip(&m) {
+                    *r = r.max(v);
+                }
+            }
+            (splice(slots), row_max, n_tiles as u64)
+        }
+        _ => {
+            let mut keys = Vec::new();
+            let mut row_max = vec![f64::NEG_INFINITY; n];
+            for i in 0..n {
+                dist.fused_row(i, n, tau_p, bound, &mut keys, &mut row_max, &mut scratch);
+            }
+            (keys, row_max, 0)
+        }
+    };
+    let r_enc = rowmax_to_radius(row_max, squared);
+    if !r_enc.is_finite() {
+        // Truncation inapplicable; discard the provisional keys and
+        // rebuild untruncated (the fallback records its own counters).
+        return (distance_keys(data, tau_max, pool, fe, stats), r_enc);
+    }
+    stats.tiles += n_tiles;
+    stats.edges_considered += (n * (n - 1) / 2) as u64;
+    let mut keys = keys;
+    if r_enc < tau_p {
+        let cut = f64_order_key(r_enc);
+        keys.retain(|&k| (k >> 64) as u64 <= cut);
+    }
+    (keys, r_enc)
 }
 
 /// The one row-max sweep behind every query/kernel-side enclosing
@@ -659,59 +788,44 @@ fn distance_keys(
             keys
         }
         (_, Some(pool)) if pool.threads() > 1 && n >= 2 => {
+            let dist = simd::Dist::new(data, fe.simd);
+            stats.dist_kernel = dist.kernel_name();
+            let bound = simd::sq_prefilter_bound(tau);
             let tile = effective_tile(n, fe.tile, pool.threads());
             let n_tiles = n.div_ceil(tile);
             let slots: Vec<Mutex<Vec<u128>>> =
                 (0..n_tiles).map(|_| Mutex::new(Vec::new())).collect();
-            pool.run_stealing(n_tiles, 1, |_tid, range| {
-                for t in range {
-                    let mut buf = Vec::new();
-                    fill_rows(data, t * tile..((t + 1) * tile).min(n), tau, &mut buf);
-                    *slots[t].lock().unwrap() = buf;
-                }
-            });
+            {
+                let dist = &dist;
+                pool.run_stealing(n_tiles, 1, |_tid, range| {
+                    let mut scratch = vec![0f64; n];
+                    for t in range {
+                        let mut buf = Vec::new();
+                        for i in t * tile..((t + 1) * tile).min(n) {
+                            dist.fill_row(i, n, tau, bound, &mut buf, &mut scratch);
+                        }
+                        *slots[t].lock().unwrap() = buf;
+                    }
+                });
+            }
             stats.tiles += n_tiles as u64;
             stats.edges_considered += (n * (n - 1) / 2) as u64;
             splice(slots)
         }
         _ => {
             let mut keys = Vec::new();
-            fill_rows(data, 0..n, tau, &mut keys);
             if n >= 2 {
+                let dist = simd::Dist::new(data, fe.simd);
+                stats.dist_kernel = dist.kernel_name();
+                let bound = simd::sq_prefilter_bound(tau);
+                let mut scratch = vec![0f64; n];
+                for i in 0..n {
+                    dist.fill_row(i, n, tau, bound, &mut keys, &mut scratch);
+                }
                 stats.edges_considered += (n * (n - 1) / 2) as u64;
             }
             keys
         }
-    }
-}
-
-/// One row band of the upper-triangular distance kernel. Identical
-/// arithmetic to the serial reference (`PointCloud::dist` /
-/// `DenseDistances::get` per pair), so kept distances are bit-equal.
-fn fill_rows(data: &MetricData, rows: std::ops::Range<usize>, tau: f64, out: &mut Vec<u128>) {
-    let n = data.n();
-    match data {
-        MetricData::Points(pc) => {
-            for i in rows {
-                for j in (i + 1)..n {
-                    let d = pc.dist(i, j);
-                    if d <= tau {
-                        out.push(edge_key(d, i as u32, j as u32));
-                    }
-                }
-            }
-        }
-        MetricData::Dense(dd) => {
-            for i in rows {
-                for j in (i + 1)..n {
-                    let d = dd.get(i, j);
-                    if d <= tau {
-                        out.push(edge_key(d, i as u32, j as u32));
-                    }
-                }
-            }
-        }
-        MetricData::Sparse(_) => unreachable!("sparse inputs are chunked by entry"),
     }
 }
 
@@ -1025,6 +1139,7 @@ mod tests {
             let fe = FrontendOptions {
                 tile: 1,
                 enclosing: false,
+                ..Default::default()
             };
             let pooled =
                 EdgeFiltration::build_pooled(&square_cloud(), tau, Some(&pool), &fe, &mut stats);
@@ -1066,6 +1181,7 @@ mod tests {
             let fe = FrontendOptions {
                 tile: 2,
                 enclosing: true,
+                ..Default::default()
             };
             let f = EdgeFiltration::build_pooled(
                 &md,
@@ -1199,6 +1315,81 @@ mod tests {
         assert_eq!(stats.nb_builds, 1);
         let _ = EdgeFiltration::build_pooled(&square_cloud(), 2.0, None, &fe, &mut stats);
         assert_eq!(stats.f1_builds, 2);
+    }
+
+    #[test]
+    fn simd_modes_are_bit_identical_to_scalar() {
+        use crate::util::rng::Pcg32;
+        let mut rng = Pcg32::new(0x51D);
+        let pc = PointCloud::new(3, (0..37 * 3).map(|_| rng.next_f64()).collect());
+        let md = MetricData::Points(pc);
+        let pool = ThreadPool::new(4);
+        for tau in [0.4, f64::INFINITY] {
+            for enclosing in [false, true] {
+                let mut base_stats = FiltrationStats::default();
+                let base = EdgeFiltration::build_pooled(
+                    &md,
+                    tau,
+                    Some(&pool),
+                    &FrontendOptions {
+                        enclosing,
+                        simd: SimdMode::Scalar,
+                        ..Default::default()
+                    },
+                    &mut base_stats,
+                );
+                assert_eq!(base_stats.dist_kernel, "scalar");
+                for mode in [SimdMode::Auto, SimdMode::Avx2, SimdMode::Neon] {
+                    let mut stats = FiltrationStats::default();
+                    let f = EdgeFiltration::build_pooled(
+                        &md,
+                        tau,
+                        Some(&pool),
+                        &FrontendOptions {
+                            enclosing,
+                            simd: mode,
+                            ..Default::default()
+                        },
+                        &mut stats,
+                    );
+                    assert_eq!(base.edges, f.edges, "mode {mode:?} tau {tau}");
+                    let bb: Vec<u64> = base.values.iter().map(|v| v.to_bits()).collect();
+                    let fb: Vec<u64> = f.values.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(bb, fb, "mode {mode:?} tau {tau}");
+                    assert_eq!(
+                        stats.enclosing_radius.to_bits(),
+                        base_stats.enclosing_radius.to_bits()
+                    );
+                    assert!(!stats.dist_kernel.is_empty());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn non_finite_radius_falls_back_to_untruncated() {
+        // An infinite coordinate makes every row max infinite, so the
+        // enclosing radius is non-finite and the truncation must yield
+        // the untruncated τ=∞ build (infinite edges and all).
+        let md = MetricData::Points(PointCloud::new(
+            2,
+            vec![0.0, 0.0, 1.0, 0.0, f64::INFINITY, 0.0],
+        ));
+        let want = EdgeFiltration::build(&md, f64::INFINITY);
+        for pool in [None, Some(ThreadPool::new(3))] {
+            let mut stats = FiltrationStats::default();
+            let f = EdgeFiltration::build_pooled(
+                &md,
+                f64::INFINITY,
+                pool.as_ref(),
+                &FrontendOptions::default(),
+                &mut stats,
+            );
+            assert_eq!(f.edges, want.edges);
+            assert!(!stats.enclosing_radius.is_finite());
+            assert_eq!(stats.edges_pruned, 0);
+            assert_eq!(f.n_edges(), 3, "infinite edges survive τ=∞");
+        }
     }
 
     #[test]

@@ -1,0 +1,586 @@
+//! Explicit-SIMD squared-distance kernels for the row-band front-end.
+//!
+//! The O(n²) distance pass is the dominant front-end cost for dense point
+//! clouds (Otter et al. identify filtration construction as the practical
+//! bottleneck at scale). This module vectorises it without changing a
+//! single output bit:
+//!
+//! - **Lanes run across candidate points, not coordinates.** Each vector
+//!   lane accumulates one point-pair's squared distance in the *same
+//!   sequential axis order* as [`PointCloud::dist`], using separate
+//!   multiply and add (never FMA — Rust never contracts, and neither do
+//!   we). Every lane therefore performs the exact op sequence of the
+//!   scalar loop and the per-pair sum `s` is bit-identical to the scalar
+//!   sum, for every lane count, tile size, and remainder split.
+//! - **`sqrt` never enters a vector lane.** Candidates are prefiltered in
+//!   squared space against a conservatively widened `τ²` bound; only the
+//!   survivors pay one scalar `sqrt`, and the emitted distance is
+//!   `fl(sqrt(s))` — the very same bits `PointCloud::dist` returns. The
+//!   prefilter only over-accepts (boundary candidates are re-checked
+//!   exactly), so the kept edge set matches the scalar kernel exactly.
+//!
+//! Backends: AVX2 (x86_64, runtime-detected) and NEON (aarch64 baseline),
+//! both stable-Rust `std::arch`; the scalar loop is the always-available
+//! fallback and the differential oracle. A forced mode that the host
+//! cannot run degrades to scalar rather than failing.
+
+use crate::geometry::{DenseDistances, MetricData, PointCloud, SoaPoints};
+
+use super::edge_key;
+
+/// User-facing kernel knob: `auto` picks the widest kernel the host
+/// supports at runtime; forced modes fall back to `scalar` when the
+/// requested ISA is unavailable (wrong arch or missing CPU feature).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum SimdMode {
+    #[default]
+    Auto,
+    Scalar,
+    Avx2,
+    Neon,
+}
+
+impl SimdMode {
+    pub fn parse(s: &str) -> Option<SimdMode> {
+        match s {
+            "auto" => Some(SimdMode::Auto),
+            "scalar" => Some(SimdMode::Scalar),
+            "avx2" => Some(SimdMode::Avx2),
+            "neon" => Some(SimdMode::Neon),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SimdMode::Auto => "auto",
+            SimdMode::Scalar => "scalar",
+            SimdMode::Avx2 => "avx2",
+            SimdMode::Neon => "neon",
+        }
+    }
+}
+
+/// The kernel actually selected for a build (post feature detection).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum Kernel {
+    Scalar,
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+    #[cfg(target_arch = "aarch64")]
+    Neon,
+}
+
+impl Kernel {
+    pub(crate) fn name(self) -> &'static str {
+        match self {
+            Kernel::Scalar => "scalar",
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Avx2 => "avx2",
+            #[cfg(target_arch = "aarch64")]
+            Kernel::Neon => "neon",
+        }
+    }
+}
+
+/// Resolve a [`SimdMode`] against the running host. NEON is part of the
+/// aarch64 baseline so needs no runtime probe; AVX2 is checked with
+/// `is_x86_feature_detected!`. Unsatisfiable requests degrade to scalar.
+pub(crate) fn select(mode: SimdMode) -> Kernel {
+    match mode {
+        SimdMode::Scalar => Kernel::Scalar,
+        SimdMode::Auto | SimdMode::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            {
+                if std::arch::is_x86_feature_detected!("avx2") {
+                    return Kernel::Avx2;
+                }
+            }
+            #[cfg(target_arch = "aarch64")]
+            {
+                if matches!(mode, SimdMode::Auto) {
+                    return Kernel::Neon;
+                }
+            }
+            Kernel::Scalar
+        }
+        SimdMode::Neon => {
+            #[cfg(target_arch = "aarch64")]
+            let k = Kernel::Neon;
+            #[cfg(not(target_arch = "aarch64"))]
+            let k = Kernel::Scalar;
+            k
+        }
+    }
+}
+
+/// Conservative squared-space prefilter bound for threshold `tau`.
+///
+/// A pair is kept iff `fl(sqrt(s)) <= tau`; the vector path first tests
+/// `s <= bound` and re-checks survivors exactly, so the bound only has to
+/// *never reject a kept pair*. `fl(sqrt(s)) <= tau` implies
+/// `s <= tau²·(1 + 5ε)` after unwinding the two roundings, and
+/// `fl(tau·tau)` itself can sit one ulp below `tau²` — a relative margin
+/// of `16ε` covers both with room to spare. Adding `MIN_POSITIVE` keeps
+/// the margin meaningful when `tau²` is subnormal (where the relative
+/// term underflows to zero); for any normal-range `tau` it is invisible.
+/// Over-acceptance only costs a scalar re-check, never a wrong bit.
+pub(crate) fn sq_prefilter_bound(tau: f64) -> f64 {
+    if tau.is_infinite() {
+        // +inf: everything passes; -inf: the exact re-check rejects all.
+        return f64::INFINITY;
+    }
+    let t2 = tau * tau;
+    t2 + t2 * (16.0 * f64::EPSILON) + f64::MIN_POSITIVE
+}
+
+/// Fill `out[t] = Σ_k (x[i,k] - x[j0+t,k])²` for `t in 0..out.len()`,
+/// each sum accumulated in sequential axis order (scalar-bit-identical).
+pub(crate) fn sq_row(kernel: Kernel, soa: &SoaPoints, i: usize, j0: usize, out: &mut [f64]) {
+    debug_assert!(j0 + out.len() <= soa.n());
+    match kernel {
+        Kernel::Scalar => sq_row_scalar(soa, i, j0, out),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: the Avx2 variant is only constructed after
+        // `is_x86_feature_detected!("avx2")` succeeded in `select`.
+        Kernel::Avx2 => unsafe { sq_row_avx2(soa, i, j0, out) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is mandatory in the aarch64 baseline.
+        Kernel::Neon => unsafe { sq_row_neon(soa, i, j0, out) },
+    }
+}
+
+fn sq_row_scalar(soa: &SoaPoints, i: usize, j0: usize, out: &mut [f64]) {
+    let dim = soa.dim();
+    for (t, s) in out.iter_mut().enumerate() {
+        let j = j0 + t;
+        let mut acc = 0.0f64;
+        for k in 0..dim {
+            let d = soa.coord(i, k) - soa.coord(j, k);
+            acc += d * d;
+        }
+        *s = acc;
+    }
+}
+
+/// Candidate points are processed in blocks small enough that the block's
+/// accumulator slice stays in L1 while the axis loop streams over it.
+const SQ_BLOCK: usize = 512;
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn sq_row_avx2(soa: &SoaPoints, i: usize, j0: usize, out: &mut [f64]) {
+    use std::arch::x86_64::*;
+    let m = out.len();
+    let dim = soa.dim();
+    let mut b0 = 0usize;
+    while b0 < m {
+        let b1 = (b0 + SQ_BLOCK).min(m);
+        let vec_end = b0 + ((b1 - b0) / 4) * 4;
+        out[b0..b1].fill(0.0);
+        for k in 0..dim {
+            let row = soa.coord_row(k);
+            let pi = row[i];
+            let c = _mm256_set1_pd(pi);
+            let mut t = b0;
+            while t < vec_end {
+                let v = _mm256_loadu_pd(row.as_ptr().add(j0 + t));
+                let d = _mm256_sub_pd(c, v);
+                // mul + add, NOT fmadd: contraction would change the
+                // rounding and break bit-equality with the scalar sum.
+                let sq = _mm256_mul_pd(d, d);
+                let acc = _mm256_add_pd(_mm256_loadu_pd(out.as_ptr().add(t)), sq);
+                _mm256_storeu_pd(out.as_mut_ptr().add(t), acc);
+                t += 4;
+            }
+            while t < b1 {
+                let d = pi - row[j0 + t];
+                out[t] += d * d;
+                t += 1;
+            }
+        }
+        b0 = b1;
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn sq_row_neon(soa: &SoaPoints, i: usize, j0: usize, out: &mut [f64]) {
+    use std::arch::aarch64::*;
+    let m = out.len();
+    let dim = soa.dim();
+    let mut b0 = 0usize;
+    while b0 < m {
+        let b1 = (b0 + SQ_BLOCK).min(m);
+        let vec_end = b0 + ((b1 - b0) / 2) * 2;
+        out[b0..b1].fill(0.0);
+        for k in 0..dim {
+            let row = soa.coord_row(k);
+            let pi = row[i];
+            let c = vdupq_n_f64(pi);
+            let mut t = b0;
+            while t < vec_end {
+                let v = vld1q_f64(row.as_ptr().add(j0 + t));
+                let d = vsubq_f64(c, v);
+                // vmulq + vaddq, NOT vfmaq: keep scalar rounding.
+                let sq = vmulq_f64(d, d);
+                let acc = vaddq_f64(vld1q_f64(out.as_ptr().add(t)), sq);
+                vst1q_f64(out.as_mut_ptr().add(t), acc);
+                t += 2;
+            }
+            while t < b1 {
+                let d = pi - row[j0 + t];
+                out[t] += d * d;
+                t += 1;
+            }
+        }
+        b0 = b1;
+    }
+}
+
+/// Distance evaluator for one front-end build: the selected kernel plus
+/// whatever derived layout it needs. Constructed once per build (the SoA
+/// copy is O(n·dim), trivial next to the O(n²·dim) pass it accelerates)
+/// and shared read-only across worker threads.
+pub(crate) enum Dist<'a> {
+    /// Scalar oracle path: distances via [`PointCloud::dist`], bitwise
+    /// the historical front-end behaviour.
+    Cloud(&'a PointCloud),
+    /// Vector path over the SoA layout; emitted bits match `Cloud`.
+    CloudSimd { soa: SoaPoints, kernel: Kernel },
+    /// Precomputed distance table — already memory-bound, stays scalar.
+    Table(&'a DenseDistances),
+}
+
+impl<'a> Dist<'a> {
+    /// Panics on sparse inputs — those take the entry-chunk path and
+    /// never reach the row-band kernels.
+    pub(crate) fn new(data: &'a MetricData, mode: SimdMode) -> Dist<'a> {
+        match data {
+            MetricData::Points(pc) => {
+                let kernel = select(mode);
+                if kernel == Kernel::Scalar {
+                    Dist::Cloud(pc)
+                } else {
+                    Dist::CloudSimd {
+                        soa: SoaPoints::from_cloud(pc),
+                        kernel,
+                    }
+                }
+            }
+            MetricData::Dense(dd) => Dist::Table(dd),
+            MetricData::Sparse(_) => unreachable!("sparse inputs use the entry-chunk path"),
+        }
+    }
+
+    pub(crate) fn kernel_name(&self) -> &'static str {
+        match self {
+            Dist::Cloud(_) | Dist::Table(_) => "scalar",
+            Dist::CloudSimd { kernel, .. } => kernel.name(),
+        }
+    }
+
+    /// Whether row-max folds through this evaluator live in squared
+    /// space (vector path) rather than distance space (scalar paths).
+    /// `sqrt` is monotone and correctly rounded, so folding squares and
+    /// rooting once per row at the end yields the same bits as folding
+    /// rooted distances — but the two spaces must not be mixed.
+    pub(crate) fn rowmax_is_squared(&self) -> bool {
+        matches!(self, Dist::CloudSimd { .. })
+    }
+
+    /// Emit thresholded keys for row `i` (pairs `(i, j)`, `j > i`).
+    /// `bound` must be `sq_prefilter_bound(tau)`; `scratch` holds at
+    /// least `n - i - 1` slots.
+    pub(crate) fn fill_row(
+        &self,
+        i: usize,
+        n: usize,
+        tau: f64,
+        bound: f64,
+        out: &mut Vec<u128>,
+        scratch: &mut [f64],
+    ) {
+        match self {
+            Dist::Cloud(pc) => {
+                for j in (i + 1)..n {
+                    let d = pc.dist(i, j);
+                    if d <= tau {
+                        out.push(edge_key(d, i as u32, j as u32));
+                    }
+                }
+            }
+            Dist::CloudSimd { soa, kernel } => {
+                let m = n - i - 1;
+                let sq = &mut scratch[..m];
+                sq_row(*kernel, soa, i, i + 1, sq);
+                for (t, &s) in sq.iter().enumerate() {
+                    if s <= bound {
+                        let d = s.sqrt();
+                        if d <= tau {
+                            out.push(edge_key(d, i as u32, (i + 1 + t) as u32));
+                        }
+                    }
+                }
+            }
+            Dist::Table(dd) => {
+                for j in (i + 1)..n {
+                    let d = dd.get(i, j);
+                    if d <= tau {
+                        out.push(edge_key(d, i as u32, j as u32));
+                    }
+                }
+            }
+        }
+    }
+
+    /// Fused τ=∞ row: emit keys thresholded at the provisional bound
+    /// `tau_p` *and* fold row maxima — each pair's distance is evaluated
+    /// exactly once. `row_max` is in the space reported by
+    /// [`Dist::rowmax_is_squared`].
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn fused_row(
+        &self,
+        i: usize,
+        n: usize,
+        tau_p: f64,
+        bound: f64,
+        out: &mut Vec<u128>,
+        row_max: &mut [f64],
+        scratch: &mut [f64],
+    ) {
+        match self {
+            Dist::Cloud(pc) => {
+                let mut mi = row_max[i];
+                for j in (i + 1)..n {
+                    let d = pc.dist(i, j);
+                    mi = mi.max(d);
+                    row_max[j] = row_max[j].max(d);
+                    if d <= tau_p {
+                        out.push(edge_key(d, i as u32, j as u32));
+                    }
+                }
+                row_max[i] = mi;
+            }
+            Dist::CloudSimd { soa, kernel } => {
+                let m = n - i - 1;
+                let sq = &mut scratch[..m];
+                sq_row(*kernel, soa, i, i + 1, sq);
+                let mut mi = row_max[i];
+                for (t, &s) in sq.iter().enumerate() {
+                    mi = mi.max(s);
+                    let rj = &mut row_max[i + 1 + t];
+                    *rj = rj.max(s);
+                    if s <= bound {
+                        let d = s.sqrt();
+                        if d <= tau_p {
+                            out.push(edge_key(d, i as u32, (i + 1 + t) as u32));
+                        }
+                    }
+                }
+                row_max[i] = mi;
+            }
+            Dist::Table(dd) => {
+                let mut mi = row_max[i];
+                for j in (i + 1)..n {
+                    let d = dd.get(i, j);
+                    mi = mi.max(d);
+                    row_max[j] = row_max[j].max(d);
+                    if d <= tau_p {
+                        out.push(edge_key(d, i as u32, j as u32));
+                    }
+                }
+                row_max[i] = mi;
+            }
+        }
+    }
+
+    /// Fold row maxima only (no key emission) for rows `i` with `j > i`
+    /// contributions — the streamed dense path's standalone `r_enc`
+    /// sweep. Space convention as in [`Dist::fused_row`].
+    pub(crate) fn fold_row_max(&self, i: usize, n: usize, row_max: &mut [f64], scratch: &mut [f64]) {
+        match self {
+            Dist::Cloud(pc) => {
+                let mut mi = row_max[i];
+                for j in (i + 1)..n {
+                    let d = pc.dist(i, j);
+                    mi = mi.max(d);
+                    row_max[j] = row_max[j].max(d);
+                }
+                row_max[i] = mi;
+            }
+            Dist::CloudSimd { soa, kernel } => {
+                let m = n - i - 1;
+                let sq = &mut scratch[..m];
+                sq_row(*kernel, soa, i, i + 1, sq);
+                let mut mi = row_max[i];
+                for (t, &s) in sq.iter().enumerate() {
+                    mi = mi.max(s);
+                    let rj = &mut row_max[i + 1 + t];
+                    *rj = rj.max(s);
+                }
+                row_max[i] = mi;
+            }
+            Dist::Table(dd) => {
+                let mut mi = row_max[i];
+                for j in (i + 1)..n {
+                    let d = dd.get(i, j);
+                    mi = mi.max(d);
+                    row_max[j] = row_max[j].max(d);
+                }
+                row_max[i] = mi;
+            }
+        }
+    }
+
+    /// Full max over `j != i` of `d(i, j)`, in distance space — used to
+    /// seed the provisional truncation bound from a few sample rows.
+    pub(crate) fn full_row_max(&self, i: usize, n: usize, scratch: &mut [f64]) -> f64 {
+        match self {
+            Dist::Cloud(pc) => {
+                let mut m = f64::NEG_INFINITY;
+                for j in 0..n {
+                    if j != i {
+                        m = m.max(pc.dist(i, j));
+                    }
+                }
+                m
+            }
+            Dist::CloudSimd { soa, kernel } => {
+                let sq = &mut scratch[..n];
+                sq_row(*kernel, soa, i, 0, sq);
+                let mut m = f64::NEG_INFINITY;
+                for (j, &s) in sq.iter().enumerate() {
+                    if j != i {
+                        m = m.max(s);
+                    }
+                }
+                // All-NaN rows leave the fold at -inf in both spaces;
+                // rooting would turn that into NaN, so pass it through.
+                if m == f64::NEG_INFINITY {
+                    m
+                } else {
+                    m.sqrt()
+                }
+            }
+            Dist::Table(dd) => {
+                let mut m = f64::NEG_INFINITY;
+                for j in 0..n {
+                    if j != i {
+                        m = m.max(dd.get(i, j));
+                    }
+                }
+                m
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn random_cloud(n: usize, dim: usize, seed: u64) -> PointCloud {
+        let mut rng = Pcg32::new(seed);
+        let coords: Vec<f64> = (0..n * dim)
+            .map(|i| match i % 11 {
+                0 => -0.0,
+                1 => f64::MIN_POSITIVE / 8.0,
+                2 => -f64::MIN_POSITIVE / 2.0,
+                _ => rng.next_f64() * 2.0 - 1.0,
+            })
+            .collect();
+        PointCloud::new(dim, coords)
+    }
+
+    #[test]
+    fn mode_parse_roundtrip() {
+        for m in [SimdMode::Auto, SimdMode::Scalar, SimdMode::Avx2, SimdMode::Neon] {
+            assert_eq!(SimdMode::parse(m.as_str()), Some(m));
+        }
+        assert_eq!(SimdMode::parse("avx512"), None);
+        assert_eq!(SimdMode::default(), SimdMode::Auto);
+    }
+
+    #[test]
+    fn forced_modes_degrade_to_scalar_when_unavailable() {
+        assert_eq!(select(SimdMode::Scalar), Kernel::Scalar);
+        // The cross-arch request must never panic and must resolve to
+        // *something* runnable.
+        #[cfg(target_arch = "x86_64")]
+        assert_eq!(select(SimdMode::Neon), Kernel::Scalar);
+        #[cfg(target_arch = "aarch64")]
+        {
+            assert_eq!(select(SimdMode::Avx2), Kernel::Scalar);
+            assert_eq!(select(SimdMode::Auto), Kernel::Neon);
+        }
+        let _ = select(SimdMode::Auto);
+    }
+
+    #[test]
+    fn vector_sums_are_bit_identical_to_scalar() {
+        let kernel = select(SimdMode::Auto);
+        // Cover every lane-remainder class for both 4-lane and 2-lane
+        // kernels, plus a block-boundary-ish width.
+        for n in 8..=16usize {
+            for &dim in &[1usize, 2, 3, 8, 20] {
+                let pc = random_cloud(n, dim, (n * 31 + dim) as u64);
+                let soa = SoaPoints::from_cloud(&pc);
+                let mut got = vec![0.0f64; n];
+                let mut want = vec![0.0f64; n];
+                for i in 0..n.saturating_sub(1) {
+                    let m = n - i - 1;
+                    sq_row(kernel, &soa, i, i + 1, &mut got[..m]);
+                    sq_row_scalar(&soa, i, i + 1, &mut want[..m]);
+                    for t in 0..m {
+                        assert_eq!(
+                            got[t].to_bits(),
+                            want[t].to_bits(),
+                            "sum bits differ at n={n} dim={dim} i={i} t={t}"
+                        );
+                        assert_eq!(
+                            got[t].sqrt().to_bits(),
+                            pc.dist(i, i + 1 + t).to_bits(),
+                            "rooted bits differ from PointCloud::dist"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prefilter_never_rejects_a_kept_pair() {
+        let taus = [
+            0.0,
+            -0.0,
+            1.0e-170,
+            f64::MIN_POSITIVE,
+            0.3,
+            1.0,
+            1e155,
+            f64::INFINITY,
+        ];
+        let mut rng = Pcg32::new(7);
+        for &tau in &taus {
+            let bound = sq_prefilter_bound(tau);
+            for _ in 0..2000 {
+                let s = match rng.next_u32() % 4 {
+                    0 => tau * tau,
+                    1 => (tau * tau) * (1.0 + f64::EPSILON),
+                    2 => rng.next_f64() * 2.0,
+                    _ => rng.next_f64() * f64::MIN_POSITIVE,
+                };
+                if s.sqrt() <= tau {
+                    assert!(
+                        s <= bound,
+                        "kept pair rejected by prefilter: tau={tau:e} s={s:e}"
+                    );
+                }
+            }
+        }
+        // -inf: bound passes everything, the exact check rejects all.
+        assert_eq!(sq_prefilter_bound(f64::NEG_INFINITY), f64::INFINITY);
+    }
+}

@@ -78,6 +78,88 @@ impl PointCloud {
     }
 }
 
+/// Cache-aligned structure-of-arrays copy of a [`PointCloud`].
+///
+/// The row-band distance kernel streams one coordinate axis at a time
+/// across many candidate points, so the hot loads are `coords[k][j..j+L]`
+/// — contiguous in an SoA layout, strided `dim` apart in the row-major
+/// [`PointCloud`]. Each axis row starts on a 64-byte boundary (one cache
+/// line / one AVX2 lane group): the backing buffer is over-allocated and
+/// the base offset chosen so `coord_row(0)` is 64-byte aligned, and the
+/// stride is a multiple of 8 doubles so every subsequent row stays
+/// aligned. Padding slots past `n` exist only for alignment and are never
+/// read — the kernels bound every loop by `n` and handle remainders in
+/// scalar code, so padding can stay uninitialised-by-convention zeros.
+///
+/// Values are bit-for-bit copies of the cloud's coordinates (including
+/// `-0.0` and subnormals); the SIMD kernels that consume this layout are
+/// pinned to produce the same bits as [`PointCloud::dist`].
+#[derive(Clone, Debug)]
+pub struct SoaPoints {
+    n: usize,
+    dim: usize,
+    stride: usize,
+    base: usize,
+    buf: Vec<f64>,
+}
+
+impl SoaPoints {
+    pub fn from_cloud(pc: &PointCloud) -> Self {
+        let n = pc.n();
+        let dim = pc.dim;
+        // Stride in elements: n rounded up to a multiple of 8 (64 bytes).
+        let stride = n.div_ceil(8).max(1) * 8;
+        // Over-allocate by one cache line so a 64-byte-aligned base offset
+        // always exists inside the buffer (Vec<f64> only guarantees 8).
+        let mut buf = vec![0.0f64; stride * dim + 8];
+        let misalign = (buf.as_ptr() as usize) % 64;
+        let base = ((64 - misalign) % 64) / 8;
+        for k in 0..dim {
+            let row = base + k * stride;
+            for j in 0..n {
+                buf[row + j] = pc.coords[j * dim + k];
+            }
+        }
+        Self {
+            n,
+            dim,
+            stride,
+            base,
+            buf,
+        }
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// All coordinates along axis `k`, padded to `stride` elements; the
+    /// first `n` entries are live, the slice starts 64-byte aligned.
+    #[inline]
+    pub fn coord_row(&self, k: usize) -> &[f64] {
+        debug_assert!(k < self.dim);
+        let start = self.base + k * self.stride;
+        &self.buf[start..start + self.stride]
+    }
+
+    /// Coordinate `k` of point `j` (bit-equal to the source cloud's).
+    #[inline]
+    pub fn coord(&self, j: usize, k: usize) -> f64 {
+        debug_assert!(j < self.n);
+        self.buf[self.base + k * self.stride + j]
+    }
+
+    pub fn memory_bytes(&self) -> usize {
+        self.buf.capacity() * std::mem::size_of::<f64>()
+    }
+}
+
 /// Dense symmetric distance matrix stored as the strict lower triangle,
 /// packed row-wise: entry (i, j) with i > j at index `i*(i-1)/2 + j`.
 #[derive(Clone, Debug)]
@@ -269,6 +351,39 @@ mod tests {
             entries: vec![(0, 1, f64::INFINITY)],
         });
         assert!(inf.validate().is_ok());
+    }
+
+    #[test]
+    fn soa_rows_are_aligned_bit_copies() {
+        for &(n, dim) in &[(1usize, 2usize), (5, 3), (8, 2), (13, 20), (64, 8)] {
+            let coords: Vec<f64> = (0..n * dim)
+                .map(|i| {
+                    // Mix signs, a negative zero, and a subnormal into the grid.
+                    match i % 5 {
+                        0 => -0.0,
+                        1 => f64::MIN_POSITIVE / 4.0,
+                        _ => (i as f64) * 0.37 - 3.0,
+                    }
+                })
+                .collect();
+            let pc = PointCloud::new(dim, coords);
+            let soa = SoaPoints::from_cloud(&pc);
+            assert_eq!(soa.n(), n);
+            assert_eq!(soa.dim(), dim);
+            for k in 0..dim {
+                let row = soa.coord_row(k);
+                assert_eq!(row.as_ptr() as usize % 64, 0, "axis {k} misaligned");
+                assert!(row.len() >= n && row.len() % 8 == 0);
+                for j in 0..n {
+                    assert_eq!(
+                        row[j].to_bits(),
+                        pc.coords[j * dim + k].to_bits(),
+                        "coord ({j}, {k}) not a bit copy"
+                    );
+                    assert_eq!(soa.coord(j, k).to_bits(), row[j].to_bits());
+                }
+            }
+        }
     }
 
     #[test]

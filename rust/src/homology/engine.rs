@@ -46,7 +46,9 @@ use crate::coboundary::edges::{edge_columns_in_range, edge_columns_in_range_shor
 use crate::coboundary::triangles::{
     apparent_cofacet, triangles_with_diameter, triangles_with_diameter_in_range,
 };
-use crate::filtration::{EdgeFiltration, FiltrationStats, FrontendOptions, Key, Neighborhoods};
+use crate::filtration::{
+    EdgeFiltration, FiltrationStats, FrontendOptions, Key, Neighborhoods, SimdMode,
+};
 use crate::geometry::MetricData;
 use crate::reduction::pool::ThreadPool;
 use crate::reduction::{
@@ -114,6 +116,14 @@ pub struct EngineOptions {
     /// (`FiltrationStats::edges_pruned` reports by how much). Off =
     /// exact full-filtration fallback.
     pub enclosing: bool,
+    /// Distance microkernel for the dense front-end tiles: `Auto`
+    /// (default) probes the CPU at run time and picks the widest
+    /// available vector path (AVX2 on x86_64, NEON on aarch64),
+    /// `Scalar` forces the portable loop, and a forced vector mode
+    /// degrades to scalar when the feature is absent. Emitted edge
+    /// bits are identical for every mode
+    /// (`FiltrationStats::dist_kernel` reports which one ran).
+    pub simd: SimdMode,
     /// DoryNS: O(n²) dense edge-order lookup instead of binary search.
     pub dense_lookup: bool,
     pub algorithm: Algorithm,
@@ -136,6 +146,7 @@ impl Default for EngineOptions {
             shortcut: true,
             f1_tile: 0,
             enclosing: true,
+            simd: SimdMode::Auto,
             dense_lookup: false,
             algorithm: Algorithm::FastColumn,
         }
@@ -334,6 +345,7 @@ impl Engine {
         FrontendOptions {
             tile: self.opts.f1_tile,
             enclosing: self.opts.enclosing,
+            simd: self.opts.simd,
         }
     }
 

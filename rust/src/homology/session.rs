@@ -346,6 +346,44 @@ impl Session {
         Ok((h, sstats))
     }
 
+    /// Stream-ingest an in-memory dense dataset (point cloud or
+    /// distance table) at threshold `tau`, staging at most
+    /// `opts.budget_bytes` (+ one tile wave) of transient key memory:
+    /// row-band tiles bit-pack `u128` keys as they are produced,
+    /// pool-sorted runs spill to disk past the budget, and the k-way
+    /// merge reproduces the exact in-memory edge order (keys are
+    /// strictly unique), so the handle — and every diagram served from
+    /// it — is bit-identical to `ingest(data, tau)` for every tile
+    /// size and budget. Sparse inputs are refused
+    /// ([`DoryError::InvalidInput`]); they have their own streaming
+    /// entry ([`Session::ingest_sparse_file`]).
+    pub fn ingest_streamed(
+        &self,
+        data: &MetricData,
+        tau: f64,
+        opts: &StreamOptions,
+    ) -> Result<(FiltrationHandle, StreamStats), DoryError> {
+        if tau.is_nan() {
+            return Err(DoryError::Request("ingest tau is NaN".into()));
+        }
+        data.validate().map_err(DoryError::InvalidInput)?;
+        let mut fstats = FiltrationStats::default();
+        let mut timings = PhaseTimer::new();
+        timings.start("F1");
+        let (f, sstats) = crate::io::stream::stream_dense_build(
+            data,
+            tau,
+            opts,
+            self.engine.pool(),
+            &self.engine.frontend_options(),
+            &mut fstats,
+        )?;
+        timings.stop();
+        let n = f.n as usize;
+        let h = self.finish_ingest(n, f, timings, fstats, "dense-stream", tau, false)?;
+        Ok((h, sstats))
+    }
+
     /// Ingest a filtration someone else built — the coordinator's
     /// PJRT/Pallas kernel path, or a caller migrating from
     /// `compute_ph_from_filtration`. `timings`/`fstats` carry whatever

@@ -1,5 +1,11 @@
-//! Streaming sparse-COO ingestion: chunked parse, budgeted spill store,
-//! k-way merge.
+//! Streaming ingestion: chunked parse / tiled distance kernel, budgeted
+//! spill store, k-way merge.
+//!
+//! Two producers feed the same spill machinery: the sparse-COO file
+//! reader ([`stream_sparse_file`]) and the dense row-band front-end
+//! ([`stream_dense_build`]), which routes the filtration tiles of an
+//! in-memory point cloud or distance matrix straight into the
+//! [`SpillStore`] so the full edge set never materializes in memory.
 //!
 //! The in-memory reader ([`super::read_sparse_coo`]) materializes every
 //! entry before the front-end repacks and sorts them — three full-size
@@ -36,10 +42,16 @@ use std::fs::File;
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::error::DoryError;
-use crate::filtration::{edge_key, sort_run_u128, unpack_edge_key, EdgeFiltration, FiltrationStats};
+use crate::filtration::simd::{sq_prefilter_bound, Dist};
+use crate::filtration::{
+    edge_key, effective_tile, enclosing_radius_rowmax, sort_run_u128, unpack_edge_key,
+    EdgeFiltration, FiltrationStats, FrontendOptions,
+};
+use crate::geometry::MetricData;
 use crate::reduction::pool::ThreadPool;
 
 use super::{duplicate_error, invalid, open, parse_coo_line, self_loop_error};
@@ -520,6 +532,161 @@ pub fn stream_sparse_file(
     Ok((f, st))
 }
 
+/// Build F1 for an in-memory dense input (point cloud or distance
+/// matrix) with the row-band tiles streaming straight into a budgeted
+/// [`SpillStore`], so resident staging is `O(budget + tile scratch)`
+/// instead of the full kept edge set. Tiles are computed in waves of
+/// ~`threads` on the pool (the same SIMD kernels as the in-memory
+/// build), drained into the store as produced, and the k-way merge
+/// unpacks straight into the final filtration arrays. Edge keys are
+/// strictly unique, so the merged sequence is the globally sorted
+/// sequence for every tile size and budget — the streamed filtration is
+/// **byte-identical** to [`EdgeFiltration::build_pooled`] on the same
+/// input, including the enclosing-radius truncation, which runs as a
+/// standalone O(n)-memory row-max sweep before the thresholded pass.
+pub fn stream_dense_build(
+    data: &MetricData,
+    tau_max: f64,
+    opts: &StreamOptions,
+    pool: Option<&ThreadPool>,
+    fe: &FrontendOptions,
+    fstats: &mut FiltrationStats,
+) -> Result<(EdgeFiltration, StreamStats)> {
+    if matches!(data, MetricData::Sparse(_)) {
+        return Err(DoryError::InvalidInput(
+            "dense streaming takes a point cloud or distance matrix; sparse files stream \
+             through stream_sparse_file"
+                .into(),
+        ));
+    }
+    let n = data.n();
+    if n >= u32::MAX as usize {
+        return Err(DoryError::InvalidInput(format!(
+            "vertex count {n} exceeds u32 range"
+        )));
+    }
+    fstats.f1_builds += 1;
+    let mut st = StreamStats::default();
+    let t0 = Instant::now();
+    // The enclosing radius must be known before tiles can be
+    // thresholded into the store (the in-memory build fuses the sweep
+    // with key emission, but provisional keys above r_enc would inflate
+    // the spill volume here), so it runs as its own O(n)-memory pass.
+    let r_enc = if fe.enclosing && tau_max == f64::INFINITY && n >= 2 {
+        enclosing_radius_rowmax(data, pool, fe, fstats)
+    } else {
+        f64::INFINITY
+    };
+    fstats.enclosing_radius = r_enc;
+    let tau_eff = if r_enc.is_finite() { r_enc } else { tau_max };
+
+    let dist = Dist::new(data, fe.simd);
+    fstats.dist_kernel = dist.kernel_name();
+    let bound = sq_prefilter_bound(tau_eff);
+    let dir = opts.spill_dir.clone().unwrap_or_else(std::env::temp_dir);
+    let mut store = SpillStore::<u128>::new(opts.budget_bytes, dir, "dense");
+
+    let threads = pool.map_or(1, |p| p.threads());
+    let tile = effective_tile(n, fe.tile, threads);
+    let n_tiles = if n == 0 { 0 } else { n.div_ceil(tile) };
+    let scratch_bytes = n * std::mem::size_of::<f64>();
+    let mut wave_peak = 0usize;
+    match pool {
+        Some(pool) if pool.threads() > 1 && n >= 2 => {
+            let wave = pool.threads();
+            let mut w0 = 0usize;
+            while w0 < n_tiles {
+                let w1 = (w0 + wave).min(n_tiles);
+                let slots: Vec<Mutex<Vec<u128>>> =
+                    (w0..w1).map(|_| Mutex::new(Vec::new())).collect();
+                {
+                    let (dist, slots) = (&dist, &slots);
+                    pool.run_stealing(w1 - w0, 1, |_tid, range| {
+                        let mut scratch = vec![0f64; n];
+                        for s in range {
+                            let t = w0 + s;
+                            let mut buf = Vec::new();
+                            for i in t * tile..((t + 1) * tile).min(n) {
+                                dist.fill_row(i, n, tau_eff, bound, &mut buf, &mut scratch);
+                            }
+                            *slots[s].lock().unwrap() = buf;
+                        }
+                    });
+                }
+                let mut wave_bytes = threads * scratch_bytes;
+                for slot in slots {
+                    let buf = slot.into_inner().unwrap();
+                    wave_bytes += buf.capacity() * std::mem::size_of::<u128>();
+                    for k in buf {
+                        store.push(k, Some(pool))?;
+                    }
+                }
+                wave_peak = wave_peak.max(wave_bytes);
+                w0 = w1;
+            }
+            fstats.tiles += n_tiles as u64;
+        }
+        _ => {
+            let mut scratch = vec![0f64; n];
+            let mut buf: Vec<u128> = Vec::new();
+            for t in 0..n_tiles {
+                buf.clear();
+                for i in t * tile..((t + 1) * tile).min(n) {
+                    dist.fill_row(i, n, tau_eff, bound, &mut buf, &mut scratch);
+                }
+                wave_peak = wave_peak
+                    .max(buf.capacity() * std::mem::size_of::<u128>() + scratch_bytes);
+                for &k in &buf {
+                    store.push(k, pool)?;
+                }
+            }
+        }
+    }
+    st.chunks = n_tiles as u64;
+    if n >= 2 {
+        st.entries = (n * (n - 1) / 2) as u64;
+    }
+    fstats.dist_ns += t0.elapsed().as_nanos() as u64;
+
+    // Merge the (unique) keys straight into the final filtration
+    // arrays — the full sorted key vector is never materialized.
+    let t_sort = Instant::now();
+    let mut totals = RunTotals::default();
+    let mut edges = Vec::new();
+    let mut values = Vec::new();
+    {
+        let mut it = store.finish(pool, &mut totals)?;
+        while let Some(k) = it.next()? {
+            let (d, a, b) = unpack_edge_key(k);
+            edges.push((a, b));
+            values.push(d);
+        }
+    }
+    fstats.sort_ns += t_sort.elapsed().as_nanos() as u64;
+    st.kept = edges.len() as u64;
+    st.spilled_runs = totals.spilled_runs;
+    st.spilled_bytes = totals.spilled_bytes;
+    st.staging_peak_bytes = totals.peak_buf_bytes + wave_peak;
+    fstats.edges_considered += st.entries;
+    fstats.edges_kept += st.kept;
+    if r_enc.is_finite() {
+        fstats.edges_pruned += st.entries - st.kept;
+    }
+    fstats.dense_spilled_runs += totals.spilled_runs;
+    fstats.dense_spilled_bytes += totals.spilled_bytes;
+    fstats.dense_staging_peak_bytes = fstats
+        .dense_staging_peak_bytes
+        .max(st.staging_peak_bytes as u64);
+
+    let f = EdgeFiltration {
+        n: n as u32,
+        edges,
+        values,
+        tau_max: tau_eff,
+    };
+    Ok((f, st))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -643,6 +810,80 @@ mod tests {
         let e = stream_sparse_file(&p, f64::INFINITY, &StreamOptions::default(), None, &mut fs)
             .unwrap_err();
         assert!(e.to_string().contains("expected `i j d`"), "{e}");
+    }
+
+    #[test]
+    fn dense_streaming_is_bit_identical_across_budgets_and_tiles() {
+        use crate::util::rng::Pcg32;
+        let mut rng = Pcg32::new(0xDE5E);
+        let pc = crate::geometry::PointCloud::new(
+            3,
+            (0..60 * 3).map(|_| rng.next_f64()).collect(),
+        );
+        let md = MetricData::Points(pc);
+        let pool = ThreadPool::new(4);
+        for tau in [0.6, f64::INFINITY] {
+            let mut want_stats = FiltrationStats::default();
+            let want = EdgeFiltration::build_pooled(
+                &md,
+                tau,
+                Some(&pool),
+                &FrontendOptions::default(),
+                &mut want_stats,
+            );
+            for budget in [0usize, 2048, 1 << 20] {
+                for tile in [0usize, 1, 7] {
+                    let opts = StreamOptions {
+                        budget_bytes: budget,
+                        spill_dir: Some(tmp("")),
+                        ..Default::default()
+                    };
+                    let fe = FrontendOptions {
+                        tile,
+                        ..Default::default()
+                    };
+                    let mut fs = FiltrationStats::default();
+                    for p in [None, Some(&pool)] {
+                        let (f, st) =
+                            stream_dense_build(&md, tau, &opts, p, &fe, &mut fs).unwrap();
+                        assert_eq!(f.edges, want.edges, "tau={tau} budget={budget} tile={tile}");
+                        let wb: Vec<u64> = want.values.iter().map(|v| v.to_bits()).collect();
+                        let fb: Vec<u64> = f.values.iter().map(|v| v.to_bits()).collect();
+                        assert_eq!(wb, fb);
+                        assert_eq!(f.tau_max.to_bits(), want.tau_max.to_bits());
+                        assert_eq!(
+                            fs.enclosing_radius.to_bits(),
+                            want_stats.enclosing_radius.to_bits()
+                        );
+                        if budget == 2048 {
+                            assert!(st.spilled_runs > 0, "2 KiB budget must spill");
+                            assert!(fs.dense_spilled_runs > 0);
+                        }
+                        assert!(st.kept as usize == f.n_edges());
+                        assert!(!fs.dist_kernel.is_empty());
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dense_streaming_rejects_sparse_inputs() {
+        let sd = MetricData::Sparse(crate::geometry::SparseDistances {
+            n: 3,
+            entries: vec![(0, 1, 1.0)],
+        });
+        let mut fs = FiltrationStats::default();
+        let e = stream_dense_build(
+            &sd,
+            f64::INFINITY,
+            &StreamOptions::default(),
+            None,
+            &FrontendOptions::default(),
+            &mut fs,
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("dense streaming"), "{e}");
     }
 
     #[test]

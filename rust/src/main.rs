@@ -87,12 +87,19 @@ run flags:
   --no-shortcut             disable the enumeration-time apparent-pair
                             shortcut (exact fallback; on by default)
   --f1-tile <int>           point rows per front-end distance tile (0 = auto)
+  --simd <mode>             distance microkernel: auto|scalar|avx2|neon
+                            [auto]; forced vector modes fall back to
+                            scalar when the CPU lacks the feature, and
+                            every mode emits bit-identical edges
   --stream-chunk <int>      stream-ingest --sparse files, parsing this
                             many lines per chunk (0 = off; default
                             65536-line chunks when only the budget is set)
   --edge-budget-mb <int>    spill sorted edge-key runs to disk past this
                             staging budget and k-way merge them back
-                            (0 = off; implies streaming for --sparse)
+                            (0 = off; implies streaming for --sparse and
+                            routes dense point clouds / distance tables
+                            through the spill store, edge_source
+                            dense-stream, bit-identical output)
   --knn-k <int>             sparse net-graph front-end for point clouds:
                             keep the k nearest incident edges per vertex
                             (0 = off/exact; diagrams 2eps-stable in the
@@ -189,6 +196,7 @@ fn cmd_run(args: &[String]) -> Result<()> {
             "--enum-grain" => cfg.enum_grain = val()?.parse()?,
             "--no-shortcut" => cfg.shortcut = false,
             "--f1-tile" => cfg.f1_tile = val()?.parse()?,
+            "--simd" => cfg.simd = val()?.clone(),
             "--stream-chunk" => cfg.stream_chunk = val()?.parse()?,
             "--edge-budget-mb" => cfg.edge_budget_mb = val()?.parse()?,
             "--knn-k" => cfg.knn_k = val()?.parse()?,
@@ -264,9 +272,24 @@ fn cmd_run(args: &[String]) -> Result<()> {
         } else {
             String::new()
         };
+        let kernel = if fs.dist_kernel.is_empty() {
+            String::new()
+        } else {
+            format!(" [{}]", fs.dist_kernel)
+        };
+        let spill = if fs.dense_spilled_runs > 0 {
+            format!(
+                " | spilled {} runs ({})",
+                fs.dense_spilled_runs,
+                memtrack::fmt_bytes(fs.dense_spilled_bytes as usize)
+            )
+        } else {
+            String::new()
+        };
         println!(
-            "front-end: dist {:.3}s ({} tiles) | sort {:.3}s ({} chunks) | nbhd {:.3}s ({} chunks) | {} kept of {} considered{}",
+            "front-end: dist {:.3}s{} ({} tiles) | sort {:.3}s ({} chunks) | nbhd {:.3}s ({} chunks) | {} kept of {} considered{}{}",
             fs.dist_ns as f64 * 1e-9,
+            kernel,
             fs.tiles,
             fs.sort_ns as f64 * 1e-9,
             fs.sort_chunks,
@@ -275,6 +298,7 @@ fn cmd_run(args: &[String]) -> Result<()> {
             fs.edges_kept,
             fs.edges_considered,
             pruned,
+            spill,
         );
     }
     let multi = report.responses.len() > 1;

@@ -93,12 +93,24 @@ impl TenantCounters {
     }
 }
 
+/// Front-end facts accumulated across this server's (non-cached)
+/// ingests, exposed by the `stats` method: which distance kernel the
+/// last build selected and the dense-streaming spill totals.
+#[derive(Default)]
+struct FrontendAgg {
+    dist_kernel: &'static str,
+    dense_spilled_runs: u64,
+    dense_spilled_bytes: u64,
+    dense_staging_peak_bytes: u64,
+}
+
 /// The serving state: one shared [`Session`] (and worker pool), the
 /// handle cache, and per-tenant counters. All methods take `&self`.
 pub struct Server {
     session: Session,
     cache: Mutex<HandleCache>,
     tenants: Mutex<BTreeMap<String, TenantCounters>>,
+    frontend: Mutex<FrontendAgg>,
     data_root: Option<std::path::PathBuf>,
 }
 
@@ -110,6 +122,7 @@ impl Server {
             session: Session::new(opts),
             cache: Mutex::new(HandleCache::new(cache_budget_bytes)),
             tenants: Mutex::new(BTreeMap::new()),
+            frontend: Mutex::new(FrontendAgg::default()),
             data_root: None,
         }
     }
@@ -262,6 +275,17 @@ impl Server {
             return Ok(ingest_ok(&key, &h, true, &[]));
         }
         let handle = Arc::new(self.build_handle(dataset, tau)?);
+        {
+            let fs = handle.stats();
+            let mut agg = self.frontend.lock().unwrap();
+            if !fs.dist_kernel.is_empty() {
+                agg.dist_kernel = fs.dist_kernel;
+            }
+            agg.dense_spilled_runs += fs.dense_spilled_runs;
+            agg.dense_spilled_bytes += fs.dense_spilled_bytes;
+            agg.dense_staging_peak_bytes =
+                agg.dense_staging_peak_bytes.max(fs.dense_staging_peak_bytes);
+        }
         let evicted = self.cache.lock().unwrap().insert(&key, Arc::clone(&handle));
         self.bump_tenant(tenant, |t| t.ingests += 1);
         Ok(ingest_ok(&key, &handle, false, &evicted))
@@ -323,6 +347,27 @@ impl Server {
                 return Err(DoryError::Request("'points' must be non-empty".into()));
             }
             let data = MetricData::Points(PointCloud::new(dim, coords));
+            // An `edge_budget_mb` knob on a points dataset routes the
+            // dense front-end tiles through the spill store (bounded
+            // staging, bit-identical output) instead of the in-memory
+            // build.
+            if let Some(v) = dataset.get("edge_budget_mb") {
+                let mb = v.as_usize().ok_or_else(|| {
+                    DoryError::Request("'edge_budget_mb' must be a non-negative integer".into())
+                })?;
+                if mb > 0 {
+                    let budget_bytes = mb.checked_mul(1 << 20).ok_or_else(|| {
+                        DoryError::Request(format!(
+                            "'edge_budget_mb' {mb} overflows the byte budget"
+                        ))
+                    })?;
+                    let opts = crate::io::stream::StreamOptions {
+                        budget_bytes,
+                        ..Default::default()
+                    };
+                    return self.session.ingest_streamed(&data, tau, &opts).map(|(h, _)| h);
+                }
+            }
             return self.session.ingest(&data, tau);
         }
         if let Some(rows) = dataset.get("edges") {
@@ -511,9 +556,17 @@ impl Server {
             .field("evictions", cs.evictions)
             .field("bytes", cs.bytes)
             .field("peak_bytes", cs.peak_bytes);
+        let fa = self.frontend.lock().unwrap();
+        let frontend = Json::obj()
+            .field("dist_kernel", fa.dist_kernel)
+            .field("dense_spilled_runs", fa.dense_spilled_runs)
+            .field("dense_spilled_bytes", fa.dense_spilled_bytes)
+            .field("dense_staging_peak_bytes", fa.dense_staging_peak_bytes);
+        drop(fa);
         Json::obj()
             .field("tenants", tenants)
             .field("cache", cache)
+            .field("frontend", frontend)
             .field("session", self.session.stats().to_json())
             .field("max_rss_bytes", memtrack::max_rss_bytes())
     }
@@ -582,6 +635,9 @@ fn ingest_ok(key: &str, h: &FiltrationHandle, cached: bool, evicted: &[String]) 
         .field("n_edges", h.n_edges())
         .field("tau_capacity", h.tau_capacity())
         .field("memory_bytes", h.memory_bytes())
+        .field("edge_source", h.edge_source)
+        .field("dist_kernel", h.stats().dist_kernel)
+        .field("dense_spilled_runs", h.stats().dense_spilled_runs)
         .field("evicted", ev)
 }
 
@@ -920,6 +976,44 @@ mod tests {
         let e = out[0].get("error").unwrap();
         assert_eq!(e.get("kind").unwrap().as_str(), Some("InvalidInput"));
         assert!(e.get("message").unwrap().as_str().unwrap().contains("self-loop"));
+    }
+
+    #[test]
+    fn points_with_budget_stream_through_the_spill_store() {
+        let srv = server();
+        // A unit square at τ=∞: identical topology from the in-memory
+        // and the budgeted dense-stream ingests.
+        let pts = r#"[[0,0],[1,0],[0,1],[1,1],[0.5,0.5],[0.2,0.8]]"#;
+        let lines = format!(
+            concat!(
+                "{{\"id\":1,\"method\":\"ingest\",\"tau\":1e999,\"dataset\":{{\"points\":{p}}}}}\n",
+                "{{\"id\":2,\"method\":\"ingest\",\"tau\":1e999,\"dataset\":{{\"points\":{p},\"edge_budget_mb\":1}}}}\n",
+            ),
+            p = pts
+        );
+        let out = drive(&srv, &lines);
+        let inmem = out[0].get("ok").unwrap();
+        let streamed = out[1].get("ok").unwrap();
+        assert_eq!(inmem.get("edge_source").unwrap().as_str(), Some("native"));
+        assert_eq!(
+            streamed.get("edge_source").unwrap().as_str(),
+            Some("dense-stream")
+        );
+        // Different fingerprints (the knob is part of the dataset JSON),
+        // same edge set.
+        assert_eq!(streamed.get("cached").unwrap().as_bool(), Some(false));
+        assert_eq!(
+            streamed.get("n_edges").unwrap().as_usize(),
+            inmem.get("n_edges").unwrap().as_usize()
+        );
+        let k = streamed.get("dist_kernel").unwrap().as_str().unwrap();
+        assert!(["scalar", "avx2", "neon"].contains(&k), "{k}");
+        // The summary's frontend block reports the selected kernel.
+        let summary = out.last().unwrap().get("summary").unwrap();
+        let fe = summary.get("frontend").unwrap();
+        assert_eq!(fe.get("dist_kernel").unwrap().as_str(), Some(k));
+        assert!(fe.get("dense_spilled_runs").is_some());
+        assert!(fe.get("dense_staging_peak_bytes").is_some());
     }
 
     #[test]

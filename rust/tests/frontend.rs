@@ -83,6 +83,7 @@ fn property_pooled_frontend_byte_identical_over_20_seeds() {
                 let fe = FrontendOptions {
                     tile,
                     enclosing: false,
+                    ..Default::default()
                 };
                 let mut stats = FiltrationStats::default();
                 let pooled =

@@ -1,0 +1,181 @@
+//! Differential verification of the SIMD distance microkernel.
+//!
+//! The kernel contract: every `simd` mode — scalar loop, runtime-probed
+//! auto, forced AVX2/NEON (degrading to scalar when the CPU lacks the
+//! feature) — emits **bit-identical** edge sets and persistence
+//! diagrams (tol 0). The sweep covers every lane-remainder class
+//! (n mod 8 ∈ {0..7} at 2 and 4 lanes), low and high dimensions, and
+//! coordinates mixing ±0.0 and subnormals, where a reassociated or
+//! FMA-contracted sum would diverge in the last ulp.
+
+use dory::filtration::{EdgeFiltration, FiltrationStats, FrontendOptions, SimdMode};
+use dory::geometry::{MetricData, PointCloud};
+use dory::homology::{compute_ph, Engine, EngineOptions};
+use dory::reduction::pool::ThreadPool;
+use dory::util::rng::Pcg32;
+
+/// A point cloud salted with the coordinate values most likely to
+/// expose a non-identical kernel: ±0.0 (sign of zero must not leak into
+/// sums), subnormals (flush-to-zero hardware modes would diverge), and
+/// ordinary values.
+fn tricky_cloud(n: usize, dim: usize, seed: u64) -> MetricData {
+    let mut rng = Pcg32::new(seed);
+    let coords = (0..n * dim)
+        .map(|i| match i % 7 {
+            0 => 0.0,
+            1 => -0.0,
+            2 => 1e-310,
+            3 => -1e-310,
+            _ => rng.uniform(-1.0, 1.0),
+        })
+        .collect();
+    MetricData::Points(PointCloud::new(dim, coords))
+}
+
+fn edge_bits(f: &EdgeFiltration) -> (Vec<(u32, u32)>, Vec<u64>) {
+    (
+        f.edges.clone(),
+        f.values.iter().map(|v| v.to_bits()).collect(),
+    )
+}
+
+/// Edge sets are bit-identical across every mode × lane-remainder class
+/// × dimension × tile plan, at a finite τ and at τ = ∞ with the
+/// enclosing truncation (which exercises the fused row-max path).
+#[test]
+fn simd_sweep_emits_bit_identical_edge_sets() {
+    let pool = ThreadPool::new(4);
+    let modes = [SimdMode::Auto, SimdMode::Avx2, SimdMode::Neon];
+    for dim in [2usize, 3, 8, 20] {
+        for n in 8usize..=16 {
+            let data = tricky_cloud(n, dim, 0x51AD + (dim * 100 + n) as u64);
+            for (tau, enclosing) in [(0.8, false), (f64::INFINITY, true)] {
+                let base_fe = FrontendOptions {
+                    tile: 0,
+                    enclosing,
+                    simd: SimdMode::Scalar,
+                };
+                let mut base_stats = FiltrationStats::default();
+                let base = EdgeFiltration::build_pooled(
+                    &data,
+                    tau,
+                    Some(&pool),
+                    &base_fe,
+                    &mut base_stats,
+                );
+                assert_eq!(base_stats.dist_kernel, "scalar");
+                let (base_edges, base_vals) = edge_bits(&base);
+                for mode in modes {
+                    for tile in [0usize, 1, 3] {
+                        let label = format!(
+                            "dim={dim} n={n} tau={tau} mode={mode:?} tile={tile}"
+                        );
+                        let fe = FrontendOptions {
+                            tile,
+                            enclosing,
+                            simd: mode,
+                        };
+                        let mut stats = FiltrationStats::default();
+                        let f = EdgeFiltration::build_pooled(
+                            &data,
+                            tau,
+                            Some(&pool),
+                            &fe,
+                            &mut stats,
+                        );
+                        let (edges, vals) = edge_bits(&f);
+                        assert_eq!(base_edges, edges, "{label}: edge order");
+                        assert_eq!(base_vals, vals, "{label}: value bits");
+                        assert_eq!(
+                            base.tau_max.to_bits(),
+                            f.tau_max.to_bits(),
+                            "{label}: tau_max"
+                        );
+                        assert_eq!(
+                            base_stats.enclosing_radius.to_bits(),
+                            stats.enclosing_radius.to_bits(),
+                            "{label}: r_enc"
+                        );
+                        assert!(
+                            ["scalar", "avx2", "neon"].contains(&stats.dist_kernel),
+                            "{label}: kernel {:?}",
+                            stats.dist_kernel
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Diagrams are bit-identical (tol 0) across modes, through the full
+/// engine (H0/H1) at every lane-remainder class.
+#[test]
+fn simd_sweep_emits_bit_identical_diagrams() {
+    for dim in [2usize, 3, 8, 20] {
+        for n in 8usize..=16 {
+            let data = tricky_cloud(n, dim, 0xD1A6 + (dim * 100 + n) as u64);
+            let mk = |mode: SimdMode| EngineOptions {
+                max_dim: 1,
+                threads: 2,
+                simd: mode,
+                ..Default::default()
+            };
+            let want = compute_ph(&data, f64::INFINITY, &mk(SimdMode::Scalar)).diagram;
+            for mode in [SimdMode::Auto, SimdMode::Avx2, SimdMode::Neon] {
+                let got = compute_ph(&data, f64::INFINITY, &mk(mode)).diagram;
+                assert!(
+                    got.multiset_eq(&want, 0.0),
+                    "dim={dim} n={n} mode={mode:?}: diagram deviates from scalar"
+                );
+            }
+        }
+    }
+}
+
+/// Runtime feature detection: a forced mode whose vector extension the
+/// build target cannot have degrades to the scalar path and says so in
+/// `FiltrationStats::dist_kernel`; `Scalar` always reports scalar.
+#[test]
+fn forced_unavailable_modes_fall_back_to_scalar() {
+    let data = tricky_cloud(24, 3, 0xFA11);
+    let run = |mode: SimdMode| {
+        let engine = Engine::new(EngineOptions {
+            max_dim: 1,
+            threads: 2,
+            simd: mode,
+            ..Default::default()
+        });
+        let r = engine.compute_metric(&data, f64::INFINITY);
+        (r.stats.filtration.dist_kernel, r.diagram)
+    };
+    let (k_scalar, d_scalar) = run(SimdMode::Scalar);
+    assert_eq!(k_scalar, "scalar");
+    // The foreign architecture's mode can never be live here.
+    #[cfg(target_arch = "x86_64")]
+    let (k_foreign, d_foreign) = run(SimdMode::Neon);
+    #[cfg(target_arch = "aarch64")]
+    let (k_foreign, d_foreign) = run(SimdMode::Avx2);
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    let (k_foreign, d_foreign) = run(SimdMode::Auto);
+    assert_eq!(k_foreign, "scalar");
+    assert!(d_foreign.multiset_eq(&d_scalar, 0.0));
+    // Auto always selects something, and it is always bit-identical.
+    let (k_auto, d_auto) = run(SimdMode::Auto);
+    assert!(["scalar", "avx2", "neon"].contains(&k_auto), "{k_auto}");
+    assert!(d_auto.multiset_eq(&d_scalar, 0.0));
+}
+
+/// The SimdMode knob parses exactly the documented names.
+#[test]
+fn simd_mode_parses_documented_names() {
+    assert_eq!(SimdMode::parse("auto"), Some(SimdMode::Auto));
+    assert_eq!(SimdMode::parse("scalar"), Some(SimdMode::Scalar));
+    assert_eq!(SimdMode::parse("avx2"), Some(SimdMode::Avx2));
+    assert_eq!(SimdMode::parse("neon"), Some(SimdMode::Neon));
+    assert_eq!(SimdMode::parse("sse2"), None);
+    assert_eq!(SimdMode::default(), SimdMode::Auto);
+    for m in [SimdMode::Auto, SimdMode::Scalar, SimdMode::Avx2, SimdMode::Neon] {
+        assert_eq!(SimdMode::parse(m.as_str()), Some(m));
+    }
+}

@@ -142,6 +142,87 @@ fn streamed_session_diagrams_are_bit_identical() {
     }
 }
 
+/// Dense streaming through the session: a budgeted `ingest_streamed`
+/// spills pool-sorted runs, keeps resident staging in
+/// O(budget + wave scratch), and produces diagrams bit-identical to the
+/// unbudgeted in-memory ingest — including the enclosing-radius
+/// truncation, which runs as a standalone row-max sweep on this path.
+#[test]
+fn dense_streamed_session_spills_and_matches_in_memory() {
+    let n = 140usize;
+    let data = dory::datasets::sphere(n, 1.0, 0.05, 0xDE5E);
+    let threads = 2usize;
+    let tile = 4usize;
+    let session = Session::new(EngineOptions {
+        max_dim: 1,
+        threads,
+        f1_tile: tile,
+        ..Default::default()
+    });
+    let h_mem = session.ingest(&data, f64::INFINITY).unwrap();
+    assert_eq!(h_mem.edge_source, "native");
+    let want = diagram_bits(
+        &session
+            .query(&h_mem, &req(f64::INFINITY, 1))
+            .unwrap()
+            .result
+            .diagram,
+    );
+    let r_enc_mem = h_mem.stats().enclosing_radius;
+    assert!(r_enc_mem.is_finite(), "sphere must truncate at r_enc");
+
+    for budget in [0usize, 4096] {
+        let opts = StreamOptions {
+            chunk_lines: 0,
+            budget_bytes: budget,
+            spill_dir: None,
+        };
+        let (h, st) = session
+            .ingest_streamed(&data, f64::INFINITY, &opts)
+            .unwrap();
+        assert_eq!(h.edge_source, "dense-stream");
+        assert_eq!(h.n_edges(), h_mem.n_edges(), "budget {budget}");
+        let fs = h.stats();
+        assert_eq!(
+            fs.enclosing_radius.to_bits(),
+            r_enc_mem.to_bits(),
+            "budget {budget}: r_enc"
+        );
+        assert!(
+            ["scalar", "avx2", "neon"].contains(&fs.dist_kernel),
+            "budget {budget}: kernel {:?}",
+            fs.dist_kernel
+        );
+        let got = diagram_bits(&session.query(&h, &req(f64::INFINITY, 1)).unwrap().result.diagram);
+        assert_eq!(got, want, "budget {budget}: diagram deviates");
+        if budget == 0 {
+            assert_eq!(st.spilled_runs, 0, "unbounded budget must not spill");
+        } else {
+            // ~10k kept keys × 16 B against a 4 KiB budget must spill,
+            // and staging must track budget + per-wave scratch (threads
+            // row-scratch vectors + one wave of tile key buffers, with
+            // 2x capacity slack), not the kept edge set.
+            assert!(st.spilled_runs > 0, "4 KiB budget did not spill");
+            assert!(st.spilled_bytes > 0);
+            assert_eq!(fs.dense_spilled_runs, st.spilled_runs);
+            assert_eq!(fs.dense_spilled_bytes, st.spilled_bytes);
+            let wave_scratch =
+                threads * n * 8 + 2 * threads * tile * n * std::mem::size_of::<u128>();
+            assert!(
+                st.staging_peak_bytes <= budget + wave_scratch + 4096,
+                "staging {} exceeds budget {budget} + wave scratch {wave_scratch}",
+                st.staging_peak_bytes
+            );
+            let full_keys = h_mem.n_edges() * std::mem::size_of::<u128>();
+            assert!(
+                st.staging_peak_bytes < full_keys,
+                "staging {} not below full key set {full_keys}",
+                st.staging_peak_bytes
+            );
+        }
+    }
+}
+
 #[test]
 fn out_of_core_duplicate_detection_survives_spilling() {
     // The duplicate pair sits ~200 lines (many tiny runs) away from its
