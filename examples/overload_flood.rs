@@ -1,0 +1,146 @@
+//! Overload-shedding smoke: flood one tenant, watch it shed typed.
+//!
+//!     cargo run --release --example overload_flood
+//!
+//! The stdio front of `dory serve` answers one line at a time, so a
+//! stdin transcript can never overload it — admission control exists
+//! for embedders driving [`dory::serve::Server::handle_line`] from many
+//! threads at once (the `&self` concurrent-serving model). This smoke
+//! is that embedder: a server with a per-tenant quota of 1 (and a
+//! global cap wide enough that the quota is the binding constraint)
+//! takes a barrier-synchronized flood of 160 queries from one tenant
+//! while a second tenant keeps issuing single queries. It exits
+//! nonzero unless
+//!
+//! * every refused request carried a typed `Overloaded` wire error
+//!   (never a panic, a hang, or a mis-kinded error),
+//! * the flooding tenant still got real answers (shedding bounds
+//!   concurrency, it does not blocklist),
+//! * the calm tenant completed every query — one tenant's flood must
+//!   not starve another inside the shared admission gate, and
+//! * the summary trailer's `resilience` block accounts for every shed
+//!   (plus the retry/degradation counters a fleet scraper would watch).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Barrier;
+
+use dory::homology::EngineOptions;
+use dory::serve::Server;
+use dory::util::json::Json;
+
+const FLOOD_THREADS: usize = 8;
+const QUERIES_PER_THREAD: usize = 20;
+const CALM_QUERIES: usize = 10;
+
+fn main() {
+    let srv = Server::new(
+        EngineOptions {
+            max_dim: 1,
+            threads: 4,
+            ..Default::default()
+        },
+        64 << 20,
+    )
+    // Per-tenant quota of 1 is what the flood races. The global cap
+    // stays above flood-threads + calm so a transient global slot held
+    // by a flood thread (taken before its quota refusal releases it)
+    // can never shed the calm tenant — tenant isolation is the claim
+    // under test, and it must hold deterministically.
+    .with_overload(FLOOD_THREADS + 2, 1);
+
+    // One shared ingest both tenants query (cache hits are un-gated, so
+    // the flood below exercises the query path, not the build path).
+    let (ingest, _) = srv.handle_line(
+        r#"{"id":0,"tenant":"flood","method":"ingest","dataset":{"kind":"circle","n":64,"seed":7}}"#,
+    );
+    let key = ingest
+        .get("ok")
+        .and_then(|ok| ok.get("handle"))
+        .and_then(|h| h.as_str())
+        .expect("ingest must succeed")
+        .to_string();
+
+    let shed = AtomicU64::new(0);
+    let served = AtomicU64::new(0);
+    let calm_ok = AtomicU64::new(0);
+    let barrier = Barrier::new(FLOOD_THREADS + 1);
+    std::thread::scope(|scope| {
+        for t in 0..FLOOD_THREADS {
+            let (srv, key, barrier, shed, served) = (&srv, &key, &barrier, &shed, &served);
+            scope.spawn(move || {
+                barrier.wait();
+                for q in 0..QUERIES_PER_THREAD {
+                    let line = format!(
+                        "{{\"id\":{},\"tenant\":\"flood\",\"method\":\"query\",\
+                         \"handle\":\"{key}\",\"tau\":0.4,\"max_dim\":1}}",
+                        1 + t * QUERIES_PER_THREAD + q
+                    );
+                    let (resp, _) = srv.handle_line(&line);
+                    if resp.get("ok").is_some() {
+                        served.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        let kind = resp
+                            .get("error")
+                            .and_then(|e| e.get("kind"))
+                            .and_then(|k| k.as_str())
+                            .unwrap_or("<missing>")
+                            .to_string();
+                        assert_eq!(
+                            kind,
+                            "Overloaded",
+                            "a refused flood query must shed typed, got: {}",
+                            resp.render()
+                        );
+                        shed.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            });
+        }
+        // The calm tenant runs concurrently with the flood: its quota
+        // slot is its own, so every one of its queries must succeed.
+        let (srv, key, barrier, calm_ok) = (&srv, &key, &barrier, &calm_ok);
+        scope.spawn(move || {
+            barrier.wait();
+            for q in 0..CALM_QUERIES {
+                let line = format!(
+                    "{{\"id\":{},\"tenant\":\"calm\",\"method\":\"query\",\
+                     \"handle\":\"{key}\",\"tau\":0.4,\"max_dim\":1}}",
+                    9000 + q
+                );
+                let (resp, _) = srv.handle_line(&line);
+                assert!(
+                    resp.get("ok").is_some(),
+                    "the calm tenant must never be starved by the flood: {}",
+                    resp.render()
+                );
+                calm_ok.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+    });
+
+    let shed = shed.load(Ordering::Relaxed);
+    let served = served.load(Ordering::Relaxed);
+    let calm_ok = calm_ok.load(Ordering::Relaxed);
+    let total = (FLOOD_THREADS * QUERIES_PER_THREAD) as u64;
+    assert_eq!(served + shed, total, "every flood query was answered");
+    // 8 threads racing a tenant quota of 1: overlap is a statistical
+    // certainty at this scale. Both outcomes must occur.
+    assert!(shed > 0, "the flood never tripped the gate — admission is inert");
+    assert!(served > 0, "shedding must bound concurrency, not blocklist the tenant");
+    assert_eq!(calm_ok as usize, CALM_QUERIES);
+
+    let summary = srv.summary_json();
+    let text = summary.render();
+    let parsed = Json::parse(&text).expect("summary renders valid JSON");
+    let rc = parsed.get("resilience").expect("summary carries a resilience block");
+    let reported = rc.get("shed").and_then(|v| v.as_usize()).unwrap_or(0) as u64;
+    assert_eq!(reported, shed, "the trailer must account for every shed");
+    for field in ["panics", "write_retries", "degraded_ingests", "ingest_io_retries"] {
+        assert!(rc.get(field).is_some(), "resilience block is missing '{field}'");
+    }
+
+    println!(
+        "overload flood: {served} served + {shed} shed (typed) of {total} from one tenant; \
+         calm tenant {calm_ok}/{CALM_QUERIES} ok; trailer shed={reported}"
+    );
+}

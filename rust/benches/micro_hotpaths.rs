@@ -460,6 +460,7 @@ fn main() {
                 chunk_lines: 8192,
                 budget_bytes: 1 << 20,
                 spill_dir: None,
+                strict: false,
             },
         )
         .expect("bench stream ingest");
@@ -619,6 +620,7 @@ fn main() {
                 chunk_lines: 0,
                 budget_bytes: 256 << 10,
                 spill_dir: None,
+                strict: false,
             },
         )
         .expect("dense stream ingest");

@@ -192,6 +192,11 @@ pub struct QuerySpec {
     pub shortcut: Option<bool>,
     pub enclosing: Option<bool>,
     pub label: Option<String>,
+    /// Per-query deadline in milliseconds; `None` inherits the
+    /// `[engine] timeout_ms` value (itself optional). An expired
+    /// deadline aborts that query with a typed `DeadlineExceeded`
+    /// without disturbing the shared ingest.
+    pub timeout_ms: Option<u64>,
 }
 
 impl QuerySpec {
@@ -202,6 +207,7 @@ impl QuerySpec {
             shortcut: None,
             enclosing: None,
             label: None,
+            timeout_ms: None,
         }
     }
 }
@@ -263,6 +269,13 @@ pub struct RunConfig {
     /// (`edge_source = "dense-stream"`, bit-identical output).
     /// 0 = unbounded in-memory staging.
     pub edge_budget_mb: usize,
+    /// Refuse the in-memory degradation fallback when a spill write
+    /// keeps failing: strict mode surfaces the typed I/O error instead
+    /// of absorbing the fault into unbounded staging memory.
+    pub strict_spill: bool,
+    /// Default per-query deadline in milliseconds (`None` = no
+    /// deadline). Individual `[[query]]` entries override it.
+    pub timeout_ms: Option<u64>,
     pub dense_lookup: bool,
     pub algorithm: String,
     pub artifacts: PathBuf,
@@ -308,6 +321,8 @@ impl Default for RunConfig {
             stream_chunk: 0,
             knn_k: 0,
             edge_budget_mb: 0,
+            strict_spill: false,
+            timeout_ms: None,
             dense_lookup: false,
             algorithm: "fast-column".into(),
             artifacts: PathBuf::from("artifacts"),
@@ -407,6 +422,8 @@ impl RunConfig {
                             "stream_chunk" => cfg.stream_chunk = uint()?,
                             "knn_k" => cfg.knn_k = uint()?,
                             "edge_budget_mb" => cfg.edge_budget_mb = uint()?,
+                            "strict_spill" => cfg.strict_spill = flag()?,
+                            "timeout_ms" => cfg.timeout_ms = Some(uint()? as u64),
                             "dense_lookup" => cfg.dense_lookup = flag()?,
                             "algorithm" => {
                                 cfg.algorithm = v
@@ -501,6 +518,13 @@ impl RunConfig {
                             v.as_str()
                                 .ok_or_else(|| cfg_err("query.label: expected a string"))?
                                 .to_string(),
+                        )
+                    }
+                    "timeout_ms" => {
+                        q.timeout_ms = Some(
+                            v.as_usize()
+                                .ok_or_else(|| cfg_err("query.timeout_ms: expected an integer"))?
+                                as u64,
                         )
                     }
                     _ => return Err(cfg_err(format!("unknown key query.{k}"))),
@@ -743,6 +767,23 @@ diagram_csv = "out/pd.csv"
         assert!(RunConfig::from_str("[engine]\nstream_chunk = -1\n").is_err());
         assert!(RunConfig::from_str("[engine]\nknn_k = true\n").is_err());
         assert!(RunConfig::from_str("[engine]\nedge_budget_mb = \"big\"\n").is_err());
+    }
+
+    #[test]
+    fn resilience_knobs_parse_and_default_off() {
+        let d = RunConfig::default();
+        assert!(!d.strict_spill);
+        assert_eq!(d.timeout_ms, None);
+        let cfg = RunConfig::from_str(
+            "[engine]\nstrict_spill = true\ntimeout_ms = 2500\n\n[[query]]\ntau = 0.5\ntimeout_ms = 100\n",
+        )
+        .unwrap();
+        assert!(cfg.strict_spill);
+        assert_eq!(cfg.timeout_ms, Some(2500));
+        assert_eq!(cfg.queries[0].timeout_ms, Some(100));
+        assert!(RunConfig::from_str("[engine]\nstrict_spill = 1\n").is_err());
+        assert!(RunConfig::from_str("[engine]\ntimeout_ms = -5\n").is_err());
+        assert!(RunConfig::from_str("[[query]]\ntau = 1\ntimeout_ms = \"fast\"\n").is_err());
     }
 
     #[test]

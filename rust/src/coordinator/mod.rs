@@ -264,6 +264,7 @@ pub fn run_batch(cfg: &RunConfig) -> Result<BatchReport> {
             chunk_lines: cfg.stream_chunk,
             budget_bytes,
             spill_dir: None,
+            strict: cfg.strict_spill,
         };
         session.ingest_sparse_file(p, cfg.ingest_tau(), &sopts)?.0
     } else if cfg.edge_budget_mb > 0
@@ -289,6 +290,7 @@ pub fn run_batch(cfg: &RunConfig) -> Result<BatchReport> {
             chunk_lines: cfg.stream_chunk,
             budget_bytes,
             spill_dir: None,
+            strict: cfg.strict_spill,
         };
         session.ingest_streamed(data, cfg.ingest_tau(), &sopts)?.0
     } else if let (true, Some(MetricData::Points(pc))) = (cfg.knn_k > 0, data.as_ref()) {
@@ -356,6 +358,7 @@ pub fn run_batch(cfg: &RunConfig) -> Result<BatchReport> {
             shortcut: q.shortcut,
             enclosing: q.enclosing,
             label: q.label.clone(),
+            timeout_ms: q.timeout_ms.or(cfg.timeout_ms),
         };
         let resp = session.query(&handle, &req)?;
         if let Some(p) = &cfg.diagram_csv {
@@ -726,6 +729,9 @@ mod tests {
 
     #[test]
     fn streaming_sparse_file_run_matches_in_memory() {
+        // Failpoints are process-global: hold the test lock so an
+        // armed sibling test cannot inject into this one.
+        let _fp = crate::util::failpoint::test_lock();
         let dir = std::env::temp_dir().join("dory-coord-stream-test");
         let _ = std::fs::remove_dir_all(&dir);
         std::fs::create_dir_all(&dir).unwrap();

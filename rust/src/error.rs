@@ -36,6 +36,16 @@ pub enum DoryError {
     Io(String),
     /// Dataset construction failures (unknown kind, bad Hi-C condition).
     Dataset(String),
+    /// A server-side fault (worker panic, poisoned invariant) that is
+    /// not the client's doing. The request may be retried; the payload
+    /// carries the panic message for operator logs.
+    Internal(String),
+    /// The server refused admission: the global in-flight bound or the
+    /// tenant's quota is exhausted. Retry after backoff.
+    Overloaded(String),
+    /// A request's `timeout_ms` deadline expired before the reduction
+    /// finished. The handle stays valid; re-issue with a larger budget.
+    DeadlineExceeded(String),
 }
 
 impl fmt::Display for DoryError {
@@ -55,6 +65,9 @@ impl fmt::Display for DoryError {
             DoryError::Config(m) => write!(f, "config error: {m}"),
             DoryError::Io(m) => write!(f, "io error: {m}"),
             DoryError::Dataset(m) => write!(f, "dataset error: {m}"),
+            DoryError::Internal(m) => write!(f, "internal error: {m}"),
+            DoryError::Overloaded(m) => write!(f, "overloaded: {m}"),
+            DoryError::DeadlineExceeded(m) => write!(f, "deadline exceeded: {m}"),
         }
     }
 }
@@ -87,6 +100,9 @@ impl DoryError {
             DoryError::Config(_) => "Config",
             DoryError::Io(_) => "Io",
             DoryError::Dataset(_) => "Dataset",
+            DoryError::Internal(_) => "Internal",
+            DoryError::Overloaded(_) => "Overloaded",
+            DoryError::DeadlineExceeded(_) => "DeadlineExceeded",
         }
     }
 }

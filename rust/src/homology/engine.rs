@@ -387,7 +387,15 @@ impl Engine {
         let (nb, timings, fstats) = self
             .prepare(f, timings, fstats)
             .unwrap_or_else(|e| panic!("{e}"));
-        self.compute_prepared(f, &nb, timings, fstats, &self.opts)
+        self.compute_prepared(
+            f,
+            &nb,
+            timings,
+            fstats,
+            &self.opts,
+            &crate::reduction::CancelToken::none(),
+        )
+        .unwrap_or_else(|e| panic!("{e}"))
     }
 
     /// The shared front-end finish every entry path runs exactly once
@@ -427,6 +435,13 @@ impl Engine {
     /// for session queries it is the *shared ingest's* front-end report,
     /// not per-query work (its `f1_builds`/`nb_builds` counters pin the
     /// ingest-once guarantee).
+    ///
+    /// `cancel` is polled between homology dimensions and at every
+    /// batch-commit boundary inside the pipelined reduction; a tripped
+    /// deadline returns a typed
+    /// [`DoryError::DeadlineExceeded`](crate::error::DoryError) with all
+    /// request-local state dropped — the shared `f`/`nb` are never
+    /// mutated, so the owning handle keeps serving.
     pub fn compute_prepared(
         &self,
         f: &EdgeFiltration,
@@ -434,7 +449,8 @@ impl Engine {
         mut timings: PhaseTimer,
         fstats: FiltrationStats,
         opts: &EngineOptions,
-    ) -> PhResult {
+        cancel: &crate::reduction::CancelToken,
+    ) -> Result<PhResult, crate::error::DoryError> {
         let mut stats = EngineStats {
             n: f.n as usize,
             n_edges: f.n_edges(),
@@ -446,6 +462,7 @@ impl Engine {
         stats.front_memory_bytes = f.memory_bytes() + nb.memory_bytes();
 
         // ---- H0 ---------------------------------------------------------
+        cancel.check()?;
         timings.start("H0");
         let h0r = h0::compute(f);
         for &e in &h0r.death_edges {
@@ -463,6 +480,7 @@ impl Engine {
 
         if opts.max_dim >= 1 {
             // ---- H1* ----------------------------------------------------
+            cancel.check()?;
             timings.start("H1*");
             let space = EdgeColumns::new(nb, f);
             let ne = f.n_edges();
@@ -476,7 +494,7 @@ impl Engine {
             // the dim-2 clearing set. (Trivial pairs are not stored, so
             // in-shard shortcut columns feed dim-2 clearing through
             // `smallest_tri` exactly as before.)
-            let mut res = self.run_reduction(&space, &h1_src, true, f, opts);
+            let mut res = self.run_reduction(&space, &h1_src, true, f, opts, cancel)?;
             let h1_skipped = h1_src.skipped.load(Ordering::Relaxed);
             res.stats.shortcut_pairs = h1_skipped;
             res.stats.trivial_pairs += h1_skipped;
@@ -502,6 +520,7 @@ impl Engine {
                 // order with clearing applied on the fly (the trivial-
                 // death skip is O(1)); with a pool, the enumeration runs
                 // sharded on the workers inside the reduction pipeline.
+                cancel.check()?;
                 timings.start("H2*");
                 let h1_deaths: HashSet<u64> =
                     res.pairs.iter().map(|&(_, k)| k.pack()).collect();
@@ -516,7 +535,7 @@ impl Engine {
                     cleared: AtomicUsize::new(0),
                     skipped: AtomicUsize::new(0),
                 };
-                let mut res2 = self.run_reduction(&tspace, &h2_src, false, f, opts);
+                let mut res2 = self.run_reduction(&tspace, &h2_src, false, f, opts, cancel)?;
                 let h2_skipped = h2_src.skipped.load(Ordering::Relaxed);
                 res2.stats.shortcut_pairs = h2_skipped;
                 res2.stats.trivial_pairs += h2_skipped;
@@ -537,13 +556,13 @@ impl Engine {
         }
 
         timings.stop();
-        PhResult {
+        Ok(PhResult {
             diagram,
             stats,
             timings,
             h1_pairs,
             h1_essential_edges,
-        }
+        })
     }
 
     fn run_reduction<S: crate::reduction::ColumnSpace, Src: ColumnShards>(
@@ -553,7 +572,8 @@ impl Engine {
         keep_zero_pairs: bool,
         f: &EdgeFiltration,
         opts: &EngineOptions,
-    ) -> ReduceResult {
+        cancel: &crate::reduction::CancelToken,
+    ) -> Result<ReduceResult, crate::error::DoryError> {
         // Column birth value: for edges the id *is* the order; for
         // triangles the id is a packed key whose primary carries the
         // value. Both cases are covered by inspecting the id width: edge
@@ -573,18 +593,23 @@ impl Engine {
                 &opts.sched_config(),
                 pool,
                 keep_zero_pairs,
+                cancel,
                 value_of,
                 key_value,
             ),
             (algorithm, _) => {
                 // Sequential paths materialize the stream inline through
                 // the same shard primitives, so the column sequence is
-                // identical by construction.
+                // identical by construction. Cancellation is coarser
+                // here: one poll per enumerated shard plus one before
+                // the (monolithic) reduction.
                 let mut cols: Vec<u64> = Vec::new();
                 for s in 0..src.n_shards() {
+                    cancel.check()?;
                     src.fill(s, &mut cols);
                 }
-                match algorithm {
+                cancel.check()?;
+                Ok(match algorithm {
                     Algorithm::ImplicitRow => implicit_row::reduce_all(
                         space,
                         cols.iter().copied(),
@@ -599,7 +624,7 @@ impl Engine {
                         value_of,
                         key_value,
                     ),
-                }
+                })
             }
         }
     }

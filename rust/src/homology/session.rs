@@ -154,6 +154,13 @@ pub struct PhRequest {
     pub enclosing: Option<bool>,
     /// Caller tag echoed into the response and the batch summary.
     pub label: Option<String>,
+    /// Cooperative deadline for the reduction, in milliseconds from the
+    /// moment the query starts. Polled between homology dimensions and
+    /// at batch-commit boundaries; on expiry the query returns
+    /// [`DoryError::DeadlineExceeded`] and the handle stays fully
+    /// serviceable (all aborted state was request-local). `None` = no
+    /// deadline.
+    pub timeout_ms: Option<u64>,
 }
 
 impl PhRequest {
@@ -453,6 +460,12 @@ impl Session {
     pub fn query(&self, h: &FiltrationHandle, req: &PhRequest) -> Result<PhResponse, DoryError> {
         let opts_eff = self.effective_options(req)?;
         let cut = self.resolve_cut(h, req)?;
+        // The deadline clock starts after request validation, covering
+        // the truncation copy and the whole reduction.
+        let cancel = match req.timeout_ms {
+            Some(ms) => crate::reduction::CancelToken::with_timeout_ms(ms),
+            None => crate::reduction::CancelToken::none(),
+        };
         let ne = h.f.n_edges();
         let mut timings = h.timings.clone();
         let prefix = cut.m < ne;
@@ -462,10 +475,10 @@ impl Session {
             let nbq = h.nb.truncated(cut.m as u32);
             timings.stop();
             self.engine
-                .compute_prepared(&fq, &nbq, timings, h.fstats, &opts_eff)
+                .compute_prepared(&fq, &nbq, timings, h.fstats, &opts_eff, &cancel)?
         } else {
             self.engine
-                .compute_prepared(&h.f, &h.nb, timings, h.fstats, &opts_eff)
+                .compute_prepared(&h.f, &h.nb, timings, h.fstats, &opts_eff, &cancel)?
         };
         result.stats.n = h.n_points;
         let truncated = prefix || cut.clamped;

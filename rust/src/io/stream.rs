@@ -35,6 +35,23 @@
 //! process-global store id, so concurrent ingests (multi-tenant
 //! serving, parallel tests) sharing one temp dir never collide; stores
 //! dropped on an error path remove their own run files.
+//!
+//! ## Fault tolerance
+//!
+//! Every spill-file operation is gated on a named failpoint
+//! ([`crate::util::failpoint`]) and wrapped in a bounded
+//! retry-with-backoff: run writes restart from a fresh file (the
+//! partial file is removed between attempts), run re-opens retry
+//! whole, and per-key merge reads retry only *injected* faults (a real
+//! partial read loses the stream position). When a run write exhausts
+//! its retries, a non-strict store **degrades** instead of failing: the
+//! sorted run stays resident, further spilling stops, and the ingest
+//! completes from memory with [`StreamStats::degraded`] set — the
+//! merged key sequence (and thus every diagram) is bit-identical to the
+//! fault-free run, only the staging profile changes. Strict mode
+//! ([`StreamOptions::strict`]) surfaces the typed error instead.
+//! [`sweep_orphaned_spills`] lets a server startup clear `dory-spill-*`
+//! files abandoned by dead processes.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -42,10 +59,11 @@ use std::fs::File;
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::error::DoryError;
+use crate::util::failpoint::{self, RetryPolicy};
 use crate::filtration::simd::{sq_prefilter_bound, Dist};
 use crate::filtration::{
     edge_key, effective_tile, enclosing_radius_rowmax, sort_run_u128, unpack_edge_key,
@@ -87,6 +105,11 @@ pub struct StreamOptions {
     pub budget_bytes: usize,
     /// Directory for spilled runs (`None` = `std::env::temp_dir()`).
     pub spill_dir: Option<PathBuf>,
+    /// Refuse the degraded in-memory fallback: a spill write that fails
+    /// after its bounded retries surfaces as a typed
+    /// [`DoryError::Io`] instead of completing from memory. For callers
+    /// whose byte budget is a hard isolation boundary.
+    pub strict: bool,
 }
 
 /// Counters from one streamed ingest, for benches and budget asserts.
@@ -109,6 +132,16 @@ pub struct StreamStats {
     /// stays within it), and the chunk scratch. Tracks `budget_bytes`
     /// (plus the chunk scratch), not the input size.
     pub staging_peak_bytes: usize,
+    /// Transient spill I/O operations that were retried (writes
+    /// restarted, injected read/open faults re-issued) before
+    /// succeeding. Nonzero retries with `degraded == false` mean the
+    /// backoff absorbed the faults entirely.
+    pub io_retries: u64,
+    /// The ingest fell back to in-memory staging after a spill write
+    /// exhausted its retries (non-strict mode only). Output is
+    /// bit-identical to the fault-free run; the byte budget was
+    /// exceeded to keep the data.
+    pub degraded: bool,
 }
 
 /// Fixed-width sortable key a [`SpillStore`] can stage and serialize.
@@ -168,6 +201,15 @@ pub(crate) struct SpillStore<K: SpillKey> {
     pub spilled_runs: u64,
     pub spilled_bytes: u64,
     pub peak_buf_bytes: usize,
+    /// Refuse degradation: surface spill-write failures typed.
+    strict: bool,
+    /// A spill write failed past its retries and the store switched to
+    /// resident staging (no further spill attempts).
+    degraded: bool,
+    /// Transient-I/O retry count, shared with the merge readers the
+    /// store hands out (so read-side retries land in the same total).
+    retries: Arc<AtomicU64>,
+    policy: RetryPolicy,
 }
 
 impl<K: SpillKey> SpillStore<K> {
@@ -197,7 +239,20 @@ impl<K: SpillKey> SpillStore<K> {
             spilled_runs: 0,
             spilled_bytes: 0,
             peak_buf_bytes: 0,
+            strict: false,
+            degraded: false,
+            retries: Arc::new(AtomicU64::new(0)),
+            policy: RetryPolicy::default(),
         }
+    }
+
+    /// Configure failure handling: `strict` refuses the in-memory
+    /// fallback, and `retries` (shared across the ingest's stores)
+    /// accumulates every transient-I/O retry for [`StreamStats`].
+    pub fn with_resilience(mut self, strict: bool, retries: Arc<AtomicU64>) -> Self {
+        self.strict = strict;
+        self.retries = retries;
+        self
     }
 
     /// Buffered-I/O bytes per spill writer / merge reader, scaled so
@@ -246,31 +301,72 @@ impl<K: SpillKey> SpillStore<K> {
             self.seq
         ));
         self.seq += 1;
-        let file = File::create(&path).map_err(|e| DoryError::io(&path, e))?;
-        let mut w = BufWriter::with_capacity(wcap, file);
-        for &k in &sorted {
-            w.write_all(&k.encode()[..K::BYTES])
-                .map_err(|e| DoryError::io(&path, e))?;
+        // Each write attempt starts from a fresh file (the cleanup hook
+        // removes the partial one), so a retry is a clean rewrite of the
+        // same sorted run — transient EIO/ENOSPC is absorbed without
+        // changing a single output byte.
+        let wrote = self.policy.run(
+            &self.retries,
+            || {
+                failpoint::check(failpoint::SPILL_WRITE)?;
+                let file = File::create(&path)?;
+                let mut w = BufWriter::with_capacity(wcap, file);
+                for &k in &sorted {
+                    w.write_all(&k.encode()[..K::BYTES])?;
+                }
+                w.flush()
+            },
+            || {
+                let _ = std::fs::remove_file(&path);
+            },
+        );
+        match wrote {
+            Ok(()) => {
+                self.spilled_bytes += (sorted.len() * K::BYTES) as u64;
+                self.spilled_runs += 1;
+                self.runs.push(path);
+                Ok(())
+            }
+            Err(e) => {
+                let _ = std::fs::remove_file(&path);
+                if self.strict {
+                    return Err(DoryError::io(&path, e));
+                }
+                // Graceful degradation: keep the sorted run resident and
+                // stop trying the disk. Later pushes append to the same
+                // buffer (finish re-sorts it whole), so the merged key
+                // sequence is unchanged — only the budget is exceeded.
+                self.degraded = true;
+                self.run_capacity = usize::MAX;
+                self.buf = sorted;
+                Ok(())
+            }
         }
-        w.flush().map_err(|e| DoryError::io(&path, e))?;
-        self.spilled_bytes += (sorted.len() * K::BYTES) as u64;
-        self.spilled_runs += 1;
-        self.runs.push(path);
-        Ok(())
     }
 
     /// Seal the store, fold its spill counters into `totals`, and
     /// return the globally sorted key stream.
     pub fn finish(mut self, pool: Option<&ThreadPool>, totals: &mut RunTotals) -> Result<SpillIter<K>> {
         self.note_peak();
+        totals.degraded |= self.degraded;
         if self.runs.is_empty() {
             totals.peak_buf_bytes += self.peak_buf_bytes;
             let sorted = K::sort_run(std::mem::take(&mut self.buf), pool);
             return Ok(SpillIter::Mem(sorted.into_iter()));
         }
-        if !self.buf.is_empty() {
+        if !self.buf.is_empty() && !self.degraded {
             self.spill_run(pool)?;
+            // The flush itself may have degraded; fall through with the
+            // residual buffer as the resident side of the merge.
+            totals.degraded |= self.degraded;
         }
+        // A degraded store merges its resident (re-sorted) buffer
+        // alongside whatever runs reached disk before the fault.
+        let mem: Option<std::vec::IntoIter<K>> = if self.buf.is_empty() {
+            None
+        } else {
+            Some(K::sort_run(std::mem::take(&mut self.buf), pool).into_iter())
+        };
         totals.spilled_runs += self.spilled_runs;
         totals.spilled_bytes += self.spilled_bytes;
         // Merge residency is one read buffer per run (the run buffers
@@ -278,19 +374,31 @@ impl<K: SpillKey> SpillStore<K> {
         let rcap = self.io_buf_bytes(self.runs.len());
         totals.peak_buf_bytes += self.peak_buf_bytes.max(self.runs.len() * rcap);
         let mut readers = Vec::with_capacity(self.runs.len());
-        let mut heap = BinaryHeap::with_capacity(self.runs.len());
+        let mut heap = BinaryHeap::with_capacity(self.runs.len() + 1);
         for (i, path) in self.runs.iter().enumerate() {
-            let mut r = RunReader::<K>::open(path, rcap)?;
+            // Re-opening a freshly written run is side-effect free, so
+            // transient open faults retry whole. Past the retries the
+            // data on disk is unreachable — no degradation is possible,
+            // the typed error propagates (Drop removes every run).
+            let mut r = RunReader::<K>::open(path, rcap, Arc::clone(&self.retries), &self.policy)?;
             if let Some(k) = r.next()? {
                 heap.push(Reverse((k, i)));
             }
             readers.push(r);
         }
-        Ok(SpillIter::Merge(KWayMerge {
+        let mut merge = KWayMerge {
             readers,
             heap,
+            mem,
             files: std::mem::take(&mut self.runs),
-        }))
+        };
+        if let Some(it) = merge.mem.as_mut() {
+            let mem_idx = merge.readers.len();
+            if let Some(k) = it.next() {
+                merge.heap.push(Reverse((k, mem_idx)));
+            }
+        }
+        Ok(SpillIter::Merge(merge))
     }
 }
 
@@ -313,20 +421,41 @@ pub(crate) struct RunTotals {
     pub spilled_runs: u64,
     pub spilled_bytes: u64,
     pub peak_buf_bytes: usize,
+    /// Any store fell back to resident staging after a spill-write
+    /// failure.
+    pub degraded: bool,
 }
 
 struct RunReader<K: SpillKey> {
     r: BufReader<File>,
     path: PathBuf,
+    retries: Arc<AtomicU64>,
+    attempts: u32,
     _k: std::marker::PhantomData<K>,
 }
 
 impl<K: SpillKey> RunReader<K> {
-    fn open(path: &Path, buf_bytes: usize) -> Result<Self> {
-        let file = File::open(path).map_err(|e| DoryError::io(path, e))?;
+    fn open(
+        path: &Path,
+        buf_bytes: usize,
+        retries: Arc<AtomicU64>,
+        policy: &RetryPolicy,
+    ) -> Result<Self> {
+        let file = policy
+            .run(
+                &retries,
+                || {
+                    failpoint::check(failpoint::MERGE_OPEN)?;
+                    File::open(path)
+                },
+                || {},
+            )
+            .map_err(|e| DoryError::io(path, e))?;
         Ok(Self {
             r: BufReader::with_capacity(buf_bytes, file),
             path: path.to_path_buf(),
+            retries,
+            attempts: policy.attempts,
             _k: std::marker::PhantomData,
         })
     }
@@ -334,10 +463,26 @@ impl<K: SpillKey> RunReader<K> {
     fn next(&mut self) -> Result<Option<K>> {
         let mut buf = [0u8; 16];
         let slot = &mut buf[..K::BYTES];
-        match self.r.read_exact(slot) {
-            Ok(()) => Ok(Some(K::decode(slot))),
-            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => Ok(None),
-            Err(e) => Err(DoryError::io(&self.path, e)),
+        // Only *injected* faults are retried here: they fire before any
+        // byte moves, so the stream position is intact and the read can
+        // simply be re-issued. A real partial read has consumed an
+        // unknown prefix — retrying would silently skip keys — so it
+        // propagates typed immediately.
+        let mut tries = 0u32;
+        loop {
+            if let Err(e) = failpoint::check(failpoint::SPILL_READ) {
+                tries += 1;
+                if tries < self.attempts.max(1) {
+                    self.retries.fetch_add(1, Ordering::Relaxed);
+                    continue;
+                }
+                return Err(DoryError::io(&self.path, e));
+            }
+            return match self.r.read_exact(slot) {
+                Ok(()) => Ok(Some(K::decode(slot))),
+                Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => Ok(None),
+                Err(e) => Err(DoryError::io(&self.path, e)),
+            };
         }
     }
 }
@@ -362,6 +507,9 @@ impl<K: SpillKey> SpillIter<K> {
 pub(crate) struct KWayMerge<K: SpillKey> {
     readers: Vec<RunReader<K>>,
     heap: BinaryHeap<Reverse<(K, usize)>>,
+    /// Resident sorted run of a degraded store, merged as the source at
+    /// heap index `readers.len()`.
+    mem: Option<std::vec::IntoIter<K>>,
     files: Vec<PathBuf>,
 }
 
@@ -370,7 +518,12 @@ impl<K: SpillKey> KWayMerge<K> {
         let Some(Reverse((k, i))) = self.heap.pop() else {
             return Ok(None);
         };
-        if let Some(nk) = self.readers[i].next()? {
+        let refill = if i < self.readers.len() {
+            self.readers[i].next()?
+        } else {
+            self.mem.as_mut().and_then(|it| it.next())
+        };
+        if let Some(nk) = refill {
             self.heap.push(Reverse((nk, i)));
         }
         Ok(Some(k))
@@ -416,8 +569,11 @@ pub fn stream_sparse_file(
         let vb = opts.budget_bytes * 2 / 3;
         (vb.max(1), (opts.budget_bytes - vb).max(1))
     };
-    let mut vals = SpillStore::<u128>::new(val_budget, dir.clone(), "keys");
-    let mut pairs = SpillStore::<u64>::new(pair_budget, dir, "pairs");
+    let retries = Arc::new(AtomicU64::new(0));
+    let mut vals = SpillStore::<u128>::new(val_budget, dir.clone(), "keys")
+        .with_resilience(opts.strict, Arc::clone(&retries));
+    let mut pairs = SpillStore::<u64>::new(pair_budget, dir, "pairs")
+        .with_resilience(opts.strict, Arc::clone(&retries));
     let mut st = StreamStats::default();
 
     let t_parse = Instant::now();
@@ -450,7 +606,21 @@ pub fn stream_sparse_file(
 
     loop {
         line.clear();
-        let read = r.read_line(&mut line).map_err(|e| DoryError::io(path, e))?;
+        // Injected read faults fire before any bytes move, so the
+        // reader position is intact and a bounded re-issue is safe —
+        // the same rule as the merge readers.
+        let mut tries = 0u32;
+        let read = loop {
+            if let Err(e) = failpoint::check(failpoint::STREAM_READ) {
+                tries += 1;
+                if tries < RetryPolicy::default().attempts.max(1) {
+                    retries.fetch_add(1, Ordering::Relaxed);
+                    continue;
+                }
+                return Err(DoryError::io(path, e));
+            }
+            break r.read_line(&mut line).map_err(|e| DoryError::io(path, e))?;
+        };
         if read == 0 {
             break;
         }
@@ -518,6 +688,8 @@ pub fn stream_sparse_file(
     st.spilled_runs = totals.spilled_runs;
     st.spilled_bytes = totals.spilled_bytes;
     st.staging_peak_bytes = totals.peak_buf_bytes + chunk_bytes;
+    st.io_retries = retries.load(Ordering::Relaxed);
+    st.degraded = totals.degraded;
     fstats.sort_ns += t_sort.elapsed().as_nanos() as u64;
     fstats.f1_builds += 1;
     fstats.edges_considered += st.entries;
@@ -584,7 +756,9 @@ pub fn stream_dense_build(
     fstats.dist_kernel = dist.kernel_name();
     let bound = sq_prefilter_bound(tau_eff);
     let dir = opts.spill_dir.clone().unwrap_or_else(std::env::temp_dir);
-    let mut store = SpillStore::<u128>::new(opts.budget_bytes, dir, "dense");
+    let retries = Arc::new(AtomicU64::new(0));
+    let mut store = SpillStore::<u128>::new(opts.budget_bytes, dir, "dense")
+        .with_resilience(opts.strict, Arc::clone(&retries));
 
     let threads = pool.map_or(1, |p| p.threads());
     let tile = effective_tile(n, fe.tile, threads);
@@ -667,6 +841,8 @@ pub fn stream_dense_build(
     st.spilled_runs = totals.spilled_runs;
     st.spilled_bytes = totals.spilled_bytes;
     st.staging_peak_bytes = totals.peak_buf_bytes + wave_peak;
+    st.io_retries = retries.load(Ordering::Relaxed);
+    st.degraded = totals.degraded;
     fstats.edges_considered += st.entries;
     fstats.edges_kept += st.kept;
     if r_enc.is_finite() {
@@ -687,6 +863,55 @@ pub fn stream_dense_build(
     Ok((f, st))
 }
 
+/// Remove `dory-spill-*.run` files abandoned in `dir` by processes that
+/// no longer exist (a crashed ingest never runs its `Drop` cleanup).
+/// Returns how many files were removed.
+///
+/// Conservative by construction: only filenames matching the exact run
+/// pattern are considered, files whose embedded pid is this process or
+/// a pid that is still alive (per `/proc`) are kept, and on platforms
+/// without `/proc` liveness is unknowable so nothing is removed. Live
+/// ingests by other processes are therefore never disturbed.
+pub fn sweep_orphaned_spills(dir: &Path) -> usize {
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return 0;
+    };
+    let proc_root = Path::new("/proc");
+    if !proc_root.is_dir() {
+        return 0;
+    }
+    let me = std::process::id();
+    let mut removed = 0usize;
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let Some(body) = name
+            .strip_prefix("dory-spill-")
+            .and_then(|s| s.strip_suffix(".run"))
+        else {
+            continue;
+        };
+        // body = {tag}-{pid}-{uid}-{seq}; the numeric fields are the
+        // last three (tags never contain '-').
+        let mut fields = body.rsplitn(4, '-');
+        let seq_ok = fields.next().is_some_and(|s| s.parse::<u64>().is_ok());
+        let uid_ok = fields.next().is_some_and(|s| s.parse::<u64>().is_ok());
+        let Some(pid) = fields.next().and_then(|s| s.parse::<u32>().ok()) else {
+            continue;
+        };
+        if !seq_ok || !uid_ok || pid == me {
+            continue;
+        }
+        if proc_root.join(pid.to_string()).exists() {
+            continue; // owner is alive; its Drop will clean up
+        }
+        if std::fs::remove_file(entry.path()).is_ok() {
+            removed += 1;
+        }
+    }
+    removed
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -699,6 +924,9 @@ mod tests {
 
     #[test]
     fn spill_store_roundtrips_sorted_across_budgets() {
+        // Failpoints are process-global: hold the test lock so an
+        // armed sibling test cannot inject into this one.
+        let _fp = failpoint::test_lock();
         // 1000 pseudo-random unique u64 keys pushed unsorted; every
         // budget (including ones that force many tiny runs) must yield
         // the same sorted stream.
@@ -725,6 +953,9 @@ mod tests {
 
     #[test]
     fn concurrent_spilling_stores_do_not_collide() {
+        // Failpoints are process-global: hold the test lock so an
+        // armed sibling test cannot inject into this one.
+        let _fp = failpoint::test_lock();
         // Four stores spilling the same tag into the same dir at the
         // same time: run filenames embed the store uid, so none may
         // truncate or delete another's runs — every merge must yield
@@ -759,6 +990,9 @@ mod tests {
 
     #[test]
     fn error_paths_leave_no_spill_files_behind() {
+        // Failpoints are process-global: hold the test lock so an
+        // armed sibling test cannot inject into this one.
+        let _fp = failpoint::test_lock();
         // A duplicate pair detected mid-merge aborts the ingest while
         // the value store still holds spilled runs: its Drop (and the
         // pair merge's) must clear every run file from the spill dir.
@@ -776,6 +1010,7 @@ mod tests {
             chunk_lines: 16,
             budget_bytes: 1024,
             spill_dir: Some(dir.clone()),
+            strict: false,
         };
         let mut fs = FiltrationStats::default();
         let e = stream_sparse_file(&p, f64::INFINITY, &opts, None, &mut fs).unwrap_err();
@@ -787,8 +1022,244 @@ mod tests {
         assert!(leftovers.is_empty(), "leaked spill files: {leftovers:?}");
     }
 
+    /// Arm a failpoint for the scope of one test body, holding the
+    /// crate-wide failpoint lock; disarms on drop (including panic).
+    struct Armed(std::sync::MutexGuard<'static, ()>);
+
+    fn armed(name: &str, trigger: failpoint::Trigger) -> Armed {
+        let g = failpoint::test_lock();
+        failpoint::clear();
+        failpoint::arm(name, trigger);
+        Armed(g)
+    }
+
+    impl Drop for Armed {
+        fn drop(&mut self) {
+            failpoint::clear();
+        }
+    }
+
+    fn fault_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("dory-stream-fault-{name}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn write_coo(name: &str, n: u32) -> PathBuf {
+        let p = tmp(name);
+        let mut text = String::new();
+        for i in 0..n {
+            for j in (i + 1)..n {
+                text.push_str(&format!("{} {} {}.5\n", i, j, (i + j) % 7 + 1));
+            }
+        }
+        std::fs::write(&p, text).unwrap();
+        p
+    }
+
+    fn assert_empty(dir: &Path) {
+        let left: Vec<_> = std::fs::read_dir(dir)
+            .unwrap()
+            .map(|d| d.unwrap().path())
+            .collect();
+        assert!(left.is_empty(), "leaked spill files: {left:?}");
+    }
+
+    #[test]
+    fn spill_write_retry_then_succeed_is_bit_identical() {
+        let p = write_coo("fault-retry.coo", 24);
+        let dir = fault_dir("retry");
+        let opts = StreamOptions {
+            chunk_lines: 16,
+            budget_bytes: 2048,
+            spill_dir: Some(dir.clone()),
+            strict: false,
+        };
+        let mut fs0 = FiltrationStats::default();
+        let (want, base) =
+            stream_sparse_file(&p, f64::INFINITY, &opts, None, &mut fs0).unwrap();
+        assert!(base.spilled_runs > 0, "budget must force spills");
+        assert_empty(&dir);
+
+        // The first write attempt fails, its retry succeeds: output
+        // must be byte-identical with the fault fully absorbed.
+        let _fp = armed(failpoint::SPILL_WRITE, failpoint::Trigger::Nth(1));
+        let mut fs = FiltrationStats::default();
+        let (got, st) = stream_sparse_file(&p, f64::INFINITY, &opts, None, &mut fs).unwrap();
+        assert!(st.io_retries >= 1, "the absorbed fault must be counted");
+        assert!(!st.degraded);
+        assert_eq!(st.spilled_runs, base.spilled_runs);
+        assert_eq!(got.edges, want.edges);
+        assert_eq!(
+            got.values.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            want.values.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        assert_empty(&dir);
+    }
+
+    #[test]
+    fn unwritable_spill_degrades_to_memory_bit_identically() {
+        let p = write_coo("fault-degrade.coo", 24);
+        let dir = fault_dir("degrade");
+        let opts = StreamOptions {
+            chunk_lines: 16,
+            budget_bytes: 2048,
+            spill_dir: Some(dir.clone()),
+            strict: false,
+        };
+        let mut fs0 = FiltrationStats::default();
+        let (want, _) = stream_sparse_file(&p, f64::INFINITY, &opts, None, &mut fs0).unwrap();
+
+        // Every write attempt fails: both stores must fall back to
+        // resident staging and still produce the exact filtration.
+        let _fp = armed(failpoint::SPILL_WRITE, failpoint::Trigger::Always);
+        let mut fs = FiltrationStats::default();
+        let (got, st) = stream_sparse_file(&p, f64::INFINITY, &opts, None, &mut fs).unwrap();
+        assert!(st.degraded, "exhausted retries must degrade, not fail");
+        assert!(st.io_retries >= 1);
+        assert_eq!(st.spilled_runs, 0, "nothing may reach disk");
+        assert_eq!(got.edges, want.edges);
+        assert_eq!(
+            got.values.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            want.values.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        assert_empty(&dir);
+    }
+
+    #[test]
+    fn partial_spill_then_degrade_merges_disk_and_memory() {
+        // Let a few runs reach disk, then cut the disk off mid-ingest:
+        // the hybrid merge (surviving disk runs + the resident tail)
+        // must still yield the exact sorted stream.
+        let dir = fault_dir("hybrid");
+        let _fp = armed(failpoint::SPILL_WRITE, failpoint::Trigger::Off);
+        let keys: Vec<u64> = (0..4000u64)
+            .map(|i| i.wrapping_mul(0x9E3779B97F4A7C15))
+            .collect();
+        let mut expect = keys.clone();
+        expect.sort_unstable();
+        let retries = Arc::new(AtomicU64::new(0));
+        let mut store = SpillStore::<u64>::new(1024, dir.clone(), "hybrid")
+            .with_resilience(false, Arc::clone(&retries));
+        let half = keys.len() / 2;
+        for &k in &keys[..half] {
+            store.push(k, None).unwrap();
+        }
+        assert!(store.spilled_runs >= 2, "first half must spill some runs");
+        // From here every write fails: the remaining keys stay resident.
+        failpoint::clear();
+        failpoint::arm(failpoint::SPILL_WRITE, failpoint::Trigger::Always);
+        for &k in &keys[half..] {
+            store.push(k, None).unwrap();
+        }
+        let disk_runs = store.spilled_runs;
+        let mut totals = RunTotals::default();
+        let mut it = store.finish(None, &mut totals).unwrap();
+        let mut got = Vec::with_capacity(keys.len());
+        while let Some(k) = it.next().unwrap() {
+            got.push(k);
+        }
+        drop(it);
+        assert_eq!(got, expect, "hybrid disk+memory merge must be exact");
+        assert!(totals.degraded);
+        assert_eq!(totals.spilled_runs, disk_runs);
+        assert!(disk_runs >= 2);
+        assert!(retries.load(Ordering::Relaxed) >= 1);
+        assert_empty(&dir);
+    }
+
+    #[test]
+    fn strict_mode_refuses_degradation_typed() {
+        let p = write_coo("fault-strict.coo", 24);
+        let dir = fault_dir("strict");
+        let opts = StreamOptions {
+            chunk_lines: 16,
+            budget_bytes: 2048,
+            spill_dir: Some(dir.clone()),
+            strict: true,
+        };
+        let _fp = armed(failpoint::SPILL_WRITE, failpoint::Trigger::Always);
+        let mut fs = FiltrationStats::default();
+        let e = stream_sparse_file(&p, f64::INFINITY, &opts, None, &mut fs).unwrap_err();
+        assert!(matches!(e, DoryError::Io(_)), "{e}");
+        assert!(e.to_string().contains("failpoint"), "{e}");
+        assert_empty(&dir);
+    }
+
+    #[test]
+    fn merge_open_failure_is_typed_and_leaves_no_files() {
+        let p = write_coo("fault-open.coo", 24);
+        let dir = fault_dir("open");
+        let opts = StreamOptions {
+            chunk_lines: 16,
+            budget_bytes: 2048,
+            spill_dir: Some(dir.clone()),
+            strict: false,
+        };
+        let _fp = armed(failpoint::MERGE_OPEN, failpoint::Trigger::Always);
+        let mut fs = FiltrationStats::default();
+        let e = stream_sparse_file(&p, f64::INFINITY, &opts, None, &mut fs).unwrap_err();
+        assert!(matches!(e, DoryError::Io(_)), "{e}");
+        assert_empty(&dir);
+    }
+
+    #[test]
+    fn stream_read_fault_retries_then_propagates() {
+        let p = write_coo("fault-read.coo", 8);
+        let dir = fault_dir("read");
+        let opts = StreamOptions {
+            spill_dir: Some(dir.clone()),
+            ..Default::default()
+        };
+        // One injected line-read fault: absorbed by the bounded retry.
+        {
+            let _fp = armed(failpoint::STREAM_READ, failpoint::Trigger::Nth(1));
+            let mut fs = FiltrationStats::default();
+            let (_, st) =
+                stream_sparse_file(&p, f64::INFINITY, &opts, None, &mut fs).unwrap();
+            assert!(st.io_retries >= 1);
+        }
+        // A persistent fault exhausts the retries and surfaces typed.
+        {
+            let _fp = armed(failpoint::STREAM_READ, failpoint::Trigger::Always);
+            let mut fs = FiltrationStats::default();
+            let e = stream_sparse_file(&p, f64::INFINITY, &opts, None, &mut fs).unwrap_err();
+            assert!(matches!(e, DoryError::Io(_)), "{e}");
+        }
+        assert_empty(&dir);
+    }
+
+    #[test]
+    fn sweep_removes_only_dead_process_runs() {
+        if !Path::new("/proc").is_dir() {
+            return; // liveness is unknowable here; the sweep is a no-op
+        }
+        let dir = fault_dir("sweep");
+        let me = std::process::id();
+        // A pid that cannot exist (beyond every Linux pid_max).
+        let dead = u32::MAX;
+        let orphan = dir.join(format!("dory-spill-keys-{dead}-0-0.run"));
+        let mine = dir.join(format!("dory-spill-keys-{me}-1-0.run"));
+        let odd = dir.join("dory-spill-keys-notapid-2-0.run");
+        let other = dir.join("other-file.run");
+        for f in [&orphan, &mine, &odd, &other] {
+            std::fs::write(f, b"x").unwrap();
+        }
+        let removed = sweep_orphaned_spills(&dir);
+        assert_eq!(removed, 1, "exactly the dead process's run goes");
+        assert!(!orphan.exists());
+        assert!(mine.exists(), "a live owner's runs are untouchable");
+        assert!(odd.exists(), "unparseable names are left alone");
+        assert!(other.exists(), "non-spill files are left alone");
+        assert_eq!(sweep_orphaned_spills(&dir), 0, "sweep is idempotent");
+    }
+
     #[test]
     fn streamed_validation_matches_reader() {
+        // Failpoints are process-global: hold the test lock so an
+        // armed sibling test cannot inject into this one.
+        let _fp = failpoint::test_lock();
         let p = tmp("val.coo");
         std::fs::write(&p, "0 1 1.0\n3 3 2.0\n").unwrap();
         let mut fs = FiltrationStats::default();
@@ -814,6 +1285,9 @@ mod tests {
 
     #[test]
     fn dense_streaming_is_bit_identical_across_budgets_and_tiles() {
+        // Failpoints are process-global: hold the test lock so an
+        // armed sibling test cannot inject into this one.
+        let _fp = failpoint::test_lock();
         use crate::util::rng::Pcg32;
         let mut rng = Pcg32::new(0xDE5E);
         let pc = crate::geometry::PointCloud::new(
@@ -888,6 +1362,9 @@ mod tests {
 
     #[test]
     fn tau_filter_applies_at_the_reader() {
+        // Failpoints are process-global: hold the test lock so an
+        // armed sibling test cannot inject into this one.
+        let _fp = failpoint::test_lock();
         let p = tmp("tau.coo");
         std::fs::write(&p, "0 1 1.0\n1 2 5.0\n0 2 2.0\n").unwrap();
         let mut fs = FiltrationStats::default();

@@ -104,6 +104,12 @@ run flags:
                             keep the k nearest incident edges per vertex
                             (0 = off/exact; diagrams 2eps-stable in the
                             net radius)
+  --strict-spill            refuse the in-memory fallback when spill
+                            writes keep failing (typed I/O error instead
+                            of degraded unbounded staging)
+  --timeout-ms <int>        per-query deadline in milliseconds; an
+                            expired query aborts with a typed
+                            DeadlineExceeded (default: none)
   --no-enclosing            disable the enclosing-radius truncation of
                             infinite-tau filtrations (exact fallback;
                             on by default, diagrams unchanged either way)
@@ -125,6 +131,12 @@ serve flags:
   --data-root <dir>         confine {"path":...} wire ingests to files
                             under this directory (default: any path
                             readable by the server process)
+  --max-inflight <int>      admit at most this many query/batch/ingest
+                            requests at once; excess is shed with a
+                            typed Overloaded error (0 = unbounded [0])
+  --tenant-quota <int>      per-tenant in-flight cap (0 = unbounded [0])
+  --strict-spill            refuse degraded in-memory staging on wire
+                            ingests whose spill writes keep failing
   Reads one JSON request per line on stdin, writes one JSON response
   per line on stdout; EOF or a {\"method\":\"shutdown\"} request ends the
   loop with a {\"summary\":...} trailer (per-tenant counters, cache and
@@ -200,6 +212,8 @@ fn cmd_run(args: &[String]) -> Result<()> {
             "--stream-chunk" => cfg.stream_chunk = val()?.parse()?,
             "--edge-budget-mb" => cfg.edge_budget_mb = val()?.parse()?,
             "--knn-k" => cfg.knn_k = val()?.parse()?,
+            "--strict-spill" => cfg.strict_spill = true,
+            "--timeout-ms" => cfg.timeout_ms = Some(val()?.parse()?),
             "--no-enclosing" => cfg.enclosing = false,
             "--ns" => cfg.dense_lookup = true,
             "--algorithm" => cfg.algorithm = val()?.clone(),
@@ -368,6 +382,9 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let mut shortcut = true;
     let mut cache_mb = 256usize;
     let mut data_root: Option<std::path::PathBuf> = None;
+    let mut max_inflight = 0usize;
+    let mut tenant_quota = 0usize;
+    let mut strict_spill = false;
     let mut it = args.iter();
     while let Some(a) = it.next() {
         let mut val = || it.next().with_context(|| format!("{a} needs a value"));
@@ -377,6 +394,9 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             "--no-shortcut" => shortcut = false,
             "--cache-mb" => cache_mb = val()?.parse()?,
             "--data-root" => data_root = Some(val()?.into()),
+            "--max-inflight" => max_inflight = val()?.parse()?,
+            "--tenant-quota" => tenant_quota = val()?.parse()?,
+            "--strict-spill" => strict_spill = true,
             other => bail!("unknown flag {other}"),
         }
     }
@@ -392,7 +412,9 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         shortcut,
         ..Default::default()
     };
-    let mut server = dory::serve::Server::new(opts, cache_bytes);
+    let mut server = dory::serve::Server::new(opts, cache_bytes)
+        .with_overload(max_inflight, tenant_quota)
+        .with_strict_spill(strict_spill);
     if let Some(root) = data_root {
         server = server.with_data_root(root);
     }

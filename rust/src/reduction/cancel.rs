@@ -1,0 +1,123 @@
+//! Cooperative cancellation for long-running reductions.
+//!
+//! A [`CancelToken`] carries an optional wall-clock deadline plus a
+//! manual cancel flag. The reduction scheduler polls it at batch-commit
+//! boundaries — the only points where no pipeline ticket is outstanding,
+//! so aborting there never strands borrowed columns — and the engine
+//! polls it between homology dimensions. Cancellation is therefore
+//! *cooperative*: a cancelled query returns a typed
+//! [`DoryError::DeadlineExceeded`](crate::error::DoryError) promptly
+//! (within one batch commit), and because every structure it touched was
+//! request-local, the shared [`FiltrationHandle`] stays fully serviceable.
+//!
+//! The default token ([`CancelToken::none`]) holds no allocation and
+//! every poll is a single `Option` test, so un-deadlined callers pay
+//! nothing.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+struct Inner {
+    deadline: Option<Instant>,
+    cancelled: AtomicBool,
+}
+
+/// Shared cancel/deadline signal; cheap to clone, `None` costs nothing.
+#[derive(Clone, Default)]
+pub struct CancelToken(Option<Arc<Inner>>);
+
+impl CancelToken {
+    /// A token that never cancels — the zero-cost default.
+    #[inline]
+    pub fn none() -> Self {
+        CancelToken(None)
+    }
+
+    /// A token whose deadline is `timeout_ms` from now. `0` produces an
+    /// already-expired deadline (useful for deterministic tests).
+    pub fn with_timeout_ms(timeout_ms: u64) -> Self {
+        CancelToken(Some(Arc::new(Inner {
+            deadline: Some(Instant::now() + Duration::from_millis(timeout_ms)),
+            cancelled: AtomicBool::new(false),
+        })))
+    }
+
+    /// A deadline-free token that only cancels manually.
+    pub fn manual() -> Self {
+        CancelToken(Some(Arc::new(Inner {
+            deadline: None,
+            cancelled: AtomicBool::new(false),
+        })))
+    }
+
+    /// Trip the manual cancel flag (idempotent).
+    pub fn cancel(&self) {
+        if let Some(i) = &self.0 {
+            i.cancelled.store(true, Ordering::Release);
+        }
+    }
+
+    /// Has the deadline passed or the flag been tripped?
+    #[inline]
+    pub fn is_cancelled(&self) -> bool {
+        match &self.0 {
+            None => false,
+            Some(i) => {
+                i.cancelled.load(Ordering::Acquire)
+                    || i.deadline.is_some_and(|d| Instant::now() >= d)
+            }
+        }
+    }
+
+    /// Poll point: `Err(DeadlineExceeded)` once cancelled.
+    #[inline]
+    pub fn check(&self) -> Result<(), crate::error::DoryError> {
+        if self.is_cancelled() {
+            Err(crate::error::DoryError::DeadlineExceeded(
+                "request cancelled before the reduction finished".into(),
+            ))
+        } else {
+            Ok(())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_never_cancels() {
+        let t = CancelToken::none();
+        assert!(!t.is_cancelled());
+        t.cancel(); // no-op on the empty token
+        assert!(!t.is_cancelled());
+        assert!(t.check().is_ok());
+    }
+
+    #[test]
+    fn zero_timeout_is_immediately_expired() {
+        let t = CancelToken::with_timeout_ms(0);
+        assert!(t.is_cancelled());
+        assert!(matches!(
+            t.check(),
+            Err(crate::error::DoryError::DeadlineExceeded(_))
+        ));
+    }
+
+    #[test]
+    fn generous_timeout_is_live() {
+        let t = CancelToken::with_timeout_ms(3_600_000);
+        assert!(!t.is_cancelled());
+    }
+
+    #[test]
+    fn manual_cancel_propagates_to_clones() {
+        let t = CancelToken::manual();
+        let c = t.clone();
+        assert!(!c.is_cancelled());
+        t.cancel();
+        assert!(c.is_cancelled());
+    }
+}

@@ -16,12 +16,14 @@
 //!   over the persistent [`pool::ThreadPool`] (§4.4, rebuilt — batch
 //!   *k*'s serial commit overlaps batch *k+1*'s parallel push).
 
+pub mod cancel;
 pub mod explicit;
 pub mod fast_column;
 pub mod implicit_row;
 pub mod pool;
 pub mod serial_parallel;
 
+pub use cancel::CancelToken;
 pub use serial_parallel::{shard_plan, ColumnShards, SchedConfig, SchedStats, SliceShards};
 
 use crate::coboundary::{TetCursor, TriCursor};

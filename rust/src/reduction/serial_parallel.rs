@@ -85,8 +85,10 @@ use super::fast_column::{
     commit_claim, reduce_against, resume_reduce, BucketTable, ColumnOutcome, Overlay, PivotState,
     PivotView,
 };
+use super::cancel::CancelToken;
 use super::pool::{ThreadPool, Ticket};
 use super::{ColumnSpace, ReduceResult, ReduceStats};
+use crate::error::DoryError;
 use crate::filtration::Key;
 
 /// Scheduler configuration (plumbed from `EngineOptions` / the run
@@ -528,15 +530,24 @@ fn enum_until<Src: ColumnShards>(
 /// pushes run as pool tasks while the scheduler thread commits the
 /// previous batch. Output is bit-identical to materializing the stream
 /// and running [`super::fast_column::reduce_all`] sequentially.
+///
+/// `cancel` is polled only at batch-commit boundaries — the loop top,
+/// where no pipeline ticket is outstanding and no worker borrows
+/// `columns`/`base` — so a tripped deadline aborts with a typed
+/// [`DoryError::DeadlineExceeded`] without stranding pool state; every
+/// run that completes is bit-identical whether or not a (non-tripped)
+/// token was supplied.
+#[allow(clippy::too_many_arguments)]
 pub fn reduce_stream<S: ColumnSpace, Src: ColumnShards>(
     space: &S,
     src: &Src,
     cfg: &SchedConfig,
     pool: &ThreadPool,
     keep_zero_pairs: bool,
+    cancel: &CancelToken,
     value_of: impl Fn(u64) -> f64,
     key_value: impl Fn(Key) -> f64,
-) -> ReduceResult {
+) -> Result<ReduceResult, DoryError> {
     let threads = pool.threads();
     let wall0 = Instant::now();
     let pool0 = pool.stats();
@@ -598,6 +609,9 @@ pub fn reduce_stream<S: ColumnSpace, Src: ColumnShards>(
     };
     let mut batch = clamp_batch(cfg.batch_size);
 
+    // An expired deadline aborts before any pool work is scheduled.
+    cancel.check()?;
+
     // ---- bootstrap: enumerate (in parallel, blocking) until batch 0
     // has columns or the stream is exhausted.
     enum_block_ns += enum_until(
@@ -642,6 +656,11 @@ pub fn reduce_stream<S: ColumnSpace, Src: ColumnShards>(
     }
 
     while cur_start < cur_end {
+        // Batch-commit boundary: the previous generation's ticket has
+        // been waited, so nothing borrows `columns`/`base`/the slots —
+        // the one place a cooperative abort is safe mid-reduction.
+        cancel.check()?;
+
         // Catch-up: the push we are about to submit reads materialized
         // columns, so if the ride-along lookahead fell behind while
         // shards remain, block on enumeration-only generations now.
@@ -854,7 +873,7 @@ pub fn reduce_stream<S: ColumnSpace, Src: ColumnShards>(
     result.stats.appends = total.appends;
     result.stats.find_next_calls = total.find_next_calls;
     result.sched = sched;
-    result
+    Ok(result)
 }
 
 /// Reduce `columns` (already in reverse filtration order, clearing
@@ -877,7 +896,17 @@ pub fn reduce_all<S: ColumnSpace>(
         cols: columns,
         chunk: 4096,
     };
-    reduce_stream(space, &src, cfg, pool, keep_zero_pairs, value_of, key_value)
+    reduce_stream(
+        space,
+        &src,
+        cfg,
+        pool,
+        keep_zero_pairs,
+        &CancelToken::none(),
+        value_of,
+        key_value,
+    )
+    .expect("a none token never cancels")
 }
 
 #[cfg(test)]
@@ -997,9 +1026,11 @@ mod tests {
                     &fixed(batch),
                     &pool,
                     true,
+                    &CancelToken::none(),
                     |c| f.values[c as usize],
                     |k| f.key_value(k),
-                );
+                )
+                .unwrap();
                 let mut a = seq.pairs.clone();
                 let mut b = r.pairs.clone();
                 a.sort_unstable();
@@ -1142,6 +1173,55 @@ mod tests {
             }
         }
         assert!(shard_plan(0, 4, 3, 2).is_empty());
+    }
+
+    #[test]
+    fn expired_token_aborts_typed_and_pool_stays_usable() {
+        let (f, nb) = test_space(13, 30, 0.8);
+        let space = EdgeColumns::new(&nb, &f);
+        let cols: Vec<u64> = (0..f.n_edges() as u64).rev().collect();
+        let pool = ThreadPool::new(2);
+        let src = SliceShards {
+            cols: &cols,
+            chunk: 64,
+        };
+        let r = reduce_stream(
+            &space,
+            &src,
+            &fixed(16),
+            &pool,
+            true,
+            &CancelToken::with_timeout_ms(0),
+            |c| f.values[c as usize],
+            |k| f.key_value(k),
+        );
+        assert!(matches!(
+            r,
+            Err(crate::error::DoryError::DeadlineExceeded(_))
+        ));
+        // The abort left no generation in flight: the same pool serves a
+        // full run whose output matches the sequential oracle.
+        let seq = crate::reduction::fast_column::reduce_all(
+            &space,
+            cols.iter().copied(),
+            true,
+            |c| f.values[c as usize],
+            |k| f.key_value(k),
+        );
+        let full = reduce_all(
+            &space,
+            &cols,
+            &fixed(16),
+            &pool,
+            true,
+            |c| f.values[c as usize],
+            |k| f.key_value(k),
+        );
+        let mut a = seq.pairs.clone();
+        let mut b = full.pairs.clone();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b, "pool must reduce exactly after a cancelled run");
     }
 
     #[test]

@@ -43,6 +43,26 @@
 //! client can branch on the class ([`DoryError::kind`]) without parsing
 //! prose. Every response carries the request's `id` verbatim.
 //!
+//! ## Resilience
+//!
+//! - A panicking query — single or batched — is caught per request and
+//!   answered as a typed `Internal` wire error; the server, its caches,
+//!   and the shared handle keep serving (mutexes recover from
+//!   poisoning, and every guarded section leaves its state coherent).
+//! - [`Server::with_overload`] arms admission control: at most
+//!   `max_inflight` query/batch/ingest requests execute at once, with
+//!   an optional per-tenant cap; excess load is shed immediately with a
+//!   typed `Overloaded` error instead of queueing without bound.
+//! - A query body may carry `timeout_ms`; the deadline is polled at
+//!   batch-commit boundaries inside the reduction and an expired
+//!   request gets a typed `DeadlineExceeded` — the handle stays
+//!   serviceable and later queries are bit-identical.
+//! - Construction sweeps `dory-spill-*.run` files orphaned in the spill
+//!   directory by dead processes; wire ingests honor
+//!   [`Server::with_strict_spill`], and degraded (in-memory fallback)
+//!   ingests are flagged on the response and counted in the summary's
+//!   `resilience` block.
+//!
 //! Handles are cached in a byte-budgeted strict-LRU [`HandleCache`]
 //! behind a mutex; the handles themselves are `Arc`-shared, so eviction
 //! never races an in-flight query. The session and pool are shared by
@@ -57,7 +77,7 @@ use std::collections::BTreeMap;
 use std::hash::Hasher;
 use std::io::{BufRead, Write};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::Instant;
 
 use crate::coordinator::{self, DatasetSpec};
@@ -65,10 +85,20 @@ use crate::error::DoryError;
 use crate::filtration::{EdgeFiltration, FiltrationStats};
 use crate::geometry::{MetricData, PointCloud};
 use crate::homology::{EngineOptions, FiltrationHandle, PhRequest, PhResponse, Session};
+use crate::util::failpoint;
 use crate::util::fxhash::FxHasher;
 use crate::util::json::Json;
 use crate::util::memtrack;
 use crate::util::timer::PhaseTimer;
+
+/// Lock a serve-state mutex, recovering from poisoning. A panicking
+/// query thread must not wedge the whole server: every critical
+/// section here only performs field updates that are coherent at any
+/// point, so the data behind a poisoned lock is still valid — the
+/// panic itself is reported separately as a typed `Internal` error.
+fn relock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 /// Per-tenant lifetime counters, reported in the summary.
 #[derive(Clone, Copy, Debug, Default)]
@@ -104,6 +134,124 @@ struct FrontendAgg {
     dense_staging_peak_bytes: u64,
 }
 
+/// What the resilience layer observed during one wire ingest: whether
+/// the spill store fell back to in-memory staging and how many
+/// transient I/O faults its bounded retries absorbed.
+#[derive(Default)]
+struct IngestFacts {
+    degraded: bool,
+    io_retries: u64,
+}
+
+impl IngestFacts {
+    fn from_stats(st: &crate::io::stream::StreamStats) -> Self {
+        Self {
+            degraded: st.degraded,
+            io_retries: st.io_retries,
+        }
+    }
+}
+
+/// Overload control: a bounded count of concurrently executing
+/// query/batch/ingest requests, with an optional per-tenant cap.
+/// `0` for either limit means unbounded — the default. Excess load is
+/// shed immediately with a typed [`DoryError::Overloaded`] rather than
+/// queued without bound, so a flooding tenant cannot starve the rest.
+struct AdmissionGate {
+    max_inflight: usize,
+    tenant_quota: usize,
+    inflight: AtomicUsize,
+    per_tenant: Mutex<BTreeMap<String, usize>>,
+    shed: AtomicU64,
+}
+
+impl AdmissionGate {
+    fn new(max_inflight: usize, tenant_quota: usize) -> Self {
+        Self {
+            max_inflight,
+            tenant_quota,
+            inflight: AtomicUsize::new(0),
+            per_tenant: Mutex::new(BTreeMap::new()),
+            shed: AtomicU64::new(0),
+        }
+    }
+
+    /// Admit one request for `tenant`, or shed it typed. The returned
+    /// permit releases both counts on drop (including via a panicking
+    /// unwind, so a crashed request never leaks capacity).
+    fn admit(&self, tenant: &str) -> Result<Permit<'_>, DoryError> {
+        if self.max_inflight > 0 {
+            let admitted = self
+                .inflight
+                .fetch_update(Ordering::AcqRel, Ordering::Acquire, |n| {
+                    (n < self.max_inflight).then_some(n + 1)
+                })
+                .is_ok();
+            if !admitted {
+                self.shed.fetch_add(1, Ordering::Relaxed);
+                return Err(DoryError::Overloaded(format!(
+                    "server at capacity ({} requests in flight); retry later",
+                    self.max_inflight
+                )));
+            }
+        } else {
+            self.inflight.fetch_add(1, Ordering::AcqRel);
+        }
+        if self.tenant_quota > 0 {
+            let mut map = relock(&self.per_tenant);
+            let slot = map.entry(tenant.to_string()).or_insert(0);
+            if *slot >= self.tenant_quota {
+                drop(map);
+                self.inflight.fetch_sub(1, Ordering::AcqRel);
+                self.shed.fetch_add(1, Ordering::Relaxed);
+                return Err(DoryError::Overloaded(format!(
+                    "tenant '{tenant}' at quota ({} requests in flight); retry later",
+                    self.tenant_quota
+                )));
+            }
+            *slot += 1;
+        }
+        Ok(Permit { gate: self, tenant: tenant.to_string() })
+    }
+}
+
+/// RAII admission slot; see [`AdmissionGate::admit`].
+struct Permit<'a> {
+    gate: &'a AdmissionGate,
+    tenant: String,
+}
+
+impl Drop for Permit<'_> {
+    fn drop(&mut self) {
+        if self.gate.tenant_quota > 0 {
+            let mut map = relock(&self.gate.per_tenant);
+            if let Some(slot) = map.get_mut(&self.tenant) {
+                *slot = slot.saturating_sub(1);
+                if *slot == 0 {
+                    map.remove(&self.tenant);
+                }
+            }
+        }
+        self.gate.inflight.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// Lifetime resilience counters, reported in the summary's
+/// `resilience` block.
+#[derive(Default)]
+struct ResilienceCounters {
+    /// Query panics caught and answered as typed `Internal` errors.
+    panics: AtomicU64,
+    /// Response-write attempts retried after an injected transient.
+    write_retries: AtomicU64,
+    /// Wire ingests that fell back to in-memory staging.
+    degraded_ingests: AtomicU64,
+    /// Spill/stream I/O retries absorbed across wire ingests.
+    ingest_io_retries: AtomicU64,
+    /// Orphaned `dory-spill-*.run` files removed at construction.
+    swept_spill_files: AtomicU64,
+}
+
 /// The serving state: one shared [`Session`] (and worker pool), the
 /// handle cache, and per-tenant counters. All methods take `&self`.
 pub struct Server {
@@ -112,19 +260,48 @@ pub struct Server {
     tenants: Mutex<BTreeMap<String, TenantCounters>>,
     frontend: Mutex<FrontendAgg>,
     data_root: Option<std::path::PathBuf>,
+    gate: AdmissionGate,
+    resilience: ResilienceCounters,
+    strict_spill: bool,
 }
 
 impl Server {
     /// A server running `opts`, caching at most `cache_budget_bytes` of
-    /// handle payload (edge sets + CSRs).
+    /// handle payload (edge sets + CSRs). Construction sweeps spill
+    /// files orphaned in the temp directory by dead processes, so a
+    /// crashed predecessor's staging runs don't accumulate.
     pub fn new(opts: EngineOptions, cache_budget_bytes: usize) -> Self {
-        Self {
+        let swept = crate::io::stream::sweep_orphaned_spills(&std::env::temp_dir());
+        let srv = Self {
             session: Session::new(opts),
             cache: Mutex::new(HandleCache::new(cache_budget_bytes)),
             tenants: Mutex::new(BTreeMap::new()),
             frontend: Mutex::new(FrontendAgg::default()),
             data_root: None,
-        }
+            gate: AdmissionGate::new(0, 0),
+            resilience: ResilienceCounters::default(),
+            strict_spill: false,
+        };
+        srv.resilience
+            .swept_spill_files
+            .store(swept as u64, Ordering::Relaxed);
+        srv
+    }
+
+    /// Arm overload shedding: at most `max_inflight` requests (and at
+    /// most `tenant_quota` per tenant) execute concurrently; excess is
+    /// answered with a typed `Overloaded` error. `0` = unbounded.
+    pub fn with_overload(mut self, max_inflight: usize, tenant_quota: usize) -> Self {
+        self.gate = AdmissionGate::new(max_inflight, tenant_quota);
+        self
+    }
+
+    /// Refuse the in-memory degradation fallback on wire ingests whose
+    /// spill writes keep failing: surface the typed I/O error instead
+    /// of absorbing the fault into unbounded staging memory.
+    pub fn with_strict_spill(mut self, strict: bool) -> Self {
+        self.strict_spill = strict;
+        self
     }
 
     /// Restrict `{"path":…}` wire ingests to files under `root`
@@ -177,19 +354,36 @@ impl Server {
             }
             served += 1;
             let (response, stop) = self.handle_line(&line);
-            writeln!(out, "{}", response.render())?;
-            out.flush()?;
+            self.write_response(&mut out, &response.render())?;
             if stop {
                 break;
             }
         }
-        writeln!(
-            out,
-            "{}",
-            Json::obj().field("summary", self.summary_json()).render()
-        )?;
-        out.flush()?;
+        let trailer = Json::obj().field("summary", self.summary_json()).render();
+        self.write_response(&mut out, &trailer)?;
         Ok(served)
+    }
+
+    /// Write one response line, retrying transient *injected* write
+    /// faults a bounded number of times. Injected faults fire before
+    /// any byte reaches the sink, so a retry cannot duplicate output;
+    /// real write errors (client gone, pipe closed) propagate at once —
+    /// retrying a partial real write could interleave garbage.
+    fn write_response<W: Write>(&self, out: &mut W, line: &str) -> std::io::Result<()> {
+        let mut attempts = 0u32;
+        loop {
+            let r = failpoint::check(failpoint::SERVE_WRITE)
+                .and_then(|()| writeln!(out, "{line}"))
+                .and_then(|()| out.flush());
+            match r {
+                Ok(()) => return Ok(()),
+                Err(e) if failpoint::is_injected(&e) && attempts + 1 < 3 => {
+                    attempts += 1;
+                    self.resilience.write_retries.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(e) => return Err(e),
+            }
+        }
     }
 
     /// Serve one request line; returns the response and whether the
@@ -237,7 +431,7 @@ impl Server {
     }
 
     fn bump_tenant(&self, tenant: &str, f: impl FnOnce(&mut TenantCounters)) {
-        let mut map = self.tenants.lock().unwrap();
+        let mut map = relock(&self.tenants);
         f(map.entry(tenant.to_string()).or_default());
     }
 
@@ -267,17 +461,25 @@ impl Server {
             self.check_data_root(std::path::Path::new(p))?;
         }
         let key = fingerprint(dataset, tau)?;
-        if let Some(h) = self.cache.lock().unwrap().get(&key) {
+        if let Some(h) = relock(&self.cache).get(&key) {
             self.bump_tenant(tenant, |t| {
                 t.ingests += 1;
                 t.cache_hits += 1;
             });
-            return Ok(ingest_ok(&key, &h, true, &[]));
+            return Ok(ingest_ok(&key, &h, true, &[], false));
         }
-        let handle = Arc::new(self.build_handle(dataset, tau)?);
+        let _permit = self.gate.admit(tenant)?;
+        let (handle, facts) = self.build_handle(dataset, tau)?;
+        let handle = Arc::new(handle);
+        if facts.degraded {
+            self.resilience.degraded_ingests.fetch_add(1, Ordering::Relaxed);
+        }
+        self.resilience
+            .ingest_io_retries
+            .fetch_add(facts.io_retries, Ordering::Relaxed);
         {
             let fs = handle.stats();
-            let mut agg = self.frontend.lock().unwrap();
+            let mut agg = relock(&self.frontend);
             if !fs.dist_kernel.is_empty() {
                 agg.dist_kernel = fs.dist_kernel;
             }
@@ -286,13 +488,19 @@ impl Server {
             agg.dense_staging_peak_bytes =
                 agg.dense_staging_peak_bytes.max(fs.dense_staging_peak_bytes);
         }
-        let evicted = self.cache.lock().unwrap().insert(&key, Arc::clone(&handle));
+        let evicted = relock(&self.cache).insert(&key, Arc::clone(&handle));
         self.bump_tenant(tenant, |t| t.ingests += 1);
-        Ok(ingest_ok(&key, &handle, false, &evicted))
+        Ok(ingest_ok(&key, &handle, false, &evicted, facts.degraded))
     }
 
-    /// Materialize and ingest one wire dataset form.
-    fn build_handle(&self, dataset: &Json, tau: f64) -> Result<FiltrationHandle, DoryError> {
+    /// Materialize and ingest one wire dataset form, plus what the
+    /// resilience layer observed while doing it (zero for the
+    /// non-streaming forms).
+    fn build_handle(
+        &self,
+        dataset: &Json,
+        tau: f64,
+    ) -> Result<(FiltrationHandle, IngestFacts), DoryError> {
         if dataset.get("kind").is_some() {
             let kind = dataset
                 .get("kind")
@@ -314,7 +522,7 @@ impl Server {
             let spec = DatasetSpec::Named { kind, n, seed };
             let data =
                 coordinator::build_dataset(&spec).map_err(|e| DoryError::Dataset(e.to_string()))?;
-            return self.session.ingest(&data, tau);
+            return Ok((self.session.ingest(&data, tau)?, IngestFacts::default()));
         }
         if let Some(rows) = dataset.get("points") {
             let rows = rows
@@ -363,12 +571,14 @@ impl Server {
                     })?;
                     let opts = crate::io::stream::StreamOptions {
                         budget_bytes,
+                        strict: self.strict_spill,
                         ..Default::default()
                     };
-                    return self.session.ingest_streamed(&data, tau, &opts).map(|(h, _)| h);
+                    let (h, st) = self.session.ingest_streamed(&data, tau, &opts)?;
+                    return Ok((h, IngestFacts::from_stats(&st)));
                 }
             }
-            return self.session.ingest(&data, tau);
+            return Ok((self.session.ingest(&data, tau)?, IngestFacts::default()));
         }
         if let Some(rows) = dataset.get("edges") {
             let n = req_usize(dataset, "n")? as u32;
@@ -412,7 +622,8 @@ impl Server {
                 &mut fstats,
             )?;
             timings.stop();
-            return self.session.ingest_filtration(f, timings, fstats, "wire-edges");
+            let h = self.session.ingest_filtration(f, timings, fstats, "wire-edges")?;
+            return Ok((h, IngestFacts::default()));
         }
         if let Some(p) = dataset.get("path") {
             let path = std::path::PathBuf::from(
@@ -424,7 +635,10 @@ impl Server {
             // the cache fingerprint covers the dataset JSON (path +
             // knobs + τ) plus the file's size and mtime, so a rewritten
             // file misses the cache instead of serving a stale handle.
-            let mut opts = crate::io::stream::StreamOptions::default();
+            let mut opts = crate::io::stream::StreamOptions {
+                strict: self.strict_spill,
+                ..Default::default()
+            };
             if let Some(v) = dataset.get("stream_chunk") {
                 opts.chunk_lines = v.as_usize().ok_or_else(|| {
                     DoryError::Request("'stream_chunk' must be a non-negative integer".into())
@@ -440,8 +654,8 @@ impl Server {
                     ))
                 })?;
             }
-            let (h, _stats) = self.session.ingest_sparse_file(&path, tau, &opts)?;
-            return Ok(h);
+            let (h, stats) = self.session.ingest_sparse_file(&path, tau, &opts)?;
+            return Ok((h, IngestFacts::from_stats(&stats)));
         }
         Err(DoryError::Request(
             "dataset must specify 'kind', 'points', 'edges', or 'path'".into(),
@@ -453,22 +667,49 @@ impl Server {
             .get("handle")
             .and_then(|h| h.as_str())
             .ok_or_else(|| DoryError::Request("missing string field 'handle'".into()))?;
-        self.cache.lock().unwrap().get(key).ok_or_else(|| {
+        relock(&self.cache).get(key).ok_or_else(|| {
             DoryError::Request(format!(
                 "unknown or evicted handle '{key}'; re-ingest the dataset"
             ))
         })
     }
 
+    /// One session query with the serve-side panic boundary: a worker
+    /// panic (or the armed `serve-query-panic` failpoint) becomes a
+    /// typed `Internal` error instead of unwinding into the request
+    /// loop. The session's query path takes `&self` and never leaves
+    /// the shared handle half-mutated, so catching here is sound — the
+    /// handle keeps serving bit-identical diagrams afterwards.
+    fn query_caught(
+        &self,
+        h: &FiltrationHandle,
+        ph: &PhRequest,
+    ) -> Result<PhResponse, DoryError> {
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            if failpoint::should_fail(failpoint::SERVE_QUERY_PANIC) {
+                panic!("injected serve-query panic");
+            }
+            self.session.query(h, ph)
+        }))
+        .unwrap_or_else(|_| {
+            self.resilience.panics.fetch_add(1, Ordering::Relaxed);
+            Err(DoryError::Internal(
+                "query worker panicked; the handle remains serviceable".into(),
+            ))
+        })
+    }
+
     fn handle_query(&self, tenant: &str, req: &Json) -> Result<Json, DoryError> {
+        let _permit = self.gate.admit(tenant)?;
         let h = self.lookup(req)?;
         let ph = parse_ph_request(req)?;
-        let resp = self.session.query(&h, &ph)?;
+        let resp = self.query_caught(&h, &ph)?;
         self.bump_tenant(tenant, |t| t.queries += 1);
         Ok(query_ok(&resp))
     }
 
     fn handle_batch(&self, tenant: &str, req: &Json) -> Result<Json, DoryError> {
+        let _permit = self.gate.admit(tenant)?;
         let h = self.lookup(req)?;
         let bodies = req
             .get("queries")
@@ -508,26 +749,24 @@ impl Server {
                         break;
                     }
                     let waited = t0.elapsed().as_nanos() as u64;
-                    // A panicking query must not poison the whole batch
-                    // (the per-thread fan-out reported it typed); keep
-                    // that contract and keep this worker draining.
-                    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                        self.session.query(h, &phs[i])
-                    }))
-                    .unwrap_or_else(|_| {
-                        Err(DoryError::Request("batch query worker panicked".into()))
-                    });
+                    // A panicking query must not poison the whole batch:
+                    // it is caught per query, reported as a typed
+                    // Internal error in its slot, and this worker keeps
+                    // draining the rest.
+                    let r = self.query_caught(h, &phs[i]);
                     wait_ns.fetch_add(waited, Ordering::Relaxed);
-                    *slots[i].lock().unwrap() = Some(r);
+                    *relock(&slots[i]) = Some(r);
                 });
             }
         });
         let results: Vec<Result<PhResponse, DoryError>> = slots
             .into_iter()
             .map(|s| {
-                s.into_inner().unwrap().unwrap_or_else(|| {
-                    Err(DoryError::Request("batch query worker panicked".into()))
-                })
+                s.into_inner()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .unwrap_or_else(|| {
+                        Err(DoryError::Internal("batch query worker panicked".into()))
+                    })
             })
             .collect();
         self.bump_tenant(tenant, |t| {
@@ -545,10 +784,10 @@ impl Server {
     /// stats, peak RSS.
     pub fn summary_json(&self) -> Json {
         let mut tenants = Json::obj();
-        for (name, c) in self.tenants.lock().unwrap().iter() {
+        for (name, c) in relock(&self.tenants).iter() {
             tenants = tenants.field(name, c.to_json());
         }
-        let cs = self.cache.lock().unwrap().stats();
+        let cs = relock(&self.cache).stats();
         let cache = Json::obj()
             .field("hits", cs.hits)
             .field("misses", cs.misses)
@@ -556,17 +795,26 @@ impl Server {
             .field("evictions", cs.evictions)
             .field("bytes", cs.bytes)
             .field("peak_bytes", cs.peak_bytes);
-        let fa = self.frontend.lock().unwrap();
+        let fa = relock(&self.frontend);
         let frontend = Json::obj()
             .field("dist_kernel", fa.dist_kernel)
             .field("dense_spilled_runs", fa.dense_spilled_runs)
             .field("dense_spilled_bytes", fa.dense_spilled_bytes)
             .field("dense_staging_peak_bytes", fa.dense_staging_peak_bytes);
         drop(fa);
+        let rc = &self.resilience;
+        let resilience = Json::obj()
+            .field("shed", self.gate.shed.load(Ordering::Relaxed))
+            .field("panics", rc.panics.load(Ordering::Relaxed))
+            .field("write_retries", rc.write_retries.load(Ordering::Relaxed))
+            .field("degraded_ingests", rc.degraded_ingests.load(Ordering::Relaxed))
+            .field("ingest_io_retries", rc.ingest_io_retries.load(Ordering::Relaxed))
+            .field("swept_spill_files", rc.swept_spill_files.load(Ordering::Relaxed));
         Json::obj()
             .field("tenants", tenants)
             .field("cache", cache)
             .field("frontend", frontend)
+            .field("resilience", resilience)
             .field("session", self.session.stats().to_json())
             .field("max_rss_bytes", memtrack::max_rss_bytes())
     }
@@ -620,10 +868,21 @@ fn parse_ph_request(req: &Json) -> Result<PhRequest, DoryError> {
                 .to_string(),
         );
     }
+    if let Some(v) = req.get("timeout_ms") {
+        ph.timeout_ms = Some(v.as_usize().ok_or_else(|| {
+            DoryError::Request("'timeout_ms' must be a non-negative integer".into())
+        })? as u64);
+    }
     Ok(ph)
 }
 
-fn ingest_ok(key: &str, h: &FiltrationHandle, cached: bool, evicted: &[String]) -> Json {
+fn ingest_ok(
+    key: &str,
+    h: &FiltrationHandle,
+    cached: bool,
+    evicted: &[String],
+    degraded: bool,
+) -> Json {
     let mut ev = Json::arr();
     for k in evicted {
         ev.push(k.as_str());
@@ -638,6 +897,7 @@ fn ingest_ok(key: &str, h: &FiltrationHandle, cached: bool, evicted: &[String]) 
         .field("edge_source", h.edge_source)
         .field("dist_kernel", h.stats().dist_kernel)
         .field("dense_spilled_runs", h.stats().dense_spilled_runs)
+        .field("degraded", degraded)
         .field("evicted", ev)
 }
 
@@ -716,6 +976,9 @@ mod tests {
 
     #[test]
     fn ingest_query_roundtrip_with_cache_hit() {
+        // Failpoints are process-global: hold the test lock so an
+        // armed sibling test cannot inject into this one.
+        let _fp = failpoint::test_lock();
         let srv = server();
         let lines = concat!(
             r#"{"id":1,"tenant":"a","method":"ingest","tau":1e999,"dataset":{"kind":"circle","n":48,"seed":7}}"#,
@@ -757,6 +1020,9 @@ mod tests {
 
     #[test]
     fn typed_errors_cross_the_wire() {
+        // Failpoints are process-global: hold the test lock so an
+        // armed sibling test cannot inject into this one.
+        let _fp = failpoint::test_lock();
         let srv = server();
         let lines = concat!(
             r#"{"id":1,"method":"ingest","dataset":{"n":3,"edges":[[0,0,0.5]]}}"#,
@@ -787,6 +1053,9 @@ mod tests {
 
     #[test]
     fn negative_tau_refused_on_the_wire() {
+        // Failpoints are process-global: hold the test lock so an
+        // armed sibling test cannot inject into this one.
+        let _fp = failpoint::test_lock();
         let srv = server();
         let out = drive(
             &srv,
@@ -824,6 +1093,9 @@ mod tests {
 
     #[test]
     fn batch_is_concurrent_and_order_preserving() {
+        // Failpoints are process-global: hold the test lock so an
+        // armed sibling test cannot inject into this one.
+        let _fp = failpoint::test_lock();
         let srv = server();
         let out = drive(
             &srv,
@@ -889,6 +1161,9 @@ mod tests {
 
     #[test]
     fn bounded_batch_handles_more_queries_than_workers() {
+        // Failpoints are process-global: hold the test lock so an
+        // armed sibling test cannot inject into this one.
+        let _fp = failpoint::test_lock();
         // 12 queries on a threads:2 server: the bounded crew (2 workers)
         // must drain the whole batch in request order — the old
         // thread-per-query fan-out is gone.
@@ -936,6 +1211,9 @@ mod tests {
 
     #[test]
     fn dataset_by_path_stream_ingests_on_the_wire() {
+        // Failpoints are process-global: hold the test lock so an
+        // armed sibling test cannot inject into this one.
+        let _fp = failpoint::test_lock();
         let dir = std::env::temp_dir().join("dory-serve-tests");
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("wire.coo");
@@ -980,6 +1258,9 @@ mod tests {
 
     #[test]
     fn points_with_budget_stream_through_the_spill_store() {
+        // Failpoints are process-global: hold the test lock so an
+        // armed sibling test cannot inject into this one.
+        let _fp = failpoint::test_lock();
         let srv = server();
         // A unit square at τ=∞: identical topology from the in-memory
         // and the budgeted dense-stream ingests.
@@ -1018,6 +1299,9 @@ mod tests {
 
     #[test]
     fn path_reingest_sees_file_changes() {
+        // Failpoints are process-global: hold the test lock so an
+        // armed sibling test cannot inject into this one.
+        let _fp = failpoint::test_lock();
         let dir = std::env::temp_dir().join("dory-serve-stale");
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("stale.coo");
@@ -1043,6 +1327,9 @@ mod tests {
 
     #[test]
     fn oversized_edge_budget_is_a_typed_error() {
+        // Failpoints are process-global: hold the test lock so an
+        // armed sibling test cannot inject into this one.
+        let _fp = failpoint::test_lock();
         let dir = std::env::temp_dir().join("dory-serve-budget");
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("tiny.coo");
@@ -1065,6 +1352,9 @@ mod tests {
 
     #[test]
     fn data_root_confines_path_ingest() {
+        // Failpoints are process-global: hold the test lock so an
+        // armed sibling test cannot inject into this one.
+        let _fp = failpoint::test_lock();
         let root = std::env::temp_dir().join("dory-serve-root");
         std::fs::create_dir_all(&root).unwrap();
         let inside = root.join("in.coo");
@@ -1097,8 +1387,149 @@ mod tests {
         assert!(e.get("message").unwrap().as_str().unwrap().contains("data root"));
     }
 
+    /// Ingest a small circle and return its handle key.
+    fn ingest_circle(srv: &Server, n: usize) -> String {
+        let out = drive(
+            srv,
+            &format!(
+                "{{\"id\":1,\"method\":\"ingest\",\"dataset\":{{\"kind\":\"circle\",\"n\":{n},\"seed\":7}}}}\n"
+            ),
+        );
+        out[0]
+            .get("ok")
+            .unwrap()
+            .get("handle")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .to_string()
+    }
+
+    #[test]
+    fn injected_query_panic_is_typed_internal_and_server_survives() {
+        let _guard = failpoint::test_lock();
+        failpoint::clear();
+        let srv = server();
+        let key = ingest_circle(&srv, 40);
+        let q = format!("{{\"id\":9,\"method\":\"query\",\"handle\":\"{key}\",\"tau\":0.4,\"max_dim\":1}}\n");
+        // Baseline betti, then the same query with a panic injected.
+        let base = drive(&srv, &q);
+        let want = base[0].get("ok").unwrap().get("betti").unwrap().render();
+        failpoint::arm(failpoint::SERVE_QUERY_PANIC, failpoint::Trigger::Nth(1));
+        let out = drive(&srv, &q);
+        failpoint::clear();
+        let e = out[0].get("error").unwrap();
+        assert_eq!(e.get("kind").unwrap().as_str(), Some("Internal"));
+        assert!(e.get("message").unwrap().as_str().unwrap().contains("panicked"));
+        // The server keeps serving the same handle, bit-identically.
+        let again = drive(&srv, &q);
+        let got = again[0].get("ok").unwrap().get("betti").unwrap().render();
+        assert_eq!(got, want);
+        let summary = again.last().unwrap().get("summary").unwrap();
+        let rc = summary.get("resilience").unwrap();
+        assert_eq!(rc.get("panics").unwrap().as_usize(), Some(1));
+    }
+
+    #[test]
+    fn overload_gate_sheds_typed_and_recovers_when_capacity_frees() {
+        // Failpoints are process-global: hold the test lock so an
+        // armed sibling test cannot inject into this one.
+        let _fp = failpoint::test_lock();
+        let srv = Server::new(
+            EngineOptions {
+                threads: 2,
+                ..Default::default()
+            },
+            64 << 20,
+        )
+        .with_overload(1, 1);
+        let key = ingest_circle(&srv, 32);
+        let q = format!("{{\"id\":5,\"method\":\"query\",\"handle\":\"{key}\",\"tau\":0.4}}\n");
+        // Occupy the single slot, then try to serve: typed shed.
+        let permit = srv.gate.admit("elsewhere").unwrap();
+        let out = drive(&srv, &q);
+        let e = out[0].get("error").unwrap();
+        assert_eq!(e.get("kind").unwrap().as_str(), Some("Overloaded"));
+        assert!(e.get("message").unwrap().as_str().unwrap().contains("capacity"));
+        drop(permit);
+        // Capacity freed: the same request now succeeds, and the shed
+        // was counted (ingest + admit = the permit path works).
+        let out = drive(&srv, &q);
+        assert!(out[0].get("ok").is_some(), "{}", out[0].render());
+        let summary = out.last().unwrap().get("summary").unwrap();
+        let rc = summary.get("resilience").unwrap();
+        assert_eq!(rc.get("shed").unwrap().as_usize(), Some(1));
+    }
+
+    #[test]
+    fn tenant_quota_sheds_one_tenant_without_starving_another() {
+        // Failpoints are process-global: hold the test lock so an
+        // armed sibling test cannot inject into this one.
+        let _fp = failpoint::test_lock();
+        let srv = Server::new(
+            EngineOptions {
+                threads: 2,
+                ..Default::default()
+            },
+            64 << 20,
+        )
+        .with_overload(8, 1);
+        let key = ingest_circle(&srv, 32);
+        // Tenant "a" holds its one slot; more "a" load sheds, "b" serves.
+        let permit = srv.gate.admit("a").unwrap();
+        let qa = format!("{{\"id\":6,\"tenant\":\"a\",\"method\":\"query\",\"handle\":\"{key}\",\"tau\":0.4}}\n");
+        let qb = format!("{{\"id\":7,\"tenant\":\"b\",\"method\":\"query\",\"handle\":\"{key}\",\"tau\":0.4}}\n");
+        let out = drive(&srv, &qa);
+        let e = out[0].get("error").unwrap();
+        assert_eq!(e.get("kind").unwrap().as_str(), Some("Overloaded"));
+        assert!(e.get("message").unwrap().as_str().unwrap().contains("tenant 'a'"));
+        let out = drive(&srv, &qb);
+        assert!(out[0].get("ok").is_some(), "{}", out[0].render());
+        drop(permit);
+    }
+
+    #[test]
+    fn zero_timeout_query_is_typed_deadline_and_handle_survives() {
+        // Failpoints are process-global: hold the test lock so an
+        // armed sibling test cannot inject into this one.
+        let _fp = failpoint::test_lock();
+        let srv = server();
+        let key = ingest_circle(&srv, 40);
+        let q = format!("{{\"id\":3,\"method\":\"query\",\"handle\":\"{key}\",\"tau\":0.4,\"max_dim\":1}}\n");
+        let base = drive(&srv, &q);
+        let want = base[0].get("ok").unwrap().get("betti").unwrap().render();
+        let qt = format!(
+            "{{\"id\":4,\"method\":\"query\",\"handle\":\"{key}\",\"tau\":0.4,\"max_dim\":1,\"timeout_ms\":0}}\n"
+        );
+        let out = drive(&srv, &qt);
+        let e = out[0].get("error").unwrap();
+        assert_eq!(e.get("kind").unwrap().as_str(), Some("DeadlineExceeded"));
+        // The expired request left the handle fully serviceable.
+        let again = drive(&srv, &q);
+        let got = again[0].get("ok").unwrap().get("betti").unwrap().render();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn injected_response_write_fault_is_retried_transparently() {
+        let _guard = failpoint::test_lock();
+        failpoint::clear();
+        let srv = server();
+        failpoint::arm(failpoint::SERVE_WRITE, failpoint::Trigger::Nth(1));
+        let out = drive(&srv, "{\"id\":1,\"method\":\"stats\"}\n");
+        failpoint::clear();
+        // Both the response and the trailer arrived despite the fault.
+        assert!(out[0].get("ok").is_some());
+        let summary = out.last().unwrap().get("summary").unwrap();
+        let rc = summary.get("resilience").unwrap();
+        assert!(rc.get("write_retries").unwrap().as_usize().unwrap() >= 1);
+    }
+
     #[test]
     fn shutdown_stops_and_summarizes() {
+        // Failpoints are process-global: hold the test lock so an
+        // armed sibling test cannot inject into this one.
+        let _fp = failpoint::test_lock();
         let srv = server();
         let out = drive(
             &srv,

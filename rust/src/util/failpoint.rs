@@ -1,0 +1,393 @@
+//! Deterministic fault injection for resilience testing.
+//!
+//! A *failpoint* is a named site in production code (`spill-write`,
+//! `merge-open`, `serve-write`, …) where a fault can be injected on
+//! demand. Disarmed — the normal state — a hit costs one relaxed atomic
+//! load and nothing else; no registry lookup, no allocation. Armed, the
+//! site's trigger spec decides per hit whether to fire:
+//!
+//! * `nth(N)`  — fire exactly on the Nth hit (1-based), never again;
+//! * `first(N)`— fire on hits 1..=N, then stop (retry-then-succeed);
+//! * `every(K)`— fire on every Kth hit;
+//! * `always`  — fire on every hit;
+//! * `off`     — never fire (counts hits only).
+//!
+//! Arming happens through the test API ([`arm`]/[`clear`]) or, for whole
+//! processes under test (CI smokes), the `DORY_FAILPOINTS` environment
+//! variable: a `;`-separated list of `name=spec` entries, e.g.
+//! `DORY_FAILPOINTS="spill-write=nth(2);serve-query-panic=first(1)"`,
+//! parsed once on first hit. Injected faults surface as
+//! `std::io::Error` of kind `Other` whose message names the failpoint,
+//! so retry layers treat them exactly like real transient I/O errors.
+//!
+//! The registry is process-global: tests that arm failpoints must
+//! serialize behind a lock and [`clear`] on exit (see
+//! `rust/tests/faults.rs`).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// Spill-run file creation/write/flush in `SpillStore::spill_run`.
+pub const SPILL_WRITE: &str = "spill-write";
+/// Per-key reads inside `RunReader::next` during the k-way merge.
+pub const SPILL_READ: &str = "spill-read";
+/// Re-opening spilled runs in `SpillStore::finish`.
+pub const MERGE_OPEN: &str = "merge-open";
+/// Line reads in the streaming COO reader.
+pub const STREAM_READ: &str = "stream-read";
+/// Response writes in the `dory serve` output loop.
+pub const SERVE_WRITE: &str = "serve-write";
+/// Synthetic worker panic inside the single-query serve path.
+pub const SERVE_QUERY_PANIC: &str = "serve-query-panic";
+
+/// When a named failpoint should fire.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Trigger {
+    /// Fire exactly on the `n`th hit (1-based).
+    Nth(u64),
+    /// Fire on hits `1..=n`, then never again.
+    First(u64),
+    /// Fire on every `k`th hit (`k >= 1`).
+    Every(u64),
+    /// Fire on every hit.
+    Always,
+    /// Never fire; hits are still counted.
+    Off,
+}
+
+impl Trigger {
+    /// Parse a spec string: `nth(3)`, `first(2)`, `every(5)`, `always`,
+    /// `off`.
+    pub fn parse(spec: &str) -> Option<Trigger> {
+        let s = spec.trim();
+        match s {
+            "always" => return Some(Trigger::Always),
+            "off" => return Some(Trigger::Off),
+            _ => {}
+        }
+        let (head, rest) = s.split_once('(')?;
+        let arg: u64 = rest.strip_suffix(')')?.trim().parse().ok()?;
+        match head.trim() {
+            "nth" if arg >= 1 => Some(Trigger::Nth(arg)),
+            "first" => Some(Trigger::First(arg)),
+            "every" if arg >= 1 => Some(Trigger::Every(arg)),
+            _ => None,
+        }
+    }
+
+    fn fires(&self, hit: u64) -> bool {
+        match *self {
+            Trigger::Nth(n) => hit == n,
+            Trigger::First(n) => hit <= n,
+            Trigger::Every(k) => hit % k == 0,
+            Trigger::Always => true,
+            Trigger::Off => false,
+        }
+    }
+}
+
+struct Point {
+    trigger: Trigger,
+    hits: AtomicU64,
+    fired: AtomicU64,
+}
+
+/// Fast path: a single relaxed load decides "nothing is armed" without
+/// touching the registry mutex.
+static ARMED: AtomicBool = AtomicBool::new(false);
+static REGISTRY: OnceLock<Mutex<HashMap<String, Point>>> = OnceLock::new();
+/// Whether `DORY_FAILPOINTS` has been consumed yet.
+static ENV_LOADED: OnceLock<()> = OnceLock::new();
+
+fn registry() -> &'static Mutex<HashMap<String, Point>> {
+    REGISTRY.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+fn load_env_once() {
+    ENV_LOADED.get_or_init(|| {
+        if let Ok(spec) = std::env::var("DORY_FAILPOINTS") {
+            arm_from_spec(&spec);
+        }
+    });
+}
+
+/// Arm failpoints from a `name=spec;name=spec` string (the
+/// `DORY_FAILPOINTS` format). Malformed entries are ignored — fault
+/// injection must never take down a production process on its own.
+pub fn arm_from_spec(spec: &str) {
+    for entry in spec.split(';') {
+        let entry = entry.trim();
+        if entry.is_empty() {
+            continue;
+        }
+        if let Some((name, trig)) = entry.split_once('=') {
+            if let Some(t) = Trigger::parse(trig) {
+                arm(name.trim(), t);
+            }
+        }
+    }
+}
+
+/// Arm one failpoint. Resets its hit counter.
+pub fn arm(name: &str, trigger: Trigger) {
+    let mut reg = registry().lock().unwrap_or_else(|e| e.into_inner());
+    reg.insert(
+        name.to_string(),
+        Point {
+            trigger,
+            hits: AtomicU64::new(0),
+            fired: AtomicU64::new(0),
+        },
+    );
+    ARMED.store(true, Ordering::Release);
+}
+
+/// Disarm every failpoint and restore the zero-cost fast path.
+pub fn clear() {
+    let mut reg = registry().lock().unwrap_or_else(|e| e.into_inner());
+    reg.clear();
+    ARMED.store(false, Ordering::Release);
+}
+
+/// How many times `name` fired (not merely hit) since it was armed.
+pub fn fired_count(name: &str) -> u64 {
+    let reg = registry().lock().unwrap_or_else(|e| e.into_inner());
+    reg.get(name).map_or(0, |p| p.fired.load(Ordering::Relaxed))
+}
+
+/// Record a hit at failpoint `name`; returns `true` when the armed
+/// trigger says this hit must fail. Disarmed cost: one relaxed load.
+#[inline]
+pub fn should_fail(name: &str) -> bool {
+    load_env_once();
+    if !ARMED.load(Ordering::Acquire) {
+        return false;
+    }
+    should_fail_slow(name)
+}
+
+#[cold]
+fn should_fail_slow(name: &str) -> bool {
+    let reg = registry().lock().unwrap_or_else(|e| e.into_inner());
+    match reg.get(name) {
+        Some(p) => {
+            let hit = p.hits.fetch_add(1, Ordering::Relaxed) + 1;
+            let fire = p.trigger.fires(hit);
+            if fire {
+                p.fired.fetch_add(1, Ordering::Relaxed);
+            }
+            fire
+        }
+        None => false,
+    }
+}
+
+/// Check failpoint `name`, surfacing a fire as an injected
+/// `std::io::Error` (kind `Other`). Production call sites gate their
+/// real I/O on this: `failpoint::check(SPILL_WRITE)?;`.
+#[inline]
+pub fn check(name: &str) -> std::io::Result<()> {
+    if should_fail(name) {
+        Err(injected(name))
+    } else {
+        Ok(())
+    }
+}
+
+/// The error an armed failpoint injects. Message format is stable —
+/// [`is_injected`] and the retry layer key off the prefix.
+pub fn injected(name: &str) -> std::io::Error {
+    std::io::Error::other(format!("failpoint injected fault at `{name}`"))
+}
+
+/// Whether `e` was manufactured by a failpoint (as opposed to a real
+/// I/O failure). Read retries use this: an injected fault happens
+/// *before* any bytes move, so the stream position is intact and the
+/// operation is safe to re-issue; a real partial read is not.
+pub fn is_injected(e: &std::io::Error) -> bool {
+    e.to_string().starts_with("failpoint injected fault at ")
+}
+
+/// Process-wide serialization for tests that arm failpoints: the
+/// registry is global, so concurrently armed tests would trip each
+/// other's triggers. Hold the guard for the test's duration and
+/// [`clear`] before releasing it. Poison-recovering — one panicking
+/// test must not brick the rest of the suite.
+#[doc(hidden)]
+pub fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+// ---------------------------------------------------------------------
+// Bounded retry with backoff.
+// ---------------------------------------------------------------------
+
+/// Retry policy for transient spill/serve I/O: `attempts` total tries
+/// with a doubling sleep starting at `base_delay` between them.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    pub attempts: u32,
+    pub base_delay: std::time::Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            attempts: 3,
+            // Short enough that tests retrying through `first(2)` specs
+            // finish instantly; the doubling matters under real EIO.
+            base_delay: std::time::Duration::from_millis(2),
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Run `op` up to `attempts` times. `cleanup` runs between a failed
+    /// attempt and its retry (e.g. remove a partially written spill
+    /// file so the rewrite starts clean). Each retry is counted into
+    /// `retries`. The final error is returned unchanged.
+    pub fn run<T>(
+        &self,
+        retries: &AtomicU64,
+        mut op: impl FnMut() -> std::io::Result<T>,
+        mut cleanup: impl FnMut(),
+    ) -> std::io::Result<T> {
+        let mut delay = self.base_delay;
+        let mut last: Option<std::io::Error> = None;
+        for attempt in 0..self.attempts.max(1) {
+            if attempt > 0 {
+                cleanup();
+                retries.fetch_add(1, Ordering::Relaxed);
+                std::thread::sleep(delay);
+                delay = delay.saturating_mul(2);
+            }
+            match op() {
+                Ok(v) => return Ok(v),
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(last.expect("at least one attempt ran"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The registry is process-global and tests run threaded: every test
+    // that arms a point takes the crate-wide lock and clears on both
+    // ends (shared with the io::stream fault tests in this binary).
+    fn locked() -> std::sync::MutexGuard<'static, ()> {
+        let g = test_lock();
+        clear();
+        g
+    }
+
+    #[test]
+    fn trigger_specs_parse() {
+        assert_eq!(Trigger::parse("nth(3)"), Some(Trigger::Nth(3)));
+        assert_eq!(Trigger::parse(" first(2) "), Some(Trigger::First(2)));
+        assert_eq!(Trigger::parse("every(5)"), Some(Trigger::Every(5)));
+        assert_eq!(Trigger::parse("always"), Some(Trigger::Always));
+        assert_eq!(Trigger::parse("off"), Some(Trigger::Off));
+        assert!(Trigger::parse("nth(0)").is_none());
+        assert!(Trigger::parse("every(0)").is_none());
+        assert!(Trigger::parse("sometimes").is_none());
+        assert!(Trigger::parse("nth(x)").is_none());
+    }
+
+    #[test]
+    fn disarmed_points_never_fire() {
+        let _g = locked();
+        for _ in 0..100 {
+            assert!(!should_fail("unarmed-point"));
+        }
+    }
+
+    #[test]
+    fn nth_fires_exactly_once() {
+        let _g = locked();
+        arm("t-nth", Trigger::Nth(3));
+        let fires: Vec<bool> = (0..6).map(|_| should_fail("t-nth")).collect();
+        assert_eq!(fires, vec![false, false, true, false, false, false]);
+        assert_eq!(fired_count("t-nth"), 1);
+        clear();
+    }
+
+    #[test]
+    fn first_fires_then_recovers() {
+        let _g = locked();
+        arm("t-first", Trigger::First(2));
+        let fires: Vec<bool> = (0..4).map(|_| should_fail("t-first")).collect();
+        assert_eq!(fires, vec![true, true, false, false]);
+        clear();
+    }
+
+    #[test]
+    fn every_k_cadence() {
+        let _g = locked();
+        arm("t-every", Trigger::Every(2));
+        let fires: Vec<bool> = (0..6).map(|_| should_fail("t-every")).collect();
+        assert_eq!(fires, vec![false, true, false, true, false, true]);
+        clear();
+    }
+
+    #[test]
+    fn spec_string_arms_multiple_points() {
+        let _g = locked();
+        arm_from_spec("a=nth(1); b = every(2) ;; junk; c=bogus(9)");
+        assert!(should_fail("a"));
+        assert!(!should_fail("a"));
+        assert!(!should_fail("b"));
+        assert!(should_fail("b"));
+        assert!(!should_fail("c"));
+        clear();
+    }
+
+    #[test]
+    fn injected_errors_are_recognizable() {
+        let e = injected("spill-write");
+        assert!(is_injected(&e));
+        assert!(e.to_string().contains("spill-write"));
+        let real = std::io::Error::other("disk on fire");
+        assert!(!is_injected(&real));
+    }
+
+    #[test]
+    fn retry_recovers_after_transient_failures() {
+        let _g = locked();
+        let retries = AtomicU64::new(0);
+        let mut left = 2;
+        let out = RetryPolicy::default().run(
+            &retries,
+            || {
+                if left > 0 {
+                    left -= 1;
+                    Err(std::io::Error::other("transient"))
+                } else {
+                    Ok(42)
+                }
+            },
+            || {},
+        );
+        assert_eq!(out.unwrap(), 42);
+        assert_eq!(retries.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn retry_exhaustion_returns_last_error() {
+        let _g = locked();
+        let retries = AtomicU64::new(0);
+        let mut cleanups = 0;
+        let out: std::io::Result<()> = RetryPolicy::default().run(
+            &retries,
+            || Err(std::io::Error::other("hard down")),
+            || cleanups += 1,
+        );
+        assert!(out.unwrap_err().to_string().contains("hard down"));
+        assert_eq!(retries.load(Ordering::Relaxed), 2);
+        assert_eq!(cleanups, 2);
+    }
+}

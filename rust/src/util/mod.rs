@@ -4,6 +4,7 @@
 //! self-contained replacements tailored to what the benches and the
 //! coordinator need.
 
+pub mod failpoint;
 pub mod fxhash;
 pub mod json;
 pub mod memtrack;

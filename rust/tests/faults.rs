@@ -1,0 +1,367 @@
+//! Fault-injection acceptance suite: the server and the ingest
+//! pipeline must *survive* injected spill I/O failures, worker panics,
+//! deadlines, and overload — answering typed errors on the wire and
+//! serving bit-identical diagrams once the fault clears.
+//!
+//! Failpoint state is process-global, so every test that arms one
+//! takes [`failpoint::test_lock`] through [`FaultScope`] (which also
+//! clears the registry on entry and exit); tests that inject nothing
+//! run lock-free.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Barrier;
+
+use dory::error::DoryError;
+use dory::homology::{EngineOptions, PhRequest, Session};
+use dory::io::stream::StreamOptions;
+use dory::serve::Server;
+use dory::util::failpoint::{self, Trigger};
+use dory::util::json::Json;
+
+/// Serialize failpoint-arming tests and guarantee a clean registry on
+/// both entry and exit, even when an assertion panics mid-test.
+struct FaultScope(#[allow(dead_code)] std::sync::MutexGuard<'static, ()>);
+
+impl FaultScope {
+    fn new() -> Self {
+        let guard = failpoint::test_lock();
+        failpoint::clear();
+        Self(guard)
+    }
+}
+
+impl Drop for FaultScope {
+    fn drop(&mut self) {
+        failpoint::clear();
+    }
+}
+
+/// A fresh per-test spill directory.
+fn fault_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("dory-faults-it-{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A complete graph on `n` vertices with deterministic distances —
+/// small enough to be fast, dense enough to spill under a 2 KiB budget.
+fn write_coo(name: &str, n: u32) -> (PathBuf, PathBuf) {
+    let dir = fault_dir(name);
+    let p = dir.join("edges.coo");
+    let mut text = String::new();
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let d = 1.0 + ((i * 31 + j * 7) % 13) as f64 / 10.0;
+            text.push_str(&format!("{i} {j} {d}\n"));
+        }
+    }
+    std::fs::write(&p, text).unwrap();
+    (p, dir)
+}
+
+fn spill_opts(dir: &PathBuf, strict: bool) -> StreamOptions {
+    StreamOptions {
+        chunk_lines: 16,
+        budget_bytes: 2048,
+        spill_dir: Some(dir.clone()),
+        strict,
+    }
+}
+
+fn session() -> Session {
+    Session::new(EngineOptions {
+        threads: 2,
+        ..Default::default()
+    })
+}
+
+fn diagram_bits(d: &dory::homology::Diagram) -> Vec<(usize, u64, u64)> {
+    let mut out = Vec::new();
+    for dim in 0..=d.max_dim() {
+        for p in d.points(dim) {
+            out.push((dim, p.birth.to_bits(), p.death.to_bits()));
+        }
+    }
+    out
+}
+
+fn query_bits(s: &Session, h: &dory::homology::FiltrationHandle, tau: f64) -> Vec<(usize, u64, u64)> {
+    let req = PhRequest {
+        tau,
+        max_dim: Some(1),
+        ..Default::default()
+    };
+    diagram_bits(&s.query(h, &req).unwrap().result.diagram)
+}
+
+#[test]
+fn spill_write_fault_mid_ingest_strict_is_typed_and_leaves_dir_clean() {
+    let _scope = FaultScope::new();
+    let (p, dir) = write_coo("strict-write", 48);
+    failpoint::arm(failpoint::SPILL_WRITE, Trigger::Always);
+    let s = session();
+    let e = s
+        .ingest_sparse_file(&p, f64::INFINITY, &spill_opts(&dir, true))
+        .unwrap_err();
+    assert!(matches!(e, DoryError::Io(_)), "{e}");
+    assert!(e.to_string().contains("failpoint"), "{e}");
+    // The failed ingest removed every partial spill run.
+    let stray: Vec<_> = std::fs::read_dir(&dir)
+        .unwrap()
+        .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+        .filter(|n| n.starts_with("dory-spill-"))
+        .collect();
+    assert!(stray.is_empty(), "stray spill files: {stray:?}");
+}
+
+#[test]
+fn spill_write_retry_then_succeed_is_bit_identical_end_to_end() {
+    // Take the lock before the baseline too: a sibling test's armed
+    // failpoint must not degrade (or fail) the fault-free reference run.
+    let _scope = FaultScope::new();
+    let (p, dir) = write_coo("retry-write", 48);
+    let base = session();
+    let (h0, st0) = base
+        .ingest_sparse_file(&p, f64::INFINITY, &spill_opts(&dir, false))
+        .unwrap();
+    assert!(st0.spilled_runs > 0, "fixture must actually spill");
+    let want = query_bits(&base, &h0, 2.0);
+
+    failpoint::arm(failpoint::SPILL_WRITE, Trigger::Nth(1));
+    let s = session();
+    let (h, st) = s
+        .ingest_sparse_file(&p, f64::INFINITY, &spill_opts(&dir, false))
+        .unwrap();
+    assert!(st.io_retries >= 1, "the injected fault must be retried");
+    assert!(!st.degraded);
+    assert_eq!(st.spilled_runs, st0.spilled_runs);
+    assert_eq!(query_bits(&s, &h, 2.0), want);
+}
+
+#[test]
+fn degraded_ingest_is_flagged_and_bit_identical() {
+    let _scope = FaultScope::new();
+    let (p, dir) = write_coo("degrade", 48);
+    let base = session();
+    let (h0, _) = base
+        .ingest_sparse_file(&p, f64::INFINITY, &spill_opts(&dir, false))
+        .unwrap();
+    let want = query_bits(&base, &h0, 2.0);
+
+    failpoint::arm(failpoint::SPILL_WRITE, Trigger::Always);
+    let s = session();
+    let (h, st) = s
+        .ingest_sparse_file(&p, f64::INFINITY, &spill_opts(&dir, false))
+        .unwrap();
+    assert!(st.degraded, "an unwritable spill dir must degrade");
+    assert_eq!(st.spilled_runs, 0);
+    assert_eq!(query_bits(&s, &h, 2.0), want);
+    drop(_scope);
+    let stray: Vec<_> = std::fs::read_dir(&dir)
+        .unwrap()
+        .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+        .filter(|n| n.starts_with("dory-spill-"))
+        .collect();
+    assert!(stray.is_empty(), "stray spill files: {stray:?}");
+}
+
+#[test]
+fn merge_open_fault_is_typed_and_leaves_dir_clean() {
+    let _scope = FaultScope::new();
+    let (p, dir) = write_coo("merge-open", 48);
+    failpoint::arm(failpoint::MERGE_OPEN, Trigger::Always);
+    let s = session();
+    let e = s
+        .ingest_sparse_file(&p, f64::INFINITY, &spill_opts(&dir, false))
+        .unwrap_err();
+    assert!(matches!(e, DoryError::Io(_)), "{e}");
+    drop(_scope);
+    let stray: Vec<_> = std::fs::read_dir(&dir)
+        .unwrap()
+        .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+        .filter(|n| n.starts_with("dory-spill-"))
+        .collect();
+    assert!(stray.is_empty(), "stray spill files: {stray:?}");
+}
+
+#[test]
+fn deadline_exceeded_leaves_handle_fully_serviceable() {
+    // Arms nothing, but the spilling ingest below must not trip a
+    // sibling test's armed spill/merge failpoint.
+    let _scope = FaultScope::new();
+    let (p, dir) = write_coo("deadline", 48);
+    let s = session();
+    let (h, _) = s
+        .ingest_sparse_file(&p, f64::INFINITY, &spill_opts(&dir, false))
+        .unwrap();
+    let want = query_bits(&s, &h, 2.0);
+    // An already-expired deadline aborts typed, mid-validation.
+    let e = s
+        .query(
+            &h,
+            &PhRequest {
+                tau: 2.0,
+                max_dim: Some(1),
+                timeout_ms: Some(0),
+                ..Default::default()
+            },
+        )
+        .unwrap_err();
+    assert!(matches!(e, DoryError::DeadlineExceeded(_)), "{e}");
+    // The aborted query left nothing behind: same handle, same bits.
+    assert_eq!(query_bits(&s, &h, 2.0), want);
+}
+
+/// Drive one request line against a serve front and parse the response.
+fn wire(srv: &Server, line: &str) -> Json {
+    let (resp, _stop) = srv.handle_line(line);
+    resp
+}
+
+fn wire_ingest_circle(srv: &Server, n: usize) -> String {
+    let resp = wire(
+        srv,
+        &format!(
+            "{{\"id\":1,\"method\":\"ingest\",\"dataset\":{{\"kind\":\"circle\",\"n\":{n},\"seed\":7}}}}"
+        ),
+    );
+    resp.get("ok")
+        .unwrap_or_else(|| panic!("ingest failed: {}", resp.render()))
+        .get("handle")
+        .unwrap()
+        .as_str()
+        .unwrap()
+        .to_string()
+}
+
+#[test]
+fn injected_serve_panic_is_internal_then_service_is_bit_identical() {
+    let _scope = FaultScope::new();
+    let srv = Server::new(
+        EngineOptions {
+            threads: 2,
+            ..Default::default()
+        },
+        64 << 20,
+    );
+    let key = wire_ingest_circle(&srv, 40);
+    let q = format!("{{\"id\":2,\"method\":\"query\",\"handle\":\"{key}\",\"tau\":0.4,\"max_dim\":1}}");
+    let want = wire(&srv, &q).get("ok").unwrap().get("betti").unwrap().render();
+    failpoint::arm(failpoint::SERVE_QUERY_PANIC, Trigger::Nth(1));
+    let resp = wire(&srv, &q);
+    let e = resp.get("error").unwrap();
+    assert_eq!(e.get("kind").unwrap().as_str(), Some("Internal"));
+    failpoint::clear();
+    // The caught panic changed nothing the next request can observe.
+    let got = wire(&srv, &q).get("ok").unwrap().get("betti").unwrap().render();
+    assert_eq!(got, want);
+    let summary = wire(&srv, "{\"id\":3,\"method\":\"stats\"}");
+    let rc = summary.get("ok").unwrap().get("resilience").unwrap();
+    assert_eq!(rc.get("panics").unwrap().as_usize(), Some(1));
+}
+
+#[test]
+fn overload_flood_sheds_typed_while_the_other_tenant_completes() {
+    // Arms nothing, but a sibling's serve-query-panic failpoint would
+    // turn flood queries into Internal errors and break the typed-shed
+    // assertion — hold the lock for the test's duration.
+    let _scope = FaultScope::new();
+    let srv = Server::new(
+        EngineOptions {
+            threads: 2,
+            ..Default::default()
+        },
+        64 << 20,
+    )
+    .with_overload(2, 1);
+    let key = wire_ingest_circle(&srv, 48);
+
+    const FLOODERS: usize = 8;
+    const PER_THREAD: usize = 20;
+    let shed_seen = AtomicU64::new(0);
+    let ok_seen = AtomicU64::new(0);
+    let barrier = Barrier::new(FLOODERS);
+    std::thread::scope(|scope| {
+        for t in 0..FLOODERS {
+            let (srv, key, barrier, shed_seen, ok_seen) =
+                (&srv, &key, &barrier, &shed_seen, &ok_seen);
+            scope.spawn(move || {
+                barrier.wait();
+                for i in 0..PER_THREAD {
+                    let line = format!(
+                        "{{\"id\":{},\"tenant\":\"flood\",\"method\":\"query\",\"handle\":\"{key}\",\"tau\":0.4}}",
+                        t * PER_THREAD + i
+                    );
+                    let resp = wire(srv, &line);
+                    if resp.get("ok").is_some() {
+                        ok_seen.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        let e = resp.get("error").unwrap();
+                        // Every refusal is the typed overload error —
+                        // never a panic, lock poison, or misparse.
+                        assert_eq!(
+                            e.get("kind").unwrap().as_str(),
+                            Some("Overloaded"),
+                            "{}",
+                            resp.render()
+                        );
+                        shed_seen.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            });
+        }
+    });
+    // Concurrency did happen: the quota of 1 shed overlapping load, and
+    // plenty of the flood still got through.
+    assert!(shed_seen.load(Ordering::Relaxed) > 0, "flood never overlapped");
+    assert!(ok_seen.load(Ordering::Relaxed) > 0, "everything was shed");
+    // The calm tenant is admitted (quota is per-tenant; capacity 2
+    // leaves headroom now the flood is over) and served correctly.
+    let calm = wire(
+        &srv,
+        &format!("{{\"id\":99,\"tenant\":\"calm\",\"method\":\"query\",\"handle\":\"{key}\",\"tau\":0.4}}"),
+    );
+    assert!(calm.get("ok").is_some(), "{}", calm.render());
+    let summary = wire(&srv, "{\"id\":100,\"method\":\"stats\"}");
+    let rc = summary.get("ok").unwrap().get("resilience").unwrap();
+    assert_eq!(
+        rc.get("shed").unwrap().as_usize().unwrap() as u64,
+        shed_seen.load(Ordering::Relaxed)
+    );
+}
+
+#[test]
+fn wire_ingest_with_spill_fault_degrades_flagged_and_counted() {
+    let _scope = FaultScope::new();
+    // 420 vertices → ~88k edges ≈ 1.4 MiB of staged keys, which is
+    // past the 1 MiB wire budget: the ingest *must* try to spill, so
+    // the armed failpoint must fire and the ingest must degrade.
+    let (p, _dir) = write_coo("wire-degrade", 420);
+    let srv = Server::new(
+        EngineOptions {
+            threads: 2,
+            ..Default::default()
+        },
+        64 << 20,
+    );
+    failpoint::arm(failpoint::SPILL_WRITE, Trigger::Always);
+    let pd = p.display();
+    let resp = wire(
+        &srv,
+        &format!(
+            "{{\"id\":1,\"method\":\"ingest\",\"dataset\":{{\"path\":\"{pd}\",\"edge_budget_mb\":1,\"stream_chunk\":4096}}}}"
+        ),
+    );
+    failpoint::clear();
+    let ok = resp
+        .get("ok")
+        .unwrap_or_else(|| panic!("degraded ingest must succeed: {}", resp.render()));
+    assert_eq!(ok.get("degraded").unwrap().as_bool(), Some(true));
+    assert_eq!(ok.get("n_points").unwrap().as_usize(), Some(420));
+    let summary = wire(&srv, "{\"id\":2,\"method\":\"stats\"}");
+    let rc = summary.get("ok").unwrap().get("resilience").unwrap();
+    assert_eq!(rc.get("degraded_ingests").unwrap().as_usize(), Some(1));
+    assert!(rc.get("ingest_io_retries").unwrap().as_usize().unwrap() >= 1);
+}

@@ -45,6 +45,7 @@ fn req(tau: f64, max_dim: usize) -> PhRequest {
         shortcut: None,
         enclosing: None,
         label: None,
+        timeout_ms: None,
     }
 }
 
@@ -86,6 +87,7 @@ fn streamed_filtration_matches_in_memory_across_chunks_and_budgets() {
                 chunk_lines: chunk,
                 budget_bytes: budget,
                 spill_dir: None,
+                strict: false,
             };
             let mut fs = FiltrationStats::default();
             let (f, st) = stream_sparse_file(&p, tau, &opts, None, &mut fs).unwrap();
@@ -133,6 +135,7 @@ fn streamed_session_diagrams_are_bit_identical() {
             chunk_lines: 7,
             budget_bytes: budget,
             spill_dir: None,
+            strict: false,
         };
         let (h, _st) = session.ingest_sparse_file(&p, tau, &opts).unwrap();
         assert_eq!(h.edge_source, "stream");
@@ -176,6 +179,7 @@ fn dense_streamed_session_spills_and_matches_in_memory() {
             chunk_lines: 0,
             budget_bytes: budget,
             spill_dir: None,
+            strict: false,
         };
         let (h, st) = session
             .ingest_streamed(&data, f64::INFINITY, &opts)
@@ -239,6 +243,7 @@ fn out_of_core_duplicate_detection_survives_spilling() {
         chunk_lines: 16,
         budget_bytes: 1024,
         spill_dir: None,
+        strict: false,
     };
     let mut fs = FiltrationStats::default();
     let e = stream_sparse_file(&p, f64::INFINITY, &opts, None, &mut fs).unwrap_err();
@@ -298,6 +303,7 @@ fn million_edge_ingest_stays_inside_the_budget() {
                 chunk_lines: 0,
                 budget_bytes: budget,
                 spill_dir: None,
+                strict: false,
             },
         )
         .unwrap();
