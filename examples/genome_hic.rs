@@ -9,10 +9,15 @@
 //! most voids (H2) are never born.
 
 use dory::error::DoryError;
+use dory::features::{FeatureSpec, FeatureValue};
 use dory::geometry::MetricData;
 use dory::hic::{self, Condition, HiCParams};
 use dory::homology::{EngineOptions, PhRequest, Session};
 use dory::util::memtrack;
+
+/// Loops below this persistence are contact-noise, not called loops
+/// (the same threshold the Fig 21 "significant" H1 count uses).
+const LOOP_MIN_PERSISTENCE: f64 = 40.0;
 
 fn main() -> Result<(), DoryError> {
     let mut bins = 20_000usize;
@@ -39,7 +44,20 @@ fn main() -> Result<(), DoryError> {
         memtrack::reset_peak();
         let t0 = std::time::Instant::now();
         let handle = session.ingest(&MetricData::Sparse(sd), params.tau_max)?;
-        let r = session.query(&handle, &PhRequest::at(params.tau_max))?.result;
+        // The served query also carries the loop-calling feature: one
+        // tightened representative per significant H1 class, anchored on
+        // its birth edge — for Hi-C, the two genomic anchor bins.
+        let resp = session.query(
+            &handle,
+            &PhRequest {
+                tau: params.tau_max,
+                features: vec![FeatureSpec::Representatives {
+                    min_persistence: LOOP_MIN_PERSISTENCE,
+                }],
+                ..Default::default()
+            },
+        )?;
+        let r = resp.result;
         println!(
             "{cond:?}: n={bins} n_e={ne} | {:.2}s, peak heap {} | {}",
             t0.elapsed().as_secs_f64(),
@@ -53,6 +71,33 @@ fn main() -> Result<(), DoryError> {
             r.diagram.points(2).len(),
             r.diagram.significant(2, 20.0).len(),
         );
+        // The loop list: anchor bin pairs + persistence, strongest first.
+        let fo = resp.features.as_ref().expect("representatives requested");
+        if let Some(FeatureValue::Representatives(cycles)) =
+            fo.items.first().map(|i| &i.value)
+        {
+            let mut ranked: Vec<_> = cycles.iter().collect();
+            ranked.sort_by(|a, b| b.persistence().total_cmp(&a.persistence()));
+            println!(
+                "  loop list ({} loops with persistence > {LOOP_MIN_PERSISTENCE}):",
+                ranked.len()
+            );
+            for c in ranked.iter().take(10) {
+                println!(
+                    "    loop anchor=({:>6},{:>6}) birth={:>7.1} pers={:>7.1} \
+                     perimeter={:>8.1} span={:>4} bins",
+                    c.anchor.0,
+                    c.anchor.1,
+                    c.birth,
+                    c.persistence(),
+                    c.perimeter,
+                    c.vertices.len(),
+                );
+            }
+            if ranked.len() > 10 {
+                println!("    ... {} more", ranked.len() - 10);
+            }
+        }
         results.push(r);
     }
     let (ctrl, aux) = (&results[0], &results[1]);

@@ -662,5 +662,214 @@ fn main() {
         .field("dense_stream_spilled_bytes", dstats.spilled_bytes)
         .field("dense_stream_staging_peak_bytes", dstats.staging_peak_bytes);
 
+    // --- feature products ---------------------------------------------------
+    // CI gates for the features subsystem: (a) the pooled persistence-
+    // image raster must be BIT-identical to the serial one (hard assert
+    // here) and faster on a 4-thread pool (`feature_image_speedup`,
+    // gated in bench-trajectory); (b) the features served by the engine
+    // on the golden circle48 input must match the independent Python
+    // implementation (`fixtures/circle48.features.txt`) — integer Betti
+    // curves exactly, float kernels within 1e-12 relative
+    // (`feature_fixture_drift` counts the values that exceed it; the
+    // trajectory gate fails on any nonzero count).
+    let fixdir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/tests/fixtures");
+    let hex_f64 = |s: &str| -> f64 {
+        f64::from_bits(u64::from_str_radix(s, 16).expect("fixture hex"))
+    };
+    // The exact fixture input (NOT datasets::circle — transcendentals in
+    // the generators may differ from Python's by an ulp; the stored
+    // bit patterns are the contract).
+    let (fx_tau, fx_points) = {
+        let text = std::fs::read_to_string(fixdir.join("circle48.pd.txt")).expect("pd fixture");
+        let mut tau = 0.0f64;
+        let mut dim = 2usize;
+        let mut coords: Vec<f64> = Vec::new();
+        for line in text.lines() {
+            let mut it = line.split_whitespace();
+            match it.next() {
+                Some("tau") => tau = hex_f64(it.next().unwrap()),
+                Some("dim") => dim = it.next().unwrap().parse().unwrap(),
+                Some("point") => coords.extend(it.map(|t| hex_f64(t))),
+                _ => {}
+            }
+        }
+        (tau, dory::geometry::PointCloud::new(dim, coords))
+    };
+    // The Python-computed expectations.
+    let mut fx_span = 0.0f64;
+    let mut fx_grids = (0usize, 0usize, 0usize, 0usize); // betti, levels, lgrid, igrid
+    let mut fx_betti: Vec<Vec<u64>> = vec![Vec::new(); 2];
+    let mut fx_entropy: Vec<f64> = vec![0.0; 2];
+    let mut fx_landscape: Vec<Vec<f64>> = vec![Vec::new(); 2]; // flattened levels·samples
+    let mut fx_image: Vec<Vec<f64>> = vec![Vec::new(); 2];
+    {
+        let text =
+            std::fs::read_to_string(fixdir.join("circle48.features.txt")).expect("feature fixture");
+        for line in text.lines() {
+            let mut it = line.split_whitespace();
+            let Some(tag) = it.next() else { continue };
+            match tag {
+                "span" => fx_span = hex_f64(it.next().unwrap()),
+                "betti_grid" => fx_grids.0 = it.next().unwrap().parse().unwrap(),
+                "landscape_levels" => fx_grids.1 = it.next().unwrap().parse().unwrap(),
+                "landscape_grid" => fx_grids.2 = it.next().unwrap().parse().unwrap(),
+                "image_grid" => fx_grids.3 = it.next().unwrap().parse().unwrap(),
+                "betti" => {
+                    let d: usize = it.next().unwrap().parse().unwrap();
+                    fx_betti[d] = it.map(|v| v.parse().unwrap()).collect();
+                }
+                "entropy" => {
+                    let d: usize = it.next().unwrap().parse().unwrap();
+                    fx_entropy[d] = hex_f64(it.next().unwrap());
+                }
+                "landscape" => {
+                    let d: usize = it.next().unwrap().parse().unwrap();
+                    let _level: usize = it.next().unwrap().parse().unwrap();
+                    fx_landscape[d].extend(it.map(|t| hex_f64(t)));
+                }
+                "image" => {
+                    let d: usize = it.next().unwrap().parse().unwrap();
+                    let _row: usize = it.next().unwrap().parse().unwrap();
+                    fx_image[d].extend(it.map(|t| hex_f64(t)));
+                }
+                _ => {}
+            }
+        }
+    }
+    let feat_session = dory::homology::Session::new(EngineOptions {
+        max_dim: 1,
+        threads: 4,
+        ..Default::default()
+    });
+    let feat_handle = feat_session
+        .ingest(&dory::geometry::MetricData::Points(fx_points), fx_tau)
+        .expect("fixture ingest");
+    use dory::features::{FeatureSpec, FeatureValue};
+    let feat_resp = feat_session
+        .query(
+            &feat_handle,
+            &dory::homology::PhRequest {
+                tau: fx_tau,
+                features: vec![
+                    FeatureSpec::BettiCurve { grid: fx_grids.0 },
+                    FeatureSpec::Entropy,
+                    FeatureSpec::Landscape {
+                        levels: fx_grids.1,
+                        grid: fx_grids.2,
+                    },
+                    FeatureSpec::Image { grid: fx_grids.3 },
+                ],
+                ..Default::default()
+            },
+        )
+        .expect("fixture feature query");
+    let fo = feat_resp.features.as_ref().expect("features served");
+    assert_eq!(fo.span.to_bits(), fx_span.to_bits(), "feature span deviates");
+    // Drift: values beyond 1e-12 relative of the Python expectation
+    // (libm ulp noise passes; anything real does not).
+    let mut drift = 0u64;
+    let mut max_rel = 0.0f64;
+    let mut checked = 0u64;
+    fn tally(got: f64, want: f64, drift: &mut u64, max_rel: &mut f64, checked: &mut u64) {
+        let rel = (got - want).abs() / want.abs().max(1.0);
+        *max_rel = max_rel.max(rel);
+        *checked += 1;
+        if rel > 1e-12 {
+            *drift += 1;
+        }
+    }
+    for item in &fo.items {
+        match &item.value {
+            FeatureValue::BettiCurve(dims) => {
+                for (d, curve) in dims.iter().enumerate() {
+                    if curve != &fx_betti[d] {
+                        drift += curve.iter().zip(&fx_betti[d]).filter(|(a, b)| a != b).count()
+                            as u64;
+                    }
+                    checked += curve.len() as u64;
+                }
+            }
+            FeatureValue::Entropy(dims) => {
+                for (d, &v) in dims.iter().enumerate() {
+                    tally(v, fx_entropy[d], &mut drift, &mut max_rel, &mut checked);
+                }
+            }
+            FeatureValue::Landscape(dims) => {
+                for (d, levels) in dims.iter().enumerate() {
+                    let flat: Vec<f64> = levels.iter().flatten().copied().collect();
+                    assert_eq!(flat.len(), fx_landscape[d].len());
+                    for (&g, &w) in flat.iter().zip(&fx_landscape[d]) {
+                        tally(g, w, &mut drift, &mut max_rel, &mut checked);
+                    }
+                }
+            }
+            FeatureValue::Image(dims) => {
+                for (d, img) in dims.iter().enumerate() {
+                    assert_eq!(img.len(), fx_image[d].len());
+                    for (&g, &w) in img.iter().zip(&fx_image[d]) {
+                        tally(g, w, &mut drift, &mut max_rel, &mut checked);
+                    }
+                }
+            }
+            FeatureValue::Representatives(_) => {}
+        }
+    }
+    println!(
+        "{:<42} {:>12} vals   ({} drifted > 1e-12 rel, max rel {max_rel:.2e})",
+        "feature fixture cross-check (circle48)", checked, drift
+    );
+    assert_eq!(drift, 0, "served features drifted from the Python fixture");
+
+    // Pooled image raster vs serial, bit-identity + speedup. A larger
+    // raster than the fixture's so the row-band parallelism has real
+    // work to amortize dispatch against.
+    let (img_pts, _) = dory::features::clamped_sorted(
+        &feat_resp.result.diagram,
+        0,
+        dory::features::feature_span(feat_resp.tau_effective, feat_handle.filtration()),
+    );
+    let img_grid = 320usize;
+    let mut serial_img = Vec::new();
+    let t_img_serial = {
+        let mut best = f64::INFINITY;
+        for _ in 0..3 {
+            let t0 = Instant::now();
+            serial_img = dory::features::image::serial(&img_pts, img_grid, fx_span);
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        best
+    };
+    let mut pooled_img = Vec::new();
+    let t_img_pooled = {
+        let mut best = f64::INFINITY;
+        for _ in 0..3 {
+            let t0 = Instant::now();
+            pooled_img = dory::features::image::pooled(&img_pts, img_grid, fx_span, &pool);
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        best
+    };
+    assert_eq!(
+        serial_img.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        pooled_img.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        "pooled image raster deviates from serial at the bit level"
+    );
+    let image_speedup = t_img_serial / t_img_pooled.max(1e-12);
+    println!(
+        "{:<42} {:>11.3} ms   (serial {:.3} ms -> x{image_speedup:.2}, {img_grid}x{img_grid}, {} pts)",
+        "pooled persistence image (4 threads)",
+        t_img_pooled * 1e3,
+        t_img_serial * 1e3,
+        img_pts.len(),
+    );
+    out = out
+        .field("feature_fixture_drift", drift)
+        .field("feature_fixture_max_rel_err", max_rel)
+        .field("feature_fixture_values", checked)
+        .field("feature_image_serial_s", t_img_serial)
+        .field("feature_image_pooled_s", t_img_pooled)
+        .field("feature_image_speedup", image_speedup)
+        .field("feature_pass_s", fo.stats.feature_ns as f64 * 1e-9);
+
     bs::write_json("micro_hotpaths.json", &out);
 }

@@ -27,12 +27,22 @@ pub enum Value {
     Str(String),
     Num(f64),
     Bool(bool),
+    /// A flat `[a, b, c]` array (no nesting — the subset the configs
+    /// need, e.g. `features = ["betti:64", "entropy"]`).
+    Arr(Vec<Value>),
 }
 
 impl Value {
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(v) => Some(v),
             _ => None,
         }
     }
@@ -155,6 +165,21 @@ fn parse_value(s: &str) -> Option<Value> {
     if s.starts_with('"') && s.ends_with('"') && s.len() >= 2 {
         return Some(Value::Str(s[1..s.len() - 1].to_string()));
     }
+    if s.starts_with('[') {
+        let inner = s.strip_prefix('[')?.strip_suffix(']')?.trim();
+        let mut items = Vec::new();
+        if !inner.is_empty() {
+            for part in split_top_level(inner) {
+                let part = part.trim();
+                let v = parse_value(part)?;
+                if matches!(v, Value::Arr(_)) {
+                    return None; // no nested arrays in the subset
+                }
+                items.push(v);
+            }
+        }
+        return Some(Value::Arr(items));
+    }
     match s {
         "true" => return Some(Value::Bool(true)),
         "false" => return Some(Value::Bool(false)),
@@ -162,6 +187,44 @@ fn parse_value(s: &str) -> Option<Value> {
         _ => {}
     }
     s.parse::<f64>().ok().map(Value::Num)
+}
+
+/// Split an array body on commas that sit outside string quotes.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+/// Decode a `features = [...]` value into typed specs; `where_` labels
+/// the error ("engine.features" / "query.features").
+fn feature_list(v: &Value, where_: &str) -> Result<Vec<crate::features::FeatureSpec>> {
+    let arr = v
+        .as_arr()
+        .ok_or_else(|| cfg_err(format!("{where_}: expected an array of strings")))?;
+    let mut specs = Vec::with_capacity(arr.len());
+    for item in arr {
+        let s = item
+            .as_str()
+            .ok_or_else(|| cfg_err(format!("{where_}: expected an array of strings")))?;
+        specs.push(
+            crate::features::FeatureSpec::parse(s)
+                .map_err(|e| cfg_err(format!("{where_}: {e}")))?,
+        );
+    }
+    Ok(specs)
 }
 
 /// Which data source a run uses.
@@ -197,6 +260,10 @@ pub struct QuerySpec {
     /// deadline aborts that query with a typed `DeadlineExceeded`
     /// without disturbing the shared ingest.
     pub timeout_ms: Option<u64>,
+    /// Derived feature products to compute after the reduction
+    /// (`features = ["betti:64", "entropy", ...]`). Empty inherits the
+    /// `[engine] features` list.
+    pub features: Vec<crate::features::FeatureSpec>,
 }
 
 impl QuerySpec {
@@ -208,6 +275,7 @@ impl QuerySpec {
             enclosing: None,
             label: None,
             timeout_ms: None,
+            features: Vec::new(),
         }
     }
 }
@@ -276,6 +344,10 @@ pub struct RunConfig {
     /// Default per-query deadline in milliseconds (`None` = no
     /// deadline). Individual `[[query]]` entries override it.
     pub timeout_ms: Option<u64>,
+    /// Default derived feature products for every query (`[engine]
+    /// features = [...]` or CLI `--features`). A `[[query]]` entry with
+    /// its own non-empty `features` list overrides this.
+    pub features: Vec<crate::features::FeatureSpec>,
     pub dense_lookup: bool,
     pub algorithm: String,
     pub artifacts: PathBuf,
@@ -323,6 +395,7 @@ impl Default for RunConfig {
             edge_budget_mb: 0,
             strict_spill: false,
             timeout_ms: None,
+            features: Vec::new(),
             dense_lookup: false,
             algorithm: "fast-column".into(),
             artifacts: PathBuf::from("artifacts"),
@@ -424,6 +497,7 @@ impl RunConfig {
                             "edge_budget_mb" => cfg.edge_budget_mb = uint()?,
                             "strict_spill" => cfg.strict_spill = flag()?,
                             "timeout_ms" => cfg.timeout_ms = Some(uint()? as u64),
+                            "features" => cfg.features = feature_list(v, "engine.features")?,
                             "dense_lookup" => cfg.dense_lookup = flag()?,
                             "algorithm" => {
                                 cfg.algorithm = v
@@ -527,6 +601,7 @@ impl RunConfig {
                                 as u64,
                         )
                     }
+                    "features" => q.features = feature_list(v, "query.features")?,
                     _ => return Err(cfg_err(format!("unknown key query.{k}"))),
                 }
             }
@@ -588,9 +663,16 @@ impl RunConfig {
         if self.tau < 0.0 {
             return Err(cfg_err("tau must be non-negative"));
         }
+        for s in &self.features {
+            s.validate().map_err(|e| cfg_err(format!("engine.features: {e}")))?;
+        }
         for (i, q) in self.queries.iter().enumerate() {
             if q.tau.is_nan() {
                 return Err(cfg_err(format!("query #{i}: tau must not be NaN")));
+            }
+            for s in &q.features {
+                s.validate()
+                    .map_err(|e| cfg_err(format!("query #{i}: features: {e}")))?;
             }
             if q.tau < 0.0 {
                 return Err(cfg_err(format!("query #{i}: tau must be non-negative")));
@@ -840,6 +922,67 @@ enclosing = true
         assert_eq!(cfg.ingest_tau(), 2.0);
         // parse_toml (sections-only) refuses array documents.
         assert!(parse_toml("[[query]]\ntau = 1\n").is_err());
+    }
+
+    #[test]
+    fn feature_lists_parse_and_inherit() {
+        use crate::features::FeatureSpec;
+        let cfg = RunConfig::from_str(
+            r#"
+[engine]
+tau = 1.0
+features = ["betti:16", "entropy"]
+
+[[query]]
+tau = 0.5
+
+[[query]]
+tau = 1.0
+features = ["image:8", "representatives:0.1"]
+"#,
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.features,
+            vec![FeatureSpec::BettiCurve { grid: 16 }, FeatureSpec::Entropy]
+        );
+        assert!(cfg.queries[0].features.is_empty()); // inherits engine list
+        assert_eq!(
+            cfg.queries[1].features,
+            vec![
+                FeatureSpec::Image { grid: 8 },
+                FeatureSpec::Representatives { min_persistence: 0.1 },
+            ]
+        );
+    }
+
+    #[test]
+    fn feature_lists_reject_bad_specs() {
+        for bad in [
+            "[engine]\nfeatures = [\"warp\"]\n",
+            "[engine]\nfeatures = [\"betti:0\"]\n",
+            "[engine]\nfeatures = [1, 2]\n",
+            "[engine]\nfeatures = \"betti\"\n",
+            "[[query]]\ntau = 1\nfeatures = [\"landscape:0\"]\n",
+        ] {
+            let e = RunConfig::from_str(bad).unwrap_err();
+            assert!(matches!(e, DoryError::Config(_)), "{bad}: {e}");
+        }
+    }
+
+    #[test]
+    fn array_values_parse() {
+        assert_eq!(parse_value("[]"), Some(Value::Arr(vec![])));
+        assert_eq!(
+            parse_value("[\"a, b\", 2, true]"),
+            Some(Value::Arr(vec![
+                Value::Str("a, b".into()),
+                Value::Num(2.0),
+                Value::Bool(true),
+            ]))
+        );
+        assert_eq!(parse_value("[[1]]"), None); // no nesting
+        assert_eq!(parse_value("[1,"), None);
     }
 
     #[test]

@@ -359,6 +359,12 @@ pub fn run_batch(cfg: &RunConfig) -> Result<BatchReport> {
             enclosing: q.enclosing,
             label: q.label.clone(),
             timeout_ms: q.timeout_ms.or(cfg.timeout_ms),
+            // Per-query list wins; empty inherits the `[engine]` list.
+            features: if q.features.is_empty() {
+                cfg.features.clone()
+            } else {
+                q.features.clone()
+            },
         };
         let resp = session.query(&handle, &req)?;
         if let Some(p) = &cfg.diagram_csv {
@@ -452,8 +458,18 @@ pub fn batch_summary_json(cfg: &RunConfig, r: &BatchReport) -> Json {
     for (i, resp) in r.responses.iter().enumerate() {
         queries.push(query_json(i, resp));
     }
+    // Aggregate feature accounting across every query that asked for
+    // derived products (absent when no query did).
+    let mut fstats = crate::features::FeatureStats::default();
+    let mut any_features = false;
+    for resp in &r.responses {
+        if let Some(fo) = &resp.features {
+            fstats.merge(&fo.stats);
+            any_features = true;
+        }
+    }
     let (phases, phase_rss) = phases_json(&first.result.timings);
-    Json::obj()
+    let mut out = Json::obj()
         .field("n_points", r.n_points)
         .field("n_edges", first.n_edges)
         .field("ingest_edges", r.ingest_edges)
@@ -502,7 +518,11 @@ pub fn batch_summary_json(cfg: &RunConfig, r: &BatchReport) -> Json {
                 .field("h2", first.result.stats.h2_sched.to_json()),
         )
         .field("session", r.session.to_json())
-        .field("queries", queries)
+        .field("queries", queries);
+    if any_features {
+        out = out.field("feature_stats", fstats.to_json());
+    }
+    out
 }
 
 /// One `queries[]` entry: the per-query JSON report.
@@ -521,6 +541,11 @@ fn query_json(i: usize, resp: &PhResponse) -> Json {
         .field("phase_seconds", phases_json(&resp.result.timings).0)
         .field("h1", reduction_json(&resp.result.stats.h1))
         .field("h2", reduction_json(&resp.result.stats.h2));
+    if let Some(fo) = &resp.features {
+        q = q
+            .field("features", fo.to_json())
+            .field("feature_stats", fo.stats.to_json());
+    }
     if let Some(label) = &resp.label {
         q = q.field("label", label.as_str());
     }
@@ -860,6 +885,51 @@ mod tests {
         assert_eq!(inf.edge_source, "knn-net");
         assert!(inf.result.stats.filtration.enclosing_radius.is_finite());
         assert_eq!(inf.result.diagram.essential_count(0), 1);
+    }
+
+    #[test]
+    fn batch_run_serves_feature_products() {
+        use crate::features::{FeatureSpec, FeatureValue};
+        let dir = std::env::temp_dir().join("dory-coord-features-test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = RunConfig {
+            dataset: DatasetSpec::Named {
+                kind: "circle".into(),
+                n: 60,
+                seed: 2,
+            },
+            tau: 3.0,
+            max_dim: 1,
+            threads: 2,
+            use_pjrt: false,
+            summary_json: Some(dir.join("summary.json")),
+            features: vec![FeatureSpec::Entropy],
+            queries: vec![
+                QuerySpec::at(3.0), // inherits [engine] features
+                QuerySpec {
+                    features: vec![
+                        FeatureSpec::BettiCurve { grid: 8 },
+                        FeatureSpec::Representatives { min_persistence: 0.0 },
+                    ],
+                    ..QuerySpec::at(3.0)
+                },
+            ],
+            ..Default::default()
+        };
+        let b = run_batch(&cfg).unwrap();
+        let f0 = b.responses[0].features.as_ref().expect("inherited features");
+        assert_eq!(f0.items.len(), 1);
+        assert!(matches!(f0.items[0].value, FeatureValue::Entropy(_)));
+        let f1 = b.responses[1].features.as_ref().expect("per-query features");
+        assert_eq!(f1.items.len(), 2);
+        assert!(f1.stats.cycles >= 1, "circle must yield a representative");
+        // One shared ingest regardless of the feature work.
+        assert_eq!(b.session.filtration_builds, 1);
+        assert_eq!(b.session.feature_queries, 2);
+        let s = std::fs::read_to_string(dir.join("summary.json")).unwrap();
+        assert!(s.contains("\"feature_stats\""), "{s}");
+        assert!(s.contains("\"features\""), "{s}");
+        assert!(s.contains("\"entropy\""), "{s}");
     }
 
     #[test]

@@ -46,6 +46,11 @@ pub enum DoryError {
     /// A request's `timeout_ms` deadline expired before the reduction
     /// finished. The handle stays valid; re-issue with a larger budget.
     DeadlineExceeded(String),
+    /// A derived feature product could not be computed from the served
+    /// state (e.g. a representative-cycle edge missing from the
+    /// truncated filtration view). The diagram itself is unaffected;
+    /// re-issue without the offending feature spec to get it.
+    Feature(String),
 }
 
 impl fmt::Display for DoryError {
@@ -68,6 +73,7 @@ impl fmt::Display for DoryError {
             DoryError::Internal(m) => write!(f, "internal error: {m}"),
             DoryError::Overloaded(m) => write!(f, "overloaded: {m}"),
             DoryError::DeadlineExceeded(m) => write!(f, "deadline exceeded: {m}"),
+            DoryError::Feature(m) => write!(f, "feature error: {m}"),
         }
     }
 }
@@ -103,6 +109,7 @@ impl DoryError {
             DoryError::Internal(_) => "Internal",
             DoryError::Overloaded(_) => "Overloaded",
             DoryError::DeadlineExceeded(_) => "DeadlineExceeded",
+            DoryError::Feature(_) => "Feature",
         }
     }
 }

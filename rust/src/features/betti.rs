@@ -1,0 +1,48 @@
+//! Betti curves: the diagram's class count sampled on a uniform grid.
+//!
+//! The step function `β_dim(t) = #{classes with birth ≤ t < death}` is
+//! sampled at `t_i = span·i/grid` for `i = 0..=grid` — exactly
+//! [`Diagram::betti_at`]'s semantics at every sample, so the curve is a
+//! pure integer summary with zero float accumulation: no clamping is
+//! needed (an essential class is alive at every sample past its birth)
+//! and cross-thread bit-identity is trivial.
+
+use crate::homology::Diagram;
+
+/// Sample dimension `dim`'s Betti curve at `grid + 1` uniform points
+/// over `[0, span]`.
+pub fn curve(diagram: &Diagram, dim: usize, grid: usize, span: f64) -> Vec<u64> {
+    (0..=grid)
+        .map(|i| {
+            let t = span * i as f64 / grid as f64;
+            diagram.betti_at(dim, t) as u64
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_betti_at_at_every_sample() {
+        let mut d = Diagram::new(1);
+        d.push(1, 0.2, 0.8);
+        d.push(1, 0.4, f64::INFINITY);
+        d.push(1, 0.0, 0.3);
+        let c = curve(&d, 1, 10, 1.0);
+        assert_eq!(c.len(), 11);
+        for (i, &v) in c.iter().enumerate() {
+            let t = 1.0 * i as f64 / 10.0;
+            assert_eq!(v, d.betti_at(1, t) as u64, "t={t}");
+        }
+        // The essential class stays alive at the last sample.
+        assert_eq!(c[10], 1);
+    }
+
+    #[test]
+    fn empty_dimension_is_flat_zero() {
+        let d = Diagram::new(2);
+        assert!(curve(&d, 2, 4, 1.0).iter().all(|&v| v == 0));
+    }
+}

@@ -1,0 +1,167 @@
+//! H1 cycle representatives as a served feature product — the paper's
+//! §7 extension ("representative boundaries of the holes"), the Hi-C
+//! loop-calling consumer's payload.
+//!
+//! The heavy lifting lives in [`crate::homology::representatives`]: a
+//! geodesically tightened loop per H1 class (Dijkstra at birth over the
+//! served filtration view — Aggarwal–Periwal's tight-representative
+//! refinement of the hop-BFS loop). This module adapts those loops into
+//! wire-ready [`CycleFeature`]s: anchor pair (the birth edge's
+//! endpoints — for Hi-C, the loop's two genomic anchors), persistence,
+//! and the total geometric perimeter, computed through the *total*
+//! [`Cycle::perimeter`](crate::homology::representatives::Cycle::perimeter)
+//! (a cycle edge missing from the truncated `Neighborhoods` view is a
+//! typed [`DoryError::Feature`] — never a silent NaN).
+
+use crate::error::DoryError;
+use crate::filtration::{EdgeFiltration, Neighborhoods};
+use crate::homology::representatives::tight_representatives_from_result;
+use crate::homology::PhResult;
+use crate::util::json::Json;
+
+/// One representative loop, wire-ready.
+#[derive(Clone, Debug)]
+pub struct CycleFeature {
+    /// Birth value of the H1 class.
+    pub birth: f64,
+    /// Death value (`+∞` for essential classes; rendered `1e999`).
+    pub death: f64,
+    /// Total geometric length of the loop under the filtration metric.
+    pub perimeter: f64,
+    /// The birth edge's endpoints — the loop's anchor pair.
+    pub anchor: (u32, u32),
+    /// The loop's vertices in cycle order (closed implicitly).
+    pub vertices: Vec<u32>,
+}
+
+impl CycleFeature {
+    pub fn persistence(&self) -> f64 {
+        self.death - self.birth
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut vs = Json::arr();
+        for &v in &self.vertices {
+            vs.push(v);
+        }
+        let mut anchor = Json::arr();
+        anchor.push(self.anchor.0);
+        anchor.push(self.anchor.1);
+        Json::obj()
+            .field("birth", self.birth)
+            .field("death", self.death)
+            .field("persistence", self.persistence())
+            .field("perimeter", self.perimeter)
+            .field("anchor", anchor)
+            .field("vertices", vs)
+    }
+}
+
+/// Representative loops for every H1 class of `result` with persistence
+/// above `min_persistence` (essential classes always qualify), in a
+/// canonical `(birth, death, anchor)` order so the list is identical
+/// for every schedule. `nb`/`f` must be the served filtration view the
+/// result was reduced from — `result.h1_pairs` edge orders index it.
+pub fn representatives(
+    nb: &Neighborhoods,
+    f: &EdgeFiltration,
+    result: &PhResult,
+    min_persistence: f64,
+) -> Result<Vec<CycleFeature>, DoryError> {
+    if min_persistence.is_nan() || min_persistence < 0.0 {
+        return Err(DoryError::Request(format!(
+            "representatives min_persistence must be >= 0, got {min_persistence}"
+        )));
+    }
+    let mut out = Vec::new();
+    for c in tight_representatives_from_result(nb, f, result, min_persistence) {
+        let perimeter = c.perimeter(nb, f)?;
+        // The tightening path runs a→b for birth edge {a, b}: the
+        // cycle's first and last vertices are exactly the anchors.
+        let anchor = (
+            *c.vertices.first().expect("representatives are non-empty"),
+            *c.vertices.last().expect("representatives are non-empty"),
+        );
+        out.push(CycleFeature {
+            birth: c.birth,
+            death: c.death,
+            perimeter,
+            anchor,
+            vertices: c.vertices,
+        });
+    }
+    out.sort_by(|a, b| {
+        a.birth
+            .total_cmp(&b.birth)
+            .then(a.death.total_cmp(&b.death))
+            .then(a.anchor.cmp(&b.anchor))
+    });
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets;
+    use crate::geometry::MetricData;
+    use crate::homology::{EngineOptions, PhRequest, Session};
+
+    #[test]
+    fn circle_loop_feature_is_complete_and_typed() {
+        let data = datasets::circle(40, 1.0, 0.0, 1);
+        let s = Session::new(EngineOptions {
+            max_dim: 1,
+            threads: 1,
+            ..Default::default()
+        });
+        let h = s.ingest(&data, 3.0).unwrap();
+        let resp = s.query(&h, &PhRequest::at(3.0)).unwrap();
+        let cycles =
+            representatives(h.neighborhoods(), h.filtration(), &resp.result, 0.5).unwrap();
+        assert_eq!(cycles.len(), 1);
+        let c = &cycles[0];
+        assert!(c.perimeter.is_finite() && c.perimeter > 4.0, "{}", c.perimeter);
+        assert!(c.vertices.len() >= 3);
+        assert_eq!(c.anchor.0, *c.vertices.first().unwrap());
+        assert_eq!(c.anchor.1, *c.vertices.last().unwrap());
+        // The JSON form carries every field.
+        let j = c.to_json().render();
+        for key in ["birth", "death", "persistence", "perimeter", "anchor", "vertices"] {
+            assert!(j.contains(key), "{j}");
+        }
+    }
+
+    #[test]
+    fn nan_min_persistence_refused() {
+        let data = datasets::circle(16, 1.0, 0.0, 1);
+        let s = Session::new(EngineOptions {
+            max_dim: 1,
+            threads: 1,
+            ..Default::default()
+        });
+        let h = s.ingest(&data, 3.0).unwrap();
+        let resp = s.query(&h, &PhRequest::at(3.0)).unwrap();
+        assert!(matches!(
+            representatives(h.neighborhoods(), h.filtration(), &resp.result, f64::NAN),
+            Err(DoryError::Request(_))
+        ));
+    }
+
+    #[test]
+    fn emptiness_when_nothing_qualifies() {
+        let data = MetricData::Points(crate::geometry::PointCloud::new(
+            1,
+            vec![0.0, 1.0, 2.0, 3.0],
+        ));
+        let s = Session::new(EngineOptions {
+            max_dim: 1,
+            threads: 1,
+            ..Default::default()
+        });
+        let h = s.ingest(&data, 10.0).unwrap();
+        let resp = s.query(&h, &PhRequest::at(10.0)).unwrap();
+        assert!(representatives(h.neighborhoods(), h.filtration(), &resp.result, 0.0)
+            .unwrap()
+            .is_empty());
+    }
+}

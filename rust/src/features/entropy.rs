@@ -1,0 +1,54 @@
+//! Persistence entropy: the Shannon entropy of the normalized
+//! persistence distribution, `E = -Σ pᵢ ln pᵢ` with
+//! `pᵢ = persᵢ / Σⱼ persⱼ`.
+//!
+//! Input is the canonically sorted, span-clamped point list from
+//! [`super::clamped_sorted`]; both the total-persistence sum and the
+//! entropy sum accumulate in that fixed order, so the value is
+//! bit-identical no matter how the diagram enumerated its points
+//! (permutation invariance is pinned by `rust/tests/features.rs`).
+
+/// Entropy of `points` (`(birth, death)`, deaths already finite).
+/// Zero-persistence points contribute nothing (`p ln p → 0`); an empty
+/// or all-zero diagram has entropy 0.
+pub fn entropy(points: &[(f64, f64)]) -> f64 {
+    let mut total = 0.0f64;
+    for &(b, d) in points {
+        total += d - b;
+    }
+    if !(total > 0.0) {
+        return 0.0;
+    }
+    let mut e = 0.0f64;
+    for &(b, d) in points {
+        let p = (d - b) / total;
+        if p > 0.0 {
+            e -= p * p.ln();
+        }
+    }
+    e
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_distribution_maximizes() {
+        // k equal bars: entropy = ln k.
+        let pts: Vec<(f64, f64)> = (0..4).map(|i| (i as f64, i as f64 + 1.0)).collect();
+        assert!((entropy(&pts) - 4.0f64.ln()).abs() < 1e-15);
+        // One bar: entropy 0.
+        assert_eq!(entropy(&[(0.0, 2.0)]), 0.0);
+        // Empty: entropy 0, no NaN.
+        assert_eq!(entropy(&[]), 0.0);
+        assert_eq!(entropy(&[(1.0, 1.0)]), 0.0);
+    }
+
+    #[test]
+    fn scale_invariant() {
+        let a = entropy(&[(0.0, 1.0), (0.0, 3.0)]);
+        let b = entropy(&[(0.0, 2.0), (0.0, 6.0)]);
+        assert!((a - b).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,516 @@
+//! Derived TDA feature products served per query (ROADMAP item 4).
+//!
+//! One persistent-homology run is expensive; the products downstream
+//! consumers actually read — Betti curves, persistence entropy,
+//! landscapes, persistence images, representative loops — are cheap
+//! pure functions of the finished diagram (+ the served filtration view
+//! for representatives). This module computes them post-reduction
+//! inside [`crate::homology::Session::query`], so N feature products
+//! ride on one reduction and one ingest.
+//!
+//! **Determinism.** Every kernel is a pure function of the diagram and
+//! the served `(EdgeFiltration, Neighborhoods)` view: diagram points
+//! are gathered into a canonical `(birth, death)` order
+//! ([`clamped_sorted`]) before any float accumulation, the image kernel
+//! accumulates its Gaussian terms in that fixed point order per pixel,
+//! and the pooled image path writes disjoint row bands with identical
+//! per-pixel arithmetic — so every feature is bit-identical across
+//! thread counts, steal schedules, batch sizes, and cached-handle vs
+//! fresh-ingest queries (pinned by `rust/tests/features.rs`).
+//!
+//! **Essential classes.** Deaths of `+∞` would poison every finite
+//! kernel (NaN/∞ bins). The pinned semantics: entropy, landscapes and
+//! images clamp essential deaths to the feature *span* — the query's
+//! `tau_effective` when finite, else the last (largest) edge value of
+//! the served filtration — and report how many points were clamped in
+//! [`FeatureStats::clamped_points`]. Betti curves need no clamp: they
+//! count classes alive at each sample, and an essential class is simply
+//! alive at every sample past its birth.
+
+pub mod betti;
+pub mod cycles;
+pub mod entropy;
+pub mod image;
+pub mod landscape;
+
+pub use cycles::CycleFeature;
+
+use crate::error::DoryError;
+use crate::filtration::{EdgeFiltration, Neighborhoods};
+use crate::homology::{Diagram, PhResult};
+use crate::reduction::pool::ThreadPool;
+use crate::util::json::Json;
+
+pub const DEFAULT_BETTI_GRID: usize = 64;
+pub const DEFAULT_LANDSCAPE_LEVELS: usize = 5;
+pub const DEFAULT_LANDSCAPE_GRID: usize = 64;
+pub const DEFAULT_IMAGE_GRID: usize = 32;
+/// Largest accepted sampling grid (an image allocates `grid²` f64s).
+pub const MAX_GRID: usize = 1024;
+/// Largest accepted landscape level count.
+pub const MAX_LEVELS: usize = 64;
+
+/// One typed feature request, plumbed end to end: `PhRequest.features`,
+/// the coordinator's `[[query]] features = [...]`, the CLI `--features`
+/// list, and the serve wire's `{"features":[…]}` field all parse into
+/// this enum, so every layer agrees on the knob set and its defaults.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FeatureSpec {
+    /// Betti curve sampled at `grid + 1` points over `[0, span]`.
+    BettiCurve { grid: usize },
+    /// Persistence entropy `-Σ pᵢ ln pᵢ`, `pᵢ = persᵢ / Σ pers`.
+    Entropy,
+    /// First `levels` persistence landscapes, each sampled at
+    /// `grid + 1` points over `[0, span]`.
+    Landscape { levels: usize, grid: usize },
+    /// Persistence image: `grid × grid` Gaussian raster over
+    /// `[0, span]²` in (birth, persistence) coordinates, matching
+    /// `python/compile/kernels/persistence_image.py`.
+    Image { grid: usize },
+    /// H1 representative loops with persistence above
+    /// `min_persistence`, geometrically tightened (Aggarwal–Periwal).
+    Representatives { min_persistence: f64 },
+}
+
+impl FeatureSpec {
+    /// Parse one spec string: `betti[:GRID]`, `entropy`,
+    /// `landscape[:LEVELS[:GRID]]`, `image[:GRID]`,
+    /// `representatives[:MIN_PERSISTENCE]`.
+    pub fn parse(s: &str) -> Result<FeatureSpec, String> {
+        let mut parts = s.trim().split(':');
+        let head = parts.next().unwrap_or("");
+        let args: Vec<&str> = parts.collect();
+        let usize_arg = |v: &str| -> Result<usize, String> {
+            v.parse::<usize>()
+                .map_err(|_| format!("bad integer '{v}' in feature spec '{s}'"))
+        };
+        let spec = match head {
+            "betti" => FeatureSpec::BettiCurve {
+                grid: match args.as_slice() {
+                    [] => DEFAULT_BETTI_GRID,
+                    [g] => usize_arg(g)?,
+                    _ => return Err(format!("betti takes at most one arg: '{s}'")),
+                },
+            },
+            "entropy" => {
+                if !args.is_empty() {
+                    return Err(format!("entropy takes no args: '{s}'"));
+                }
+                FeatureSpec::Entropy
+            }
+            "landscape" => {
+                let (levels, grid) = match args.as_slice() {
+                    [] => (DEFAULT_LANDSCAPE_LEVELS, DEFAULT_LANDSCAPE_GRID),
+                    [k] => (usize_arg(k)?, DEFAULT_LANDSCAPE_GRID),
+                    [k, g] => (usize_arg(k)?, usize_arg(g)?),
+                    _ => return Err(format!("landscape takes at most two args: '{s}'")),
+                };
+                FeatureSpec::Landscape { levels, grid }
+            }
+            "image" => FeatureSpec::Image {
+                grid: match args.as_slice() {
+                    [] => DEFAULT_IMAGE_GRID,
+                    [g] => usize_arg(g)?,
+                    _ => return Err(format!("image takes at most one arg: '{s}'")),
+                },
+            },
+            "representatives" => FeatureSpec::Representatives {
+                min_persistence: match args.as_slice() {
+                    [] => 0.0,
+                    [m] => m
+                        .parse::<f64>()
+                        .map_err(|_| format!("bad number '{m}' in feature spec '{s}'"))?,
+                    _ => return Err(format!("representatives takes at most one arg: '{s}'")),
+                },
+            },
+            _ => {
+                return Err(format!(
+                    "unknown feature '{head}' (expected betti, entropy, landscape, \
+                     image, or representatives)"
+                ))
+            }
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Parse a comma-separated spec list (the CLI `--features` form).
+    pub fn parse_list(s: &str) -> Result<Vec<FeatureSpec>, String> {
+        s.split(',')
+            .map(str::trim)
+            .filter(|p| !p.is_empty())
+            .map(FeatureSpec::parse)
+            .collect()
+    }
+
+    /// Canonical spec string, echoed into responses so clients can match
+    /// outputs back to requests.
+    pub fn name(&self) -> String {
+        match self {
+            FeatureSpec::BettiCurve { grid } => format!("betti:{grid}"),
+            FeatureSpec::Entropy => "entropy".into(),
+            FeatureSpec::Landscape { levels, grid } => format!("landscape:{levels}:{grid}"),
+            FeatureSpec::Image { grid } => format!("image:{grid}"),
+            FeatureSpec::Representatives { min_persistence } => {
+                format!("representatives:{min_persistence}")
+            }
+        }
+    }
+
+    /// Range checks, also applied to specs constructed directly through
+    /// the API (not just the parsers).
+    pub fn validate(&self) -> Result<(), String> {
+        match *self {
+            FeatureSpec::BettiCurve { grid }
+            | FeatureSpec::Landscape { grid, .. }
+            | FeatureSpec::Image { grid }
+                if grid == 0 || grid > MAX_GRID =>
+            {
+                Err(format!(
+                    "feature grid must be in 1..={MAX_GRID}, got {grid}"
+                ))
+            }
+            FeatureSpec::Landscape { levels, .. } if levels == 0 || levels > MAX_LEVELS => Err(
+                format!("landscape levels must be in 1..={MAX_LEVELS}, got {levels}"),
+            ),
+            FeatureSpec::Representatives { min_persistence }
+                if min_persistence.is_nan() || min_persistence < 0.0 =>
+            {
+                Err(format!(
+                    "representatives min_persistence must be >= 0, got {min_persistence}"
+                ))
+            }
+            _ => Ok(()),
+        }
+    }
+}
+
+/// Aggregate accounting of one feature computation (per response; the
+/// coordinator and serve summaries merge them across queries).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FeatureStats {
+    /// Feature specs computed.
+    pub specs: u64,
+    /// Diagram points consumed across dims and specs.
+    pub diagram_points: u64,
+    /// Essential (death = ∞) points whose death was clamped to the
+    /// feature span by a finite-valued kernel.
+    pub clamped_points: u64,
+    /// Representative loops emitted.
+    pub cycles: u64,
+    /// Wall time of the whole feature pass, nanoseconds.
+    pub feature_ns: u64,
+}
+
+impl FeatureStats {
+    pub fn merge(&mut self, other: &FeatureStats) {
+        self.specs += other.specs;
+        self.diagram_points += other.diagram_points;
+        self.clamped_points += other.clamped_points;
+        self.cycles += other.cycles;
+        self.feature_ns += other.feature_ns;
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .field("specs", self.specs)
+            .field("diagram_points", self.diagram_points)
+            .field("clamped_points", self.clamped_points)
+            .field("cycles", self.cycles)
+            .field("feature_ns", self.feature_ns)
+    }
+}
+
+/// One computed feature: the spec echo plus its per-dimension payload.
+#[derive(Clone, Debug)]
+pub struct FeatureOutput {
+    pub spec: FeatureSpec,
+    pub value: FeatureValue,
+}
+
+/// Feature payloads. Vectorized kernels hold one entry per homology
+/// dimension `0..=max_dim` of the served diagram; representatives are
+/// H1-only (the paper's loop-calling scenario).
+#[derive(Clone, Debug)]
+pub enum FeatureValue {
+    /// `[dim][sample]` class counts at `t_i = span·i/grid`.
+    BettiCurve(Vec<Vec<u64>>),
+    /// `[dim]` persistence entropy.
+    Entropy(Vec<f64>),
+    /// `[dim][level][sample]` landscape values.
+    Landscape(Vec<Vec<Vec<f64>>>),
+    /// `[dim][row·grid + col]` image rasters, row = persistence axis.
+    Image(Vec<Vec<f64>>),
+    /// H1 representative loops.
+    Representatives(Vec<CycleFeature>),
+}
+
+/// All features of one response plus their accounting.
+#[derive(Clone, Debug)]
+pub struct FeatureOutputs {
+    /// The sampling domain `[0, span]` every grid kernel used.
+    pub span: f64,
+    pub items: Vec<FeatureOutput>,
+    pub stats: FeatureStats,
+}
+
+impl FeatureOutputs {
+    /// Wire/summary form: `[{"spec":…, "dims":…}, …]` (stats are
+    /// rendered separately via [`FeatureStats::to_json`]).
+    pub fn to_json(&self) -> Json {
+        let mut arr = Json::arr();
+        for item in &self.items {
+            let mut j = Json::obj().field("spec", item.spec.name());
+            match &item.value {
+                FeatureValue::BettiCurve(dims) => {
+                    let mut dj = Json::arr();
+                    for d in dims {
+                        let mut row = Json::arr();
+                        for &v in d {
+                            row.push(v);
+                        }
+                        dj.push(row);
+                    }
+                    j = j.field("dims", dj);
+                }
+                FeatureValue::Entropy(dims) => {
+                    let mut dj = Json::arr();
+                    for &v in dims {
+                        dj.push(v);
+                    }
+                    j = j.field("dims", dj);
+                }
+                FeatureValue::Landscape(dims) => {
+                    let mut dj = Json::arr();
+                    for levels in dims {
+                        let mut lj = Json::arr();
+                        for level in levels {
+                            let mut row = Json::arr();
+                            for &v in level {
+                                row.push(v);
+                            }
+                            lj.push(row);
+                        }
+                        dj.push(lj);
+                    }
+                    j = j.field("dims", dj);
+                }
+                FeatureValue::Image(dims) => {
+                    let mut dj = Json::arr();
+                    for img in dims {
+                        let mut row = Json::arr();
+                        for &v in img {
+                            row.push(v);
+                        }
+                        dj.push(row);
+                    }
+                    j = j.field("dims", dj);
+                }
+                FeatureValue::Representatives(cycles) => {
+                    let mut cj = Json::arr();
+                    for c in cycles {
+                        cj.push(c.to_json());
+                    }
+                    j = j.field("cycles", cj);
+                }
+            }
+            arr.push(j);
+        }
+        Json::obj().field("span", self.span).field("items", arr)
+    }
+}
+
+/// The sampling span of every grid kernel: the query's `tau_effective`
+/// when finite, else the largest edge value of the served filtration
+/// (the last of the sorted value array), else 0 (empty filtration — all
+/// kernels degenerate gracefully; the image's `+1e-30` regularizer
+/// keeps even the zero-span Gaussian finite).
+pub fn feature_span(tau_effective: f64, f: &EdgeFiltration) -> f64 {
+    if tau_effective.is_finite() {
+        tau_effective
+    } else {
+        f.values.last().copied().unwrap_or(0.0)
+    }
+}
+
+/// Gather dimension `dim`'s points as `(birth, death·clamped·to·span)`
+/// in canonical `(birth, death)` order — the fixed accumulation order
+/// that makes every downstream float kernel permutation-invariant at
+/// the bit level. Returns the points and how many were clamped.
+pub fn clamped_sorted(diagram: &Diagram, dim: usize, span: f64) -> (Vec<(f64, f64)>, u64) {
+    let mut clamped = 0u64;
+    let mut pts: Vec<(f64, f64)> = diagram
+        .points(dim)
+        .iter()
+        .map(|p| {
+            if p.death > span {
+                clamped += 1;
+                (p.birth, span)
+            } else {
+                (p.birth, p.death)
+            }
+        })
+        .collect();
+    pts.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.total_cmp(&b.1)));
+    (pts, clamped)
+}
+
+/// Compute `specs` against a finished result and the filtration view it
+/// was served from. `f`/`nb` must be the *served cut* (the truncated
+/// prefix view for sub-τ queries), so representative edge orders line
+/// up with `result.h1_pairs`. `pool` accelerates the image raster;
+/// output is bit-identical with or without it.
+pub fn compute(
+    specs: &[FeatureSpec],
+    result: &PhResult,
+    f: &EdgeFiltration,
+    nb: &Neighborhoods,
+    tau_effective: f64,
+    pool: Option<&ThreadPool>,
+) -> Result<FeatureOutputs, DoryError> {
+    let t0 = std::time::Instant::now();
+    for spec in specs {
+        spec.validate().map_err(DoryError::Request)?;
+    }
+    let diagram = &result.diagram;
+    let span = feature_span(tau_effective, f);
+    let ndims = diagram.max_dim() + 1;
+    let mut stats = FeatureStats::default();
+    let mut items = Vec::with_capacity(specs.len());
+    for spec in specs {
+        stats.specs += 1;
+        let value = match *spec {
+            FeatureSpec::BettiCurve { grid } => {
+                let mut dims = Vec::with_capacity(ndims);
+                for dim in 0..ndims {
+                    stats.diagram_points += diagram.points(dim).len() as u64;
+                    dims.push(betti::curve(diagram, dim, grid, span));
+                }
+                FeatureValue::BettiCurve(dims)
+            }
+            FeatureSpec::Entropy => {
+                let mut dims = Vec::with_capacity(ndims);
+                for dim in 0..ndims {
+                    let (pts, cl) = clamped_sorted(diagram, dim, span);
+                    stats.diagram_points += pts.len() as u64;
+                    stats.clamped_points += cl;
+                    dims.push(entropy::entropy(&pts));
+                }
+                FeatureValue::Entropy(dims)
+            }
+            FeatureSpec::Landscape { levels, grid } => {
+                let mut dims = Vec::with_capacity(ndims);
+                for dim in 0..ndims {
+                    let (pts, cl) = clamped_sorted(diagram, dim, span);
+                    stats.diagram_points += pts.len() as u64;
+                    stats.clamped_points += cl;
+                    dims.push(landscape::landscape(&pts, levels, grid, span));
+                }
+                FeatureValue::Landscape(dims)
+            }
+            FeatureSpec::Image { grid } => {
+                let mut dims = Vec::with_capacity(ndims);
+                for dim in 0..ndims {
+                    let (pts, cl) = clamped_sorted(diagram, dim, span);
+                    stats.diagram_points += pts.len() as u64;
+                    stats.clamped_points += cl;
+                    dims.push(image::image(&pts, grid, span, pool));
+                }
+                FeatureValue::Image(dims)
+            }
+            FeatureSpec::Representatives { min_persistence } => {
+                let cycles = cycles::representatives(nb, f, result, min_persistence)?;
+                stats.cycles += cycles.len() as u64;
+                stats.diagram_points += cycles.len() as u64;
+                FeatureValue::Representatives(cycles)
+            }
+        };
+        items.push(FeatureOutput {
+            spec: spec.clone(),
+            value,
+        });
+    }
+    stats.feature_ns = t0.elapsed().as_nanos() as u64;
+    Ok(FeatureOutputs { span, items, stats })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_strings_round_trip() {
+        for s in [
+            "betti:8",
+            "entropy",
+            "landscape:3:16",
+            "image:32",
+            "representatives:0.5",
+        ] {
+            let spec = FeatureSpec::parse(s).unwrap();
+            assert_eq!(FeatureSpec::parse(&spec.name()).unwrap(), spec, "{s}");
+        }
+        // Defaults fill in.
+        assert_eq!(
+            FeatureSpec::parse("betti").unwrap(),
+            FeatureSpec::BettiCurve {
+                grid: DEFAULT_BETTI_GRID
+            }
+        );
+        assert_eq!(
+            FeatureSpec::parse("landscape:7").unwrap(),
+            FeatureSpec::Landscape {
+                levels: 7,
+                grid: DEFAULT_LANDSCAPE_GRID
+            }
+        );
+        assert_eq!(
+            FeatureSpec::parse("representatives").unwrap(),
+            FeatureSpec::Representatives {
+                min_persistence: 0.0
+            }
+        );
+    }
+
+    #[test]
+    fn bad_specs_are_refused() {
+        for s in [
+            "bogus",
+            "betti:0",
+            "betti:9999",
+            "betti:1:2",
+            "entropy:3",
+            "landscape:0",
+            "landscape:3:0",
+            "image:nan",
+            "representatives:-1",
+            "representatives:nan",
+            "",
+        ] {
+            assert!(FeatureSpec::parse(s).is_err(), "{s:?} must be refused");
+        }
+        assert!(FeatureSpec::Image { grid: 0 }.validate().is_err());
+        assert!(FeatureSpec::Landscape { levels: 0, grid: 8 }.validate().is_err());
+    }
+
+    #[test]
+    fn parse_list_splits_and_trims() {
+        let specs = FeatureSpec::parse_list("betti:8, entropy ,image").unwrap();
+        assert_eq!(specs.len(), 3);
+        assert!(FeatureSpec::parse_list("betti,,bogus").is_err());
+        assert!(FeatureSpec::parse_list("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn clamped_sorted_clamps_and_orders() {
+        let mut d = Diagram::new(1);
+        d.push(1, 0.5, f64::INFINITY);
+        d.push(1, 0.1, 0.9);
+        d.push(1, 0.1, 0.4);
+        let (pts, clamped) = clamped_sorted(&d, 1, 1.0);
+        assert_eq!(clamped, 1);
+        assert_eq!(pts, vec![(0.1, 0.4), (0.1, 0.9), (0.5, 1.0)]);
+        // No NaN/∞ survives the clamp.
+        assert!(pts.iter().all(|&(b, dd)| b.is_finite() && dd.is_finite()));
+    }
+}

@@ -4,13 +4,31 @@
 //! boundaries of the holes and voids in the data set … critical for
 //! connecting topology to structural properties" — this module delivers
 //! the 1-dimensional case: for an H1 class born at edge `e = {a, b}`, a
-//! representative cycle at birth is `e` plus a shortest path from `a` to
-//! `b` through edges *earlier than e* (such a path exists precisely
-//! because a birth edge is positive — its endpoints are already
-//! connected). Hop-count BFS gives a geometrically tight loop.
+//! representative cycle at birth is `e` plus a path from `a` to `b`
+//! through edges *earlier than e* (such a path exists precisely because
+//! a birth edge is positive — its endpoints are already connected).
+//!
+//! Two path rules are provided:
+//!
+//! * hop-count BFS ([`h1_representatives`]) — the minimal-hop loop;
+//! * geodesic Dijkstra ([`h1_tight_representatives`]) — the loop of
+//!   minimal total edge length, the "tight" representative in the
+//!   spirit of Aggarwal–Periwal's *Tight basis cycle representatives
+//!   for persistent homology of large data sets*: among all cycles
+//!   containing the birth edge and otherwise using only earlier edges,
+//!   it minimizes the geometric perimeter. This is the rule the served
+//!   `representatives` feature spec uses
+//!   ([`crate::features::cycles`]).
+//!
+//! Both are single-threaded, deterministic functions of the served
+//! filtration view — ties in the Dijkstra frontier break on
+//! `(distance bits, vertex id)`, so the emitted loop never depends on
+//! schedule or thread count.
 
-use std::collections::VecDeque;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
 
+use crate::error::DoryError;
 use crate::filtration::{EdgeFiltration, Neighborhoods};
 
 /// A representative loop: vertices in cycle order (closed implicitly).
@@ -33,16 +51,26 @@ impl Cycle {
     }
 
     /// Total geometric length of the loop under the filtration metric.
-    pub fn perimeter(&self, nb: &Neighborhoods, f: &EdgeFiltration) -> f64 {
+    ///
+    /// Total: a consecutive vertex pair with no edge in `nb` — e.g. a
+    /// cycle re-measured against a *more* truncated `Neighborhoods`
+    /// view than it was extracted from — is a typed
+    /// [`DoryError::Feature`], never a silent NaN.
+    pub fn perimeter(&self, nb: &Neighborhoods, f: &EdgeFiltration) -> Result<f64, DoryError> {
         let n = self.vertices.len();
-        (0..n)
-            .map(|i| {
-                let (u, v) = (self.vertices[i], self.vertices[(i + 1) % n]);
-                nb.edge_order(u, v)
-                    .map(|o| f.values[o as usize])
-                    .unwrap_or(f64::NAN)
-            })
-            .sum()
+        let mut total = 0.0f64;
+        for i in 0..n {
+            let (u, v) = (self.vertices[i], self.vertices[(i + 1) % n]);
+            let o = nb.edge_order(u, v).ok_or_else(|| {
+                DoryError::Feature(format!(
+                    "cycle edge ({u}, {v}) is not present in the served filtration view \
+                     (birth {}); the cycle was extracted from a larger prefix",
+                    self.birth
+                ))
+            })?;
+            total += f.values[o as usize];
+        }
+        Ok(total)
     }
 }
 
@@ -93,6 +121,62 @@ fn bfs_path(
     Some(path)
 }
 
+/// Geodesic shortest path from `a` to `b` using only edges with order
+/// < `max_order`, minimizing total edge *length* (not hop count) —
+/// Dijkstra over the truncated neighborhood view. Deterministic: the
+/// frontier orders on `(length bits, vertex id)` (lengths are
+/// non-negative, so the bit order is the numeric order) and relaxation
+/// improves strictly, so equal-length alternatives resolve identically
+/// on every run.
+fn dijkstra_path(
+    nb: &Neighborhoods,
+    f: &EdgeFiltration,
+    a: u32,
+    b: u32,
+    max_order: u32,
+) -> Option<Vec<u32>> {
+    const UNSEEN: u32 = u32::MAX;
+    let n = nb.n as usize;
+    let mut dist = vec![f64::INFINITY; n];
+    let mut parent = vec![UNSEEN; n];
+    let mut done = vec![false; n];
+    let mut heap: BinaryHeap<Reverse<(u64, u32)>> = BinaryHeap::new();
+    dist[a as usize] = 0.0;
+    parent[a as usize] = a;
+    heap.push(Reverse((0, a)));
+    while let Some(Reverse((dbits, u))) = heap.pop() {
+        if done[u as usize] || dbits != dist[u as usize].to_bits() {
+            continue; // stale frontier entry
+        }
+        done[u as usize] = true;
+        if u == b {
+            break;
+        }
+        let (vtx, ord) = nb.vn(u);
+        for (&v, &o) in vtx.iter().zip(ord) {
+            if o < max_order && !done[v as usize] {
+                let nd = dist[u as usize] + f.values[o as usize];
+                if nd < dist[v as usize] {
+                    dist[v as usize] = nd;
+                    parent[v as usize] = u;
+                    heap.push(Reverse((nd.to_bits(), v)));
+                }
+            }
+        }
+    }
+    if !done[b as usize] {
+        return None;
+    }
+    let mut path = vec![b];
+    let mut cur = b;
+    while cur != a {
+        cur = parent[cur as usize];
+        path.push(cur);
+    }
+    path.reverse();
+    Some(path)
+}
+
 /// Representative cycles for the H1 classes found by the engine.
 /// `pairs` are (birth edge, death value) — from
 /// [`crate::homology::PhResult::h1_pairs`] (mapped through `key_value`)
@@ -117,14 +201,37 @@ pub fn h1_representatives(
         .collect()
 }
 
-/// Convenience: cycles for every H1 class of a finished run with
-/// persistence above `min_persistence`.
-pub fn representatives_from_result(
+/// Geodesically tight representative cycles: like
+/// [`h1_representatives`], but the closing path minimizes total edge
+/// length (Dijkstra) instead of hop count — Aggarwal–Periwal's tight
+/// representative.
+pub fn h1_tight_representatives(
     nb: &Neighborhoods,
+    f: &EdgeFiltration,
+    births: &[(u32, f64)],
+) -> Vec<Cycle> {
+    births
+        .iter()
+        .filter_map(|&(e, death)| {
+            let (a, b) = f.edges[e as usize];
+            let path = dijkstra_path(nb, f, a, b, e)?;
+            Some(Cycle {
+                vertices: path,
+                birth: f.values[e as usize],
+                death,
+            })
+        })
+        .collect()
+}
+
+/// The (birth edge, death value) list of every H1 class of a finished
+/// run with persistence above `min_persistence` (essential classes
+/// always qualify).
+fn births_from_result(
     f: &EdgeFiltration,
     r: &crate::homology::PhResult,
     min_persistence: f64,
-) -> Vec<Cycle> {
+) -> Vec<(u32, f64)> {
     let mut births: Vec<(u32, f64)> = r
         .h1_pairs
         .iter()
@@ -132,7 +239,30 @@ pub fn representatives_from_result(
         .filter(|&(e, d)| d - f.values[e as usize] > min_persistence)
         .collect();
     births.extend(r.h1_essential_edges.iter().map(|&e| (e, f64::INFINITY)));
-    h1_representatives(nb, f, &births)
+    births
+}
+
+/// Convenience: hop-BFS cycles for every H1 class of a finished run
+/// with persistence above `min_persistence`.
+pub fn representatives_from_result(
+    nb: &Neighborhoods,
+    f: &EdgeFiltration,
+    r: &crate::homology::PhResult,
+    min_persistence: f64,
+) -> Vec<Cycle> {
+    h1_representatives(nb, f, &births_from_result(f, r, min_persistence))
+}
+
+/// Convenience: geodesically tight cycles for every H1 class of a
+/// finished run with persistence above `min_persistence` — the rule the
+/// served `representatives` feature uses.
+pub fn tight_representatives_from_result(
+    nb: &Neighborhoods,
+    f: &EdgeFiltration,
+    r: &crate::homology::PhResult,
+    min_persistence: f64,
+) -> Vec<Cycle> {
+    h1_tight_representatives(nb, f, &births_from_result(f, r, min_persistence))
 }
 
 #[cfg(test)]
@@ -164,8 +294,61 @@ mod tests {
         // The dominant loop must use a large fraction of the circle.
         assert!(c.len() >= 20, "cycle too short: {}", c.len());
         // Closed walk: consecutive vertices share filtration edges.
-        let per = c.perimeter(&nb, &f);
+        let per = c.perimeter(&nb, &f).unwrap();
         assert!(per.is_finite() && per > 4.0, "perimeter {per}");
+    }
+
+    #[test]
+    fn tight_representatives_never_lengthen_the_loop() {
+        // The Dijkstra path minimizes geometric length, so for every
+        // class the tight perimeter is <= the hop-BFS perimeter — and
+        // the tight loop satisfies the same structural invariants.
+        let data = datasets::torus3(300, 2.0, 0.7, 5);
+        let (f, nb, r) = run(&data, 1.4);
+        let bfs = representatives_from_result(&nb, &f, &r, 0.3);
+        let tight = tight_representatives_from_result(&nb, &f, &r, 0.3);
+        assert_eq!(bfs.len(), tight.len());
+        assert!(!tight.is_empty());
+        for (b, t) in bfs.iter().zip(&tight) {
+            assert_eq!(b.birth, t.birth);
+            assert_eq!(b.death, t.death);
+            let (pb, pt) = (b.perimeter(&nb, &f).unwrap(), t.perimeter(&nb, &f).unwrap());
+            assert!(
+                pt <= pb + 1e-12,
+                "tight {pt} must not exceed BFS {pb} (birth {})",
+                b.birth
+            );
+            // Same anchors (the path still runs a -> b for edge {a, b}).
+            assert_eq!(b.vertices.first(), t.vertices.first());
+            assert_eq!(b.vertices.last(), t.vertices.last());
+            let n = t.len();
+            assert!(n >= 3);
+            for i in 0..n {
+                let (u, v) = (t.vertices[i], t.vertices[(i + 1) % n]);
+                let o = nb.edge_order(u, v).expect("tight cycle edge must exist");
+                assert!(f.values[o as usize] <= t.birth + 1e-12);
+            }
+            let set: std::collections::HashSet<_> = t.vertices.iter().collect();
+            assert_eq!(set.len(), n, "repeated vertex in tight representative");
+        }
+    }
+
+    #[test]
+    fn perimeter_is_total_on_truncated_views() {
+        // Extract a cycle from the full view, then re-measure it against
+        // a harsher truncation: a typed Feature error, not NaN.
+        let data = datasets::circle(40, 1.0, 0.0, 1);
+        let (f, nb, r) = run(&data, 3.0);
+        let cycles = representatives_from_result(&nb, &f, &r, 0.5);
+        assert_eq!(cycles.len(), 1);
+        let c = &cycles[0];
+        let nb_small = nb.truncated(1);
+        match c.perimeter(&nb_small, &f) {
+            Err(crate::error::DoryError::Feature(m)) => {
+                assert!(m.contains("not present"), "{m}")
+            }
+            other => panic!("expected Feature error, got {other:?}"),
+        }
     }
 
     #[test]

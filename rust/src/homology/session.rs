@@ -119,6 +119,14 @@ impl FiltrationHandle {
         &self.f
     }
 
+    /// The shared `Neighborhoods` CSR view (the full, uncapped ingest
+    /// build; sub-τ queries view it through an order cap internally).
+    /// Feature consumers use it to measure representative cycles
+    /// against the same edge set the diagrams came from.
+    pub fn neighborhoods(&self) -> &Neighborhoods {
+        &self.nb
+    }
+
     /// Heap footprint of the shared structures (edge set + CSR/DoryNS),
     /// the unit the serve layer's byte-budget cache evicts on.
     pub fn memory_bytes(&self) -> usize {
@@ -161,6 +169,14 @@ pub struct PhRequest {
     /// serviceable (all aborted state was request-local). `None` = no
     /// deadline.
     pub timeout_ms: Option<u64>,
+    /// Derived feature products to compute post-reduction from the
+    /// served diagram and filtration view (Betti curves, entropy,
+    /// landscapes, persistence images, representative loops). Empty =
+    /// none. Feature computation never rebuilds anything: the ingest's
+    /// `f1_builds`/`nb_builds` counters are unchanged by feature
+    /// requests, and every product is bit-identical across thread
+    /// counts, schedules, and cached-handle vs fresh-ingest serving.
+    pub features: Vec<crate::features::FeatureSpec>,
 }
 
 impl PhRequest {
@@ -193,6 +209,9 @@ pub struct PhResponse {
     /// `tau_effective` for the actual cut).
     pub truncated: bool,
     pub result: PhResult,
+    /// Derived feature products, present iff the request carried
+    /// feature specs ([`PhRequest::features`]).
+    pub features: Option<crate::features::FeatureOutputs>,
 }
 
 /// Lifetime counters of a session — the service-level proof that N
@@ -213,6 +232,9 @@ pub struct SessionStats {
     /// `Neighborhoods` CSR builds performed by this session
     /// (== `ingests`).
     pub nb_builds: u64,
+    /// Queries that carried feature specs (feature computation never
+    /// moves the build counters above).
+    pub feature_queries: u64,
 }
 
 impl SessionStats {
@@ -225,6 +247,7 @@ impl SessionStats {
             .field("full_queries", self.full_queries)
             .field("filtration_builds", self.filtration_builds)
             .field("nb_builds", self.nb_builds)
+            .field("feature_queries", self.feature_queries)
     }
 }
 
@@ -237,6 +260,7 @@ struct SessionCounters {
     full_queries: AtomicU64,
     filtration_builds: AtomicU64,
     nb_builds: AtomicU64,
+    feature_queries: AtomicU64,
 }
 
 impl SessionCounters {
@@ -248,6 +272,7 @@ impl SessionCounters {
             full_queries: self.full_queries.load(Ordering::Relaxed),
             filtration_builds: self.filtration_builds.load(Ordering::Relaxed),
             nb_builds: self.nb_builds.load(Ordering::Relaxed),
+            feature_queries: self.feature_queries.load(Ordering::Relaxed),
         }
     }
 }
@@ -469,18 +494,44 @@ impl Session {
         let ne = h.f.n_edges();
         let mut timings = h.timings.clone();
         let prefix = cut.m < ne;
+        // The truncated view is kept alive past the reduction when the
+        // request asks for features: representatives must be measured
+        // against exactly the filtration view the diagram came from.
+        let mut cut_view: Option<(EdgeFiltration, Neighborhoods)> = None;
         let mut result = if prefix {
             timings.start("truncate");
             let fq = h.f.prefix(cut.m, cut.tau_effective);
             let nbq = h.nb.truncated(cut.m as u32);
             timings.stop();
+            cut_view = Some((fq, nbq));
+            let (fq, nbq) = cut_view.as_ref().unwrap();
             self.engine
-                .compute_prepared(&fq, &nbq, timings, h.fstats, &opts_eff, &cancel)?
+                .compute_prepared(fq, nbq, timings, h.fstats, &opts_eff, &cancel)?
         } else {
             self.engine
                 .compute_prepared(&h.f, &h.nb, timings, h.fstats, &opts_eff, &cancel)?
         };
         result.stats.n = h.n_points;
+        let features = if req.features.is_empty() {
+            None
+        } else {
+            let t0 = std::time::Instant::now();
+            let (fv, nbv) = match &cut_view {
+                Some((fq, nbq)) => (fq, nbq),
+                None => (&h.f, &h.nb),
+            };
+            let out = crate::features::compute(
+                &req.features,
+                &result,
+                fv,
+                nbv,
+                cut.tau_effective,
+                self.engine.pool(),
+            )?;
+            result.timings.record("features", t0.elapsed());
+            self.counters.feature_queries.fetch_add(1, Ordering::Relaxed);
+            Some(out)
+        };
         let truncated = prefix || cut.clamped;
         self.counters.queries.fetch_add(1, Ordering::Relaxed);
         if truncated {
@@ -495,6 +546,7 @@ impl Session {
             n_edges: cut.m,
             truncated,
             result,
+            features,
         })
     }
 

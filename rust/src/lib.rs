@@ -151,6 +151,7 @@ pub mod coboundary;
 pub mod coordinator;
 pub mod datasets;
 pub mod error;
+pub mod features;
 pub mod filtration;
 pub mod geometry;
 pub mod hic;

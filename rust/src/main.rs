@@ -110,6 +110,12 @@ run flags:
   --timeout-ms <int>        per-query deadline in milliseconds; an
                             expired query aborts with a typed
                             DeadlineExceeded (default: none)
+  --features <list>         comma-separated derived feature products
+                            computed post-reduction for every query:
+                            betti[:GRID], entropy, landscape[:K[:GRID]],
+                            image[:GRID], representatives[:MIN_PERS]
+                            (e.g. --features betti:64,entropy,image:32;
+                            results land in the summary's queries array)
   --no-enclosing            disable the enclosing-radius truncation of
                             infinite-tau filtrations (exact fallback;
                             on by default, diagrams unchanged either way)
@@ -137,6 +143,9 @@ serve flags:
   --tenant-quota <int>      per-tenant in-flight cap (0 = unbounded [0])
   --strict-spill            refuse degraded in-memory staging on wire
                             ingests whose spill writes keep failing
+  --max-diagram-points <n>  refuse {"diagram":true} query payloads whose
+                            PD exceeds this many points with a typed
+                            Request error (0 = unbounded [0])
   Reads one JSON request per line on stdin, writes one JSON response
   per line on stdout; EOF or a {\"method\":\"shutdown\"} request ends the
   loop with a {\"summary\":...} trailer (per-tenant counters, cache and
@@ -214,6 +223,10 @@ fn cmd_run(args: &[String]) -> Result<()> {
             "--knn-k" => cfg.knn_k = val()?.parse()?,
             "--strict-spill" => cfg.strict_spill = true,
             "--timeout-ms" => cfg.timeout_ms = Some(val()?.parse()?),
+            "--features" => {
+                cfg.features = dory::features::FeatureSpec::parse_list(val()?)
+                    .map_err(|e| anyhow::anyhow!("--features: {e}"))?;
+            }
             "--no-enclosing" => cfg.enclosing = false,
             "--ns" => cfg.dense_lookup = true,
             "--algorithm" => cfg.algorithm = val()?.clone(),
@@ -360,6 +373,17 @@ fn cmd_run(args: &[String]) -> Result<()> {
                 d.essential_count(dim)
             );
         }
+        if let Some(fo) = &resp.features {
+            println!(
+                "features: {} specs over span {:.6} in {:.3}s ({} points, {} clamped essential, {} cycles)",
+                fo.stats.specs,
+                fo.span,
+                fo.stats.feature_ns as f64 * 1e-9,
+                fo.stats.diagram_points,
+                fo.stats.clamped_points,
+                fo.stats.cycles,
+            );
+        }
     }
     if multi {
         let s = &report.session;
@@ -385,6 +409,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let mut max_inflight = 0usize;
     let mut tenant_quota = 0usize;
     let mut strict_spill = false;
+    let mut max_diagram_points = 0usize;
     let mut it = args.iter();
     while let Some(a) = it.next() {
         let mut val = || it.next().with_context(|| format!("{a} needs a value"));
@@ -397,6 +422,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             "--max-inflight" => max_inflight = val()?.parse()?,
             "--tenant-quota" => tenant_quota = val()?.parse()?,
             "--strict-spill" => strict_spill = true,
+            "--max-diagram-points" => max_diagram_points = val()?.parse()?,
             other => bail!("unknown flag {other}"),
         }
     }
@@ -414,7 +440,8 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     };
     let mut server = dory::serve::Server::new(opts, cache_bytes)
         .with_overload(max_inflight, tenant_quota)
-        .with_strict_spill(strict_spill);
+        .with_strict_spill(strict_spill)
+        .with_max_diagram_points(max_diagram_points);
     if let Some(root) = data_root {
         server = server.with_data_root(root);
     }

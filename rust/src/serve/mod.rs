@@ -28,6 +28,15 @@
 //!   is accepted.
 //! - `query` — a [`PhRequest`] against a cached `handle`
 //!   (`tau`, optional `max_dim`/`shortcut`/`enclosing`/`label`).
+//!   An optional `"features":["betti:64","entropy",…]` array computes
+//!   derived feature products post-reduction (typed specs, see
+//!   [`crate::features::FeatureSpec::parse`]); they ride back as
+//!   `"features"`/`"feature_stats"` response fields and count into the
+//!   tenant's `feature_queries`/`feature_specs`. An optional
+//!   `"diagram":true` flag attaches the full PD point set
+//!   (`[{"dim":…,"points":[[birth,death],…]},…]`, ∞ as `1e999`); a
+//!   payload above `--max-diagram-points` is refused with a typed
+//!   `Request` error.
 //! - `batch` — `queries` (array of query bodies) against one `handle`,
 //!   run **concurrently** through the session's `&self` query path by a
 //!   bounded crew of workers (≈ the pool width, never one OS thread per
@@ -110,6 +119,12 @@ pub struct TenantCounters {
     /// Batch scheduling latency: per batched query, the time between
     /// batch dispatch and that query's thread starting, summed.
     pub queue_wait_ns: u64,
+    /// Queries that requested derived feature products.
+    pub feature_queries: u64,
+    /// Individual feature specs computed across those queries.
+    pub feature_specs: u64,
+    /// Diagram points shipped over the wire via `"diagram":true`.
+    pub diagram_points: u64,
 }
 
 impl TenantCounters {
@@ -120,6 +135,9 @@ impl TenantCounters {
             .field("cache_hits", self.cache_hits)
             .field("errors", self.errors)
             .field("queue_wait_ns", self.queue_wait_ns)
+            .field("feature_queries", self.feature_queries)
+            .field("feature_specs", self.feature_specs)
+            .field("diagram_points", self.diagram_points)
     }
 }
 
@@ -263,6 +281,10 @@ pub struct Server {
     gate: AdmissionGate,
     resilience: ResilienceCounters,
     strict_spill: bool,
+    /// Cap on the diagram point count a `"diagram":true` query may ship
+    /// over the wire (`0` = unbounded). Above it, the query is refused
+    /// with a typed `Request` error before any payload is rendered.
+    max_diagram_points: usize,
 }
 
 impl Server {
@@ -281,6 +303,7 @@ impl Server {
             gate: AdmissionGate::new(0, 0),
             resilience: ResilienceCounters::default(),
             strict_spill: false,
+            max_diagram_points: 0,
         };
         srv.resilience
             .swept_spill_files
@@ -301,6 +324,16 @@ impl Server {
     /// of absorbing the fault into unbounded staging memory.
     pub fn with_strict_spill(mut self, strict: bool) -> Self {
         self.strict_spill = strict;
+        self
+    }
+
+    /// Cap the diagram point count a `"diagram":true` query may return
+    /// (`dory serve --max-diagram-points`). Above the cap the query is
+    /// refused with a typed `Request` error — the reduction itself still
+    /// ran, so the client can retry without the flag or at a smaller τ.
+    /// `0` = unbounded, the default.
+    pub fn with_max_diagram_points(mut self, cap: usize) -> Self {
+        self.max_diagram_points = cap;
         self
     }
 
@@ -702,10 +735,19 @@ impl Server {
     fn handle_query(&self, tenant: &str, req: &Json) -> Result<Json, DoryError> {
         let _permit = self.gate.admit(tenant)?;
         let h = self.lookup(req)?;
-        let ph = parse_ph_request(req)?;
+        let (ph, diagram) = parse_ph_request(req)?;
+        let n_specs = ph.features.len() as u64;
         let resp = self.query_caught(&h, &ph)?;
-        self.bump_tenant(tenant, |t| t.queries += 1);
-        Ok(query_ok(&resp))
+        let (ok, shipped) = query_ok(&resp, diagram, self.max_diagram_points)?;
+        self.bump_tenant(tenant, |t| {
+            t.queries += 1;
+            if n_specs > 0 {
+                t.feature_queries += 1;
+                t.feature_specs += n_specs;
+            }
+            t.diagram_points += shipped;
+        });
+        Ok(ok)
     }
 
     fn handle_batch(&self, tenant: &str, req: &Json) -> Result<Json, DoryError> {
@@ -715,10 +757,11 @@ impl Server {
             .get("queries")
             .and_then(|q| q.as_arr())
             .ok_or_else(|| DoryError::Request("batch needs a 'queries' array".into()))?;
-        let phs = bodies
+        let parsed = bodies
             .iter()
             .map(parse_ph_request)
             .collect::<Result<Vec<_>, _>>()?;
+        let (phs, diagrams): (Vec<PhRequest>, Vec<bool>) = parsed.into_iter().unzip();
         // Fan the batch out over a *bounded* crew of scoped worker
         // threads (≈ the pool width — more OS threads than that just
         // queue on the same pool) pulling query indices from a shared
@@ -774,9 +817,23 @@ impl Server {
             t.queue_wait_ns += wait_ns.load(Ordering::Relaxed);
         });
         let mut arr = Json::arr();
-        for r in results {
-            arr.push(query_ok(&r?));
+        let mut shipped_total = 0u64;
+        let mut feature_queries = 0u64;
+        let mut feature_specs = 0u64;
+        for ((r, ph), diagram) in results.into_iter().zip(&phs).zip(diagrams) {
+            let (ok, shipped) = query_ok(&r?, diagram, self.max_diagram_points)?;
+            shipped_total += shipped;
+            if !ph.features.is_empty() {
+                feature_queries += 1;
+                feature_specs += ph.features.len() as u64;
+            }
+            arr.push(ok);
         }
+        self.bump_tenant(tenant, |t| {
+            t.diagram_points += shipped_total;
+            t.feature_queries += feature_queries;
+            t.feature_specs += feature_specs;
+        });
         Ok(Json::obj().field("responses", arr))
     }
 
@@ -838,7 +895,9 @@ fn req_usize(obj: &Json, key: &str) -> Result<usize, DoryError> {
 
 /// The query body shared by `query` and each `batch` element. τ is
 /// required; NaN/negative τ pass through to the session's typed guard.
-fn parse_ph_request(req: &Json) -> Result<PhRequest, DoryError> {
+/// Returns the typed request plus the `"diagram":true` wire flag (the
+/// full PD point set rides back on the response when set).
+fn parse_ph_request(req: &Json) -> Result<(PhRequest, bool), DoryError> {
     let tau = req
         .get("tau")
         .and_then(|t| t.as_f64())
@@ -873,7 +932,28 @@ fn parse_ph_request(req: &Json) -> Result<PhRequest, DoryError> {
             DoryError::Request("'timeout_ms' must be a non-negative integer".into())
         })? as u64);
     }
-    Ok(ph)
+    if let Some(v) = req.get("features") {
+        let arr = v.as_arr().ok_or_else(|| {
+            DoryError::Request("'features' must be an array of spec strings".into())
+        })?;
+        let mut specs = Vec::with_capacity(arr.len());
+        for item in arr {
+            let s = item.as_str().ok_or_else(|| {
+                DoryError::Request("'features' must be an array of spec strings".into())
+            })?;
+            specs.push(
+                crate::features::FeatureSpec::parse(s).map_err(DoryError::Request)?,
+            );
+        }
+        ph.features = specs;
+    }
+    let diagram = match req.get("diagram") {
+        None => false,
+        Some(v) => v
+            .as_bool()
+            .ok_or_else(|| DoryError::Request("'diagram' must be a boolean".into()))?,
+    };
+    Ok((ph, diagram))
 }
 
 fn ingest_ok(
@@ -901,7 +981,17 @@ fn ingest_ok(
         .field("evicted", ev)
 }
 
-fn query_ok(resp: &PhResponse) -> Json {
+/// Render one query response. With `diagram` set, the full PD point
+/// set is attached as `"diagram":[{"dim":…,"points":[[b,d],…]},…]`
+/// (∞ deaths render as `1e999`, the wire's overflow convention), after
+/// checking the server's `max_diagram_points` cap — a too-large payload
+/// is a typed `Request` refusal, not a truncated one. Returns the JSON
+/// plus how many diagram points it shipped (for the tenant counters).
+fn query_ok(
+    resp: &PhResponse,
+    diagram: bool,
+    max_diagram_points: usize,
+) -> Result<(Json, u64), DoryError> {
     let d = &resp.result.diagram;
     let mut betti = Json::arr();
     for dim in 0..=d.max_dim() {
@@ -916,11 +1006,41 @@ fn query_ok(resp: &PhResponse) -> Json {
     if let Some(l) = &resp.label {
         obj = obj.field("label", l.as_str());
     }
-    obj.field("tau", resp.tau)
+    obj = obj
+        .field("tau", resp.tau)
         .field("tau_effective", resp.tau_effective)
         .field("n_edges", resp.n_edges)
         .field("truncated", resp.truncated)
-        .field("betti", betti)
+        .field("betti", betti);
+    let mut shipped = 0u64;
+    if diagram {
+        let total: usize = (0..=d.max_dim()).map(|dim| d.points(dim).len()).sum();
+        if max_diagram_points > 0 && total > max_diagram_points {
+            return Err(DoryError::Request(format!(
+                "diagram has {total} points, above the server's max-diagram-points \
+                 cap of {max_diagram_points}; query a smaller tau or drop 'diagram'"
+            )));
+        }
+        let mut dims = Json::arr();
+        for dim in 0..=d.max_dim() {
+            let mut pts = Json::arr();
+            for p in d.points(dim) {
+                let mut pair = Json::arr();
+                pair.push(p.birth);
+                pair.push(p.death);
+                pts.push(pair);
+            }
+            shipped += d.points(dim).len() as u64;
+            dims.push(Json::obj().field("dim", dim).field("points", pts));
+        }
+        obj = obj.field("diagram", dims);
+    }
+    if let Some(fo) = &resp.features {
+        obj = obj
+            .field("features", fo.to_json())
+            .field("feature_stats", fo.stats.to_json());
+    }
+    Ok((obj, shipped))
 }
 
 /// Content fingerprint of an ingest: the dataset value's canonical
@@ -1403,6 +1523,154 @@ mod tests {
             .as_str()
             .unwrap()
             .to_string()
+    }
+
+    #[test]
+    fn features_ride_the_wire_with_tenant_accounting() {
+        // Failpoints are process-global: hold the test lock so an
+        // armed sibling test cannot inject into this one.
+        let _fp = failpoint::test_lock();
+        let srv = server();
+        let key = ingest_circle(&srv, 48);
+        let q = format!(
+            "{{\"id\":2,\"tenant\":\"f\",\"method\":\"query\",\"handle\":\"{key}\",\
+             \"tau\":1e999,\"max_dim\":1,\"features\":[\"betti:8\",\"entropy\",\"representatives\"]}}\n"
+        );
+        let out = drive(&srv, &q);
+        let ok = out[0].get("ok").unwrap();
+        let feats = ok.get("features").unwrap();
+        let items = feats.get("items").unwrap().as_arr().unwrap();
+        assert_eq!(items.len(), 3);
+        assert_eq!(items[0].get("spec").unwrap().as_str(), Some("betti:8"));
+        // betti:8 samples 9 points per dimension, dims 0..=1.
+        let dims = items[0].get("dims").unwrap().as_arr().unwrap();
+        assert_eq!(dims.len(), 2);
+        assert_eq!(dims[0].as_arr().unwrap().len(), 9);
+        // The circle yields at least one representative loop with
+        // vertex and anchor payloads.
+        let cycles = items[2].get("cycles").unwrap().as_arr().unwrap();
+        assert!(!cycles.is_empty());
+        assert!(cycles[0].get("vertices").unwrap().as_arr().unwrap().len() >= 3);
+        let fs = ok.get("feature_stats").unwrap();
+        assert_eq!(fs.get("specs").unwrap().as_usize(), Some(3));
+        // Tenant accounting.
+        let summary = out.last().unwrap().get("summary").unwrap();
+        let t = summary.get("tenants").unwrap().get("f").unwrap();
+        assert_eq!(t.get("feature_queries").unwrap().as_usize(), Some(1));
+        assert_eq!(t.get("feature_specs").unwrap().as_usize(), Some(3));
+        // A bad spec is a typed Request refusal.
+        let bad = format!(
+            "{{\"id\":3,\"method\":\"query\",\"handle\":\"{key}\",\"tau\":1e999,\
+             \"features\":[\"warp\"]}}\n"
+        );
+        let out = drive(&srv, &bad);
+        let e = out[0].get("error").unwrap();
+        assert_eq!(e.get("kind").unwrap().as_str(), Some("Request"));
+        assert!(e.get("message").unwrap().as_str().unwrap().contains("unknown feature"));
+    }
+
+    #[test]
+    fn diagram_flag_ships_points_and_cap_refuses_typed() {
+        // Failpoints are process-global: hold the test lock so an
+        // armed sibling test cannot inject into this one.
+        let _fp = failpoint::test_lock();
+        let srv = server();
+        let key = ingest_circle(&srv, 48);
+        let q = format!(
+            "{{\"id\":2,\"tenant\":\"d\",\"method\":\"query\",\"handle\":\"{key}\",\
+             \"tau\":1e999,\"max_dim\":1,\"diagram\":true}}\n"
+        );
+        let out = drive(&srv, &q);
+        let ok = out[0].get("ok").unwrap();
+        let dims = ok.get("diagram").unwrap().as_arr().unwrap();
+        assert_eq!(dims.len(), 2);
+        let mut total = 0usize;
+        for (dim, entry) in dims.iter().enumerate() {
+            assert_eq!(entry.get("dim").unwrap().as_usize(), Some(dim));
+            let pts = entry.get("points").unwrap().as_arr().unwrap();
+            total += pts.len();
+            for p in pts {
+                let pair = p.as_arr().unwrap();
+                assert_eq!(pair.len(), 2);
+                let b = pair[0].as_f64().unwrap();
+                let d = pair[1].as_f64().unwrap();
+                assert!(b.is_finite());
+                assert!(d > b, "death must exceed birth: {b} {d}");
+            }
+        }
+        // The essential H0 class crossed the wire as an infinite death.
+        let h0 = dims[0].get("points").unwrap().as_arr().unwrap();
+        assert!(h0
+            .iter()
+            .any(|p| p.as_arr().unwrap()[1].as_f64() == Some(f64::INFINITY)));
+        assert!(total > 0);
+        // diagram points are charged to the tenant.
+        let summary = out.last().unwrap().get("summary").unwrap();
+        let t = summary.get("tenants").unwrap().get("d").unwrap();
+        assert_eq!(t.get("diagram_points").unwrap().as_usize(), Some(total));
+        // Without the flag, no diagram field rides along.
+        let q2 = format!(
+            "{{\"id\":3,\"method\":\"query\",\"handle\":\"{key}\",\"tau\":1e999,\"max_dim\":1}}\n"
+        );
+        let out = drive(&srv, &q2);
+        assert!(out[0].get("ok").unwrap().get("diagram").is_none());
+        // A capped server refuses the same payload with a typed error.
+        let capped = Server::new(
+            EngineOptions {
+                threads: 2,
+                ..Default::default()
+            },
+            64 << 20,
+        )
+        .with_max_diagram_points(2);
+        let key = ingest_circle(&capped, 48);
+        let q3 = format!(
+            "{{\"id\":4,\"method\":\"query\",\"handle\":\"{key}\",\"tau\":1e999,\
+             \"max_dim\":1,\"diagram\":true}}\n"
+        );
+        let out = drive(&capped, &q3);
+        let e = out[0].get("error").unwrap();
+        assert_eq!(e.get("kind").unwrap().as_str(), Some("Request"));
+        assert!(e
+            .get("message")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .contains("max-diagram-points"));
+    }
+
+    #[test]
+    fn batch_queries_carry_features_and_diagram_flags() {
+        // Failpoints are process-global: hold the test lock so an
+        // armed sibling test cannot inject into this one.
+        let _fp = failpoint::test_lock();
+        let srv = server();
+        let key = ingest_circle(&srv, 40);
+        let batch = format!(
+            "{{\"id\":2,\"tenant\":\"bf\",\"method\":\"batch\",\"handle\":\"{key}\",\"queries\":[\
+             {{\"tau\":1e999,\"max_dim\":1,\"features\":[\"entropy\"]}},\
+             {{\"tau\":1e999,\"max_dim\":1,\"diagram\":true}},\
+             {{\"tau\":1e999,\"max_dim\":1}}]}}\n"
+        );
+        let out = drive(&srv, &batch);
+        let resps = out[0]
+            .get("ok")
+            .unwrap()
+            .get("responses")
+            .unwrap()
+            .as_arr()
+            .unwrap();
+        assert_eq!(resps.len(), 3);
+        assert!(resps[0].get("features").is_some());
+        assert!(resps[0].get("diagram").is_none());
+        assert!(resps[1].get("diagram").is_some());
+        assert!(resps[1].get("features").is_none());
+        assert!(resps[2].get("diagram").is_none());
+        assert!(resps[2].get("features").is_none());
+        let summary = out.last().unwrap().get("summary").unwrap();
+        let t = summary.get("tenants").unwrap().get("bf").unwrap();
+        assert_eq!(t.get("feature_queries").unwrap().as_usize(), Some(1));
+        assert!(t.get("diagram_points").unwrap().as_usize().unwrap() > 0);
     }
 
     #[test]

@@ -1,0 +1,705 @@
+//! Feature-products subsystem harness.
+//!
+//! Pins the contract of `dory::features` end to end:
+//!
+//! * **golden cross-validation** — Betti curves, entropy, landscapes and
+//!   persistence images served by the session must match the values an
+//!   independent Python implementation computed from the same diagram
+//!   (`fixtures/generate_fixtures.py`, `*.features.txt`): integer curves
+//!   exactly, float kernels at 1e-12 relative tolerance (the only
+//!   permitted deviation is a libm ulp in `exp`/`ln`);
+//! * **bit identity** — every feature payload is byte-identical across
+//!   thread counts × batch schedules, and for cached-handle vs
+//!   fresh-ingest queries, with the session's build counters proving
+//!   feature requests never trigger a rebuild;
+//! * **properties** — entropy is permutation-invariant at the bit
+//!   level, landscapes are non-negative / 1-Lipschitz / monotone in the
+//!   level, Betti curves equal independent event counts at every
+//!   sample;
+//! * **essential semantics** — death = ∞ classes are clamped to the
+//!   span, counted in `FeatureStats::clamped_points`, and never leak a
+//!   NaN/∞ into a finite kernel;
+//! * **representatives** — served loops are genuine closed walks of
+//!   birth-time edges, anchored on the birth edge, with the advertised
+//!   perimeter.
+
+use std::path::{Path, PathBuf};
+
+use dory::features::{self, clamped_sorted, FeatureSpec, FeatureValue};
+use dory::geometry::{MetricData, PointCloud, SparseDistances};
+use dory::homology::{Diagram, EngineOptions, PhRequest, PhResponse, Session};
+use dory::util::rng::Pcg32;
+
+fn fixtures_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/tests/fixtures")
+}
+
+fn parse_hex_f64(s: &str) -> f64 {
+    f64::from_bits(u64::from_str_radix(s, 16).unwrap_or_else(|e| panic!("bad hex {s}: {e}")))
+}
+
+/// The input slice of a `*.pd.txt` fixture (the expected-PD lines are
+/// golden_pd.rs's business; features only need the exact input).
+struct PdInput {
+    max_dim: usize,
+    tau: f64,
+    data: MetricData,
+}
+
+fn load_pd_input(path: &Path) -> PdInput {
+    let text = std::fs::read_to_string(path).unwrap_or_else(|e| panic!("read {path:?}: {e}"));
+    let mut kind = String::new();
+    let mut max_dim = 0usize;
+    let mut tau = f64::INFINITY;
+    let mut dim = 0usize;
+    let mut n = 0usize;
+    let mut coords: Vec<f64> = Vec::new();
+    let mut entries: Vec<(u32, u32, f64)> = Vec::new();
+    for line in text.lines() {
+        let mut it = line.split_whitespace();
+        match it.next() {
+            Some("kind") => kind = it.next().unwrap().to_string(),
+            Some("max_dim") => max_dim = it.next().unwrap().parse().unwrap(),
+            Some("tau") => tau = parse_hex_f64(it.next().unwrap()),
+            Some("dim") => dim = it.next().unwrap().parse().unwrap(),
+            Some("n") => n = it.next().unwrap().parse().unwrap(),
+            Some("point") => coords.extend(it.map(parse_hex_f64)),
+            Some("entry") => {
+                let u: u32 = it.next().unwrap().parse().unwrap();
+                let v: u32 = it.next().unwrap().parse().unwrap();
+                entries.push((u, v, parse_hex_f64(it.next().unwrap())));
+            }
+            _ => {}
+        }
+    }
+    let data = match kind.as_str() {
+        "points" => MetricData::Points(PointCloud::new(dim, coords)),
+        "sparse" => MetricData::Sparse(SparseDistances { n, entries }),
+        other => panic!("{path:?}: unknown kind {other}"),
+    };
+    PdInput { max_dim, tau, data }
+}
+
+/// A `*.features.txt` golden fixture: the Python-computed expectations.
+struct FeatureFixture {
+    span: f64,
+    max_dim: usize,
+    betti_grid: usize,
+    landscape_levels: usize,
+    landscape_grid: usize,
+    image_grid: usize,
+    /// per dim
+    clamped: Vec<u64>,
+    /// `[dim][sample]`
+    betti: Vec<Vec<u64>>,
+    /// `[dim]`
+    entropy: Vec<f64>,
+    /// `[dim][level][sample]`
+    landscape: Vec<Vec<Vec<f64>>>,
+    /// `[dim][row*grid + col]`
+    image: Vec<Vec<f64>>,
+}
+
+fn load_feature_fixture(path: &Path) -> FeatureFixture {
+    let text = std::fs::read_to_string(path).unwrap_or_else(|e| panic!("read {path:?}: {e}"));
+    let mut fx = FeatureFixture {
+        span: 0.0,
+        max_dim: 0,
+        betti_grid: 0,
+        landscape_levels: 0,
+        landscape_grid: 0,
+        image_grid: 0,
+        clamped: Vec::new(),
+        betti: Vec::new(),
+        entropy: Vec::new(),
+        landscape: Vec::new(),
+        image: Vec::new(),
+    };
+    for line in text.lines() {
+        let mut it = line.split_whitespace();
+        let Some(tag) = it.next() else { continue };
+        match tag {
+            "span" => fx.span = parse_hex_f64(it.next().unwrap()),
+            "max_dim" => {
+                fx.max_dim = it.next().unwrap().parse().unwrap();
+                let nd = fx.max_dim + 1;
+                fx.clamped = vec![0; nd];
+                fx.betti = vec![Vec::new(); nd];
+                fx.entropy = vec![0.0; nd];
+                fx.landscape = vec![Vec::new(); nd];
+                fx.image = vec![Vec::new(); nd];
+            }
+            "betti_grid" => fx.betti_grid = it.next().unwrap().parse().unwrap(),
+            "landscape_levels" => fx.landscape_levels = it.next().unwrap().parse().unwrap(),
+            "landscape_grid" => fx.landscape_grid = it.next().unwrap().parse().unwrap(),
+            "image_grid" => fx.image_grid = it.next().unwrap().parse().unwrap(),
+            "clamped" => {
+                let d: usize = it.next().unwrap().parse().unwrap();
+                fx.clamped[d] = it.next().unwrap().parse().unwrap();
+            }
+            "betti" => {
+                let d: usize = it.next().unwrap().parse().unwrap();
+                fx.betti[d] = it.map(|v| v.parse().unwrap()).collect();
+            }
+            "entropy" => {
+                let d: usize = it.next().unwrap().parse().unwrap();
+                fx.entropy[d] = parse_hex_f64(it.next().unwrap());
+            }
+            "landscape" => {
+                let d: usize = it.next().unwrap().parse().unwrap();
+                let k: usize = it.next().unwrap().parse().unwrap();
+                let row: Vec<f64> = it.map(parse_hex_f64).collect();
+                assert_eq!(fx.landscape[d].len(), k, "landscape rows out of order");
+                fx.landscape[d].push(row);
+            }
+            "image" => {
+                let d: usize = it.next().unwrap().parse().unwrap();
+                let r: usize = it.next().unwrap().parse().unwrap();
+                assert_eq!(fx.image[d].len(), r * fx.image_grid, "image rows out of order");
+                fx.image[d].extend(it.map(parse_hex_f64));
+            }
+            _ => {}
+        }
+    }
+    fx
+}
+
+/// `|got - want| <= 1e-12 · max(1, |want|)` — room for exactly a libm
+/// ulp difference between Python's and Rust's `exp`/`ln`, nothing more.
+fn assert_close(got: f64, want: f64, what: &str) {
+    assert!(
+        (got - want).abs() <= 1e-12 * want.abs().max(1.0),
+        "{what}: got {got:e}, want {want:e} (diff {:e})",
+        (got - want).abs()
+    );
+}
+
+/// Flatten every feature payload (and the span) to raw bits, for
+/// byte-level identity comparisons across configurations.
+fn feature_bits(resp: &PhResponse) -> Vec<u64> {
+    let fo = resp.features.as_ref().expect("features requested");
+    let mut bits = vec![fo.span.to_bits()];
+    for item in &fo.items {
+        bits.extend(item.spec.name().bytes().map(u64::from));
+        match &item.value {
+            FeatureValue::BettiCurve(dims) => {
+                for d in dims {
+                    bits.extend(d.iter().copied());
+                }
+            }
+            FeatureValue::Entropy(dims) => bits.extend(dims.iter().map(|v| v.to_bits())),
+            FeatureValue::Landscape(dims) => {
+                for levels in dims {
+                    for level in levels {
+                        bits.extend(level.iter().map(|v| v.to_bits()));
+                    }
+                }
+            }
+            FeatureValue::Image(dims) => {
+                for img in dims {
+                    bits.extend(img.iter().map(|v| v.to_bits()));
+                }
+            }
+            FeatureValue::Representatives(cycles) => {
+                for c in cycles {
+                    bits.push(c.birth.to_bits());
+                    bits.push(c.death.to_bits());
+                    bits.push(c.perimeter.to_bits());
+                    bits.push(u64::from(c.anchor.0) << 32 | u64::from(c.anchor.1));
+                    bits.extend(c.vertices.iter().map(|&v| u64::from(v)));
+                }
+            }
+        }
+    }
+    bits
+}
+
+fn cloud(n: usize, dim: usize, seed: u64) -> MetricData {
+    let mut rng = Pcg32::new(seed);
+    MetricData::Points(PointCloud::new(
+        dim,
+        (0..n * dim).map(|_| rng.next_f64()).collect(),
+    ))
+}
+
+// ---------------------------------------------------------------------
+// Golden cross-validation against the Python implementation
+// ---------------------------------------------------------------------
+
+fn check_against_python(name: &str) {
+    let input = load_pd_input(&fixtures_dir().join(format!("{name}.pd.txt")));
+    let fx = load_feature_fixture(&fixtures_dir().join(format!("{name}.features.txt")));
+    let session = Session::new(EngineOptions {
+        max_dim: input.max_dim,
+        threads: 2,
+        ..Default::default()
+    });
+    let handle = session.ingest(&input.data, input.tau).unwrap();
+    let specs = vec![
+        FeatureSpec::BettiCurve { grid: fx.betti_grid },
+        FeatureSpec::Entropy,
+        FeatureSpec::Landscape {
+            levels: fx.landscape_levels,
+            grid: fx.landscape_grid,
+        },
+        FeatureSpec::Image { grid: fx.image_grid },
+    ];
+    let resp = session
+        .query(
+            &handle,
+            &PhRequest {
+                tau: input.tau,
+                features: specs,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    let fo = resp.features.as_ref().expect("features must be served");
+    assert_eq!(fo.span.to_bits(), fx.span.to_bits(), "{name}: span");
+    assert_eq!(fo.items.len(), 4);
+    let ndims = fx.max_dim + 1;
+    // Three clamping kernels (entropy, landscape, image) each clamp
+    // every essential class once.
+    let clamped_per_pass: u64 = fx.clamped.iter().sum();
+    assert_eq!(
+        fo.stats.clamped_points,
+        3 * clamped_per_pass,
+        "{name}: clamped_points"
+    );
+    match &fo.items[0].value {
+        FeatureValue::BettiCurve(dims) => {
+            assert_eq!(dims.len(), ndims);
+            for d in 0..ndims {
+                assert_eq!(dims[d], fx.betti[d], "{name}: betti dim {d}");
+            }
+        }
+        other => panic!("{name}: expected BettiCurve, got {other:?}"),
+    }
+    match &fo.items[1].value {
+        FeatureValue::Entropy(dims) => {
+            for d in 0..ndims {
+                assert_close(dims[d], fx.entropy[d], &format!("{name}: entropy dim {d}"));
+            }
+        }
+        other => panic!("{name}: expected Entropy, got {other:?}"),
+    }
+    match &fo.items[2].value {
+        FeatureValue::Landscape(dims) => {
+            for d in 0..ndims {
+                assert_eq!(dims[d].len(), fx.landscape_levels);
+                for (k, level) in dims[d].iter().enumerate() {
+                    assert_eq!(level.len(), fx.landscape_grid + 1);
+                    for (i, &v) in level.iter().enumerate() {
+                        assert_close(
+                            v,
+                            fx.landscape[d][k][i],
+                            &format!("{name}: landscape dim {d} level {k} sample {i}"),
+                        );
+                    }
+                }
+            }
+        }
+        other => panic!("{name}: expected Landscape, got {other:?}"),
+    }
+    match &fo.items[3].value {
+        FeatureValue::Image(dims) => {
+            for d in 0..ndims {
+                assert_eq!(dims[d].len(), fx.image_grid * fx.image_grid);
+                for (i, &v) in dims[d].iter().enumerate() {
+                    assert_close(
+                        v,
+                        fx.image[d][i],
+                        &format!("{name}: image dim {d} pixel {i}"),
+                    );
+                    assert!(v.is_finite(), "{name}: image dim {d} pixel {i} not finite");
+                }
+            }
+        }
+        other => panic!("{name}: expected Image, got {other:?}"),
+    }
+}
+
+#[test]
+fn golden_features_circle48_match_python() {
+    check_against_python("circle48");
+}
+
+#[test]
+fn golden_features_hic240_match_python() {
+    check_against_python("hic240");
+}
+
+// ---------------------------------------------------------------------
+// Bit identity across schedules and ingest paths
+// ---------------------------------------------------------------------
+
+#[test]
+fn features_bit_identical_across_threads_and_batches() {
+    let data = cloud(40, 3, 2026);
+    let tau = 0.9;
+    let specs = vec![
+        FeatureSpec::BettiCurve { grid: 12 },
+        FeatureSpec::Entropy,
+        FeatureSpec::Landscape { levels: 3, grid: 10 },
+        FeatureSpec::Image { grid: 12 },
+        FeatureSpec::Representatives { min_persistence: 0.0 },
+    ];
+    let mut reference: Option<Vec<u64>> = None;
+    for threads in [1usize, 2, 8] {
+        for (batch_size, adaptive) in [(32usize, true), (7, false), (100, false)] {
+            let session = Session::new(EngineOptions {
+                max_dim: 1,
+                threads,
+                batch_size,
+                adaptive_batch: adaptive,
+                ..Default::default()
+            });
+            let handle = session.ingest(&data, tau).unwrap();
+            let resp = session
+                .query(
+                    &handle,
+                    &PhRequest {
+                        tau,
+                        features: specs.clone(),
+                        ..Default::default()
+                    },
+                )
+                .unwrap();
+            let bits = feature_bits(&resp);
+            match &reference {
+                None => reference = Some(bits),
+                Some(want) => assert_eq!(
+                    &bits, want,
+                    "threads={threads} batch={batch_size} adaptive={adaptive}: \
+                     feature bytes deviate"
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn cached_handle_features_match_fresh_ingest_and_never_rebuild() {
+    let data = cloud(36, 3, 7171);
+    let specs = vec![
+        FeatureSpec::Entropy,
+        FeatureSpec::Image { grid: 8 },
+        FeatureSpec::Representatives { min_persistence: 0.0 },
+    ];
+    let opts = EngineOptions {
+        max_dim: 1,
+        threads: 2,
+        ..Default::default()
+    };
+    // One cached handle serving three τ-cuts with features...
+    let cached = Session::new(opts.clone());
+    let handle = cached.ingest(&data, 0.9).unwrap();
+    let taus = [0.4, 0.7, 0.9];
+    let mut served = Vec::new();
+    for &tau in &taus {
+        let resp = cached
+            .query(
+                &handle,
+                &PhRequest {
+                    tau,
+                    features: specs.clone(),
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        served.push(feature_bits(&resp));
+    }
+    // ... feature queries ride the shared build: still exactly one.
+    assert_eq!(cached.stats().filtration_builds, 1);
+    assert_eq!(cached.stats().nb_builds, 1);
+    assert_eq!(cached.stats().feature_queries, taus.len() as u64);
+    // ... must serve byte-identical features to fresh per-τ ingests.
+    for (i, &tau) in taus.iter().enumerate() {
+        let fresh = Session::new(opts.clone());
+        let h = fresh.ingest(&data, tau).unwrap();
+        let resp = fresh
+            .query(
+                &h,
+                &PhRequest {
+                    tau,
+                    features: specs.clone(),
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        assert_eq!(
+            feature_bits(&resp),
+            served[i],
+            "tau={tau}: cached-handle features deviate from fresh ingest"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Kernel properties
+// ---------------------------------------------------------------------
+
+/// A reproducible random diagram: `k` classes in `[0, span]`, a fraction
+/// essential.
+fn random_diagram(k: usize, span: f64, seed: u64) -> Diagram {
+    let mut rng = Pcg32::new(seed);
+    let mut d = Diagram::new(1);
+    for _ in 0..k {
+        let b = rng.uniform(0.0, span * 0.8);
+        if rng.next_f64() < 0.15 {
+            d.push(1, b, f64::INFINITY);
+        } else {
+            d.push(1, b, b + rng.uniform(0.0, span - b));
+        }
+    }
+    d
+}
+
+#[test]
+fn entropy_is_permutation_invariant_at_the_bit_level() {
+    let span = 2.0;
+    for seed in [1u64, 2, 3] {
+        let d = random_diagram(17, span, seed);
+        let (pts, _) = clamped_sorted(&d, 1, span);
+        let want = features::entropy::entropy(&pts).to_bits();
+        // Re-push the same points in reversed and rotated orders: the
+        // canonical sort must erase the permutation entirely.
+        let points: Vec<_> = d.points(1).to_vec();
+        for rot in [1usize, 5, 11] {
+            let mut perm = Diagram::new(1);
+            for i in 0..points.len() {
+                let p = &points[(i * rot + 3) % points.len()];
+                perm.push(1, p.birth, p.death);
+            }
+            let (pp, _) = clamped_sorted(&perm, 1, span);
+            assert_eq!(
+                features::entropy::entropy(&pp).to_bits(),
+                want,
+                "seed={seed} rot={rot}"
+            );
+        }
+    }
+}
+
+#[test]
+fn landscapes_are_nonnegative_lipschitz_and_nested() {
+    let span = 1.5;
+    let grid = 64usize;
+    let levels = 4usize;
+    let step = span / grid as f64;
+    for seed in [11u64, 12, 13] {
+        let d = random_diagram(23, span, seed);
+        let (pts, _) = clamped_sorted(&d, 1, span);
+        let ls = features::landscape::landscape(&pts, levels, grid, span);
+        assert_eq!(ls.len(), levels);
+        for (k, level) in ls.iter().enumerate() {
+            assert_eq!(level.len(), grid + 1);
+            for (i, &v) in level.iter().enumerate() {
+                assert!(v >= 0.0, "seed={seed} λ_{k}[{i}] = {v} < 0");
+                assert!(v.is_finite());
+                if i > 0 {
+                    // 1-Lipschitz: every tent has slope ±1.
+                    assert!(
+                        (v - level[i - 1]).abs() <= step + 1e-12,
+                        "seed={seed} λ_{k} jumps {} > step {step} at {i}",
+                        (v - level[i - 1]).abs()
+                    );
+                }
+                // Levels are nested: λ_k ≥ λ_{k+1} pointwise.
+                if k > 0 {
+                    assert!(ls[k - 1][i] >= v, "seed={seed} λ_{} < λ_{k} at {i}", k - 1);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn betti_curve_equals_event_counts_at_every_sample() {
+    let span = 2.5;
+    let grid = 37usize;
+    for seed in [21u64, 22] {
+        let d = random_diagram(29, span, seed);
+        let curve = features::betti::curve(&d, 1, grid, span);
+        assert_eq!(curve.len(), grid + 1);
+        for (i, &got) in curve.iter().enumerate() {
+            let t = span * i as f64 / grid as f64;
+            // Independent event count straight off the diagram: alive
+            // means birth ≤ t < death (essentials never die).
+            let want = d
+                .points(1)
+                .iter()
+                .filter(|p| p.birth <= t && t < p.death)
+                .count() as u64;
+            assert_eq!(got, want, "seed={seed} sample {i} (t={t})");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Essential-class semantics
+// ---------------------------------------------------------------------
+
+#[test]
+fn essential_classes_clamp_to_span_and_stay_finite() {
+    // Two well-separated clusters: 2 essential H0 classes at every τ
+    // below the gap, so every clamping kernel must fire.
+    let mut rng = Pcg32::new(404);
+    let mut coords = Vec::new();
+    for i in 0..30 {
+        let off = if i < 15 { 0.0 } else { 50.0 };
+        coords.extend([off + rng.next_f64(), rng.next_f64()]);
+    }
+    let data = MetricData::Points(PointCloud::new(2, coords));
+    let session = Session::new(EngineOptions {
+        max_dim: 1,
+        threads: 2,
+        ..Default::default()
+    });
+    let handle = session.ingest(&data, 3.0).unwrap();
+    let resp = session
+        .query(
+            &handle,
+            &PhRequest {
+                tau: 3.0,
+                features: vec![
+                    FeatureSpec::Entropy,
+                    FeatureSpec::Landscape { levels: 2, grid: 8 },
+                    FeatureSpec::Image { grid: 8 },
+                ],
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    let fo = resp.features.as_ref().unwrap();
+    // 2 essential H0 classes × 3 clamping kernels, at least.
+    assert!(
+        fo.stats.clamped_points >= 6,
+        "clamped_points = {}",
+        fo.stats.clamped_points
+    );
+    for item in &fo.items {
+        match &item.value {
+            FeatureValue::Entropy(dims) => {
+                assert!(dims.iter().all(|v| v.is_finite()), "{dims:?}")
+            }
+            FeatureValue::Landscape(dims) => {
+                for levels in dims {
+                    for level in levels {
+                        assert!(level.iter().all(|v| v.is_finite()), "{level:?}");
+                    }
+                }
+            }
+            FeatureValue::Image(dims) => {
+                for img in dims {
+                    assert!(img.iter().all(|v| v.is_finite()));
+                }
+            }
+            other => panic!("unexpected payload {other:?}"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Representatives, end to end
+// ---------------------------------------------------------------------
+
+#[test]
+fn served_representatives_are_valid_closed_walks() {
+    let data = dory::datasets::figure_eight(80, 1.0, 0.0, 2);
+    let session = Session::new(EngineOptions {
+        max_dim: 1,
+        threads: 2,
+        ..Default::default()
+    });
+    let handle = session.ingest(&data, 1.2).unwrap();
+    let min_persistence = 0.4;
+    let resp = session
+        .query(
+            &handle,
+            &PhRequest {
+                tau: 1.2,
+                features: vec![FeatureSpec::Representatives { min_persistence }],
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    let fo = resp.features.as_ref().unwrap();
+    let FeatureValue::Representatives(cycles) = &fo.items[0].value else {
+        panic!("expected Representatives");
+    };
+    assert_eq!(cycles.len(), 2, "figure eight carries two loops");
+    assert_eq!(fo.stats.cycles, 2);
+    let nb = handle.neighborhoods();
+    let f = handle.filtration();
+    for c in cycles {
+        let n = c.vertices.len();
+        assert!(n >= 3, "loop too short: {n}");
+        assert!(c.persistence() > min_persistence);
+        assert_eq!(c.anchor.0, *c.vertices.first().unwrap());
+        assert_eq!(c.anchor.1, *c.vertices.last().unwrap());
+        // Genuine closed walk of birth-time edges, and the advertised
+        // perimeter is exactly the sum of its edge values.
+        let mut per = 0.0f64;
+        for i in 0..n {
+            let (u, v) = (c.vertices[i], c.vertices[(i + 1) % n]);
+            let o = nb
+                .edge_order(u, v)
+                .unwrap_or_else(|| panic!("cycle edge ({u}, {v}) missing"));
+            assert!(
+                f.values[o as usize] <= c.birth + 1e-12,
+                "edge ({u}, {v}) enters after birth"
+            );
+            per += f.values[o as usize];
+        }
+        assert_eq!(per.to_bits(), c.perimeter.to_bits(), "perimeter mismatch");
+        let set: std::collections::HashSet<_> = c.vertices.iter().collect();
+        assert_eq!(set.len(), n, "repeated vertex in representative");
+    }
+    // The canonical order is (birth, death, anchor), ascending.
+    for w in cycles.windows(2) {
+        assert!(
+            (w[0].birth, w[0].death) <= (w[1].birth, w[1].death),
+            "cycles out of canonical order"
+        );
+    }
+}
+
+#[test]
+fn feature_requests_on_sub_tau_cuts_use_the_served_view() {
+    // Representatives on a truncated cut must measure against the cut's
+    // own view — every emitted loop is fully present at the cut.
+    let data = dory::datasets::circle(48, 1.0, 0.05, 1);
+    let session = Session::new(EngineOptions {
+        max_dim: 1,
+        threads: 2,
+        ..Default::default()
+    });
+    let handle = session.ingest(&data, 3.0).unwrap();
+    for tau in [0.7, 1.5, 3.0] {
+        let resp = session
+            .query(
+                &handle,
+                &PhRequest {
+                    tau,
+                    features: vec![
+                        FeatureSpec::Representatives { min_persistence: 0.3 },
+                        FeatureSpec::Entropy,
+                    ],
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        let fo = resp.features.as_ref().unwrap();
+        assert_eq!(fo.span.to_bits(), tau.to_bits(), "tau={tau}: span is the cut");
+        let FeatureValue::Representatives(cycles) = &fo.items[0].value else {
+            panic!("expected Representatives");
+        };
+        assert!(!cycles.is_empty(), "tau={tau}: the dominant loop is long-lived");
+        for c in cycles {
+            assert!(c.birth <= tau, "tau={tau}: birth beyond the cut");
+            assert!(c.perimeter.is_finite());
+        }
+    }
+    assert_eq!(session.stats().filtration_builds, 1);
+}

@@ -339,6 +339,130 @@ def betti_at(diagram, dim, t):
     return alive + sum(1 for b in ess if b <= t)
 
 
+# --- feature products (mirroring rust/src/features/) --------------------
+#
+# Each kernel below replays the Rust implementation's float operations in
+# the same order on the same f64 values (Python floats ARE IEEE f64), so
+# the expected feature values differ from the engine's by at most a libm
+# ulp in exp/log — the Rust test compares at 1e-12 relative tolerance,
+# and the integer Betti curves exactly.
+
+
+def clamped_sorted(diagram, dim, span):
+    """features::clamped_sorted — deaths (incl. ∞ essentials) clamped to
+    span, canonical (birth, death) sort."""
+    fin, ess = diagram[dim]
+    pts = []
+    clamped = 0
+    for (b, d) in fin:
+        if d > span:
+            clamped += 1
+            pts.append((b, span))
+        else:
+            pts.append((b, d))
+    for b in ess:
+        clamped += 1
+        pts.append((b, span))
+    pts.sort()  # finite positive floats: tuple sort == total_cmp order
+    return pts, clamped
+
+
+def betti_curve(diagram, dim, grid, span):
+    return [betti_at(diagram, dim, span * i / grid) for i in range(grid + 1)]
+
+
+def pers_entropy(points):
+    total = 0.0
+    for (b, d) in points:
+        total += d - b
+    if not total > 0.0:
+        return 0.0
+    e = 0.0
+    for (b, d) in points:
+        p = (d - b) / total
+        if p > 0.0:
+            e -= p * math.log(p)
+    return e
+
+
+def pers_landscape(points, levels, grid, span):
+    out = [[0.0] * (grid + 1) for _ in range(levels)]
+    for i in range(grid + 1):
+        t = span * i / grid
+        tents = []
+        for (b, d) in points:
+            v = min(t - b, d - t)
+            if v > 0.0:
+                tents.append(v)
+        tents.sort(reverse=True)
+        for k in range(levels):
+            out[k][i] = tents[k] if k < len(tents) else 0.0
+    return out
+
+
+def pers_image(points, grid, span):
+    """features::image::serial — SIGMA_FRAC 0.05, 1e-30 regularizer,
+    half-cell centers, persistence-weighted, row-major [row*grid+col]."""
+    sigma = 0.05 * span
+    inv2s2 = 1.0 / (2.0 * sigma * sigma + 1e-30)
+    cell = span / grid
+    out = [0.0] * (grid * grid)
+    for r in range(grid):
+        y = (r + 0.5) * cell
+        for c in range(grid):
+            x = (c + 0.5) * cell
+            acc = 0.0
+            for (b, d) in points:
+                pers = d - b
+                dx = x - b
+                dy = y - pers
+                acc += pers * math.exp(-(dx * dx + dy * dy) * inv2s2)
+            out[r * grid + c] = acc
+    return out
+
+
+FEATURE_BETTI_GRID = 16
+FEATURE_LANDSCAPE_LEVELS = 3
+FEATURE_LANDSCAPE_GRID = 16
+FEATURE_IMAGE_GRID = 16
+
+
+def write_feature_fixture(path, name, span, max_dim, diagram):
+    lines = [
+        "# dory golden feature-product fixture",
+        "# generated by rust/tests/fixtures/generate_fixtures.py",
+        "# f64 values are big-endian IEEE-754 bit patterns in hex",
+        f"name {name}",
+        f"span {f64_hex(span)}",
+        f"max_dim {max_dim}",
+        f"betti_grid {FEATURE_BETTI_GRID}",
+        f"landscape_levels {FEATURE_LANDSCAPE_LEVELS}",
+        f"landscape_grid {FEATURE_LANDSCAPE_GRID}",
+        f"image_grid {FEATURE_IMAGE_GRID}",
+    ]
+    for dim in range(max_dim + 1):
+        pts, clamped = clamped_sorted(diagram, dim, span)
+        lines.append(f"clamped {dim} {clamped}")
+        bc = betti_curve(diagram, dim, FEATURE_BETTI_GRID, span)
+        lines.append(f"betti {dim} " + " ".join(str(v) for v in bc))
+        lines.append(f"entropy {dim} {f64_hex(pers_entropy(pts))}")
+        ls = pers_landscape(
+            pts, FEATURE_LANDSCAPE_LEVELS, FEATURE_LANDSCAPE_GRID, span
+        )
+        for k, level in enumerate(ls):
+            lines.append(
+                f"landscape {dim} {k} " + " ".join(f64_hex(v) for v in level)
+            )
+        img = pers_image(pts, FEATURE_IMAGE_GRID, span)
+        for r in range(FEATURE_IMAGE_GRID):
+            row = img[r * FEATURE_IMAGE_GRID : (r + 1) * FEATURE_IMAGE_GRID]
+            lines.append(f"image {dim} {r} " + " ".join(f64_hex(v) for v in row))
+    lines.append("end")
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"wrote {path}")
+
+
 # --- fixture writing ----------------------------------------------------
 
 
@@ -392,6 +516,9 @@ def main():
     write_fixture(
         os.path.join(HERE, "circle48.pd.txt"), "circle48", "points", 1, tau, pts, dg
     )
+    write_feature_fixture(
+        os.path.join(HERE, "circle48.features.txt"), "circle48", tau, 1, dg
+    )
 
     # --- torus: H0+H1+H2 --------------------------------------------
     n_torus = 110
@@ -430,6 +557,9 @@ def main():
         tau,
         (n_bins, entries),
         dg,
+    )
+    write_feature_fixture(
+        os.path.join(HERE, "hic240.features.txt"), "hic240", tau, 1, dg
     )
 
 

@@ -42,10 +42,7 @@ fn req(tau: f64, max_dim: usize) -> PhRequest {
     PhRequest {
         tau,
         max_dim: Some(max_dim),
-        shortcut: None,
-        enclosing: None,
-        label: None,
-        timeout_ms: None,
+        ..Default::default()
     }
 }
 
